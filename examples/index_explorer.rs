@@ -1,0 +1,51 @@
+//! Index explorer: compare the MIPS index families (brute / k-means tree
+//! / SimHash LSH) on recall@k, top-1 recall and probe cost — the choice
+//! the paper's Table 3 says matters most (top-1 recall drives MIMPS
+//! error).
+//!
+//! ```bash
+//! cargo run --release --example index_explorer
+//! ```
+
+use zest::data::synth::{generate, SynthConfig};
+use zest::experiments::ablations::index_ablation;
+use zest::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
+use zest::mips::recall::measure;
+use zest::mips::brute::BruteIndex;
+use zest::util::rng::Rng;
+
+fn main() {
+    zest::util::logging::init();
+    let store = generate(&SynthConfig {
+        n: 30_000,
+        d: 64,
+        ..Default::default()
+    });
+    println!("N={} d={}\n-- index families --", store.len(), store.dim());
+    for r in index_ablation(&store, 40, 0) {
+        println!(
+            "{:<12} recall@10={:.3} top1={:.3} probes={:>7.0} build={:?}",
+            r.name, r.recall_at_10, r.top1_recall, r.mean_probes, r.build_wall
+        );
+    }
+
+    println!("\n-- k-means tree probe-budget sweep (recall@10) --");
+    let brute = BruteIndex::new(&store);
+    for probes in [256usize, 1024, 4096, 16384] {
+        let tree = KMeansTreeIndex::build(
+            &store,
+            KMeansTreeConfig {
+                max_probes: probes,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seeded(1);
+        let rep = measure(&tree, &brute, 10, 40, &mut rng);
+        println!(
+            "probes={probes:<7} recall@10={:.3} top1={:.3}  ({:.1}% of N scanned)",
+            rep.recall,
+            rep.top1_recall,
+            100.0 * probes as f64 / store.len() as f64
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! End-to-end driver (the paper's §5.2, DESIGN.md Table 4): train a
+//! log-bilinear language model with NCE — partition clamped to 1 —
+//! through the AOT-compiled PJRT training step, log the loss curve, then
+//! estimate the partition function on held-out contexts with MIMPS over
+//! a k-means-tree MIPS index and compare against the Z = 1 heuristic.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example lm_partition
+//! # env: ZEST_LBL_STEPS=600 ZEST_LM_CONTEXTS=2000
+//! ```
+
+use zest::experiments::table4::{render, run, Table4Config};
+
+fn main() {
+    zest::util::logging::init();
+    let dir = std::path::PathBuf::from(
+        std::env::var("ZEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let meta = match zest::runtime::ArtifactsMeta::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("need artifacts: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let steps: usize = std::env::var("ZEST_LBL_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(600);
+    let contexts: usize = std::env::var("ZEST_LM_CONTEXTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000);
+    let vocab = meta.config_usize("vocab").unwrap();
+    let cfg = Table4Config {
+        lbl: zest::lm::LblConfig {
+            vocab,
+            d: meta.config_usize("lbl_d").unwrap(),
+            ctx: meta.config_usize("ctx").unwrap(),
+            seed: 0,
+        },
+        nce: zest::lm::NceConfig {
+            batch: meta.config_usize("lbl_batch").unwrap(),
+            noise_k: meta.config_usize("noise_k").unwrap(),
+            lr: 0.3,
+        },
+        train_steps: steps,
+        contexts,
+        corpus: zest::data::corpus::CorpusConfig {
+            vocab,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    println!(
+        "LBL: vocab={} d={} ctx={} | NCE batch={} K={} | {} steps, {} eval contexts",
+        cfg.lbl.vocab, cfg.lbl.d, cfg.lbl.ctx, cfg.nce.batch, cfg.nce.noise_k, steps, contexts
+    );
+    let (rt, join) =
+        zest::runtime::spawn_runtime_thread(dir.clone(), Some(vec!["lbl_nce_step".into()]))
+            .expect("spawn pjrt runtime");
+    let t = run(&cfg, &rt, &dir).expect("table4 run");
+    print!("{}", render(&t));
+    println!(
+        "\nReading: AbsE-MIPS < AbsE-NCE means estimating Z sublinearly beats \
+         assuming Z=1; Speedup is wall-clock vs brute force."
+    );
+    rt.shutdown();
+    join.join().ok();
+}

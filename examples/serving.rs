@@ -1,0 +1,92 @@
+//! Serving demo: run the batching coordinator under concurrent load and
+//! report latency percentiles + batching metrics — the L3 system shape
+//! (bounded queue → dynamic batcher → worker pool) around the paper's
+//! estimators.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! ```
+
+use std::sync::Arc;
+use zest::coordinator::*;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::EstimatorKind;
+use zest::mips::kmeans_tree::KMeansTreeIndex;
+use zest::mips::MipsIndex;
+use zest::util::rng::Rng;
+
+fn main() {
+    zest::util::logging::init();
+    let store = Arc::new(generate(&SynthConfig {
+        n: 50_000,
+        d: 128,
+        ..Default::default()
+    }));
+    let index: Arc<dyn MipsIndex> =
+        Arc::new(KMeansTreeIndex::build(&store, Default::default()));
+    let svc = Arc::new(PartitionService::start(
+        store.clone(),
+        index,
+        Router::new(Default::default()),
+        ServiceConfig {
+            workers: 4,
+            queue_capacity: 512,
+            backpressure: BackpressurePolicy::Block,
+            ..Default::default()
+        },
+        None,
+    ));
+
+    // 8 client threads × 200 requests, mixed estimator kinds.
+    let clients = 8;
+    let per_client = 200;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = svc.clone();
+            let store = store.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seeded(c as u64);
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let qi = rng.below(store.len());
+                    let kind = match rng.below(10) {
+                        0 => EstimatorKind::Uniform,
+                        1 => EstimatorKind::Mince,
+                        _ => EstimatorKind::Mimps, // the recommended estimator
+                    };
+                    let t = std::time::Instant::now();
+                    let resp = svc
+                        .estimate(Request {
+                            query: store.row(qi).to_vec(),
+                            kind,
+                            k: 100,
+                            l: 100,
+                        })
+                        .expect("estimate");
+                    lat.push(t.elapsed());
+                    assert!(resp.z.is_finite());
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all: Vec<std::time::Duration> = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    all.sort();
+    let total = clients * per_client;
+    println!(
+        "{total} requests / {clients} clients in {wall:?} => {:.0} req/s",
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "client latency p50={:?} p95={:?} p99={:?}",
+        all[total / 2],
+        all[(total as f64 * 0.95) as usize],
+        all[(total as f64 * 0.99) as usize]
+    );
+    println!("service metrics: {}", svc.metrics());
+}

@@ -1,0 +1,142 @@
+"""AOT exporter: lower every L2 graph to HLO *text* under artifacts/.
+
+HLO text — not ``lowered.compile()`` output or serialized HloModuleProto
+— is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (behind the rust `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Writes ``<name>.hlo.txt`` per graph plus ``meta.json`` (shapes, dtypes,
+argument order) which the rust runtime reads to marshal literals.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export(out_dir: str, cfg: dict) -> dict:
+    """Lower all graphs; return the meta dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    chunk, d, batch = cfg["chunk"], cfg["d"], cfg["batch"]
+    vocab, lbl_d, ctx, kn, lbl_b = (
+        cfg["vocab"],
+        cfg["lbl_d"],
+        cfg["ctx"],
+        cfg["noise_k"],
+        cfg["lbl_batch"],
+    )
+    fm_j, fm_m = cfg["fm_j"], cfg["fm_m"]
+    i32 = jnp.int32
+
+    graphs = {
+        "score_chunk": (
+            model.score_chunk,
+            [spec((chunk, d)), spec((d,))],
+        ),
+        "partition_chunk": (
+            model.partition_chunk,
+            [spec((chunk, d)), spec((d,))],
+        ),
+        "score_batch": (
+            model.score_batch,
+            [spec((chunk, d)), spec((batch, d))],
+        ),
+        "fmbe_query": (
+            model.fmbe_query,
+            [spec((batch, d)), spec((fm_j, fm_m, d))],
+        ),
+        "lbl_qhat": (
+            model.lbl_qhat,
+            [spec((vocab, lbl_d)), spec((ctx, lbl_d)), spec((lbl_b, ctx), i32)],
+        ),
+        "lbl_nce_step": (
+            model.lbl_nce_step,
+            [
+                spec((vocab, lbl_d)),          # r
+                spec((vocab, lbl_d)),          # qt
+                spec((vocab,)),                # b
+                spec((ctx, lbl_d)),            # c
+                spec((lbl_b, ctx), i32),       # ctx ids
+                spec((lbl_b,), i32),           # tgt
+                spec((lbl_b, kn), i32),        # noise
+                spec((lbl_b,)),                # ln_pn_tgt
+                spec((lbl_b, kn)),             # ln_pn_noise
+                spec((), jnp.float32),         # lr
+            ],
+        ),
+    }
+
+    meta = {"config": cfg, "graphs": {}}
+    for name, (fn, args) in graphs.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--chunk", type=int, default=8192)
+    ap.add_argument("--d", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--vocab", type=int, default=10_000)
+    ap.add_argument("--lbl-d", type=int, default=100)
+    ap.add_argument("--ctx", type=int, default=5)
+    ap.add_argument("--noise-k", type=int, default=25)
+    ap.add_argument("--lbl-batch", type=int, default=256)
+    ap.add_argument("--fm-j", type=int, default=256)
+    ap.add_argument("--fm-m", type=int, default=2)
+    args = ap.parse_args()
+    cfg = {
+        "chunk": args.chunk,
+        "d": args.d,
+        "batch": args.batch,
+        "vocab": args.vocab,
+        "lbl_d": args.lbl_d,
+        "ctx": args.ctx,
+        "noise_k": args.noise_k,
+        "lbl_batch": args.lbl_batch,
+        "fm_j": args.fm_j,
+        "fm_m": args.fm_m,
+    }
+    meta = export(args.out, cfg)
+    meta_path = os.path.join(args.out, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

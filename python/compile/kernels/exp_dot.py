@@ -1,0 +1,131 @@
+"""L1 Pallas kernels for the scoring hot spot: exp(V q) and its partial
+partition sums, tiled over the category axis.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's 2015
+CPU hot loop (FLANN scalar dots) is re-thought for a TPU-style memory
+hierarchy. The category matrix is streamed HBM -> VMEM in (BLOCK_N, d)
+tiles declared via BlockSpec; the dot products hit the MXU-friendly
+matmul path; exp and the block-level reduction happen in VMEM before a
+single f32 partial sum (or score tile) is written back. The grid
+iterates over N/BLOCK_N, which is exactly the double-buffered
+HBM<->VMEM schedule a GPU version would express with threadblocks.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and AOT artifacts must stay loadable by the rust
+runtime. Real-TPU perf is estimated from the BlockSpec footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile height: 1024 rows x 300 cols x 4 B = 1.2 MiB « 16 MiB VMEM,
+# leaving room for double buffering plus the query and output tiles.
+DEFAULT_BLOCK_N = 1024
+
+
+def _exp_dot_kernel(v_ref, q_ref, o_ref):
+    """One tile: o = exp(V_blk @ q)."""
+    o_ref[...] = jnp.exp(v_ref[...] @ q_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def exp_dot(v, q, *, block_n: int = DEFAULT_BLOCK_N):
+    """exp(v_i . q) over a chunk. v: (n, d), q: (d,) -> (n,)."""
+    n, d = v.shape
+    block_n = min(block_n, n)
+    if n % block_n != 0:  # pad to a whole number of tiles
+        pad = block_n - n % block_n
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    grid = (v.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _exp_dot_kernel,
+        out_shape=jax.ShapeDtypeStruct((v.shape[0],), v.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        interpret=True,
+    )(v, q)
+    return out[:n]
+
+
+def _partition_kernel(v_ref, q_ref, o_ref):
+    """One tile: o = sum(exp(V_blk @ q)) — per-block partial sum."""
+    o_ref[...] = jnp.sum(jnp.exp(v_ref[...] @ q_ref[...]), keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def partition_chunk(v, q, *, block_n: int = DEFAULT_BLOCK_N):
+    """sum_i exp(v_i . q) -> () f32.
+
+    Padding note: padded rows would contribute exp(0) = 1 each, so the
+    kernel output is corrected by the pad count afterwards.
+    """
+    n, d = v.shape
+    block_n = min(block_n, n)
+    pad = (block_n - n % block_n) % block_n
+    if pad:
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    grid = (v.shape[0] // block_n,)
+    partials = pl.pallas_call(
+        _partition_kernel,
+        out_shape=jax.ShapeDtypeStruct((grid[0],), v.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=True,
+    )(v, q)
+    return jnp.sum(partials) - jnp.float32(pad)
+
+
+def _score_batch_kernel(v_ref, qs_ref, o_ref):
+    """One tile: o[b] = sum_i exp(q_b . v_i) over the tile's rows.
+
+    The (block_n, d) x (d, b) matmul is the MXU work; exp + reduce fuse
+    in VMEM. Accumulation across tiles happens via the grid-carried
+    output block (same index_map for every i -> accumulate pattern).
+    """
+    tile = jnp.exp(qs_ref[...] @ v_ref[...].T)  # (b, block_n)
+    acc = jnp.sum(tile, axis=1)
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(i > 0)
+    def _acc():
+        o_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def score_batch(v, qs, *, block_n: int = DEFAULT_BLOCK_N):
+    """Partial partition sums for a batch: v (n, d), qs (b, d) -> (b,)."""
+    n, d = v.shape
+    b = qs.shape[0]
+    block_n = min(block_n, n)
+    pad = (block_n - n % block_n) % block_n
+    if pad:
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    grid = (v.shape[0] // block_n,)
+    out = pl.pallas_call(
+        _score_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), v.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((b, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        interpret=True,
+    )(v, qs)
+    return out - jnp.float32(pad)

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel for the FMBE hot spot: Kar-Karnick degree-m feature
+products, batched so the projections run as one (b, d) x (d, j*m) matmul
+per degree instead of j*m independent GEMVs (the MXU adaptation of the
+paper's random-feature evaluation).
+
+x: (b, d) inputs, w: (j, m, d) Rademacher projections ->
+out: (b, j) with out[t, f] = prod_r (x_t . w[f, r, :]).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _degree_prod_kernel(x_ref, w_ref, o_ref, *, m: int):
+    """One batch tile: T = X_blk @ W^T -> (blk, j*m); product-reduce the
+    degree axis in VMEM."""
+    x = x_ref[...]  # (blk, d)
+    w = w_ref[...]  # (j, m, d)
+    j = w.shape[0]
+    wf = w.reshape(j * m, w.shape[2])  # (j*m, d)
+    t = x @ wf.T  # (blk, j*m) — the MXU matmul
+    t = t.reshape(x.shape[0], j, m)
+    o_ref[...] = jnp.prod(t, axis=2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def degree_prod(x, w, *, block_b: int = DEFAULT_BLOCK_B):
+    """Degree-m feature products. x: (b, d), w: (j, m, d) -> (b, j)."""
+    b, d = x.shape
+    j, m = w.shape[0], w.shape[1]
+    if m == 0:
+        return jnp.ones((b, j), dtype=x.dtype)
+    block_b = min(block_b, b)
+    pad = (block_b - b % block_b) % block_b
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // block_b,)
+    out = pl.pallas_call(
+        functools.partial(_degree_prod_kernel, m=m),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], j), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((j, m, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, j), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w)
+    return out[:b]

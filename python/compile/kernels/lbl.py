@@ -1,0 +1,76 @@
+"""L1 Pallas kernels for the log-bilinear language model's serving path:
+the context combination (diagonal context matrices, Mnih & Teh 2012) and
+candidate scoring. Training uses the jnp oracles in ref.py because the
+training step differentiates through these ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _lbl_context_kernel(r_ref, c_ref, o_ref):
+    """One batch tile: q_hat = sum_j c_j * r_ctx[:, j, :]."""
+    o_ref[...] = jnp.sum(r_ref[...] * c_ref[...][None, :, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lbl_context(r_ctx, c, *, block_b: int = DEFAULT_BLOCK_B):
+    """Context combination. r_ctx: (b, ctx, d), c: (ctx, d) -> (b, d)."""
+    b, ctx, d = r_ctx.shape
+    block_b = min(block_b, b)
+    pad = (block_b - b % block_b) % block_b
+    if pad:
+        r_ctx = jnp.pad(r_ctx, ((0, pad), (0, 0), (0, 0)))
+    grid = (r_ctx.shape[0] // block_b,)
+    out = pl.pallas_call(
+        _lbl_context_kernel,
+        out_shape=jax.ShapeDtypeStruct((r_ctx.shape[0], d), r_ctx.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, ctx, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ctx, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        interpret=True,
+    )(r_ctx, c)
+    return out[:b]
+
+
+def _lbl_scores_kernel(q_ref, e_ref, b_ref, o_ref):
+    """One batch tile: s[t, k] = q_hat_t . cand_emb[t, k] + cand_bias[t, k]."""
+    q = q_ref[...]  # (blk, d)
+    e = e_ref[...]  # (blk, k, d)
+    o_ref[...] = jnp.einsum("bd,bkd->bk", q, e) + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def lbl_scores(q_hat, cand_emb, cand_bias, *, block_b: int = DEFAULT_BLOCK_B):
+    """Candidate scores. q_hat: (b, d), cand_emb: (b, k, d),
+    cand_bias: (b, k) -> (b, k)."""
+    b, d = q_hat.shape
+    k = cand_emb.shape[1]
+    block_b = min(block_b, b)
+    pad = (block_b - b % block_b) % block_b
+    if pad:
+        q_hat = jnp.pad(q_hat, ((0, pad), (0, 0)))
+        cand_emb = jnp.pad(cand_emb, ((0, pad), (0, 0), (0, 0)))
+        cand_bias = jnp.pad(cand_bias, ((0, pad), (0, 0)))
+    grid = (q_hat.shape[0] // block_b,)
+    out = pl.pallas_call(
+        _lbl_scores_kernel,
+        out_shape=jax.ShapeDtypeStruct((q_hat.shape[0], k), q_hat.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        interpret=True,
+    )(q_hat, cand_emb, cand_bias)
+    return out[:b]

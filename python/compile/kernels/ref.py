@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness contracts: `pytest python/tests` sweeps shapes
+and dtypes (via hypothesis) asserting each kernel matches its oracle to
+float tolerance. The oracles are also used directly inside the L2
+training-step graph, where autodiff through `pallas_call` is not needed.
+"""
+
+import jax.numpy as jnp
+
+
+def exp_dot(v, q):
+    """exp(v_i . q) for a chunk of category vectors.
+
+    v: (n, d) f32, q: (d,) f32 -> (n,) f32
+    """
+    return jnp.exp(v @ q)
+
+
+def partition_chunk(v, q):
+    """Partial partition sum over a chunk: sum_i exp(v_i . q) -> () f32."""
+    return jnp.sum(jnp.exp(v @ q), dtype=jnp.float32)
+
+
+def score_batch(v, qs):
+    """Partial partition sums for a batch of queries.
+
+    v: (n, d), qs: (b, d) -> (b,) with out[j] = sum_i exp(v_i . q_j)
+    """
+    return jnp.sum(jnp.exp(qs @ v.T), axis=1, dtype=jnp.float32)
+
+
+def degree_prod(x, w):
+    """Kar-Karnick degree-m feature products (FMBE hot spot).
+
+    x: (b, d) queries, w: (j, m, d) Rademacher projections ->
+    (b, j) products prod_r (x . w[j, r, :]).  m == 0 -> ones.
+    """
+    b = x.shape[0]
+    j, m = w.shape[0], w.shape[1]
+    if m == 0:
+        return jnp.ones((b, j), dtype=x.dtype)
+    t = jnp.einsum("bd,jmd->bjm", x, w)
+    return jnp.prod(t, axis=2)
+
+
+def lbl_context(r_ctx, c):
+    """Log-bilinear context combination with diagonal context matrices
+    (Mnih & Teh 2012): q_hat = sum_j c_j * r_{w_j}.
+
+    r_ctx: (b, ctx, d) gathered context embeddings,
+    c:     (ctx, d) per-position diagonal weights -> (b, d)
+    """
+    return jnp.sum(r_ctx * c[None, :, :], axis=1)
+
+
+def lbl_scores(q_hat, cand_emb, cand_bias):
+    """LBL scores for candidate words: s = q_hat . r_w + b_w.
+
+    q_hat: (b, d), cand_emb: (b, k, d), cand_bias: (b, k) -> (b, k)
+    """
+    return jnp.einsum("bd,bkd->bk", q_hat, cand_emb) + cand_bias

@@ -1,0 +1,116 @@
+"""L2: the JAX compute graphs that get AOT-lowered to HLO text and
+executed by the rust runtime. Python never runs at request time — these
+functions exist to be `jax.jit(...).lower()`-ed by aot.py.
+
+Graphs:
+
+* ``score_chunk``      — exp scores of one category chunk vs one query
+                         (Pallas ``exp_dot`` kernel inside).
+* ``partition_chunk``  — partial partition sum of one chunk (Pallas).
+* ``score_batch``      — partial partition sums for a query batch
+                         (Pallas fused matmul+exp+reduce, grid-accumulated).
+* ``fmbe_query``       — Kar-Karnick degree-m feature products for a
+                         query batch (Pallas ``degree_prod``).
+* ``lbl_qhat``         — LBL context projection: gather + Pallas
+                         ``lbl_context`` kernel (serving path).
+* ``lbl_nce_step``     — one NCE/SGD training step of the log-bilinear LM
+                         with the partition clamped to 1 (Mnih & Teh
+                         2012), as the paper's §5.2 trains. Uses the jnp
+                         oracles (ref.py) because it differentiates
+                         through the scoring ops.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import exp_dot as k_exp_dot
+from .kernels import feature_map as k_fm
+from .kernels import lbl as k_lbl
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# Scoring graphs (serving hot path)
+# --------------------------------------------------------------------------
+
+def score_chunk(v, q):
+    """exp(V q) over one chunk. v: (chunk, d), q: (d,) -> (chunk,)."""
+    return (k_exp_dot.exp_dot(v, q),)
+
+
+def partition_chunk(v, q):
+    """Partial partition sum. v: (chunk, d), q: (d,) -> ((),)."""
+    return (k_exp_dot.partition_chunk(v, q),)
+
+
+def score_batch(v, qs):
+    """Batch partial sums. v: (chunk, d), qs: (b, d) -> ((b,),)."""
+    return (k_exp_dot.score_batch(v, qs),)
+
+
+def fmbe_query(x, w):
+    """FMBE degree products. x: (b, d), w: (j, m, d) -> ((b, j),)."""
+    return (k_fm.degree_prod(x, w),)
+
+
+# --------------------------------------------------------------------------
+# Log-bilinear language model (paper §5.2)
+# --------------------------------------------------------------------------
+
+def lbl_qhat(r, c, ctx_ids):
+    """Context projection for a batch of contexts.
+
+    r: (vocab, d) context embedding table, c: (ctx, d) diagonal position
+    weights, ctx_ids: (b, ctx) int32 -> ((b, d),).
+    """
+    r_ctx = jnp.take(r, ctx_ids, axis=0)  # (b, ctx, d)
+    return (k_lbl.lbl_context(r_ctx, c),)
+
+
+def lbl_nce_loss(params, batch):
+    """NCE loss with Z clamped to 1 (self-normalization heuristic).
+
+    params: dict(r (V,d), qt (V,d), b (V,), c (ctx,d))
+    batch:  dict(ctx (B,ctx) i32, tgt (B,) i32, noise (B,K) i32,
+                 ln_pn_tgt (B,), ln_pn_noise (B,K))
+
+    P(data | w) = sigma(s(w) - ln(K * Pn(w))) with s(w) = qhat.qt_w + b_w
+    and the model's partition taken to be 1 (never computed).
+    """
+    r, qt, b, c = params["r"], params["qt"], params["b"], params["c"]
+    ctx, tgt, noise = batch["ctx"], batch["tgt"], batch["noise"]
+    kn = noise.shape[1]
+    r_ctx = jnp.take(r, ctx, axis=0)  # (B, ctx, d)
+    qhat = ref.lbl_context(r_ctx, c)  # (B, d)
+
+    tgt_emb = jnp.take(qt, tgt, axis=0)  # (B, d)
+    tgt_bias = jnp.take(b, tgt, axis=0)  # (B,)
+    s_tgt = jnp.sum(qhat * tgt_emb, axis=1) + tgt_bias
+
+    noise_emb = jnp.take(qt, noise, axis=0)  # (B, K, d)
+    noise_bias = jnp.take(b, noise, axis=0)  # (B, K)
+    s_noise = ref.lbl_scores(qhat, noise_emb, noise_bias)
+
+    ln_k = jnp.log(jnp.float32(kn))
+    delta_tgt = s_tgt - (ln_k + batch["ln_pn_tgt"])
+    delta_noise = s_noise - (ln_k + batch["ln_pn_noise"])
+    loss = -(
+        jnp.mean(jax.nn.log_sigmoid(delta_tgt))
+        + jnp.mean(jnp.sum(jax.nn.log_sigmoid(-delta_noise), axis=1))
+    )
+    return loss
+
+
+def lbl_nce_step(r, qt, b, c, ctx, tgt, noise, ln_pn_tgt, ln_pn_noise, lr):
+    """One SGD step; returns (r', qt', b', c', loss)."""
+    params = {"r": r, "qt": qt, "b": b, "c": c}
+    batch = {
+        "ctx": ctx,
+        "tgt": tgt,
+        "noise": noise,
+        "ln_pn_tgt": ln_pn_tgt,
+        "ln_pn_noise": ln_pn_noise,
+    }
+    loss, grads = jax.value_and_grad(lbl_nce_loss)(params, batch)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return (new["r"], new["qt"], new["b"], new["c"], loss)

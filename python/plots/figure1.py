@@ -1,0 +1,38 @@
+"""Render Figure 1 (CDF over sorted contributions) from the bench JSON.
+
+Usage:  python python/plots/figure1.py [results/figure1_paper.json] [out.png]
+
+Build-time tooling only — never on the request path.
+"""
+
+import json
+import sys
+
+import matplotlib
+
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+
+
+def main() -> None:
+    src = sys.argv[1] if len(sys.argv) > 1 else "results/figure1_paper.json"
+    out = sys.argv[2] if len(sys.argv) > 2 else "results/figure1.png"
+    curves = json.load(open(src))
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    for c in curves:
+        xs = [p[0] for p in c["series"]]
+        ys = [p[1] for p in c["series"]]
+        ax.plot(xs, ys, label=f"rank {c['rank']} ({c['corpus_freq']:,})")
+    ax.axhline(0.8, color="gray", ls=":", lw=0.8)
+    ax.set_xlabel("fraction of vocabulary (sorted by contribution)")
+    ax.set_ylabel("fraction of Z covered")
+    ax.set_title("CDF of sorted contributions to Z (synthetic word2vec-like)")
+    ax.legend(fontsize=7, title="probe token (pseudo freq)")
+    ax.set_xscale("log")
+    fig.tight_layout()
+    fig.savefig(out, dpi=150)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

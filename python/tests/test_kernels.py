@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps shapes (and scales)
+of every Pallas kernel against the pure-jnp reference in ref.py.
+This is the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import exp_dot as k_exp
+from compile.kernels import feature_map as k_fm
+from compile.kernels import lbl as k_lbl
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- exp_dot
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3000),
+    d=st.sampled_from([1, 7, 32, 300]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_exp_dot_matches_ref(n, d, seed):
+    r = rng_for(seed)
+    v = (r.normal(size=(n, d)) * 0.3).astype(np.float32)
+    q = (r.normal(size=(d,)) * 0.3).astype(np.float32)
+    assert_allclose(k_exp.exp_dot(v, q), ref.exp_dot(v, q), rtol=2e-5, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    block=st.sampled_from([32, 256, 1024]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_partition_chunk_matches_ref(n, block, seed):
+    r = rng_for(seed)
+    v = (r.normal(size=(n, 16)) * 0.4).astype(np.float32)
+    q = (r.normal(size=(16,)) * 0.4).astype(np.float32)
+    got = float(k_exp.partition_chunk(v, q, block_n=block))
+    want = float(ref.partition_chunk(v, q))
+    assert_allclose(got, want, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 3000),
+    b=st.integers(1, 24),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_score_batch_matches_ref(n, b, seed):
+    r = rng_for(seed)
+    v = (r.normal(size=(n, 24)) * 0.3).astype(np.float32)
+    qs = (r.normal(size=(b, 24)) * 0.3).astype(np.float32)
+    assert_allclose(k_exp.score_batch(v, qs), ref.score_batch(v, qs), rtol=1e-4)
+
+
+def test_exp_dot_padding_boundary():
+    # n exactly one below/above a block multiple.
+    r = rng_for(7)
+    for n in [1023, 1024, 1025]:
+        v = (r.normal(size=(n, 8)) * 0.2).astype(np.float32)
+        q = (r.normal(size=(8,)) * 0.2).astype(np.float32)
+        assert_allclose(k_exp.exp_dot(v, q), ref.exp_dot(v, q), rtol=2e-5)
+        assert_allclose(
+            float(k_exp.partition_chunk(v, q)),
+            float(ref.partition_chunk(v, q)),
+            rtol=1e-4,
+        )
+
+
+def test_partition_padding_correction_vs_large_scores():
+    # Padded rows contribute exp(0)=1 each; the correction must remove
+    # exactly that even when true scores are large.
+    r = rng_for(11)
+    v = (r.normal(size=(1000, 8)) * 1.5).astype(np.float32)
+    q = (r.normal(size=(8,)) * 1.5).astype(np.float32)
+    got = float(k_exp.partition_chunk(v, q, block_n=512))
+    want = float(ref.partition_chunk(v, q))
+    assert_allclose(got, want, rtol=1e-4)
+
+
+# ----------------------------------------------------------- feature_map
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    j=st.integers(1, 64),
+    m=st.integers(0, 4),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_degree_prod_matches_ref(b, j, m, seed):
+    r = rng_for(seed)
+    x = (r.normal(size=(b, 12)) * 0.5).astype(np.float32)
+    w = r.choice([-1.0, 1.0], size=(j, m, 12)).astype(np.float32)
+    assert_allclose(
+        k_fm.degree_prod(x, w), ref.degree_prod(x, w), rtol=1e-4, atol=1e-6
+    )
+
+
+def test_degree_prod_zero_degree_is_ones():
+    x = np.zeros((5, 4), np.float32)
+    w = np.zeros((9, 0, 4), np.float32)
+    out = np.asarray(k_fm.degree_prod(x, w))
+    assert out.shape == (5, 9)
+    assert (out == 1.0).all()
+
+
+# ------------------------------------------------------------------- lbl
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    ctx=st.integers(1, 9),
+    d=st.sampled_from([4, 32, 100]),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_lbl_context_matches_ref(b, ctx, d, seed):
+    r = rng_for(seed)
+    r_ctx = r.normal(size=(b, ctx, d)).astype(np.float32)
+    c = r.normal(size=(ctx, d)).astype(np.float32)
+    assert_allclose(
+        k_lbl.lbl_context(r_ctx, c), ref.lbl_context(r_ctx, c), rtol=1e-4, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    k=st.integers(1, 30),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_lbl_scores_matches_ref(b, k, seed):
+    r = rng_for(seed)
+    q = r.normal(size=(b, 16)).astype(np.float32)
+    e = r.normal(size=(b, k, 16)).astype(np.float32)
+    bias = r.normal(size=(b, k)).astype(np.float32)
+    assert_allclose(
+        k_lbl.lbl_scores(q, e, bias), ref.lbl_scores(q, e, bias), rtol=1e-4, atol=1e-5
+    )
+
+
+# --------------------------------------------------- numerical edge cases
+
+@pytest.mark.parametrize("scale", [0.0, 1e-6, 3.0])
+def test_exp_dot_extreme_scales(scale):
+    r = rng_for(3)
+    v = (r.normal(size=(100, 8)) * scale).astype(np.float32)
+    q = (r.normal(size=(8,)) * scale).astype(np.float32)
+    assert_allclose(k_exp.exp_dot(v, q), ref.exp_dot(v, q), rtol=1e-4)
+
+
+def test_zero_query_gives_n():
+    v = rng_for(4).normal(size=(123, 8)).astype(np.float32)
+    q = np.zeros((8,), np.float32)
+    # The paper's pathological case |q| = 0: Z = N exactly.
+    assert float(k_exp.partition_chunk(v, q)) == pytest.approx(123.0, rel=1e-6)

@@ -1,0 +1,48 @@
+//! Ablation bench: Halley vs Newton solver, index families, and MIMPS
+//! error vs tree probe budget (DESIGN.md §Testing / §Perf design calls).
+
+mod bench_common;
+
+use zest::experiments::ablations::*;
+
+fn main() {
+    let env = bench_common::env();
+    let store = bench_common::store(&env);
+    println!(
+        "== Ablations (scale={}, N={}, d={}) ==",
+        env.scale, env.cfg.n, env.cfg.d
+    );
+
+    let solver = solver_ablation(500, 1000.min(env.cfg.n / 2), 1000.min(env.cfg.n / 2), 0);
+    println!(
+        "solver: Newton {} iters {:?} | Halley {} iters {:?} | max disagreement {:.2e}",
+        solver.newton_iters,
+        solver.newton_wall,
+        solver.halley_iters,
+        solver.halley_wall,
+        solver.max_disagreement
+    );
+
+    let index = index_ablation(&store, 30, env.cfg.seed);
+    for r in &index {
+        println!(
+            "index {:<12} recall@10={:.3} top1={:.3} probes={:.0} build={:?}",
+            r.name, r.recall_at_10, r.top1_recall, r.mean_probes, r.build_wall
+        );
+    }
+
+    let mut cfg = env.cfg.clone();
+    cfg.queries = cfg.queries.min(200);
+    cfg.k = 100;
+    cfg.l = 100;
+    let budgets = [256usize, 1024, 4096, 16384]
+        .iter()
+        .copied()
+        .filter(|&b| b <= cfg.n)
+        .collect::<Vec<_>>();
+    let pts = probe_budget_ablation(&store, &cfg, &budgets);
+    for p in &pts {
+        println!("probes={:<8} MIMPS(k=100,l=100) err={:.2}%", p.probes, p.mean_err_pct);
+    }
+    bench_common::write_json(&env, "ablations", &to_json(&solver, &index, &pts));
+}

@@ -1,0 +1,73 @@
+#![allow(dead_code)]
+//! Shared scaffolding for the `cargo bench` targets.
+//!
+//! Scale control: `ZEST_SCALE=paper` runs the paper's dimensions
+//! (N = 100k, d = 300); the default `quick` scale keeps every bench under
+//! a couple of minutes while preserving the qualitative shape. Both use
+//! 3 seeds like the paper. Query counts default to 1000 (paper: 10k) —
+//! raise with `ZEST_QUERIES`.
+
+use zest::config::Config;
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+
+pub struct BenchEnv {
+    pub cfg: Config,
+    pub synth: SynthConfig,
+    pub scale: String,
+}
+
+pub fn env() -> BenchEnv {
+    zest::util::logging::init();
+    let scale = std::env::var("ZEST_SCALE").unwrap_or_else(|_| "quick".to_string());
+    let (n, d) = match scale.as_str() {
+        "paper" => (100_000, 300),
+        "mid" => (30_000, 128),
+        _ => (10_000, 64),
+    };
+    let queries = std::env::var("ZEST_QUERIES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000usize);
+    let cfg = Config {
+        n,
+        d,
+        queries,
+        seeds: 3,
+        out_dir: "results".to_string(),
+        ..Config::default()
+    };
+    let synth = SynthConfig {
+        n,
+        d,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    BenchEnv { cfg, synth, scale }
+}
+
+/// Generate or load the cached store for the bench scale.
+pub fn store(env: &BenchEnv) -> EmbeddingStore {
+    let dir = std::path::PathBuf::from(&env.cfg.out_dir);
+    std::fs::create_dir_all(&dir).ok();
+    let cache = dir.join(format!(
+        "emb_n{}_d{}_s{}.bin",
+        env.cfg.n, env.cfg.d, env.cfg.seed
+    ));
+    if cache.exists() {
+        if let Ok(s) = EmbeddingStore::load(&cache) {
+            return s;
+        }
+    }
+    let s = generate(&env.synth);
+    s.save(&cache).ok();
+    s
+}
+
+pub fn write_json(env: &BenchEnv, name: &str, json: &zest::util::json::Json) {
+    let dir = std::path::PathBuf::from(&env.cfg.out_dir);
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join(format!("{name}_{}.json", env.scale));
+    std::fs::write(&path, json.to_string()).ok();
+    println!("(json: {})", path.display());
+}

@@ -1,0 +1,33 @@
+//! Figure 1 bench: regenerate the CDF-over-sorted-contributions curves.
+//! Paper shape: <1k neighbors cover 80% of Z for rare words; ~80% of the
+//! whole vocabulary is needed for the most frequent words.
+
+mod bench_common;
+
+fn main() {
+    let env = bench_common::env();
+    let store = bench_common::store(&env);
+    println!(
+        "== Figure 1 (scale={}, N={}, d={}) ==",
+        env.scale, env.cfg.n, env.cfg.d
+    );
+    let t0 = std::time::Instant::now();
+    let curves = zest::experiments::figure1::run(&store, &env.synth, env.cfg.threads);
+    println!(
+        "{:>8} {:>14} {:>9} {:>9} {:>9} {:>8}",
+        "rank", "corpus freq", "n@50%", "n@80%", "n@90%", "n80/N"
+    );
+    for c in &curves {
+        println!(
+            "{:>8} {:>14} {:>9} {:>9} {:>9} {:>8.3}",
+            c.rank,
+            c.corpus_freq,
+            c.n50,
+            c.n80,
+            c.n90,
+            c.n80 as f64 / store.len() as f64
+        );
+    }
+    println!("(wall: {:?})", t0.elapsed());
+    bench_common::write_json(&env, "figure1", &zest::experiments::figure1::to_json(&curves));
+}

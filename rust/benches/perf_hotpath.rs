@@ -1,0 +1,154 @@
+//! Hot-path micro/macro benchmarks for the §Perf pass:
+//!
+//! * brute-force partition throughput (the O(N·d) baseline),
+//! * MIMPS end-to-end latency through the k-means tree,
+//! * tree search alone,
+//! * PJRT chunked scoring (artifact path) vs native linalg,
+//! * service round-trip overhead vs direct estimator call.
+
+mod bench_common;
+
+use std::sync::Arc;
+use zest::bench::harness::time;
+use zest::coordinator::{PartitionService, Request, Router, ServiceConfig};
+use zest::estimators::{mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
+use zest::mips::brute::BruteIndex;
+use zest::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
+use zest::mips::MipsIndex;
+use zest::runtime::HostTensor;
+use zest::util::rng::Rng;
+
+fn main() {
+    let env = bench_common::env();
+    let store = bench_common::store(&env);
+    let n = store.len();
+    let d = store.dim();
+    println!("== perf_hotpath (scale={}, N={n}, d={d}) ==", env.scale);
+    let mut rng = Rng::seeded(7);
+    let queries: Vec<Vec<f32>> = (0..64).map(|i| store.row(i * (n / 64)).to_vec()).collect();
+
+    // 1. Brute-force partition (multithreaded).
+    let brute = BruteIndex::new(&store);
+    let mut qi = 0;
+    let t = time(3, 30, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        std::hint::black_box(brute.partition(q));
+    });
+    let flops = 2.0 * n as f64 * d as f64;
+    println!(
+        "brute partition : {t}  ({:.2} GFLOP/s effective)",
+        flops / t.mean_secs() / 1e9
+    );
+
+    // 2. Tree search alone (k=100, default probes).
+    let tree = KMeansTreeIndex::build(&store, KMeansTreeConfig::default());
+    let mut qi = 0;
+    let t = time(3, 100, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        std::hint::black_box(tree.top_k(q, 100));
+    });
+    println!("tree top-100    : {t}");
+
+    // 3. MIMPS end-to-end through the tree.
+    let est = Mimps::new(100, 100);
+    let mut qi = 0;
+    let t_mips = time(3, 100, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        let mut ctx = EstimateContext {
+            store: &store,
+            index: &tree,
+            rng: &mut rng,
+        };
+        std::hint::black_box(est.estimate(&mut ctx, q));
+    });
+    println!("MIMPS(100,100)  : {t_mips}");
+
+    // 4. Single-thread brute (per-query latency basis for speedup).
+    let brute1 = BruteIndex::with_threads(&store, 1);
+    let mut qi = 0;
+    let t_brute1 = time(1, 10, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        std::hint::black_box(brute1.partition(q));
+    });
+    println!(
+        "brute 1-thread  : {t_brute1}  => single-query speedup {:.1}x",
+        t_brute1.mean_secs() / t_mips.mean_secs()
+    );
+
+    // 5. PJRT artifact scoring vs native, when artifacts exist.
+    let dir = std::path::PathBuf::from(&env.cfg.artifacts_dir);
+    if dir.join("meta.json").exists() {
+        if let Ok(meta) = zest::runtime::ArtifactsMeta::load(&dir) {
+            let chunk = meta.config_usize("chunk").unwrap_or(8192);
+            let da = meta.config_usize("d").unwrap_or(300);
+            if da == d && n >= chunk {
+                let (rt, join) = zest::runtime::spawn_runtime_thread(
+                    dir.clone(),
+                    Some(vec!["partition_chunk".into()]),
+                )
+                .expect("runtime");
+                let v = store.rows(0, chunk).to_vec();
+                let q = queries[0].clone();
+                let t = time(2, 20, || {
+                    let out = rt
+                        .run(
+                            "partition_chunk",
+                            vec![
+                                HostTensor::f32(v.clone(), &[chunk, d]),
+                                HostTensor::f32(q.clone(), &[d]),
+                            ],
+                        )
+                        .unwrap();
+                    std::hint::black_box(out[0].first_f64());
+                });
+                println!("pjrt chunk({chunk}) : {t}");
+                let t = time(2, 20, || {
+                    let mut s = vec![0f32; chunk];
+                    zest::linalg::gemv_blocked(&v, chunk, d, &q, &mut s);
+                    std::hint::black_box(zest::linalg::sum_exp(&s));
+                });
+                println!("native chunk    : {t}");
+                rt.shutdown();
+                join.join().ok();
+            } else {
+                println!("pjrt chunk      : skipped (artifact d={da} != store d={d})");
+            }
+        }
+    }
+
+    // 6. Service round-trip overhead.
+    let store_arc = Arc::new(store);
+    let index: Arc<dyn MipsIndex> =
+        Arc::new(KMeansTreeIndex::build(&store_arc, KMeansTreeConfig::default()));
+    let svc = PartitionService::start(
+        store_arc.clone(),
+        index,
+        Router::new(Default::default()),
+        ServiceConfig::default(),
+        None,
+    );
+    let mut qi = 0;
+    let t_svc = time(3, 100, || {
+        let q = queries[qi % queries.len()].clone();
+        qi += 1;
+        std::hint::black_box(
+            svc.estimate(Request {
+                query: q,
+                kind: EstimatorKind::Mimps,
+                k: 100,
+                l: 100,
+            })
+            .unwrap(),
+        );
+    });
+    println!(
+        "service rtt     : {t_svc}  (overhead vs direct: {:.0}%)",
+        100.0 * (t_svc.mean_secs() - t_mips.mean_secs()) / t_mips.mean_secs()
+    );
+    println!("{}", svc.metrics());
+    svc.shutdown();
+}

@@ -1,0 +1,30 @@
+//! Table 2 bench: error vs query-noise level (0/10/20/30% relative norm).
+//! Paper shape: MIMPS flat (0.8 → 0.9), Uniform ~100%+, MINCE bad
+//! throughout, FMBE ~84–87%.
+
+mod bench_common;
+
+fn main() {
+    let env = bench_common::env();
+    let store = bench_common::store(&env);
+    let mut cfg = env.cfg.clone();
+    // Paper caption: k = l = 1000 for MIMPS (clamped on small scales).
+    cfg.k = 1000.min(store.len() / 2);
+    cfg.l = 1000.min(store.len() / 2);
+    println!(
+        "== Table 2 (scale={}, N={}, d={}, queries={}, k={}, l={}) ==",
+        env.scale, cfg.n, cfg.d, cfg.queries, cfg.k, cfg.l
+    );
+    // One FMBE fit is shared across all noise levels; at paper scale on a
+    // single core D = 10k keeps the fit tractable (paper caption: 50k).
+    let fmbe_d = match env.scale.as_str() {
+        "paper" => 10_000,
+        "mid" => 50_000,
+        _ => 5_000,
+    };
+    let t0 = std::time::Instant::now();
+    let t = zest::experiments::table2::run(&store, &cfg, fmbe_d);
+    print!("{}", zest::experiments::table2::render(&t));
+    println!("(wall: {:?})", t0.elapsed());
+    bench_common::write_json(&env, "table2", &zest::experiments::table2::to_json(&t));
+}

@@ -1,0 +1,22 @@
+//! Table 3 bench: error under injected retrieval errors (drop rank-1 /
+//! rank-2 / both). Paper shape: MIMPS 0.8 → 39.3 (drop 1) / 6.1 (drop 2)
+//! / 45.0 (both); MINCE flat at its (bad) level.
+
+mod bench_common;
+
+fn main() {
+    let env = bench_common::env();
+    let store = bench_common::store(&env);
+    let mut cfg = env.cfg.clone();
+    cfg.k = 1000.min(store.len() / 2);
+    cfg.l = 1000.min(store.len() / 2);
+    println!(
+        "== Table 3 (scale={}, N={}, d={}, queries={}, k={}, l={}) ==",
+        env.scale, cfg.n, cfg.d, cfg.queries, cfg.k, cfg.l
+    );
+    let t0 = std::time::Instant::now();
+    let t = zest::experiments::table3::run(&store, &cfg);
+    print!("{}", zest::experiments::table3::render(&t));
+    println!("(wall: {:?})", t0.elapsed());
+    bench_common::write_json(&env, "table3", &zest::experiments::table3::to_json(&t));
+}

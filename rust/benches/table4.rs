@@ -1,0 +1,68 @@
+//! Table 4 bench: the end-to-end LBL experiment — train with NCE (Z
+//! clamped to 1) through the PJRT artifact, then compare MIMPS partition
+//! estimates against the Z=1 heuristic on held-out contexts.
+//! Paper shape: at k=100 MIMPS beats the heuristic (%Better > 50) with
+//! ~10–18× speedup over brute force.
+
+mod bench_common;
+
+use zest::experiments::table4::{render, run, to_json, Table4Config};
+
+fn main() {
+    let env = bench_common::env();
+    let dir = std::path::PathBuf::from(&env.cfg.artifacts_dir);
+    let meta = match zest::runtime::ArtifactsMeta::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("table4 bench needs artifacts: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let steps = std::env::var("ZEST_LBL_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(match env.scale.as_str() {
+            "paper" => 2000usize,
+            _ => 600,
+        });
+    let contexts = match env.scale.as_str() {
+        "paper" => 10_000,
+        _ => 2_000,
+    };
+    let cfg = Table4Config {
+        lbl: zest::lm::LblConfig {
+            vocab: meta.config_usize("vocab").unwrap(),
+            d: meta.config_usize("lbl_d").unwrap(),
+            ctx: meta.config_usize("ctx").unwrap(),
+            seed: env.cfg.seed,
+        },
+        nce: zest::lm::NceConfig {
+            batch: meta.config_usize("lbl_batch").unwrap(),
+            noise_k: meta.config_usize("noise_k").unwrap(),
+            lr: 0.3,
+        },
+        train_steps: steps,
+        contexts,
+        corpus: zest::data::corpus::CorpusConfig {
+            vocab: meta.config_usize("vocab").unwrap(),
+            seed: env.cfg.seed,
+            ..Default::default()
+        },
+        threads: env.cfg.threads,
+        ..Default::default()
+    };
+    println!(
+        "== Table 4 (scale={}, vocab={}, d={}, ctx={}, steps={}, contexts={}) ==",
+        env.scale, cfg.lbl.vocab, cfg.lbl.d, cfg.lbl.ctx, steps, contexts
+    );
+    let (rt, join) =
+        zest::runtime::spawn_runtime_thread(dir.clone(), Some(vec!["lbl_nce_step".into()]))
+            .expect("runtime");
+    let t0 = std::time::Instant::now();
+    let t = run(&cfg, &rt, &dir).expect("table4");
+    print!("{}", render(&t));
+    println!("(wall: {:?})", t0.elapsed());
+    rt.shutdown();
+    join.join().ok();
+    bench_common::write_json(&env, "table4", &to_json(&t));
+}

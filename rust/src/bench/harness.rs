@@ -1,0 +1,154 @@
+//! Micro/macro benchmark harness (substitute for `criterion`, which is
+//! unavailable offline): warmup, fixed-iteration timing, median / mean /
+//! p95 reporting, and a simple table printer shared by all `cargo bench`
+//! targets so their output matches the paper's tables row-for-row.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over bench iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Timing {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  median {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}  ({} iters)",
+            self.mean, self.median, self.p95, self.min, self.iters
+        )
+    }
+}
+
+/// Run `f` for `warmup` unrecorded iterations then `iters` timed ones.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(&mut samples)
+}
+
+/// Time a single run of `f`, returning both its result and duration.
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+fn summarize(samples: &mut [Duration]) -> Timing {
+    samples.sort();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let median = samples[iters / 2];
+    let p95 = samples[(((iters - 1) as f64) * 0.95) as usize];
+    Timing {
+        iters,
+        mean: total / iters as u32,
+        median,
+        p95,
+        min: samples[0],
+    }
+}
+
+/// Markdown-ish table printer: fixed-width columns, header + separator.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_reports_sane_stats() {
+        let t = time(1, 10, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(t.iters, 10);
+        assert!(t.min <= t.median && t.median <= t.p95);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "mu"]);
+        t.row(vec!["MIMPS".into(), "0.8".into()]);
+        t.row(vec!["Uniform".into(), "101.8".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

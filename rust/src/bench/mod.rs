@@ -1,0 +1,2 @@
+//! Benchmark harness (substitute for criterion).
+pub mod harness;

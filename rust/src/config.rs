@@ -1,0 +1,193 @@
+//! Typed run configuration. Configs can be loaded from a JSON file
+//! (`--config path`) and overridden by CLI flags, so every experiment in
+//! EXPERIMENTS.md is reproducible from a single file + seed.
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Top-level configuration shared by the CLI subcommands and examples.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Vocabulary / category count N.
+    pub n: usize,
+    /// Embedding dimensionality d.
+    pub d: usize,
+    /// Base PRNG seed (experiments run `seeds` replicas at seed+0,1,…).
+    pub seed: u64,
+    /// Number of seed replicas for mean/stderr reporting.
+    pub seeds: usize,
+    /// Number of query vectors per replica.
+    pub queries: usize,
+    /// Head size k (top-k retrieved set S_k).
+    pub k: usize,
+    /// Tail sample size l.
+    pub l: usize,
+    /// FMBE feature-map dimension P.
+    pub fmbe_p: usize,
+    /// Worker threads.
+    pub threads: usize,
+    /// Directory holding AOT artifacts (*.hlo.txt + meta.json).
+    pub artifacts_dir: String,
+    /// Output directory for experiment results.
+    pub out_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            n: 100_000,
+            d: 300,
+            seed: 0,
+            seeds: 3,
+            queries: 10_000,
+            k: 1000,
+            l: 1000,
+            fmbe_p: 10_000,
+            threads: crate::util::threadpool::default_threads(),
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: "results".to_string(),
+        }
+    }
+}
+
+impl Config {
+    /// Small config for tests and smoke runs.
+    pub fn smoke() -> Self {
+        Config {
+            n: 2_000,
+            d: 32,
+            seeds: 2,
+            queries: 50,
+            k: 100,
+            l: 100,
+            fmbe_p: 500,
+            ..Default::default()
+        }
+    }
+
+    /// Load from a JSON object file; unknown keys are rejected to catch typos.
+    pub fn from_json_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Config> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config must be a JSON object"))?;
+        let mut cfg = Config::default();
+        for (key, val) in obj {
+            match key.as_str() {
+                "n" => cfg.n = val.as_usize().context("n")?,
+                "d" => cfg.d = val.as_usize().context("d")?,
+                "seed" => cfg.seed = val.as_usize().context("seed")? as u64,
+                "seeds" => cfg.seeds = val.as_usize().context("seeds")?,
+                "queries" => cfg.queries = val.as_usize().context("queries")?,
+                "k" => cfg.k = val.as_usize().context("k")?,
+                "l" => cfg.l = val.as_usize().context("l")?,
+                "fmbe_p" => cfg.fmbe_p = val.as_usize().context("fmbe_p")?,
+                "threads" => cfg.threads = val.as_usize().context("threads")?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = val.as_str().context("artifacts_dir")?.to_string()
+                }
+                "out_dir" => cfg.out_dir = val.as_str().context("out_dir")?.to_string(),
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply CLI flag overrides on top of this config.
+    pub fn apply_args(mut self, args: &Args) -> Result<Config> {
+        self.n = args.get_or("n", self.n);
+        self.d = args.get_or("d", self.d);
+        self.seed = args.get_or("seed", self.seed);
+        self.seeds = args.get_or("seeds", self.seeds);
+        self.queries = args.get_or("queries", self.queries);
+        self.k = args.get_or("k", self.k);
+        self.l = args.get_or("l", self.l);
+        self.fmbe_p = args.get_or("fmbe-p", self.fmbe_p);
+        self.threads = args.get_or("threads", self.threads);
+        if let Some(a) = args.get("artifacts-dir") {
+            self.artifacts_dir = a.to_string();
+        }
+        if let Some(o) = args.get("out-dir") {
+            self.out_dir = o.to_string();
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n > 0, "n must be positive");
+        anyhow::ensure!(self.d > 0, "d must be positive");
+        anyhow::ensure!(self.k <= self.n, "k ({}) must be <= n ({})", self.k, self.n);
+        anyhow::ensure!(
+            self.k + self.l <= self.n,
+            "k + l ({}) must be <= n ({}) so the tail sample excludes the head",
+            self.k + self.l,
+            self.n
+        );
+        anyhow::ensure!(self.threads > 0, "threads must be positive");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("seeds", Json::num(self.seeds as f64)),
+            ("queries", Json::num(self.queries as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("l", Json::num(self.l as f64)),
+            ("fmbe_p", Json::num(self.fmbe_p as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir)),
+            ("out_dir", Json::str(&self.out_dir)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = Config::smoke();
+        let j = cfg.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.n, cfg.n);
+        assert_eq!(back.k, cfg.k);
+        assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"n": 10, "bogus": 1}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let j = Json::parse(r#"{"n": 10, "k": 20}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let j = Json::parse(r#"{"n": 10, "k": 6, "l": 6}"#).unwrap();
+        assert!(Config::from_json(&j).is_err(), "k+l > n must be rejected");
+    }
+
+    #[test]
+    fn args_override() {
+        let args =
+            crate::util::cli::Args::parse(["--n", "500", "--k", "7"].map(String::from)).unwrap();
+        let cfg = Config::smoke().apply_args(&args).unwrap();
+        assert_eq!(cfg.n, 500);
+        assert_eq!(cfg.k, 7);
+        assert_eq!(cfg.d, Config::smoke().d);
+    }
+}

@@ -1,0 +1,147 @@
+//! Service metrics: lock-free counters plus latency reservoirs, cheap
+//! enough to sit on the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink (one per service).
+#[derive(Default)]
+pub struct ServiceMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    /// Nanosecond latency samples (bounded reservoir).
+    queue_ns: Mutex<Vec<u64>>,
+    exec_ns: Mutex<Vec<u64>>,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, queue_wait: Duration, exec: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut q = self.queue_ns.lock().unwrap();
+        if q.len() < RESERVOIR {
+            q.push(queue_wait.as_nanos() as u64);
+        }
+        drop(q);
+        let mut e = self.exec_ns.lock().unwrap();
+        if e.len() < RESERVOIR {
+            e.push(exec.as_nanos() as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let pct = |v: &Mutex<Vec<u64>>, p: f64| -> Duration {
+            let mut s = v.lock().unwrap().clone();
+            if s.is_empty() {
+                return Duration::ZERO;
+            }
+            s.sort_unstable();
+            let idx = ((s.len() - 1) as f64 * p) as usize;
+            Duration::from_nanos(s[idx])
+        };
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            mean_batch_size: {
+                let b = self.batches.load(Ordering::Relaxed);
+                if b == 0 {
+                    0.0
+                } else {
+                    self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+                }
+            },
+            queue_p50: pct(&self.queue_ns, 0.50),
+            queue_p95: pct(&self.queue_ns, 0.95),
+            exec_p50: pct(&self.exec_ns, 0.50),
+            exec_p95: pct(&self.exec_ns, 0.95),
+        }
+    }
+}
+
+/// Point-in-time view of the service counters.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub queue_p50: Duration,
+    pub queue_p95: Duration,
+    pub exec_p50: Duration,
+    pub exec_p95: Duration,
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "submitted={} completed={} shed={} batches={} mean_batch={:.1} \
+             queue_p50={:?} queue_p95={:?} exec_p50={:?} exec_p95={:?}",
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.batches,
+            self.mean_batch_size,
+            self.queue_p50,
+            self.queue_p95,
+            self.exec_p50,
+            self.exec_p95
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = ServiceMetrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_shed();
+        m.on_batch(4);
+        m.on_complete(Duration::from_millis(1), Duration::from_millis(2));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.mean_batch_size, 4.0);
+        assert!(s.queue_p50 >= Duration::from_millis(1));
+        assert!(s.exec_p95 >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = ServiceMetrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.queue_p95, Duration::ZERO);
+        assert_eq!(s.mean_batch_size, 0.0);
+    }
+}

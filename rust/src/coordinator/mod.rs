@@ -1,0 +1,22 @@
+//! L3 coordinator: the serving system around the estimators.
+//!
+//! Shape (vLLM-router-like, scaled to this paper): requests — (query
+//! vector, estimator kind, k, l) — enter a **bounded** queue; a batcher
+//! thread drains it under a max-batch/max-delay policy and groups
+//! requests by estimator kind; a worker pool retrieves `S_k` from the
+//! MIPS index and combines head + tail into Ẑ; `Exact` requests ride the
+//! AOT-compiled PJRT `score_batch` artifact when a runtime is attached
+//! (the brute-force path is the one worth batching — it's the only
+//! O(N·d) one). Metrics track queue wait, execution time and shed load.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use router::Router;
+pub use service::{
+    BackpressurePolicy, PartitionService, Request, Response, ServiceConfig, SubmitError,
+};

@@ -1,0 +1,126 @@
+//! Estimator routing: maps an [`EstimatorKind`] + per-request (k, l) to a
+//! concrete estimator instance. FMBE is stateful (fitted feature maps),
+//! so the router owns one fitted copy; the sampling estimators are
+//! constructed per call (they are zero-cost POD structs).
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::{
+    exact::Exact, fmbe::Fmbe, fmbe::FmbeConfig, mimps::Mimps, mince::Mince, nmimps::Nmimps,
+    uniform::Uniform, EstimateContext, Estimator, EstimatorKind,
+};
+use crate::mips::MipsIndex;
+use crate::util::rng::Rng;
+
+/// Routing table with a lazily fitted FMBE.
+pub struct Router {
+    fmbe: std::sync::OnceLock<Fmbe>,
+    fmbe_cfg: FmbeConfig,
+}
+
+impl Router {
+    pub fn new(fmbe_cfg: FmbeConfig) -> Self {
+        Router {
+            fmbe: std::sync::OnceLock::new(),
+            fmbe_cfg,
+        }
+    }
+
+    /// Estimate through the routed estimator. `store`/`index` are the
+    /// service's; `k`/`l` come from the request.
+    pub fn estimate(
+        &self,
+        kind: EstimatorKind,
+        k: usize,
+        l: usize,
+        store: &EmbeddingStore,
+        index: &dyn MipsIndex,
+        q: &[f32],
+        rng: &mut Rng,
+    ) -> f64 {
+        let mut ctx = EstimateContext { store, index, rng };
+        match kind {
+            EstimatorKind::Exact => Exact.estimate(&mut ctx, q),
+            EstimatorKind::Uniform => Uniform::new(l).estimate(&mut ctx, q),
+            EstimatorKind::Nmimps => Nmimps::new(k).estimate(&mut ctx, q),
+            EstimatorKind::Mimps => Mimps::new(k, l).estimate(&mut ctx, q),
+            EstimatorKind::Mince => Mince::new(k, l).estimate(&mut ctx, q),
+            EstimatorKind::Fmbe => {
+                let fmbe = self
+                    .fmbe
+                    .get_or_init(|| Fmbe::fit(store, self.fmbe_cfg.clone()));
+                fmbe.estimate(&mut ctx, q)
+            }
+        }
+    }
+
+    /// Scoring budget of a routed request (for cost accounting).
+    pub fn scorings(&self, kind: EstimatorKind, k: usize, l: usize, n: usize) -> usize {
+        match kind {
+            EstimatorKind::Exact => n,
+            EstimatorKind::Uniform => l,
+            EstimatorKind::Nmimps => k.min(n),
+            EstimatorKind::Mimps | EstimatorKind::Mince => (k + l).min(n),
+            EstimatorKind::Fmbe => self.fmbe_cfg.p_features.min(n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    #[test]
+    fn all_kinds_route_and_return_positive() {
+        let store = generate(&SynthConfig {
+            n: 400,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let index = BruteIndex::new(&store);
+        let router = Router::new(FmbeConfig {
+            p_features: 200,
+            ..Default::default()
+        });
+        let mut rng = Rng::seeded(1);
+        let q = store.row(10).to_vec();
+        for kind in EstimatorKind::all() {
+            let z = router.estimate(*kind, 20, 20, &store, &index, &q, &mut rng);
+            assert!(
+                z.is_finite(),
+                "{kind}: estimate must be finite, got {z}"
+            );
+            if *kind != EstimatorKind::Fmbe {
+                assert!(z > 0.0, "{kind}: {z}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_route_matches_partition() {
+        let store = generate(&SynthConfig {
+            n: 300,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let index = BruteIndex::new(&store);
+        let router = Router::new(FmbeConfig::default());
+        let mut rng = Rng::seeded(2);
+        let q = store.row(0).to_vec();
+        let z = router.estimate(EstimatorKind::Exact, 0, 0, &store, &index, &q, &mut rng);
+        let want = index.partition(&q);
+        assert!((z - want).abs() < 1e-9 * want);
+    }
+
+    #[test]
+    fn scorings_accounting() {
+        let router = Router::new(FmbeConfig {
+            p_features: 100,
+            ..Default::default()
+        });
+        assert_eq!(router.scorings(EstimatorKind::Exact, 5, 5, 1000), 1000);
+        assert_eq!(router.scorings(EstimatorKind::Mimps, 50, 60, 1000), 110);
+        assert_eq!(router.scorings(EstimatorKind::Fmbe, 0, 0, 1000), 100);
+    }
+}

@@ -1,0 +1,476 @@
+//! The partition-estimation service: bounded ingress queue → batcher →
+//! worker pool → per-request reply channels. See module docs in
+//! [`crate::coordinator`].
+
+use super::batcher::{Batch, BatchAssembler, BatcherConfig};
+use super::metrics::ServiceMetrics;
+use super::router::Router;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::EstimatorKind;
+use crate::mips::MipsIndex;
+use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::util::rng::Rng;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One estimation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub query: Vec<f32>,
+    pub kind: EstimatorKind,
+    pub k: usize,
+    pub l: usize,
+}
+
+/// The service's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub z: f64,
+    pub kind: EstimatorKind,
+    pub queue_wait: std::time::Duration,
+    pub exec_time: std::time::Duration,
+    /// Category scorings this request cost (sublinearity accounting).
+    pub scorings: usize,
+}
+
+/// Internal: request + reply channel + enqueue timestamp.
+pub struct QueuedRequest {
+    pub request: Request,
+    pub reply: mpsc::Sender<Response>,
+    pub enqueued: Instant,
+}
+
+/// What to do when the ingress queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Block the submitter until space frees up.
+    Block,
+    /// Reject immediately with [`SubmitError::Overloaded`].
+    Shed,
+}
+
+/// Service construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub batcher: BatcherConfig,
+    pub backpressure: BackpressurePolicy,
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: crate::util::threadpool::default_threads().min(8),
+            queue_capacity: 1024,
+            batcher: BatcherConfig::default(),
+            backpressure: BackpressurePolicy::Block,
+            seed: 0,
+        }
+    }
+}
+
+/// Submission failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue full under [`BackpressurePolicy::Shed`].
+    Overloaded,
+    /// Service has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "service overloaded (queue full)"),
+            SubmitError::Closed => write!(f, "service closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// The running service.
+pub struct PartitionService {
+    ingress: mpsc::SyncSender<QueuedRequest>,
+    metrics: Arc<ServiceMetrics>,
+    policy: BackpressurePolicy,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Shared worker state.
+struct WorkerCtx {
+    store: Arc<EmbeddingStore>,
+    index: Arc<dyn MipsIndex>,
+    router: Arc<Router>,
+    metrics: Arc<ServiceMetrics>,
+    runtime: Option<RuntimeHandle>,
+}
+
+impl PartitionService {
+    /// Start the batcher + worker threads.
+    pub fn start(
+        store: Arc<EmbeddingStore>,
+        index: Arc<dyn MipsIndex>,
+        router: Router,
+        cfg: ServiceConfig,
+        runtime: Option<RuntimeHandle>,
+    ) -> PartitionService {
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (ingress_tx, ingress_rx) = mpsc::sync_channel::<QueuedRequest>(cfg.queue_capacity);
+        let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let mut threads = Vec::new();
+
+        // Batcher thread.
+        {
+            let metrics = metrics.clone();
+            let bcfg = cfg.batcher.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("zest-batcher".into())
+                    .spawn(move || {
+                        let mut asm = BatchAssembler::new(bcfg);
+                        while let Some(batch) = asm.next_batch(&ingress_rx) {
+                            metrics.on_batch(batch.requests.len());
+                            if batch_tx.send(batch).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+
+        // Worker threads.
+        let ctx = Arc::new(WorkerCtx {
+            store,
+            index,
+            router: Arc::new(router),
+            metrics: metrics.clone(),
+            runtime,
+        });
+        let mut seed_rng = Rng::seeded(cfg.seed ^ 0x5E55_1011);
+        for w in 0..cfg.workers.max(1) {
+            let ctx = ctx.clone();
+            let rx = batch_rx.clone();
+            let mut rng = seed_rng.fork();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("zest-worker-{w}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match batch {
+                            Ok(b) => Self::run_batch(&ctx, b, &mut rng),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        PartitionService {
+            ingress: ingress_tx,
+            metrics,
+            policy: cfg.backpressure,
+            threads,
+        }
+    }
+
+    fn run_batch(ctx: &WorkerCtx, batch: Batch, rng: &mut Rng) {
+        // Exact batches ride the PJRT scoring artifact when attached.
+        if batch.kind == EstimatorKind::Exact {
+            if let Some(rt) = &ctx.runtime {
+                if Self::run_exact_batch_pjrt(ctx, &batch, rt).is_ok() {
+                    return;
+                }
+                log::warn!("PJRT exact batch failed; falling back to native path");
+            }
+        }
+        let n = ctx.store.len();
+        for qr in batch.requests {
+            let started = Instant::now();
+            let z = ctx.router.estimate(
+                qr.request.kind,
+                qr.request.k,
+                qr.request.l,
+                &ctx.store,
+                ctx.index.as_ref(),
+                &qr.request.query,
+                rng,
+            );
+            let exec = started.elapsed();
+            let queue_wait = started.duration_since(qr.enqueued);
+            ctx.metrics.on_complete(queue_wait, exec);
+            let _ = qr.reply.send(Response {
+                z,
+                kind: qr.request.kind,
+                queue_wait,
+                exec_time: exec,
+                scorings: ctx
+                    .router
+                    .scorings(qr.request.kind, qr.request.k, qr.request.l, n),
+            });
+        }
+    }
+
+    /// Batched exact partition via the AOT `score_batch` artifact:
+    /// pad the query batch to the artifact's B, stream the category
+    /// matrix in artifact-sized chunks (zero-padding the last one and
+    /// correcting the +1-per-padded-row bias), sum partials per query.
+    fn run_exact_batch_pjrt(
+        ctx: &WorkerCtx,
+        batch: &Batch,
+        rt: &RuntimeHandle,
+    ) -> anyhow::Result<()> {
+        let store = &ctx.store;
+        let (n, d) = (store.len(), store.dim());
+        // Artifact shapes come from meta.json via a probe call contract:
+        // the service caches them in the handle-free config instead; here
+        // we read the declared shapes lazily from the first run failure.
+        // Shapes: v (chunk, d_a), qs (b_a, d_a) -> (b_a,)
+        let (chunk, d_a, b_a) = rt_score_batch_dims(rt)?;
+        anyhow::ensure!(d_a == d, "artifact d {d_a} != store d {d}");
+        let started = Instant::now();
+        let reqs = &batch.requests;
+        let mut zs = vec![0f64; reqs.len()];
+        for q_chunk in (0..reqs.len()).step_by(b_a) {
+            let q_hi = (q_chunk + b_a).min(reqs.len());
+            let mut qs = vec![0f32; b_a * d];
+            for (bi, qr) in reqs[q_chunk..q_hi].iter().enumerate() {
+                anyhow::ensure!(qr.request.query.len() == d, "query dim mismatch");
+                qs[bi * d..(bi + 1) * d].copy_from_slice(&qr.request.query);
+            }
+            let qs_t = HostTensor::f32(qs, &[b_a, d]);
+            for lo in (0..n).step_by(chunk) {
+                let hi = (lo + chunk).min(n);
+                let rows = hi - lo;
+                let pad = chunk - rows;
+                let mut v = vec![0f32; chunk * d];
+                v[..rows * d].copy_from_slice(store.rows(lo, hi));
+                let out = rt.run(
+                    "score_batch",
+                    vec![HostTensor::f32(v, &[chunk, d]), qs_t.clone()],
+                )?;
+                let partials = out[0]
+                    .as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("score_batch returned non-f32"))?;
+                for (bi, z) in zs[q_chunk..q_hi].iter_mut().enumerate() {
+                    // Padded rows contribute exp(0) = 1 each; remove them.
+                    *z += partials[bi] as f64 - pad as f64;
+                }
+            }
+        }
+        let exec = started.elapsed();
+        for (qr, z) in reqs.iter().zip(zs) {
+            let queue_wait = started.duration_since(qr.enqueued);
+            ctx.metrics.on_complete(queue_wait, exec);
+            let _ = qr.reply.send(Response {
+                z,
+                kind: EstimatorKind::Exact,
+                queue_wait,
+                exec_time: exec,
+                scorings: n,
+            });
+        }
+        Ok(())
+    }
+
+    /// Submit a request; returns the reply receiver.
+    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        let qr = QueuedRequest {
+            request,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        self.metrics.on_submit();
+        match self.policy {
+            BackpressurePolicy::Block => self
+                .ingress
+                .send(qr)
+                .map_err(|_| SubmitError::Closed)
+                .map(|_| rx),
+            BackpressurePolicy::Shed => match self.ingress.try_send(qr) {
+                Ok(()) => Ok(rx),
+                Err(mpsc::TrySendError::Full(_)) => {
+                    self.metrics.on_shed();
+                    Err(SubmitError::Overloaded)
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            },
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn estimate(&self, request: Request) -> Result<Response, SubmitError> {
+        let rx = self.submit(request)?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Drain and stop all threads.
+    pub fn shutdown(self) {
+        drop(self.ingress);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// score_batch artifact dims cache: (chunk, d, batch). Read once from the
+/// exporter's meta via the runtime thread environment variable contract.
+fn rt_score_batch_dims(_rt: &RuntimeHandle) -> anyhow::Result<(usize, usize, usize)> {
+    // The handle intentionally carries no meta; the service reads the
+    // artifacts dir the same way the runtime did.
+    let dir = std::env::var("ZEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let meta = crate::runtime::ArtifactsMeta::load(std::path::Path::new(&dir))?;
+    let (_, args) = meta
+        .graphs
+        .get("score_batch")
+        .ok_or_else(|| anyhow::anyhow!("score_batch not exported"))?;
+    let chunk = args[0].shape[0];
+    let d = args[0].shape[1];
+    let b = args[1].shape[0];
+    Ok((chunk, d, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::estimators::fmbe::FmbeConfig;
+    use crate::mips::brute::BruteIndex;
+
+    fn start_service(policy: BackpressurePolicy, capacity: usize) -> (PartitionService, Arc<EmbeddingStore>) {
+        let store = Arc::new(generate(&SynthConfig {
+            n: 500,
+            d: 16,
+            ..SynthConfig::tiny()
+        }));
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&store));
+        let svc = PartitionService::start(
+            store.clone(),
+            index,
+            Router::new(FmbeConfig {
+                p_features: 100,
+                ..Default::default()
+            }),
+            ServiceConfig {
+                workers: 2,
+                queue_capacity: capacity,
+                backpressure: policy,
+                ..Default::default()
+            },
+            None,
+        );
+        (svc, store)
+    }
+
+    #[test]
+    fn end_to_end_estimates_match_exact_within_tolerance() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 64);
+        let brute = BruteIndex::new(&store);
+        let q = store.row(450).to_vec();
+        let want = brute.partition(&q);
+        let resp = svc
+            .estimate(Request {
+                query: q,
+                kind: EstimatorKind::Mimps,
+                k: 100,
+                l: 100,
+            })
+            .unwrap();
+        let rel = ((resp.z - want) / want).abs();
+        assert!(rel < 0.5, "service MIMPS {} vs exact {want}", resp.z);
+        assert_eq!(resp.scorings, 200);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 256);
+        let svc = Arc::new(svc);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let svc = svc.clone();
+            let store = store.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    let q = store.row((t * 25 + i) % store.len()).to_vec();
+                    let r = svc
+                        .estimate(Request {
+                            query: q,
+                            kind: EstimatorKind::Mimps,
+                            k: 20,
+                            l: 20,
+                        })
+                        .unwrap();
+                    assert!(r.z.is_finite() && r.z > 0.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.completed, 100);
+        assert_eq!(m.shed, 0);
+        assert!(m.batches >= 1);
+        Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn shed_policy_rejects_when_flooded() {
+        // Tiny queue + tiny batches: flood with slow Exact requests.
+        let store = Arc::new(generate(&SynthConfig {
+            n: 4000,
+            d: 64,
+            ..SynthConfig::tiny()
+        }));
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::with_threads(&store, 1));
+        let svc = PartitionService::start(
+            store.clone(),
+            index,
+            Router::new(FmbeConfig::default()),
+            ServiceConfig {
+                workers: 1,
+                queue_capacity: 2,
+                backpressure: BackpressurePolicy::Shed,
+                batcher: BatcherConfig {
+                    max_batch: 1,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..200 {
+            match svc.submit(Request {
+                query: store.row(i % store.len()).to_vec(),
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+            }) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::Overloaded) => rejected += 1,
+                Err(e) => panic!("{e}"),
+            }
+        }
+        assert!(rejected > 0, "flood should shed load");
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        assert!(svc.metrics().shed as usize == rejected);
+        svc.shutdown();
+    }
+}

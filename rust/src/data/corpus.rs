@@ -1,0 +1,212 @@
+//! Synthetic Zipfian bigram corpus — the Penn Treebank stand-in for the
+//! paper's §5.2 language-modeling experiment (DESIGN.md §Substitutions).
+//!
+//! A hidden bigram transition model is sampled once (per seed): each word
+//! type gets a sparse successor distribution mixing (a) a Zipfian unigram
+//! background and (b) a handful of strongly preferred successors. Token
+//! sequences sampled from this chain have realistic frequency structure:
+//! Zipfian unigrams, bursty local co-occurrence — which is what drives the
+//! head/tail split of the partition function that Table 4 probes.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Configuration for the synthetic corpus.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// Vocabulary size (paper PTB §0–20 vocab ≈ 10k).
+    pub vocab: usize,
+    /// Training tokens to sample.
+    pub train_tokens: usize,
+    /// Test tokens to sample (PTB §21–22 gives ~10k contexts).
+    pub test_tokens: usize,
+    /// Zipf exponent for the unigram background.
+    pub zipf_s: f64,
+    /// Number of preferred successors per word type.
+    pub links: usize,
+    /// Mixture weight of the preferred-successor component.
+    pub link_weight: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 10_000,
+            train_tokens: 800_000,
+            test_tokens: 40_000,
+            zipf_s: 1.05,
+            links: 8,
+            link_weight: 0.45,
+            seed: 0,
+        }
+    }
+}
+
+impl CorpusConfig {
+    pub fn tiny() -> Self {
+        CorpusConfig {
+            vocab: 500,
+            train_tokens: 20_000,
+            test_tokens: 2_000,
+            ..Default::default()
+        }
+    }
+}
+
+/// A generated corpus: token id sequences plus the frequency model.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub train: Vec<u32>,
+    pub test: Vec<u32>,
+    pub vocab: usize,
+    /// The hidden preferred-successor table (per word type) the sampler
+    /// used — exposed for tests and diagnostics.
+    pub links: Vec<Vec<u32>>,
+}
+
+/// Sample the corpus for a config.
+pub fn generate(cfg: &CorpusConfig) -> Corpus {
+    let mut rng = Rng::seeded(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(17));
+    let unigram = Zipf::new(cfg.vocab, cfg.zipf_s);
+    // Preferred successors: word w prefers links[w] (biased toward
+    // mid-frequency words so the links carry real signal).
+    let links: Vec<Vec<u32>> = (0..cfg.vocab)
+        .map(|_| {
+            (0..cfg.links)
+                .map(|_| {
+                    // Bias: sample two Zipf draws, keep the rarer one.
+                    let a = unigram.sample(&mut rng);
+                    let b = unigram.sample(&mut rng);
+                    a.max(b) as u32
+                })
+                .collect()
+        })
+        .collect();
+
+    let sample_stream = |tokens: usize, rng: &mut Rng| -> Vec<u32> {
+        let mut out = Vec::with_capacity(tokens);
+        let mut prev = unigram.sample(rng) as u32;
+        out.push(prev);
+        while out.len() < tokens {
+            let next = if rng.f64() < cfg.link_weight {
+                let ls = &links[prev as usize];
+                ls[rng.below(ls.len())]
+            } else {
+                unigram.sample(rng) as u32
+            };
+            out.push(next);
+            prev = next;
+        }
+        out
+    };
+
+    let train = sample_stream(cfg.train_tokens, &mut rng);
+    let test = sample_stream(cfg.test_tokens, &mut rng);
+    Corpus {
+        train,
+        test,
+        vocab: cfg.vocab,
+        links,
+    }
+}
+
+impl Corpus {
+    /// Iterate (context, target) pairs with a fixed-size context window
+    /// over a token stream. Contexts shorter than `ctx` at the start are
+    /// left-padded with token 0 (the most frequent type, as PTB LMs pad
+    /// with a boundary symbol).
+    pub fn windows(stream: &[u32], ctx: usize) -> impl Iterator<Item = (Vec<u32>, u32)> + '_ {
+        (0..stream.len().saturating_sub(1)).map(move |t| {
+            let target = stream[t + 1];
+            let mut c = Vec::with_capacity(ctx);
+            for j in 0..ctx {
+                let pos = t as i64 - (ctx - 1 - j) as i64;
+                c.push(if pos < 0 { 0 } else { stream[pos as usize] });
+            }
+            (c, target)
+        })
+    }
+
+    /// Empirical unigram counts over the training split.
+    pub fn unigram_counts(&self) -> Vec<u64> {
+        let mut c = vec![0u64; self.vocab];
+        for &t in &self.train {
+            c[t as usize] += 1;
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sized() {
+        let cfg = CorpusConfig::tiny();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.train.len(), cfg.train_tokens);
+        assert_eq!(a.test.len(), cfg.test_tokens);
+        assert!(a.train.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn unigrams_are_zipfian() {
+        let cfg = CorpusConfig::tiny();
+        let c = generate(&cfg);
+        let counts = c.unigram_counts();
+        // Head rank should dominate a mid rank by a large factor.
+        assert!(counts[0] > counts[100].max(1) * 5, "head {} mid {}", counts[0], counts[100]);
+    }
+
+    #[test]
+    fn bigram_links_create_burstiness() {
+        let cfg = CorpusConfig::tiny();
+        let c = generate(&cfg);
+        // Transitions out of a frequent word should land in its preferred
+        // successor set at roughly the configured link_weight rate — far
+        // above what the unigram background alone would produce.
+        let word = 1u32;
+        let link_set: std::collections::HashSet<u32> =
+            c.links[word as usize].iter().copied().collect();
+        let (mut in_links, mut total) = (0u64, 0u64);
+        for w in c.train.windows(2) {
+            if w[0] == word {
+                total += 1;
+                if link_set.contains(&w[1]) {
+                    in_links += 1;
+                }
+            }
+        }
+        assert!(total >= 50, "word 1 should be frequent, saw {total}");
+        let share = in_links as f64 / total as f64;
+        assert!(
+            share > cfg.link_weight * 0.7,
+            "preferred-successor share {share} too low vs link_weight {}",
+            cfg.link_weight
+        );
+    }
+
+    #[test]
+    fn windows_pad_and_align() {
+        let stream = vec![5u32, 6, 7, 8];
+        let w: Vec<_> = Corpus::windows(&stream, 3).collect();
+        assert_eq!(w.len(), 3);
+        assert_eq!(w[0], (vec![0, 0, 5], 6));
+        assert_eq!(w[1], (vec![0, 5, 6], 7));
+        assert_eq!(w[2], (vec![5, 6, 7], 8));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&CorpusConfig::tiny());
+        let b = generate(&CorpusConfig {
+            seed: 9,
+            ..CorpusConfig::tiny()
+        });
+        assert_ne!(a.train, b.train);
+    }
+}

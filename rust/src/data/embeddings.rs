@@ -1,0 +1,178 @@
+//! `EmbeddingStore`: the N×d row-major matrix of category weight vectors
+//! `v_i`, with a compact binary on-disk format (magic + dims + raw f32 LE)
+//! so experiments can generate once and reuse across benches.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"ZESTEMB1";
+
+/// Row-major dense matrix of `n` category vectors in `R^d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EmbeddingStore {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl EmbeddingStore {
+    /// Build from raw row-major data.
+    pub fn from_data(n: usize, d: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != n * d {
+            bail!("data length {} != n*d = {}", data.len(), n * d);
+        }
+        Ok(EmbeddingStore { n, d, data })
+    }
+
+    /// Number of categories N.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The i-th category vector.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Raw row-major backing data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// A contiguous block of rows `[lo, hi)` (used by chunked scoring).
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.data[lo * self.d..hi * self.d]
+    }
+
+    /// Restrict to the first `n` rows (the paper uses the first 100k of 3M).
+    pub fn truncate(&self, n: usize) -> EmbeddingStore {
+        let n = n.min(self.n);
+        EmbeddingStore {
+            n,
+            d: self.d,
+            data: self.data[..n * self.d].to_vec(),
+        }
+    }
+
+    /// Per-row L2 norms.
+    pub fn norms(&self) -> Vec<f32> {
+        (0..self.n)
+            .map(|i| crate::linalg::norm(self.row(i)))
+            .collect()
+    }
+
+    /// Serialize to the binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.n as u64).to_le_bytes())?;
+        f.write_all(&(self.d as u64).to_le_bytes())?;
+        // Bulk-write the raw f32 data as LE bytes.
+        let bytes: Vec<u8> = self.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Load from the binary format.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {path:?}: not a zest embedding file");
+        }
+        let mut u = [0u8; 8];
+        f.read_exact(&mut u)?;
+        let n = u64::from_le_bytes(u) as usize;
+        f.read_exact(&mut u)?;
+        let d = u64::from_le_bytes(u) as usize;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes)?;
+        if bytes.len() != n * d * 4 {
+            bail!(
+                "truncated embedding file: have {} bytes, want {}",
+                bytes.len(),
+                n * d * 4
+            );
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(EmbeddingStore { n, d, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_store() -> EmbeddingStore {
+        EmbeddingStore::from_data(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap()
+    }
+
+    #[test]
+    fn row_access() {
+        let s = small_store();
+        assert_eq!(s.row(0), &[1.0, 2.0]);
+        assert_eq!(s.row(2), &[5.0, 6.0]);
+        assert_eq!(s.rows(1, 3), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(EmbeddingStore::from_data(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn truncate_keeps_prefix() {
+        let s = small_store().truncate(2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("zest_test_emb");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        let s = small_store();
+        s.save(&path).unwrap();
+        let l = EmbeddingStore::load(&path).unwrap();
+        assert_eq!(s, l);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("zest_test_emb");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC00000000").unwrap();
+        assert!(EmbeddingStore::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn norms_computed_per_row() {
+        let s = EmbeddingStore::from_data(2, 2, vec![3.0, 4.0, 0.0, 1.0]).unwrap();
+        let n = s.norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 1.0).abs() < 1e-6);
+    }
+}

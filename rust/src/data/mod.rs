@@ -1,0 +1,8 @@
+//! Datasets: the embedding store (category weight vectors `v_i`), the
+//! synthetic word2vec-like generator that stands in for the GoogleNews
+//! vectors, and the synthetic Zipfian corpus that stands in for the Penn
+//! Treebank (see DESIGN.md §Substitutions).
+
+pub mod corpus;
+pub mod embeddings;
+pub mod synth;

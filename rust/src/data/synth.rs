@@ -1,0 +1,289 @@
+//! Synthetic word2vec-like embeddings.
+//!
+//! The paper's oracle experiments run on the first 100k GoogleNews
+//! word2vec vectors (300-d, unnormalized). That dataset is not available
+//! here, so this module generates a synthetic embedding set that
+//! reproduces the two geometric properties the paper's results depend on
+//! (DESIGN.md §Substitutions):
+//!
+//! 1. **Norm/frequency correlation** — frequent ("common") tokens have
+//!    small-norm, weakly clustered vectors, so as queries they induce a
+//!    nearly flat `exp(u)` distribution over the vocabulary (paper Fig. 1:
+//!    "The" needs ~80k neighbors to cover 80% of Z). Rare tokens have
+//!    large-norm, strongly cluster-aligned vectors and induce peaked
+//!    distributions (~1k neighbors suffice).
+//! 2. **Cluster structure** — tokens live near one of `clusters` topic
+//!    centroids, so the top of the inner-product order for a rare query is
+//!    populated by its topical neighbors, exactly the structure MIPS
+//!    indexes exploit.
+//!
+//! Token `i` has Zipf rank `i` (0 = most frequent). Its vector is
+//! `norm(i) * (align(i) * c_{topic(i)} + sqrt(1-align(i)^2) * ε)` with
+//! `ε` a random unit vector, `norm` and `align` increasing in rank.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::util::rng::{Rng, Zipf};
+
+/// Parameters for the synthetic embedding generator.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Vocabulary size N (paper: 100_000).
+    pub n: usize,
+    /// Dimensionality d (paper: 300).
+    pub d: usize,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Number of topic clusters.
+    pub clusters: usize,
+    /// Vector norm for the most frequent token.
+    pub norm_lo: f32,
+    /// Vector norm for the rarest token.
+    pub norm_hi: f32,
+    /// Cluster alignment for the most frequent token (0 = isotropic).
+    pub align_lo: f32,
+    /// Cluster alignment for the rarest token (→1 = on the centroid).
+    pub align_hi: f32,
+    /// Zipf exponent for the frequency model.
+    pub zipf_s: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 100_000,
+            d: 300,
+            seed: 0,
+            clusters: 256,
+            norm_lo: 0.8,
+            norm_hi: 5.0,
+            align_lo: 0.05,
+            align_hi: 0.9,
+            zipf_s: 1.05,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// A small configuration for unit tests (fast to generate and score).
+    pub fn tiny() -> Self {
+        SynthConfig {
+            n: 2_000,
+            d: 32,
+            clusters: 16,
+            ..Default::default()
+        }
+    }
+}
+
+/// Rank-interpolation helper: log-spaced ramp from `lo` at rank 0 to `hi`
+/// at rank n-1. Log spacing matches the Zipfian intuition that the first
+/// few ranks differ the most.
+fn ramp(lo: f32, hi: f32, rank: usize, n: usize) -> f32 {
+    if n <= 1 {
+        return lo;
+    }
+    let t = ((1 + rank) as f64).ln() / (n as f64).ln();
+    lo + (hi - lo) * t as f32
+}
+
+/// Generate the synthetic embedding set.
+pub fn generate(cfg: &SynthConfig) -> EmbeddingStore {
+    let mut rng = Rng::seeded(cfg.seed);
+    // Topic centroids: random unit vectors.
+    let centers: Vec<Vec<f32>> = (0..cfg.clusters.max(1))
+        .map(|_| rng.unit_vec(cfg.d))
+        .collect();
+    let mut data = vec![0f32; cfg.n * cfg.d];
+    for i in 0..cfg.n {
+        let topic = rng.below(centers.len());
+        let align = ramp(cfg.align_lo, cfg.align_hi, i, cfg.n).clamp(0.0, 0.999);
+        let nrm = ramp(cfg.norm_lo, cfg.norm_hi, i, cfg.n);
+        let c = &centers[topic];
+        // Noise direction orthogonalized against the centroid so the row
+        // norm is exactly `nrm` (align² + ortho² = 1 with c ⟂ eps).
+        let mut eps = rng.unit_vec(cfg.d);
+        let proj = crate::linalg::dot(&eps, c);
+        for j in 0..cfg.d {
+            eps[j] -= proj * c[j];
+        }
+        let enorm = crate::linalg::norm(&eps).max(f32::MIN_POSITIVE);
+        let ortho = (1.0 - align * align).sqrt() / enorm;
+        let row = &mut data[i * cfg.d..(i + 1) * cfg.d];
+        for j in 0..cfg.d {
+            row[j] = nrm * (align * c[j] + ortho * eps[j]);
+        }
+    }
+    EmbeddingStore::from_data(cfg.n, cfg.d, data).expect("consistent shape by construction")
+}
+
+/// The Zipf frequency model associated with a config (token i has rank i).
+pub fn frequency_model(cfg: &SynthConfig) -> Zipf {
+    Zipf::new(cfg.n, cfg.zipf_s)
+}
+
+/// Pseudo corpus frequency for token `i`, scaled to a corpus of
+/// `corpus_tokens` tokens — used for Figure 1's legend annotations.
+pub fn corpus_frequency(cfg: &SynthConfig, i: usize, corpus_tokens: f64) -> u64 {
+    let z = frequency_model(cfg);
+    (z.pmf(i) * corpus_tokens) as u64
+}
+
+/// Build noisy queries the way the paper does (§5.1): take data vectors and
+/// add Gaussian noise with a controlled relative norm
+/// (`|noise| / |q| = rel_noise`), so queries deviate from — but stay close
+/// to — real category vectors.
+pub fn noisy_queries(
+    store: &EmbeddingStore,
+    indices: &[usize],
+    rel_noise: f32,
+    rng: &mut Rng,
+) -> Vec<Vec<f32>> {
+    indices
+        .iter()
+        .map(|&i| {
+            let base = store.row(i);
+            if rel_noise <= 0.0 {
+                return base.to_vec();
+            }
+            let target = crate::linalg::norm(base) * rel_noise;
+            let dir = rng.unit_vec(store.dim());
+            base.iter()
+                .zip(&dir)
+                .map(|(b, n)| b + target * n)
+                .collect()
+        })
+        .collect()
+}
+
+/// Sample query indices: `count` tokens drawn by frequency rank strata so
+/// the query set covers common, mid and rare tokens (the paper uses 10k
+/// items "from across" the 100k vocabulary).
+pub fn stratified_query_indices(n: usize, count: usize, rng: &mut Rng) -> Vec<usize> {
+    let count = count.min(n);
+    if count == 0 {
+        return vec![];
+    }
+    // Split into `count` equal strata and pick one index per stratum.
+    let mut out = Vec::with_capacity(count);
+    let stride = n as f64 / count as f64;
+    for s in 0..count {
+        let lo = (s as f64 * stride) as usize;
+        let hi = (((s + 1) as f64) * stride) as usize;
+        let hi = hi.max(lo + 1).min(n);
+        out.push(rng.range(lo, hi));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let cfg = SynthConfig::tiny();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), cfg.n);
+        assert_eq!(a.dim(), cfg.d);
+        assert_eq!(a, b, "same seed must generate identical data");
+        let c = generate(&SynthConfig {
+            seed: 1,
+            ..SynthConfig::tiny()
+        });
+        assert_ne!(a, c, "different seed must differ");
+    }
+
+    #[test]
+    fn norms_increase_with_rank() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let head_norm = linalg::norm(s.row(0));
+        let tail_norm = linalg::norm(s.row(cfg.n - 1));
+        assert!(
+            tail_norm > head_norm * 2.0,
+            "rare-token norm {tail_norm} should dominate common-token norm {head_norm}"
+        );
+        // Endpoints ≈ configured norms.
+        assert!((head_norm - cfg.norm_lo).abs() / cfg.norm_lo < 0.05);
+        assert!((tail_norm - cfg.norm_hi).abs() / cfg.norm_hi < 0.05);
+    }
+
+    /// The property Figure 1 depends on: a common token as query induces a
+    /// much flatter distribution than a rare token — measured by how many
+    /// top categories are needed to reach 80% of Z.
+    #[test]
+    fn common_queries_flatter_than_rare() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let need = |qi: usize| -> usize {
+            let q = s.row(qi);
+            let mut scores = vec![0f32; s.len()];
+            linalg::gemv(s.data(), s.len(), s.dim(), q, &mut scores);
+            let mut e: Vec<f64> = scores.iter().map(|&x| (x as f64).exp()).collect();
+            e.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let z: f64 = e.iter().sum();
+            let mut acc = 0.0;
+            for (i, v) in e.iter().enumerate() {
+                acc += v;
+                if acc >= 0.8 * z {
+                    return i + 1;
+                }
+            }
+            e.len()
+        };
+        let common = need(0);
+        let rare = need(cfg.n - 1);
+        assert!(
+            common > rare * 5,
+            "common query should need many more neighbors: common={common} rare={rare}"
+        );
+    }
+
+    #[test]
+    fn noisy_queries_have_requested_relative_norm() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let mut rng = Rng::seeded(7);
+        let qs = noisy_queries(&s, &[100, 200], 0.2, &mut rng);
+        for (qi, &idx) in [100usize, 200].iter().enumerate() {
+            let diff: Vec<f32> = qs[qi]
+                .iter()
+                .zip(s.row(idx))
+                .map(|(a, b)| a - b)
+                .collect();
+            let rel = linalg::norm(&diff) / linalg::norm(s.row(idx));
+            assert!((rel - 0.2).abs() < 1e-4, "rel noise {rel}");
+        }
+    }
+
+    #[test]
+    fn zero_noise_returns_original() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let mut rng = Rng::seeded(7);
+        let qs = noisy_queries(&s, &[5], 0.0, &mut rng);
+        assert_eq!(qs[0].as_slice(), s.row(5));
+    }
+
+    #[test]
+    fn stratified_indices_cover_range() {
+        let mut rng = Rng::seeded(11);
+        let idx = stratified_query_indices(1000, 10, &mut rng);
+        assert_eq!(idx.len(), 10);
+        assert!(idx[0] < 100);
+        assert!(idx[9] >= 900);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn corpus_frequency_decreasing() {
+        let cfg = SynthConfig::tiny();
+        let f0 = corpus_frequency(&cfg, 0, 1e9);
+        let f100 = corpus_frequency(&cfg, 100, 1e9);
+        assert!(f0 > f100);
+    }
+}

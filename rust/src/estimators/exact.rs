@@ -1,0 +1,56 @@
+//! Exact partition function — the ground truth every table's error is
+//! measured against, and the brute-force baseline for Speedup.
+
+use super::{EstimateContext, Estimator};
+use crate::linalg;
+
+/// Ẑ = Z: full O(N·d) sum (eq. 1).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Exact;
+
+impl Estimator for Exact {
+    fn name(&self) -> String {
+        "Exact".to_string()
+    }
+
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
+        let store = ctx.store;
+        let mut z = 0f64;
+        for i in 0..store.len() {
+            z += (linalg::dot(store.row(i), q) as f64).exp();
+        }
+        z
+    }
+
+    fn scorings(&self, n: usize) -> usize {
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_brute_partition() {
+        let s = generate(&SynthConfig {
+            n: 500,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(0);
+        let q = s.row(17).to_vec();
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = Exact.estimate(&mut ctx, &q);
+        let want = brute.partition(&q);
+        assert!((z - want).abs() < 1e-9 * want);
+    }
+}

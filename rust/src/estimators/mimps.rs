@@ -1,0 +1,177 @@
+//! MIMPS — MIPS-based importance sampling, the paper's main estimator
+//! (eq. 5):
+//!
+//! ```text
+//! Ẑ = Σ_{s∈S_k(q)} exp(s·q)  +  (N−k)/l · Σ_{u∈U_l} exp(u·q)
+//! ```
+//!
+//! The head is summed exactly from the top-k retrieval; the tail is
+//! corrected by a uniform sample over the `N−k` remaining categories —
+//! "in effect we are assuming that the values at the tail end of the
+//! probability distribution lie in a small range and thus a small sample
+//! size still has a small variance."
+//!
+//! `Ẑ` is unbiased whenever the retrieval is exact: the head term is
+//! deterministic and the tail term is a uniform-sample mean scaled by the
+//! tail population size (tested in `unbiased_tail_correction`).
+
+use super::{tail, EstimateContext, Estimator};
+
+/// MIMPS estimator with head size `k` and tail sample size `l`.
+#[derive(Clone, Copy, Debug)]
+pub struct Mimps {
+    pub k: usize,
+    pub l: usize,
+}
+
+impl Mimps {
+    pub fn new(k: usize, l: usize) -> Self {
+        Mimps { k, l }
+    }
+}
+
+impl Estimator for Mimps {
+    fn name(&self) -> String {
+        format!("MIMPS(k={},l={})", self.k, self.l)
+    }
+
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
+        let n = ctx.store.len();
+        let head = ctx.index.top_k(q, self.k);
+        let head_z = tail::head_sum(&head);
+        let k_eff = head.len();
+        if k_eff >= n || self.l == 0 {
+            return head_z;
+        }
+        let sample = tail::sample_tail(ctx.store, &head, self.l, q, ctx.rng);
+        if sample.indices.is_empty() {
+            return head_z;
+        }
+        let tail_mean: f64 =
+            sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
+        head_z + (n - k_eff) as f64 * tail_mean
+    }
+
+    fn scorings(&self, n: usize) -> usize {
+        (self.k + self.l).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::metrics::abs_rel_err_pct;
+    use crate::mips::brute::BruteIndex;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (crate::data::embeddings::EmbeddingStore, BruteIndex) {
+        let s = generate(&SynthConfig::tiny());
+        let b = BruteIndex::new(&s);
+        (s, b)
+    }
+
+    #[test]
+    fn exact_when_k_plus_l_covers_n() {
+        let s = generate(&SynthConfig {
+            n: 200,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let q = s.row(11).to_vec();
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        // k + l = N → the tail sample is the whole complement → exact.
+        let z = Mimps::new(120, 80).estimate(&mut ctx, &q);
+        let want = brute.partition(&q);
+        assert!((z - want).abs() < 1e-9 * want, "{z} vs {want}");
+    }
+
+    #[test]
+    fn unbiased_tail_correction() {
+        // Average over many reruns approaches Z (the estimator is unbiased
+        // given exact retrieval).
+        let (s, brute) = setup();
+        let q = s.row(1500).to_vec();
+        let want = brute.partition(&q);
+        let est = Mimps::new(100, 50);
+        let mut rng = Rng::seeded(5);
+        let mut acc = 0f64;
+        let reps = 300;
+        for _ in 0..reps {
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            acc += est.estimate(&mut ctx, &q);
+        }
+        let mean = acc / reps as f64;
+        assert!(
+            abs_rel_err_pct(mean, want) < 3.0,
+            "MIMPS mean {mean} should be ≈ Z {want}"
+        );
+    }
+
+    #[test]
+    fn beats_uniform_on_peaked_queries() {
+        let (s, brute) = setup();
+        let est_m = Mimps::new(100, 100);
+        let est_u = super::super::uniform::Uniform::new(200);
+        let mut rng = Rng::seeded(7);
+        let mut err_m = 0f64;
+        let mut err_u = 0f64;
+        // Rare tokens → peaked distributions (the paper's main regime).
+        for qi in (1600..1900).step_by(30) {
+            let q = s.row(qi).to_vec();
+            let want = brute.partition(&q);
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            err_m += abs_rel_err_pct(est_m.estimate(&mut ctx, &q), want);
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            err_u += abs_rel_err_pct(est_u.estimate(&mut ctx, &q), want);
+        }
+        assert!(
+            err_m < err_u / 3.0,
+            "MIMPS ({err_m}) must beat Uniform ({err_u}) at equal budget"
+        );
+    }
+
+    #[test]
+    fn l_zero_degrades_to_nmimps() {
+        let (s, brute) = setup();
+        let q = s.row(42).to_vec();
+        let mut rng = Rng::seeded(9);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let a = Mimps::new(64, 0).estimate(&mut ctx, &q);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let b = super::super::nmimps::Nmimps::new(64).estimate(&mut ctx, &q);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scorings_reflect_budget() {
+        assert_eq!(Mimps::new(100, 50).scorings(10_000), 150);
+        assert_eq!(Mimps::new(100, 50).scorings(120), 120);
+    }
+}

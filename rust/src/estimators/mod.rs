@@ -1,0 +1,105 @@
+//! The paper's partition-function estimators (Section 4) plus baselines.
+//!
+//! All estimators implement [`Estimator`]: given the category matrix, a
+//! MIPS index, and a query, produce Ẑ(q). The estimators differ in what
+//! they retrieve and how they extrapolate the tail:
+//!
+//! | estimator | head | tail | paper |
+//! |---|---|---|---|
+//! | [`exact::Exact`] | all N | — | eq. (1), ground truth |
+//! | [`uniform::Uniform`] | — | `N/l · Σ exp(u·q)` over `U_l` | §2 importance sampling, k=0 |
+//! | [`nmimps::Nmimps`] | `Σ exp(s·q)` over `S_k` | — | eq. (4) |
+//! | [`mimps::Mimps`] | `Σ exp(s·q)` over `S_k` | `(N−k)/l · Σ exp(u·q)` | eq. (5) |
+//! | [`mince::Mince`] | `S_k` as "data" samples | `U_l` as noise | eq. (6)/(7), Newton/Halley |
+//! | [`fmbe::Fmbe`] | — (no retrieval) | random feature maps | eq. (8)–(10) |
+
+pub mod exact;
+pub mod fmbe;
+pub mod mimps;
+pub mod mince;
+pub mod nmimps;
+pub mod powerlaw;
+pub mod probability;
+pub mod tail;
+pub mod uniform;
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::mips::MipsIndex;
+use crate::util::rng::Rng;
+
+/// Everything an estimator may consult for one query.
+pub struct EstimateContext<'a> {
+    pub store: &'a EmbeddingStore,
+    pub index: &'a dyn MipsIndex,
+    pub rng: &'a mut Rng,
+}
+
+/// A partition-function estimator.
+pub trait Estimator: Send + Sync {
+    /// Human-readable name with hyper-parameters, e.g. `MIMPS(k=100,l=10)`.
+    fn name(&self) -> String;
+
+    /// Estimate Ẑ(q).
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64;
+
+    /// Number of category-vector scorings one estimate performs (index
+    /// probes + tail samples) — the sublinearity measure that Table 4's
+    /// Speedup compares against N.
+    fn scorings(&self, n: usize) -> usize;
+}
+
+/// Registry of estimator kinds for CLI/service routing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EstimatorKind {
+    Exact,
+    Uniform,
+    Nmimps,
+    Mimps,
+    Mince,
+    Fmbe,
+}
+
+impl EstimatorKind {
+    pub fn parse(s: &str) -> Option<EstimatorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(EstimatorKind::Exact),
+            "uniform" => Some(EstimatorKind::Uniform),
+            "nmimps" => Some(EstimatorKind::Nmimps),
+            "mimps" => Some(EstimatorKind::Mimps),
+            "mince" => Some(EstimatorKind::Mince),
+            "fmbe" => Some(EstimatorKind::Fmbe),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> &'static [EstimatorKind] {
+        &[
+            EstimatorKind::Exact,
+            EstimatorKind::Uniform,
+            EstimatorKind::Nmimps,
+            EstimatorKind::Mimps,
+            EstimatorKind::Mince,
+            EstimatorKind::Fmbe,
+        ]
+    }
+}
+
+impl std::fmt::Display for EstimatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in EstimatorKind::all() {
+            let s = k.to_string();
+            assert_eq!(EstimatorKind::parse(&s), Some(*k), "{s}");
+        }
+        assert_eq!(EstimatorKind::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,102 @@
+//! Naive MIMPS (paper eq. 4): head-only sum over the retrieved `S_k(q)`.
+//!
+//! The paper's Figure 1 shows why this estimator "requires k to be very
+//! high and is not realistic": common-word queries induce flat
+//! distributions where the top-1000 categories carry only a small
+//! fraction of Z. It is kept as a baseline and as the head term shared
+//! with full MIMPS.
+
+use super::{tail, EstimateContext, Estimator};
+
+/// Head-only estimator with head size `k`.
+#[derive(Clone, Copy, Debug)]
+pub struct Nmimps {
+    pub k: usize,
+}
+
+impl Nmimps {
+    pub fn new(k: usize) -> Self {
+        Nmimps { k }
+    }
+}
+
+impl Estimator for Nmimps {
+    fn name(&self) -> String {
+        format!("NMIMPS(k={})", self.k)
+    }
+
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
+        let head = ctx.index.top_k(q, self.k);
+        tail::head_sum(&head)
+    }
+
+    fn scorings(&self, n: usize) -> usize {
+        self.k.min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn k_equals_n_is_exact() {
+        let s = generate(&SynthConfig {
+            n: 300,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let q = s.row(5).to_vec();
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = Nmimps::new(300).estimate(&mut ctx, &q);
+        let want = brute.partition(&q);
+        assert!((z - want).abs() < 1e-6 * want);
+    }
+
+    #[test]
+    fn always_underestimates() {
+        let s = generate(&SynthConfig::tiny());
+        let brute = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(1);
+        for qi in [0usize, 500, 1999] {
+            let q = s.row(qi).to_vec();
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            let z = Nmimps::new(50).estimate(&mut ctx, &q);
+            let want = brute.partition(&q);
+            assert!(z < want, "head-only sum must underestimate Z");
+            assert!(z > 0.0);
+        }
+    }
+
+    #[test]
+    fn monotone_in_k() {
+        let s = generate(&SynthConfig::tiny());
+        let brute = BruteIndex::new(&s);
+        let q = s.row(100).to_vec();
+        let mut rng = Rng::seeded(2);
+        let mut prev = 0.0;
+        for k in [1usize, 10, 100, 1000] {
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            let z = Nmimps::new(k).estimate(&mut ctx, &q);
+            assert!(z >= prev, "head sum must grow with k");
+            prev = z;
+        }
+    }
+}

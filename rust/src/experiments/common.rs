@@ -1,0 +1,294 @@
+//! Shared experiment machinery.
+//!
+//! The oracle experiments need, per query: the true partition `Z` and the
+//! exact head `S_K(q)` for the largest K any estimator setting will ask
+//! for. Both come out of **one** parallel scan per query (`build_workload`),
+//! after which every (estimator, k, l) cell replays the cached head
+//! through a [`FixedIndex`] — turning an O(settings × N·d) experiment
+//! into O(N·d + settings × (k+l)·d) per query, the same trick the paper's
+//! "oracle ability to recover S_k" describes.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::{EstimateContext, Estimator, EstimatorKind};
+use crate::linalg;
+use crate::metrics::abs_rel_err_pct;
+use crate::mips::{select_top_k, Hit, MipsIndex};
+use crate::oracle::RetrievalError;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+/// Cached per-query oracle scan results.
+#[derive(Clone, Debug)]
+pub struct QueryEval {
+    pub z_true: f64,
+    /// Exact top-(max_head) hits, descending.
+    pub head: Vec<Hit>,
+}
+
+/// One scan: exact Z and top-`max_head` of `q` against the store.
+pub fn scan_query(store: &EmbeddingStore, q: &[f32], max_head: usize) -> QueryEval {
+    let n = store.len();
+    let d = store.dim();
+    let mut scores = vec![0f32; n];
+    linalg::gemv_blocked(store.data(), n, d, q, &mut scores);
+    let z_true = linalg::sum_exp(&scores);
+    let head = select_top_k(&scores, max_head.min(n));
+    QueryEval { z_true, head }
+}
+
+/// Parallel scan of a query set.
+pub fn build_workload(
+    store: &EmbeddingStore,
+    queries: &[Vec<f32>],
+    max_head: usize,
+    threads: usize,
+) -> Vec<QueryEval> {
+    threadpool::par_map(queries.len(), threads, |i| {
+        scan_query(store, &queries[i], max_head)
+    })
+}
+
+/// A MIPS "index" that replays a cached head (optionally with injected
+/// retrieval errors), so the real estimator implementations run
+/// unmodified against oracle retrievals.
+pub struct FixedIndex<'a> {
+    head: &'a [Hit],
+    n: usize,
+    err: RetrievalError,
+}
+
+impl<'a> FixedIndex<'a> {
+    pub fn new(head: &'a [Hit], n: usize) -> Self {
+        FixedIndex {
+            head,
+            n,
+            err: RetrievalError::none(),
+        }
+    }
+
+    pub fn with_error(head: &'a [Hit], n: usize, err: RetrievalError) -> Self {
+        FixedIndex { head, n, err }
+    }
+}
+
+impl MipsIndex for FixedIndex<'_> {
+    fn top_k(&self, _q: &[f32], k: usize) -> Vec<Hit> {
+        let kept: Vec<Hit> = self
+            .head
+            .iter()
+            .enumerate()
+            .filter(|(pos, _)| !self.err.drop_ranks.contains(&(pos + 1)))
+            .map(|(_, h)| *h)
+            .take(k)
+            .collect();
+        assert!(
+            kept.len() >= k.min(self.n.saturating_sub(self.err.drop_ranks.len()))
+                || self.head.len() >= self.n,
+            "FixedIndex cached head too small: have {}, need {k} (+{} drops)",
+            self.head.len(),
+            self.err.drop_ranks.len()
+        );
+        kept
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn probe_cost(&self, k: usize) -> usize {
+        k
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle-cache"
+    }
+}
+
+/// Estimator settings used across the oracle tables.
+#[derive(Clone, Copy, Debug)]
+pub struct Setting {
+    pub kind: EstimatorKind,
+    pub k: usize,
+    pub l: usize,
+}
+
+impl Setting {
+    pub fn label(&self) -> String {
+        match self.kind {
+            EstimatorKind::Uniform => format!("Uniform (l={})", self.l),
+            EstimatorKind::Mimps => format!("MIMPS (k={}, l={})", self.k, self.l),
+            EstimatorKind::Mince => format!("MINCE (k={}, l={})", self.k, self.l),
+            EstimatorKind::Nmimps => format!("NMIMPS (k={})", self.k),
+            EstimatorKind::Exact => "Exact".to_string(),
+            EstimatorKind::Fmbe => format!("FMBE (D={})", self.k),
+        }
+    }
+
+    /// Build the estimator and run it against a cached head.
+    pub fn estimate(
+        &self,
+        store: &EmbeddingStore,
+        eval: &QueryEval,
+        q: &[f32],
+        err: &RetrievalError,
+        rng: &mut Rng,
+    ) -> f64 {
+        let index = FixedIndex::with_error(&eval.head, store.len(), err.clone());
+        let mut ctx = EstimateContext { store, index: &index, rng };
+        match self.kind {
+            EstimatorKind::Uniform => {
+                crate::estimators::uniform::Uniform::new(self.l).estimate(&mut ctx, q)
+            }
+            EstimatorKind::Nmimps => {
+                crate::estimators::nmimps::Nmimps::new(self.k).estimate(&mut ctx, q)
+            }
+            EstimatorKind::Mimps => {
+                crate::estimators::mimps::Mimps::new(self.k, self.l).estimate(&mut ctx, q)
+            }
+            EstimatorKind::Mince => {
+                crate::estimators::mince::Mince::new(self.k, self.l).estimate(&mut ctx, q)
+            }
+            other => panic!("setting {other:?} not supported by oracle replay"),
+        }
+    }
+}
+
+/// Mean % abs relative error of one setting over a workload, per seed.
+/// Returns the per-seed means (feed to `metrics::Cell::from_seed_means`).
+#[allow(clippy::too_many_arguments)]
+pub fn per_seed_errors(
+    store: &EmbeddingStore,
+    queries: &[Vec<f32>],
+    evals: &[QueryEval],
+    setting: &Setting,
+    err: &RetrievalError,
+    seeds: usize,
+    base_seed: u64,
+    threads: usize,
+) -> Vec<f64> {
+    (0..seeds)
+        .map(|s| {
+            let errs = threadpool::par_map(queries.len(), threads, |qi| {
+                let mut rng =
+                    Rng::seeded(base_seed ^ (s as u64) << 32 ^ (qi as u64).wrapping_mul(0x9E37));
+                let z = setting.estimate(store, &evals[qi], &queries[qi], err, &mut rng);
+                abs_rel_err_pct(z, evals[qi].z_true)
+            });
+            crate::metrics::mean(&errs)
+        })
+        .collect()
+}
+
+/// Standard workload construction shared by Tables 1–3: stratified query
+/// indices over the vocabulary, queries = data vectors + optional noise.
+pub fn standard_queries(
+    store: &EmbeddingStore,
+    count: usize,
+    rel_noise: f32,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let mut rng = Rng::seeded(seed ^ 0x9157);
+    let idx = crate::data::synth::stratified_query_indices(store.len(), count, &mut rng);
+    crate::data::synth::noisy_queries(store, &idx, rel_noise, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    fn store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 600,
+            d: 16,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn scan_matches_brute() {
+        let s = store();
+        let brute = BruteIndex::new(&s);
+        let q = s.row(100).to_vec();
+        let eval = scan_query(&s, &q, 20);
+        assert!((eval.z_true - brute.partition(&q)).abs() < 1e-6 * eval.z_true);
+        assert_eq!(
+            eval.head.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            brute
+                .top_k(&q, 20)
+                .iter()
+                .map(|h| h.idx)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fixed_index_replays_prefix_and_drops() {
+        let s = store();
+        let q = s.row(3).to_vec();
+        let eval = scan_query(&s, &q, 12);
+        let idx = FixedIndex::new(&eval.head, s.len());
+        assert_eq!(idx.top_k(&q, 5), eval.head[..5].to_vec());
+        let idx = FixedIndex::with_error(&eval.head, s.len(), RetrievalError::drop_first());
+        let dropped = idx.top_k(&q, 5);
+        assert_eq!(dropped[0], eval.head[1]);
+        assert_eq!(dropped.len(), 5);
+    }
+
+    #[test]
+    fn cached_mimps_equals_direct_mimps() {
+        // Same seed → identical estimate through cache replay vs brute index.
+        let s = store();
+        let brute = BruteIndex::new(&s);
+        let q = s.row(50).to_vec();
+        let eval = scan_query(&s, &q, 40);
+        let setting = Setting {
+            kind: EstimatorKind::Mimps,
+            k: 40,
+            l: 30,
+        };
+        let via_cache = {
+            let mut rng = Rng::seeded(9);
+            setting.estimate(&s, &eval, &q, &RetrievalError::none(), &mut rng)
+        };
+        let direct = {
+            let mut rng = Rng::seeded(9);
+            let mut ctx = EstimateContext {
+                store: &s,
+                index: &brute,
+                rng: &mut rng,
+            };
+            crate::estimators::mimps::Mimps::new(40, 30).estimate(&mut ctx, &q)
+        };
+        assert!(
+            (via_cache - direct).abs() < 1e-9 * direct.max(1.0),
+            "{via_cache} vs {direct}"
+        );
+    }
+
+    #[test]
+    fn per_seed_errors_reasonable_for_mimps() {
+        let s = store();
+        let queries = standard_queries(&s, 20, 0.0, 0);
+        let evals = build_workload(&s, &queries, 102, 4);
+        let errs = per_seed_errors(
+            &s,
+            &queries,
+            &evals,
+            &Setting {
+                kind: EstimatorKind::Mimps,
+                k: 100,
+                l: 100,
+            },
+            &RetrievalError::none(),
+            2,
+            0,
+            4,
+        );
+        assert_eq!(errs.len(), 2);
+        for e in errs {
+            assert!(e < 60.0, "MIMPS(100,100) error {e}% too high on tiny set");
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Figure 1: CDF over vocabulary items sorted by their contribution to
+//! Z, for probe context words across the frequency range. The paper's
+//! observation — common words induce flat distributions (≈80k of 100k
+//! neighbors needed for 80% of Z) while rare words are peaked (<1k) — is
+//! the motivation for MIPS-based head/tail estimation.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::data::synth::{corpus_frequency, SynthConfig};
+use crate::linalg;
+use crate::util::json::Json;
+use crate::util::threadpool;
+
+/// One probe word's CDF summary.
+#[derive(Clone, Debug)]
+pub struct ProbeCurve {
+    /// Zipf rank of the probe token (0 = most frequent).
+    pub rank: usize,
+    /// Pseudo corpus frequency (for the legend, like the paper's counts).
+    pub corpus_freq: u64,
+    /// Neighbors needed to reach 50% / 80% / 90% of Z.
+    pub n50: usize,
+    pub n80: usize,
+    pub n90: usize,
+    /// Downsampled CDF series (fraction_of_vocab, fraction_of_Z).
+    pub series: Vec<(f64, f64)>,
+}
+
+/// Compute the sorted-contribution CDF for one probe token.
+pub fn probe_cdf(store: &EmbeddingStore, rank: usize, series_points: usize) -> ProbeCurve {
+    let q = store.row(rank).to_vec();
+    let n = store.len();
+    let mut scores = vec![0f32; n];
+    linalg::gemv_blocked(store.data(), n, store.dim(), &q, &mut scores);
+    let mut exp: Vec<f64> = scores.iter().map(|&u| (u as f64).exp()).collect();
+    exp.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let z: f64 = exp.iter().sum();
+    let (mut n50, mut n80, mut n90) = (n, n, n);
+    let mut acc = 0f64;
+    let mut series = Vec::with_capacity(series_points + 1);
+    let stride = (n / series_points.max(1)).max(1);
+    for (i, e) in exp.iter().enumerate() {
+        acc += e;
+        let frac = acc / z;
+        if frac >= 0.5 && n50 == n {
+            n50 = i + 1;
+        }
+        if frac >= 0.8 && n80 == n {
+            n80 = i + 1;
+        }
+        if frac >= 0.9 && n90 == n {
+            n90 = i + 1;
+        }
+        if i % stride == 0 || i + 1 == n {
+            series.push(((i + 1) as f64 / n as f64, frac));
+        }
+    }
+    ProbeCurve {
+        rank,
+        corpus_freq: 0,
+        n50,
+        n80,
+        n90,
+        series,
+    }
+}
+
+/// Run the figure: probe tokens at log-spaced ranks.
+pub fn run(store: &EmbeddingStore, synth_cfg: &SynthConfig, threads: usize) -> Vec<ProbeCurve> {
+    let n = store.len();
+    // Log-spaced probe ranks mirroring the paper's word selection:
+    // "The"-like head tokens through Chipotle-like tail tokens.
+    let mut ranks = vec![0usize, 9, 99];
+    let mut r = 999usize;
+    while r < n - 1 {
+        ranks.push(r);
+        r = (r + 1) * 10 - 1;
+    }
+    ranks.push(n - 1);
+    ranks.dedup();
+    let mut curves = threadpool::par_map(ranks.len(), threads, |i| {
+        probe_cdf(store, ranks[i], 200)
+    });
+    for c in &mut curves {
+        c.corpus_freq = corpus_frequency(synth_cfg, c.rank, 1e11); // 100B-token corpus
+    }
+    curves
+}
+
+/// JSON dump for plotting.
+pub fn to_json(curves: &[ProbeCurve]) -> Json {
+    Json::Arr(
+        curves
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("rank", Json::num(c.rank as f64)),
+                    ("corpus_freq", Json::num(c.corpus_freq as f64)),
+                    ("n50", Json::num(c.n50 as f64)),
+                    ("n80", Json::num(c.n80 as f64)),
+                    ("n90", Json::num(c.n90 as f64)),
+                    (
+                        "series",
+                        Json::Arr(
+                            c.series
+                                .iter()
+                                .map(|(x, y)| Json::Arr(vec![Json::num(*x), Json::num(*y)]))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::generate;
+
+    #[test]
+    fn paper_shape_common_flat_rare_peaked() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let common = probe_cdf(&s, 0, 50);
+        let rare = probe_cdf(&s, cfg.n - 1, 50);
+        assert!(
+            common.n80 > rare.n80 * 5,
+            "common n80 {} should dwarf rare n80 {}",
+            common.n80,
+            rare.n80
+        );
+        // CDF sanity: monotone, ends at 1.
+        for w in common.series.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert!((common.series.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn thresholds_ordered() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let c = probe_cdf(&s, 500, 50);
+        assert!(c.n50 <= c.n80 && c.n80 <= c.n90);
+    }
+
+    #[test]
+    fn run_produces_probe_set_and_json() {
+        let cfg = SynthConfig::tiny();
+        let s = generate(&cfg);
+        let curves = run(&s, &cfg, 4);
+        assert!(curves.len() >= 4);
+        assert!(curves[0].corpus_freq > curves.last().unwrap().corpus_freq);
+        let j = to_json(&curves);
+        assert!(j.as_arr().unwrap().len() == curves.len());
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers: one module per table/figure in the paper's
+//! evaluation section (see DESIGN.md per-experiment index). Each driver
+//! is callable both from the `zest` CLI and from the corresponding
+//! `cargo bench` target, prints the same rows the paper reports, and
+//! writes a JSON result file under the configured out dir.
+
+pub mod ablations;
+pub mod common;
+pub mod figure1;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;

@@ -1,0 +1,187 @@
+//! Table 2: estimator robustness to query noise. Gaussian noise with
+//! relative norm ∈ {0%, 10%, 20%, 30%} is added to the query vectors;
+//! the paper finds MIMPS essentially flat (0.8 → 0.9) while Uniform and
+//! FMBE drift slightly and MINCE stays uniformly bad.
+//!
+//! Settings per the paper's caption: MIMPS k = l = 1000; MINCE k = 1,
+//! l = 1000; Uniform l = 1000; FMBE D = 50k (scaled via config).
+
+use super::common::{build_workload, per_seed_errors, standard_queries, Setting};
+use crate::bench::harness::Table;
+use crate::config::Config;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::{fmbe, EstimateContext, Estimator, EstimatorKind};
+use crate::metrics::{abs_rel_err_pct, Cell};
+use crate::oracle::RetrievalError;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+pub const NOISE_LEVELS: [f32; 4] = [0.0, 0.10, 0.20, 0.30];
+
+#[derive(Clone, Debug)]
+pub struct Table2 {
+    /// row label → one (μ, σ) per noise level.
+    pub rows: Vec<(String, Vec<Cell>)>,
+}
+
+/// FMBE feature count used for the FMBE row (paper: 50k).
+pub fn run(store: &EmbeddingStore, cfg: &Config, fmbe_d: usize) -> Table2 {
+    let k = cfg.k.min(store.len() / 2);
+    let l = cfg.l.min(store.len() - k);
+    let settings = [
+        (
+            "Uniform".to_string(),
+            Setting {
+                kind: EstimatorKind::Uniform,
+                k: 0,
+                l,
+            },
+        ),
+        (
+            "MIMPS".to_string(),
+            Setting {
+                kind: EstimatorKind::Mimps,
+                k,
+                l,
+            },
+        ),
+        (
+            "MINCE".to_string(),
+            Setting {
+                kind: EstimatorKind::Mince,
+                k: 1,
+                l,
+            },
+        ),
+    ];
+    let mut rows: Vec<(String, Vec<Cell>)> = settings
+        .iter()
+        .map(|(label, _)| (label.clone(), Vec::new()))
+        .collect();
+    rows.push(("FMBE".to_string(), Vec::new()));
+
+    // One FMBE fit shared across noise levels (the data doesn't change).
+    let fmbe_est = fmbe::Fmbe::fit(
+        store,
+        fmbe::FmbeConfig {
+            p_features: fmbe_d,
+            seed: cfg.seed,
+            threads: cfg.threads,
+            ..Default::default()
+        },
+    );
+    let no_head: Vec<crate::mips::Hit> = Vec::new();
+
+    for &noise in &NOISE_LEVELS {
+        let queries = standard_queries(store, cfg.queries, noise, cfg.seed);
+        let evals = build_workload(store, &queries, k.max(1), cfg.threads);
+        for (i, (_, setting)) in settings.iter().enumerate() {
+            let per_seed = per_seed_errors(
+                store,
+                &queries,
+                &evals,
+                setting,
+                &RetrievalError::none(),
+                cfg.seeds,
+                cfg.seed,
+                cfg.threads,
+            );
+            rows[i].1.push(Cell::from_seed_means(&per_seed));
+        }
+        // FMBE row.
+        let errs = threadpool::par_map(queries.len(), cfg.threads, |qi| {
+            let mut rng = Rng::seeded(2 + qi as u64);
+            let dummy = super::common::FixedIndex::new(&no_head, store.len());
+            let mut ctx = EstimateContext {
+                store,
+                index: &dummy,
+                rng: &mut rng,
+            };
+            abs_rel_err_pct(fmbe_est.estimate(&mut ctx, &queries[qi]), evals[qi].z_true)
+        });
+        let mu = crate::metrics::mean(&errs);
+        let fmbe_row = rows.last_mut().unwrap();
+        fmbe_row.1.push(Cell { mu, sigma: crate::metrics::std_err(&errs) });
+        log::info!("table2: noise {:.0}% done", noise * 100.0);
+    }
+    Table2 { rows }
+}
+
+pub fn render(t: &Table2) -> String {
+    let mut tab = Table::new(&[
+        "", "noise=0% mu", "s", "noise=10% mu", "s", "noise=20% mu", "s", "noise=30% mu", "s",
+    ]);
+    for (label, cells) in &t.rows {
+        let mut row = vec![label.clone()];
+        for c in cells {
+            row.push(format!("{:.1}", c.mu));
+            row.push(format!("{:.1}", c.sigma));
+        }
+        tab.row(row);
+    }
+    tab.render()
+}
+
+pub fn to_json(t: &Table2) -> Json {
+    Json::Arr(
+        t.rows
+            .iter()
+            .map(|(label, cells)| {
+                Json::obj(vec![
+                    ("label", Json::str(label)),
+                    (
+                        "cells",
+                        Json::Arr(
+                            cells
+                                .iter()
+                                .map(|c| {
+                                    Json::obj(vec![
+                                        ("mu", Json::num(c.mu)),
+                                        ("sigma", Json::num(c.sigma)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn mimps_flat_under_noise() {
+        let store = generate(&SynthConfig::tiny());
+        let cfg = Config {
+            n: store.len(),
+            d: store.dim(),
+            queries: 30,
+            seeds: 2,
+            k: 500,
+            l: 500,
+            threads: 4,
+            ..Config::smoke()
+        };
+        let t = run(&store, &cfg, 300);
+        let mimps = &t.rows.iter().find(|(l, _)| l == "MIMPS").unwrap().1;
+        let uniform = &t.rows.iter().find(|(l, _)| l == "Uniform").unwrap().1;
+        assert_eq!(mimps.len(), 4);
+        // MIMPS stays accurate and roughly flat across noise levels.
+        for c in mimps {
+            assert!(c.mu < 25.0, "MIMPS mu {} too high under noise", c.mu);
+        }
+        let spread = mimps.iter().map(|c| c.mu).fold(0.0f64, f64::max)
+            - mimps.iter().map(|c| c.mu).fold(f64::INFINITY, f64::min);
+        assert!(spread < 15.0, "MIMPS should be noise-robust, spread {spread}");
+        // Uniform is far worse at every level.
+        for (u, m) in uniform.iter().zip(mimps) {
+            assert!(u.mu > 3.0 * m.mu, "Uniform {} vs MIMPS {}", u.mu, m.mu);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Table 3: sensitivity to retrieval errors. The oracle drops the true
+//! rank-1 / rank-2 / both vectors from every retrieved set; the paper
+//! finds MIMPS degrades sharply when rank-1 is missing (0.8 → 39.3)
+//! but mildly for rank-2 (6.1), while MINCE barely notices — evidence
+//! that indexing schemes must prioritize top-1 recall.
+//!
+//! Settings per the paper's caption: MIMPS k = l = 1000; MINCE k = 1,
+//! l = 1000.
+
+use super::common::{build_workload, per_seed_errors, standard_queries, Setting};
+use crate::bench::harness::Table;
+use crate::config::Config;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::EstimatorKind;
+use crate::metrics::Cell;
+use crate::oracle::RetrievalError;
+use crate::util::json::Json;
+
+pub fn error_modes() -> Vec<RetrievalError> {
+    vec![
+        RetrievalError::none(),
+        RetrievalError::drop_first(),
+        RetrievalError::drop_second(),
+        RetrievalError::drop_first_two(),
+    ]
+}
+
+#[derive(Clone, Debug)]
+pub struct Table3 {
+    /// row label → one (μ, σ) per error mode.
+    pub rows: Vec<(String, Vec<Cell>)>,
+    pub mode_labels: Vec<String>,
+}
+
+pub fn run(store: &EmbeddingStore, cfg: &Config) -> Table3 {
+    let k = cfg.k.min(store.len() / 2);
+    let l = cfg.l.min(store.len() - k);
+    let settings = [
+        (
+            "MIMPS".to_string(),
+            Setting {
+                kind: EstimatorKind::Mimps,
+                k,
+                l,
+            },
+        ),
+        (
+            "MINCE".to_string(),
+            Setting {
+                kind: EstimatorKind::Mince,
+                k: 1,
+                l,
+            },
+        ),
+    ];
+    let queries = standard_queries(store, cfg.queries, 0.0, cfg.seed);
+    // Cache two extra head ranks so drops can backfill.
+    let evals = build_workload(store, &queries, (k + 2).min(store.len()), cfg.threads);
+    let modes = error_modes();
+    let mut rows = Vec::new();
+    for (label, setting) in &settings {
+        let mut cells = Vec::new();
+        for err in &modes {
+            let per_seed = per_seed_errors(
+                store,
+                &queries,
+                &evals,
+                setting,
+                err,
+                cfg.seeds,
+                cfg.seed,
+                cfg.threads,
+            );
+            cells.push(Cell::from_seed_means(&per_seed));
+        }
+        log::info!("table3: {label} done");
+        rows.push((label.clone(), cells));
+    }
+    Table3 {
+        rows,
+        mode_labels: modes.iter().map(|m| m.label()).collect(),
+    }
+}
+
+pub fn render(t: &Table3) -> String {
+    let mut headers = vec!["".to_string()];
+    for m in &t.mode_labels {
+        headers.push(format!("ret err={m} mu"));
+        headers.push("s".to_string());
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut tab = Table::new(&hdr_refs);
+    for (label, cells) in &t.rows {
+        let mut row = vec![label.clone()];
+        for c in cells {
+            row.push(format!("{:.1}", c.mu));
+            row.push(format!("{:.1}", c.sigma));
+        }
+        tab.row(row);
+    }
+    tab.render()
+}
+
+pub fn to_json(t: &Table3) -> Json {
+    Json::obj(vec![
+        (
+            "modes",
+            Json::Arr(t.mode_labels.iter().map(|m| Json::str(m)).collect()),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                t.rows
+                    .iter()
+                    .map(|(label, cells)| {
+                        Json::obj(vec![
+                            ("label", Json::str(label)),
+                            (
+                                "cells",
+                                Json::Arr(
+                                    cells
+                                        .iter()
+                                        .map(|c| {
+                                            Json::obj(vec![
+                                                ("mu", Json::num(c.mu)),
+                                                ("sigma", Json::num(c.sigma)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    #[test]
+    fn rank1_hurts_mimps_more_than_rank2() {
+        let store = generate(&SynthConfig::tiny());
+        let cfg = Config {
+            n: store.len(),
+            d: store.dim(),
+            queries: 40,
+            seeds: 2,
+            k: 500,
+            l: 500,
+            threads: 4,
+            ..Config::smoke()
+        };
+        let t = run(&store, &cfg);
+        let mimps = &t.rows[0].1;
+        let (none, drop1, drop2, drop12) = (mimps[0].mu, mimps[1].mu, mimps[2].mu, mimps[3].mu);
+        assert!(
+            drop1 > 3.0 * none.max(0.1),
+            "dropping rank-1 must hurt: {none} -> {drop1}"
+        );
+        assert!(
+            drop1 > drop2,
+            "rank-1 loss ({drop1}) must exceed rank-2 loss ({drop2})"
+        );
+        assert!(
+            drop12 >= drop1 * 0.9,
+            "dropping both ({drop12}) at least as bad as rank-1 ({drop1})"
+        );
+        // MINCE is insensitive to head drops (k=1, it barely uses the head)
+        let mince = &t.rows[1].1;
+        let spread = (mince[1].mu - mince[0].mu).abs() / mince[0].mu.max(1.0);
+        assert!(
+            spread < 1.0,
+            "MINCE should be comparatively insensitive, spread {spread}"
+        );
+    }
+}

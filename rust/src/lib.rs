@@ -1,0 +1,67 @@
+//! # zest — Sublinear Partition Estimation
+//!
+//! A production-shaped reproduction of *"Sublinear Partition Estimation"*
+//! (Rastogi & Van Durme, 2015). The library estimates the softmax
+//! partition function
+//!
+//! ```text
+//! Z(q) = Σ_{i=1..N} exp(v_i · q)
+//! ```
+//!
+//! in **sublinear** time using three families of estimators built on top
+//! of Maximum Inner Product Search (MIPS):
+//!
+//! * [`estimators::Mimps`] — MIPS-based importance sampling (paper eq. 5):
+//!   exact head over the top-`k` set `S_k(q)` plus a uniform-tail
+//!   correction from `l` samples.
+//! * [`estimators::Mince`] — MIPS-based noise-contrastive estimation
+//!   (paper eq. 6/7): solve for `Z` as the single parameter of the
+//!   head/noise discrimination objective with Newton or Halley steps.
+//! * [`estimators::Fmbe`] — Kar–Karnick random feature maps for the `exp`
+//!   dot-product kernel (paper eq. 8–10) with precomputed `λ̃` sums.
+//!
+//! Substrates — the MIPS indexes ([`mips`]), synthetic datasets matching
+//! the paper's word2vec / Penn-Treebank workloads ([`data`]), an oracle
+//! with controlled retrieval-error injection ([`oracle`]), a log-bilinear
+//! language model trained with NCE ([`lm`]), a PJRT runtime that executes
+//! AOT-compiled JAX/Pallas scoring graphs ([`runtime`]), and a batching
+//! service coordinator ([`coordinator`]) — are all implemented here; the
+//! crate has no heavyweight dependencies.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use zest::data::synth::{SynthConfig, generate};
+//! use zest::mips::brute::BruteIndex;
+//! use zest::estimators::{EstimateContext, Estimator, mimps::Mimps};
+//! use zest::util::rng::Rng;
+//!
+//! let store = generate(&SynthConfig { n: 10_000, d: 64, ..Default::default() });
+//! let index = BruteIndex::new(&store);
+//! let est = Mimps::new(1000, 1000);
+//! let mut rng = Rng::seeded(0);
+//! let q = store.row(42).to_vec();
+//! let mut ctx = EstimateContext { store: &store, index: &index, rng: &mut rng };
+//! let zhat = est.estimate(&mut ctx, &q);
+//! println!("Ẑ = {zhat}");
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod estimators;
+pub mod experiments;
+pub mod linalg;
+pub mod lm;
+pub mod metrics;
+pub mod mips;
+pub mod oracle;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+pub use config::Config;
+pub use data::embeddings::EmbeddingStore;
+pub use estimators::Estimator;
+pub use mips::MipsIndex;

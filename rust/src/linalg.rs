@@ -1,0 +1,247 @@
+//! Dense f32 kernels for the Rust-side hot paths: dot products, GEMV over
+//! a row-major matrix, norms, axpy. These back the MIPS indexes and the
+//! native (non-PJRT) scoring path; the unrolled dot is the single hottest
+//! function in the whole system (profiled in EXPERIMENTS.md §Perf).
+
+/// Dot product with 8-way manual unrolling; the compiler auto-vectorizes
+/// each lane group. f32 accumulate in 8 partials, final sum in f64 to
+/// reduce cancellation over long vectors.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0f32; 8];
+    // Safety-free indexing: slice patterns over exact chunks.
+    for i in 0..chunks {
+        let o = i * 8;
+        let (x, y) = (&a[o..o + 8], &b[o..o + 8]);
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+        acc[4] += x[4] * y[4];
+        acc[5] += x[5] * y[5];
+        acc[6] += x[6] * y[6];
+        acc[7] += x[7] * y[7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    let head: f32 = acc.iter().sum();
+    head + tail
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    norm_sq(a).sqrt()
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// out = M · q for row-major `m` of shape (rows × d). Writes `rows` scores.
+pub fn gemv(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(&m[r * d..(r + 1) * d], q);
+    }
+}
+
+/// Blocked GEMV that processes 4 rows at a time to reuse the streamed `q`
+/// from L1 cache and expose more ILP than row-at-a-time `gemv`.
+pub fn gemv_blocked(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * d);
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), rows);
+    let quads = rows / 4;
+    for b in 0..quads {
+        let r = b * 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+        let row0 = &m[r * d..(r + 1) * d];
+        let row1 = &m[(r + 1) * d..(r + 2) * d];
+        let row2 = &m[(r + 2) * d..(r + 3) * d];
+        let row3 = &m[(r + 3) * d..(r + 4) * d];
+        for j in 0..d {
+            let qj = q[j];
+            s0 += row0[j] * qj;
+            s1 += row1[j] * qj;
+            s2 += row2[j] * qj;
+            s3 += row3[j] * qj;
+        }
+        out[r] = s0;
+        out[r + 1] = s1;
+        out[r + 2] = s2;
+        out[r + 3] = s3;
+    }
+    for r in quads * 4..rows {
+        out[r] = dot(&m[r * d..(r + 1) * d], q);
+    }
+}
+
+/// exp(scores) in place, with optional max-subtraction for stability.
+/// Returns the subtracted max (0.0 when `stabilize` is false) so callers
+/// can undo the shift: true_sum = exp(max) * Σ exp(u - max).
+pub fn exp_inplace(scores: &mut [f32], stabilize: bool) -> f32 {
+    let mx = if stabilize {
+        scores.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    } else {
+        0.0
+    };
+    let mx = if mx.is_finite() { mx } else { 0.0 };
+    for s in scores.iter_mut() {
+        *s = (*s - mx).exp();
+    }
+    mx
+}
+
+/// Kahan-compensated sum of f32 slice in f64.
+pub fn sum_f64(xs: &[f32]) -> f64 {
+    let mut sum = 0f64;
+    let mut c = 0f64;
+    for &x in xs {
+        let y = x as f64 - c;
+        let t = sum + y;
+        c = (t - sum) - y;
+        sum = t;
+    }
+    sum
+}
+
+/// Σ exp(u_i) computed in f64 without materializing the exp'd array.
+pub fn sum_exp(scores: &[f32]) -> f64 {
+    let mut acc = 0f64;
+    for &s in scores {
+        acc += (s as f64).exp();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| *x as f64 * *y as f64)
+            .sum::<f64>()
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::seeded(1);
+        for d in [0, 1, 3, 7, 8, 9, 16, 33, 300, 301] {
+            let a = rng.normal_vec(d);
+            let b = rng.normal_vec(d);
+            let got = dot(&a, &b) as f64;
+            let want = naive_dot(&a, &b);
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "d={d}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemv_variants_agree() {
+        let mut rng = Rng::seeded(2);
+        let (rows, d) = (37, 65);
+        let m = rng.normal_vec(rows * d);
+        let q = rng.normal_vec(d);
+        let mut o1 = vec![0f32; rows];
+        let mut o2 = vec![0f32; rows];
+        gemv(&m, rows, d, &q, &mut o1);
+        gemv_blocked(&m, rows, d, &q, &mut o2);
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn exp_inplace_stabilized_matches_direct() {
+        let mut rng = Rng::seeded(3);
+        let mut s: Vec<f32> = (0..100).map(|_| rng.normal() as f32 * 3.0).collect();
+        let direct: f64 = s.iter().map(|&x| (x as f64).exp()).sum();
+        let mx = exp_inplace(&mut s, true);
+        let total = (mx as f64).exp() * sum_f64(&s);
+        assert!((total - direct).abs() < 1e-6 * direct, "{total} vs {direct}");
+    }
+
+    #[test]
+    fn exp_inplace_all_neg_inf_guard() {
+        let mut s = vec![f32::NEG_INFINITY; 4];
+        let mx = exp_inplace(&mut s, true);
+        assert_eq!(mx, 0.0);
+        assert!(s.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn sum_exp_matches_exp_sum() {
+        let mut rng = Rng::seeded(4);
+        let s: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        let a = sum_exp(&s);
+        let b: f64 = s.iter().map(|&x| (x as f64).exp()).sum();
+        assert!((a - b).abs() < 1e-9 * b);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![1.0f32; 3];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![3.0, 5.0, 7.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn dist_sq_basic() {
+        assert_eq!(dist_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn kahan_sum_precision() {
+        // 1 + 1e-8 repeated: naive f32 accumulation loses the small terms.
+        let xs = vec![1e-8f32; 1_000_000];
+        let s = sum_f64(&xs);
+        assert!((s - 1e-2).abs() < 1e-6, "{s}");
+    }
+}

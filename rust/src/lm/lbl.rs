@@ -1,0 +1,176 @@
+//! Log-bilinear LM parameters (Mnih & Hinton 2008 scoring, Mnih & Teh
+//! 2012 diagonal context matrices):
+//!
+//! ```text
+//! q̂(w_1..w_ctx) = Σ_j c_j ⊙ r_{w_j}          (context projection)
+//! s(w | ctx)    = q̂ · qt_w + b_w              (target score)
+//! Z(ctx)        = Σ_w exp(s(w | ctx))          (the paper's quantity)
+//! ```
+//!
+//! For MIPS-based partition estimation the (qt, b) table is exposed as an
+//! `EmbeddingStore` over `R^{d+1}` with the bias as an extra coordinate
+//! and queries lifted to `[q̂, 1]` — inner products then equal scores
+//! exactly, so every estimator and index in the crate applies unchanged.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::util::rng::Rng;
+
+/// Model dimensions.
+#[derive(Clone, Debug)]
+pub struct LblConfig {
+    pub vocab: usize,
+    /// Embedding dim (paper: 300; artifacts default to 100 for CPU speed —
+    /// see DESIGN.md §Substitutions).
+    pub d: usize,
+    /// Context window (paper: 9; artifacts default 5).
+    pub ctx: usize,
+    pub seed: u64,
+}
+
+impl Default for LblConfig {
+    fn default() -> Self {
+        LblConfig {
+            vocab: 10_000,
+            d: 100,
+            ctx: 5,
+            seed: 0,
+        }
+    }
+}
+
+/// Dense parameters, row-major.
+#[derive(Clone, Debug)]
+pub struct LblParams {
+    pub cfg: LblConfig,
+    /// Context word embeddings (vocab × d).
+    pub r: Vec<f32>,
+    /// Target word embeddings (vocab × d).
+    pub qt: Vec<f32>,
+    /// Target biases (vocab).
+    pub b: Vec<f32>,
+    /// Per-position diagonal context weights (ctx × d).
+    pub c: Vec<f32>,
+}
+
+impl LblParams {
+    /// Small random init (0.1σ gaussians, zero biases, c ≈ 1/ctx so the
+    /// initial projection is an average).
+    pub fn init(cfg: LblConfig) -> LblParams {
+        let mut rng = Rng::seeded(cfg.seed ^ 0x1b1);
+        let scale = 0.1f32;
+        let r: Vec<f32> = (0..cfg.vocab * cfg.d)
+            .map(|_| rng.normal() as f32 * scale)
+            .collect();
+        let qt: Vec<f32> = (0..cfg.vocab * cfg.d)
+            .map(|_| rng.normal() as f32 * scale)
+            .collect();
+        let b = vec![0f32; cfg.vocab];
+        let c: Vec<f32> = (0..cfg.ctx * cfg.d)
+            .map(|_| 1.0 / cfg.ctx as f32 + rng.normal() as f32 * 0.01)
+            .collect();
+        LblParams { cfg, r, qt, b, c }
+    }
+
+    /// Context projection q̂ for one context (native path, used at eval).
+    pub fn qhat(&self, ctx_ids: &[u32]) -> Vec<f32> {
+        assert_eq!(ctx_ids.len(), self.cfg.ctx);
+        let d = self.cfg.d;
+        let mut out = vec![0f32; d];
+        for (j, &w) in ctx_ids.iter().enumerate() {
+            let emb = &self.r[w as usize * d..(w as usize + 1) * d];
+            let cj = &self.c[j * d..(j + 1) * d];
+            for t in 0..d {
+                out[t] += cj[t] * emb[t];
+            }
+        }
+        out
+    }
+
+    /// Score of one target word given a projected context.
+    pub fn score(&self, qhat: &[f32], w: usize) -> f32 {
+        let d = self.cfg.d;
+        crate::linalg::dot(&self.qt[w * d..(w + 1) * d], qhat) + self.b[w]
+    }
+
+    /// The (qt | b) table as an EmbeddingStore over R^{d+1} (bias fold).
+    pub fn target_store(&self) -> EmbeddingStore {
+        let d = self.cfg.d;
+        let mut data = Vec::with_capacity(self.cfg.vocab * (d + 1));
+        for w in 0..self.cfg.vocab {
+            data.extend_from_slice(&self.qt[w * d..(w + 1) * d]);
+            data.push(self.b[w]);
+        }
+        EmbeddingStore::from_data(self.cfg.vocab, d + 1, data).expect("consistent")
+    }
+
+    /// Lift a projected context into the bias-fold query space: [q̂, 1].
+    pub fn lift_query(qhat: &[f32]) -> Vec<f32> {
+        let mut q = Vec::with_capacity(qhat.len() + 1);
+        q.extend_from_slice(qhat);
+        q.push(1.0);
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    fn tiny() -> LblParams {
+        LblParams::init(LblConfig {
+            vocab: 50,
+            d: 8,
+            ctx: 3,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn qhat_is_weighted_sum() {
+        let p = tiny();
+        let ctx = [1u32, 2, 3];
+        let qh = p.qhat(&ctx);
+        // Manual computation.
+        let d = p.cfg.d;
+        for t in 0..d {
+            let want: f32 = (0..3)
+                .map(|j| p.c[j * d + t] * p.r[ctx[j] as usize * d + t])
+                .sum();
+            assert!((qh[t] - want).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bias_fold_preserves_scores() {
+        let p = tiny();
+        let qh = p.qhat(&[4, 5, 6]);
+        let store = p.target_store();
+        let lifted = LblParams::lift_query(&qh);
+        for w in [0usize, 10, 49] {
+            let direct = p.score(&qh, w);
+            let via_store = linalg::dot(store.row(w), &lifted);
+            assert!(
+                (direct - via_store).abs() < 1e-5,
+                "w={w}: {direct} vs {via_store}"
+            );
+        }
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.c, b.c);
+    }
+
+    #[test]
+    fn target_store_shape() {
+        let p = tiny();
+        let s = p.target_store();
+        assert_eq!(s.len(), 50);
+        assert_eq!(s.dim(), 9);
+        assert_eq!(s.row(7)[8], p.b[7]);
+    }
+}

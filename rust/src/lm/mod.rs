@@ -1,0 +1,12 @@
+//! Log-bilinear language model (paper §5.2): parameters, NCE training
+//! driven through the AOT `lbl_nce_step` artifact, and the Table 4
+//! evaluation that compares MIMPS partition estimates against the
+//! self-normalization (Z ≡ 1) heuristic the model was trained with.
+
+pub mod lbl;
+pub mod nce;
+pub mod train;
+
+pub use lbl::{LblConfig, LblParams};
+pub use nce::{NceConfig, NoiseModel};
+pub use train::{train, TrainReport};

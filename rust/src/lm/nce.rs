@@ -1,0 +1,185 @@
+//! NCE machinery on the Rust side: the unigram noise model (with log-
+//! probability lookups the training graph needs) and batch assembly from
+//! corpus windows. The gradient math itself lives in the AOT
+//! `lbl_nce_step` artifact (python/compile/model.py); Rust feeds it.
+
+use crate::data::corpus::Corpus;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+/// NCE training hyper-parameters (shapes must match the exported artifact).
+#[derive(Clone, Debug)]
+pub struct NceConfig {
+    pub batch: usize,
+    /// Noise samples per data point (the artifact's K).
+    pub noise_k: usize,
+    pub lr: f32,
+}
+
+impl Default for NceConfig {
+    fn default() -> Self {
+        NceConfig {
+            batch: 256,
+            noise_k: 25,
+            lr: 0.1,
+        }
+    }
+}
+
+/// Unigram noise distribution with add-one smoothing: alias-free CDF
+/// sampling plus per-token ln P_n lookups.
+pub struct NoiseModel {
+    ln_pn: Vec<f32>,
+    cdf: Vec<f64>,
+}
+
+impl NoiseModel {
+    pub fn from_corpus(corpus: &Corpus) -> NoiseModel {
+        let counts = corpus.unigram_counts();
+        Self::from_counts(&counts)
+    }
+
+    pub fn from_counts(counts: &[u64]) -> NoiseModel {
+        let total: f64 = counts.iter().map(|&c| c as f64 + 1.0).sum();
+        let mut cdf = Vec::with_capacity(counts.len());
+        let mut acc = 0f64;
+        let mut ln_pn = Vec::with_capacity(counts.len());
+        for &c in counts {
+            let p = (c as f64 + 1.0) / total;
+            acc += p;
+            cdf.push(acc);
+            ln_pn.push(p.ln() as f32);
+        }
+        NoiseModel { ln_pn, cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    pub fn ln_pn(&self, w: usize) -> f32 {
+        self.ln_pn[w]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ln_pn.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ln_pn.is_empty()
+    }
+}
+
+/// One assembled training batch, shaped for the artifact.
+pub struct NceBatch {
+    pub ctx: HostTensor,         // (B, ctx) i32
+    pub tgt: HostTensor,         // (B,) i32
+    pub noise: HostTensor,       // (B, K) i32
+    pub ln_pn_tgt: HostTensor,   // (B,) f32
+    pub ln_pn_noise: HostTensor, // (B, K) f32
+}
+
+/// Assemble a batch by sampling window positions uniformly from `stream`.
+pub fn make_batch(
+    stream: &[u32],
+    ctx_len: usize,
+    cfg: &NceConfig,
+    noise: &NoiseModel,
+    rng: &mut Rng,
+) -> NceBatch {
+    let b = cfg.batch;
+    let k = cfg.noise_k;
+    let mut ctx = Vec::with_capacity(b * ctx_len);
+    let mut tgt = Vec::with_capacity(b);
+    let mut nz = Vec::with_capacity(b * k);
+    let mut ln_t = Vec::with_capacity(b);
+    let mut ln_n = Vec::with_capacity(b * k);
+    for _ in 0..b {
+        // Position t predicts stream[t+1] from the ctx_len tokens ending at t.
+        let t = rng.range(0, stream.len() - 1);
+        for j in 0..ctx_len {
+            let pos = t as i64 - (ctx_len - 1 - j) as i64;
+            let w = if pos < 0 { 0 } else { stream[pos as usize] };
+            ctx.push(w as i32);
+        }
+        let target = stream[t + 1] as usize;
+        tgt.push(target as i32);
+        ln_t.push(noise.ln_pn(target));
+        for _ in 0..k {
+            let nw = noise.sample(rng);
+            nz.push(nw as i32);
+            ln_n.push(noise.ln_pn(nw));
+        }
+    }
+    NceBatch {
+        ctx: HostTensor::i32(ctx, &[b, ctx_len]),
+        tgt: HostTensor::i32(tgt, &[b]),
+        noise: HostTensor::i32(nz, &[b, k]),
+        ln_pn_tgt: HostTensor::f32(ln_t, &[b]),
+        ln_pn_noise: HostTensor::f32(ln_n, &[b, k]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusConfig};
+
+    #[test]
+    fn noise_model_matches_empirical_frequencies() {
+        let c = generate(&CorpusConfig::tiny());
+        let nm = NoiseModel::from_corpus(&c);
+        let mut rng = Rng::seeded(1);
+        let mut head = 0usize;
+        let n = 20_000;
+        for _ in 0..n {
+            if nm.sample(&mut rng) == 0 {
+                head += 1;
+            }
+        }
+        let counts = c.unigram_counts();
+        let want = (counts[0] as f64 + 1.0)
+            / counts.iter().map(|&x| x as f64 + 1.0).sum::<f64>();
+        let got = head as f64 / n as f64;
+        assert!(
+            (got - want).abs() < 0.02,
+            "sampled head mass {got} vs true {want}"
+        );
+    }
+
+    #[test]
+    fn ln_pn_sums_to_one_in_prob_space() {
+        let nm = NoiseModel::from_counts(&[5, 3, 2, 0]);
+        let total: f64 = (0..4).map(|w| (nm.ln_pn(w) as f64).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let c = generate(&CorpusConfig::tiny());
+        let nm = NoiseModel::from_corpus(&c);
+        let cfg = NceConfig {
+            batch: 32,
+            noise_k: 7,
+            lr: 0.1,
+        };
+        let mut rng = Rng::seeded(2);
+        let b = make_batch(&c.train, 3, &cfg, &nm, &mut rng);
+        assert_eq!(b.ctx.shape(), &[32, 3]);
+        assert_eq!(b.noise.shape(), &[32, 7]);
+        assert_eq!(b.ln_pn_noise.shape(), &[32, 7]);
+        for &w in b.ctx.as_i32().unwrap() {
+            assert!((w as usize) < c.vocab);
+        }
+        // ln_pn fields must be the exact lookups for the sampled ids.
+        let tgt = b.tgt.as_i32().unwrap();
+        let ln_t = b.ln_pn_tgt.as_f32().unwrap();
+        for (w, lp) in tgt.iter().zip(ln_t) {
+            assert_eq!(*lp, nm.ln_pn(*w as usize));
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Training driver: owns the parameter buffers in Rust, streams NCE/SGD
+//! steps through the AOT `lbl_nce_step` artifact on the PJRT runtime
+//! thread, and logs the loss curve. This is the end-to-end path that
+//! Table 4 (and `examples/lm_partition.rs`) runs.
+
+use super::lbl::{LblConfig, LblParams};
+use super::nce::{make_batch, NceConfig, NoiseModel};
+use crate::data::corpus::Corpus;
+use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps: usize,
+    /// (step, loss) samples along the run.
+    pub loss_curve: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub wall: std::time::Duration,
+}
+
+/// Train an LBL model with NCE (partition clamped to 1) for `steps`
+/// SGD steps. The artifact's shapes (vocab, d, ctx, batch, K) must match
+/// `cfg`/`nce` — validated up front against meta.json.
+pub fn train(
+    corpus: &Corpus,
+    cfg: LblConfig,
+    nce: NceConfig,
+    steps: usize,
+    rt: &RuntimeHandle,
+    artifacts_dir: &std::path::Path,
+) -> Result<(LblParams, TrainReport)> {
+    // Shape validation against the exporter's meta.
+    let meta = crate::runtime::ArtifactsMeta::load(artifacts_dir)?;
+    let (_, args) = meta
+        .graphs
+        .get("lbl_nce_step")
+        .context("lbl_nce_step not exported — rerun `make artifacts`")?;
+    ensure!(
+        args[0].shape == vec![cfg.vocab, cfg.d],
+        "artifact vocab×d {:?} != config {:?} — re-export with matching --vocab/--lbl-d",
+        args[0].shape,
+        (cfg.vocab, cfg.d)
+    );
+    ensure!(
+        args[4].shape == vec![nce.batch, cfg.ctx],
+        "artifact batch×ctx {:?} != config {:?}",
+        args[4].shape,
+        (nce.batch, cfg.ctx)
+    );
+    ensure!(
+        args[6].shape == vec![nce.batch, nce.noise_k],
+        "artifact noise shape {:?} != config {:?}",
+        args[6].shape,
+        (nce.batch, nce.noise_k)
+    );
+
+    let mut params = LblParams::init(cfg.clone());
+    let noise = NoiseModel::from_corpus(corpus);
+    let mut rng = Rng::seeded(cfg.seed ^ 0x7247);
+    let mut loss_curve = Vec::new();
+    let mut final_loss = f64::NAN;
+    let t0 = std::time::Instant::now();
+    let log_every = (steps / 20).max(1);
+
+    for step in 0..steps {
+        let batch = make_batch(&corpus.train, cfg.ctx, &nce, &noise, &mut rng);
+        let out = rt.run(
+            "lbl_nce_step",
+            vec![
+                HostTensor::f32(std::mem::take(&mut params.r), &[cfg.vocab, cfg.d]),
+                HostTensor::f32(std::mem::take(&mut params.qt), &[cfg.vocab, cfg.d]),
+                HostTensor::f32(std::mem::take(&mut params.b), &[cfg.vocab]),
+                HostTensor::f32(std::mem::take(&mut params.c), &[cfg.ctx, cfg.d]),
+                batch.ctx,
+                batch.tgt,
+                batch.noise,
+                batch.ln_pn_tgt,
+                batch.ln_pn_noise,
+                HostTensor::scalar_f32(nce.lr),
+            ],
+        )?;
+        ensure!(out.len() == 5, "lbl_nce_step returned {} outputs", out.len());
+        let mut it = out.into_iter();
+        params.r = match it.next().unwrap() {
+            HostTensor::F32(d, _) => d,
+            _ => anyhow::bail!("r not f32"),
+        };
+        params.qt = match it.next().unwrap() {
+            HostTensor::F32(d, _) => d,
+            _ => anyhow::bail!("qt not f32"),
+        };
+        params.b = match it.next().unwrap() {
+            HostTensor::F32(d, _) => d,
+            _ => anyhow::bail!("b not f32"),
+        };
+        params.c = match it.next().unwrap() {
+            HostTensor::F32(d, _) => d,
+            _ => anyhow::bail!("c not f32"),
+        };
+        let loss = it.next().unwrap().first_f64().context("loss")?;
+        ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+        final_loss = loss;
+        if step % log_every == 0 || step + 1 == steps {
+            loss_curve.push((step, loss));
+            log::info!("lbl step {step}/{steps} loss {loss:.4}");
+        }
+    }
+    Ok((
+        params,
+        TrainReport {
+            steps,
+            loss_curve,
+            final_loss,
+            wall: t0.elapsed(),
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusConfig};
+    use crate::runtime::spawn_runtime_thread;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    /// End-to-end: a short training run through the real artifact must
+    /// produce finite decreasing loss.
+    #[test]
+    fn short_training_run_reduces_loss() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let meta = crate::runtime::ArtifactsMeta::load(&dir).unwrap();
+        let cfg = LblConfig {
+            vocab: meta.config_usize("vocab").unwrap(),
+            d: meta.config_usize("lbl_d").unwrap(),
+            ctx: meta.config_usize("ctx").unwrap(),
+            seed: 3,
+        };
+        let nce = NceConfig {
+            batch: meta.config_usize("lbl_batch").unwrap(),
+            noise_k: meta.config_usize("noise_k").unwrap(),
+            lr: 0.3,
+        };
+        let corpus = generate(&CorpusConfig {
+            vocab: cfg.vocab,
+            train_tokens: 50_000,
+            test_tokens: 1_000,
+            ..Default::default()
+        });
+        let (rt, join) =
+            spawn_runtime_thread(dir.clone(), Some(vec!["lbl_nce_step".to_string()])).unwrap();
+        let (params, report) = train(&corpus, cfg, nce, 30, &rt, &dir).unwrap();
+        assert_eq!(report.steps, 30);
+        assert!(report.final_loss.is_finite());
+        let first = report.loss_curve.first().unwrap().1;
+        assert!(
+            report.final_loss < first,
+            "loss should fall: {first} -> {}",
+            report.final_loss
+        );
+        // Parameters actually moved.
+        let init = LblParams::init(params.cfg.clone());
+        let moved = params
+            .qt
+            .iter()
+            .zip(&init.qt)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>();
+        assert!(moved > 0.0);
+        rt.shutdown();
+        join.join().unwrap();
+    }
+}

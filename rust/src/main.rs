@@ -1,0 +1,408 @@
+//! `zest` CLI — the leader entrypoint: dataset generation, index
+//! exploration, single estimates, the serving demo, LBL training, and
+//! one subcommand per paper table/figure.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use zest::config::Config;
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+use zest::util::cli::Args;
+use zest::util::json::Json;
+
+fn main() {
+    zest::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "zest — sublinear partition estimation (Rastogi & Van Durme 2015)\n\n\
+         USAGE: zest <command> [flags]\n\nCOMMANDS:\n",
+    );
+    for (name, about) in [
+        ("gen-data", "generate + cache the synthetic embedding set"),
+        ("estimate", "estimate Z(q) for one query with every estimator"),
+        ("classify", "argmax class + estimated probability (paper eq. 2-3)"),
+        ("recall", "recall@k report for the MIPS indexes"),
+        ("serve", "run the batching service demo and print metrics"),
+        ("train-lm", "train the LBL language model via the PJRT artifact"),
+        ("figure1", "reproduce Figure 1 (CDF of sorted contributions)"),
+        ("table1", "reproduce Table 1 (error vs k, l grid)"),
+        ("table2", "reproduce Table 2 (query-noise sweep)"),
+        ("table3", "reproduce Table 3 (retrieval-error injection)"),
+        ("table4", "reproduce Table 4 (LBL end-to-end)"),
+        ("ablations", "solver / index / probe-budget ablations"),
+    ] {
+        s.push_str(&format!("  {name:<10} {about}\n"));
+    }
+    s.push_str("\nCommon flags: --n --d --seed --seeds --queries --k --l --threads --out-dir --config <json>\n");
+    s
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(argv[1..].to_vec()).map_err(|e| anyhow::anyhow!(e))?;
+    if args.get_bool("help") {
+        print!("{}", usage());
+        return Ok(());
+    }
+    let cfg = base_config(&args)?;
+    match cmd.as_str() {
+        "gen-data" => cmd_gen_data(&cfg, &args),
+        "estimate" => cmd_estimate(&cfg, &args),
+        "classify" => cmd_classify(&cfg, &args),
+        "recall" => cmd_recall(&cfg, &args),
+        "serve" => cmd_serve(&cfg, &args),
+        "train-lm" => cmd_train_lm(&cfg, &args),
+        "figure1" => cmd_figure1(&cfg, &args),
+        "table1" => cmd_table1(&cfg, &args),
+        "table2" => cmd_table2(&cfg, &args),
+        "table3" => cmd_table3(&cfg, &args),
+        "table4" => cmd_table4(&cfg, &args),
+        "ablations" => cmd_ablations(&cfg, &args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", usage()),
+    }
+}
+
+fn base_config(args: &Args) -> Result<Config> {
+    let cfg = match args.get("config") {
+        Some(path) => Config::from_json_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    cfg.apply_args(args).map_err(Into::into)
+}
+
+/// Generate (or load the cached copy of) the synthetic embedding set.
+fn load_store(cfg: &Config) -> Result<EmbeddingStore> {
+    let dir = PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&dir).ok();
+    let cache = dir.join(format!("emb_n{}_d{}_s{}.bin", cfg.n, cfg.d, cfg.seed));
+    if cache.exists() {
+        log::info!("loading cached embeddings from {cache:?}");
+        return EmbeddingStore::load(&cache);
+    }
+    log::info!("generating synthetic embeddings N={} d={}", cfg.n, cfg.d);
+    let store = generate(&synth_cfg(cfg));
+    store.save(&cache).context("cache embeddings")?;
+    Ok(store)
+}
+
+fn synth_cfg(cfg: &Config) -> SynthConfig {
+    SynthConfig {
+        n: cfg.n,
+        d: cfg.d,
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+fn write_result(cfg: &Config, name: &str, json: &Json) -> Result<()> {
+    let dir = PathBuf::from(&cfg.out_dir);
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string())?;
+    println!("(result written to {})", path.display());
+    Ok(())
+}
+
+fn cmd_gen_data(cfg: &Config, _args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let norms = store.norms();
+    println!(
+        "N={} d={} norm[min,max]=[{:.2},{:.2}]",
+        store.len(),
+        store.dim(),
+        norms.iter().copied().fold(f32::INFINITY, f32::min),
+        norms.iter().copied().fold(0f32, f32::max),
+    );
+    Ok(())
+}
+
+fn cmd_estimate(cfg: &Config, args: &Args) -> Result<()> {
+    use zest::estimators::{EstimateContext, Estimator};
+    let store = load_store(cfg)?;
+    let qi: usize = args.get_or("query-index", store.len() - 1);
+    let q = store.row(qi).to_vec();
+    let brute = zest::mips::brute::BruteIndex::new(&store);
+    let z_true = brute.partition(&q);
+    println!("query index {qi}: true Z = {z_true:.4}\n");
+    let mut rng = zest::util::rng::Rng::seeded(cfg.seed);
+    let mut table = zest::bench::harness::Table::new(&["estimator", "Z-hat", "err %", "scorings"]);
+    let ests: Vec<Box<dyn Estimator>> = vec![
+        Box::new(zest::estimators::uniform::Uniform::new(cfg.l)),
+        Box::new(zest::estimators::nmimps::Nmimps::new(cfg.k)),
+        Box::new(zest::estimators::mimps::Mimps::new(cfg.k, cfg.l)),
+        Box::new(zest::estimators::mince::Mince::new(cfg.k, cfg.l)),
+    ];
+    for est in ests {
+        let mut ctx = EstimateContext {
+            store: &store,
+            index: &brute,
+            rng: &mut rng,
+        };
+        let z = est.estimate(&mut ctx, &q);
+        table.row(vec![
+            est.name(),
+            format!("{z:.4}"),
+            format!("{:.2}", zest::metrics::abs_rel_err_pct(z, z_true)),
+            est.scorings(store.len()).to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_classify(cfg: &Config, args: &Args) -> Result<()> {
+    use zest::estimators::{probability, EstimateContext};
+    let store = load_store(cfg)?;
+    let qi: usize = args.get_or("query-index", store.len() - 1);
+    let q = store.row(qi).to_vec();
+    let tree = zest::mips::kmeans_tree::KMeansTreeIndex::build(&store, Default::default());
+    let mut rng = zest::util::rng::Rng::seeded(cfg.seed);
+    let mut ctx = EstimateContext {
+        store: &store,
+        index: &tree,
+        rng: &mut rng,
+    };
+    let r = probability::classify_with_probability(&mut ctx, &q, cfg.k, cfg.l)
+        .context("empty store")?;
+    println!(
+        "query {qi}: class={} score={:.4} p̂={:.6} (Ẑ={:.4}, {} head items)",
+        r.class, r.score, r.p, r.z_hat, r.head_len
+    );
+    let dist = probability::head_distribution(&mut ctx, &q, cfg.k, cfg.l, 10);
+    println!("top-10 head distribution:");
+    for (c, p) in dist {
+        println!("  class {c:>8}  p̂ {p:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_recall(cfg: &Config, args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let queries: usize = args.get_or("recall-queries", 50);
+    let rows = zest::experiments::ablations::index_ablation(&store, queries, cfg.seed);
+    let mut t = zest::bench::harness::Table::new(&[
+        "index", "recall@10", "top1", "mean probes", "build ms",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.3}", r.recall_at_10),
+            format!("{:.3}", r.top1_recall),
+            format!("{:.0}", r.mean_probes),
+            format!("{}", r.build_wall.as_millis()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use zest::coordinator::*;
+    use zest::estimators::EstimatorKind;
+    let store = Arc::new(load_store(cfg)?);
+    let requests: usize = args.get_or("requests", 500);
+    let index: Arc<dyn zest::mips::MipsIndex> = Arc::new(
+        zest::mips::kmeans_tree::KMeansTreeIndex::build(&store, Default::default()),
+    );
+    let svc = PartitionService::start(
+        store.clone(),
+        index,
+        Router::new(zest::estimators::fmbe::FmbeConfig {
+            p_features: cfg.fmbe_p.min(2000),
+            ..Default::default()
+        }),
+        ServiceConfig::default(),
+        None,
+    );
+    let t0 = std::time::Instant::now();
+    let mut rng = zest::util::rng::Rng::seeded(cfg.seed);
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| {
+            let qi = rng.below(store.len());
+            svc.submit(Request {
+                query: store.row(qi).to_vec(),
+                kind: EstimatorKind::Mimps,
+                k: cfg.k,
+                l: cfg.l,
+            })
+            .expect("submit")
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{requests} requests in {wall:?} ({:.0} req/s)",
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!("{}", svc.metrics());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_train_lm(cfg: &Config, args: &Args) -> Result<()> {
+    let dir = PathBuf::from(&cfg.artifacts_dir);
+    let meta = zest::runtime::ArtifactsMeta::load(&dir)?;
+    let lbl = zest::lm::LblConfig {
+        vocab: meta.config_usize("vocab").context("meta vocab")?,
+        d: meta.config_usize("lbl_d").context("meta lbl_d")?,
+        ctx: meta.config_usize("ctx").context("meta ctx")?,
+        seed: cfg.seed,
+    };
+    let nce = zest::lm::NceConfig {
+        batch: meta.config_usize("lbl_batch").context("meta lbl_batch")?,
+        noise_k: meta.config_usize("noise_k").context("meta noise_k")?,
+        lr: args.get_or("lr", 0.3f32),
+    };
+    let steps: usize = args.get_or("steps", 600);
+    let corpus = zest::data::corpus::generate(&zest::data::corpus::CorpusConfig {
+        vocab: lbl.vocab,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    let (rt, join) = zest::runtime::spawn_runtime_thread(
+        dir.clone(),
+        Some(vec!["lbl_nce_step".to_string()]),
+    )?;
+    let (_params, report) = zest::lm::train(&corpus, lbl, nce, steps, &rt, &dir)?;
+    println!(
+        "trained {} steps in {:?}; loss {:.4} -> {:.4}",
+        report.steps,
+        report.wall,
+        report.loss_curve.first().map(|x| x.1).unwrap_or(f64::NAN),
+        report.final_loss
+    );
+    for (s, l) in &report.loss_curve {
+        println!("  step {s:>6}  loss {l:.4}");
+    }
+    rt.shutdown();
+    join.join().ok();
+    Ok(())
+}
+
+fn cmd_figure1(cfg: &Config, _args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let curves = zest::experiments::figure1::run(&store, &synth_cfg(cfg), cfg.threads);
+    let mut t = zest::bench::harness::Table::new(&[
+        "rank", "corpus freq", "n@50%", "n@80%", "n@90%", "n80 / N",
+    ]);
+    for c in &curves {
+        t.row(vec![
+            c.rank.to_string(),
+            c.corpus_freq.to_string(),
+            c.n50.to_string(),
+            c.n80.to_string(),
+            c.n90.to_string(),
+            format!("{:.3}", c.n80 as f64 / store.len() as f64),
+        ]);
+    }
+    t.print();
+    write_result(cfg, "figure1", &zest::experiments::figure1::to_json(&curves))
+}
+
+fn cmd_table1(cfg: &Config, args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let fmbe_ds = args.get_list::<usize>("fmbe-ds", &[10_000, 50_000]);
+    let t = zest::experiments::table1::run(&store, cfg, &fmbe_ds);
+    print!("{}", zest::experiments::table1::render(&t));
+    write_result(cfg, "table1", &zest::experiments::table1::to_json(&t))
+}
+
+fn cmd_table2(cfg: &Config, args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let fmbe_d: usize = args.get_or("fmbe-d", 50_000);
+    let t = zest::experiments::table2::run(&store, cfg, fmbe_d);
+    print!("{}", zest::experiments::table2::render(&t));
+    write_result(cfg, "table2", &zest::experiments::table2::to_json(&t))
+}
+
+fn cmd_table3(cfg: &Config, _args: &Args) -> Result<()> {
+    let store = load_store(cfg)?;
+    let t = zest::experiments::table3::run(&store, cfg);
+    print!("{}", zest::experiments::table3::render(&t));
+    write_result(cfg, "table3", &zest::experiments::table3::to_json(&t))
+}
+
+fn cmd_table4(cfg: &Config, args: &Args) -> Result<()> {
+    use zest::experiments::table4::*;
+    let dir = PathBuf::from(&cfg.artifacts_dir);
+    let meta = zest::runtime::ArtifactsMeta::load(&dir)?;
+    let mut t4 = Table4Config {
+        lbl: zest::lm::LblConfig {
+            vocab: meta.config_usize("vocab").context("meta vocab")?,
+            d: meta.config_usize("lbl_d").context("meta lbl_d")?,
+            ctx: meta.config_usize("ctx").context("meta ctx")?,
+            seed: cfg.seed,
+        },
+        nce: zest::lm::NceConfig {
+            batch: meta.config_usize("lbl_batch").context("meta lbl_batch")?,
+            noise_k: meta.config_usize("noise_k").context("meta noise_k")?,
+            lr: args.get_or("lr", 0.3f32),
+        },
+        train_steps: args.get_or("steps", 600),
+        contexts: args.get_or("contexts", 2000),
+        threads: cfg.threads,
+        ..Default::default()
+    };
+    t4.corpus.vocab = t4.lbl.vocab;
+    t4.corpus.seed = cfg.seed;
+    let (rt, join) = zest::runtime::spawn_runtime_thread(
+        dir.clone(),
+        Some(vec!["lbl_nce_step".to_string()]),
+    )?;
+    let t = run_table4(&t4, &rt, &dir)?;
+    print!("{}", render(&t));
+    rt.shutdown();
+    join.join().ok();
+    write_result(cfg, "table4", &to_json(&t))
+}
+
+use zest::experiments::table4::run as run_table4;
+
+fn cmd_ablations(cfg: &Config, args: &Args) -> Result<()> {
+    use zest::experiments::ablations::*;
+    let store = load_store(cfg)?;
+    let solver = solver_ablation(args.get_or("instances", 200), cfg.k, cfg.l, cfg.seed);
+    println!(
+        "solver ablation over {} instances: Newton {} iters / {:?}, Halley {} iters / {:?} (max disagreement {:.2e})",
+        solver.instances,
+        solver.newton_iters,
+        solver.newton_wall,
+        solver.halley_iters,
+        solver.halley_wall,
+        solver.max_disagreement
+    );
+    let index = index_ablation(&store, args.get_or("recall-queries", 30), cfg.seed);
+    for r in &index {
+        println!(
+            "index {:<12} recall@10={:.3} top1={:.3} probes={:.0} build={:?}",
+            r.name, r.recall_at_10, r.top1_recall, r.mean_probes, r.build_wall
+        );
+    }
+    let budgets: Vec<usize> = args.get_list("budgets", &[256, 1024, 4096, 16384]);
+    let pts = probe_budget_ablation(&store, cfg, &budgets);
+    for p in &pts {
+        println!("probes={:<8} MIMPS err={:.2}%", p.probes, p.mean_err_pct);
+    }
+    write_result(cfg, "ablations", &to_json(&solver, &index, &pts))
+}

@@ -1,0 +1,185 @@
+//! Statistical reporting used by every experiment: the paper's headline
+//! metric is the **percentage mean absolute relative error**
+//! `μ = 100·|Ẑ − Z|/Z` averaged over queries, with a standard error σ
+//! computed over seed replicas (each table cell reports μ over 3 seeds).
+
+/// Percentage absolute relative error of a single estimate.
+#[inline]
+pub fn abs_rel_err_pct(z_hat: f64, z_true: f64) -> f64 {
+    debug_assert!(z_true > 0.0);
+    100.0 * ((z_hat - z_true) / z_true).abs()
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Standard error of the mean.
+pub fn std_err(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// A (μ, σ) table cell: mean over per-seed means, stderr across seeds —
+/// matching the paper's "every experimental setting was ran three times
+/// with different seeds" protocol.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cell {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Cell {
+    /// Aggregate per-seed mean errors into a table cell.
+    pub fn from_seed_means(per_seed: &[f64]) -> Cell {
+        Cell {
+            mu: mean(per_seed),
+            sigma: std_err(per_seed),
+        }
+    }
+}
+
+impl std::fmt::Display for Cell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:>9.1} {:>6.1}", self.mu, self.sigma)
+    }
+}
+
+/// Online accumulator for error statistics over a query stream.
+#[derive(Clone, Debug, Default)]
+pub struct ErrStats {
+    pub count: usize,
+    sum: f64,
+    sum_sq: f64,
+}
+
+impl ErrStats {
+    pub fn push(&mut self, err: f64) {
+        self.count += 1;
+        self.sum += err;
+        self.sum_sq += err * err;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &ErrStats) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+    }
+}
+
+/// Paired comparison for Table 4's %Better column: fraction of queries
+/// where |a_i - t_i| < |b_i - t_i| (a strictly closer to truth than b),
+/// as a percentage.
+pub fn pct_better(a: &[f64], b: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), truth.len());
+    if a.is_empty() {
+        return f64::NAN;
+    }
+    let wins = a
+        .iter()
+        .zip(b)
+        .zip(truth)
+        .filter(|((ai, bi), t)| (*ai - **t).abs() < (*bi - **t).abs())
+        .count();
+    100.0 * wins as f64 / a.len() as f64
+}
+
+/// Total absolute error for Table 4's AbsE column: Σ |ẑ_i − z_i|.
+pub fn total_abs_err(est: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(est.len(), truth.len());
+    est.iter()
+        .zip(truth)
+        .map(|(e, t)| (e - t).abs())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abs_rel_err_basic() {
+        assert_eq!(abs_rel_err_pct(110.0, 100.0), 10.0.into());
+        assert_eq!(abs_rel_err_pct(90.0, 100.0), 10.0);
+        assert_eq!(abs_rel_err_pct(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(mean(&[]).is_nan());
+        assert_eq!(std_dev(&[3.0]), 0.0);
+        assert_eq!(std_err(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn err_stats_merge_equals_sequential() {
+        let mut a = ErrStats::default();
+        let mut b = ErrStats::default();
+        let mut c = ErrStats::default();
+        for i in 0..10 {
+            let x = i as f64;
+            c.push(x);
+            if i < 5 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count, c.count);
+        assert!((a.mean() - c.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pct_better_counts_strict_wins() {
+        let truth = [10.0, 10.0, 10.0, 10.0];
+        let a = [10.5, 12.0, 9.0, 10.0]; // errors: .5, 2, 1, 0
+        let b = [11.0, 11.0, 9.5, 10.0]; // errors: 1, 1, .5, 0
+        // a wins on #0, b wins on #1 and #2, tie on #3 → 25%
+        assert_eq!(pct_better(&a, &b, &truth), 25.0);
+    }
+
+    #[test]
+    fn total_abs_err_sums() {
+        assert_eq!(total_abs_err(&[1.0, 3.0], &[2.0, 1.0]), 3.0);
+    }
+
+    #[test]
+    fn cell_from_seed_means() {
+        let c = Cell::from_seed_means(&[1.0, 2.0, 3.0]);
+        assert!((c.mu - 2.0).abs() < 1e-12);
+        assert!((c.sigma - 1.0 / 3.0f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,311 @@
+//! Asymmetric LSH for MIPS (Shrivastava & Li, NIPS 2014) — the other
+//! indexing family the paper builds on ("[21, 22] and [17] presented
+//! methods for MIPS based on Asymmetric LSH").
+//!
+//! L2-ALSH(m, U, r): scale all data vectors by `U / max‖x‖` so norms are
+//! < U < 1, then append `m` asymmetric augmentations
+//!
+//! ```text
+//! P(x) = [Ux;  ‖Ux‖²,  ‖Ux‖⁴, …, ‖Ux‖^{2m}]      (data)
+//! Q(q) = [q/‖q‖;  1/2,  1/2, …, 1/2]             (query)
+//! ```
+//!
+//! after which `‖P(x) − Q(q)‖²` is monotone in `−x·q` (up to the
+//! vanishing `‖Ux‖^{2^{m+1}}` term), so classical E2LSH (p-stable random
+//! projections with bucket width `r`) over the augmented vectors answers
+//! MIPS queries. Candidates are exactly re-scored with true inner
+//! products, as in the other indexes.
+
+use super::{select_top_k, Hit, MipsIndex};
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// L2-ALSH parameters (paper defaults m=3, U=0.83, r=2.5).
+#[derive(Clone, Debug)]
+pub struct AlshConfig {
+    pub m: usize,
+    pub u: f32,
+    pub r: f32,
+    pub tables: usize,
+    /// Concatenated hash functions per table.
+    pub hashes_per_table: usize,
+    pub seed: u64,
+}
+
+impl Default for AlshConfig {
+    fn default() -> Self {
+        AlshConfig {
+            m: 3,
+            u: 0.83,
+            r: 2.5,
+            tables: 16,
+            hashes_per_table: 6,
+            seed: 0,
+        }
+    }
+}
+
+struct Table {
+    /// Projections (hashes_per_table × aug_d) + offsets (hashes_per_table).
+    projs: Vec<f32>,
+    offsets: Vec<f32>,
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// L2-ALSH index.
+pub struct AlshIndex {
+    store: std::sync::Arc<EmbeddingStore>,
+    /// Augmented data vectors, row-major (n × aug_d).
+    augmented: Vec<f32>,
+    aug_d: usize,
+    scale: f32,
+    tables: Vec<Table>,
+    cfg: AlshConfig,
+}
+
+impl AlshIndex {
+    pub fn build(store: &EmbeddingStore, cfg: AlshConfig) -> Self {
+        let n = store.len();
+        let d = store.dim();
+        let aug_d = d + cfg.m;
+        let max_norm = (0..n)
+            .map(|i| linalg::norm(store.row(i)))
+            .fold(0f32, f32::max)
+            .max(f32::MIN_POSITIVE);
+        let scale = cfg.u / max_norm;
+        // Augment data: [Ux; ‖Ux‖², ‖Ux‖⁴, …].
+        let mut augmented = vec![0f32; n * aug_d];
+        for i in 0..n {
+            let row = store.row(i);
+            let out = &mut augmented[i * aug_d..(i + 1) * aug_d];
+            let mut norm_sq = 0f32;
+            for j in 0..d {
+                let v = row[j] * scale;
+                out[j] = v;
+                norm_sq += v * v;
+            }
+            let mut pow = norm_sq;
+            for j in 0..cfg.m {
+                out[d + j] = pow;
+                pow = pow * pow;
+            }
+        }
+        // Hash tables: p-stable (gaussian) projections with offsets.
+        let mut rng = Rng::seeded(cfg.seed ^ 0xA15);
+        let mut tables = Vec::with_capacity(cfg.tables);
+        for _ in 0..cfg.tables {
+            let projs: Vec<f32> = (0..cfg.hashes_per_table * aug_d)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let offsets: Vec<f32> = (0..cfg.hashes_per_table)
+                .map(|_| rng.f32() * cfg.r)
+                .collect();
+            let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+            for i in 0..n {
+                let h = Self::hash_vec(
+                    &projs,
+                    &offsets,
+                    cfg.hashes_per_table,
+                    aug_d,
+                    cfg.r,
+                    &augmented[i * aug_d..(i + 1) * aug_d],
+                );
+                buckets.entry(h).or_default().push(i as u32);
+            }
+            tables.push(Table {
+                projs,
+                offsets,
+                buckets,
+            });
+        }
+        AlshIndex {
+            store: std::sync::Arc::new(store.clone()),
+            augmented,
+            aug_d,
+            scale,
+            tables,
+            cfg,
+        }
+    }
+
+    fn hash_vec(
+        projs: &[f32],
+        offsets: &[f32],
+        hashes: usize,
+        aug_d: usize,
+        r: f32,
+        x: &[f32],
+    ) -> u64 {
+        // Combine the `hashes` E2LSH slots into one u64 bucket key.
+        let mut key = 0xcbf29ce484222325u64; // FNV offset
+        for h in 0..hashes {
+            let p = &projs[h * aug_d..(h + 1) * aug_d];
+            let slot = ((linalg::dot(p, x) + offsets[h]) / r).floor() as i64;
+            key ^= slot as u64;
+            key = key.wrapping_mul(0x100000001b3);
+        }
+        key
+    }
+
+    /// Query transform: [q/‖q‖; 1/2, …, 1/2].
+    fn augment_query(&self, q: &[f32]) -> Vec<f32> {
+        let d = self.store.dim();
+        let norm = linalg::norm(q).max(f32::MIN_POSITIVE);
+        let mut out = Vec::with_capacity(self.aug_d);
+        for &v in q {
+            out.push(v / norm);
+        }
+        out.extend(std::iter::repeat(0.5f32).take(self.cfg.m));
+        debug_assert_eq!(out.len(), d + self.cfg.m);
+        out
+    }
+
+    fn candidates(&self, q: &[f32]) -> Vec<u32> {
+        let aq = self.augment_query(q);
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in &self.tables {
+            let h = Self::hash_vec(
+                &t.projs,
+                &t.offsets,
+                self.cfg.hashes_per_table,
+                self.aug_d,
+                self.cfg.r,
+                &aq,
+            );
+            if let Some(items) = t.buckets.get(&h) {
+                for &i in items {
+                    if seen.insert(i) {
+                        out.push(i);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The data scaling factor U/max‖x‖ (diagnostics).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+impl MipsIndex for AlshIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let cands = self.candidates(q);
+        let scores: Vec<f32> = cands
+            .iter()
+            .map(|&i| linalg::dot(self.store.row(i as usize), q))
+            .collect();
+        select_top_k(&scores, k)
+            .into_iter()
+            .map(|h| Hit {
+                idx: cands[h.idx] as usize,
+                score: h.score,
+            })
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn probe_cost(&self, _k: usize) -> usize {
+        // Expected candidates per table ≈ collision probability mass; use
+        // the empirical mean bucket size × tables as the estimate.
+        let mean_bucket: f64 = self
+            .tables
+            .iter()
+            .map(|t| self.store.len() as f64 / t.buckets.len().max(1) as f64)
+            .sum::<f64>()
+            / self.tables.len().max(1) as f64;
+        ((mean_bucket * self.cfg.tables as f64) as usize).clamp(1, self.store.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "l2-alsh"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    fn store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 2000,
+            d: 24,
+            clusters: 16,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn augmentation_shapes_and_scaling() {
+        let s = store();
+        let idx = AlshIndex::build(&s, AlshConfig::default());
+        // Every scaled data norm must be < U.
+        for i in (0..s.len()).step_by(97) {
+            let row = &idx.augmented[i * idx.aug_d..i * idx.aug_d + s.dim()];
+            assert!(linalg::norm(row) <= idx.cfg.u + 1e-4);
+        }
+        // Augmented tail follows ‖Ux‖^{2^j}.
+        let i = 123;
+        let base = &idx.augmented[i * idx.aug_d..i * idx.aug_d + s.dim()];
+        let nsq = linalg::norm_sq(base);
+        let tail = &idx.augmented[i * idx.aug_d + s.dim()..(i + 1) * idx.aug_d];
+        assert!((tail[0] - nsq).abs() < 1e-5);
+        assert!((tail[1] - nsq * nsq).abs() < 1e-5);
+    }
+
+    #[test]
+    fn buckets_partition_per_table() {
+        let s = store();
+        let idx = AlshIndex::build(&s, AlshConfig::default());
+        for t in &idx.tables {
+            let total: usize = t.buckets.values().map(|v| v.len()).sum();
+            assert_eq!(total, s.len());
+        }
+    }
+
+    #[test]
+    fn reasonable_recall_on_clustered_data() {
+        let s = store();
+        let idx = AlshIndex::build(&s, AlshConfig::default());
+        let brute = BruteIndex::new(&s);
+        let mut recall = 0f64;
+        let queries = 20;
+        for qi in 0..queries {
+            let q = s.row(s.len() - 1 - qi * 9).to_vec();
+            let got: std::collections::HashSet<_> =
+                idx.top_k(&q, 10).iter().map(|h| h.idx).collect();
+            let want: std::collections::HashSet<_> =
+                brute.top_k(&q, 10).iter().map(|h| h.idx).collect();
+            recall += got.intersection(&want).count() as f64 / 10.0;
+        }
+        recall /= queries as f64;
+        assert!(recall > 0.3, "ALSH recall@10 = {recall}");
+    }
+
+    #[test]
+    fn scores_are_exact_inner_products() {
+        let s = store();
+        let idx = AlshIndex::build(&s, AlshConfig::default());
+        let q = s.row(42).to_vec();
+        for h in idx.top_k(&q, 5) {
+            let want = linalg::dot(s.row(h.idx), &q);
+            assert!((h.score - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn probe_cost_sublinear() {
+        let s = store();
+        let idx = AlshIndex::build(&s, AlshConfig::default());
+        assert!(idx.probe_cost(10) < s.len());
+    }
+}

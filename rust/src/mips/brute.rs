@@ -1,0 +1,155 @@
+//! Exact top-k MIPS by blocked linear scan — the ground-truth oracle for
+//! every estimator experiment and the brute-force baseline that Table 4's
+//! Speedup column divides against. Parallelized over row blocks.
+
+use super::{select_top_k, Hit, MipsIndex};
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::util::threadpool;
+
+/// Exact MIPS index (stores a reference-counted copy of the matrix).
+pub struct BruteIndex {
+    data: std::sync::Arc<EmbeddingStore>,
+    threads: usize,
+}
+
+impl BruteIndex {
+    pub fn new(store: &EmbeddingStore) -> Self {
+        BruteIndex {
+            data: std::sync::Arc::new(store.clone()),
+            threads: threadpool::default_threads(),
+        }
+    }
+
+    pub fn with_threads(store: &EmbeddingStore, threads: usize) -> Self {
+        BruteIndex {
+            data: std::sync::Arc::new(store.clone()),
+            threads: threads.max(1),
+        }
+    }
+
+    /// Score all N categories against `q` into `out` (no allocation).
+    pub fn score_all(&self, q: &[f32], out: &mut [f32]) {
+        let n = self.data.len();
+        let d = self.data.dim();
+        assert_eq!(out.len(), n);
+        let data = &self.data;
+        threadpool::par_chunks_mut(out, self.threads, |start, slice| {
+            linalg::gemv_blocked(
+                data.rows(start, start + slice.len()),
+                slice.len(),
+                d,
+                q,
+                slice,
+            );
+        });
+    }
+
+    /// Exact partition function Z(q) = Σ exp(v_i · q), computed in f64 with
+    /// per-thread partial sums. This is the ground truth for every table.
+    pub fn partition(&self, q: &[f32]) -> f64 {
+        let n = self.data.len();
+        let data = &self.data;
+        threadpool::par_fold(
+            n,
+            self.threads,
+            |range| {
+                let mut acc = 0f64;
+                for i in range {
+                    let u = linalg::dot(data.row(i), q) as f64;
+                    acc += u.exp();
+                }
+                acc
+            },
+            0f64,
+            |a, b| a + b,
+        )
+    }
+
+    pub fn store(&self) -> &EmbeddingStore {
+        &self.data
+    }
+}
+
+impl MipsIndex for BruteIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let mut scores = vec![0f32; self.data.len()];
+        self.score_all(q, &mut scores);
+        select_top_k(&scores, k)
+    }
+
+    fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    fn probe_cost(&self, _k: usize) -> usize {
+        self.data.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "brute"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::util::rng::Rng;
+
+    fn tiny_store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 300,
+            d: 16,
+            clusters: 4,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn top_k_matches_naive_sort() {
+        let s = tiny_store();
+        let idx = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(3);
+        let q = rng.normal_vec(16);
+        let hits = idx.top_k(&q, 10);
+        // Naive: full sort.
+        let mut scored: Vec<(usize, f32)> = (0..s.len())
+            .map(|i| (i, linalg::dot(s.row(i), &q)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        for (h, (i, sc)) in hits.iter().zip(scored.iter().take(10)) {
+            assert_eq!(h.idx, *i);
+            assert!((h.score - sc).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn partition_matches_direct_sum() {
+        let s = tiny_store();
+        let idx = BruteIndex::new(&s);
+        let q = s.row(5).to_vec();
+        let z = idx.partition(&q);
+        let direct: f64 = (0..s.len())
+            .map(|i| (linalg::dot(s.row(i), &q) as f64).exp())
+            .sum();
+        assert!((z - direct).abs() < 1e-9 * direct, "{z} vs {direct}");
+    }
+
+    #[test]
+    fn single_thread_matches_multi() {
+        let s = tiny_store();
+        let a = BruteIndex::with_threads(&s, 1);
+        let b = BruteIndex::with_threads(&s, 8);
+        let q = s.row(0).to_vec();
+        assert!((a.partition(&q) - b.partition(&q)).abs() < 1e-9 * a.partition(&q));
+        assert_eq!(a.top_k(&q, 5), b.top_k(&q, 5));
+    }
+
+    #[test]
+    fn probe_cost_is_linear() {
+        let s = tiny_store();
+        let idx = BruteIndex::new(&s);
+        assert_eq!(idx.probe_cost(10), s.len());
+    }
+}

@@ -1,0 +1,225 @@
+//! k-means clustering (k-means++ seeding + Lloyd iterations) over subsets
+//! of a row-major matrix. This is the building block of the FLANN-style
+//! hierarchical k-means tree (`kmeans_tree`), which clusters recursively.
+
+use crate::linalg;
+use crate::util::rng::Rng;
+
+/// Result of one k-means run over a subset of rows.
+pub struct KMeansResult {
+    /// Centroids, row-major (k × d). May contain fewer than requested k if
+    /// the subset has fewer distinct points.
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub d: usize,
+    /// Assignment of each input row (by position in `subset`) to a centroid.
+    pub assign: Vec<usize>,
+}
+
+/// Access rows of a matrix through a subset of indices.
+pub struct SubsetView<'a> {
+    pub data: &'a [f32],
+    pub d: usize,
+    pub subset: &'a [usize],
+}
+
+impl<'a> SubsetView<'a> {
+    #[inline]
+    pub fn row(&self, pos: usize) -> &'a [f32] {
+        let i = self.subset[pos];
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn len(&self) -> usize {
+        self.subset.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.subset.is_empty()
+    }
+}
+
+/// k-means++ seeding: first centroid uniform, subsequent ones proportional
+/// to squared distance from the nearest chosen centroid.
+fn seed_pp(view: &SubsetView, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let n = view.len();
+    let d = view.d;
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centroids.extend_from_slice(view.row(first));
+    let mut dist = vec![0f32; n];
+    for (pos, dst) in dist.iter_mut().enumerate() {
+        *dst = linalg::dist_sq(view.row(pos), &centroids[..d]);
+    }
+    while centroids.len() / d < k {
+        let total: f64 = dist.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (pos, &dx) in dist.iter().enumerate() {
+                target -= dx as f64;
+                if target <= 0.0 {
+                    chosen = pos;
+                    break;
+                }
+            }
+            chosen
+        };
+        let c0 = centroids.len();
+        centroids.extend_from_slice(view.row(pick));
+        let new_c = &centroids[c0..c0 + d].to_vec();
+        for (pos, dst) in dist.iter_mut().enumerate() {
+            let dnew = linalg::dist_sq(view.row(pos), new_c);
+            if dnew < *dst {
+                *dst = dnew;
+            }
+        }
+    }
+    centroids
+}
+
+/// Run k-means over the subset. `iters` Lloyd steps (FLANN uses a small
+/// fixed count for tree builds; convergence isn't needed for good trees).
+pub fn kmeans(view: &SubsetView, k: usize, iters: usize, rng: &mut Rng) -> KMeansResult {
+    let n = view.len();
+    let d = view.d;
+    assert!(n > 0, "kmeans over empty subset");
+    let k = k.min(n);
+    let mut centroids = seed_pp(view, k, rng);
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // Assignment step.
+        for pos in 0..n {
+            let row = view.row(pos);
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dd = linalg::dist_sq(row, &centroids[c * d..(c + 1) * d]);
+                if dd < best_d {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            assign[pos] = best;
+        }
+        // Update step.
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for pos in 0..n {
+            let c = assign[pos];
+            counts[c] += 1;
+            let row = view.row(pos);
+            for j in 0..d {
+                sums[c * d + j] += row[j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: reseed at a random point.
+                let pick = rng.below(n);
+                centroids[c * d..(c + 1) * d].copy_from_slice(view.row(pick));
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            for j in 0..d {
+                centroids[c * d + j] = (sums[c * d + j] * inv) as f32;
+            }
+        }
+    }
+    // Final assignment against final centroids.
+    for pos in 0..n {
+        let row = view.row(pos);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dd = linalg::dist_sq(row, &centroids[c * d..(c + 1) * d]);
+            if dd < best_d {
+                best_d = dd;
+                best = c;
+            }
+        }
+        assign[pos] = best;
+    }
+    KMeansResult {
+        centroids,
+        k,
+        d,
+        assign,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs must be recovered exactly.
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::seeded(2);
+        let d = 8;
+        let centers = [10.0f32, -10.0, 30.0];
+        let mut data = Vec::new();
+        let mut truth = Vec::new();
+        for (ci, &c) in centers.iter().enumerate() {
+            for _ in 0..50 {
+                for _ in 0..d {
+                    data.push(c + rng.normal() as f32 * 0.1);
+                }
+                truth.push(ci);
+            }
+        }
+        let subset: Vec<usize> = (0..150).collect();
+        let view = SubsetView {
+            data: &data,
+            d,
+            subset: &subset,
+        };
+        let res = kmeans(&view, 3, 10, &mut rng);
+        // All members of a true blob share a cluster id, distinct across blobs.
+        let mut blob_to_cluster = [usize::MAX; 3];
+        for (pos, &t) in truth.iter().enumerate() {
+            if blob_to_cluster[t] == usize::MAX {
+                blob_to_cluster[t] = res.assign[pos];
+            }
+            assert_eq!(res.assign[pos], blob_to_cluster[t], "blob {t} split");
+        }
+        let uniq: std::collections::HashSet<_> = blob_to_cluster.iter().collect();
+        assert_eq!(uniq.len(), 3, "blobs merged");
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        let subset = [0usize, 1];
+        let view = SubsetView {
+            data: &data,
+            d: 2,
+            subset: &subset,
+        };
+        let mut rng = Rng::seeded(0);
+        let res = kmeans(&view, 10, 3, &mut rng);
+        assert_eq!(res.k, 2);
+        assert_eq!(res.assign.len(), 2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut data = Vec::new();
+        let mut rng = Rng::seeded(7);
+        for _ in 0..200 {
+            data.push(rng.normal() as f32);
+        }
+        let subset: Vec<usize> = (0..50).collect();
+        let view = SubsetView {
+            data: &data,
+            d: 4,
+            subset: &subset,
+        };
+        let a = kmeans(&view, 5, 5, &mut Rng::seeded(1));
+        let b = kmeans(&view, 5, 5, &mut Rng::seeded(1));
+        assert_eq!(a.assign, b.assign);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

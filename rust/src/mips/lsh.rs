@@ -1,0 +1,231 @@
+//! Signed-random-projection (SimHash) LSH index for MIPS, again via the
+//! Bachrach lift — the alternative indexing family the paper discusses
+//! (Shrivastava & Li's ALSH, Neyshabur & Srebro). After the lift all data
+//! points share norm Φ, so cosine LSH over lifted vectors hashes by the
+//! same geometry the Euclidean search uses, and exact rescoring of
+//! candidate buckets returns exact inner products.
+//!
+//! Multi-table + multiprobe: `tables` independent hash tables of `bits`
+//! hyperplanes each; probing flips up to `probe_flips` of the lowest-margin
+//! bits to visit adjacent buckets, trading probes for recall.
+
+use super::transform::MipsTransform;
+use super::{select_top_k, Hit, MipsIndex};
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// LSH parameters.
+#[derive(Clone, Debug)]
+pub struct LshConfig {
+    /// Number of independent hash tables.
+    pub tables: usize,
+    /// Hyperplanes (bits) per table; buckets = 2^bits.
+    pub bits: usize,
+    /// Number of low-margin bit flips to multiprobe per table.
+    pub probe_flips: usize,
+    pub seed: u64,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        LshConfig {
+            tables: 8,
+            bits: 12,
+            probe_flips: 6,
+            seed: 0,
+        }
+    }
+}
+
+struct Table {
+    /// Hyperplanes, row-major (bits × lifted_d).
+    planes: Vec<f32>,
+    buckets: HashMap<u64, Vec<u32>>,
+}
+
+/// SimHash LSH MIPS index.
+pub struct SimHashIndex {
+    store: std::sync::Arc<EmbeddingStore>,
+    transform: MipsTransform,
+    tables: Vec<Table>,
+    cfg: LshConfig,
+}
+
+impl SimHashIndex {
+    pub fn build(store: &EmbeddingStore, cfg: LshConfig) -> Self {
+        let transform = MipsTransform::lift(store);
+        let ld = transform.d + 1;
+        let mut rng = Rng::seeded(cfg.seed ^ 0x5151_5151);
+        let mut tables = Vec::with_capacity(cfg.tables);
+        for _ in 0..cfg.tables {
+            let planes: Vec<f32> = (0..cfg.bits * ld)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let mut buckets: HashMap<u64, Vec<u32>> = HashMap::new();
+            for i in 0..store.len() {
+                let h = Self::hash(&planes, cfg.bits, ld, transform.row(i)).0;
+                buckets.entry(h).or_default().push(i as u32);
+            }
+            tables.push(Table { planes, buckets });
+        }
+        SimHashIndex {
+            store: std::sync::Arc::new(store.clone()),
+            transform,
+            tables,
+            cfg,
+        }
+    }
+
+    /// Hash a lifted vector; also return per-bit margins |p·x| for multiprobe.
+    fn hash(planes: &[f32], bits: usize, ld: usize, x: &[f32]) -> (u64, Vec<f32>) {
+        let mut h = 0u64;
+        let mut margins = Vec::with_capacity(bits);
+        for b in 0..bits {
+            let p = &planes[b * ld..(b + 1) * ld];
+            let s = linalg::dot(p, x);
+            if s >= 0.0 {
+                h |= 1 << b;
+            }
+            margins.push(s.abs());
+        }
+        (h, margins)
+    }
+
+    /// Candidate set for a query (deduplicated across tables and probes).
+    fn candidates(&self, q: &[f32]) -> Vec<u32> {
+        let lq = self.transform.lift_query(q);
+        let ld = self.transform.d + 1;
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for t in &self.tables {
+            let (h, margins) = Self::hash(&t.planes, self.cfg.bits, ld, &lq);
+            // Primary bucket + flips of the lowest-margin bits.
+            let mut order: Vec<usize> = (0..self.cfg.bits).collect();
+            order.sort_by(|&a, &b| margins[a].partial_cmp(&margins[b]).unwrap());
+            let mut probe_hashes = vec![h];
+            for &b in order.iter().take(self.cfg.probe_flips) {
+                probe_hashes.push(h ^ (1 << b));
+            }
+            for ph in probe_hashes {
+                if let Some(items) = t.buckets.get(&ph) {
+                    for &i in items {
+                        if seen.insert(i) {
+                            out.push(i);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+impl MipsIndex for SimHashIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let cands = self.candidates(q);
+        let scores: Vec<f32> = cands
+            .iter()
+            .map(|&i| linalg::dot(self.store.row(i as usize), q))
+            .collect();
+        select_top_k(&scores, k)
+            .into_iter()
+            .map(|h| Hit {
+                idx: cands[h.idx] as usize,
+                score: h.score,
+            })
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn probe_cost(&self, _k: usize) -> usize {
+        // Expected candidates: tables * (1 + flips) * N / 2^bits, capped at N.
+        let per_bucket = self.store.len() as f64 / (1u64 << self.cfg.bits) as f64;
+        let est = (self.cfg.tables * (1 + self.cfg.probe_flips)) as f64 * per_bucket;
+        (est as usize).min(self.store.len()).max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "simhash-lsh"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    fn store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 2000,
+            d: 24,
+            clusters: 16,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn buckets_partition_dataset_per_table() {
+        let s = store();
+        let idx = SimHashIndex::build(&s, LshConfig::default());
+        for t in &idx.tables {
+            let total: usize = t.buckets.values().map(|v| v.len()).sum();
+            assert_eq!(total, s.len());
+        }
+    }
+
+    #[test]
+    fn returned_scores_exact() {
+        let s = store();
+        let idx = SimHashIndex::build(&s, LshConfig::default());
+        let q = s.row(10).to_vec();
+        for h in idx.top_k(&q, 5) {
+            let want = linalg::dot(s.row(h.idx), &q);
+            assert!((h.score - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn self_query_finds_itself() {
+        let s = store();
+        let idx = SimHashIndex::build(&s, LshConfig::default());
+        // A rare (large-norm, clustered) vector queries for itself: it has
+        // the max inner product with itself among near-duplicates, and the
+        // same hash in every table, so it must be in the candidates.
+        let i = s.len() - 1;
+        let q = s.row(i).to_vec();
+        let hits = idx.top_k(&q, 1);
+        assert_eq!(hits[0].idx, i);
+    }
+
+    #[test]
+    fn reasonable_recall_at_k10() {
+        let s = store();
+        let idx = SimHashIndex::build(&s, LshConfig::default());
+        let brute = BruteIndex::new(&s);
+        let mut recall = 0f64;
+        let queries = 20;
+        for qi in 0..queries {
+            let q = s.row(s.len() - 1 - qi * 11).to_vec();
+            let got: std::collections::HashSet<_> =
+                idx.top_k(&q, 10).iter().map(|h| h.idx).collect();
+            let want: std::collections::HashSet<_> =
+                brute.top_k(&q, 10).iter().map(|h| h.idx).collect();
+            recall += got.intersection(&want).count() as f64 / 10.0;
+        }
+        recall /= queries as f64;
+        assert!(recall > 0.5, "LSH recall@10 = {recall}");
+    }
+
+    #[test]
+    fn probe_cost_sublinear_at_default_config() {
+        let s = store();
+        let idx = SimHashIndex::build(&s, LshConfig::default());
+        assert!(idx.probe_cost(10) < s.len());
+    }
+}

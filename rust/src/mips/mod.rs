@@ -1,0 +1,146 @@
+//! Maximum Inner Product Search (MIPS) substrate.
+//!
+//! The paper's estimators all start from `S_k(q)` — the k categories with
+//! the largest inner product against the query (Section 3). This module
+//! provides:
+//!
+//! * [`brute::BruteIndex`] — exact top-k by blocked scan (the oracle; also
+//!   the brute-force baseline that "Speedup" in Table 4 is measured against),
+//! * [`transform`] — the Bachrach et al. (2014) reduction from MIPS over
+//!   `R^d` to Euclidean NN over `R^{d+1}`,
+//! * [`kmeans_tree::KMeansTreeIndex`] — FLANN-style hierarchical k-means
+//!   tree over the transformed vectors (the index the paper's §5.2 uses),
+//! * [`lsh::SimHashIndex`] — multi-table signed-random-projection LSH,
+//!   the alternative indexing family the paper cites (Shrivastava & Li,
+//!   Neyshabur & Srebro),
+//! * [`recall`] — recall@k measurement against the exact oracle.
+
+pub mod alsh;
+pub mod brute;
+pub mod kmeans;
+pub mod kmeans_tree;
+pub mod lsh;
+pub mod pca_tree;
+pub mod recall;
+pub mod transform;
+
+/// A scored hit: category index + inner product with the query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub idx: usize,
+    pub score: f32,
+}
+
+/// Common interface for all MIPS indexes.
+pub trait MipsIndex: Send + Sync {
+    /// Return (up to) the top-`k` categories by inner product with `q`,
+    /// sorted by descending score. Approximate indexes may miss true
+    /// members of `S_k(q)`; `recall` quantifies that.
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit>;
+
+    /// Number of indexed items.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate number of candidate scorings performed for one query at
+    /// this index's current settings — the paper's sublinearity argument
+    /// is about this count staying ≪ N.
+    fn probe_cost(&self, k: usize) -> usize;
+
+    /// Short identifier for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Select the top-k hits from a scored slice (descending), in O(n log k).
+pub fn select_top_k(scores: &[f32], k: usize) -> Vec<Hit> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    // Min-heap of (score, idx) via Reverse-style wrapper on partial floats.
+    #[derive(PartialEq)]
+    struct Entry(f32, usize);
+    impl Eq for Entry {}
+    impl PartialOrd for Entry {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Entry {
+        fn cmp(&self, other: &Self) -> Ordering {
+            // Reverse on score → BinaryHeap becomes a min-heap by score.
+            other
+                .0
+                .partial_cmp(&self.0)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| other.1.cmp(&self.1))
+        }
+    }
+
+    let k = k.min(scores.len());
+    if k == 0 {
+        return vec![];
+    }
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::with_capacity(k + 1);
+    for (i, &s) in scores.iter().enumerate() {
+        if heap.len() < k {
+            heap.push(Entry(s, i));
+        } else if s > heap.peek().unwrap().0 {
+            heap.pop();
+            heap.push(Entry(s, i));
+        }
+    }
+    let mut hits: Vec<Hit> = heap
+        .into_iter()
+        .map(|Entry(score, idx)| Hit { idx, score })
+        .collect();
+    hits.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.idx.cmp(&b.idx))
+    });
+    hits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_top_k_orders_descending() {
+        let scores = [1.0f32, 5.0, 3.0, 4.0, 2.0];
+        let hits = select_top_k(&scores, 3);
+        assert_eq!(
+            hits.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            vec![1, 3, 2]
+        );
+    }
+
+    #[test]
+    fn select_top_k_handles_k_ge_n() {
+        let scores = [1.0f32, 2.0];
+        let hits = select_top_k(&scores, 10);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].idx, 1);
+    }
+
+    #[test]
+    fn select_top_k_zero() {
+        assert!(select_top_k(&[1.0], 0).is_empty());
+        assert!(select_top_k(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn select_top_k_ties_stable_by_index() {
+        let scores = [2.0f32, 2.0, 2.0, 1.0];
+        let hits = select_top_k(&scores, 2);
+        assert_eq!(
+            hits.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            vec![0, 1],
+            "ties break toward lower index"
+        );
+    }
+}

@@ -1,0 +1,351 @@
+//! PCA-tree MIPS index (Sproull 1991, cited by the paper as one of the
+//! retrieval options for `S_k(q)`), over the Bachrach lift.
+//!
+//! Build: at each node, compute the principal component of the (lifted)
+//! points by power iteration, split at the median projection, recurse.
+//! Search: best-bin-first with a priority queue keyed by the *projection
+//! margin* to the splitting hyperplane — the lower bound on the distance
+//! a point on the far side can have.
+
+use super::transform::MipsTransform;
+use super::{select_top_k, Hit, MipsIndex};
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// PCA-tree parameters.
+#[derive(Clone, Debug)]
+pub struct PcaTreeConfig {
+    pub leaf_size: usize,
+    /// Power-iteration steps for the principal component.
+    pub power_iters: usize,
+    /// Max points scored per query.
+    pub max_probes: usize,
+    pub seed: u64,
+}
+
+impl Default for PcaTreeConfig {
+    fn default() -> Self {
+        PcaTreeConfig {
+            leaf_size: 64,
+            power_iters: 8,
+            max_probes: 4096,
+            seed: 0,
+        }
+    }
+}
+
+enum Node {
+    Split {
+        /// Unit principal direction (lifted dim).
+        dir: Vec<f32>,
+        /// Median projection value.
+        threshold: f32,
+        left: usize,
+        right: usize,
+    },
+    Leaf {
+        items: Vec<usize>,
+    },
+}
+
+/// The PCA tree.
+pub struct PcaTreeIndex {
+    store: std::sync::Arc<EmbeddingStore>,
+    transform: MipsTransform,
+    nodes: Vec<Node>,
+    root: usize,
+    cfg: PcaTreeConfig,
+}
+
+/// Principal component of the subset via centered power iteration.
+fn principal_direction(
+    data: &[f32],
+    ld: usize,
+    subset: &[usize],
+    iters: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    // Mean.
+    let mut mean = vec![0f64; ld];
+    for &i in subset {
+        let row = &data[i * ld..(i + 1) * ld];
+        for j in 0..ld {
+            mean[j] += row[j] as f64;
+        }
+    }
+    let inv = 1.0 / subset.len() as f64;
+    for m in &mut mean {
+        *m *= inv;
+    }
+    // Power iteration on the covariance (implicitly: v ← Σ (x−μ)((x−μ)·v)).
+    let mut v = rng.unit_vec(ld);
+    for _ in 0..iters {
+        let mut next = vec![0f64; ld];
+        for &i in subset {
+            let row = &data[i * ld..(i + 1) * ld];
+            let mut proj = 0f64;
+            for j in 0..ld {
+                proj += (row[j] as f64 - mean[j]) * v[j] as f64;
+            }
+            for j in 0..ld {
+                next[j] += (row[j] as f64 - mean[j]) * proj;
+            }
+        }
+        let norm = next.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-30 {
+            break; // degenerate: all points identical
+        }
+        for j in 0..ld {
+            v[j] = (next[j] / norm) as f32;
+        }
+    }
+    v
+}
+
+impl PcaTreeIndex {
+    pub fn build(store: &EmbeddingStore, cfg: PcaTreeConfig) -> Self {
+        let transform = MipsTransform::lift(store);
+        let ld = transform.d + 1;
+        let mut rng = Rng::seeded(cfg.seed ^ 0x9CA);
+        let mut nodes = Vec::new();
+        let all: Vec<usize> = (0..store.len()).collect();
+        let root = Self::build_node(&transform.lifted, ld, all, &cfg, &mut rng, &mut nodes);
+        PcaTreeIndex {
+            store: std::sync::Arc::new(store.clone()),
+            transform,
+            nodes,
+            root,
+            cfg,
+        }
+    }
+
+    fn build_node(
+        data: &[f32],
+        ld: usize,
+        subset: Vec<usize>,
+        cfg: &PcaTreeConfig,
+        rng: &mut Rng,
+        nodes: &mut Vec<Node>,
+    ) -> usize {
+        if subset.len() <= cfg.leaf_size {
+            nodes.push(Node::Leaf { items: subset });
+            return nodes.len() - 1;
+        }
+        let dir = principal_direction(data, ld, &subset, cfg.power_iters, rng);
+        let mut projs: Vec<(usize, f32)> = subset
+            .iter()
+            .map(|&i| (i, linalg::dot(&data[i * ld..(i + 1) * ld], &dir)))
+            .collect();
+        projs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(Ordering::Equal));
+        let mid = projs.len() / 2;
+        let threshold = projs[mid].1;
+        let left_items: Vec<usize> = projs[..mid].iter().map(|(i, _)| *i).collect();
+        let right_items: Vec<usize> = projs[mid..].iter().map(|(i, _)| *i).collect();
+        if left_items.is_empty() || right_items.is_empty() {
+            nodes.push(Node::Leaf { items: subset });
+            return nodes.len() - 1;
+        }
+        let left = Self::build_node(data, ld, left_items, cfg, rng, nodes);
+        let right = Self::build_node(data, ld, right_items, cfg, rng, nodes);
+        nodes.push(Node::Split {
+            dir,
+            threshold,
+            left,
+            right,
+        });
+        nodes.len() - 1
+    }
+
+    /// Best-bin-first search with an explicit probe budget.
+    pub fn search_with_budget(&self, q: &[f32], k: usize, max_probes: usize) -> (Vec<Hit>, usize) {
+        struct QE {
+            bound: f32,
+            node: usize,
+        }
+        impl PartialEq for QE {
+            fn eq(&self, o: &Self) -> bool {
+                self.bound == o.bound
+            }
+        }
+        impl Eq for QE {}
+        impl PartialOrd for QE {
+            fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for QE {
+            fn cmp(&self, o: &Self) -> Ordering {
+                o.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+            }
+        }
+        let lq = self.transform.lift_query(q);
+        let mut heap = BinaryHeap::new();
+        heap.push(QE {
+            bound: 0.0,
+            node: self.root,
+        });
+        let mut cand_idx = Vec::new();
+        let mut cand_score = Vec::new();
+        let mut probes = 0usize;
+        while let Some(QE { node, .. }) = heap.pop() {
+            if probes >= max_probes {
+                break;
+            }
+            match &self.nodes[node] {
+                Node::Leaf { items } => {
+                    for &i in items {
+                        cand_idx.push(i);
+                        cand_score.push(linalg::dot(self.store.row(i), q));
+                    }
+                    probes += items.len();
+                }
+                Node::Split {
+                    dir,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    let proj = linalg::dot(dir, &lq);
+                    let margin = (proj - threshold).abs();
+                    let (near, far) = if proj < *threshold {
+                        (*left, *right)
+                    } else {
+                        (*right, *left)
+                    };
+                    heap.push(QE {
+                        bound: 0.0,
+                        node: near,
+                    });
+                    heap.push(QE {
+                        bound: margin,
+                        node: far,
+                    });
+                }
+            }
+        }
+        let hits = select_top_k(&cand_score, k)
+            .into_iter()
+            .map(|h| Hit {
+                idx: cand_idx[h.idx],
+                score: h.score,
+            })
+            .collect();
+        (hits, probes)
+    }
+
+    /// Number of leaves (diagnostics).
+    pub fn leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+}
+
+impl MipsIndex for PcaTreeIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let budget = self.cfg.max_probes.max(4 * k);
+        self.search_with_budget(q, k, budget).0
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn probe_cost(&self, k: usize) -> usize {
+        self.cfg.max_probes.max(4 * k).min(self.store.len())
+    }
+
+    fn name(&self) -> &'static str {
+        "pca-tree"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    fn store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 2000,
+            d: 24,
+            clusters: 16,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn leaves_partition_dataset() {
+        let s = store();
+        let t = PcaTreeIndex::build(&s, PcaTreeConfig::default());
+        let mut total = 0usize;
+        for n in &t.nodes {
+            if let Node::Leaf { items } = n {
+                total += items.len();
+            }
+        }
+        assert_eq!(total, s.len());
+        assert!(t.leaves() > 1);
+    }
+
+    #[test]
+    fn full_budget_recovers_exact_topk() {
+        let s = store();
+        let t = PcaTreeIndex::build(&s, PcaTreeConfig::default());
+        let brute = BruteIndex::new(&s);
+        let q = s.row(77).to_vec();
+        let (hits, _) = t.search_with_budget(&q, 10, s.len());
+        let want = brute.top_k(&q, 10);
+        assert_eq!(
+            hits.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            want.iter().map(|h| h.idx).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn limited_budget_reasonable_recall() {
+        let s = store();
+        let t = PcaTreeIndex::build(&s, PcaTreeConfig::default());
+        let brute = BruteIndex::new(&s);
+        let mut recall = 0f64;
+        let queries = 15;
+        for qi in 0..queries {
+            let q = s.row(s.len() - 1 - qi * 13).to_vec();
+            let got: std::collections::HashSet<_> = t
+                .search_with_budget(&q, 10, 400)
+                .0
+                .iter()
+                .map(|h| h.idx)
+                .collect();
+            let want: std::collections::HashSet<_> =
+                brute.top_k(&q, 10).iter().map(|h| h.idx).collect();
+            recall += got.intersection(&want).count() as f64 / 10.0;
+        }
+        recall /= queries as f64;
+        assert!(recall > 0.6, "pca-tree recall@10 {recall} at 20% budget");
+    }
+
+    #[test]
+    fn principal_direction_finds_dominant_axis() {
+        // Points stretched along axis 0: the PC must align with it.
+        let mut rng = Rng::seeded(4);
+        let mut data = Vec::new();
+        for _ in 0..200 {
+            data.push(rng.normal() as f32 * 10.0);
+            for _ in 1..4 {
+                data.push(rng.normal() as f32 * 0.1);
+            }
+        }
+        let subset: Vec<usize> = (0..200).collect();
+        let dir = principal_direction(&data, 4, &subset, 10, &mut rng);
+        assert!(
+            dir[0].abs() > 0.99,
+            "PC should align with the stretched axis: {dir:?}"
+        );
+    }
+}

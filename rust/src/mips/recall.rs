@@ -1,0 +1,97 @@
+//! Recall@k measurement of an approximate MIPS index against the exact
+//! brute-force oracle — the quantity that (per the paper's §5.1
+//! retrieval-error study) governs estimator quality, and the axis along
+//! which indexing schemes should be compared.
+
+use super::{brute::BruteIndex, MipsIndex};
+use crate::util::rng::Rng;
+
+/// Result of a recall sweep.
+#[derive(Clone, Debug)]
+pub struct RecallReport {
+    pub k: usize,
+    pub queries: usize,
+    /// Mean fraction of the true top-k recovered.
+    pub recall: f64,
+    /// Fraction of queries whose true top-1 was recovered (Table 3 shows
+    /// missing rank-1 is the expensive failure).
+    pub top1_recall: f64,
+    /// Mean probe cost per query reported by the index.
+    pub mean_probes: f64,
+}
+
+/// Measure recall@k of `index` against `brute` on `queries` random data
+/// vectors (self-queries, matching the paper's query construction).
+pub fn measure<I: MipsIndex + ?Sized>(
+    index: &I,
+    brute: &BruteIndex,
+    k: usize,
+    queries: usize,
+    rng: &mut Rng,
+) -> RecallReport {
+    let n = brute.len();
+    let mut recall_sum = 0f64;
+    let mut top1_sum = 0f64;
+    let mut probes = 0usize;
+    for _ in 0..queries {
+        let qi = rng.below(n);
+        let q = brute.store().row(qi).to_vec();
+        let want = brute.top_k(&q, k);
+        let got: std::collections::HashSet<usize> =
+            index.top_k(&q, k).iter().map(|h| h.idx).collect();
+        let inter = want.iter().filter(|h| got.contains(&h.idx)).count();
+        recall_sum += inter as f64 / k as f64;
+        top1_sum += if got.contains(&want[0].idx) { 1.0 } else { 0.0 };
+        probes += index.probe_cost(k);
+    }
+    RecallReport {
+        k,
+        queries,
+        recall: recall_sum / queries as f64,
+        top1_recall: top1_sum / queries as f64,
+        mean_probes: probes as f64 / queries as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
+
+    #[test]
+    fn brute_vs_brute_is_perfect() {
+        let s = generate(&SynthConfig {
+            n: 500,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(1);
+        let r = measure(&brute, &brute, 10, 5, &mut rng);
+        assert_eq!(r.recall, 1.0);
+        assert_eq!(r.top1_recall, 1.0);
+        assert_eq!(r.mean_probes, 500.0);
+    }
+
+    #[test]
+    fn tree_recall_between_zero_and_one() {
+        let s = generate(&SynthConfig {
+            n: 1000,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let tree = KMeansTreeIndex::build(
+            &s,
+            KMeansTreeConfig {
+                max_probes: 200,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::seeded(2);
+        let r = measure(&tree, &brute, 10, 10, &mut rng);
+        assert!(r.recall > 0.0 && r.recall <= 1.0);
+        assert!(r.mean_probes < 1000.0, "tree should probe sublinearly");
+    }
+}

@@ -1,0 +1,156 @@
+//! The Bachrach et al. (RecSys 2014) reduction from MIPS to Euclidean
+//! nearest-neighbor search, as used by the paper's §5.2 experiments
+//! ("the specific MIPS algorithm presented by [3] ... implemented by
+//! modifying the implementation of K-Means Tree in FLANN").
+//!
+//! Data vectors `v ∈ R^d` are lifted to `v* = [sqrt(Φ² − |v|²), v] ∈ R^{d+1}`
+//! where `Φ = max_i |v_i|`; all lifted vectors then share the norm `Φ`.
+//! A query is lifted to `q* = [0, q]`. Then
+//!
+//! ```text
+//! |v* − q*|² = Φ² + |q|² − 2 v·q
+//! ```
+//!
+//! so Euclidean NN order over the lifted vectors equals descending
+//! inner-product order over the originals — exactly, not approximately.
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+
+/// The lifted dataset plus the constants needed to undo the reduction.
+pub struct MipsTransform {
+    /// Lifted row-major data, shape (n × (d+1)).
+    pub lifted: Vec<f32>,
+    pub n: usize,
+    /// Original dimensionality (lifted dim = d + 1).
+    pub d: usize,
+    /// Φ = max row norm of the original data.
+    pub phi: f32,
+}
+
+impl MipsTransform {
+    /// Lift every row of `store` into R^{d+1}.
+    pub fn lift(store: &EmbeddingStore) -> MipsTransform {
+        let n = store.len();
+        let d = store.dim();
+        let phi_sq = (0..n)
+            .map(|i| linalg::norm_sq(store.row(i)))
+            .fold(0f32, f32::max);
+        let phi = phi_sq.sqrt();
+        let mut lifted = vec![0f32; n * (d + 1)];
+        for i in 0..n {
+            let row = store.row(i);
+            let extra = (phi_sq - linalg::norm_sq(row)).max(0.0).sqrt();
+            let out = &mut lifted[i * (d + 1)..(i + 1) * (d + 1)];
+            out[0] = extra;
+            out[1..].copy_from_slice(row);
+        }
+        MipsTransform { lifted, n, d, phi }
+    }
+
+    /// Lift a query: `q* = [0, q]`.
+    pub fn lift_query(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.d);
+        let mut out = Vec::with_capacity(self.d + 1);
+        out.push(0.0);
+        out.extend_from_slice(q);
+        out
+    }
+
+    /// The lifted row i.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.lifted[i * (self.d + 1)..(i + 1) * (self.d + 1)]
+    }
+
+    /// Recover the inner product `v_i · q` from a lifted squared distance:
+    /// `v·q = (Φ² + |q|² − dist²) / 2`.
+    pub fn inner_from_dist_sq(&self, dist_sq: f32, q_norm_sq: f32) -> f32 {
+        0.5 * (self.phi * self.phi + q_norm_sq - dist_sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::util::rng::Rng;
+
+    fn store() -> EmbeddingStore {
+        generate(&SynthConfig {
+            n: 500,
+            d: 24,
+            clusters: 8,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn lifted_rows_share_norm_phi() {
+        let s = store();
+        let t = MipsTransform::lift(&s);
+        for i in (0..s.len()).step_by(37) {
+            let nrm = linalg::norm(t.row(i));
+            assert!(
+                (nrm - t.phi).abs() < 1e-3 * t.phi,
+                "row {i} lifted norm {nrm} != phi {}",
+                t.phi
+            );
+        }
+    }
+
+    /// The core property: Euclidean order over lifted vectors == descending
+    /// inner-product order over originals.
+    #[test]
+    fn distance_order_equals_inner_product_order() {
+        let s = store();
+        let t = MipsTransform::lift(&s);
+        let mut rng = Rng::seeded(5);
+        for _ in 0..5 {
+            let q = rng.normal_vec(s.dim());
+            let lq = t.lift_query(&q);
+            let mut by_ip: Vec<usize> = (0..s.len()).collect();
+            by_ip.sort_by(|&a, &b| {
+                linalg::dot(s.row(b), &q)
+                    .partial_cmp(&linalg::dot(s.row(a), &q))
+                    .unwrap()
+            });
+            let mut by_dist: Vec<usize> = (0..s.len()).collect();
+            by_dist.sort_by(|&a, &b| {
+                linalg::dist_sq(t.row(a), &lq)
+                    .partial_cmp(&linalg::dist_sq(t.row(b), &lq))
+                    .unwrap()
+            });
+            // Compare top-20 prefix (beyond that, float ties can permute).
+            assert_eq!(&by_ip[..20], &by_dist[..20]);
+        }
+    }
+
+    #[test]
+    fn inner_product_recoverable_from_distance() {
+        let s = store();
+        let t = MipsTransform::lift(&s);
+        let mut rng = Rng::seeded(6);
+        let q = rng.normal_vec(s.dim());
+        let lq = t.lift_query(&q);
+        let qn = linalg::norm_sq(&q);
+        for i in (0..s.len()).step_by(61) {
+            let want = linalg::dot(s.row(i), &q);
+            let got = t.inner_from_dist_sq(linalg::dist_sq(t.row(i), &lq), qn);
+            assert!((want - got).abs() < 2e-2 * (1.0 + want.abs()), "{want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn max_norm_row_gets_zero_padding() {
+        let s = store();
+        let t = MipsTransform::lift(&s);
+        // The row with the max norm has lifted[0] ≈ 0.
+        let norms = s.norms();
+        let (argmax, _) = norms
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        assert!(t.row(argmax)[0].abs() < 1e-2);
+    }
+}

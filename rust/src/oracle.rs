@@ -1,0 +1,189 @@
+//! Oracle retrieval with deterministic error injection — the harness for
+//! the paper's §5.1 controlled experiments.
+//!
+//! The oracle wraps the exact brute-force index and can be configured to
+//! *drop* specific ranks from every retrieved set (`ret err=1` drops the
+//! single best inner-product vector, `ret err=[1 2]` drops the top two…),
+//! "restrictively simulat[ing] the type of errors that these estimators
+//! might encounter in a real setting where the vector with the highest or
+//! second highest inner product might not be made available" (Table 3).
+//! The retrieved set still contains `k` items: lower-ranked vectors shift
+//! up, exactly as an approximate index that misses the true top-1 would
+//! return its next-best candidates.
+
+use crate::mips::brute::BruteIndex;
+use crate::mips::{Hit, MipsIndex};
+
+/// Which (1-based) ranks of the true top-k to remove from every retrieval.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RetrievalError {
+    pub drop_ranks: Vec<usize>,
+}
+
+impl RetrievalError {
+    pub fn none() -> Self {
+        RetrievalError { drop_ranks: vec![] }
+    }
+
+    /// `ret err=1` in the paper's Table 3.
+    pub fn drop_first() -> Self {
+        RetrievalError {
+            drop_ranks: vec![1],
+        }
+    }
+
+    /// `ret err=2`.
+    pub fn drop_second() -> Self {
+        RetrievalError {
+            drop_ranks: vec![2],
+        }
+    }
+
+    /// `ret err=[1 2]`.
+    pub fn drop_first_two() -> Self {
+        RetrievalError {
+            drop_ranks: vec![1, 2],
+        }
+    }
+
+    pub fn label(&self) -> String {
+        if self.drop_ranks.is_empty() {
+            "None".to_string()
+        } else if self.drop_ranks.len() == 1 {
+            format!("{}", self.drop_ranks[0])
+        } else {
+            format!(
+                "[{}]",
+                self.drop_ranks
+                    .iter()
+                    .map(|r| r.to_string())
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            )
+        }
+    }
+}
+
+/// The oracle: exact retrieval with configurable injected errors.
+pub struct OracleIndex {
+    brute: BruteIndex,
+    err: RetrievalError,
+}
+
+impl OracleIndex {
+    pub fn new(brute: BruteIndex) -> Self {
+        OracleIndex {
+            brute,
+            err: RetrievalError::none(),
+        }
+    }
+
+    pub fn with_error(brute: BruteIndex, err: RetrievalError) -> Self {
+        OracleIndex { brute, err }
+    }
+
+    pub fn set_error(&mut self, err: RetrievalError) {
+        self.err = err;
+    }
+
+    pub fn brute(&self) -> &BruteIndex {
+        &self.brute
+    }
+}
+
+impl MipsIndex for OracleIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        if self.err.drop_ranks.is_empty() {
+            return self.brute.top_k(q, k);
+        }
+        // Retrieve enough extra ranks to backfill the dropped ones.
+        let extra = self.err.drop_ranks.len();
+        let full = self.brute.top_k(q, k + extra);
+        full.into_iter()
+            .enumerate()
+            .filter(|(pos, _)| !self.err.drop_ranks.contains(&(pos + 1)))
+            .map(|(_, h)| h)
+            .take(k)
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.brute.len()
+    }
+
+    fn probe_cost(&self, k: usize) -> usize {
+        self.brute.probe_cost(k)
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    fn setup() -> (crate::data::embeddings::EmbeddingStore, BruteIndex) {
+        let s = generate(&SynthConfig {
+            n: 400,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let b = BruteIndex::new(&s);
+        (s, b)
+    }
+
+    #[test]
+    fn no_error_equals_brute() {
+        let (s, b) = setup();
+        let oracle = OracleIndex::new(BruteIndex::new(&s));
+        let q = s.row(3).to_vec();
+        assert_eq!(oracle.top_k(&q, 10), b.top_k(&q, 10));
+    }
+
+    #[test]
+    fn drop_first_removes_argmax_and_backfills() {
+        let (s, b) = setup();
+        let oracle = OracleIndex::with_error(BruteIndex::new(&s), RetrievalError::drop_first());
+        let q = s.row(3).to_vec();
+        let truth = b.top_k(&q, 11);
+        let got = oracle.top_k(&q, 10);
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].idx, truth[1].idx, "rank-2 becomes first");
+        assert_eq!(got[9].idx, truth[10].idx, "backfilled from rank-11");
+        assert!(got.iter().all(|h| h.idx != truth[0].idx));
+    }
+
+    #[test]
+    fn drop_first_two() {
+        let (s, b) = setup();
+        let oracle =
+            OracleIndex::with_error(BruteIndex::new(&s), RetrievalError::drop_first_two());
+        let q = s.row(7).to_vec();
+        let truth = b.top_k(&q, 12);
+        let got = oracle.top_k(&q, 10);
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].idx, truth[2].idx);
+        assert!(got.iter().all(|h| h.idx != truth[0].idx && h.idx != truth[1].idx));
+    }
+
+    #[test]
+    fn drop_second_keeps_first() {
+        let (s, b) = setup();
+        let oracle = OracleIndex::with_error(BruteIndex::new(&s), RetrievalError::drop_second());
+        let q = s.row(9).to_vec();
+        let truth = b.top_k(&q, 11);
+        let got = oracle.top_k(&q, 10);
+        assert_eq!(got[0].idx, truth[0].idx, "top-1 preserved");
+        assert_eq!(got[1].idx, truth[2].idx, "rank-2 dropped");
+    }
+
+    #[test]
+    fn labels_match_paper_table() {
+        assert_eq!(RetrievalError::none().label(), "None");
+        assert_eq!(RetrievalError::drop_first().label(), "1");
+        assert_eq!(RetrievalError::drop_first_two().label(), "[1 2]");
+    }
+}

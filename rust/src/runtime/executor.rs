@@ -1,0 +1,278 @@
+//! Artifact loading + execution: parse `meta.json`, compile every
+//! `*.hlo.txt` on the PJRT CPU client, validate argument shapes, and
+//! marshal [`HostTensor`]s ⇄ `xla::Literal`s.
+
+use super::HostTensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Declared argument of one graph (from meta.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Parsed `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactsMeta {
+    /// graph name → (hlo file name, arg specs)
+    pub graphs: BTreeMap<String, (String, Vec<ArgSpec>)>,
+    /// The exporter's config (chunk, d, vocab, …).
+    pub config: BTreeMap<String, f64>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactsMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactsMeta> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parse meta.json: {e}"))?;
+        let mut graphs = BTreeMap::new();
+        let graphs_obj = v
+            .get("graphs")
+            .and_then(|g| g.as_obj())
+            .ok_or_else(|| anyhow!("meta.json missing graphs object"))?;
+        for (name, info) in graphs_obj {
+            let file = info
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("graph {name} missing file"))?
+                .to_string();
+            let mut specs = Vec::new();
+            for arg in info
+                .get("args")
+                .and_then(|a| a.as_arr())
+                .ok_or_else(|| anyhow!("graph {name} missing args"))?
+            {
+                let shape = arg
+                    .get("shape")
+                    .and_then(|s| s.as_arr())
+                    .ok_or_else(|| anyhow!("arg missing shape"))?
+                    .iter()
+                    .map(|x| x.as_usize().unwrap_or(0))
+                    .collect();
+                let dtype = arg
+                    .get("dtype")
+                    .and_then(|d| d.as_str())
+                    .unwrap_or("float32")
+                    .to_string();
+                specs.push(ArgSpec { shape, dtype });
+            }
+            graphs.insert(name.clone(), (file, specs));
+        }
+        let mut config = BTreeMap::new();
+        if let Some(cfg) = v.get("config").and_then(|c| c.as_obj()) {
+            for (k, val) in cfg {
+                if let Some(x) = val.as_f64() {
+                    config.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(ArtifactsMeta {
+            graphs,
+            config,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).map(|x| *x as usize)
+    }
+}
+
+/// One compiled graph.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    args: Vec<ArgSpec>,
+}
+
+/// The single-threaded PJRT runtime (see module docs for threading).
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    compiled: BTreeMap<String, Compiled>,
+    meta: ArtifactsMeta,
+}
+
+impl Runtime {
+    /// Create a CPU client and compile every artifact listed in meta.json.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let meta = ArtifactsMeta::load(dir)?;
+        Self::load_with_meta(meta)
+    }
+
+    /// Compile only a subset of graphs (faster startup for tools that need
+    /// one executable).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Runtime> {
+        let mut meta = ArtifactsMeta::load(dir)?;
+        meta.graphs.retain(|k, _| names.contains(&k.as_str()));
+        if meta.graphs.len() != names.len() {
+            bail!(
+                "missing graphs: wanted {names:?}, found {:?}",
+                meta.graphs.keys().collect::<Vec<_>>()
+            );
+        }
+        Self::load_with_meta(meta)
+    }
+
+    fn load_with_meta(meta: ArtifactsMeta) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut compiled = BTreeMap::new();
+        for (name, (file, args)) in &meta.graphs {
+            let path = meta.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            compiled.insert(
+                name.clone(),
+                Compiled {
+                    exe,
+                    args: args.clone(),
+                },
+            );
+            log::debug!("compiled artifact {name} from {path:?}");
+        }
+        Ok(Runtime {
+            client,
+            compiled,
+            meta,
+        })
+    }
+
+    pub fn meta(&self) -> &ArtifactsMeta {
+        &self.meta
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        self.compiled.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&x| x as i64).collect();
+        let lit = match t {
+            HostTensor::F32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape f32 {shape:?}: {e:?}"))?
+                }
+            }
+            HostTensor::I32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data)
+                        .reshape(&dims)
+                        .map_err(|e| anyhow!("reshape i32 {shape:?}: {e:?}"))?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("output shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&x| x as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+                dims,
+            )),
+            xla::ElementType::S32 => Ok(HostTensor::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+                dims,
+            )),
+            other => bail!("unsupported output dtype {other:?}"),
+        }
+    }
+
+    /// Validate inputs against meta and execute one graph.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown graph {name:?} (have {:?})", self.graph_names()))?;
+        if inputs.len() != c.args.len() {
+            bail!(
+                "graph {name}: expected {} inputs, got {}",
+                c.args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&c.args).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "graph {name} arg {i}: shape {:?} != declared {:?}",
+                    t.shape(),
+                    spec.shape
+                );
+            }
+            if t.dtype_name() != spec.dtype {
+                bail!(
+                    "graph {name} arg {i}: dtype {} != declared {}",
+                    t.dtype_name(),
+                    spec.dtype
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Self::to_literal)
+            .collect::<Result<_>>()?;
+        let result = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out_lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the output is always a tuple.
+        let parts = out_lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple output of {name}: {e:?}"))?;
+        parts.iter().map(Self::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn meta_parses_when_artifacts_exist() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let meta = ArtifactsMeta::load(&dir).unwrap();
+        assert!(meta.graphs.contains_key("partition_chunk"));
+        let (_, args) = &meta.graphs["partition_chunk"];
+        assert_eq!(args.len(), 2);
+        assert_eq!(args[0].shape.len(), 2);
+        assert!(meta.config_usize("chunk").unwrap() > 0);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactsMeta::load(Path::new("/nonexistent_zest")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,96 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `meta.json` produced by `python/compile/aot.py`) and executes them on
+//! the XLA CPU client from the Rust hot path.
+//!
+//! Threading model: the `xla` crate's `PjRtClient` is `Rc`-based (neither
+//! `Send` nor `Sync`), so [`Runtime`] is confined to one thread — exactly
+//! one executor loop per accelerator, the same shape a real serving stack
+//! uses. Cross-thread access goes through [`pool::RuntimeHandle`], which
+//! ships [`HostTensor`]s over channels to the runtime thread.
+
+pub mod executor;
+pub mod pool;
+
+pub use executor::{ArgSpec, ArtifactsMeta, Runtime};
+pub use pool::{spawn_runtime_thread, RuntimeHandle};
+
+/// A host-side tensor that can cross threads (unlike `xla::Literal`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostTensor::F32(..) => "float32",
+            HostTensor::I32(..) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// First element as f64 (for scalar outputs like losses/partials).
+    pub fn first_f64(&self) -> Option<f64> {
+        match self {
+            HostTensor::F32(d, _) => d.first().map(|x| *x as f64),
+            HostTensor::I32(d, _) => d.first().map(|x| *x as f64),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(t.shape(), &[2]);
+        assert_eq!(t.as_f32(), Some(&[1.0f32, 2.0][..]));
+        assert!(t.as_i32().is_none());
+        assert_eq!(t.first_f64(), Some(1.0));
+        assert_eq!(t.dtype_name(), "float32");
+        let s = HostTensor::scalar_f32(7.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0; 3], &[2, 2]);
+    }
+}

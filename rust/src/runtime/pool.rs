@@ -1,0 +1,151 @@
+//! Cross-thread access to the single-threaded PJRT runtime: a dedicated
+//! runtime thread owns [`Runtime`]; [`RuntimeHandle`]s (cheaply cloneable,
+//! `Send`) submit named-graph executions over a channel and block on a
+//! per-request reply channel. This is the executor-loop shape of a real
+//! single-accelerator server: many request threads, one device queue.
+
+use super::{executor::Runtime, HostTensor};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+enum Msg {
+    Run {
+        graph: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl RuntimeHandle {
+    /// Execute `graph` with `inputs`, blocking until the device replies.
+    pub fn run(&self, graph: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Run {
+                graph: graph.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread dropped the reply"))?
+    }
+
+    /// Ask the runtime thread to exit once queued work drains.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Spawn the runtime thread. Artifacts load + compile happen on that
+/// thread; the join handle and a ready-signal error (if loading failed)
+/// are surfaced to the caller.
+pub fn spawn_runtime_thread(
+    artifacts_dir: PathBuf,
+    subset: Option<Vec<String>>,
+) -> Result<(RuntimeHandle, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let join = std::thread::Builder::new()
+        .name("zest-pjrt".to_string())
+        .spawn(move || {
+            let rt = match &subset {
+                Some(names) => {
+                    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+                    Runtime::load_subset(&artifacts_dir, &name_refs)
+                }
+                None => Runtime::load(&artifacts_dir),
+            };
+            let rt = match rt {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Run {
+                        graph,
+                        inputs,
+                        reply,
+                    } => {
+                        let res = rt.run(&graph, &inputs);
+                        let _ = reply.send(res);
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+        })
+        .expect("spawn runtime thread");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("runtime thread died during load"))??;
+    Ok((RuntimeHandle { tx }, join))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("meta.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_failure_is_reported() {
+        let err = spawn_runtime_thread(PathBuf::from("/nonexistent_zest"), None);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn handle_runs_partition_chunk_from_other_threads() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let (h, join) =
+            spawn_runtime_thread(dir, Some(vec!["partition_chunk".to_string()])).unwrap();
+        let meta_chunk = 8192usize; // default export config
+        let d = 300usize;
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let v = vec![0f32; meta_chunk * d];
+                    let q = vec![0f32; d];
+                    let out = h
+                        .run(
+                            "partition_chunk",
+                            vec![
+                                HostTensor::f32(v, &[meta_chunk, d]),
+                                HostTensor::f32(q, &[d]),
+                            ],
+                        )
+                        .unwrap();
+                    // exp(0)·chunk = chunk
+                    let z = out[0].first_f64().unwrap();
+                    assert!((z - meta_chunk as f64).abs() < 1e-3, "thread {t}: {z}");
+                })
+            })
+            .collect();
+        for th in handles {
+            th.join().unwrap();
+        }
+        h.shutdown();
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,2 @@
+//! Property-testing helpers (substitute for proptest).
+pub mod prop;

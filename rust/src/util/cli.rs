@@ -1,0 +1,208 @@
+//! Minimal declarative command-line flag parser (substitute for `clap`,
+//! which is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! subcommands, typed accessors with defaults, and auto-generated help.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv fragments (everything after the subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates flag parsing.
+                    positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: value or boolean flag?
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            flags.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            flags.insert(body.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed accessor with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.flags.get(key) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Typed accessor that errors when missing or malformed.
+    pub fn require<T: std::str::FromStr>(&self, key: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .flags
+            .get(key)
+            .ok_or_else(|| format!("missing required flag --{key}"))?;
+        v.parse()
+            .map_err(|e| format!("bad value for --{key}: {e}"))
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of T.
+    pub fn get_list<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.flags.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// Unknown-flag check against a declared set (catches typos early).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; known flags: {}",
+                    known.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Help-text builder for subcommands.
+pub struct HelpBuilder {
+    name: String,
+    about: String,
+    entries: Vec<(String, String, String)>,
+}
+
+impl HelpBuilder {
+    pub fn new(name: &str, about: &str) -> Self {
+        HelpBuilder {
+            name: name.to_string(),
+            about: about.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &str, default: &str, about: &str) -> Self {
+        self.entries
+            .push((name.to_string(), default.to_string(), about.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "FLAGS:");
+        for (n, d, a) in &self.entries {
+            let _ = writeln!(s, "  --{n:<22} {a} [default: {d}]");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = args(&["--n", "100", "--d=32"]);
+        assert_eq!(a.get_or("n", 0usize), 100);
+        assert_eq!(a.get_or("d", 0usize), 32);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = args(&["--verbose", "--n", "5"]);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_or("n", 0usize), 5);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = args(&["--n", "5", "--fast"]);
+        assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = args(&["cmdarg", "--n", "5", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["cmdarg", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = args(&["--ks", "1,10,100"]);
+        assert_eq!(a.get_list::<usize>("ks", &[]), vec![1, 10, 100]);
+    }
+
+    #[test]
+    fn require_missing_errors() {
+        let a = args(&[]);
+        assert!(a.require::<usize>("n").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = args(&["--oops", "1"]);
+        assert!(a.check_known(&["n", "d"]).is_err());
+        assert!(args(&["--n", "1"]).check_known(&["n"]).is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args(&[]);
+        assert_eq!(a.get_or("k", 1000usize), 1000);
+        assert_eq!(a.get_list::<usize>("ls", &[10, 100]), vec![10, 100]);
+    }
+}

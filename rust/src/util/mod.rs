@@ -1,0 +1,8 @@
+//! Small, dependency-free substrates that stand in for crates the build
+//! environment does not provide (rand, clap, serde, rayon, env_logger).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod threadpool;

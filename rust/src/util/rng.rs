@@ -1,0 +1,391 @@
+//! Deterministic pseudo-randomness: xoshiro256** core plus the
+//! distributions the paper's workloads need (uniform, normal, Zipf,
+//! geometric, Rademacher, random unit vectors, reservoir/rejection
+//! sampling without replacement).
+//!
+//! Everything is seedable and reproducible across runs — every
+//! experimental table in the paper is reported over 3 seeds, and the
+//! bench harness relies on bit-identical reruns.
+
+/// xoshiro256** — fast, high-quality 64-bit PRNG (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// splitmix64, used to expand a single seed into the xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Construct from a 64-bit seed (expanded via splitmix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[1].wrapping_mul(5), 7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// `true` with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (uses both outputs? no — keeps it
+    /// allocation-free and branch-simple; the second value is discarded,
+    /// which costs one extra `sin` per pair but keeps state minimal).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Rademacher: ±1 with equal probability.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Geometric distribution P[M = m] = (1-1/p) * (1/p)^m for m = 0,1,…
+    /// parameterised as in Kar & Karnick (2012): P[M = m] = 1/p^{m+1},
+    /// which is geometric with success probability 1 - 1/p (p > 1).
+    pub fn geometric_kar(&mut self, p: f64) -> usize {
+        debug_assert!(p > 1.0);
+        let q = 1.0 / p; // failure probability
+        let mut m = 0usize;
+        while self.f64() < q && m < 64 {
+            m += 1;
+        }
+        m
+    }
+
+    /// Random vector of iid standard normals.
+    pub fn normal_vec(&mut self, d: usize) -> Vec<f32> {
+        (0..d).map(|_| self.normal() as f32).collect()
+    }
+
+    /// Random unit vector (uniform on the sphere).
+    pub fn unit_vec(&mut self, d: usize) -> Vec<f32> {
+        let mut v = self.normal_vec(d);
+        let norm = v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+        let inv = (1.0 / norm.max(f64::MIN_POSITIVE)) as f32;
+        for x in &mut v {
+            *x *= inv;
+        }
+        v
+    }
+
+    /// Sample `m` distinct indices uniformly from `[0, n)` excluding any
+    /// index for which `excluded` returns true. Uses rejection sampling
+    /// (fine for m ≪ n, the regime the paper's tail sampling lives in) and
+    /// falls back to a Fisher–Yates partial shuffle when m is a large
+    /// fraction of the candidate pool.
+    pub fn sample_distinct_excluding<F: Fn(usize) -> bool>(
+        &mut self,
+        n: usize,
+        m: usize,
+        excluded: F,
+    ) -> Vec<usize> {
+        let mut out = Vec::with_capacity(m);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        // Estimate pool size cheaply: if m is a big fraction of n, do the
+        // exact partial shuffle; otherwise rejection-sample.
+        if m * 4 >= n {
+            let mut pool: Vec<usize> = (0..n).filter(|&i| !excluded(i)).collect();
+            let take = m.min(pool.len());
+            for i in 0..take {
+                let j = self.range(i, pool.len());
+                pool.swap(i, j);
+                out.push(pool[i]);
+            }
+            return out;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(m * 2);
+        let mut attempts = 0usize;
+        let max_attempts = 100 * m + 1000;
+        while out.len() < m && attempts < max_attempts {
+            attempts += 1;
+            let i = self.below(n);
+            if excluded(i) || seen.contains(&i) {
+                continue;
+            }
+            seen.insert(i);
+            out.push(i);
+        }
+        if out.len() < m {
+            // Pathological exclusion density — fall back to exact.
+            let mut pool: Vec<usize> = (0..n)
+                .filter(|&i| !excluded(i) && !seen.contains(&i))
+                .collect();
+            while out.len() < m && !pool.is_empty() {
+                let j = self.below(pool.len());
+                out.push(pool.swap_remove(j));
+            }
+        }
+        out
+    }
+
+    /// Derive an independent child RNG (for per-thread streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::seeded(self.next_u64())
+    }
+}
+
+/// Zipf distribution over ranks `1..=n` with exponent `s`, using the
+/// classic inverse-CDF-over-precomputed-table method. The paper's
+/// workloads (word frequencies, corpus token draws) are Zipfian.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = *cdf.last().unwrap();
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Sample a 0-based rank (0 = most frequent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of 0-based rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::seeded(11);
+        let mut counts = [0usize; 10];
+        let trials = 100_000;
+        for _ in 0..trials {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            let expect = trials as f64 / 10.0;
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn geometric_kar_matches_pmf() {
+        // P[M=0] = 1/p with p=2 → 0.5.
+        let mut r = Rng::seeded(9);
+        let n = 100_000;
+        let zeros = (0..n).filter(|_| r.geometric_kar(2.0) == 0).count();
+        let frac = zeros as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn unit_vec_has_unit_norm() {
+        let mut r = Rng::seeded(13);
+        let v = r.unit_vec(128);
+        let norm: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sample_distinct_excluding_respects_constraints() {
+        let mut r = Rng::seeded(17);
+        let excl: std::collections::HashSet<usize> = [0, 1, 2, 3].into_iter().collect();
+        let s = r.sample_distinct_excluding(100, 20, |i| excl.contains(&i));
+        assert_eq!(s.len(), 20);
+        let uniq: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(uniq.len(), 20, "duplicates in sample");
+        for i in &s {
+            assert!(!excl.contains(i));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_dense_exclusion_fallback() {
+        let mut r = Rng::seeded(19);
+        // Only 10 candidates remain; ask for all of them.
+        let s = r.sample_distinct_excluding(100, 10, |i| i >= 10);
+        assert_eq!(s.len(), 10);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::seeded(23);
+        let mut head = 0usize;
+        let n = 50_000;
+        for _ in 0..n {
+            if z.sample(&mut r) < 10 {
+                head += 1;
+            }
+        }
+        // Top-10 of a 1000-rank Zipf(1.1) carries a large share of mass.
+        assert!(head as f64 / n as f64 > 0.4, "head mass {}", head as f64 / n as f64);
+    }
+
+    #[test]
+    fn zipf_pmf_sums_to_one() {
+        let z = Zipf::new(500, 1.0);
+        let total: f64 = (0..500).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,129 @@
+//! Data-parallel helpers over `std::thread::scope` (substitute for `rayon`).
+//!
+//! The hot loops in zest (brute-force scoring, table sweeps, index build)
+//! are embarrassingly parallel over disjoint chunks; a scoped fork-join is
+//! all we need — no work stealing, no global pool, no unsafe.
+
+/// Number of worker threads to use: `ZEST_THREADS` or available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("ZEST_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Apply `f(chunk_start, chunk)` over mutable disjoint chunks of `data` in
+/// parallel. Chunks are `data.len() / threads` rounded up.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ci, slice) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * chunk, slice));
+        }
+    });
+}
+
+/// Parallel map over an index range, collecting results in order.
+pub fn par_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+{
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    par_chunks_mut(&mut out, threads, |start, slice| {
+        for (j, slot) in slice.iter_mut().enumerate() {
+            *slot = Some(f(start + j));
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Parallel fold: map each index to a partial value, then reduce partials
+/// sequentially. `f` is applied in per-thread chunks to amortize overhead.
+pub fn par_fold<A: Send, F, G>(n: usize, threads: usize, f: F, init: A, g: G) -> A
+where
+    F: Fn(std::ops::Range<usize>) -> A + Sync,
+    G: Fn(A, A) -> A,
+{
+    if n == 0 {
+        return init;
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = n.div_ceil(threads);
+    let partials: Vec<A> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let f = &f;
+            handles.push(s.spawn(move || f(start..end)));
+            start = end;
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    partials.into_iter().fold(init, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_covers_everything() {
+        let mut v = vec![0usize; 1000];
+        par_chunks_mut(&mut v, 7, |start, slice| {
+            for (j, x) in slice.iter_mut().enumerate() {
+                *x = start + j;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, 4, |i| i * i);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn par_fold_sums() {
+        let total = par_fold(
+            10_000,
+            8,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            0u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, 10_000u64 * 9_999 / 2);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _| {});
+        assert_eq!(par_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(par_fold(0, 4, |_| 1, 7, |a, b| a + b), 7);
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = par_map(10, 1, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+}

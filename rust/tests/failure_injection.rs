@@ -1,0 +1,252 @@
+//! Failure-injection tests: the system's behaviour at the edges —
+//! poisoned retrievals, degenerate queries, overload, bad artifacts,
+//! and pathological shapes.
+
+use std::sync::Arc;
+use zest::coordinator::{
+    BackpressurePolicy, BatcherConfig, PartitionService, Request, Router, ServiceConfig,
+    SubmitError,
+};
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::{mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
+use zest::mips::brute::BruteIndex;
+use zest::mips::MipsIndex;
+use zest::oracle::{OracleIndex, RetrievalError};
+use zest::util::rng::Rng;
+
+fn store() -> EmbeddingStore {
+    generate(&SynthConfig {
+        n: 1000,
+        d: 16,
+        ..SynthConfig::tiny()
+    })
+}
+
+/// The paper's pathological case |q| = 0: Z = N exactly; MIMPS must get
+/// it exactly right too (every exp score is 1).
+#[test]
+fn zero_query_gives_exactly_n() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let q = vec![0f32; s.dim()];
+    assert!((index.partition(&q) - s.len() as f64).abs() < 1e-9);
+    let mut rng = Rng::seeded(0);
+    let mut ctx = EstimateContext {
+        store: &s,
+        index: &index,
+        rng: &mut rng,
+    };
+    let z = Mimps::new(50, 50).estimate(&mut ctx, &q);
+    assert!(
+        (z - s.len() as f64).abs() < 1e-6 * s.len() as f64,
+        "MIMPS on zero query: {z}"
+    );
+}
+
+/// NaN queries must not hang or panic the estimators; outputs may be NaN
+/// but the service must stay alive.
+#[test]
+fn nan_query_does_not_wedge_service() {
+    let s = Arc::new(store());
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&s));
+    let svc = PartitionService::start(
+        s.clone(),
+        index,
+        Router::new(Default::default()),
+        ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        None,
+    );
+    let mut bad = vec![0f32; s.dim()];
+    bad[0] = f32::NAN;
+    let r = svc.estimate(Request {
+        query: bad,
+        kind: EstimatorKind::Mimps,
+        k: 10,
+        l: 10,
+    });
+    // Either a response (possibly NaN) or nothing — but not a hang/panic.
+    assert!(r.is_ok());
+    // The service still answers a sane request afterwards.
+    let ok = svc
+        .estimate(Request {
+            query: s.row(0).to_vec(),
+            kind: EstimatorKind::Mimps,
+            k: 10,
+            l: 10,
+        })
+        .unwrap();
+    assert!(ok.z.is_finite());
+    svc.shutdown();
+}
+
+/// A poisoned index that always hides the true top-1 (Table 3's failure
+/// mode as a live index): MIMPS degrades but stays finite and positive.
+#[test]
+fn poisoned_index_degrades_gracefully() {
+    let s = store();
+    let clean = OracleIndex::new(BruteIndex::new(&s));
+    let poisoned = OracleIndex::with_error(BruteIndex::new(&s), RetrievalError::drop_first());
+    let brute = BruteIndex::new(&s);
+    let q = s.row(950).to_vec(); // rare, peaked query
+    let want = brute.partition(&q);
+    let mut rng = Rng::seeded(1);
+    let est = Mimps::new(100, 100);
+    let mut ctx = EstimateContext {
+        store: &s,
+        index: &clean,
+        rng: &mut rng,
+    };
+    let z_clean = est.estimate(&mut ctx, &q);
+    let mut ctx = EstimateContext {
+        store: &s,
+        index: &poisoned,
+        rng: &mut rng,
+    };
+    let z_poisoned = est.estimate(&mut ctx, &q);
+    assert!(z_poisoned.is_finite() && z_poisoned > 0.0);
+    let e_clean = zest::metrics::abs_rel_err_pct(z_clean, want);
+    let e_poisoned = zest::metrics::abs_rel_err_pct(z_poisoned, want);
+    assert!(
+        e_poisoned > e_clean,
+        "poisoning must hurt: {e_clean} vs {e_poisoned}"
+    );
+}
+
+/// k = N (head covers everything): estimators degrade to exact, tail
+/// sampling finds an empty complement without panicking.
+#[test]
+fn head_covering_all_categories() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let q = s.row(1).to_vec();
+    let want = index.partition(&q);
+    let mut rng = Rng::seeded(2);
+    let mut ctx = EstimateContext {
+        store: &s,
+        index: &index,
+        rng: &mut rng,
+    };
+    let z = Mimps::new(s.len(), 100).estimate(&mut ctx, &q);
+    assert!((z - want).abs() < 1e-6 * want);
+}
+
+/// Overloaded shed-policy service rejects but never deadlocks, and all
+/// accepted requests eventually complete.
+#[test]
+fn overload_sheds_but_completes_accepted() {
+    let s = Arc::new(generate(&SynthConfig {
+        n: 3000,
+        d: 32,
+        ..SynthConfig::tiny()
+    }));
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::with_threads(&s, 1));
+    let svc = PartitionService::start(
+        s.clone(),
+        index,
+        Router::new(Default::default()),
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 4,
+            backpressure: BackpressurePolicy::Shed,
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: std::time::Duration::from_micros(500),
+            },
+            ..Default::default()
+        },
+        None,
+    );
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..300 {
+        match svc.submit(Request {
+            query: s.row(i % s.len()).to_vec(),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        }) {
+            Ok(rx) => accepted.push(rx),
+            Err(SubmitError::Overloaded) => shed += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    let done = accepted
+        .into_iter()
+        .filter(|rx| rx.recv().is_ok())
+        .count();
+    assert!(done > 0, "some requests must complete");
+    assert_eq!(
+        svc.metrics().shed as usize, shed,
+        "metrics must count shed load"
+    );
+    svc.shutdown();
+}
+
+/// Corrupt artifacts directory: runtime load fails with a clear error and
+/// no thread leak (join handle returns).
+#[test]
+fn corrupt_artifacts_fail_cleanly() {
+    let dir = std::env::temp_dir().join("zest_corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("meta.json"), "{not json").unwrap();
+    let err = zest::runtime::ArtifactsMeta::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("parse"));
+    std::fs::write(
+        dir.join("meta.json"),
+        r#"{"config": {}, "graphs": {"g": {"file": "missing.hlo.txt", "args": []}}}"#,
+    )
+    .unwrap();
+    let res = zest::runtime::spawn_runtime_thread(dir.clone(), None);
+    assert!(res.is_err(), "missing hlo file must fail load");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Mismatched input shapes are rejected by the runtime with a
+/// descriptive error rather than a crash in XLA.
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = zest::runtime::Runtime::load_subset(&dir, &["partition_chunk"]).unwrap();
+    let err = rt
+        .run(
+            "partition_chunk",
+            &[
+                zest::runtime::HostTensor::f32(vec![0.0; 4], &[2, 2]),
+                zest::runtime::HostTensor::f32(vec![0.0; 2], &[2]),
+            ],
+        )
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shape"), "unhelpful error: {msg}");
+    let err = rt.run("partition_chunk", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("expected"));
+    let err = rt.run("nope", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown graph"));
+}
+
+/// Single-element and single-dimension stores work through the whole
+/// estimator stack.
+#[test]
+fn degenerate_store_shapes() {
+    let s = EmbeddingStore::from_data(1, 1, vec![0.5]).unwrap();
+    let index = BruteIndex::with_threads(&s, 1);
+    let q = vec![2.0f32];
+    let want = (1.0f64).exp(); // exp(0.5 * 2.0)
+    assert!((index.partition(&q) - want).abs() < 1e-6);
+    let mut rng = Rng::seeded(3);
+    let mut ctx = EstimateContext {
+        store: &s,
+        index: &index,
+        rng: &mut rng,
+    };
+    let z = Mimps::new(1, 1).estimate(&mut ctx, &q);
+    assert!((z - want).abs() < 1e-6);
+}

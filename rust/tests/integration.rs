@@ -1,0 +1,235 @@
+//! Cross-module integration tests: PJRT artifacts vs native numerics,
+//! service end-to-end over real indexes, and full experiment smoke runs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use zest::config::Config;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::EstimatorKind;
+use zest::mips::brute::BruteIndex;
+use zest::mips::MipsIndex;
+use zest::runtime::{spawn_runtime_thread, ArtifactsMeta, HostTensor};
+use zest::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("meta.json").exists().then_some(dir)
+}
+
+/// The AOT-compiled Pallas scoring graph must agree with the native Rust
+/// linalg path to float tolerance — the core L1/L2 ⇄ L3 contract.
+#[test]
+fn pjrt_partition_chunk_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    let chunk = meta.config_usize("chunk").unwrap();
+    let d = meta.config_usize("d").unwrap();
+    let store = generate(&SynthConfig {
+        n: chunk,
+        d,
+        ..Default::default()
+    });
+    let mut rng = Rng::seeded(42);
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.2).collect();
+
+    // Native.
+    let mut scores = vec![0f32; chunk];
+    zest::linalg::gemv_blocked(store.data(), chunk, d, &q, &mut scores);
+    let native = zest::linalg::sum_exp(&scores);
+
+    // PJRT.
+    let (rt, join) =
+        spawn_runtime_thread(dir, Some(vec!["partition_chunk".to_string()])).unwrap();
+    let out = rt
+        .run(
+            "partition_chunk",
+            vec![
+                HostTensor::f32(store.data().to_vec(), &[chunk, d]),
+                HostTensor::f32(q, &[d]),
+            ],
+        )
+        .unwrap();
+    let pjrt = out[0].first_f64().unwrap();
+    rt.shutdown();
+    join.join().unwrap();
+
+    let rel = ((pjrt - native) / native).abs();
+    assert!(rel < 1e-4, "pjrt {pjrt} vs native {native} (rel {rel})");
+}
+
+/// score_chunk (per-category exp scores) agrees elementwise with native.
+#[test]
+fn pjrt_score_chunk_matches_native_elementwise() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    let chunk = meta.config_usize("chunk").unwrap();
+    let d = meta.config_usize("d").unwrap();
+    let store = generate(&SynthConfig {
+        n: chunk,
+        d,
+        ..Default::default()
+    });
+    let q = store.row(17).to_vec();
+    let (rt, join) = spawn_runtime_thread(dir, Some(vec!["score_chunk".to_string()])).unwrap();
+    let out = rt
+        .run(
+            "score_chunk",
+            vec![
+                HostTensor::f32(store.data().to_vec(), &[chunk, d]),
+                HostTensor::f32(q.clone(), &[d]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    rt.shutdown();
+    join.join().unwrap();
+    for i in (0..chunk).step_by(997) {
+        let want = (zest::linalg::dot(store.row(i), &q)).exp();
+        let rel = ((got[i] - want) / want.max(1e-20)).abs();
+        assert!(rel < 1e-3, "row {i}: {} vs {want}", got[i]);
+    }
+}
+
+/// Exact requests through the service with a PJRT runtime attached must
+/// match the native brute-force partition (batched artifact path).
+#[test]
+fn service_exact_via_pjrt_matches_native() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let meta = ArtifactsMeta::load(&dir).unwrap();
+    let d = meta.config_usize("d").unwrap();
+    // N not a multiple of chunk exercises the padding correction.
+    let store = Arc::new(generate(&SynthConfig {
+        n: 10_000,
+        d,
+        ..Default::default()
+    }));
+    std::env::set_var("ZEST_ARTIFACTS", dir.to_str().unwrap());
+    let (rt, join) =
+        spawn_runtime_thread(dir.clone(), Some(vec!["score_batch".to_string()])).unwrap();
+    let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&store));
+    let svc = zest::coordinator::PartitionService::start(
+        store.clone(),
+        index,
+        zest::coordinator::Router::new(Default::default()),
+        zest::coordinator::ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        },
+        Some(rt.clone()),
+    );
+    let brute = BruteIndex::new(&store);
+    for qi in [0usize, 5000, 9999] {
+        let q = store.row(qi).to_vec();
+        let want = brute.partition(&q);
+        let resp = svc
+            .estimate(zest::coordinator::Request {
+                query: q,
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+            })
+            .unwrap();
+        let rel = ((resp.z - want) / want).abs();
+        assert!(rel < 1e-3, "qi={qi}: pjrt-exact {} vs {want}", resp.z);
+    }
+    svc.shutdown();
+    rt.shutdown();
+    join.join().unwrap();
+}
+
+/// Service over the k-means tree: MIMPS responses stay within sane error
+/// of the truth for rare queries, under concurrency.
+#[test]
+fn service_mimps_over_tree_index() {
+    let store = Arc::new(generate(&SynthConfig {
+        n: 5_000,
+        d: 32,
+        ..SynthConfig::tiny()
+    }));
+    let index: Arc<dyn MipsIndex> = Arc::new(
+        zest::mips::kmeans_tree::KMeansTreeIndex::build(&store, Default::default()),
+    );
+    let svc = Arc::new(zest::coordinator::PartitionService::start(
+        store.clone(),
+        index,
+        zest::coordinator::Router::new(Default::default()),
+        Default::default(),
+        None,
+    ));
+    let brute = BruteIndex::new(&store);
+    let mut errs = Vec::new();
+    for qi in (4000..5000).step_by(100) {
+        let q = store.row(qi).to_vec();
+        let want = brute.partition(&q);
+        let r = svc
+            .estimate(zest::coordinator::Request {
+                query: q,
+                kind: EstimatorKind::Mimps,
+                k: 100,
+                l: 100,
+            })
+            .unwrap();
+        errs.push(zest::metrics::abs_rel_err_pct(r.z, want));
+    }
+    let mean = zest::metrics::mean(&errs);
+    assert!(mean < 20.0, "service MIMPS mean err {mean}%");
+}
+
+/// Full experiment smoke: tables run end-to-end on a tiny config and
+/// produce well-formed JSON.
+#[test]
+fn experiments_smoke_and_json_wellformed() {
+    let store = generate(&SynthConfig::tiny());
+    let cfg = Config {
+        n: store.len(),
+        d: store.dim(),
+        queries: 20,
+        seeds: 2,
+        k: 200,
+        l: 200,
+        threads: 4,
+        ..Config::smoke()
+    };
+    let t1 = zest::experiments::table1::run(&store, &cfg, &[200]);
+    let j = zest::experiments::table1::to_json(&t1).to_string();
+    assert!(zest::util::json::Json::parse(&j).is_ok());
+    let t3 = zest::experiments::table3::run(&store, &cfg);
+    let j = zest::experiments::table3::to_json(&t3).to_string();
+    assert!(zest::util::json::Json::parse(&j).is_ok());
+    let curves = zest::experiments::figure1::run(
+        &store,
+        &SynthConfig::tiny(),
+        4,
+    );
+    let j = zest::experiments::figure1::to_json(&curves).to_string();
+    assert!(zest::util::json::Json::parse(&j).is_ok());
+}
+
+/// Embedding store round-trips through disk and feeds an index correctly.
+#[test]
+fn store_disk_roundtrip_feeds_index() {
+    let store = generate(&SynthConfig {
+        n: 500,
+        d: 16,
+        ..SynthConfig::tiny()
+    });
+    let dir = std::env::temp_dir().join("zest_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("store.bin");
+    store.save(&path).unwrap();
+    let loaded = zest::data::embeddings::EmbeddingStore::load(&path).unwrap();
+    let a = BruteIndex::new(&store);
+    let b = BruteIndex::new(&loaded);
+    let q = store.row(3).to_vec();
+    assert_eq!(a.top_k(&q, 10), b.top_k(&q, 10));
+    std::fs::remove_file(path).ok();
+}

@@ -1,0 +1,299 @@
+//! Property-based tests (via the `testing::prop` substrate) over the
+//! crate's core invariants. Each property runs many seeded random cases;
+//! failures report the reproducing seed.
+
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::{
+    mimps::Mimps, mince, nmimps::Nmimps, uniform::Uniform, EstimateContext, Estimator,
+};
+use zest::linalg;
+use zest::mips::brute::BruteIndex;
+use zest::mips::transform::MipsTransform;
+use zest::mips::{select_top_k, MipsIndex};
+use zest::testing::prop::{assert_close, check};
+use zest::util::rng::Rng;
+
+fn random_store(rng: &mut Rng, max_n: usize, max_d: usize) -> EmbeddingStore {
+    let n = rng.range(8, max_n);
+    let d = rng.range(2, max_d);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32 * 0.5).collect();
+    EmbeddingStore::from_data(n, d, data).unwrap()
+}
+
+/// MIMPS with k + l ≥ N is exact for any store and query.
+#[test]
+fn prop_mimps_exact_when_budget_covers_n() {
+    check(40, |rng| {
+        let store = random_store(rng, 120, 24);
+        let n = store.len();
+        let index = BruteIndex::with_threads(&store, 1);
+        let q = store.row(rng.below(n)).to_vec();
+        let want = index.partition(&q);
+        let k = rng.range(1, n);
+        let l = n - k;
+        let mut ctx = EstimateContext {
+            store: &store,
+            index: &index,
+            rng,
+        };
+        let z = Mimps::new(k, l).estimate(&mut ctx, &q);
+        assert_close(z, want, 1e-5, "MIMPS with full budget")
+    });
+}
+
+/// NMIMPS is monotone in k and bounded above by Z.
+#[test]
+fn prop_nmimps_monotone_and_bounded() {
+    check(40, |rng| {
+        let store = random_store(rng, 150, 16);
+        let index = BruteIndex::with_threads(&store, 1);
+        let q = store.row(0).to_vec();
+        let z = index.partition(&q);
+        let mut prev = 0.0;
+        for frac in [1usize, 4, 16] {
+            let k = (store.len() / frac).max(1);
+            let mut ctx = EstimateContext {
+                store: &store,
+                index: &index,
+                rng,
+            };
+            let est = Nmimps::new(k).estimate(&mut ctx, &q);
+            if est > z * (1.0 + 1e-5) {
+                return Err(format!("NMIMPS {est} exceeds Z {z}"));
+            }
+            // fracs iterate k descending, so est should also descend.
+            if frac > 1 && est > prev * (1.0 + 1e-5) {
+                return Err(format!("NMIMPS not monotone: {est} > {prev}"));
+            }
+            prev = est;
+        }
+        Ok(())
+    });
+}
+
+/// Estimators are invariant under permutation of the category set
+/// (same estimate distribution — tested via exactness-preserving cases:
+/// full-budget MIMPS, which must give identical Z on permuted stores).
+#[test]
+fn prop_category_permutation_invariance() {
+    check(25, |rng| {
+        let store = random_store(rng, 80, 12);
+        let n = store.len();
+        let d = store.dim();
+        // Build a permuted copy.
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let mut data = vec![0f32; n * d];
+        for (new_i, &old_i) in perm.iter().enumerate() {
+            data[new_i * d..(new_i + 1) * d].copy_from_slice(store.row(old_i));
+        }
+        let permuted = EmbeddingStore::from_data(n, d, data).unwrap();
+        let q = store.row(0).to_vec();
+        let a = BruteIndex::with_threads(&store, 1).partition(&q);
+        let b = BruteIndex::with_threads(&permuted, 1).partition(&q);
+        assert_close(a, b, 1e-9, "Z under permutation")
+    });
+}
+
+/// The Bachrach lift preserves inner-product order exactly.
+#[test]
+fn prop_transform_preserves_order() {
+    check(30, |rng| {
+        let store = random_store(rng, 100, 16);
+        let t = MipsTransform::lift(&store);
+        let q = rng.normal_vec(store.dim());
+        let lq = t.lift_query(&q);
+        // Top-5 by inner product == bottom-5 by lifted distance.
+        let mut scores: Vec<f32> = (0..store.len())
+            .map(|i| linalg::dot(store.row(i), &q))
+            .collect();
+        let top = select_top_k(&scores, 5);
+        let mut by_dist: Vec<(usize, f32)> = (0..store.len())
+            .map(|i| (i, linalg::dist_sq(t.row(i), &lq)))
+            .collect();
+        by_dist.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        for (h, (i, _)) in top.iter().zip(by_dist.iter()) {
+            if h.idx != *i {
+                // Allow swaps only between float-tied scores.
+                let s_a = scores[h.idx];
+                let s_b = scores[*i];
+                if (s_a - s_b).abs() > 1e-5 * (1.0 + s_a.abs()) {
+                    return Err(format!(
+                        "order violated: ip-rank {} vs dist-rank {}",
+                        h.idx, i
+                    ));
+                }
+            }
+        }
+        scores.clear();
+        Ok(())
+    });
+}
+
+/// select_top_k returns a sorted prefix of the full descending sort.
+#[test]
+fn prop_select_top_k_is_sorted_prefix() {
+    check(60, |rng| {
+        let n = rng.range(1, 400);
+        let scores: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let k = rng.range(0, n + 1);
+        let hits = select_top_k(&scores, k);
+        if hits.len() != k.min(n) {
+            return Err(format!("wrong count {} for k={k} n={n}", hits.len()));
+        }
+        let mut sorted: Vec<f32> = scores.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        for (h, want) in hits.iter().zip(sorted.iter()) {
+            if (h.score - want).abs() > 0.0 {
+                return Err(format!("hit {} != sorted {}", h.score, want));
+            }
+        }
+        for w in hits.windows(2) {
+            if w[1].score > w[0].score {
+                return Err("descending order violated".to_string());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The MINCE solver always lands on a stationary point with positive Z,
+/// for arbitrary positive score scales, under both Newton and Halley.
+#[test]
+fn prop_mince_solver_stationary() {
+    check(50, |rng| {
+        let k = rng.range(1, 40);
+        let l = rng.range(1, 80);
+        let scale = (rng.normal() * 4.0).exp();
+        let a: Vec<f64> = (0..k).map(|_| (rng.normal()).exp() * scale * 10.0).collect();
+        let b: Vec<f64> = (0..l).map(|_| (rng.normal()).exp() * scale).collect();
+        for solver in [mince::Solver::Newton, mince::Solver::Halley] {
+            let r = mince::solve(&a, &b, a.iter().sum(), solver);
+            if !(r.z.is_finite() && r.z > 0.0) {
+                return Err(format!("{solver:?}: bad root {}", r.z));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Uniform estimator: sampling all N categories without replacement is
+/// exact regardless of data.
+#[test]
+fn prop_uniform_full_sample_exact() {
+    check(30, |rng| {
+        let store = random_store(rng, 60, 10);
+        let index = BruteIndex::with_threads(&store, 1);
+        let q = store.row(rng.below(store.len())).to_vec();
+        let want = index.partition(&q);
+        let mut ctx = EstimateContext {
+            store: &store,
+            index: &index,
+            rng,
+        };
+        let z = Uniform::new(store.len()).estimate(&mut ctx, &q);
+        assert_close(z, want, 1e-5, "Uniform(l=N)")
+    });
+}
+
+/// Tail samples never collide with the head and never repeat — for any
+/// head size, tail size, and store.
+#[test]
+fn prop_tail_sampling_disjoint_distinct() {
+    check(50, |rng| {
+        let store = random_store(rng, 200, 8);
+        let index = BruteIndex::with_threads(&store, 1);
+        let q = store.row(0).to_vec();
+        let k = rng.range(0, store.len());
+        let head = index.top_k(&q, k);
+        let l = rng.range(0, store.len() + 10);
+        let sample = zest::estimators::tail::sample_tail(&store, &head, l, &q, rng);
+        let head_set: std::collections::HashSet<usize> = head.iter().map(|h| h.idx).collect();
+        let mut seen = std::collections::HashSet::new();
+        for &i in &sample.indices {
+            if head_set.contains(&i) {
+                return Err(format!("tail index {i} is in the head"));
+            }
+            if !seen.insert(i) {
+                return Err(format!("duplicate tail index {i}"));
+            }
+        }
+        let expect = l.min(store.len() - head.len());
+        if sample.indices.len() != expect {
+            return Err(format!(
+                "tail size {} != expected {expect}",
+                sample.indices.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// gemv_blocked == gemv == per-row dot for arbitrary shapes.
+#[test]
+fn prop_gemv_variants_agree() {
+    check(50, |rng| {
+        let rows = rng.range(1, 70);
+        let d = rng.range(1, 70);
+        let m: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut a = vec![0f32; rows];
+        let mut b = vec![0f32; rows];
+        linalg::gemv(&m, rows, d, &q, &mut a);
+        linalg::gemv_blocked(&m, rows, d, &q, &mut b);
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            if (x - y).abs() > 1e-3 * (1.0 + x.abs()) {
+                return Err(format!("row {i}: {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Store save/load round-trips bit-exactly for random contents.
+#[test]
+fn prop_store_roundtrip_bit_exact() {
+    let dir = std::env::temp_dir().join("zest_prop_store");
+    std::fs::create_dir_all(&dir).unwrap();
+    check(15, |rng| {
+        let store = random_store(rng, 60, 20);
+        let path = dir.join(format!("s{}.bin", rng.next_u64()));
+        store.save(&path).map_err(|e| e.to_string())?;
+        let loaded = EmbeddingStore::load(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        if loaded != store {
+            return Err("roundtrip mismatch".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// K-means-tree search with full budget equals brute top-k for any store.
+#[test]
+fn prop_tree_full_budget_exact() {
+    check(10, |rng| {
+        let store = random_store(rng, 400, 12);
+        let tree = zest::mips::kmeans_tree::KMeansTreeIndex::build(
+            &store,
+            zest::mips::kmeans_tree::KMeansTreeConfig {
+                branching: 4,
+                leaf_size: 8,
+                ..Default::default()
+            },
+        );
+        let brute = BruteIndex::with_threads(&store, 1);
+        let q = store.row(rng.below(store.len())).to_vec();
+        let (hits, _) = tree.search_with_budget(&q, 5, store.len());
+        let want = brute.top_k(&q, 5);
+        for (h, w) in hits.iter().zip(&want) {
+            if (h.score - w.score).abs() > 1e-5 {
+                return Err(format!("tree {} vs brute {}", h.score, w.score));
+            }
+        }
+        Ok(())
+    });
+}
