@@ -41,11 +41,7 @@ fn main() {
     ];
     println!("{:<22} {:>16} {:>8} {:>9}", "estimator", "Z-hat", "err %", "scorings");
     for est in estimators {
-        let mut ctx = EstimateContext {
-            store: &store,
-            index: &tree,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&store, &tree, &mut rng);
         let z = est.estimate(&mut ctx, &q);
         println!(
             "{:<22} {:>16.3} {:>8.2} {:>9}",

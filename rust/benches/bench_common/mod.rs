@@ -23,6 +23,9 @@ pub fn env() -> BenchEnv {
     let (n, d) = match scale.as_str() {
         "paper" => (100_000, 300),
         "mid" => (30_000, 128),
+        // CI smoke scale: small enough for a shared runner, big enough
+        // that the batched-vs-single comparison is still meaningful.
+        "small" => (2_000, 32),
         _ => (10_000, 64),
     };
     let queries = std::env::var("ZEST_QUERIES")

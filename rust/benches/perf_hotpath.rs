@@ -1,10 +1,17 @@
 //! Hot-path micro/macro benchmarks for the §Perf pass:
 //!
+//! * SIMD-vs-scalar kernel comparison (blocked GEMV / multi-query GEMM)
+//!   at the detected backend,
 //! * brute-force partition throughput (the O(N·d) baseline),
+//! * **batched vs single-query** brute partition over a 64-query block —
+//!   the tentpole comparison for the batched scoring engine,
+//! * batched vs single top-k retrieval,
 //! * MIMPS end-to-end latency through the k-means tree,
-//! * tree search alone,
 //! * PJRT chunked scoring (artifact path) vs native linalg,
-//! * service round-trip overhead vs direct estimator call.
+//! * service round-trip overhead and batched service throughput.
+//!
+//! Writes the headline numbers to `BENCH_perf_hotpath.json` (package
+//! root) and the full record to `results/perf_hotpath_<scale>.json`.
 
 mod bench_common;
 
@@ -12,20 +19,90 @@ use std::sync::Arc;
 use zest::bench::harness::time;
 use zest::coordinator::{PartitionService, Request, Router, ServiceConfig};
 use zest::estimators::{mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
+use zest::linalg;
 use zest::mips::brute::BruteIndex;
 use zest::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
 use zest::mips::MipsIndex;
 use zest::runtime::HostTensor;
+use zest::util::json::Json;
 use zest::util::rng::Rng;
+
+const BATCH: usize = 64;
 
 fn main() {
     let env = bench_common::env();
     let store = bench_common::store(&env);
     let n = store.len();
     let d = store.dim();
-    println!("== perf_hotpath (scale={}, N={n}, d={d}) ==", env.scale);
+    println!(
+        "== perf_hotpath (scale={}, N={n}, d={d}, backend={}) ==",
+        env.scale,
+        linalg::backend()
+    );
     let mut rng = Rng::seeded(7);
-    let queries: Vec<Vec<f32>> = (0..64).map(|i| store.row(i * (n / 64)).to_vec()).collect();
+    let queries: Vec<Vec<f32>> = (0..BATCH)
+        .map(|i| store.row(i * (n / BATCH)).to_vec())
+        .collect();
+    let mut record: Vec<(&str, Json)> = vec![
+        ("scale", Json::str(&env.scale)),
+        ("n", Json::num(n as f64)),
+        ("d", Json::num(d as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("backend", Json::str(&linalg::backend().to_string())),
+        (
+            "threads",
+            Json::num(zest::util::threadpool::default_threads() as f64),
+        ),
+    ];
+
+    // 0. SIMD-vs-scalar kernels on one cache-warm chunk. On non-AVX2
+    //    hosts both paths run the scalar code and the ratio is ~1.
+    let rows = 4096.min(n);
+    let chunk = store.rows(0, rows);
+    let q0 = queries[0].clone();
+    let mut out = vec![0f32; rows];
+    let t_gemv = time(3, 50, || {
+        linalg::gemv_blocked(chunk, rows, d, &q0, &mut out);
+        std::hint::black_box(&out);
+    });
+    let t_gemv_scalar = time(3, 50, || {
+        linalg::scalar::gemv_blocked(chunk, rows, d, &q0, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!("gemv dispatch   : {t_gemv}");
+    println!(
+        "gemv scalar     : {t_gemv_scalar}  => simd speedup {:.2}x",
+        t_gemv_scalar.mean_secs() / t_gemv.mean_secs()
+    );
+    let nq_tile = 16;
+    let mut qs_flat = Vec::with_capacity(nq_tile * d);
+    for q in queries.iter().take(nq_tile) {
+        qs_flat.extend_from_slice(q);
+    }
+    let mut gout = vec![0f32; rows * nq_tile];
+    let t_gemm = time(2, 20, || {
+        linalg::gemm(chunk, rows, d, &qs_flat, nq_tile, &mut gout);
+        std::hint::black_box(&gout);
+    });
+    let t_gemm_scalar = time(2, 20, || {
+        linalg::scalar::gemm(chunk, rows, d, &qs_flat, nq_tile, &mut gout);
+        std::hint::black_box(&gout);
+    });
+    println!("gemm({nq_tile}q) dispatch: {t_gemm}");
+    println!(
+        "gemm({nq_tile}q) scalar  : {t_gemm_scalar}  => simd speedup {:.2}x",
+        t_gemm_scalar.mean_secs() / t_gemm.mean_secs()
+    );
+    // Per-query cost inside the GEMM: each streamed row is amortized
+    // over the whole query tile.
+    println!(
+        "gemm per-query  : {:.1}% of one gemv pass",
+        100.0 * t_gemm.mean_secs() / nq_tile as f64 / t_gemv.mean_secs()
+    );
+    record.push(("gemv_dispatch_s", Json::num(t_gemv.mean_secs())));
+    record.push(("gemv_scalar_s", Json::num(t_gemv_scalar.mean_secs())));
+    record.push(("gemm_dispatch_s", Json::num(t_gemm.mean_secs())));
+    record.push(("gemm_scalar_s", Json::num(t_gemm_scalar.mean_secs())));
 
     // 1. Brute-force partition (multithreaded).
     let brute = BruteIndex::new(&store);
@@ -40,6 +117,52 @@ fn main() {
         "brute partition : {t}  ({:.2} GFLOP/s effective)",
         flops / t.mean_secs() / 1e9
     );
+    record.push(("brute_partition_s", Json::num(t.mean_secs())));
+
+    // 1b. Batched vs single-query partition over the 64-query block: the
+    //     single path re-streams the N×d matrix once per query; the
+    //     batched path streams it once per *batch* through the 4×4 GEMM
+    //     micro-kernel. This is the tentpole number (target ≥ 2x).
+    let t_single64 = time(1, 5, || {
+        for q in &queries {
+            std::hint::black_box(brute.partition(q));
+        }
+    });
+    let t_batch64 = time(1, 5, || {
+        std::hint::black_box(brute.partition_batch(&queries));
+    });
+    let batched_speedup = t_single64.mean_secs() / t_batch64.mean_secs();
+    println!("partition x{BATCH} single : {t_single64}");
+    println!(
+        "partition x{BATCH} batched: {t_batch64}  => batched speedup {batched_speedup:.2}x \
+         ({:.0} q/s)",
+        BATCH as f64 / t_batch64.mean_secs()
+    );
+    record.push(("partition_single64_s", Json::num(t_single64.mean_secs())));
+    record.push(("partition_batch64_s", Json::num(t_batch64.mean_secs())));
+    record.push(("batched_speedup", Json::num(batched_speedup)));
+    record.push((
+        "batched_qps",
+        Json::num(BATCH as f64 / t_batch64.mean_secs()),
+    ));
+
+    // 1c. Batched top-k retrieval (one GEMM scoring pass + per-query
+    //     selection) vs a per-query loop.
+    let t_topk_single = time(1, 3, || {
+        for q in &queries {
+            std::hint::black_box(brute.top_k(q, 100));
+        }
+    });
+    let t_topk_batch = time(1, 3, || {
+        std::hint::black_box(brute.top_k_batch(&queries, 100));
+    });
+    println!("top-100 x{BATCH} single : {t_topk_single}");
+    println!(
+        "top-100 x{BATCH} batched: {t_topk_batch}  => speedup {:.2}x",
+        t_topk_single.mean_secs() / t_topk_batch.mean_secs()
+    );
+    record.push(("topk_single64_s", Json::num(t_topk_single.mean_secs())));
+    record.push(("topk_batch64_s", Json::num(t_topk_batch.mean_secs())));
 
     // 2. Tree search alone (k=100, default probes).
     let tree = KMeansTreeIndex::build(&store, KMeansTreeConfig::default());
@@ -51,20 +174,26 @@ fn main() {
     });
     println!("tree top-100    : {t}");
 
-    // 3. MIMPS end-to-end through the tree.
+    // 3. MIMPS end-to-end through the tree: single loop vs estimate_batch.
     let est = Mimps::new(100, 100);
     let mut qi = 0;
     let t_mips = time(3, 100, || {
         let q = &queries[qi % queries.len()];
         qi += 1;
-        let mut ctx = EstimateContext {
-            store: &store,
-            index: &tree,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&store, &tree, &mut rng);
         std::hint::black_box(est.estimate(&mut ctx, q));
     });
     println!("MIMPS(100,100)  : {t_mips}");
+    let t_mips_batch = time(1, 5, || {
+        let mut ctx = EstimateContext::new(&store, &tree, &mut rng);
+        std::hint::black_box(est.estimate_batch(&mut ctx, &queries));
+    });
+    println!(
+        "MIMPS x{BATCH} batched : {t_mips_batch}  => {:.2}x vs single loop",
+        t_mips.mean_secs() * BATCH as f64 / t_mips_batch.mean_secs()
+    );
+    record.push(("mimps_single_s", Json::num(t_mips.mean_secs())));
+    record.push(("mimps_batch64_s", Json::num(t_mips_batch.mean_secs())));
 
     // 4. Single-thread brute (per-query latency basis for speedup).
     let brute1 = BruteIndex::with_threads(&store, 1);
@@ -120,7 +249,8 @@ fn main() {
         }
     }
 
-    // 6. Service round-trip overhead.
+    // 6. Service: round-trip latency, then batched throughput under a
+    //    concurrent flood (the batcher drains bursts into estimate_batch).
     let store_arc = Arc::new(store);
     let index: Arc<dyn MipsIndex> =
         Arc::new(KMeansTreeIndex::build(&store_arc, KMeansTreeConfig::default()));
@@ -149,6 +279,35 @@ fn main() {
         "service rtt     : {t_svc}  (overhead vs direct: {:.0}%)",
         100.0 * (t_svc.mean_secs() - t_mips.mean_secs()) / t_mips.mean_secs()
     );
-    println!("{}", svc.metrics());
+    let flood = 512usize;
+    let t0 = std::time::Instant::now();
+    let receivers: Vec<_> = (0..flood)
+        .map(|i| {
+            svc.submit(Request {
+                query: queries[i % queries.len()].clone(),
+                kind: EstimatorKind::Mimps,
+                k: 100,
+                l: 100,
+            })
+            .unwrap()
+        })
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap();
+    }
+    let flood_secs = t0.elapsed().as_secs_f64();
+    let svc_qps = flood as f64 / flood_secs.max(1e-12);
+    println!("service flood   : {flood} reqs in {flood_secs:.3}s => {svc_qps:.0} q/s");
+    let m = svc.metrics();
+    println!("{m}");
+    record.push(("service_rtt_s", Json::num(t_svc.mean_secs())));
+    record.push(("service_flood_qps", Json::num(svc_qps)));
+    record.push(("service_mean_batch", Json::num(m.mean_batch_size)));
+    record.push(("service_batch_rps", Json::num(m.batch_throughput_rps)));
     svc.shutdown();
+
+    let json = Json::obj(record);
+    std::fs::write("BENCH_perf_hotpath.json", json.to_string()).ok();
+    println!("(json: BENCH_perf_hotpath.json)");
+    bench_common::write_json(&env, "perf_hotpath", &json);
 }

@@ -13,7 +13,16 @@ pub struct ServiceMetrics {
     shed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
-    /// Nanosecond latency samples (bounded reservoir).
+    /// Wall-clock nanoseconds spent executing batches (not queueing) and
+    /// the requests those executions completed — together they give the
+    /// per-batch throughput the §Perf pass tracks.
+    batch_exec_ns: AtomicU64,
+    batch_exec_requests: AtomicU64,
+    /// Nanosecond latency samples (bounded reservoir). `exec_ns` records
+    /// the *batch-group* execution time once per completed request (all
+    /// members of a group share one `estimate_batch` call), so exec
+    /// percentiles reflect batch latency, not per-request CPU share —
+    /// divide by `mean_batch_size` for a per-request view.
     queue_ns: Mutex<Vec<u64>>,
     exec_ns: Mutex<Vec<u64>>,
 }
@@ -36,6 +45,15 @@ impl ServiceMetrics {
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
+            .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch group: `size` requests answered by a
+    /// single `estimate_batch` call that took `exec` wall-clock time.
+    pub fn on_batch_executed(&self, size: usize, exec: Duration) {
+        self.batch_exec_ns
+            .fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+        self.batch_exec_requests
             .fetch_add(size as u64, Ordering::Relaxed);
     }
 
@@ -75,6 +93,15 @@ impl ServiceMetrics {
                     self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
                 }
             },
+            batch_throughput_rps: {
+                let ns = self.batch_exec_ns.load(Ordering::Relaxed);
+                if ns == 0 {
+                    0.0
+                } else {
+                    self.batch_exec_requests.load(Ordering::Relaxed) as f64
+                        / (ns as f64 / 1e9)
+                }
+            },
             queue_p50: pct(&self.queue_ns, 0.50),
             queue_p95: pct(&self.queue_ns, 0.95),
             exec_p50: pct(&self.exec_ns, 0.50),
@@ -91,6 +118,9 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
+    /// Requests per second across executed batch groups (execution time
+    /// only — queue wait excluded). 0.0 until a batch has executed.
+    pub batch_throughput_rps: f64,
     pub queue_p50: Duration,
     pub queue_p95: Duration,
     pub exec_p50: Duration,
@@ -102,12 +132,13 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "submitted={} completed={} shed={} batches={} mean_batch={:.1} \
-             queue_p50={:?} queue_p95={:?} exec_p50={:?} exec_p95={:?}",
+             batch_rps={:.0} queue_p50={:?} queue_p95={:?} exec_p50={:?} exec_p95={:?}",
             self.submitted,
             self.completed,
             self.shed,
             self.batches,
             self.mean_batch_size,
+            self.batch_throughput_rps,
             self.queue_p50,
             self.queue_p95,
             self.exec_p50,
@@ -138,10 +169,25 @@ mod tests {
     }
 
     #[test]
+    fn batch_throughput_counts_only_exec_time() {
+        let m = ServiceMetrics::new();
+        // 64 requests in 100 ms + 36 in 100 ms → 100 req / 0.2 s = 500 rps.
+        m.on_batch_executed(64, Duration::from_millis(100));
+        m.on_batch_executed(36, Duration::from_millis(100));
+        let s = m.snapshot();
+        assert!(
+            (s.batch_throughput_rps - 500.0).abs() < 1.0,
+            "rps {}",
+            s.batch_throughput_rps
+        );
+    }
+
+    #[test]
     fn empty_snapshot_is_zeroed() {
         let s = ServiceMetrics::new().snapshot();
         assert_eq!(s.completed, 0);
         assert_eq!(s.queue_p95, Duration::ZERO);
         assert_eq!(s.mean_batch_size, 0.0);
+        assert_eq!(s.batch_throughput_rps, 0.0);
     }
 }

@@ -3,11 +3,13 @@
 //! Shape (vLLM-router-like, scaled to this paper): requests — (query
 //! vector, estimator kind, k, l) — enter a **bounded** queue; a batcher
 //! thread drains it under a max-batch/max-delay policy and groups
-//! requests by estimator kind; a worker pool retrieves `S_k` from the
-//! MIPS index and combines head + tail into Ẑ; `Exact` requests ride the
-//! AOT-compiled PJRT `score_batch` artifact when a runtime is attached
-//! (the brute-force path is the one worth batching — it's the only
-//! O(N·d) one). Metrics track queue wait, execution time and shed load.
+//! requests by estimator kind; a worker pool executes each drained
+//! batch as **one** `Estimator::estimate_batch` call per (k, l) group —
+//! a single batched retrieval/scoring pass (multi-query GEMM on the
+//! brute index) instead of a per-request loop. `Exact` requests ride
+//! the AOT-compiled PJRT `score_batch` artifact when a runtime is
+//! attached. Metrics track queue wait, execution time, shed load, and
+//! per-batch execution throughput.
 
 pub mod batcher;
 pub mod metrics;

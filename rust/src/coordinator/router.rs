@@ -37,7 +37,7 @@ impl Router {
         q: &[f32],
         rng: &mut Rng,
     ) -> f64 {
-        let mut ctx = EstimateContext { store, index, rng };
+        let mut ctx = EstimateContext::new(store, index, rng);
         match kind {
             EstimatorKind::Exact => Exact.estimate(&mut ctx, q),
             EstimatorKind::Uniform => Uniform::new(l).estimate(&mut ctx, q),
@@ -49,6 +49,36 @@ impl Router {
                     .fmbe
                     .get_or_init(|| Fmbe::fit(store, self.fmbe_cfg.clone()));
                 fmbe.estimate(&mut ctx, q)
+            }
+        }
+    }
+
+    /// Batched variant of [`Router::estimate`]: one estimator instance
+    /// serves the whole same-(kind, k, l) query block through
+    /// `Estimator::estimate_batch`, which shares a single retrieval /
+    /// scoring pass on batch-aware estimators. Results are in `qs` order.
+    pub fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        k: usize,
+        l: usize,
+        store: &EmbeddingStore,
+        index: &dyn MipsIndex,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let mut ctx = EstimateContext::new(store, index, rng);
+        match kind {
+            EstimatorKind::Exact => Exact.estimate_batch(&mut ctx, qs),
+            EstimatorKind::Uniform => Uniform::new(l).estimate_batch(&mut ctx, qs),
+            EstimatorKind::Nmimps => Nmimps::new(k).estimate_batch(&mut ctx, qs),
+            EstimatorKind::Mimps => Mimps::new(k, l).estimate_batch(&mut ctx, qs),
+            EstimatorKind::Mince => Mince::new(k, l).estimate_batch(&mut ctx, qs),
+            EstimatorKind::Fmbe => {
+                let fmbe = self
+                    .fmbe
+                    .get_or_init(|| Fmbe::fit(store, self.fmbe_cfg.clone()));
+                fmbe.estimate_batch(&mut ctx, qs)
             }
         }
     }

@@ -27,7 +27,13 @@ pub struct Request {
 pub struct Response {
     pub z: f64,
     pub kind: EstimatorKind,
+    /// Time from submission until this request's batch group started
+    /// executing (includes any earlier groups of the same drained batch).
     pub queue_wait: std::time::Duration,
+    /// Execution time of the **batch group** that answered this request
+    /// — requests batched together share one `estimate_batch` call, so
+    /// they all report the same (shared) execution time, not a
+    /// per-request slice of it.
     pub exec_time: std::time::Duration,
     /// Category scorings this request cost (sublinearity accounting).
     pub scorings: usize,
@@ -192,29 +198,49 @@ impl PartitionService {
             }
         }
         let n = ctx.store.len();
+        // The batcher guarantees one kind per batch; sub-group by the
+        // (k, l) hyper-parameters so each group maps onto one estimator
+        // instance and is answered by a single `estimate_batch` call —
+        // one shared retrieval/scoring pass instead of a per-request
+        // loop. Order within a group is preserved; in practice a batch
+        // is one group (clients of a kind use one configuration).
+        let mut groups: Vec<((usize, usize), Vec<QueuedRequest>)> = Vec::new();
         for qr in batch.requests {
+            let key = (qr.request.k, qr.request.l);
+            match groups.iter_mut().find(|(g, _)| *g == key) {
+                Some((_, v)) => v.push(qr),
+                None => groups.push((key, vec![qr])),
+            }
+        }
+        for ((k, l), mut reqs) in groups {
             let started = Instant::now();
-            let z = ctx.router.estimate(
-                qr.request.kind,
-                qr.request.k,
-                qr.request.l,
+            let qs: Vec<Vec<f32>> = reqs
+                .iter_mut()
+                .map(|qr| std::mem::take(&mut qr.request.query))
+                .collect();
+            let zs = ctx.router.estimate_batch(
+                batch.kind,
+                k,
+                l,
                 &ctx.store,
                 ctx.index.as_ref(),
-                &qr.request.query,
+                &qs,
                 rng,
             );
             let exec = started.elapsed();
-            let queue_wait = started.duration_since(qr.enqueued);
-            ctx.metrics.on_complete(queue_wait, exec);
-            let _ = qr.reply.send(Response {
-                z,
-                kind: qr.request.kind,
-                queue_wait,
-                exec_time: exec,
-                scorings: ctx
-                    .router
-                    .scorings(qr.request.kind, qr.request.k, qr.request.l, n),
-            });
+            ctx.metrics.on_batch_executed(reqs.len(), exec);
+            let scorings = ctx.router.scorings(batch.kind, k, l, n);
+            for (qr, z) in reqs.into_iter().zip(zs) {
+                let queue_wait = started.duration_since(qr.enqueued);
+                ctx.metrics.on_complete(queue_wait, exec);
+                let _ = qr.reply.send(Response {
+                    z,
+                    kind: batch.kind,
+                    queue_wait,
+                    exec_time: exec,
+                    scorings,
+                });
+            }
         }
     }
 
@@ -266,6 +292,7 @@ impl PartitionService {
             }
         }
         let exec = started.elapsed();
+        ctx.metrics.on_batch_executed(reqs.len(), exec);
         for (qr, z) in reqs.iter().zip(zs) {
             let queue_wait = started.duration_since(qr.enqueued);
             ctx.metrics.on_complete(queue_wait, exec);
@@ -349,7 +376,10 @@ mod tests {
     use crate::estimators::fmbe::FmbeConfig;
     use crate::mips::brute::BruteIndex;
 
-    fn start_service(policy: BackpressurePolicy, capacity: usize) -> (PartitionService, Arc<EmbeddingStore>) {
+    fn start_service(
+        policy: BackpressurePolicy,
+        capacity: usize,
+    ) -> (PartitionService, Arc<EmbeddingStore>) {
         let store = Arc::new(generate(&SynthConfig {
             n: 500,
             d: 16,
@@ -424,7 +454,47 @@ mod tests {
         assert_eq!(m.completed, 100);
         assert_eq!(m.shed, 0);
         assert!(m.batches >= 1);
+        assert!(
+            m.batch_throughput_rps > 0.0,
+            "batched execution must record throughput"
+        );
         Arc::try_unwrap(svc).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn mixed_hyperparams_in_one_batch_answer_independently() {
+        // Two different (k, l) configs of one kind may share a drained
+        // batch; the (k, l) grouping must answer each with its own
+        // estimator instance.
+        let (svc, store) = start_service(BackpressurePolicy::Block, 64);
+        let q = store.row(10).to_vec();
+        let rx_a = svc
+            .submit(Request {
+                query: q.clone(),
+                kind: EstimatorKind::Nmimps,
+                k: 50,
+                l: 0,
+            })
+            .unwrap();
+        let rx_b = svc
+            .submit(Request {
+                query: q,
+                kind: EstimatorKind::Nmimps,
+                k: 500,
+                l: 0,
+            })
+            .unwrap();
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.scorings, 50);
+        assert_eq!(b.scorings, 500);
+        assert!(
+            a.z <= b.z,
+            "NMIMPS head sum grows with k: {} vs {}",
+            a.z,
+            b.z
+        );
+        svc.shutdown();
     }
 
     #[test]

@@ -220,7 +220,7 @@ mod tests {
         let need = |qi: usize| -> usize {
             let q = s.row(qi);
             let mut scores = vec![0f32; s.len()];
-            linalg::gemv(s.data(), s.len(), s.dim(), q, &mut scores);
+            linalg::gemv_blocked(s.data(), s.len(), s.dim(), q, &mut scores);
             let mut e: Vec<f64> = scores.iter().map(|&x| (x as f64).exp()).collect();
             e.sort_by(|a, b| b.partial_cmp(a).unwrap());
             let z: f64 = e.iter().sum();

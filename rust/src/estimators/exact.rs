@@ -15,11 +15,26 @@ impl Estimator for Exact {
 
     fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
         let store = ctx.store;
-        let mut z = 0f64;
-        for i in 0..store.len() {
-            z += (linalg::dot(store.row(i), q) as f64).exp();
+        linalg::exp_sum_gemv(store.data(), store.len(), store.dim(), q)
+    }
+
+    /// Batched exact: stream the category matrix once through the fused
+    /// multi-query exp-sum GEMM so each streamed row is reused across
+    /// all `qs` instead of re-read per query. Runs on the caller's
+    /// thread — request-level parallelism comes from the coordinator's
+    /// worker pool (`BruteIndex::partition_batch` is the data-parallel
+    /// variant).
+    fn estimate_batch(&self, ctx: &mut EstimateContext<'_>, qs: &[Vec<f32>]) -> Vec<f64> {
+        let store = ctx.store;
+        let (n, d) = (store.len(), store.dim());
+        let nq = qs.len();
+        if nq == 0 {
+            return vec![];
         }
-        z
+        let qs_flat = linalg::flatten_queries(qs, d);
+        let mut zs = vec![0f64; nq];
+        linalg::exp_sum_gemm(store.data(), n, d, &qs_flat, nq, &mut zs);
+        zs
     }
 
     fn scorings(&self, n: usize) -> usize {
@@ -44,13 +59,47 @@ mod tests {
         let brute = BruteIndex::new(&s);
         let mut rng = Rng::seeded(0);
         let q = s.row(17).to_vec();
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = Exact.estimate(&mut ctx, &q);
         let want = brute.partition(&q);
         assert!((z - want).abs() < 1e-9 * want);
+    }
+
+    /// The batched GEMM path must agree with per-query estimates (scores
+    /// are bit-identical per row on AVX2; tolerance covers the scalar
+    /// fallback's different accumulation order).
+    #[test]
+    fn batch_matches_single_queries() {
+        let s = generate(&SynthConfig {
+            n: 333,
+            d: 17,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let qs: Vec<Vec<f32>> = (0..7).map(|i| s.row(i * 40).to_vec()).collect();
+        let mut rng = Rng::seeded(1);
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
+        let batched = Exact.estimate_batch(&mut ctx, &qs);
+        assert_eq!(batched.len(), qs.len());
+        for (q, zb) in qs.iter().zip(&batched) {
+            let zs = Exact.estimate(&mut ctx, q);
+            assert!(
+                (zb - zs).abs() < 1e-6 * zs,
+                "batched {zb} vs single {zs}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_empty_is_empty() {
+        let s = generate(&SynthConfig {
+            n: 10,
+            d: 4,
+            ..SynthConfig::tiny()
+        });
+        let brute = BruteIndex::new(&s);
+        let mut rng = Rng::seeded(2);
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
+        assert!(Exact.estimate_batch(&mut ctx, &[]).is_empty());
     }
 }

@@ -126,6 +126,40 @@ impl Fmbe {
         z
     }
 
+    /// Batched Ẑ for a whole query block: per feature, all `Π_r (q·ω_r)`
+    /// projection products are produced by one multi-query GEMM over the
+    /// (degree × d) Rademacher matrix, so each ω row is streamed once per
+    /// batch instead of once per query.
+    pub fn estimate_queries(&self, qs: &[Vec<f32>]) -> Vec<f64> {
+        let nq = qs.len();
+        if nq == 0 {
+            return vec![];
+        }
+        let d = self.d;
+        let qs_flat = linalg::flatten_queries(qs, d);
+        let mut zs = vec![0f64; nq];
+        let mut proj: Vec<f32> = Vec::new();
+        for f in &self.features {
+            if f.degree == 0 {
+                for z in zs.iter_mut() {
+                    *z += f.lambda;
+                }
+                continue;
+            }
+            proj.clear();
+            proj.resize(f.degree * nq, 0.0);
+            linalg::gemm(&f.omegas, f.degree, d, &qs_flat, nq, &mut proj);
+            for (qi, z) in zs.iter_mut().enumerate() {
+                let mut prod = 1f64;
+                for r in 0..f.degree {
+                    prod *= proj[r * nq + qi] as f64;
+                }
+                *z += f.lambda * prod;
+            }
+        }
+        zs
+    }
+
     /// Mean degree of the drawn features (≈ 1/(p−1) for geometric p).
     pub fn mean_degree(&self) -> f64 {
         self.features.iter().map(|f| f.degree as f64).sum::<f64>() / self.features.len() as f64
@@ -147,6 +181,10 @@ impl Estimator for Fmbe {
 
     fn estimate(&self, _ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
         self.estimate_query(q)
+    }
+
+    fn estimate_batch(&self, _ctx: &mut EstimateContext<'_>, qs: &[Vec<f32>]) -> Vec<f64> {
+        self.estimate_queries(qs)
     }
 
     fn scorings(&self, n: usize) -> usize {
@@ -244,6 +282,30 @@ mod tests {
         let got = f.estimate_query(&q);
         let err = crate::metrics::abs_rel_err_pct(got, want);
         assert!(err > 20.0, "expected large FMBE error, got {err}%");
+    }
+
+    /// The batched per-feature GEMM path must agree with the per-query
+    /// projection loop.
+    #[test]
+    fn batched_matches_single_queries() {
+        let s = small_norm_store(80, 8);
+        let f = Fmbe::fit(
+            &s,
+            FmbeConfig {
+                p_features: 500,
+                ..Default::default()
+            },
+        );
+        let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 13).to_vec()).collect();
+        let batched = f.estimate_queries(&qs);
+        for (q, zb) in qs.iter().zip(&batched) {
+            let zs = f.estimate_query(q);
+            assert!(
+                (zb - zs).abs() <= 1e-3 * (1.0 + zs.abs()),
+                "batched {zb} vs single {zs}"
+            );
+        }
+        assert!(f.estimate_queries(&[]).is_empty());
     }
 
     #[test]

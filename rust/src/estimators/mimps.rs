@@ -16,6 +16,7 @@
 //! tail population size (tested in `unbiased_tail_correction`).
 
 use super::{tail, EstimateContext, Estimator};
+use crate::mips::Hit;
 
 /// MIMPS estimator with head size `k` and tail sample size `l`.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +29,25 @@ impl Mimps {
     pub fn new(k: usize, l: usize) -> Self {
         Mimps { k, l }
     }
+
+    /// Head-sum + sampled tail correction for one already-retrieved head.
+    /// Shared by the single and batched paths so both consume the RNG
+    /// identically and batch-vs-single results agree.
+    fn finish(&self, ctx: &mut EstimateContext<'_>, q: &[f32], head: &[Hit]) -> f64 {
+        let n = ctx.store.len();
+        let head_z = tail::head_sum(head);
+        let k_eff = head.len();
+        if k_eff >= n || self.l == 0 {
+            return head_z;
+        }
+        tail::sample_tail_into(ctx.store, head, self.l, q, ctx.rng, &mut ctx.scratch);
+        let drawn = ctx.scratch.indices.len();
+        if drawn == 0 {
+            return head_z;
+        }
+        let tail_mean: f64 = ctx.scratch.exp_scores.iter().sum::<f64>() / drawn as f64;
+        head_z + (n - k_eff) as f64 * tail_mean
+    }
 }
 
 impl Estimator for Mimps {
@@ -36,20 +56,19 @@ impl Estimator for Mimps {
     }
 
     fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
-        let n = ctx.store.len();
         let head = ctx.index.top_k(q, self.k);
-        let head_z = tail::head_sum(&head);
-        let k_eff = head.len();
-        if k_eff >= n || self.l == 0 {
-            return head_z;
-        }
-        let sample = tail::sample_tail(ctx.store, &head, self.l, q, ctx.rng);
-        if sample.indices.is_empty() {
-            return head_z;
-        }
-        let tail_mean: f64 =
-            sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
-        head_z + (n - k_eff) as f64 * tail_mean
+        self.finish(ctx, q, &head)
+    }
+
+    /// Batched MIMPS: one `top_k_batch` retrieval pass (the multi-query
+    /// GEMM on batch-aware indexes) shared by the whole block, then the
+    /// per-query tail correction in submission order.
+    fn estimate_batch(&self, ctx: &mut EstimateContext<'_>, qs: &[Vec<f32>]) -> Vec<f64> {
+        let heads = ctx.index.top_k_batch(qs, self.k);
+        qs.iter()
+            .zip(&heads)
+            .map(|(q, head)| self.finish(ctx, q, head))
+            .collect()
     }
 
     fn scorings(&self, n: usize) -> usize {
@@ -81,11 +100,7 @@ mod tests {
         let brute = BruteIndex::new(&s);
         let q = s.row(11).to_vec();
         let mut rng = Rng::seeded(0);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         // k + l = N → the tail sample is the whole complement → exact.
         let z = Mimps::new(120, 80).estimate(&mut ctx, &q);
         let want = brute.partition(&q);
@@ -104,11 +119,7 @@ mod tests {
         let mut acc = 0f64;
         let reps = 300;
         for _ in 0..reps {
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             acc += est.estimate(&mut ctx, &q);
         }
         let mean = acc / reps as f64;
@@ -130,17 +141,9 @@ mod tests {
         for qi in (1600..1900).step_by(30) {
             let q = s.row(qi).to_vec();
             let want = brute.partition(&q);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             err_m += abs_rel_err_pct(est_m.estimate(&mut ctx, &q), want);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             err_u += abs_rel_err_pct(est_u.estimate(&mut ctx, &q), want);
         }
         assert!(
@@ -154,17 +157,9 @@ mod tests {
         let (s, brute) = setup();
         let q = s.row(42).to_vec();
         let mut rng = Rng::seeded(9);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let a = Mimps::new(64, 0).estimate(&mut ctx, &q);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let b = super::super::nmimps::Nmimps::new(64).estimate(&mut ctx, &q);
         assert_eq!(a, b);
     }
@@ -173,5 +168,27 @@ mod tests {
     fn scorings_reflect_budget() {
         assert_eq!(Mimps::new(100, 50).scorings(10_000), 150);
         assert_eq!(Mimps::new(100, 50).scorings(120), 120);
+    }
+
+    /// Batch and single paths share `finish()` and consume the RNG in the
+    /// same order, so with identical seeds they must agree (tolerance
+    /// covers last-ulp GEMM-vs-GEMV head-score differences on the scalar
+    /// fallback).
+    #[test]
+    fn batch_matches_single_with_same_seed() {
+        let (s, brute) = setup();
+        let est = Mimps::new(60, 40);
+        let qs: Vec<Vec<f32>> = (0..6).map(|i| s.row(300 * i + 11).to_vec()).collect();
+        let singles: Vec<f64> = {
+            let mut rng = Rng::seeded(77);
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
+            qs.iter().map(|q| est.estimate(&mut ctx, q)).collect()
+        };
+        let mut rng = Rng::seeded(77);
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
+        let batched = est.estimate_batch(&mut ctx, &qs);
+        for (a, b) in singles.iter().zip(&batched) {
+            assert!((a - b).abs() <= 1e-3 * a.abs(), "single {a} vs batched {b}");
+        }
     }
 }

@@ -176,19 +176,19 @@ impl Estimator for Mince {
         let n = ctx.store.len();
         let head = ctx.index.top_k(q, self.k);
         let k_eff = head.len().max(1);
-        let noise = tail::sample_tail(ctx.store, &head, self.l, q, ctx.rng);
-        if noise.indices.is_empty() {
+        tail::sample_tail_into(ctx.store, &head, self.l, q, ctx.rng, &mut ctx.scratch);
+        if ctx.scratch.indices.is_empty() {
             // Degenerate: no complement to sample; fall back to head sum.
             return tail::head_sum(&head);
         }
-        let l_eff = noise.indices.len();
+        let l_eff = ctx.scratch.indices.len();
         // a_i, b_j with the k(N−k)/l scaling from eq. (7).
         let scale = k_eff as f64 * (n - k_eff) as f64 / l_eff as f64;
         let a: Vec<f64> = head
             .iter()
             .map(|h| (h.score as f64).exp() * scale)
             .collect();
-        let b: Vec<f64> = noise.exp_scores.iter().map(|e| e * scale).collect();
+        let b: Vec<f64> = ctx.scratch.exp_scores.iter().map(|e| e * scale).collect();
         let z0 = tail::head_sum(&head).max(1e-12);
         solve(&a, &b, z0, self.solver).z
     }
@@ -277,11 +277,7 @@ mod tests {
         let brute = BruteIndex::new(&s);
         let mut rng = Rng::seeded(6);
         let q = s.row(900).to_vec();
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = Mince::new(10, 100).estimate(&mut ctx, &q);
         assert!(z.is_finite() && z > 0.0);
     }
@@ -298,17 +294,9 @@ mod tests {
         for qi in (100..1900).step_by(200) {
             let q = s.row(qi).to_vec();
             let want = brute.partition(&q);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             e_mince += abs_rel_err_pct(Mince::new(100, 100).estimate(&mut ctx, &q), want);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             e_mimps += abs_rel_err_pct(
                 super::super::mimps::Mimps::new(100, 100).estimate(&mut ctx, &q),
                 want,

@@ -27,11 +27,25 @@ use crate::data::embeddings::EmbeddingStore;
 use crate::mips::MipsIndex;
 use crate::util::rng::Rng;
 
-/// Everything an estimator may consult for one query.
+/// Everything an estimator may consult for one query (or query batch).
 pub struct EstimateContext<'a> {
     pub store: &'a EmbeddingStore,
     pub index: &'a dyn MipsIndex,
     pub rng: &'a mut Rng,
+    /// Reusable tail-sampling scratch (bitset + sample buffers) so the
+    /// MIMPS/MINCE hot path allocates nothing per query after warmup.
+    pub scratch: tail::TailScratch,
+}
+
+impl<'a> EstimateContext<'a> {
+    pub fn new(store: &'a EmbeddingStore, index: &'a dyn MipsIndex, rng: &'a mut Rng) -> Self {
+        EstimateContext {
+            store,
+            index,
+            rng,
+            scratch: tail::TailScratch::new(),
+        }
+    }
 }
 
 /// A partition-function estimator.
@@ -41,6 +55,15 @@ pub trait Estimator: Send + Sync {
 
     /// Estimate Ẑ(q).
     fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64;
+
+    /// Estimate Ẑ for every query in `qs`, in order. The default loops
+    /// over [`Estimator::estimate`]; batch-aware estimators (`Exact`,
+    /// `Mimps`, `Fmbe`) override it to share one batched retrieval /
+    /// scoring pass across the whole block, which is what the
+    /// coordinator's dynamic batcher executes per drained batch.
+    fn estimate_batch(&self, ctx: &mut EstimateContext<'_>, qs: &[Vec<f32>]) -> Vec<f64> {
+        qs.iter().map(|q| self.estimate(ctx, q)).collect()
+    }
 
     /// Number of category-vector scorings one estimate performs (index
     /// probes + tail samples) — the sublinearity measure that Table 4's

@@ -52,11 +52,7 @@ mod tests {
         let brute = BruteIndex::new(&s);
         let q = s.row(5).to_vec();
         let mut rng = Rng::seeded(0);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = Nmimps::new(300).estimate(&mut ctx, &q);
         let want = brute.partition(&q);
         assert!((z - want).abs() < 1e-6 * want);
@@ -69,11 +65,7 @@ mod tests {
         let mut rng = Rng::seeded(1);
         for qi in [0usize, 500, 1999] {
             let q = s.row(qi).to_vec();
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             let z = Nmimps::new(50).estimate(&mut ctx, &q);
             let want = brute.partition(&q);
             assert!(z < want, "head-only sum must underestimate Z");
@@ -89,11 +81,7 @@ mod tests {
         let mut rng = Rng::seeded(2);
         let mut prev = 0.0;
         for k in [1usize, 10, 100, 1000] {
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             let z = Nmimps::new(k).estimate(&mut ctx, &q);
             assert!(z >= prev, "head sum must grow with k");
             prev = z;

@@ -96,7 +96,8 @@ impl Estimator for MimpsPl {
         }
         // Fit the decay on the lower half of the head (the asymptotic part).
         let fit = fit_power_law(&head_exp, k_eff / 2, k_eff);
-        let sample = tail::sample_tail(ctx.store, &head, self.l, q, ctx.rng);
+        tail::sample_tail_into(ctx.store, &head, self.l, q, ctx.rng, &mut ctx.scratch);
+        let sample = &ctx.scratch;
         let tail_n = n - k_eff;
         match (fit, sample.indices.is_empty()) {
             (Some((c, alpha)), false) if alpha > 0.0 => {
@@ -179,17 +180,9 @@ mod tests {
         for qi in (200..1800).step_by(100) {
             let q = s.row(qi).to_vec();
             let want = brute.partition(&q);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             e_pl += abs_rel_err_pct(MimpsPl::new(100, 50).estimate(&mut ctx, &q), want);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             e_plain += abs_rel_err_pct(
                 super::super::mimps::Mimps::new(100, 50).estimate(&mut ctx, &q),
                 want,
@@ -214,11 +207,7 @@ mod tests {
         let q = s.row(0).to_vec();
         let want = brute.partition(&q);
         let mut rng = Rng::seeded(1);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = MimpsPl::new(150, 10).estimate(&mut ctx, &q);
         assert!((z - want).abs() < 1e-6 * want);
     }

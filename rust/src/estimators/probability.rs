@@ -43,12 +43,12 @@ pub fn classify_with_probability(
     let z_hat = if head.len() >= n || l == 0 {
         head_z
     } else {
-        let sample = tail::sample_tail(ctx.store, &head, l, q, ctx.rng);
-        if sample.indices.is_empty() {
+        tail::sample_tail_into(ctx.store, &head, l, q, ctx.rng, &mut ctx.scratch);
+        let drawn = ctx.scratch.indices.len();
+        if drawn == 0 {
             head_z
         } else {
-            let mean: f64 =
-                sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
+            let mean: f64 = ctx.scratch.exp_scores.iter().sum::<f64>() / drawn as f64;
             head_z + (n - head.len()) as f64 * mean
         }
     };
@@ -108,11 +108,7 @@ mod tests {
         let z_true = b.partition(&q);
         let p_true = (truth_top.score as f64).exp() / z_true;
         let mut rng = Rng::seeded(0);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &b,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &b, &mut rng);
         let r = classify_with_probability(&mut ctx, &q, 100, 100).unwrap();
         assert_eq!(r.class, truth_top.idx);
         assert!(
@@ -128,11 +124,7 @@ mod tests {
         let (s, b) = setup();
         let q = s.row(700).to_vec();
         let mut rng = Rng::seeded(1);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &b,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &b, &mut rng);
         let dist = head_distribution(&mut ctx, &q, 100, 100, 10);
         assert_eq!(dist.len(), 10);
         let total: f64 = dist.iter().map(|(_, p)| p).sum();
@@ -147,11 +139,7 @@ mod tests {
         let (s, b) = setup();
         let q = s.row(10).to_vec();
         let mut rng = Rng::seeded(2);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &b,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &b, &mut rng);
         let r = classify_with_probability(&mut ctx, &q, 50, 0).unwrap();
         // head-only Ẑ underestimates → p̂ overestimates vs truth, but must
         // still be a valid probability for the head-normalized family.

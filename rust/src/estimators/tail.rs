@@ -1,14 +1,20 @@
 //! Tail sampling shared by MIMPS, MINCE and Uniform: draw `l` distinct
 //! categories uniformly from the complement of the retrieved head `S_k`
 //! and score them exactly against the query.
+//!
+//! The hot path ([`sample_tail_into`]) writes into a reusable
+//! [`TailScratch`] owned by the `EstimateContext`, so repeated estimates
+//! perform no per-query allocation: membership is tracked in a word-packed
+//! bitset that is cleared sparsely (only the words actually touched),
+//! and the index/score buffers keep their capacity across calls. The
+//! allocating [`sample_tail`] wrapper remains for one-off callers.
 
 use crate::data::embeddings::EmbeddingStore;
 use crate::linalg;
 use crate::mips::Hit;
 use crate::util::rng::Rng;
-use std::collections::HashSet;
 
-/// A scored uniform tail sample.
+/// A scored uniform tail sample (owning variant, see [`sample_tail`]).
 pub struct TailSample {
     /// Category indices sampled (distinct, disjoint from the head).
     pub indices: Vec<usize>,
@@ -16,7 +22,115 @@ pub struct TailSample {
     pub exp_scores: Vec<f64>,
 }
 
-/// Draw `l` distinct indices uniformly from `[0, n) \ head` and score them.
+/// Reusable tail-sampling scratch: a lazily sized membership bitset plus
+/// the sample output buffers. One instance lives in `EstimateContext`;
+/// every [`sample_tail_into`] call reuses its allocations.
+#[derive(Default)]
+pub struct TailScratch {
+    /// Word-packed membership bits over `[0, n)` (head ∪ already-drawn).
+    bits: Vec<u64>,
+    /// Words with at least one set bit — cleared sparsely between calls.
+    touched: Vec<usize>,
+    /// Category indices sampled by the last call.
+    pub indices: Vec<usize>,
+    /// exp(u_i · q) for each sampled index, in f64.
+    pub exp_scores: Vec<f64>,
+}
+
+impl TailScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset the sample buffers and clear only the bitset words that the
+    /// previous call set.
+    fn reset(&mut self, n: usize) {
+        for &w in &self.touched {
+            self.bits[w] = 0;
+        }
+        self.touched.clear();
+        self.indices.clear();
+        self.exp_scores.clear();
+        let words = n.div_ceil(64);
+        if self.bits.len() < words {
+            self.bits.resize(words, 0);
+        }
+    }
+
+    /// Mark `i`; returns false if it was already marked.
+    #[inline]
+    fn insert(&mut self, i: usize) -> bool {
+        let (w, b) = (i / 64, 1u64 << (i % 64));
+        let old = self.bits[w];
+        if old & b != 0 {
+            return false;
+        }
+        if old == 0 {
+            self.touched.push(w);
+        }
+        self.bits[w] = old | b;
+        true
+    }
+
+    #[inline]
+    fn contains(&self, i: usize) -> bool {
+        self.bits[i / 64] & (1u64 << (i % 64)) != 0
+    }
+}
+
+/// Draw `l` distinct indices uniformly from `[0, n) \ head`, score them,
+/// and leave the result in `scratch.indices` / `scratch.exp_scores`.
+pub fn sample_tail_into(
+    store: &EmbeddingStore,
+    head: &[Hit],
+    l: usize,
+    q: &[f32],
+    rng: &mut Rng,
+    scratch: &mut TailScratch,
+) {
+    let n = store.len();
+    scratch.reset(n);
+    if n == 0 {
+        return;
+    }
+    let mut excluded = 0usize;
+    for h in head {
+        // Out-of-range hits (possible from a fault-injected index) are
+        // ignored rather than sized into the bitset.
+        if h.idx < n && scratch.insert(h.idx) {
+            excluded += 1;
+        }
+    }
+    let l = l.min(n - excluded);
+    if l == 0 {
+        return;
+    }
+    // Rejection-sample while the expected acceptance rate stays ≥ 3/4
+    // (the bitset doubles as the seen-set); otherwise do an exact partial
+    // Fisher–Yates over the materialized complement.
+    if (excluded + l) * 4 <= n {
+        while scratch.indices.len() < l {
+            let i = rng.below(n);
+            if scratch.insert(i) {
+                scratch.indices.push(i);
+            }
+        }
+    } else {
+        let mut pool: Vec<usize> = (0..n).filter(|&i| !scratch.contains(i)).collect();
+        for i in 0..l {
+            let j = rng.range(i, pool.len());
+            pool.swap(i, j);
+            scratch.indices.push(pool[i]);
+        }
+    }
+    for &i in &scratch.indices {
+        scratch
+            .exp_scores
+            .push((linalg::dot(store.row(i), q) as f64).exp());
+    }
+}
+
+/// Allocating wrapper around [`sample_tail_into`] for one-off callers.
 pub fn sample_tail(
     store: &EmbeddingStore,
     head: &[Hit],
@@ -24,17 +138,11 @@ pub fn sample_tail(
     q: &[f32],
     rng: &mut Rng,
 ) -> TailSample {
-    let head_set: HashSet<usize> = head.iter().map(|h| h.idx).collect();
-    let n = store.len();
-    let l = l.min(n.saturating_sub(head_set.len()));
-    let indices = rng.sample_distinct_excluding(n, l, |i| head_set.contains(&i));
-    let exp_scores = indices
-        .iter()
-        .map(|&i| (linalg::dot(store.row(i), q) as f64).exp())
-        .collect();
+    let mut scratch = TailScratch::new();
+    sample_tail_into(store, head, l, q, rng, &mut scratch);
     TailSample {
-        indices,
-        exp_scores,
+        indices: scratch.indices,
+        exp_scores: scratch.exp_scores,
     }
 }
 
@@ -49,6 +157,7 @@ mod tests {
     use crate::data::synth::{generate, SynthConfig};
     use crate::mips::brute::BruteIndex;
     use crate::mips::MipsIndex;
+    use std::collections::HashSet;
 
     #[test]
     fn tail_disjoint_from_head_and_distinct() {
@@ -98,6 +207,63 @@ mod tests {
             let want = (linalg::dot(s.row(idx), &q) as f64).exp();
             assert!((tail.exp_scores[i] - want).abs() < 1e-12 * want);
         }
+    }
+
+    /// The scratch must fully reset between calls: a second sample with a
+    /// different head must be disjoint from *its* head only, and the
+    /// buffers must not accumulate across calls.
+    #[test]
+    fn scratch_reuse_is_clean_across_calls() {
+        let s = generate(&SynthConfig {
+            n: 400,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let idx = BruteIndex::new(&s);
+        let q = s.row(1).to_vec();
+        let mut rng = Rng::seeded(11);
+        let mut scratch = TailScratch::new();
+        let head_a = idx.top_k(&q, 40);
+        sample_tail_into(&s, &head_a, 60, &q, &mut rng, &mut scratch);
+        let first: HashSet<usize> = scratch.indices.iter().copied().collect();
+        assert_eq!(first.len(), 60);
+
+        let head_b = idx.top_k(&q, 5);
+        sample_tail_into(&s, &head_b, 300, &q, &mut rng, &mut scratch);
+        assert_eq!(scratch.indices.len(), 300, "buffers reset, not appended");
+        assert_eq!(scratch.exp_scores.len(), 300);
+        let head_b_set: HashSet<usize> = head_b.iter().map(|h| h.idx).collect();
+        let second: HashSet<usize> = scratch.indices.iter().copied().collect();
+        assert_eq!(second.len(), 300, "distinct within the call");
+        assert!(head_b_set.is_disjoint(&second), "disjoint from current head");
+        // Indices excluded in call 1 (head_a beyond head_b) must be
+        // samplable again in call 2.
+        assert!(
+            second.iter().any(|i| !first.contains(i)),
+            "new draws appear after reset"
+        );
+    }
+
+    /// Matches the allocating wrapper draw-for-draw for the same seed.
+    #[test]
+    fn scratch_and_wrapper_agree_for_same_seed() {
+        let s = generate(&SynthConfig {
+            n: 500,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let idx = BruteIndex::new(&s);
+        let q = s.row(7).to_vec();
+        let head = idx.top_k(&q, 30);
+        let a = {
+            let mut rng = Rng::seeded(21);
+            sample_tail(&s, &head, 50, &q, &mut rng)
+        };
+        let mut rng = Rng::seeded(21);
+        let mut scratch = TailScratch::new();
+        sample_tail_into(&s, &head, 50, &q, &mut rng, &mut scratch);
+        assert_eq!(a.indices, scratch.indices);
+        assert_eq!(a.exp_scores, scratch.exp_scores);
     }
 
     #[test]

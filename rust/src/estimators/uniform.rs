@@ -27,11 +27,12 @@ impl Estimator for Uniform {
 
     fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
         let n = ctx.store.len();
-        let sample = tail::sample_tail(ctx.store, &[], self.l, q, ctx.rng);
-        if sample.indices.is_empty() {
+        tail::sample_tail_into(ctx.store, &[], self.l, q, ctx.rng, &mut ctx.scratch);
+        let drawn = ctx.scratch.indices.len();
+        if drawn == 0 {
             return 0.0;
         }
-        let mean: f64 = sample.exp_scores.iter().sum::<f64>() / sample.indices.len() as f64;
+        let mean: f64 = ctx.scratch.exp_scores.iter().sum::<f64>() / drawn as f64;
         n as f64 * mean
     }
 
@@ -58,11 +59,7 @@ mod tests {
         let brute = BruteIndex::new(&s);
         let q = s.row(0).to_vec();
         let mut rng = Rng::seeded(1);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = Uniform::new(200).estimate(&mut ctx, &q);
         let want = brute.partition(&q);
         assert!(
@@ -90,11 +87,7 @@ mod tests {
         let mut acc = 0f64;
         let reps = 200;
         for _ in 0..reps {
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             acc += est.estimate(&mut ctx, &q);
         }
         let mean = acc / reps as f64;
@@ -113,11 +106,7 @@ mod tests {
         let q = s.row(s.len() - 1).to_vec();
         let want = brute.partition(&q);
         let mut rng = Rng::seeded(3);
-        let mut ctx = EstimateContext {
-            store: &s,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
         let z = Uniform::new(10).estimate(&mut ctx, &q);
         assert!(
             abs_rel_err_pct(z, want) > 30.0,

@@ -185,11 +185,7 @@ pub fn probe_budget_ablation(
                 let mut rng = Rng::seeded(budget as u64 ^ qi as u64);
                 let (head, _) = tree.search_with_budget(&queries[qi], cfg.k, budget);
                 let index = super::common::FixedIndex::new(&head, store.len());
-                let mut ctx = EstimateContext {
-                    store,
-                    index: &index,
-                    rng: &mut rng,
-                };
+                let mut ctx = EstimateContext::new(store, &index, &mut rng);
                 let z = Mimps::new(cfg.k.min(head.len()), cfg.l).estimate(&mut ctx, &queries[qi]);
                 abs_rel_err_pct(z, evals[qi].z_true)
             });

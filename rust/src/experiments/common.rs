@@ -134,7 +134,7 @@ impl Setting {
         rng: &mut Rng,
     ) -> f64 {
         let index = FixedIndex::with_error(&eval.head, store.len(), err.clone());
-        let mut ctx = EstimateContext { store, index: &index, rng };
+        let mut ctx = EstimateContext::new(store, &index, rng);
         match self.kind {
             EstimatorKind::Uniform => {
                 crate::estimators::uniform::Uniform::new(self.l).estimate(&mut ctx, q)
@@ -254,11 +254,7 @@ mod tests {
         };
         let direct = {
             let mut rng = Rng::seeded(9);
-            let mut ctx = EstimateContext {
-                store: &s,
-                index: &brute,
-                rng: &mut rng,
-            };
+            let mut ctx = EstimateContext::new(&s, &brute, &mut rng);
             crate::estimators::mimps::Mimps::new(40, 30).estimate(&mut ctx, &q)
         };
         assert!(

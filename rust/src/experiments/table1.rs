@@ -129,11 +129,7 @@ pub fn run(store: &EmbeddingStore, cfg: &Config, fmbe_ds: &[usize]) -> Table1 {
                 let errs = threadpool::par_map(queries.len(), cfg.threads, |qi| {
                     let mut rng = Rng::seeded(1 + qi as u64);
                     let dummy = super::common::FixedIndex::new(&no_head, store.len());
-                    let mut ctx = EstimateContext {
-                        store,
-                        index: &dummy,
-                        rng: &mut rng,
-                    };
+                    let mut ctx = EstimateContext::new(store, &dummy, &mut rng);
                     abs_rel_err_pct(est.estimate(&mut ctx, &queries[qi]), evals[qi].z_true)
                 });
                 crate::metrics::mean(&errs)

@@ -180,11 +180,7 @@ pub fn evaluate(
             let t1 = std::time::Instant::now();
             let mips_est: Vec<f64> = threadpool::par_map(queries.len(), cfg.threads, |i| {
                 let mut rng = Rng::seeded((k * 31 + l) as u64 ^ i as u64);
-                let mut ctx = EstimateContext {
-                    store: &store,
-                    index: &index,
-                    rng: &mut rng,
-                };
+                let mut ctx = EstimateContext::new(&store, &index, &mut rng);
                 est.estimate(&mut ctx, &queries[i])
             });
             let mips_wall = t1.elapsed();

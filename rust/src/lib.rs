@@ -41,7 +41,7 @@
 //! let est = Mimps::new(1000, 1000);
 //! let mut rng = Rng::seeded(0);
 //! let q = store.row(42).to_vec();
-//! let mut ctx = EstimateContext { store: &store, index: &index, rng: &mut rng };
+//! let mut ctx = EstimateContext::new(&store, &index, &mut rng);
 //! let zhat = est.estimate(&mut ctx, &q);
 //! println!("Ẑ = {zhat}");
 //! ```

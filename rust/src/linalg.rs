@@ -1,36 +1,94 @@
-//! Dense f32 kernels for the Rust-side hot paths: dot products, GEMV over
-//! a row-major matrix, norms, axpy. These back the MIPS indexes and the
-//! native (non-PJRT) scoring path; the unrolled dot is the single hottest
-//! function in the whole system (profiled in EXPERIMENTS.md §Perf).
+//! Dense f32 kernels for the Rust-side hot paths: dot products, GEMV and
+//! multi-query GEMM over row-major matrices, fused exp-sums, norms, axpy.
+//! These back the MIPS indexes and the native (non-PJRT) scoring path; the
+//! inner-product kernels are the hottest functions in the whole system
+//! (profiled in EXPERIMENTS.md §Perf).
+//!
+//! ## Dispatch
+//!
+//! Every public kernel dispatches at runtime between an explicit
+//! `std::arch` AVX2+FMA implementation ([`avx2`], x86_64 with both
+//! features detected) and a portable scalar fallback ([`scalar`], every
+//! other case — and forceable with `ZEST_NO_SIMD=1` for A/B benching).
+//! The detection result is cached in an atomic so the per-call cost is a
+//! single relaxed load and a predictable branch.
+//!
+//! The AVX2 kernels share one accumulation pattern — a single 8-lane FMA
+//! accumulator walked left to right, horizontal-summed, then a scalar
+//! remainder loop — so a given row produces bit-identical scores whether
+//! it was computed by [`dot`], a [`gemv_blocked`] row quad, or a [`gemm`]
+//! tile. That keeps single-query and batched retrieval consistent to the
+//! last ulp on SIMD machines.
 
-/// Dot product with 8-way manual unrolling; the compiler auto-vectorizes
-/// each lane group. f32 accumulate in 8 partials, final sum in f64 to
-/// reduce cancellation over long vectors.
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel family [`simd_enabled`] selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Scalar => write!(f, "scalar"),
+            Backend::Avx2 => write!(f, "avx2+fma"),
+        }
+    }
+}
+
+// 0 = undetected, 1 = scalar, 2 = avx2.
+static BACKEND: AtomicU8 = AtomicU8::new(0);
+
+fn detect_backend() -> Backend {
+    if std::env::var_os("ZEST_NO_SIMD").is_some_and(|v| v != "0" && !v.is_empty()) {
+        return Backend::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_64_feature_detected!("avx2")
+            && std::arch::is_x86_64_feature_detected!("fma")
+        {
+            return Backend::Avx2;
+        }
+    }
+    Backend::Scalar
+}
+
+/// The kernel backend in use for this process (cached after first call).
+#[inline]
+pub fn backend() -> Backend {
+    match BACKEND.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Avx2,
+        _ => {
+            let b = detect_backend();
+            BACKEND.store(if b == Backend::Avx2 { 2 } else { 1 }, Ordering::Relaxed);
+            b
+        }
+    }
+}
+
+#[inline]
+fn use_avx2() -> bool {
+    backend() == Backend::Avx2
+}
+
+/// Dot product of two equal-length slices.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let mut acc = [0f32; 8];
-    // Safety-free indexing: slice patterns over exact chunks.
-    for i in 0..chunks {
-        let o = i * 8;
-        let (x, y) = (&a[o..o + 8], &b[o..o + 8]);
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-        acc[4] += x[4] * y[4];
-        acc[5] += x[5] * y[5];
-        acc[6] += x[6] * y[6];
-        acc[7] += x[7] * y[7];
+    // Hard assert: the AVX2 kernels read through raw pointers, so a
+    // length mismatch must stay a deterministic panic in release builds
+    // rather than an out-of-bounds read.
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: avx2+fma presence verified by `backend()`; equal
+        // lengths asserted above.
+        return unsafe { avx2::dot(a, b) };
     }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    let head: f32 = acc.iter().sum();
-    head + tail
+    scalar::dot(a, b)
 }
 
 /// Squared L2 norm.
@@ -75,6 +133,7 @@ pub fn scale(x: &mut [f32], alpha: f32) {
 }
 
 /// out = M · q for row-major `m` of shape (rows × d). Writes `rows` scores.
+/// Row-at-a-time; prefer [`gemv_blocked`] on hot paths.
 pub fn gemv(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
     debug_assert_eq!(m.len(), rows * d);
     debug_assert_eq!(q.len(), d);
@@ -85,34 +144,107 @@ pub fn gemv(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
 }
 
 /// Blocked GEMV that processes 4 rows at a time to reuse the streamed `q`
-/// from L1 cache and expose more ILP than row-at-a-time `gemv`.
+/// from L1 cache and expose more ILP than row-at-a-time [`gemv`].
 pub fn gemv_blocked(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
+    // Hard asserts: see `dot` — these bound the unsafe kernel's reads.
+    assert_eq!(m.len(), rows * d);
+    assert_eq!(q.len(), d);
+    assert_eq!(out.len(), rows);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: avx2+fma presence verified by `backend()`; shapes
+        // asserted above.
+        unsafe { avx2::gemv_blocked(m, rows, d, q, out) };
+        return;
+    }
+    scalar::gemv_blocked(m, rows, d, q, out);
+}
+
+/// Multi-query GEMM: `out[r * nq + qi] = m[r] · qs[qi]` for row-major `m`
+/// (rows × d) and row-major query block `qs` (nq × d). The micro-kernel
+/// processes a 4-row × 4-query register tile so every streamed matrix row
+/// is reused across the whole query tile instead of being re-read once
+/// per query — this is the batched scoring engine's core primitive.
+pub fn gemm(m: &[f32], rows: usize, d: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+    // Hard asserts: see `dot` — these bound the unsafe kernel's reads.
+    assert_eq!(m.len(), rows * d);
+    assert_eq!(qs.len(), nq * d);
+    assert_eq!(out.len(), rows * nq);
+    if rows == 0 || nq == 0 {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2() {
+        // Safety: avx2+fma presence verified by `backend()`; shapes
+        // asserted above.
+        unsafe { avx2::gemm(m, rows, d, qs, nq, out) };
+        return;
+    }
+    scalar::gemm(m, rows, d, qs, nq, out);
+}
+
+/// Fused Σ exp(m[r] · q) over all rows, accumulated in f64 without
+/// materializing an N-sized score vector: scores are produced by the
+/// blocked GEMV into a small cache-resident tile and exp-summed
+/// immediately. This is the single-query partition-function kernel.
+pub fn exp_sum_gemv(m: &[f32], rows: usize, d: usize, q: &[f32]) -> f64 {
     debug_assert_eq!(m.len(), rows * d);
-    debug_assert_eq!(q.len(), d);
-    debug_assert_eq!(out.len(), rows);
-    let quads = rows / 4;
-    for b in 0..quads {
-        let r = b * 4;
-        let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-        let row0 = &m[r * d..(r + 1) * d];
-        let row1 = &m[(r + 1) * d..(r + 2) * d];
-        let row2 = &m[(r + 2) * d..(r + 3) * d];
-        let row3 = &m[(r + 3) * d..(r + 4) * d];
-        for j in 0..d {
-            let qj = q[j];
-            s0 += row0[j] * qj;
-            s1 += row1[j] * qj;
-            s2 += row2[j] * qj;
-            s3 += row3[j] * qj;
+    const TILE: usize = 256;
+    let mut tile = [0f32; TILE];
+    let mut acc = 0f64;
+    let mut r = 0usize;
+    while r < rows {
+        let hi = (r + TILE).min(rows);
+        let nrows = hi - r;
+        gemv_blocked(&m[r * d..hi * d], nrows, d, q, &mut tile[..nrows]);
+        for &s in &tile[..nrows] {
+            acc += (s as f64).exp();
         }
-        out[r] = s0;
-        out[r + 1] = s1;
-        out[r + 2] = s2;
-        out[r + 3] = s3;
+        r = hi;
     }
-    for r in quads * 4..rows {
-        out[r] = dot(&m[r * d..(r + 1) * d], q);
+    acc
+}
+
+/// Fused batched exp-sum: `zs[j] += Σ_r exp(m[r] · q_j)` for every query
+/// `j` of the flat row-major (nq × d) block, without materializing the
+/// full (rows × nq) score matrix: scores are produced tile-by-tile by
+/// the multi-query [`gemm`] into a cache-resident buffer and exp-summed
+/// in f64 immediately. This is the batched partition-function kernel
+/// shared by `BruteIndex::partition_batch` and `Exact::estimate_batch`.
+pub fn exp_sum_gemm(m: &[f32], rows: usize, d: usize, qs_flat: &[f32], nq: usize, zs: &mut [f64]) {
+    assert_eq!(m.len(), rows * d);
+    assert_eq!(qs_flat.len(), nq * d);
+    assert_eq!(zs.len(), nq);
+    if rows == 0 || nq == 0 {
+        return;
     }
+    // Row tile keeps the (TILE_ROWS × nq) score block cache-resident
+    // while still amortizing each streamed row over all nq queries.
+    const TILE_ROWS: usize = 64;
+    let mut tile = vec![0f32; TILE_ROWS * nq];
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + TILE_ROWS).min(rows);
+        let nrows = hi - lo;
+        gemm(&m[lo * d..hi * d], nrows, d, qs_flat, nq, &mut tile[..nrows * nq]);
+        for r in 0..nrows {
+            for (qi, z) in zs.iter_mut().enumerate() {
+                *z += (tile[r * nq + qi] as f64).exp();
+            }
+        }
+        lo = hi;
+    }
+}
+
+/// Flatten a query set into one contiguous row-major (nq × d) block for
+/// the multi-query kernels. Panics on dimensionality mismatch.
+pub fn flatten_queries(qs: &[Vec<f32>], d: usize) -> Vec<f32> {
+    let mut flat = Vec::with_capacity(qs.len() * d);
+    for q in qs {
+        assert_eq!(q.len(), d, "query dimensionality mismatch");
+        flat.extend_from_slice(q);
+    }
+    flat
 }
 
 /// exp(scores) in place, with optional max-subtraction for stability.
@@ -153,6 +285,285 @@ pub fn sum_exp(scores: &[f32]) -> f64 {
     acc
 }
 
+/// Portable scalar kernels — the fallback on non-AVX2 hardware, and the
+/// baseline the SIMD kernels are benchmarked and tested against. Exposed
+/// `pub` so `perf_hotpath` and the agreement tests can call them directly
+/// regardless of the detected backend.
+pub mod scalar {
+    /// Dot product with 8-way manual unrolling; the compiler
+    /// auto-vectorizes each lane group. f32 accumulate in 8 partials.
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = [0f32; 8];
+        // Safety-free indexing: slice patterns over exact chunks.
+        for i in 0..chunks {
+            let o = i * 8;
+            let (x, y) = (&a[o..o + 8], &b[o..o + 8]);
+            acc[0] += x[0] * y[0];
+            acc[1] += x[1] * y[1];
+            acc[2] += x[2] * y[2];
+            acc[3] += x[3] * y[3];
+            acc[4] += x[4] * y[4];
+            acc[5] += x[5] * y[5];
+            acc[6] += x[6] * y[6];
+            acc[7] += x[7] * y[7];
+        }
+        let mut tail = 0f32;
+        for i in chunks * 8..n {
+            tail += a[i] * b[i];
+        }
+        let head: f32 = acc.iter().sum();
+        head + tail
+    }
+
+    /// 4-row blocked GEMV (see [`super::gemv_blocked`]).
+    pub fn gemv_blocked(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
+        let quads = rows / 4;
+        for b in 0..quads {
+            let r = b * 4;
+            let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+            let row0 = &m[r * d..(r + 1) * d];
+            let row1 = &m[(r + 1) * d..(r + 2) * d];
+            let row2 = &m[(r + 2) * d..(r + 3) * d];
+            let row3 = &m[(r + 3) * d..(r + 4) * d];
+            for j in 0..d {
+                let qj = q[j];
+                s0 += row0[j] * qj;
+                s1 += row1[j] * qj;
+                s2 += row2[j] * qj;
+                s3 += row3[j] * qj;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+        }
+        for r in quads * 4..rows {
+            out[r] = dot(&m[r * d..(r + 1) * d], q);
+        }
+    }
+
+    /// Register-blocked 4×4 multi-query GEMM (see [`super::gemm`]): each
+    /// loaded element of a matrix row feeds all four queries of the tile.
+    pub fn gemm(m: &[f32], rows: usize, d: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+        let rquads = rows / 4 * 4;
+        let qquads = nq / 4 * 4;
+        let mut r = 0usize;
+        while r < rquads {
+            let row0 = &m[r * d..(r + 1) * d];
+            let row1 = &m[(r + 1) * d..(r + 2) * d];
+            let row2 = &m[(r + 2) * d..(r + 3) * d];
+            let row3 = &m[(r + 3) * d..(r + 4) * d];
+            let mut qi = 0usize;
+            while qi < qquads {
+                let q0 = &qs[qi * d..(qi + 1) * d];
+                let q1 = &qs[(qi + 1) * d..(qi + 2) * d];
+                let q2 = &qs[(qi + 2) * d..(qi + 3) * d];
+                let q3 = &qs[(qi + 3) * d..(qi + 4) * d];
+                let mut acc = [[0f32; 4]; 4];
+                for j in 0..d {
+                    let rv = [row0[j], row1[j], row2[j], row3[j]];
+                    let qv = [q0[j], q1[j], q2[j], q3[j]];
+                    for (ar, &rj) in acc.iter_mut().zip(&rv) {
+                        for (a, &qj) in ar.iter_mut().zip(&qv) {
+                            *a += rj * qj;
+                        }
+                    }
+                }
+                for (rr, ar) in acc.iter().enumerate() {
+                    for (qq, &a) in ar.iter().enumerate() {
+                        out[(r + rr) * nq + qi + qq] = a;
+                    }
+                }
+                qi += 4;
+            }
+            while qi < nq {
+                let q = &qs[qi * d..(qi + 1) * d];
+                out[r * nq + qi] = dot(row0, q);
+                out[(r + 1) * nq + qi] = dot(row1, q);
+                out[(r + 2) * nq + qi] = dot(row2, q);
+                out[(r + 3) * nq + qi] = dot(row3, q);
+                qi += 1;
+            }
+            r += 4;
+        }
+        while r < rows {
+            let row = &m[r * d..(r + 1) * d];
+            for qi in 0..nq {
+                out[r * nq + qi] = dot(row, &qs[qi * d..(qi + 1) * d]);
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Explicit AVX2+FMA kernels. All functions here are `unsafe` because
+/// they require the `avx2` and `fma` target features, which callers must
+/// verify via [`backend`] before entering.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of one 8-lane accumulator. Store-and-sum keeps the
+    /// reduction order identical everywhere it is used, which is what
+    /// makes dot / gemv / gemm bit-consistent per row.
+    #[inline]
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut buf = [0f32; 8];
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+        let mut s = 0f32;
+        for x in buf {
+            s += x;
+        }
+        s
+    }
+
+    /// Single-row dot: one 8-lane FMA accumulator + scalar remainder.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + 8 <= n {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(bp.add(j)), acc);
+            j += 8;
+        }
+        let mut s = hsum(acc);
+        while j < n {
+            s += *ap.add(j) * *bp.add(j);
+            j += 1;
+        }
+        s
+    }
+
+    /// 4-row blocked GEMV: the query chunk is loaded once per 8 lanes and
+    /// fed to four row FMAs.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemv_blocked(m: &[f32], rows: usize, d: usize, q: &[f32], out: &mut [f32]) {
+        let qp = q.as_ptr();
+        let quads = rows / 4;
+        for b in 0..quads {
+            let r = b * 4;
+            let r0 = m.as_ptr().add(r * d);
+            let r1 = m.as_ptr().add((r + 1) * d);
+            let r2 = m.as_ptr().add((r + 2) * d);
+            let r3 = m.as_ptr().add((r + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut j = 0usize;
+            while j + 8 <= d {
+                let qv = _mm256_loadu_ps(qp.add(j));
+                a0 = _mm256_fmadd_ps(_mm256_loadu_ps(r0.add(j)), qv, a0);
+                a1 = _mm256_fmadd_ps(_mm256_loadu_ps(r1.add(j)), qv, a1);
+                a2 = _mm256_fmadd_ps(_mm256_loadu_ps(r2.add(j)), qv, a2);
+                a3 = _mm256_fmadd_ps(_mm256_loadu_ps(r3.add(j)), qv, a3);
+                j += 8;
+            }
+            let mut s0 = hsum(a0);
+            let mut s1 = hsum(a1);
+            let mut s2 = hsum(a2);
+            let mut s3 = hsum(a3);
+            while j < d {
+                let qj = *qp.add(j);
+                s0 += *r0.add(j) * qj;
+                s1 += *r1.add(j) * qj;
+                s2 += *r2.add(j) * qj;
+                s3 += *r3.add(j) * qj;
+                j += 1;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+        }
+        for r in quads * 4..rows {
+            out[r] = dot(&m[r * d..(r + 1) * d], q);
+        }
+    }
+
+    /// 4-row × 4-query register-tiled GEMM micro-kernel: 16 accumulators,
+    /// each matrix-row load shared by four query FMAs.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn gemm(m: &[f32], rows: usize, d: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+        let rquads = rows / 4 * 4;
+        let qquads = nq / 4 * 4;
+        let mp = m.as_ptr();
+        let qp = qs.as_ptr();
+        let mut r = 0usize;
+        while r < rquads {
+            let rp = [
+                mp.add(r * d),
+                mp.add((r + 1) * d),
+                mp.add((r + 2) * d),
+                mp.add((r + 3) * d),
+            ];
+            let mut qi = 0usize;
+            while qi < qquads {
+                let qps = [
+                    qp.add(qi * d),
+                    qp.add((qi + 1) * d),
+                    qp.add((qi + 2) * d),
+                    qp.add((qi + 3) * d),
+                ];
+                let mut acc = [[_mm256_setzero_ps(); 4]; 4];
+                let mut j = 0usize;
+                while j + 8 <= d {
+                    let rv = [
+                        _mm256_loadu_ps(rp[0].add(j)),
+                        _mm256_loadu_ps(rp[1].add(j)),
+                        _mm256_loadu_ps(rp[2].add(j)),
+                        _mm256_loadu_ps(rp[3].add(j)),
+                    ];
+                    for qq in 0..4 {
+                        let qv = _mm256_loadu_ps(qps[qq].add(j));
+                        acc[0][qq] = _mm256_fmadd_ps(rv[0], qv, acc[0][qq]);
+                        acc[1][qq] = _mm256_fmadd_ps(rv[1], qv, acc[1][qq]);
+                        acc[2][qq] = _mm256_fmadd_ps(rv[2], qv, acc[2][qq]);
+                        acc[3][qq] = _mm256_fmadd_ps(rv[3], qv, acc[3][qq]);
+                    }
+                    j += 8;
+                }
+                for rr in 0..4 {
+                    for qq in 0..4 {
+                        let mut s = hsum(acc[rr][qq]);
+                        let mut jj = j;
+                        while jj < d {
+                            s += *rp[rr].add(jj) * *qps[qq].add(jj);
+                            jj += 1;
+                        }
+                        out[(r + rr) * nq + qi + qq] = s;
+                    }
+                }
+                qi += 4;
+            }
+            while qi < nq {
+                let q = std::slice::from_raw_parts(qp.add(qi * d), d);
+                for (rr, &rrp) in rp.iter().enumerate() {
+                    let row = std::slice::from_raw_parts(rrp, d);
+                    out[(r + rr) * nq + qi] = dot(row, q);
+                }
+                qi += 1;
+            }
+            r += 4;
+        }
+        while r < rows {
+            let row = &m[r * d..(r + 1) * d];
+            for qi in 0..nq {
+                out[r * nq + qi] = dot(row, &qs[qi * d..(qi + 1) * d]);
+            }
+            r += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +591,45 @@ mod tests {
         }
     }
 
+    /// SIMD-vs-scalar agreement for every remainder-lane shape: dims 0–130
+    /// cover all (d mod 8) classes plus multi-chunk lengths. On non-AVX2
+    /// hosts the dispatching kernels equal the scalar ones trivially.
+    #[test]
+    fn simd_dot_matches_scalar_all_remainders() {
+        let mut rng = Rng::seeded(41);
+        for d in 0..=130usize {
+            let a = rng.normal_vec(d);
+            let b = rng.normal_vec(d);
+            let got = dot(&a, &b) as f64;
+            let want = scalar::dot(&a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                "d={d}: dispatch {got} vs scalar {want} (backend {})",
+                backend()
+            );
+        }
+    }
+
+    #[test]
+    fn simd_gemv_matches_scalar_all_remainders() {
+        let mut rng = Rng::seeded(42);
+        for d in 0..=130usize {
+            let rows = 7; // exercises the quad path + 3 remainder rows
+            let m = rng.normal_vec(rows * d);
+            let q = rng.normal_vec(d);
+            let mut got = vec![0f32; rows];
+            let mut want = vec![0f32; rows];
+            gemv_blocked(&m, rows, d, &q, &mut got);
+            scalar::gemv_blocked(&m, rows, d, &q, &mut want);
+            for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                    "d={d} row={r}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn gemv_variants_agree() {
         let mut rng = Rng::seeded(2);
@@ -193,6 +643,98 @@ mod tests {
         for (a, b) in o1.iter().zip(&o2) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    /// gemm-vs-gemv agreement over shapes that hit every micro-kernel
+    /// edge: row remainders, query remainders, and sub-tile sizes.
+    #[test]
+    fn gemm_matches_per_query_gemv() {
+        let mut rng = Rng::seeded(43);
+        for (rows, d, nq) in [
+            (1usize, 5usize, 1usize),
+            (3, 8, 2),
+            (4, 16, 4),
+            (5, 17, 5),
+            (12, 33, 7),
+            (33, 64, 9),
+            (40, 130, 16),
+        ] {
+            let m = rng.normal_vec(rows * d);
+            let qs = rng.normal_vec(nq * d);
+            let mut got = vec![0f32; rows * nq];
+            gemm(&m, rows, d, &qs, nq, &mut got);
+            let mut scalar_got = vec![0f32; rows * nq];
+            scalar::gemm(&m, rows, d, &qs, nq, &mut scalar_got);
+            for qi in 0..nq {
+                let q = &qs[qi * d..(qi + 1) * d];
+                let mut want = vec![0f32; rows];
+                gemv_blocked(&m, rows, d, q, &mut want);
+                for r in 0..rows {
+                    let g = got[r * nq + qi];
+                    let w = want[r];
+                    assert!(
+                        (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                        "rows={rows} d={d} nq={nq} r={r} qi={qi}: gemm {g} vs gemv {w}"
+                    );
+                    let sg = scalar_got[r * nq + qi];
+                    assert!(
+                        (sg - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                        "scalar gemm {sg} vs gemv {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_empty_shapes_are_noops() {
+        let mut out: Vec<f32> = vec![];
+        gemm(&[], 0, 4, &[1.0, 2.0, 3.0, 4.0], 1, &mut []);
+        gemm(&[1.0, 2.0], 1, 2, &[], 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn exp_sum_gemv_matches_unfused() {
+        let mut rng = Rng::seeded(44);
+        for rows in [0usize, 1, 4, 255, 256, 257, 700] {
+            let d = 19;
+            let m = rng.normal_vec(rows * d);
+            let q = rng.normal_vec(d);
+            let got = exp_sum_gemv(&m, rows, d, &q);
+            let mut scores = vec![0f32; rows];
+            gemv_blocked(&m, rows, d, &q, &mut scores);
+            let want = sum_exp(&scores);
+            assert!(
+                (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                "rows={rows}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_sum_gemm_matches_per_query_exp_sum_gemv() {
+        let mut rng = Rng::seeded(45);
+        for (rows, d, nq) in [(0usize, 7usize, 3usize), (63, 7, 1), (64, 9, 4), (130, 16, 5)] {
+            let m = rng.normal_vec(rows * d);
+            let qs: Vec<Vec<f32>> = (0..nq).map(|_| rng.normal_vec(d)).collect();
+            let qs_flat = flatten_queries(&qs, d);
+            let mut zs = vec![0f64; nq];
+            exp_sum_gemm(&m, rows, d, &qs_flat, nq, &mut zs);
+            for (q, z) in qs.iter().zip(&zs) {
+                let want = exp_sum_gemv(&m, rows, d, q);
+                assert!(
+                    (z - want).abs() <= 1e-6 * (1.0 + want.abs()),
+                    "rows={rows} d={d} nq={nq}: {z} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "query dimensionality mismatch")]
+    fn flatten_queries_rejects_bad_dims() {
+        flatten_queries(&[vec![1.0, 2.0], vec![3.0]], 2);
     }
 
     #[test]
@@ -243,5 +785,12 @@ mod tests {
         let xs = vec![1e-8f32; 1_000_000];
         let s = sum_f64(&xs);
         assert!((s - 1e-2).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn backend_is_cached_and_consistent() {
+        let a = backend();
+        let b = backend();
+        assert_eq!(a, b);
     }
 }

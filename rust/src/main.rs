@@ -151,11 +151,7 @@ fn cmd_estimate(cfg: &Config, args: &Args) -> Result<()> {
         Box::new(zest::estimators::mince::Mince::new(cfg.k, cfg.l)),
     ];
     for est in ests {
-        let mut ctx = EstimateContext {
-            store: &store,
-            index: &brute,
-            rng: &mut rng,
-        };
+        let mut ctx = EstimateContext::new(&store, &brute, &mut rng);
         let z = est.estimate(&mut ctx, &q);
         table.row(vec![
             est.name(),
@@ -175,11 +171,7 @@ fn cmd_classify(cfg: &Config, args: &Args) -> Result<()> {
     let q = store.row(qi).to_vec();
     let tree = zest::mips::kmeans_tree::KMeansTreeIndex::build(&store, Default::default());
     let mut rng = zest::util::rng::Rng::seeded(cfg.seed);
-    let mut ctx = EstimateContext {
-        store: &store,
-        index: &tree,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&store, &tree, &mut rng);
     let r = probability::classify_with_probability(&mut ctx, &q, cfg.k, cfg.l)
         .context("empty store")?;
     println!(

@@ -46,23 +46,78 @@ impl BruteIndex {
     }
 
     /// Exact partition function Z(q) = Σ exp(v_i · q), computed in f64 with
-    /// per-thread partial sums. This is the ground truth for every table.
+    /// per-thread partial sums over the fused SIMD exp-sum kernel. This is
+    /// the ground truth for every table.
     pub fn partition(&self, q: &[f32]) -> f64 {
         let n = self.data.len();
+        let d = self.data.dim();
+        let data = &self.data;
+        threadpool::par_fold(
+            n,
+            self.threads,
+            |range| linalg::exp_sum_gemv(data.rows(range.start, range.end), range.len(), d, q),
+            0f64,
+            |a, b| a + b,
+        )
+    }
+
+    /// Score all N categories against a whole query block (`qs_flat` is
+    /// row-major nq × d) into `out` (row-major N × nq), one multi-query
+    /// GEMM per row block so each streamed category row is reused across
+    /// the entire batch.
+    pub fn score_all_batch(&self, qs_flat: &[f32], nq: usize, out: &mut [f32]) {
+        let n = self.data.len();
+        let d = self.data.dim();
+        assert_eq!(qs_flat.len(), nq * d);
+        assert_eq!(out.len(), n * nq);
+        let data = &self.data;
+        threadpool::par_row_chunks_mut(out, nq, self.threads, |first_row, block| {
+            let rows = block.len() / nq;
+            linalg::gemm(
+                data.rows(first_row, first_row + rows),
+                rows,
+                d,
+                qs_flat,
+                nq,
+                block,
+            );
+        });
+    }
+
+    /// Batched exact partition: Z(q) for every query in `qs` from one
+    /// blocked GEMM pass over the category matrix, parallel over row
+    /// ranges with per-thread partial sums.
+    pub fn partition_batch(&self, qs: &[Vec<f32>]) -> Vec<f64> {
+        let nq = qs.len();
+        if nq == 0 {
+            return vec![];
+        }
+        let n = self.data.len();
+        let d = self.data.dim();
+        let qs_flat = linalg::flatten_queries(qs, d);
         let data = &self.data;
         threadpool::par_fold(
             n,
             self.threads,
             |range| {
-                let mut acc = 0f64;
-                for i in range {
-                    let u = linalg::dot(data.row(i), q) as f64;
-                    acc += u.exp();
-                }
+                let mut acc = vec![0f64; nq];
+                linalg::exp_sum_gemm(
+                    data.rows(range.start, range.end),
+                    range.len(),
+                    d,
+                    &qs_flat,
+                    nq,
+                    &mut acc,
+                );
                 acc
             },
-            0f64,
-            |a, b| a + b,
+            vec![0f64; nq],
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                a
+            },
         )
     }
 
@@ -76,6 +131,27 @@ impl MipsIndex for BruteIndex {
         let mut scores = vec![0f32; self.data.len()];
         self.score_all(q, &mut scores);
         select_top_k(&scores, k)
+    }
+
+    fn top_k_batch(&self, qs: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        let nq = qs.len();
+        if nq == 0 {
+            return vec![];
+        }
+        let n = self.data.len();
+        let d = self.data.dim();
+        let qs_flat = linalg::flatten_queries(qs, d);
+        let mut scores = vec![0f32; n * nq];
+        self.score_all_batch(&qs_flat, nq, &mut scores);
+        // Per-query selection over the strided score columns, in parallel.
+        let scores = &scores;
+        threadpool::par_map(nq, self.threads, |qi| {
+            let mut col = vec![0f32; n];
+            for (r, c) in col.iter_mut().enumerate() {
+                *c = scores[r * nq + qi];
+            }
+            select_top_k(&col, k)
+        })
     }
 
     fn len(&self) -> usize {

@@ -36,6 +36,10 @@ pub struct KMeansTreeConfig {
     pub max_probes: usize,
     /// Build seed.
     pub seed: u64,
+    /// Threads used by `top_k_batch` to fan traversals out. Callers that
+    /// already parallelize at the request level (e.g. the coordinator's
+    /// worker pool) should set 1 to avoid oversubscription.
+    pub threads: usize,
 }
 
 impl Default for KMeansTreeConfig {
@@ -46,6 +50,7 @@ impl Default for KMeansTreeConfig {
             kmeans_iters: 6,
             max_probes: 4096,
             seed: 0,
+            threads: crate::util::threadpool::default_threads(),
         }
     }
 }
@@ -279,6 +284,13 @@ impl MipsIndex for KMeansTreeIndex {
     fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
         let budget = self.cfg.max_probes.max(4 * k);
         self.search_with_budget(q, k, budget).0
+    }
+
+    /// Batched retrieval: tree traversals are independent per query, so
+    /// the batch fans out across `cfg.threads` (each traversal already
+    /// scores leaf blocks with the blocked SIMD GEMV).
+    fn top_k_batch(&self, qs: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        crate::util::threadpool::par_map(qs.len(), self.cfg.threads, |qi| self.top_k(&qs[qi], k))
     }
 
     fn len(&self) -> usize {

@@ -38,6 +38,15 @@ pub trait MipsIndex: Send + Sync {
     /// members of `S_k(q)`; `recall` quantifies that.
     fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit>;
 
+    /// Batched retrieval: top-`k` for every query in `qs`, in order. The
+    /// default loops over [`MipsIndex::top_k`]; batch-aware indexes
+    /// override it to share one scoring pass across the query block
+    /// (`BruteIndex` via the multi-query GEMM, `KMeansTreeIndex` via
+    /// parallel traversal).
+    fn top_k_batch(&self, qs: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        qs.iter().map(|q| self.top_k(q, k)).collect()
+    }
+
     /// Number of indexed items.
     fn len(&self) -> usize;
 

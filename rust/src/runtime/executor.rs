@@ -85,12 +85,14 @@ impl ArtifactsMeta {
 }
 
 /// One compiled graph.
+#[cfg(feature = "pjrt")]
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
     args: Vec<ArgSpec>,
 }
 
 /// The single-threaded PJRT runtime (see module docs for threading).
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -98,6 +100,44 @@ pub struct Runtime {
     meta: ArtifactsMeta,
 }
 
+/// Stub runtime for builds without the `pjrt` feature: artifact metadata
+/// still parses (so shape/config probing and error messages behave the
+/// same), but loading always fails with a clear pointer at the feature
+/// flag. The serving and bench paths fall back to the native SIMD
+/// kernels, which is the default offline configuration.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    meta: ArtifactsMeta,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let _ = ArtifactsMeta::load(dir)?;
+        bail!(
+            "zest was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (and the `xla` dependency) to execute AOT artifacts"
+        )
+    }
+
+    pub fn load_subset(dir: &Path, _names: &[&str]) -> Result<Runtime> {
+        Self::load(dir)
+    }
+
+    pub fn meta(&self) -> &ArtifactsMeta {
+        &self.meta
+    }
+
+    pub fn graph_names(&self) -> Vec<&str> {
+        self.meta.graphs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn run(&self, _name: &str, _inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        bail!("pjrt feature disabled: no executable graphs are loaded")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU client and compile every artifact listed in meta.json.
     pub fn load(dir: &Path) -> Result<Runtime> {

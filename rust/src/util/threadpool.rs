@@ -36,6 +36,30 @@ where
     });
 }
 
+/// Apply `f(first_row, row_block)` over row-aligned mutable chunks of a
+/// row-major (rows × row_len) matrix in parallel. Unlike
+/// [`par_chunks_mut`], chunk boundaries never split a row — the batched
+/// GEMM kernels rely on receiving whole rows.
+pub fn par_row_chunks_mut<T: Send, F>(data: &mut [T], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if row_len == 0 || data.is_empty() {
+        return;
+    }
+    debug_assert_eq!(data.len() % row_len, 0);
+    let rows = data.len() / row_len;
+    let threads = threads.max(1).min(rows);
+    let rows_per = rows.div_ceil(threads);
+    let chunk = rows_per * row_len;
+    std::thread::scope(|s| {
+        for (ci, slice) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(ci * rows_per, slice));
+        }
+    });
+}
+
 /// Parallel map over an index range, collecting results in order.
 pub fn par_map<R: Send, F>(n: usize, threads: usize, f: F) -> Vec<R>
 where
@@ -86,6 +110,21 @@ mod tests {
         par_chunks_mut(&mut v, 7, |start, slice| {
             for (j, x) in slice.iter_mut().enumerate() {
                 *x = start + j;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_mut_keeps_rows_whole() {
+        let (rows, row_len) = (103, 7);
+        let mut v = vec![0usize; rows * row_len];
+        par_row_chunks_mut(&mut v, row_len, 5, |first_row, block| {
+            assert_eq!(block.len() % row_len, 0, "chunk split a row");
+            for (j, x) in block.iter_mut().enumerate() {
+                *x = first_row * row_len + j;
             }
         });
         for (i, x) in v.iter().enumerate() {

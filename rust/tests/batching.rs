@@ -1,0 +1,177 @@
+//! Batch-vs-single equivalence for the batched scoring engine: every
+//! `EstimatorKind` through `Router::estimate_batch`, plus the index-level
+//! `top_k_batch` / `partition_batch` primitives, must agree with the
+//! per-query paths. Sampling estimators are compared under identical RNG
+//! seeds (the batched paths consume the stream in submission order);
+//! tolerances cover the scalar GEMM micro-kernel's different f32
+//! accumulation order vs the per-query GEMV.
+
+use zest::coordinator::Router;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::fmbe::FmbeConfig;
+use zest::estimators::EstimatorKind;
+use zest::mips::brute::BruteIndex;
+use zest::mips::kmeans_tree::{KMeansTreeConfig, KMeansTreeIndex};
+use zest::mips::MipsIndex;
+use zest::util::rng::Rng;
+
+fn store() -> zest::data::embeddings::EmbeddingStore {
+    generate(&SynthConfig {
+        n: 700,
+        d: 24,
+        clusters: 8,
+        ..SynthConfig::tiny()
+    })
+}
+
+/// Every estimator kind: a batch of queries through `estimate_batch`
+/// must match the same queries through per-query `estimate` when the RNG
+/// starts from the same seed.
+#[test]
+fn estimate_batch_matches_single_for_every_kind() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let router = Router::new(FmbeConfig {
+        p_features: 300,
+        ..Default::default()
+    });
+    let qs: Vec<Vec<f32>> = (0..9).map(|i| s.row(i * 70 + 3).to_vec()).collect();
+    let (k, l) = (50, 40);
+    for kind in EstimatorKind::all() {
+        let singles: Vec<f64> = {
+            let mut rng = Rng::seeded(123);
+            qs.iter()
+                .map(|q| router.estimate(*kind, k, l, &s, &index, q, &mut rng))
+                .collect()
+        };
+        let mut rng = Rng::seeded(123);
+        let batched = router.estimate_batch(*kind, k, l, &s, &index, &qs, &mut rng);
+        assert_eq!(batched.len(), qs.len(), "{kind}");
+        for (qi, (a, b)) in singles.iter().zip(&batched).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * (1.0 + a.abs()),
+                "{kind} q{qi}: single {a} vs batched {b}"
+            );
+        }
+    }
+}
+
+/// Router::estimate consumes the RNG identically per call, so a fresh
+/// seed per single call must also reproduce the batch (guards against a
+/// batched implementation that interleaves draws across queries).
+#[test]
+fn batched_sampling_consumes_rng_in_submission_order() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let router = Router::new(FmbeConfig::default());
+    let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(600 + i * 20).to_vec()).collect();
+    let mut rng = Rng::seeded(9);
+    let a = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, &qs, &mut rng);
+    let mut rng = Rng::seeded(9);
+    let b = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, &qs, &mut rng);
+    assert_eq!(a, b, "batched estimation is deterministic given the seed");
+}
+
+/// BruteIndex::top_k_batch must return the same hits as per-query top_k.
+#[test]
+fn brute_top_k_batch_matches_single() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let qs: Vec<Vec<f32>> = (0..7).map(|i| s.row(i * 90 + 1).to_vec()).collect();
+    let batched = index.top_k_batch(&qs, 20);
+    assert_eq!(batched.len(), qs.len());
+    for (q, hits) in qs.iter().zip(&batched) {
+        let want = index.top_k(q, 20);
+        assert_eq!(hits.len(), want.len());
+        for (h, w) in hits.iter().zip(&want) {
+            assert_eq!(h.idx, w.idx, "membership must match");
+            assert!(
+                (h.score - w.score).abs() <= 1e-4 * (1.0 + w.score.abs()),
+                "score {} vs {}",
+                h.score,
+                w.score
+            );
+        }
+    }
+    assert!(index.top_k_batch(&[], 5).is_empty());
+}
+
+/// KMeansTreeIndex::top_k_batch is a parallel fan-out of the identical
+/// per-query traversal, so results must be exactly equal.
+#[test]
+fn tree_top_k_batch_matches_single_exactly() {
+    let s = store();
+    let tree = KMeansTreeIndex::build(
+        &s,
+        KMeansTreeConfig {
+            max_probes: 400,
+            ..Default::default()
+        },
+    );
+    let qs: Vec<Vec<f32>> = (0..6).map(|i| s.row(i * 100 + 7).to_vec()).collect();
+    let batched = tree.top_k_batch(&qs, 10);
+    for (q, hits) in qs.iter().zip(&batched) {
+        assert_eq!(hits, &tree.top_k(q, 10));
+    }
+}
+
+/// Batched exact partition must agree with the single-query fused kernel.
+#[test]
+fn partition_batch_matches_single() {
+    let s = store();
+    let index = BruteIndex::new(&s);
+    let qs: Vec<Vec<f32>> = (0..11).map(|i| s.row(i * 60 + 5).to_vec()).collect();
+    let batched = index.partition_batch(&qs);
+    assert_eq!(batched.len(), qs.len());
+    for (q, zb) in qs.iter().zip(&batched) {
+        let zs = index.partition(q);
+        assert!(
+            (zb - zs).abs() <= 1e-6 * zs,
+            "batched {zb} vs single {zs}"
+        );
+    }
+    assert!(index.partition_batch(&[]).is_empty());
+}
+
+/// Multi-threaded and single-threaded batched scoring agree (the
+/// par_row_chunks_mut split must not change any row's result).
+#[test]
+fn partition_batch_thread_count_invariant() {
+    let s = store();
+    let a = BruteIndex::with_threads(&s, 1);
+    let b = BruteIndex::with_threads(&s, 8);
+    let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 123).to_vec()).collect();
+    let za = a.partition_batch(&qs);
+    let zb = b.partition_batch(&qs);
+    for (x, y) in za.iter().zip(&zb) {
+        assert!((x - y).abs() <= 1e-9 * x.abs(), "{x} vs {y}");
+    }
+}
+
+/// The default-trait batch path (an index with no override) still works
+/// through the whole estimator stack.
+#[test]
+fn default_top_k_batch_loops_correctly() {
+    struct Wrap(BruteIndex);
+    impl MipsIndex for Wrap {
+        fn top_k(&self, q: &[f32], k: usize) -> Vec<zest::mips::Hit> {
+            self.0.top_k(q, k)
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn probe_cost(&self, k: usize) -> usize {
+            self.0.probe_cost(k)
+        }
+        fn name(&self) -> &'static str {
+            "wrapped-brute"
+        }
+    }
+    let s = store();
+    let wrapped = Wrap(BruteIndex::new(&s));
+    let qs: Vec<Vec<f32>> = (0..3).map(|i| s.row(i * 31).to_vec()).collect();
+    let batched = wrapped.top_k_batch(&qs, 8);
+    for (q, hits) in qs.iter().zip(&batched) {
+        assert_eq!(hits, &wrapped.top_k(q, 8));
+    }
+}

@@ -32,11 +32,7 @@ fn zero_query_gives_exactly_n() {
     let q = vec![0f32; s.dim()];
     assert!((index.partition(&q) - s.len() as f64).abs() < 1e-9);
     let mut rng = Rng::seeded(0);
-    let mut ctx = EstimateContext {
-        store: &s,
-        index: &index,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&s, &index, &mut rng);
     let z = Mimps::new(50, 50).estimate(&mut ctx, &q);
     assert!(
         (z - s.len() as f64).abs() < 1e-6 * s.len() as f64,
@@ -95,17 +91,9 @@ fn poisoned_index_degrades_gracefully() {
     let want = brute.partition(&q);
     let mut rng = Rng::seeded(1);
     let est = Mimps::new(100, 100);
-    let mut ctx = EstimateContext {
-        store: &s,
-        index: &clean,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&s, &clean, &mut rng);
     let z_clean = est.estimate(&mut ctx, &q);
-    let mut ctx = EstimateContext {
-        store: &s,
-        index: &poisoned,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&s, &poisoned, &mut rng);
     let z_poisoned = est.estimate(&mut ctx, &q);
     assert!(z_poisoned.is_finite() && z_poisoned > 0.0);
     let e_clean = zest::metrics::abs_rel_err_pct(z_clean, want);
@@ -125,11 +113,7 @@ fn head_covering_all_categories() {
     let q = s.row(1).to_vec();
     let want = index.partition(&q);
     let mut rng = Rng::seeded(2);
-    let mut ctx = EstimateContext {
-        store: &s,
-        index: &index,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&s, &index, &mut rng);
     let z = Mimps::new(s.len(), 100).estimate(&mut ctx, &q);
     assert!((z - want).abs() < 1e-6 * want);
 }
@@ -242,11 +226,7 @@ fn degenerate_store_shapes() {
     let want = (1.0f64).exp(); // exp(0.5 * 2.0)
     assert!((index.partition(&q) - want).abs() < 1e-6);
     let mut rng = Rng::seeded(3);
-    let mut ctx = EstimateContext {
-        store: &s,
-        index: &index,
-        rng: &mut rng,
-    };
+    let mut ctx = EstimateContext::new(&s, &index, &mut rng);
     let z = Mimps::new(1, 1).estimate(&mut ctx, &q);
     assert!((z - want).abs() < 1e-6);
 }

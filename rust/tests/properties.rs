@@ -32,11 +32,7 @@ fn prop_mimps_exact_when_budget_covers_n() {
         let want = index.partition(&q);
         let k = rng.range(1, n);
         let l = n - k;
-        let mut ctx = EstimateContext {
-            store: &store,
-            index: &index,
-            rng,
-        };
+        let mut ctx = EstimateContext::new(&store, &index, rng);
         let z = Mimps::new(k, l).estimate(&mut ctx, &q);
         assert_close(z, want, 1e-5, "MIMPS with full budget")
     });
@@ -53,11 +49,7 @@ fn prop_nmimps_monotone_and_bounded() {
         let mut prev = 0.0;
         for frac in [1usize, 4, 16] {
             let k = (store.len() / frac).max(1);
-            let mut ctx = EstimateContext {
-                store: &store,
-                index: &index,
-                rng,
-            };
+            let mut ctx = EstimateContext::new(&store, &index, rng);
             let est = Nmimps::new(k).estimate(&mut ctx, &q);
             if est > z * (1.0 + 1e-5) {
                 return Err(format!("NMIMPS {est} exceeds Z {z}"));
@@ -190,11 +182,7 @@ fn prop_uniform_full_sample_exact() {
         let index = BruteIndex::with_threads(&store, 1);
         let q = store.row(rng.below(store.len())).to_vec();
         let want = index.partition(&q);
-        let mut ctx = EstimateContext {
-            store: &store,
-            index: &index,
-            rng,
-        };
+        let mut ctx = EstimateContext::new(&store, &index, rng);
         let z = Uniform::new(store.len()).estimate(&mut ctx, &q);
         assert_close(z, want, 1e-5, "Uniform(l=N)")
     });

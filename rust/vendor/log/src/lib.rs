@@ -1,0 +1,240 @@
+//! Minimal offline substitute for the `log` facade crate, providing the
+//! subset zest uses: the five level macros, [`Log`]/[`Record`]/[`Metadata`],
+//! [`set_logger`]/[`set_max_level`]/[`max_level`], and `Level` ⇄
+//! `LevelFilter` comparisons. API-compatible with the real crate for these
+//! items so swapping the real `log` back in is a one-line Cargo change.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a single record (lower = more severe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Maximum-verbosity filter (includes `Off`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+/// Metadata about a record (level + target).
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, passed by reference to [`Log::log`].
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// A logging backend.
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    fn log(&self, record: &Record<'_>);
+    fn flush(&self);
+}
+
+struct NopLogger;
+
+impl Log for NopLogger {
+    fn enabled(&self, _: &Metadata<'_>) -> bool {
+        false
+    }
+    fn log(&self, _: &Record<'_>) {}
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum level.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+fn logger() -> &'static dyn Log {
+    static NOP: NopLogger = NopLogger;
+    match LOGGER.get() {
+        Some(l) => *l,
+        None => &NOP,
+    }
+}
+
+/// Internal macro plumbing — not part of the public API contract.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    let record = Record {
+        metadata: Metadata { level, target },
+        args,
+    };
+    let l = logger();
+    if l.enabled(record.metadata()) {
+        l.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__log(lvl, ::std::module_path!(), ::std::format_args!($($arg)+));
+        }
+    }};
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filter_comparisons() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Trace >= Level::Trace);
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+
+    #[test]
+    fn macros_do_not_panic_without_logger() {
+        set_max_level(LevelFilter::Trace);
+        info!("hello {}", 42);
+        warn!("inline capture {x}", x = 7);
+        set_max_level(LevelFilter::Off);
+    }
+}
