@@ -6,6 +6,9 @@
 //! * **batched vs single-query** brute partition over a 64-query block —
 //!   the tentpole comparison for the batched scoring engine,
 //! * batched vs single top-k retrieval,
+//! * a **shard-count sweep** (S ∈ {1,2,4,8}) over the sharded store —
+//!   batched exact + scatter-gather top-k per shard count, written to
+//!   `BENCH_shard_sweep.json`,
 //! * MIMPS end-to-end latency through the k-means tree,
 //! * PJRT chunked scoring (artifact path) vs native linalg,
 //! * service round-trip overhead and batched service throughput.
@@ -163,6 +166,58 @@ fn main() {
     );
     record.push(("topk_single64_s", Json::num(t_topk_single.mean_secs())));
     record.push(("topk_batch64_s", Json::num(t_topk_batch.mean_secs())));
+
+    // 1d. Shard-count sweep over the epoch-snapshotted sharded store:
+    //     batched exact partition (bit-identical streaming across
+    //     shards) and batched top-100 through the scatter-gather
+    //     ShardedIndex, S ∈ {1, 2, 4, 8}. Written to its own
+    //     BENCH_shard_sweep.json so the CI artifact trail accumulates a
+    //     sharding trajectory alongside the hot-path one.
+    {
+        use zest::estimators::exact::Exact;
+        use zest::mips::sharded::ShardedIndex;
+        use zest::store::ShardedStore;
+        let mut rows_json: Vec<Json> = Vec::new();
+        let mut base_exact = 0f64;
+        let mut base_topk = 0f64;
+        for s in [1usize, 2, 4, 8] {
+            let sharded = ShardedStore::split(&store, s);
+            let index = ShardedIndex::brute(&sharded);
+            let t_exact = time(1, 3, || {
+                let mut ctx = EstimateContext::new(&sharded, &index, &mut rng);
+                std::hint::black_box(Exact.estimate_batch(&mut ctx, &queries));
+            });
+            let t_topk = time(1, 3, || {
+                std::hint::black_box(index.top_k_batch(&queries, 100));
+            });
+            if s == 1 {
+                base_exact = t_exact.mean_secs();
+                base_topk = t_topk.mean_secs();
+            }
+            println!(
+                "shards={s}: exact x{BATCH} {t_exact}  top-100 x{BATCH} {t_topk}  \
+                 (vs S=1: exact {:.2}x, topk {:.2}x)",
+                base_exact / t_exact.mean_secs(),
+                base_topk / t_topk.mean_secs()
+            );
+            rows_json.push(Json::obj(vec![
+                ("shards", Json::num(s as f64)),
+                ("exact_batch64_s", Json::num(t_exact.mean_secs())),
+                ("topk_batch64_s", Json::num(t_topk.mean_secs())),
+            ]));
+        }
+        let sweep = Json::obj(vec![
+            ("scale", Json::str(&env.scale)),
+            ("n", Json::num(n as f64)),
+            ("d", Json::num(d as f64)),
+            ("batch", Json::num(BATCH as f64)),
+            ("backend", Json::str(&linalg::backend().to_string())),
+            ("rows", Json::Arr(rows_json)),
+        ]);
+        std::fs::write("BENCH_shard_sweep.json", sweep.to_string()).ok();
+        println!("(json: BENCH_shard_sweep.json)");
+        bench_common::write_json(&env, "shard_sweep", &sweep);
+    }
 
     // 2. Tree search alone (k=100, default probes).
     let tree = KMeansTreeIndex::build(&store, KMeansTreeConfig::default());

@@ -18,6 +18,9 @@ pub struct ServiceMetrics {
     /// per-batch throughput the §Perf pass tracks.
     batch_exec_ns: AtomicU64,
     batch_exec_requests: AtomicU64,
+    /// Snapshot epoch observed by the most recently executed batch group
+    /// (0 until one executes; monolithic services stay at 0).
+    epoch: AtomicU64,
     /// Nanosecond latency samples (bounded reservoir). `exec_ns` records
     /// the *batch-group* execution time once per completed request (all
     /// members of a group share one `estimate_batch` call), so exec
@@ -25,6 +28,40 @@ pub struct ServiceMetrics {
     /// divide by `mean_batch_size` for a per-request view.
     queue_ns: Mutex<Vec<u64>>,
     exec_ns: Mutex<Vec<u64>>,
+    /// Per-shard accumulators (sharded serving only), indexed by shard
+    /// position — scoped to one epoch (the `u64`), because shard
+    /// positions are only stable within a snapshot: a mutation can
+    /// compact or extend them. Advancing the epoch restarts the table;
+    /// recordings from workers still draining an older snapshot are
+    /// dropped rather than conflated into the wrong position.
+    shards: Mutex<(u64, Vec<ShardStatAcc>)>,
+}
+
+#[derive(Clone, Copy, Default)]
+struct ShardStatAcc {
+    len: u64,
+    scorings: u64,
+    batches: u64,
+    exec_ns: u64,
+}
+
+/// Point-in-time per-shard counters (sharded serving only). Counters
+/// cover the **current serving epoch** — shard positions are only
+/// meaningful within one snapshot, so the table restarts when the epoch
+/// advances (`MetricsSnapshot::epoch` says which epoch these belong to).
+#[derive(Clone, Debug)]
+pub struct ShardStat {
+    /// Shard position within the epoch's snapshot.
+    pub shard: usize,
+    /// Rows the shard held at the last batch that touched it.
+    pub len: u64,
+    /// Category scorings attributed to this shard this epoch.
+    pub scorings: u64,
+    /// Batch groups that scattered over this shard this epoch.
+    pub batches: u64,
+    /// Wall-clock execution time of those groups (each group's time is
+    /// attributed to every shard it scattered over).
+    pub exec_ns: u64,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -55,6 +92,42 @@ impl ServiceMetrics {
             .fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
         self.batch_exec_requests
             .fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record the snapshot epoch a batch group executed against.
+    pub fn on_epoch(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
+    /// Attribute one executed batch group to shard `shard` of the
+    /// snapshot at `epoch`: the shard's current row count, the scorings
+    /// its sub-scan cost, and the group's (shared) execution time. A
+    /// newer epoch restarts the table (positions are snapshot-scoped);
+    /// recordings from an older pinned epoch are dropped.
+    pub fn on_shard_batch(
+        &self,
+        epoch: u64,
+        shard: usize,
+        len: usize,
+        scorings: usize,
+        exec: Duration,
+    ) {
+        let mut g = self.shards.lock().unwrap();
+        if epoch != g.0 {
+            if epoch < g.0 {
+                return; // stale snapshot — don't conflate positions
+            }
+            g.0 = epoch;
+            g.1.clear();
+        }
+        if g.1.len() <= shard {
+            g.1.resize(shard + 1, ShardStatAcc::default());
+        }
+        let acc = &mut g.1[shard];
+        acc.len = len as u64;
+        acc.scorings += scorings as u64;
+        acc.batches += 1;
+        acc.exec_ns += exec.as_nanos() as u64;
     }
 
     pub fn on_complete(&self, queue_wait: Duration, exec: Duration) {
@@ -102,6 +175,22 @@ impl ServiceMetrics {
                         / (ns as f64 / 1e9)
                 }
             },
+            epoch: self.epoch.load(Ordering::Relaxed),
+            shard_stats: self
+                .shards
+                .lock()
+                .unwrap()
+                .1
+                .iter()
+                .enumerate()
+                .map(|(shard, a)| ShardStat {
+                    shard,
+                    len: a.len,
+                    scorings: a.scorings,
+                    batches: a.batches,
+                    exec_ns: a.exec_ns,
+                })
+                .collect(),
             queue_p50: pct(&self.queue_ns, 0.50),
             queue_p95: pct(&self.queue_ns, 0.95),
             exec_p50: pct(&self.exec_ns, 0.50),
@@ -121,6 +210,11 @@ pub struct MetricsSnapshot {
     /// Requests per second across executed batch groups (execution time
     /// only — queue wait excluded). 0.0 until a batch has executed.
     pub batch_throughput_rps: f64,
+    /// Snapshot epoch of the most recently executed batch group (0 for
+    /// monolithic services).
+    pub epoch: u64,
+    /// Per-shard counters; empty for monolithic services.
+    pub shard_stats: Vec<ShardStat>,
     pub queue_p50: Duration,
     pub queue_p95: Duration,
     pub exec_p50: Duration,
@@ -143,7 +237,26 @@ impl std::fmt::Display for MetricsSnapshot {
             self.queue_p95,
             self.exec_p50,
             self.exec_p95
-        )
+        )?;
+        if !self.shard_stats.is_empty() {
+            write!(f, " epoch={} shards=[", self.epoch)?;
+            for (i, s) in self.shard_stats.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(
+                    f,
+                    "{}:len={},scorings={},batches={},exec={:?}",
+                    s.shard,
+                    s.len,
+                    s.scorings,
+                    s.batches,
+                    Duration::from_nanos(s.exec_ns)
+                )?;
+            }
+            write!(f, "]")?;
+        }
+        Ok(())
     }
 }
 
@@ -189,5 +302,45 @@ mod tests {
         assert_eq!(s.queue_p95, Duration::ZERO);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.batch_throughput_rps, 0.0);
+        assert_eq!(s.epoch, 0);
+        assert!(s.shard_stats.is_empty());
+    }
+
+    #[test]
+    fn shard_stats_accumulate_per_shard() {
+        let m = ServiceMetrics::new();
+        m.on_epoch(3);
+        m.on_shard_batch(3, 0, 100, 100, Duration::from_millis(2));
+        m.on_shard_batch(3, 1, 50, 50, Duration::from_millis(2));
+        m.on_shard_batch(3, 1, 50, 75, Duration::from_millis(1));
+        let s = m.snapshot();
+        assert_eq!(s.epoch, 3);
+        assert_eq!(s.shard_stats.len(), 2);
+        assert_eq!(s.shard_stats[0].scorings, 100);
+        assert_eq!(s.shard_stats[0].batches, 1);
+        assert_eq!(s.shard_stats[1].len, 50);
+        assert_eq!(s.shard_stats[1].scorings, 125);
+        assert_eq!(s.shard_stats[1].batches, 2);
+        assert_eq!(s.shard_stats[1].exec_ns, 3_000_000);
+        let text = s.to_string();
+        assert!(text.contains("epoch=3"), "{text}");
+        assert!(text.contains("shards=["), "{text}");
+    }
+
+    #[test]
+    fn shard_table_restarts_per_epoch_and_drops_stale() {
+        let m = ServiceMetrics::new();
+        m.on_shard_batch(0, 0, 10, 10, Duration::from_millis(1));
+        m.on_shard_batch(0, 1, 10, 10, Duration::from_millis(1));
+        m.on_shard_batch(0, 2, 10, 10, Duration::from_millis(1));
+        // New epoch (e.g. a shard was removed and positions compacted):
+        // the table restarts so old positions cannot conflate.
+        m.on_shard_batch(1, 0, 8, 5, Duration::from_millis(1));
+        // A worker still draining the old snapshot is ignored.
+        m.on_shard_batch(0, 2, 10, 99, Duration::from_millis(1));
+        let s = m.snapshot();
+        assert_eq!(s.shard_stats.len(), 1);
+        assert_eq!(s.shard_stats[0].len, 8);
+        assert_eq!(s.shard_stats[0].scorings, 5);
     }
 }

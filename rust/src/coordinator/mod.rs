@@ -1,15 +1,27 @@
 //! L3 coordinator: the serving system around the estimators.
 //!
 //! Shape (vLLM-router-like, scaled to this paper): requests — (query
-//! vector, estimator kind, k, l) — enter a **bounded** queue; a batcher
-//! thread drains it under a max-batch/max-delay policy and groups
-//! requests by estimator kind; a worker pool executes each drained
-//! batch as **one** `Estimator::estimate_batch` call per (k, l) group —
-//! a single batched retrieval/scoring pass (multi-query GEMM on the
-//! brute index) instead of a per-request loop. `Exact` requests ride
-//! the AOT-compiled PJRT `score_batch` artifact when a runtime is
-//! attached. Metrics track queue wait, execution time, shed load, and
-//! per-batch execution throughput.
+//! vector, estimator kind, k, l) — enter a **bounded** queue after
+//! submit-time dimensionality validation; a batcher thread drains it
+//! under a max-batch/max-delay policy and groups requests by estimator
+//! kind; a worker pool executes each drained batch as **one**
+//! `Estimator::estimate_batch` call per (k, l) group — a single batched
+//! retrieval/scoring pass (multi-query GEMM on the brute index) instead
+//! of a per-request loop. `Exact` requests ride the AOT-compiled PJRT
+//! `score_batch` artifact when a runtime is attached (monolithic
+//! serving).
+//!
+//! Sharded serving ([`PartitionService::start_sharded`]): workers answer
+//! from epoch snapshots of a [`crate::store::ShardedStore`]. Each
+//! drained batch pins the current `Arc<Snapshot>` for its whole
+//! execution and scatters its retrieval pass across the snapshot's
+//! shards in parallel (inside
+//! [`crate::mips::sharded::ShardedIndex::top_k_batch`], on the scoped
+//! thread pool); `add_categories` / `remove_categories` on the
+//! [`crate::store::SnapshotHandle`] publish new epochs without pausing
+//! in-flight batches. Metrics track queue wait, execution time, shed
+//! load, per-batch execution throughput, the serving epoch, and
+//! per-shard scorings/exec time.
 
 pub mod batcher;
 pub mod metrics;
@@ -17,7 +29,7 @@ pub mod router;
 pub mod service;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use metrics::{MetricsSnapshot, ServiceMetrics, ShardStat};
 pub use router::Router;
 pub use service::{
     BackpressurePolicy, PartitionService, Request, Response, ServiceConfig, SubmitError,

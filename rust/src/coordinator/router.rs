@@ -1,20 +1,25 @@
 //! Estimator routing: maps an [`EstimatorKind`] + per-request (k, l) to a
 //! concrete estimator instance. FMBE is stateful (fitted feature maps),
-//! so the router owns one fitted copy; the sampling estimators are
-//! constructed per call (they are zero-cost POD structs).
+//! so the router owns one fitted copy — fitted lazily on the **first**
+//! store it is asked to serve and never refitted, so under epoch
+//! snapshots FMBE answers reflect the category set at fit time, not the
+//! batch's pinned epoch (ROADMAP: "FMBE refresh on epoch swap"). The
+//! sampling estimators are constructed per call (they are zero-cost POD
+//! structs) and always read the pinned snapshot.
 
-use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::{
     exact::Exact, fmbe::Fmbe, fmbe::FmbeConfig, mimps::Mimps, mince::Mince, nmimps::Nmimps,
     uniform::Uniform, EstimateContext, Estimator, EstimatorKind,
 };
 use crate::mips::MipsIndex;
+use crate::store::StoreView;
 use crate::util::rng::Rng;
 
 /// Routing table with a lazily fitted FMBE.
 pub struct Router {
     fmbe: std::sync::OnceLock<Fmbe>,
     fmbe_cfg: FmbeConfig,
+    stratified_tail: bool,
 }
 
 impl Router {
@@ -22,17 +27,36 @@ impl Router {
         Router {
             fmbe: std::sync::OnceLock::new(),
             fmbe_cfg,
+            stratified_tail: false,
+        }
+    }
+
+    /// Route MIMPS tail sampling through the shard-stratified draw
+    /// (proportional per-shard budgets) when the service's store is
+    /// sharded. Off by default: the global draw keeps estimates
+    /// invariant to the shard layout under a fixed seed.
+    pub fn with_stratified_tail(mut self) -> Self {
+        self.stratified_tail = true;
+        self
+    }
+
+    fn mimps(&self, k: usize, l: usize) -> Mimps {
+        if self.stratified_tail {
+            Mimps::stratified(k, l)
+        } else {
+            Mimps::new(k, l)
         }
     }
 
     /// Estimate through the routed estimator. `store`/`index` are the
-    /// service's; `k`/`l` come from the request.
+    /// service's (monolithic, or an epoch-pinned sharded snapshot);
+    /// `k`/`l` come from the request.
     pub fn estimate(
         &self,
         kind: EstimatorKind,
         k: usize,
         l: usize,
-        store: &EmbeddingStore,
+        store: &dyn StoreView,
         index: &dyn MipsIndex,
         q: &[f32],
         rng: &mut Rng,
@@ -42,7 +66,7 @@ impl Router {
             EstimatorKind::Exact => Exact.estimate(&mut ctx, q),
             EstimatorKind::Uniform => Uniform::new(l).estimate(&mut ctx, q),
             EstimatorKind::Nmimps => Nmimps::new(k).estimate(&mut ctx, q),
-            EstimatorKind::Mimps => Mimps::new(k, l).estimate(&mut ctx, q),
+            EstimatorKind::Mimps => self.mimps(k, l).estimate(&mut ctx, q),
             EstimatorKind::Mince => Mince::new(k, l).estimate(&mut ctx, q),
             EstimatorKind::Fmbe => {
                 let fmbe = self
@@ -62,7 +86,7 @@ impl Router {
         kind: EstimatorKind,
         k: usize,
         l: usize,
-        store: &EmbeddingStore,
+        store: &dyn StoreView,
         index: &dyn MipsIndex,
         qs: &[Vec<f32>],
         rng: &mut Rng,
@@ -72,7 +96,7 @@ impl Router {
             EstimatorKind::Exact => Exact.estimate_batch(&mut ctx, qs),
             EstimatorKind::Uniform => Uniform::new(l).estimate_batch(&mut ctx, qs),
             EstimatorKind::Nmimps => Nmimps::new(k).estimate_batch(&mut ctx, qs),
-            EstimatorKind::Mimps => Mimps::new(k, l).estimate_batch(&mut ctx, qs),
+            EstimatorKind::Mimps => self.mimps(k, l).estimate_batch(&mut ctx, qs),
             EstimatorKind::Mince => Mince::new(k, l).estimate_batch(&mut ctx, qs),
             EstimatorKind::Fmbe => {
                 let fmbe = self

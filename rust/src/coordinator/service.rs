@@ -9,6 +9,7 @@ use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::EstimatorKind;
 use crate::mips::MipsIndex;
 use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::store::{SnapshotHandle, StoreView};
 use crate::util::rng::Rng;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
@@ -27,6 +28,17 @@ pub struct Request {
 pub struct Response {
     pub z: f64,
     pub kind: EstimatorKind,
+    /// Snapshot epoch the answering batch group pinned. Always 0 for a
+    /// service over a monolithic store; for sharded services this is the
+    /// epoch whose category set produced `z` (a request drained after an
+    /// `add_categories` answers from the new epoch even if it was
+    /// submitted before the swap — pinning happens at batch execution).
+    /// Exception: `Fmbe` answers come from the feature maps the router
+    /// fitted on the first snapshot it saw (`λ̃` is precomputed and
+    /// never re-reads the store), so an FMBE `z` may predate the
+    /// reported epoch — see the ROADMAP "FMBE refresh on epoch swap"
+    /// open item.
+    pub epoch: u64,
     /// Time from submission until this request's batch group started
     /// executing (includes any earlier groups of the same drained batch).
     pub queue_wait: std::time::Duration,
@@ -84,6 +96,11 @@ pub enum SubmitError {
     Overloaded,
     /// Service has shut down.
     Closed,
+    /// `Request.query` dimensionality differs from the store's. Checked
+    /// at `submit()` so a malformed request is rejected immediately
+    /// instead of waiting in queue and then failing (and poisoning its
+    /// batch group) mid-drain.
+    DimMismatch { got: usize, want: usize },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -91,6 +108,9 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Overloaded => write!(f, "service overloaded (queue full)"),
             SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::DimMismatch { got, want } => {
+                write!(f, "query dimensionality {got} != store dimensionality {want}")
+            }
         }
     }
 }
@@ -102,23 +122,64 @@ pub struct PartitionService {
     ingress: mpsc::SyncSender<QueuedRequest>,
     metrics: Arc<ServiceMetrics>,
     policy: BackpressurePolicy,
+    /// Store dimensionality, for submit-time query validation (invariant
+    /// across snapshot epochs — mutations cannot change d).
+    dim: usize,
     threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// What the workers answer from.
+enum Serving {
+    /// One immutable monolithic store + index.
+    Static {
+        store: Arc<EmbeddingStore>,
+        index: Arc<dyn MipsIndex>,
+    },
+    /// Epoch snapshots over a sharded store: each drained batch pins the
+    /// current snapshot for its whole execution, so `add_categories` /
+    /// `remove_categories` swap epochs without pausing in-flight work.
+    Sharded { handle: Arc<SnapshotHandle> },
 }
 
 /// Shared worker state.
 struct WorkerCtx {
-    store: Arc<EmbeddingStore>,
-    index: Arc<dyn MipsIndex>,
+    serving: Serving,
     router: Arc<Router>,
     metrics: Arc<ServiceMetrics>,
     runtime: Option<RuntimeHandle>,
 }
 
 impl PartitionService {
-    /// Start the batcher + worker threads.
+    /// Start the batcher + worker threads over a monolithic store.
     pub fn start(
         store: Arc<EmbeddingStore>,
         index: Arc<dyn MipsIndex>,
+        router: Router,
+        cfg: ServiceConfig,
+        runtime: Option<RuntimeHandle>,
+    ) -> PartitionService {
+        let dim = store.dim();
+        Self::start_serving(Serving::Static { store, index }, dim, router, cfg, runtime)
+    }
+
+    /// Start over epoch snapshots of a sharded store. Batch groups
+    /// scatter across the snapshot's shards (through its
+    /// [`crate::mips::sharded::ShardedIndex`]) and per-shard metrics are
+    /// exported; the caller keeps its `Arc<SnapshotHandle>` to publish
+    /// category mutations while the service runs.
+    pub fn start_sharded(
+        handle: Arc<SnapshotHandle>,
+        router: Router,
+        cfg: ServiceConfig,
+        runtime: Option<RuntimeHandle>,
+    ) -> PartitionService {
+        let dim = StoreView::dim(handle.load().store.as_ref());
+        Self::start_serving(Serving::Sharded { handle }, dim, router, cfg, runtime)
+    }
+
+    fn start_serving(
+        serving: Serving,
+        dim: usize,
         router: Router,
         cfg: ServiceConfig,
         runtime: Option<RuntimeHandle>,
@@ -151,8 +212,7 @@ impl PartitionService {
 
         // Worker threads.
         let ctx = Arc::new(WorkerCtx {
-            store,
-            index,
+            serving,
             router: Arc::new(router),
             metrics: metrics.clone(),
             runtime,
@@ -183,27 +243,43 @@ impl PartitionService {
             ingress: ingress_tx,
             metrics,
             policy: cfg.backpressure,
+            dim,
             threads,
         }
     }
 
     fn run_batch(ctx: &WorkerCtx, batch: Batch, rng: &mut Rng) {
-        // Exact batches ride the PJRT scoring artifact when attached.
+        // Pin the serving state once for the whole drained batch: every
+        // group answers from one consistent snapshot even if a category
+        // mutation publishes a new epoch mid-batch.
+        let pinned;
+        let (view, index, epoch): (&dyn StoreView, &dyn MipsIndex, u64) = match &ctx.serving {
+            Serving::Static { store, index } => (store.as_ref(), index.as_ref(), 0),
+            Serving::Sharded { handle } => {
+                pinned = handle.load();
+                (pinned.store.as_ref(), pinned.index.as_ref(), pinned.epoch)
+            }
+        };
+        // Exact batches ride the PJRT scoring artifact when attached
+        // (monolithic serving only — the artifact streams one contiguous
+        // matrix).
         if batch.kind == EstimatorKind::Exact {
-            if let Some(rt) = &ctx.runtime {
-                if Self::run_exact_batch_pjrt(ctx, &batch, rt).is_ok() {
+            if let (Serving::Static { store, .. }, Some(rt)) = (&ctx.serving, &ctx.runtime) {
+                if Self::run_exact_batch_pjrt(ctx, store, &batch, rt).is_ok() {
                     return;
                 }
                 log::warn!("PJRT exact batch failed; falling back to native path");
             }
         }
-        let n = ctx.store.len();
+        let n = view.len();
         // The batcher guarantees one kind per batch; sub-group by the
         // (k, l) hyper-parameters so each group maps onto one estimator
         // instance and is answered by a single `estimate_batch` call —
         // one shared retrieval/scoring pass instead of a per-request
-        // loop. Order within a group is preserved; in practice a batch
-        // is one group (clients of a kind use one configuration).
+        // loop. On sharded snapshots that pass scatters across shards in
+        // parallel inside `ShardedIndex::top_k_batch`. Order within a
+        // group is preserved; in practice a batch is one group (clients
+        // of a kind use one configuration).
         let mut groups: Vec<((usize, usize), Vec<QueuedRequest>)> = Vec::new();
         for qr in batch.requests {
             let key = (qr.request.k, qr.request.l);
@@ -218,24 +294,32 @@ impl PartitionService {
                 .iter_mut()
                 .map(|qr| std::mem::take(&mut qr.request.query))
                 .collect();
-            let zs = ctx.router.estimate_batch(
-                batch.kind,
-                k,
-                l,
-                &ctx.store,
-                ctx.index.as_ref(),
-                &qs,
-                rng,
-            );
+            let zs = ctx
+                .router
+                .estimate_batch(batch.kind, k, l, view, index, &qs, rng);
             let exec = started.elapsed();
             ctx.metrics.on_batch_executed(reqs.len(), exec);
+            ctx.metrics.on_epoch(epoch);
             let scorings = ctx.router.scorings(batch.kind, k, l, n);
+            // Per-shard accounting: apportion the request's scoring
+            // budget across shards by their share of the rows (exact for
+            // `Exact`, where scorings = n; proportional attribution for
+            // the samplers), and attribute the group's shared execution
+            // time to every shard the scatter touched.
+            if let Some(sharded) = view.as_sharded() {
+                for (s, shard) in sharded.shards().iter().enumerate() {
+                    let per_request = scorings * shard.len() / n.max(1);
+                    ctx.metrics
+                        .on_shard_batch(epoch, s, shard.len(), per_request * reqs.len(), exec);
+                }
+            }
             for (qr, z) in reqs.into_iter().zip(zs) {
                 let queue_wait = started.duration_since(qr.enqueued);
                 ctx.metrics.on_complete(queue_wait, exec);
                 let _ = qr.reply.send(Response {
                     z,
                     kind: batch.kind,
+                    epoch,
                     queue_wait,
                     exec_time: exec,
                     scorings,
@@ -250,10 +334,10 @@ impl PartitionService {
     /// correcting the +1-per-padded-row bias), sum partials per query.
     fn run_exact_batch_pjrt(
         ctx: &WorkerCtx,
+        store: &Arc<EmbeddingStore>,
         batch: &Batch,
         rt: &RuntimeHandle,
     ) -> anyhow::Result<()> {
-        let store = &ctx.store;
         let (n, d) = (store.len(), store.dim());
         // Artifact shapes come from meta.json via a probe call contract:
         // the service caches them in the handle-free config instead; here
@@ -299,6 +383,7 @@ impl PartitionService {
             let _ = qr.reply.send(Response {
                 z,
                 kind: EstimatorKind::Exact,
+                epoch: 0,
                 queue_wait,
                 exec_time: exec,
                 scorings: n,
@@ -307,8 +392,16 @@ impl PartitionService {
         Ok(())
     }
 
-    /// Submit a request; returns the reply receiver.
+    /// Submit a request; returns the reply receiver. Dimensionality is
+    /// validated here — before the request can occupy queue space — so a
+    /// malformed query fails fast instead of after its queue wait.
     pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if request.query.len() != self.dim {
+            return Err(SubmitError::DimMismatch {
+                got: request.query.len(),
+                want: self.dim,
+            });
+        }
         let (tx, rx) = mpsc::channel();
         let qr = QueuedRequest {
             request,
@@ -494,6 +587,115 @@ mod tests {
             a.z,
             b.z
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dim_mismatch_rejected_at_submit_time() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 16);
+        let err = svc
+            .submit(Request {
+                query: vec![0.0; 7],
+                kind: EstimatorKind::Mimps,
+                k: 5,
+                l: 5,
+            })
+            .unwrap_err();
+        assert_eq!(err, SubmitError::DimMismatch { got: 7, want: 16 });
+        assert_eq!(
+            err.to_string(),
+            "query dimensionality 7 != store dimensionality 16"
+        );
+        // Rejected requests never occupy the queue; valid ones still flow.
+        let ok = svc
+            .estimate(Request {
+                query: store.row(0).to_vec(),
+                kind: EstimatorKind::Nmimps,
+                k: 10,
+                l: 0,
+            })
+            .unwrap();
+        assert!(ok.z > 0.0);
+        let m = svc.metrics();
+        assert_eq!(m.submitted, 1, "dim-mismatched submit must not count");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn sharded_service_matches_monolithic_and_tracks_epochs() {
+        use crate::store::{exp_sum_view, ShardedStore, SnapshotHandle};
+        let store = generate(&SynthConfig {
+            n: 600,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let handle = Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, 4)));
+        let svc = PartitionService::start_sharded(
+            handle.clone(),
+            Router::new(FmbeConfig {
+                p_features: 100,
+                ..Default::default()
+            }),
+            ServiceConfig {
+                workers: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        let q = store.row(10).to_vec();
+        let r0 = svc
+            .estimate(Request {
+                query: q.clone(),
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+            })
+            .unwrap();
+        assert_eq!(r0.epoch, 0);
+        // The service rides the batched exact kernel; the single-query
+        // reference agrees to the last ulp on AVX2, while the scalar
+        // GEMM's different f32 accumulation order needs the same 1e-6
+        // bound tests/batching.rs uses (bit-level sharding equality is
+        // pinned like-for-like in tests/sharding.rs).
+        let want = exp_sum_view(&store, &q);
+        assert!(
+            (r0.z - want).abs() <= 1e-6 * want,
+            "sharded Exact {} vs monolithic {want}",
+            r0.z
+        );
+        // Publish a new epoch; subsequent requests answer from it.
+        let added = generate(&SynthConfig {
+            n: 40,
+            d: 16,
+            seed: 99,
+            ..SynthConfig::tiny()
+        });
+        assert_eq!(handle.add_categories(added).unwrap(), 1);
+        let r1 = svc
+            .estimate(Request {
+                query: q.clone(),
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+            })
+            .unwrap();
+        assert_eq!(r1.epoch, 1);
+        assert!(r1.z > r0.z, "new categories only add positive mass");
+        // MIMPS flows through the sharded scatter too.
+        let rm = svc
+            .estimate(Request {
+                query: q,
+                kind: EstimatorKind::Mimps,
+                k: 50,
+                l: 50,
+            })
+            .unwrap();
+        assert!(rm.z.is_finite() && rm.z > 0.0);
+        assert_eq!(rm.epoch, 1);
+        let m = svc.metrics();
+        assert_eq!(m.epoch, 1);
+        assert_eq!(m.shard_stats.len(), 5, "4 original shards + 1 added");
+        assert!(m.shard_stats.iter().all(|s| s.batches >= 1));
         svc.shutdown();
     }
 

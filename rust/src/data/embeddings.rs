@@ -55,14 +55,17 @@ impl EmbeddingStore {
         &self.data[lo * self.d..hi * self.d]
     }
 
-    /// Restrict to the first `n` rows (the paper uses the first 100k of 3M).
-    pub fn truncate(&self, n: usize) -> EmbeddingStore {
+    /// Restrict to the first `n` rows (the paper uses the first 100k of
+    /// 3M). Takes `self` and shrinks the backing `Vec` in place — no
+    /// copy of the retained prefix (at `ZEST_SCALE=paper` the old
+    /// clone-the-prefix version copied 100k×300 f32s); callers that need
+    /// to keep the full store borrow a prefix view through
+    /// [`crate::store::StoreView`] instead.
+    pub fn truncate(mut self, n: usize) -> EmbeddingStore {
         let n = n.min(self.n);
-        EmbeddingStore {
-            n,
-            d: self.d,
-            data: self.data[..n * self.d].to_vec(),
-        }
+        self.data.truncate(n * self.d);
+        self.n = n;
+        self
     }
 
     /// Per-row L2 norms.
@@ -140,10 +143,14 @@ mod tests {
     }
 
     #[test]
-    fn truncate_keeps_prefix() {
-        let s = small_store().truncate(2);
+    fn truncate_keeps_prefix_without_copying() {
+        let full = small_store();
+        let ptr = full.data().as_ptr();
+        let s = full.truncate(2);
         assert_eq!(s.len(), 2);
         assert_eq!(s.row(1), &[3.0, 4.0]);
+        assert_eq!(s.data().as_ptr(), ptr, "backing allocation is reused");
+        assert_eq!(small_store().truncate(99).len(), 3, "clamped to n");
     }
 
     #[test]

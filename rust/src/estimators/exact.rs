@@ -3,6 +3,7 @@
 
 use super::{EstimateContext, Estimator};
 use crate::linalg;
+use crate::store;
 
 /// Ẑ = Z: full O(N·d) sum (eq. 1).
 #[derive(Clone, Copy, Debug, Default)]
@@ -13,9 +14,13 @@ impl Estimator for Exact {
         "Exact".to_string()
     }
 
+    /// Streams the category matrix through [`store::exp_sum_view`]: for
+    /// any shard layout of the view this reproduces the monolithic fused
+    /// kernel's tiling and accumulation order, so the sharded answer is
+    /// bit-identical to the unsharded one (tested in
+    /// `tests/sharding.rs`).
     fn estimate(&self, ctx: &mut EstimateContext<'_>, q: &[f32]) -> f64 {
-        let store = ctx.store;
-        linalg::exp_sum_gemv(store.data(), store.len(), store.dim(), q)
+        store::exp_sum_view(ctx.store, q)
     }
 
     /// Batched exact: stream the category matrix once through the fused
@@ -25,15 +30,14 @@ impl Estimator for Exact {
     /// worker pool (`BruteIndex::partition_batch` is the data-parallel
     /// variant).
     fn estimate_batch(&self, ctx: &mut EstimateContext<'_>, qs: &[Vec<f32>]) -> Vec<f64> {
-        let store = ctx.store;
-        let (n, d) = (store.len(), store.dim());
+        let view = ctx.store;
         let nq = qs.len();
         if nq == 0 {
             return vec![];
         }
-        let qs_flat = linalg::flatten_queries(qs, d);
+        let qs_flat = linalg::flatten_queries(qs, view.dim());
         let mut zs = vec![0f64; nq];
-        linalg::exp_sum_gemm(store.data(), n, d, &qs_flat, nq, &mut zs);
+        store::exp_sum_view_batch(view, &qs_flat, nq, &mut zs);
         zs
     }
 

@@ -22,8 +22,8 @@
 //! `x·y` values real embeddings produce. The reproduction shows the same.
 
 use super::{EstimateContext, Estimator};
-use crate::data::embeddings::EmbeddingStore;
 use crate::linalg;
+use crate::store::StoreView;
 use crate::util::rng::Rng;
 use crate::util::threadpool;
 
@@ -72,8 +72,12 @@ fn ln_factorial(m: usize) -> f64 {
 }
 
 impl Fmbe {
-    /// Draw the random features and precompute λ̃ over the store.
-    pub fn fit(store: &EmbeddingStore, cfg: FmbeConfig) -> Fmbe {
+    /// Draw the random features and precompute λ̃ over the store. The
+    /// feature draw depends only on `(seed, d)` and the λ̃ sums stream
+    /// global rows in order, so a sharded view fits to exactly the same
+    /// estimator as the monolithic matrix (exp-sums are additive across
+    /// shards; `tests/sharding.rs` pins seed-equality).
+    pub fn fit(store: &dyn StoreView, cfg: FmbeConfig) -> Fmbe {
         let d = store.dim();
         let n = store.len();
         let mut rng = Rng::seeded(cfg.seed ^ 0xF3BE);
@@ -90,13 +94,20 @@ impl Fmbe {
             // c_m² = a_m · p^{m+1} / P  (coefficient squared, both sides folded).
             let c_sq = ((cfg.p_geom.ln() * (m + 1) as f64) - ln_factorial(m)).exp()
                 / cfg.p_features as f64;
-            // Σ_i Π_r (v_i·ω_r): stream rows once per projection.
+            // Σ_i Π_r (v_i·ω_r): stream contiguous row blocks once per
+            // projection (per-row shard lookups through `row(i)` would
+            // cost a binary search each on sharded views; the chunk walk
+            // touches each shard's block directly). Per-row dot order is
+            // unchanged, so λ̃ stays bit-identical across layouts.
             let mut prod = vec![1f64; n];
             for r in 0..m {
                 let w = &omegas[r * d..(r + 1) * d];
-                for (i, pi) in prod.iter_mut().enumerate() {
-                    *pi *= linalg::dot(store.row(i), w) as f64;
-                }
+                store.for_each_chunk(0, n, &mut |start, rows| {
+                    let nrows = rows.len() / d;
+                    for (j, pi) in prod[start..start + nrows].iter_mut().enumerate() {
+                        *pi *= linalg::dot(&rows[j * d..(j + 1) * d], w) as f64;
+                    }
+                });
             }
             let total: f64 = prod.iter().sum();
             Feature {
@@ -197,6 +208,7 @@ impl Estimator for Fmbe {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::embeddings::EmbeddingStore;
     use crate::data::synth::{generate, SynthConfig};
     use crate::mips::brute::BruteIndex;
 

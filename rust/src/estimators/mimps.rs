@@ -19,15 +19,39 @@ use super::{tail, EstimateContext, Estimator};
 use crate::mips::Hit;
 
 /// MIMPS estimator with head size `k` and tail sample size `l`.
+///
+/// `stratified` switches the tail correction to per-shard stratified
+/// sampling ([`tail::stratified_tail_z`]) when the context's store is a
+/// [`crate::store::ShardedStore`]: the `l` budget is split across shards
+/// proportionally to their complement sizes, so no shard's tail mass can
+/// be missed entirely. Same expectation as the global draw (unbiased),
+/// lower variance on heterogeneous shards — but the draw sequence then
+/// depends on the shard layout, so only the default global mode is
+/// shard-count-invariant under a fixed seed.
 #[derive(Clone, Copy, Debug)]
 pub struct Mimps {
     pub k: usize,
     pub l: usize,
+    pub stratified: bool,
 }
 
 impl Mimps {
     pub fn new(k: usize, l: usize) -> Self {
-        Mimps { k, l }
+        Mimps {
+            k,
+            l,
+            stratified: false,
+        }
+    }
+
+    /// Shard-stratified tail sampling (falls back to the global draw on
+    /// monolithic stores).
+    pub fn stratified(k: usize, l: usize) -> Self {
+        Mimps {
+            k,
+            l,
+            stratified: true,
+        }
     }
 
     /// Head-sum + sampled tail correction for one already-retrieved head.
@@ -39,6 +63,14 @@ impl Mimps {
         let k_eff = head.len();
         if k_eff >= n || self.l == 0 {
             return head_z;
+        }
+        if self.stratified {
+            let store = ctx.store;
+            if let Some(sharded) = store.as_sharded() {
+                let tail_z =
+                    tail::stratified_tail_z(sharded, head, self.l, q, ctx.rng, &mut ctx.scratch);
+                return head_z + tail_z;
+            }
         }
         tail::sample_tail_into(ctx.store, head, self.l, q, ctx.rng, &mut ctx.scratch);
         let drawn = ctx.scratch.indices.len();

@@ -23,13 +23,19 @@ pub mod probability;
 pub mod tail;
 pub mod uniform;
 
-use crate::data::embeddings::EmbeddingStore;
 use crate::mips::MipsIndex;
+use crate::store::StoreView;
 use crate::util::rng::Rng;
 
 /// Everything an estimator may consult for one query (or query batch).
+///
+/// The category matrix is a [`StoreView`], so the same estimator code
+/// serves a monolithic `EmbeddingStore` and an epoch-pinned
+/// [`crate::store::ShardedStore`] — global ids, row access and exp-sum
+/// streaming are shard-transparent (see `store` module docs for the
+/// bit-stability contract).
 pub struct EstimateContext<'a> {
-    pub store: &'a EmbeddingStore,
+    pub store: &'a dyn StoreView,
     pub index: &'a dyn MipsIndex,
     pub rng: &'a mut Rng,
     /// Reusable tail-sampling scratch (bitset + sample buffers) so the
@@ -38,7 +44,7 @@ pub struct EstimateContext<'a> {
 }
 
 impl<'a> EstimateContext<'a> {
-    pub fn new(store: &'a EmbeddingStore, index: &'a dyn MipsIndex, rng: &'a mut Rng) -> Self {
+    pub fn new(store: &'a dyn StoreView, index: &'a dyn MipsIndex, rng: &'a mut Rng) -> Self {
         EstimateContext {
             store,
             index,

@@ -8,10 +8,19 @@
 //! bitset that is cleared sparsely (only the words actually touched),
 //! and the index/score buffers keep their capacity across calls. The
 //! allocating [`sample_tail`] wrapper remains for one-off callers.
+//!
+//! Sampling is over **global** ids of a [`StoreView`], so the same draw
+//! sequence serves monolithic and sharded stores — that is what makes
+//! sampler estimates shard-layout-invariant under a fixed seed. The
+//! shard-aware alternative, [`stratified_tail_z`], allocates the budget
+//! across shards proportionally to their complement sizes (one uniform
+//! stratum per shard) — same expectation, lower variance when shards
+//! have heterogeneous score ranges, at the cost of draw sequences that
+//! depend on the shard layout.
 
-use crate::data::embeddings::EmbeddingStore;
 use crate::linalg;
 use crate::mips::Hit;
+use crate::store::{ShardedStore, StoreView};
 use crate::util::rng::Rng;
 
 /// A scored uniform tail sample (owning variant, see [`sample_tail`]).
@@ -81,7 +90,7 @@ impl TailScratch {
 /// Draw `l` distinct indices uniformly from `[0, n) \ head`, score them,
 /// and leave the result in `scratch.indices` / `scratch.exp_scores`.
 pub fn sample_tail_into(
-    store: &EmbeddingStore,
+    store: &dyn StoreView,
     head: &[Hit],
     l: usize,
     q: &[f32],
@@ -132,7 +141,7 @@ pub fn sample_tail_into(
 
 /// Allocating wrapper around [`sample_tail_into`] for one-off callers.
 pub fn sample_tail(
-    store: &EmbeddingStore,
+    store: &dyn StoreView,
     head: &[Hit],
     l: usize,
     q: &[f32],
@@ -143,6 +152,147 @@ pub fn sample_tail(
     TailSample {
         indices: scratch.indices,
         exp_scores: scratch.exp_scores,
+    }
+}
+
+/// Stratified tail estimate over a sharded store: an unbiased estimate of
+/// `Σ_{u ∉ head} exp(u·q)` with one uniform stratum per shard.
+///
+/// Per shard `s` with complement size `C_s` (shard rows not in the head)
+/// the budget share is `l_s ∝ C_s` (D'Hondt rounding, every non-empty
+/// stratum gets ≥ 1), and the stratum contributes `(C_s / l_s) · Σ exp`
+/// over its `l_s` distinct draws. Expectation telescopes to the true
+/// tail sum per stratum, so the total stays unbiased; variance drops
+/// when shards have heterogeneous tail ranges because no stratum can be
+/// missed entirely. When `l` cannot cover every non-empty stratum the
+/// function falls back to one global uniform stratum (still unbiased).
+///
+/// Draws land in `scratch.indices` / `scratch.exp_scores` (global ids),
+/// like [`sample_tail_into`].
+pub fn stratified_tail_z(
+    store: &ShardedStore,
+    head: &[Hit],
+    l: usize,
+    q: &[f32],
+    rng: &mut Rng,
+    scratch: &mut TailScratch,
+) -> f64 {
+    let n = StoreView::len(store);
+    scratch.reset(n);
+    if n == 0 || l == 0 {
+        return 0.0;
+    }
+    // Mark the head once, counting exclusions per shard.
+    let num_shards = store.num_shards();
+    let mut head_in = vec![0usize; num_shards];
+    let mut excluded = 0usize;
+    for h in head {
+        if h.idx < n && scratch.insert(h.idx) {
+            head_in[store.shard_of(h.idx).0] += 1;
+            excluded += 1;
+        }
+    }
+    let caps: Vec<usize> = (0..num_shards)
+        .map(|s| store.shard(s).len() - head_in[s])
+        .collect();
+    let c_total: usize = caps.iter().sum();
+    if c_total == 0 {
+        return 0.0;
+    }
+    let l = l.min(c_total);
+    let strata = caps.iter().filter(|&&c| c > 0).count();
+    if l < strata {
+        // Too few draws to cover every stratum: one global stratum.
+        drain_shard_sample(store, 0, n, excluded, l, q, rng, scratch);
+        let sum: f64 = scratch.exp_scores.iter().sum();
+        return c_total as f64 * sum / l as f64;
+    }
+    // Proportional allocation: seed every non-empty stratum with one
+    // draw, then hand out the rest by D'Hondt quotients (cap-aware).
+    let mut alloc: Vec<usize> = caps.iter().map(|&c| usize::from(c > 0)).collect();
+    let mut rem = l - strata;
+    while rem > 0 {
+        let mut best = usize::MAX;
+        let mut best_q = f64::NEG_INFINITY;
+        for (s, (&c, &a)) in caps.iter().zip(&alloc).enumerate() {
+            if a >= c {
+                continue;
+            }
+            let quot = c as f64 / (a + 1) as f64;
+            if quot > best_q {
+                best_q = quot;
+                best = s;
+            }
+        }
+        debug_assert_ne!(best, usize::MAX, "l ≤ C_total guarantees spare capacity");
+        alloc[best] += 1;
+        rem -= 1;
+    }
+    // Sample each stratum and accumulate its weighted mass. The bitset
+    // already holds the head; per-shard draws extend it.
+    let mut z = 0f64;
+    for s in 0..num_shards {
+        if alloc[s] == 0 {
+            continue;
+        }
+        let lo = store.shard(s).offset();
+        let first = scratch.indices.len();
+        drain_shard_sample(
+            store,
+            lo,
+            store.shard(s).len(),
+            head_in[s],
+            alloc[s],
+            q,
+            rng,
+            scratch,
+        );
+        let sum: f64 = scratch.exp_scores[first..].iter().sum();
+        z += caps[s] as f64 * sum / alloc[s] as f64;
+    }
+    z
+}
+
+/// Draw `take` distinct unmarked global ids from `[lo, lo + len)`, score
+/// them, and append to the scratch buffers. `marked` is the number of
+/// already-set bits in the range (the caller tracked it while marking
+/// the head — strata are visited once each, so no rescan is needed and
+/// the draw stays O(k + l), not O(N)). Same rejection-vs-partial-
+/// Fisher–Yates policy as [`sample_tail_into`], per stratum.
+#[allow(clippy::too_many_arguments)]
+fn drain_shard_sample(
+    store: &ShardedStore,
+    lo: usize,
+    len: usize,
+    marked: usize,
+    take: usize,
+    q: &[f32],
+    rng: &mut Rng,
+    scratch: &mut TailScratch,
+) {
+    let first = scratch.indices.len();
+    if (marked + take) * 4 <= len {
+        while scratch.indices.len() - first < take {
+            let i = lo + rng.below(len);
+            if scratch.insert(i) {
+                scratch.indices.push(i);
+            }
+        }
+    } else {
+        let mut pool: Vec<usize> = (lo..lo + len).filter(|&i| !scratch.contains(i)).collect();
+        let take = take.min(pool.len());
+        for i in 0..take {
+            let j = rng.range(i, pool.len());
+            pool.swap(i, j);
+            scratch.insert(pool[i]);
+            scratch.indices.push(pool[i]);
+        }
+    }
+    for pos in first..scratch.indices.len() {
+        let i = scratch.indices[pos];
+        scratch
+            .exp_scores
+            .push((linalg::dot(store.row(i), q) as f64).exp());
     }
 }
 

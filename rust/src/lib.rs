@@ -20,8 +20,10 @@
 //! * [`estimators::Fmbe`] — Kar–Karnick random feature maps for the `exp`
 //!   dot-product kernel (paper eq. 8–10) with precomputed `λ̃` sums.
 //!
-//! Substrates — the MIPS indexes ([`mips`]), synthetic datasets matching
-//! the paper's word2vec / Penn-Treebank workloads ([`data`]), an oracle
+//! Substrates — the storage layer with epoch-snapshotted sharding
+//! ([`store`]), the MIPS indexes ([`mips`], including the scatter-gather
+//! [`mips::sharded::ShardedIndex`]), synthetic datasets matching the
+//! paper's word2vec / Penn-Treebank workloads ([`data`]), an oracle
 //! with controlled retrieval-error injection ([`oracle`]), a log-bilinear
 //! language model trained with NCE ([`lm`]), a PJRT runtime that executes
 //! AOT-compiled JAX/Pallas scoring graphs ([`runtime`]), and a batching
@@ -58,6 +60,7 @@ pub mod metrics;
 pub mod mips;
 pub mod oracle;
 pub mod runtime;
+pub mod store;
 pub mod testing;
 pub mod util;
 
@@ -65,3 +68,4 @@ pub use config::Config;
 pub use data::embeddings::EmbeddingStore;
 pub use estimators::Estimator;
 pub use mips::MipsIndex;
+pub use store::{ShardedStore, SnapshotHandle, StoreView};

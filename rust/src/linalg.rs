@@ -183,18 +183,26 @@ pub fn gemm(m: &[f32], rows: usize, d: usize, qs: &[f32], nq: usize, out: &mut [
     scalar::gemm(m, rows, d, qs, nq, out);
 }
 
+/// Row tile of [`exp_sum_gemv`]. `store::exp_sum_view` replays the same
+/// tiling over sharded views to stay bit-identical to this kernel — the
+/// two must share this constant.
+pub const EXP_SUM_TILE: usize = 256;
+
+/// Row tile of [`exp_sum_gemm`]; shared with `store::exp_sum_view_batch`
+/// for the same bit-stability reason.
+pub const EXP_SUM_BATCH_TILE: usize = 64;
+
 /// Fused Σ exp(m[r] · q) over all rows, accumulated in f64 without
 /// materializing an N-sized score vector: scores are produced by the
 /// blocked GEMV into a small cache-resident tile and exp-summed
 /// immediately. This is the single-query partition-function kernel.
 pub fn exp_sum_gemv(m: &[f32], rows: usize, d: usize, q: &[f32]) -> f64 {
     debug_assert_eq!(m.len(), rows * d);
-    const TILE: usize = 256;
-    let mut tile = [0f32; TILE];
+    let mut tile = [0f32; EXP_SUM_TILE];
     let mut acc = 0f64;
     let mut r = 0usize;
     while r < rows {
-        let hi = (r + TILE).min(rows);
+        let hi = (r + EXP_SUM_TILE).min(rows);
         let nrows = hi - r;
         gemv_blocked(&m[r * d..hi * d], nrows, d, q, &mut tile[..nrows]);
         for &s in &tile[..nrows] {
@@ -218,13 +226,13 @@ pub fn exp_sum_gemm(m: &[f32], rows: usize, d: usize, qs_flat: &[f32], nq: usize
     if rows == 0 || nq == 0 {
         return;
     }
-    // Row tile keeps the (TILE_ROWS × nq) score block cache-resident
-    // while still amortizing each streamed row over all nq queries.
-    const TILE_ROWS: usize = 64;
-    let mut tile = vec![0f32; TILE_ROWS * nq];
+    // Row tile keeps the (EXP_SUM_BATCH_TILE × nq) score block
+    // cache-resident while still amortizing each streamed row over all
+    // nq queries.
+    let mut tile = vec![0f32; EXP_SUM_BATCH_TILE * nq];
     let mut lo = 0usize;
     while lo < rows {
-        let hi = (lo + TILE_ROWS).min(rows);
+        let hi = (lo + EXP_SUM_BATCH_TILE).min(rows);
         let nrows = hi - lo;
         gemm(&m[lo * d..hi * d], nrows, d, qs_flat, nq, &mut tile[..nrows * nq]);
         for r in 0..nrows {

@@ -15,15 +15,22 @@ pub struct BruteIndex {
 
 impl BruteIndex {
     pub fn new(store: &EmbeddingStore) -> Self {
-        BruteIndex {
-            data: std::sync::Arc::new(store.clone()),
-            threads: threadpool::default_threads(),
-        }
+        Self::from_arc(std::sync::Arc::new(store.clone()))
     }
 
     pub fn with_threads(store: &EmbeddingStore, threads: usize) -> Self {
+        Self::from_arc_with_threads(std::sync::Arc::new(store.clone()), threads)
+    }
+
+    /// Share an already-`Arc`'d store (shard builds avoid the full
+    /// matrix copy `new` makes).
+    pub fn from_arc(store: std::sync::Arc<EmbeddingStore>) -> Self {
+        Self::from_arc_with_threads(store, threadpool::default_threads())
+    }
+
+    pub fn from_arc_with_threads(store: std::sync::Arc<EmbeddingStore>, threads: usize) -> Self {
         BruteIndex {
-            data: std::sync::Arc::new(store.clone()),
+            data: store,
             threads: threads.max(1),
         }
     }

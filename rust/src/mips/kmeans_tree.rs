@@ -114,13 +114,19 @@ impl Ord for QEntry {
 impl KMeansTreeIndex {
     /// Build the tree over `store`.
     pub fn build(store: &EmbeddingStore, cfg: KMeansTreeConfig) -> Self {
-        let transform = MipsTransform::lift(store);
+        Self::build_from_arc(std::sync::Arc::new(store.clone()), cfg)
+    }
+
+    /// Build over an already-`Arc`'d store (shard builds avoid the full
+    /// matrix copy `build` makes).
+    pub fn build_from_arc(store: std::sync::Arc<EmbeddingStore>, cfg: KMeansTreeConfig) -> Self {
+        let transform = MipsTransform::lift(&store);
         let mut rng = Rng::seeded(cfg.seed);
         let mut nodes = Vec::new();
         let all: Vec<usize> = (0..store.len()).collect();
-        let root = Self::build_node(store, &transform, all, &cfg, &mut rng, &mut nodes);
+        let root = Self::build_node(&store, &transform, all, &cfg, &mut rng, &mut nodes);
         KMeansTreeIndex {
-            store: std::sync::Arc::new(store.clone()),
+            store,
             transform,
             nodes,
             root,

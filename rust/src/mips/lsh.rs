@@ -55,7 +55,13 @@ pub struct SimHashIndex {
 
 impl SimHashIndex {
     pub fn build(store: &EmbeddingStore, cfg: LshConfig) -> Self {
-        let transform = MipsTransform::lift(store);
+        Self::build_from_arc(std::sync::Arc::new(store.clone()), cfg)
+    }
+
+    /// Build over an already-`Arc`'d store (shard builds avoid the full
+    /// matrix copy `build` makes).
+    pub fn build_from_arc(store: std::sync::Arc<EmbeddingStore>, cfg: LshConfig) -> Self {
+        let transform = MipsTransform::lift(&store);
         let ld = transform.d + 1;
         let mut rng = Rng::seeded(cfg.seed ^ 0x5151_5151);
         let mut tables = Vec::with_capacity(cfg.tables);
@@ -71,7 +77,7 @@ impl SimHashIndex {
             tables.push(Table { planes, buckets });
         }
         SimHashIndex {
-            store: std::sync::Arc::new(store.clone()),
+            store,
             transform,
             tables,
             cfg,

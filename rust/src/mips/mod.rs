@@ -13,6 +13,9 @@
 //! * [`lsh::SimHashIndex`] — multi-table signed-random-projection LSH,
 //!   the alternative indexing family the paper cites (Shrivastava & Li,
 //!   Neyshabur & Srebro),
+//! * [`sharded::ShardedIndex`] — scatter-gather composition: one
+//!   sub-index per shard of a [`crate::store::ShardedStore`], merged by
+//!   global id with [`select_top_k`]-compatible tie-breaking,
 //! * [`recall`] — recall@k measurement against the exact oracle.
 
 pub mod alsh;
@@ -22,6 +25,7 @@ pub mod kmeans_tree;
 pub mod lsh;
 pub mod pca_tree;
 pub mod recall;
+pub mod sharded;
 pub mod transform;
 
 /// A scored hit: category index + inner product with the query.
@@ -61,6 +65,17 @@ pub trait MipsIndex: Send + Sync {
 
     /// Short identifier for reports.
     fn name(&self) -> &'static str;
+}
+
+/// The canonical hit ordering: descending score, ties toward the lower
+/// id, incomparable (NaN) scores treated as equal. Shared by
+/// [`select_top_k`]'s final sort and [`sharded::merge_top_k`] so the
+/// cross-shard merge can never drift from the monolithic ordering.
+pub fn hit_cmp(a: &Hit, b: &Hit) -> std::cmp::Ordering {
+    b.score
+        .partial_cmp(&a.score)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then_with(|| a.idx.cmp(&b.idx))
 }
 
 /// Select the top-k hits from a scored slice (descending), in O(n log k).
@@ -105,12 +120,7 @@ pub fn select_top_k(scores: &[f32], k: usize) -> Vec<Hit> {
         .into_iter()
         .map(|Entry(score, idx)| Hit { idx, score })
         .collect();
-    hits.sort_by(|a, b| {
-        b.score
-            .partial_cmp(&a.score)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then_with(|| a.idx.cmp(&b.idx))
-    });
+    hits.sort_by(hit_cmp);
     hits
 }
 

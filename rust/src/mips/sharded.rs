@@ -1,0 +1,263 @@
+//! [`ShardedIndex`]: scatter-gather MIPS over a [`ShardedStore`].
+//!
+//! One independent index per shard (any [`MipsIndex`] family — brute,
+//! k-means tree, LSH — chosen by the builder closure). `top_k` /
+//! `top_k_batch` scatter the query across shards in parallel on the
+//! scoped thread pool, map each shard's local hits to global ids by
+//! adding the shard offset, and merge by `(score desc, global id asc)` —
+//! the exact comparator [`select_top_k`] uses, so over exact per-shard
+//! indexes the merged result is identical to an unsharded exact top-k,
+//! ties included (`rust/tests/sharding.rs` pins the tie ordering).
+//!
+//! Per-shard indexes are `Arc`-shared so epoch snapshots
+//! ([`crate::store::SnapshotHandle`]) can republish untouched shards
+//! without rebuilding their indexes.
+
+use super::{Hit, MipsIndex};
+use crate::data::embeddings::EmbeddingStore;
+use crate::store::ShardedStore;
+use crate::util::threadpool;
+use std::sync::Arc;
+
+/// MIPS index composed of one sub-index per contiguous shard.
+pub struct ShardedIndex {
+    offsets: Vec<usize>,
+    indexes: Vec<Arc<dyn MipsIndex>>,
+    len: usize,
+    threads: usize,
+}
+
+impl ShardedIndex {
+    /// Build one sub-index per shard of `store` with `build`.
+    pub fn build<F>(store: &ShardedStore, build: F) -> ShardedIndex
+    where
+        F: Fn(&Arc<EmbeddingStore>) -> Arc<dyn MipsIndex>,
+    {
+        let parts: Vec<(usize, Arc<dyn MipsIndex>)> = store
+            .shards()
+            .iter()
+            .map(|sh| (sh.offset(), build(sh.store())))
+            .collect();
+        Self::from_parts(parts)
+    }
+
+    /// Exact per-shard retrieval: one [`super::brute::BruteIndex`] per
+    /// shard, with the scoring threads split across shards so the
+    /// cross-shard scatter does not oversubscribe the machine.
+    pub fn brute(store: &ShardedStore) -> ShardedIndex {
+        let per_shard = per_shard_threads(store.num_shards());
+        Self::build(store, |s| {
+            Arc::new(super::brute::BruteIndex::from_arc_with_threads(
+                s.clone(),
+                per_shard,
+            ))
+        })
+    }
+
+    /// Assemble from `(global_offset, sub_index)` pairs in global order.
+    /// Offsets must be contiguous: each shard starts where the previous
+    /// one ended.
+    pub fn from_parts(parts: Vec<(usize, Arc<dyn MipsIndex>)>) -> ShardedIndex {
+        let mut offsets = Vec::with_capacity(parts.len());
+        let mut indexes = Vec::with_capacity(parts.len());
+        let mut expect = 0usize;
+        for (offset, index) in parts {
+            assert_eq!(
+                offset, expect,
+                "shard offsets must be contiguous: got {offset}, expected {expect}"
+            );
+            expect += index.len();
+            offsets.push(offset);
+            indexes.push(index);
+        }
+        ShardedIndex {
+            offsets,
+            indexes,
+            len: expect,
+            threads: threadpool::default_threads(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.indexes.len()
+    }
+
+    /// The sub-index serving shard `s` (for snapshot reuse).
+    pub fn shard_index(&self, s: usize) -> &Arc<dyn MipsIndex> {
+        &self.indexes[s]
+    }
+
+    pub fn shard_offset(&self, s: usize) -> usize {
+        self.offsets[s]
+    }
+
+    /// Map one shard's local hits to global ids.
+    fn globalize(offset: usize, hits: Vec<Hit>) -> Vec<Hit> {
+        hits.into_iter()
+            .map(|h| Hit {
+                idx: h.idx + offset,
+                score: h.score,
+            })
+            .collect()
+    }
+}
+
+/// Fair scoring-thread budget for one shard of `num_shards`: the
+/// cross-shard scatter runs shards concurrently, so each shard gets its
+/// share of the machine instead of the full default (which would
+/// oversubscribe S-fold). Shared by [`ShardedIndex::brute`] and the
+/// snapshot builders.
+pub fn per_shard_threads(num_shards: usize) -> usize {
+    threadpool::default_threads()
+        .div_ceil(num_shards.max(1))
+        .max(1)
+}
+
+/// Merge already-retrieved per-shard hits into one global top-`k`: sort
+/// by the canonical [`super::hit_cmp`] ordering — the comparator
+/// [`select_top_k`](super::select_top_k) applies — and truncate. Every
+/// global top-k member is inside its shard's local top-k, so merging
+/// per-shard top-k lists loses nothing.
+pub fn merge_top_k(per_shard: Vec<Vec<Hit>>, k: usize) -> Vec<Hit> {
+    let mut all: Vec<Hit> = per_shard.into_iter().flatten().collect();
+    all.sort_by(super::hit_cmp);
+    all.truncate(k);
+    all
+}
+
+impl MipsIndex for ShardedIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        let per_shard = threadpool::par_map(self.indexes.len(), self.threads, |s| {
+            Self::globalize(self.offsets[s], self.indexes[s].top_k(q, k))
+        });
+        merge_top_k(per_shard, k)
+    }
+
+    fn top_k_batch(&self, qs: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        let nq = qs.len();
+        if nq == 0 {
+            return vec![];
+        }
+        // Scatter: each shard answers the whole query block through its
+        // own batched path (the PR 1 GEMM pass on brute sub-indexes).
+        let mut per_shard: Vec<Vec<Vec<Hit>>> =
+            threadpool::par_map(self.indexes.len(), self.threads, |s| {
+                self.indexes[s]
+                    .top_k_batch(qs, k)
+                    .into_iter()
+                    .map(|hits| Self::globalize(self.offsets[s], hits))
+                    .collect()
+            });
+        // Gather: merge shard answers per query, in submission order,
+        // moving each shard's hit vector out instead of cloning it.
+        (0..nq)
+            .map(|qi| {
+                merge_top_k(
+                    per_shard
+                        .iter_mut()
+                        .map(|shard| std::mem::take(&mut shard[qi]))
+                        .collect(),
+                    k,
+                )
+            })
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn probe_cost(&self, k: usize) -> usize {
+        self.indexes.iter().map(|i| i.probe_cost(k)).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::brute::BruteIndex;
+
+    fn store(n: usize) -> EmbeddingStore {
+        generate(&SynthConfig {
+            n,
+            d: 16,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn top_k_matches_unsharded_brute() {
+        let s = store(400);
+        let mono = BruteIndex::new(&s);
+        let q = s.row(13).to_vec();
+        let want = mono.top_k(&q, 25);
+        for count in [1usize, 3, 7] {
+            let sharded = ShardedIndex::brute(&ShardedStore::split(&s, count));
+            let got = sharded.top_k(&q, 25);
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.idx, w.idx, "shards={count}");
+                assert!(
+                    (g.score - w.score).abs() <= 1e-5 * (1.0 + w.score.abs()),
+                    "shards={count}: {} vs {}",
+                    g.score,
+                    w.score
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let s = store(300);
+        let sharded = ShardedIndex::brute(&ShardedStore::split(&s, 4));
+        let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 50 + 2).to_vec()).collect();
+        let batched = sharded.top_k_batch(&qs, 12);
+        for (q, hits) in qs.iter().zip(&batched) {
+            assert_eq!(hits, &sharded.top_k(q, 12));
+        }
+        assert!(sharded.top_k_batch(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn merge_breaks_ties_by_global_id() {
+        // Two shards return equal scores; lower global id must win, and
+        // ordering must match select_top_k on the concatenated scores.
+        let a = vec![
+            Hit { idx: 4, score: 2.0 },
+            Hit { idx: 0, score: 1.0 },
+        ];
+        let b = vec![
+            Hit { idx: 3, score: 2.0 },
+            Hit { idx: 9, score: 2.0 },
+        ];
+        let merged = merge_top_k(vec![a, b], 3);
+        assert_eq!(
+            merged.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            vec![3, 4, 9]
+        );
+    }
+
+    #[test]
+    fn len_and_probe_cost_aggregate() {
+        let s = store(200);
+        let sharded = ShardedIndex::brute(&ShardedStore::split(&s, 3));
+        assert_eq!(sharded.len(), 200);
+        assert_eq!(sharded.probe_cost(10), 200, "brute probes every row once");
+        assert_eq!(sharded.num_shards(), 3);
+        assert_eq!(sharded.name(), "sharded");
+    }
+
+    #[test]
+    #[should_panic(expected = "contiguous")]
+    fn from_parts_rejects_offset_gaps() {
+        let s = store(20);
+        let idx: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&s));
+        ShardedIndex::from_parts(vec![(5, idx)]);
+    }
+}

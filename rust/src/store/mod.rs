@@ -1,0 +1,242 @@
+//! The storage layer behind every scoring path: a [`StoreView`] trait
+//! abstracting "N×d row-major category matrix" so consumers (estimators,
+//! indexes, the coordinator) no longer assume one monolithic
+//! [`EmbeddingStore`], plus:
+//!
+//! * [`sharded::ShardedStore`] — N categories partitioned into S
+//!   contiguous shards with stable global ids (global id = shard offset +
+//!   local row), the scaling axis after PR 1's batching: each shard gets
+//!   its own index build and its own slice of every scoring pass.
+//! * [`snapshot::SnapshotHandle`] — an epoch-stamped, `Arc`-swap style
+//!   published view `{epoch, store, per-shard indexes}` supporting
+//!   `add_categories` / `remove_categories` without pausing readers:
+//!   in-flight work keeps the `Arc<Snapshot>` it pinned, new work sees
+//!   the new epoch.
+//!
+//! ## Bit-stability contract
+//!
+//! [`exp_sum_view`] / [`exp_sum_view_batch`] stream *any* view through
+//! the same global row tiling that `linalg::exp_sum_gemv` /
+//! `linalg::exp_sum_gemm` use on a contiguous matrix (tiles of
+//! [`EXP_SUM_TILE`] / [`EXP_SUM_BATCH_TILE`] rows aligned to row 0, one
+//! sequential f64 accumulator per query). Tiles that cross a shard
+//! boundary are staged into a scratch buffer — same bytes, same kernel
+//! calls, same accumulation order — so `Exact` over a `ShardedStore` is
+//! **bit-identical** to the unsharded answer for every shard layout, on
+//! both the AVX2 and scalar backends. `rust/tests/sharding.rs` pins this.
+
+pub mod sharded;
+pub mod snapshot;
+
+pub use sharded::{Shard, ShardedStore};
+pub use snapshot::{ShardIndexBuilder, Snapshot, SnapshotHandle};
+
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+
+/// Read-only view of an N×d row-major category matrix. Implemented by
+/// the monolithic [`EmbeddingStore`] (one chunk) and by [`ShardedStore`]
+/// (one chunk per shard).
+pub trait StoreView: Send + Sync {
+    /// Number of categories N.
+    fn len(&self) -> usize;
+
+    /// Dimensionality d.
+    fn dim(&self) -> usize;
+
+    /// The contiguous storage block containing global row `i`:
+    /// `(block_first_row, block_rows)` where `block_rows` is row-major
+    /// (`block_len × d`) and `block_first_row ≤ i <
+    /// block_first_row + block_len`. One block for a monolithic store;
+    /// the owning shard's block for a sharded store.
+    fn chunk_at(&self, i: usize) -> (usize, &[f32]);
+
+    /// The i-th category vector (global id).
+    fn row(&self, i: usize) -> &[f32] {
+        let d = self.dim();
+        let (start, rows) = self.chunk_at(i);
+        &rows[(i - start) * d..(i - start + 1) * d]
+    }
+
+    /// Visit the contiguous row blocks covering `[lo, hi)` in global row
+    /// order: `f(block_start, rows)` with `rows` row-major
+    /// (`block_len × d`). Blocks are non-empty and tile `[lo, hi)`
+    /// exactly.
+    fn for_each_chunk(&self, lo: usize, hi: usize, f: &mut dyn FnMut(usize, &[f32])) {
+        let d = self.dim();
+        let mut pos = lo;
+        while pos < hi {
+            let (start, rows) = self.chunk_at(pos);
+            let chunk_end = start + rows.len() / d;
+            let take_hi = hi.min(chunk_end);
+            f(pos, &rows[(pos - start) * d..(take_hi - start) * d]);
+            pos = take_hi;
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Downcast hook for shard-aware consumers (stratified tail
+    /// sampling, per-shard metrics). `None` for monolithic stores.
+    fn as_sharded(&self) -> Option<&ShardedStore> {
+        None
+    }
+}
+
+impl StoreView for EmbeddingStore {
+    fn len(&self) -> usize {
+        EmbeddingStore::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        EmbeddingStore::dim(self)
+    }
+
+    fn chunk_at(&self, i: usize) -> (usize, &[f32]) {
+        assert!(i < EmbeddingStore::len(self), "row {i} out of bounds");
+        (0, self.data())
+    }
+
+    fn row(&self, i: usize) -> &[f32] {
+        EmbeddingStore::row(self, i)
+    }
+}
+
+/// Row tiles of the streaming exp-sums — shared with the fused linalg
+/// kernels so the bit-stability contract is structural, not by
+/// convention.
+pub use crate::linalg::{EXP_SUM_BATCH_TILE, EXP_SUM_TILE};
+
+/// Rows `[lo, hi)` of `view` as one contiguous block: borrowed straight
+/// from the owning chunk when the range does not cross a chunk boundary,
+/// staged into `buf` otherwise.
+fn gather_rows<'a>(
+    view: &'a dyn StoreView,
+    lo: usize,
+    hi: usize,
+    buf: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    let d = view.dim();
+    let (start, rows) = view.chunk_at(lo);
+    let chunk_end = start + rows.len() / d;
+    if chunk_end >= hi {
+        return &rows[(lo - start) * d..(hi - start) * d];
+    }
+    buf.clear();
+    view.for_each_chunk(lo, hi, &mut |_, r| buf.extend_from_slice(r));
+    debug_assert_eq!(buf.len(), (hi - lo) * d);
+    buf
+}
+
+/// Σ exp(row · q) over every row of `view`, streamed through the same
+/// global [`EXP_SUM_TILE`]-row tiling and sequential f64 accumulation as
+/// `linalg::exp_sum_gemv` on a contiguous matrix — bit-identical for any
+/// shard layout (see module docs).
+pub fn exp_sum_view(view: &dyn StoreView, q: &[f32]) -> f64 {
+    let n = view.len();
+    let d = view.dim();
+    assert_eq!(q.len(), d, "query dimensionality mismatch");
+    let mut stage: Vec<f32> = Vec::new();
+    let mut tile = [0f32; EXP_SUM_TILE];
+    let mut acc = 0f64;
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + EXP_SUM_TILE).min(n);
+        let nrows = hi - lo;
+        let rows = gather_rows(view, lo, hi, &mut stage);
+        linalg::gemv_blocked(rows, nrows, d, q, &mut tile[..nrows]);
+        for &s in &tile[..nrows] {
+            acc += (s as f64).exp();
+        }
+        lo = hi;
+    }
+    acc
+}
+
+/// Batched streaming exp-sum: `zs[j] += Σ_rows exp(row · q_j)` with the
+/// same [`EXP_SUM_BATCH_TILE`]-row tiling and per-tile accumulation
+/// order as `linalg::exp_sum_gemm` — bit-identical for any shard layout.
+pub fn exp_sum_view_batch(view: &dyn StoreView, qs_flat: &[f32], nq: usize, zs: &mut [f64]) {
+    let n = view.len();
+    let d = view.dim();
+    assert_eq!(qs_flat.len(), nq * d);
+    assert_eq!(zs.len(), nq);
+    if n == 0 || nq == 0 {
+        return;
+    }
+    let mut stage: Vec<f32> = Vec::new();
+    let mut tile = vec![0f32; EXP_SUM_BATCH_TILE * nq];
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + EXP_SUM_BATCH_TILE).min(n);
+        let nrows = hi - lo;
+        let rows = gather_rows(view, lo, hi, &mut stage);
+        linalg::gemm(rows, nrows, d, qs_flat, nq, &mut tile[..nrows * nq]);
+        for r in 0..nrows {
+            for (qi, z) in zs.iter_mut().enumerate() {
+                *z += (tile[r * nq + qi] as f64).exp();
+            }
+        }
+        lo = hi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+
+    fn store(n: usize, d: usize) -> EmbeddingStore {
+        generate(&SynthConfig {
+            n,
+            d,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn monolithic_chunk_covers_range() {
+        let s = store(300, 16);
+        let mut seen = Vec::new();
+        StoreView::for_each_chunk(&s, 10, 200, &mut |start, rows| {
+            seen.push((start, rows.len()));
+        });
+        assert_eq!(seen, vec![(10, 190 * 16)]);
+        assert_eq!(StoreView::row(&s, 7), EmbeddingStore::row(&s, 7));
+    }
+
+    /// The view streaming kernel over a monolithic store must reproduce
+    /// the fused linalg kernel bit for bit (same tiles, same calls).
+    #[test]
+    fn exp_sum_view_bit_matches_linalg_on_monolithic() {
+        for n in [1usize, 255, 256, 257, 700] {
+            let s = store(n, 17);
+            let q: Vec<f32> = (0..17).map(|j| (j as f32 * 0.37).sin()).collect();
+            let got = exp_sum_view(&s, &q);
+            let want = linalg::exp_sum_gemv(s.data(), s.len(), 17, &q);
+            assert_eq!(got.to_bits(), want.to_bits(), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn exp_sum_view_empty_store_is_zero() {
+        let s = EmbeddingStore::from_data(0, 4, vec![]).unwrap();
+        assert_eq!(exp_sum_view(&s, &[0.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn exp_sum_view_batch_bit_matches_linalg_on_monolithic() {
+        let s = store(321, 19);
+        let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 60).to_vec()).collect();
+        let qs_flat = linalg::flatten_queries(&qs, 19);
+        let mut got = vec![0f64; qs.len()];
+        exp_sum_view_batch(&s, &qs_flat, qs.len(), &mut got);
+        let mut want = vec![0f64; qs.len()];
+        linalg::exp_sum_gemm(s.data(), s.len(), 19, &qs_flat, qs.len(), &mut want);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{g} vs {w}");
+        }
+    }
+}

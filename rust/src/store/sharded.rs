@@ -1,0 +1,269 @@
+//! [`ShardedStore`]: N categories partitioned into S contiguous shards.
+//!
+//! Global ids are **stable within a snapshot**: shard `s` owns the
+//! half-open global range `[offset_s, offset_s + len_s)` and maps global
+//! id `i` to local row `i − offset_s`. Shards in global order are
+//! exactly the category set in order, so exp-sums, top-k merges and
+//! tail sampling over the sharded view are the same mathematical objects
+//! as over the monolithic matrix (Spring & Shrivastava 2017: partition
+//! estimators compose across independent partitions — exp-sums are
+//! additive, top-k merges by heap).
+//!
+//! Shards hold `Arc<EmbeddingStore>` so snapshot mutations
+//! (`add_categories` / `remove_categories`) reuse every untouched
+//! shard's storage (and its index) by reference.
+
+use super::StoreView;
+use crate::data::embeddings::EmbeddingStore;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One contiguous shard: global rows `[offset, offset + store.len())`.
+#[derive(Clone)]
+pub struct Shard {
+    offset: usize,
+    store: Arc<EmbeddingStore>,
+}
+
+impl Shard {
+    /// Global id of this shard's first row.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Rows owned by this shard.
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// The shard's backing store (local row-major matrix).
+    pub fn store(&self) -> &Arc<EmbeddingStore> {
+        &self.store
+    }
+}
+
+/// S contiguous, non-empty shards covering `[0, len)` in global order.
+#[derive(Clone)]
+pub struct ShardedStore {
+    shards: Vec<Shard>,
+    len: usize,
+    dim: usize,
+}
+
+impl ShardedStore {
+    /// Partition `store` into `s` contiguous shards of near-equal size
+    /// (the first `n mod s` shards get one extra row). `s` is clamped to
+    /// `[1, n]` so every shard is non-empty.
+    pub fn split(store: &EmbeddingStore, s: usize) -> ShardedStore {
+        let n = store.len();
+        let d = store.dim();
+        let s = s.clamp(1, n.max(1));
+        let base = n / s;
+        let extra = n % s;
+        let mut shards = Vec::with_capacity(s);
+        let mut offset = 0usize;
+        for i in 0..s {
+            let rows = base + usize::from(i < extra);
+            if rows == 0 {
+                continue;
+            }
+            let shard_store =
+                EmbeddingStore::from_data(rows, d, store.rows(offset, offset + rows).to_vec())
+                    .expect("contiguous slice has exact n*d length");
+            shards.push(Shard {
+                offset,
+                store: Arc::new(shard_store),
+            });
+            offset += rows;
+        }
+        ShardedStore {
+            shards,
+            len: n,
+            dim: d,
+        }
+    }
+
+    /// Assemble from per-shard stores (in global order). Empty shards are
+    /// dropped; all non-empty shards must share one dimensionality.
+    pub fn from_stores(stores: Vec<Arc<EmbeddingStore>>) -> Result<ShardedStore> {
+        let mut dim = None;
+        let mut shards = Vec::with_capacity(stores.len());
+        let mut offset = 0usize;
+        for s in stores {
+            if s.is_empty() {
+                continue;
+            }
+            match dim {
+                None => dim = Some(s.dim()),
+                Some(d) if d != s.dim() => {
+                    bail!("shard dimensionality mismatch: {} != {}", s.dim(), d)
+                }
+                _ => {}
+            }
+            let rows = s.len();
+            shards.push(Shard { offset, store: s });
+            offset += rows;
+        }
+        let Some(dim) = dim else {
+            bail!("sharded store needs at least one non-empty shard");
+        };
+        Ok(ShardedStore {
+            shards,
+            len: offset,
+            dim,
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn shard(&self, s: usize) -> &Shard {
+        &self.shards[s]
+    }
+
+    /// Locate global id `i`: `(shard_index, local_row)`.
+    pub fn shard_of(&self, i: usize) -> (usize, usize) {
+        assert!(i < self.len, "row {i} out of bounds (len {})", self.len);
+        // partition_point: first shard whose range starts past i, minus 1.
+        let s = self.shards.partition_point(|sh| sh.offset <= i) - 1;
+        (s, i - self.shards[s].offset)
+    }
+
+    /// Copy the sharded view back into one contiguous store (tests,
+    /// export paths).
+    pub fn to_monolithic(&self) -> EmbeddingStore {
+        let mut data = Vec::with_capacity(self.len * self.dim);
+        for sh in &self.shards {
+            data.extend_from_slice(sh.store.data());
+        }
+        EmbeddingStore::from_data(self.len, self.dim, data).expect("shards tile the range")
+    }
+}
+
+impl StoreView for ShardedStore {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn chunk_at(&self, i: usize) -> (usize, &[f32]) {
+        let (s, _) = self.shard_of(i);
+        let sh = &self.shards[s];
+        (sh.offset, sh.store.data())
+    }
+
+    fn as_sharded(&self) -> Option<&ShardedStore> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::store::StoreView;
+
+    fn store(n: usize) -> EmbeddingStore {
+        generate(&SynthConfig {
+            n,
+            d: 8,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn split_sizes_cover_exactly() {
+        let s = store(103);
+        for count in [1usize, 2, 4, 7, 103, 500] {
+            let sh = ShardedStore::split(&s, count);
+            assert_eq!(StoreView::len(&sh), 103);
+            assert_eq!(sh.num_shards(), count.min(103));
+            let total: usize = sh.shards().iter().map(|x| x.len()).sum();
+            assert_eq!(total, 103);
+            // Contiguous offsets and near-equal sizes (±1).
+            let mut expect = 0usize;
+            let (mut lo, mut hi) = (usize::MAX, 0usize);
+            for x in sh.shards() {
+                assert_eq!(x.offset(), expect);
+                expect += x.len();
+                lo = lo.min(x.len());
+                hi = hi.max(x.len());
+            }
+            assert!(hi - lo <= 1, "balanced split: {lo}..{hi}");
+        }
+    }
+
+    #[test]
+    fn rows_match_monolithic_everywhere() {
+        let s = store(97);
+        let sh = ShardedStore::split(&s, 5);
+        for i in 0..97 {
+            assert_eq!(StoreView::row(&sh, i), s.row(i), "row {i}");
+        }
+        assert_eq!(sh.to_monolithic(), s);
+    }
+
+    #[test]
+    fn shard_of_maps_boundaries() {
+        let s = store(10);
+        let sh = ShardedStore::split(&s, 3); // sizes 4, 3, 3
+        assert_eq!(sh.shard_of(0), (0, 0));
+        assert_eq!(sh.shard_of(3), (0, 3));
+        assert_eq!(sh.shard_of(4), (1, 0));
+        assert_eq!(sh.shard_of(6), (1, 2));
+        assert_eq!(sh.shard_of(7), (2, 0));
+        assert_eq!(sh.shard_of(9), (2, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn shard_of_rejects_out_of_range() {
+        let s = store(10);
+        ShardedStore::split(&s, 2).shard_of(10);
+    }
+
+    #[test]
+    fn chunks_tile_across_shard_boundaries() {
+        let s = store(30);
+        let sh = ShardedStore::split(&s, 4); // sizes 8, 8, 7, 7
+        let mut covered = Vec::new();
+        sh.for_each_chunk(5, 27, &mut |start, rows| {
+            covered.push((start, rows.len() / 8));
+        });
+        assert_eq!(covered, vec![(5, 3), (8, 8), (16, 7), (23, 4)]);
+    }
+
+    #[test]
+    fn from_stores_requires_equal_dims() {
+        let a = Arc::new(EmbeddingStore::from_data(2, 3, vec![0.0; 6]).unwrap());
+        let b = Arc::new(EmbeddingStore::from_data(2, 4, vec![0.0; 8]).unwrap());
+        assert!(ShardedStore::from_stores(vec![a.clone(), b]).is_err());
+        assert!(ShardedStore::from_stores(vec![]).is_err());
+        let ok = ShardedStore::from_stores(vec![a.clone(), a]).unwrap();
+        assert_eq!(StoreView::len(&ok), 4);
+    }
+
+    #[test]
+    fn exp_sum_bit_identical_to_monolithic() {
+        let s = store(700);
+        let q = s.row(17).to_vec();
+        let want = crate::store::exp_sum_view(&s, &q);
+        for count in [1usize, 2, 4, 7, 64] {
+            let sh = ShardedStore::split(&s, count);
+            let got = crate::store::exp_sum_view(&sh, &q);
+            assert_eq!(got.to_bits(), want.to_bits(), "shards={count}");
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! Epoch snapshots over a [`ShardedStore`]: live category insertion and
+//! removal without pausing readers.
+//!
+//! A [`Snapshot`] is an immutable `{epoch, store, index}` triple; the
+//! [`SnapshotHandle`] publishes the current one behind an `RwLock<Arc<…>>`
+//! (`Arc`-swap style: the write lock is held only for the pointer swap,
+//! never during index builds). Readers call [`SnapshotHandle::load`] once
+//! per unit of work and keep using the pinned `Arc<Snapshot>` for its
+//! whole duration — a concurrent `add_categories` /
+//! `remove_categories` publishes epoch `e+1` while in-flight work keeps
+//! answering from epoch `e`. Per-shard stores and indexes are
+//! `Arc`-shared across epochs, so a mutation rebuilds only the shards it
+//! touches: `add_categories` appends one new shard (and builds one new
+//! sub-index); `remove_categories` rebuilds exactly the shards that lost
+//! rows.
+//!
+//! Id semantics: global ids are positional **within a snapshot**.
+//! `add_categories` extends the id range (existing ids are unchanged);
+//! `remove_categories` compacts ids, shifting rows after a removed
+//! position down — consumers that need cross-epoch identity must track
+//! their own label→id map per epoch.
+
+use super::sharded::ShardedStore;
+use super::StoreView;
+use crate::data::embeddings::EmbeddingStore;
+use crate::mips::sharded::{per_shard_threads, ShardedIndex};
+use crate::mips::MipsIndex;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// One immutable published epoch: the sharded category set plus the
+/// per-shard index set serving it.
+pub struct Snapshot {
+    pub epoch: u64,
+    pub store: Arc<ShardedStore>,
+    pub index: Arc<ShardedIndex>,
+}
+
+/// How to index one (new or rebuilt) shard. The `usize` is the
+/// suggested scoring-thread budget for that shard
+/// ([`per_shard_threads`] of the shard count of the snapshot being
+/// built), so per-shard indexes stay fair as epochs add or drop shards.
+pub type ShardIndexBuilder =
+    Arc<dyn Fn(&Arc<EmbeddingStore>, usize) -> Arc<dyn MipsIndex> + Send + Sync>;
+
+/// Publisher of epoch snapshots.
+pub struct SnapshotHandle {
+    current: RwLock<Arc<Snapshot>>,
+    /// Serializes mutators (read-modify-write) without blocking `load`.
+    writer: Mutex<()>,
+    builder: ShardIndexBuilder,
+}
+
+impl SnapshotHandle {
+    /// Publish epoch 0 of `store`, indexing every shard with `builder`.
+    pub fn new(store: ShardedStore, builder: ShardIndexBuilder) -> SnapshotHandle {
+        let threads = per_shard_threads(store.num_shards());
+        let index = ShardedIndex::build(&store, |s| builder(s, threads));
+        SnapshotHandle {
+            current: RwLock::new(Arc::new(Snapshot {
+                epoch: 0,
+                store: Arc::new(store),
+                index: Arc::new(index),
+            })),
+            writer: Mutex::new(()),
+            builder,
+        }
+    }
+
+    /// Convenience: exact (brute-force) per-shard indexes, each built
+    /// with the fair thread budget the handle passes for the snapshot
+    /// being published ([`per_shard_threads`]), so the cross-shard
+    /// scatter does not oversubscribe the machine as epochs add shards.
+    pub fn brute(store: ShardedStore) -> SnapshotHandle {
+        Self::new(
+            store,
+            Arc::new(|s: &Arc<EmbeddingStore>, threads: usize| {
+                Arc::new(crate::mips::brute::BruteIndex::from_arc_with_threads(
+                    s.clone(),
+                    threads,
+                )) as Arc<dyn MipsIndex>
+            }),
+        )
+    }
+
+    /// Pin the current snapshot. Cheap (one `Arc` clone under a read
+    /// lock); hold the returned `Arc` for the whole unit of work.
+    pub fn load(&self) -> Arc<Snapshot> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// The currently published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.current.read().unwrap().epoch
+    }
+
+    /// Append `rows` as one new shard and publish the next epoch.
+    /// Existing global ids are unchanged; the new categories take ids
+    /// `[old_len, old_len + rows.len())`. Every existing shard's store
+    /// and index are reused by reference. Returns the new epoch.
+    pub fn add_categories(&self, rows: EmbeddingStore) -> Result<u64> {
+        if rows.is_empty() {
+            bail!("add_categories: empty row set");
+        }
+        let _w = self.writer.lock().unwrap();
+        let cur = self.load();
+        if rows.dim() != StoreView::dim(cur.store.as_ref()) {
+            bail!(
+                "add_categories: dim {} != store dim {}",
+                rows.dim(),
+                StoreView::dim(cur.store.as_ref())
+            );
+        }
+        let new_shard = Arc::new(rows);
+        let mut stores: Vec<Arc<EmbeddingStore>> = cur
+            .store
+            .shards()
+            .iter()
+            .map(|sh| sh.store().clone())
+            .collect();
+        stores.push(new_shard.clone());
+        let store = ShardedStore::from_stores(stores)?;
+        // Reuse every existing sub-index; build one for the new shard.
+        let mut parts: Vec<(usize, Arc<dyn MipsIndex>)> = (0..cur.index.num_shards())
+            .map(|s| (cur.index.shard_offset(s), cur.index.shard_index(s).clone()))
+            .collect();
+        let threads = per_shard_threads(cur.store.num_shards() + 1);
+        parts.push((
+            StoreView::len(cur.store.as_ref()),
+            (self.builder)(&new_shard, threads),
+        ));
+        let index = ShardedIndex::from_parts(parts);
+        Ok(self.publish(&cur, store, index))
+    }
+
+    /// Remove the categories at the given global ids (of the **current**
+    /// snapshot) and publish the next epoch. Only shards that lost rows
+    /// are rebuilt (store + index); untouched shards are reused by
+    /// reference at their shifted offsets. Remaining ids compact
+    /// downward. Returns the new epoch.
+    pub fn remove_categories(&self, ids: &[usize]) -> Result<u64> {
+        if ids.is_empty() {
+            bail!("remove_categories: empty id set");
+        }
+        let _w = self.writer.lock().unwrap();
+        let cur = self.load();
+        let n = StoreView::len(cur.store.as_ref());
+        let mut sorted: Vec<usize> = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if let Some(&bad) = sorted.last() {
+            if bad >= n {
+                bail!("remove_categories: id {bad} out of range (len {n})");
+            }
+        }
+        let d = StoreView::dim(cur.store.as_ref());
+        // Conservative budget: assume the current shard count (removal
+        // can only shrink it, so rebuilt shards never oversubscribe).
+        let threads = per_shard_threads(cur.store.num_shards());
+        let mut stores: Vec<Arc<EmbeddingStore>> = Vec::new();
+        let mut parts: Vec<(usize, Arc<dyn MipsIndex>)> = Vec::new();
+        let mut offset = 0usize;
+        let mut drop_iter = sorted.iter().peekable();
+        for (s, sh) in cur.store.shards().iter().enumerate() {
+            let lo = sh.offset();
+            let hi = lo + sh.len();
+            // Global ids to drop inside this shard, as local rows.
+            let mut local_drops: Vec<usize> = Vec::new();
+            while let Some(&&g) = drop_iter.peek() {
+                if g >= hi {
+                    break;
+                }
+                local_drops.push(g - lo);
+                drop_iter.next();
+            }
+            if local_drops.is_empty() {
+                // Untouched: reuse store + index at the shifted offset.
+                stores.push(sh.store().clone());
+                parts.push((offset, cur.index.shard_index(s).clone()));
+                offset += sh.len();
+                continue;
+            }
+            let keep = sh.len() - local_drops.len();
+            if keep == 0 {
+                continue; // whole shard removed
+            }
+            let mut data = Vec::with_capacity(keep * d);
+            let mut next_drop = local_drops.iter().peekable();
+            for r in 0..sh.len() {
+                if next_drop.peek() == Some(&&r) {
+                    next_drop.next();
+                    continue;
+                }
+                data.extend_from_slice(sh.store().row(r));
+            }
+            let rebuilt = Arc::new(EmbeddingStore::from_data(keep, d, data)?);
+            parts.push((offset, (self.builder)(&rebuilt, threads)));
+            stores.push(rebuilt);
+            offset += keep;
+        }
+        let store = ShardedStore::from_stores(stores)?;
+        let index = ShardedIndex::from_parts(parts);
+        Ok(self.publish(&cur, store, index))
+    }
+
+    /// Swap in the next epoch (write lock held only for the swap).
+    fn publish(&self, cur: &Snapshot, store: ShardedStore, index: ShardedIndex) -> u64 {
+        let epoch = cur.epoch + 1;
+        let next = Arc::new(Snapshot {
+            epoch,
+            store: Arc::new(store),
+            index: Arc::new(index),
+        });
+        *self.current.write().unwrap() = next;
+        epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::store::exp_sum_view;
+
+    fn handle(n: usize, shards: usize) -> (SnapshotHandle, EmbeddingStore) {
+        let s = generate(&SynthConfig {
+            n,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        (SnapshotHandle::brute(ShardedStore::split(&s, shards)), s)
+    }
+
+    fn extra_rows(d: usize, n: usize, seed: u64) -> EmbeddingStore {
+        generate(&SynthConfig {
+            n,
+            d,
+            seed,
+            ..SynthConfig::tiny()
+        })
+    }
+
+    #[test]
+    fn add_publishes_next_epoch_and_keeps_old_ids() {
+        let (h, s) = handle(60, 3);
+        assert_eq!(h.epoch(), 0);
+        let added = extra_rows(8, 10, 7);
+        let e = h.add_categories(added.clone()).unwrap();
+        assert_eq!(e, 1);
+        let snap = h.load();
+        assert_eq!(StoreView::len(snap.store.as_ref()), 70);
+        for i in 0..60 {
+            assert_eq!(StoreView::row(snap.store.as_ref(), i), s.row(i));
+        }
+        for i in 0..10 {
+            assert_eq!(StoreView::row(snap.store.as_ref(), 60 + i), added.row(i));
+        }
+    }
+
+    #[test]
+    fn pinned_snapshot_survives_swap() {
+        let (h, s) = handle(50, 2);
+        let pinned = h.load();
+        let q = s.row(3).to_vec();
+        let z_before = exp_sum_view(pinned.store.as_ref(), &q);
+        h.add_categories(extra_rows(8, 20, 9)).unwrap();
+        // The pinned epoch still answers from the old category set.
+        assert_eq!(
+            exp_sum_view(pinned.store.as_ref(), &q).to_bits(),
+            z_before.to_bits()
+        );
+        assert_eq!(pinned.epoch, 0);
+        let fresh = h.load();
+        assert_eq!(fresh.epoch, 1);
+        assert!(exp_sum_view(fresh.store.as_ref(), &q) > z_before);
+    }
+
+    #[test]
+    fn add_reuses_existing_shard_indexes() {
+        let (h, _) = handle(40, 4);
+        let before = h.load();
+        h.add_categories(extra_rows(8, 5, 3)).unwrap();
+        let after = h.load();
+        assert_eq!(after.index.num_shards(), 5);
+        for s in 0..4 {
+            assert!(
+                Arc::ptr_eq(before.index.shard_index(s), after.index.shard_index(s)),
+                "shard {s} index must be reused"
+            );
+        }
+    }
+
+    #[test]
+    fn remove_compacts_ids_and_rebuilds_only_touched_shards() {
+        let (h, s) = handle(40, 4); // shards of 10
+        let before = h.load();
+        // Remove two rows from shard 1 only.
+        let e = h.remove_categories(&[12, 17]).unwrap();
+        assert_eq!(e, 1);
+        let after = h.load();
+        assert_eq!(StoreView::len(after.store.as_ref()), 38);
+        // Shard 0 untouched (same offset), shards 2/3 shifted but reused.
+        assert!(Arc::ptr_eq(before.index.shard_index(0), after.index.shard_index(0)));
+        assert!(!Arc::ptr_eq(before.index.shard_index(1), after.index.shard_index(1)));
+        assert!(Arc::ptr_eq(before.index.shard_index(2), after.index.shard_index(2)));
+        assert!(Arc::ptr_eq(before.index.shard_index(3), after.index.shard_index(3)));
+        // Ids compact: old row 13 is now id 12, old row 20 is now id 18.
+        assert_eq!(StoreView::row(after.store.as_ref(), 12), s.row(13));
+        assert_eq!(StoreView::row(after.store.as_ref(), 18), s.row(20));
+    }
+
+    #[test]
+    fn remove_whole_shard_drops_it() {
+        let (h, _) = handle(20, 2); // shards of 10
+        let ids: Vec<usize> = (10..20).collect();
+        h.remove_categories(&ids).unwrap();
+        let after = h.load();
+        assert_eq!(after.store.num_shards(), 1);
+        assert_eq!(StoreView::len(after.store.as_ref()), 10);
+    }
+
+    #[test]
+    fn invalid_mutations_are_rejected_and_do_not_advance() {
+        let (h, _) = handle(10, 2);
+        assert!(h
+            .add_categories(EmbeddingStore::from_data(2, 5, vec![0.0; 10]).unwrap())
+            .is_err());
+        assert!(h
+            .add_categories(EmbeddingStore::from_data(0, 8, vec![]).unwrap())
+            .is_err());
+        assert!(h.remove_categories(&[99]).is_err());
+        assert!(h.remove_categories(&[]).is_err());
+        let all: Vec<usize> = (0..10).collect();
+        assert!(h.remove_categories(&all).is_err(), "cannot empty the store");
+        assert_eq!(h.epoch(), 0, "failed mutations must not advance the epoch");
+    }
+
+    #[test]
+    fn concurrent_adds_serialize() {
+        let (h, _) = handle(30, 3);
+        let h = Arc::new(h);
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                h.add_categories(extra_rows(8, 3, t + 100)).unwrap()
+            }));
+        }
+        let mut epochs: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        epochs.sort_unstable();
+        assert_eq!(epochs, vec![1, 2, 3, 4], "each mutation gets its own epoch");
+        assert_eq!(StoreView::len(h.load().store.as_ref()), 42);
+    }
+}
