@@ -1,0 +1,144 @@
+//! Cross-process shards quickstart: two shard workers + a partition
+//! server over Unix domain sockets, driven by the network client.
+//!
+//! This example hosts the two workers and the server **in one process**
+//! (three `net::Server` instances on three sockets) so it runs without
+//! coordinating binaries; the protocol is byte-identical to the real
+//! multi-process deployment:
+//!
+//! ```bash
+//! zest-shard-worker --listen unix:///tmp/shard0.sock --synth 100000,128,0 --range 0,50000 &
+//! zest-shard-worker --listen unix:///tmp/shard1.sock --synth 100000,128,0 --range 50000,100000 &
+//! zest-server --listen unix:///tmp/zest.sock \
+//!     --workers unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
+//! ```
+//!
+//! ```bash
+//! cargo run --release --example remote_shards
+//! ```
+
+use std::sync::Arc;
+use zest::coordinator::{Request, ServiceMetrics};
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::EstimatorKind;
+use zest::mips::brute::BruteIndex;
+use zest::net::client::{ClientConfig, PartitionClient};
+use zest::net::remote::{aligned_split, ClusterHandler, RemoteCluster};
+use zest::net::server::{Server, ServerConfig};
+use zest::net::shard::ShardWorker;
+use zest::net::Addr;
+
+fn main() {
+    zest::util::logging::init();
+    let store = generate(&SynthConfig {
+        n: 100_000,
+        d: 128,
+        ..Default::default()
+    });
+    let sock = |name: &str| {
+        Addr::Unix(std::env::temp_dir().join(format!("zest-example-{}-{name}.sock", std::process::id())))
+    };
+
+    // Two "shard worker processes": each serves a 4-aligned half of the
+    // rows (the alignment keeps remote Exact bit-identical — see
+    // net::remote docs).
+    let mut worker_servers = Vec::new();
+    let mut worker_addrs = Vec::new();
+    for (i, block) in aligned_split(&store, 2).into_iter().enumerate() {
+        let addr = sock(&format!("shard{i}"));
+        println!("shard worker {i}: {} rows on {addr}", block.len());
+        let server = Server::serve(
+            &addr,
+            Arc::new(ShardWorker::new(block)),
+            ServerConfig::default(),
+            Arc::new(ServiceMetrics::new()),
+        )
+        .expect("start shard worker");
+        worker_addrs.push(server.local_addr().clone());
+        worker_servers.push(server);
+    }
+
+    // The partition server scatters across the workers.
+    let cluster = Arc::new(
+        RemoteCluster::connect(&worker_addrs, ClientConfig::default()).expect("connect workers"),
+    );
+    println!(
+        "cluster: {} categories × {} dims over {} workers (epoch {})",
+        cluster.len(),
+        cluster.dim(),
+        cluster.num_shards(),
+        cluster.epoch()
+    );
+    let front = sock("front");
+    let server = Server::serve(
+        &front,
+        Arc::new(ClusterHandler::new(cluster.clone(), 0)),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .expect("start partition server");
+
+    // A client estimates over the wire; compare against local compute.
+    let client =
+        PartitionClient::connect(server.local_addr().clone(), ClientConfig::default()).unwrap();
+    let q = store.row(4321).to_vec();
+    let remote = client
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap();
+    let local = BruteIndex::new(&store).partition(&q);
+    println!(
+        "Exact over 2 remote shards: Ẑ = {:.6e} (local {:.6e}, exec {:?})",
+        remote.z, local, remote.exec_time
+    );
+
+    let mimps = client
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Mimps,
+            k: 1000,
+            l: 1000,
+        })
+        .unwrap();
+    println!(
+        "MIMPS(k=1000,l=1000) remote: Ẑ = {:.6e} ({} scorings vs N = {})",
+        mimps.z,
+        mimps.scorings,
+        cluster.len()
+    );
+
+    // Live category insertion: a two-phase publish across both workers.
+    let added = generate(&SynthConfig {
+        n: 5_000,
+        d: 128,
+        seed: 9,
+        ..Default::default()
+    });
+    let epoch = cluster.add_categories(&added).expect("two-phase publish");
+    let grown = client
+        .estimate(Request {
+            query: q,
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap();
+    println!(
+        "after add_categories (epoch {epoch}): N = {}, Ẑ = {:.6e} (epoch tag {})",
+        cluster.len(),
+        grown.z,
+        grown.epoch
+    );
+
+    // Release pooled client connections before joining the servers.
+    drop(client);
+    server.shutdown();
+    drop(cluster);
+    for w in worker_servers {
+        w.shutdown();
+    }
+}

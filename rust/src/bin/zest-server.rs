@@ -1,0 +1,130 @@
+//! `zest-server` — the partition server: expose estimation over the
+//! wire (UDS or TCP), backed either by a **local** epoch-snapshotted
+//! sharded store or by **remote shard workers**.
+//!
+//! ```bash
+//! # local serving (the in-process PartitionService behind a socket):
+//! zest-server --listen tcp://127.0.0.1:7070 --synth 100000,128,0 --shards 4
+//! # over two shard-worker processes (cross-process shards):
+//! zest-server --listen unix:///tmp/zest.sock \
+//!     --workers unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
+//! ```
+//!
+//! Prints `READY <addr>` on stdout once listening. Clients speak
+//! [`zest::net::client::PartitionClient`].
+
+use anyhow::{bail, Result};
+use std::io::Write as _;
+use std::sync::Arc;
+use zest::coordinator::{PartitionService, Router, ServiceConfig, ServiceMetrics};
+use zest::net::client::ClientConfig;
+use zest::net::remote::{ClusterHandler, RemoteCluster};
+use zest::net::server::{Handler, Server, ServerConfig, ServiceHandler};
+use zest::net::Addr;
+use zest::store::{ShardedStore, SnapshotHandle};
+use zest::util::cli::Args;
+
+fn main() {
+    zest::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
+    args.check_known(&[
+        "listen",
+        "workers",
+        "data",
+        "synth",
+        "shards",
+        "service-workers",
+        "queue-capacity",
+        "max-conns",
+        "read-timeout-ms",
+        "seed",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
+    let addr = Addr::parse(&listen)?;
+    let seed: u64 = args.get_or("seed", 0);
+
+    let mut metrics: Option<Arc<ServiceMetrics>> = None;
+    let handler: Arc<dyn Handler> = if args.has("workers") {
+        // Cross-process shards: scatter across worker processes.
+        let worker_addrs: Result<Vec<Addr>> = args
+            .get("workers")
+            .unwrap()
+            .split(',')
+            .map(|s| Addr::parse(s.trim()))
+            .collect();
+        let worker_addrs = worker_addrs?;
+        let cluster = Arc::new(
+            RemoteCluster::connect(&worker_addrs, ClientConfig::default())
+                .map_err(|e| anyhow::anyhow!("connect workers: {e}"))?,
+        );
+        log::info!(
+            "serving {} categories × {} dims from {} shard workers (epoch {})",
+            cluster.len(),
+            cluster.dim(),
+            cluster.num_shards(),
+            cluster.epoch()
+        );
+        Arc::new(ClusterHandler::new(cluster, seed))
+    } else {
+        // Local serving: the in-process service behind a socket.
+        let Some(store) = zest::data::rows_from_cli(&args)? else {
+            bail!("one of --workers, --data or --synth is required");
+        };
+        let shards: usize = args.get_or("shards", 1);
+        log::info!(
+            "serving {} categories × {} dims from {shards} local shard(s)",
+            store.len(),
+            store.dim()
+        );
+        let handle = Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, shards)));
+        let svc = Arc::new(PartitionService::start_sharded(
+            handle,
+            Router::new(Default::default()),
+            ServiceConfig {
+                workers: args.get_or(
+                    "service-workers",
+                    zest::util::threadpool::default_threads().min(8),
+                ),
+                queue_capacity: args.get_or("queue-capacity", 1024),
+                seed,
+                ..Default::default()
+            },
+            None,
+        ));
+        // Wire-level counters land in the service's own metrics sink.
+        metrics = Some(svc.metrics_handle());
+        Arc::new(ServiceHandler::new(svc))
+    };
+
+    let cfg = ServerConfig {
+        max_connections: args.get_or("max-conns", 256),
+        read_timeout: match args.get_or("read-timeout-ms", 30_000u64) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+    };
+    let server = Server::serve(
+        &addr,
+        handler,
+        cfg,
+        metrics.unwrap_or_else(|| Arc::new(ServiceMetrics::new())),
+    )?;
+    println!("READY {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    loop {
+        std::thread::park();
+    }
+}

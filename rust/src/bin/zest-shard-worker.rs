@@ -1,0 +1,103 @@
+//! `zest-shard-worker` — serve one shard of the category set over the
+//! wire (UDS or TCP), as one process of a [`zest::net::remote::RemoteCluster`].
+//!
+//! ```bash
+//! # shard 0 of 2 over a 100k-row synthetic set, on a unix socket:
+//! zest-shard-worker --listen unix:///tmp/shard0.sock \
+//!     --synth 100000,128,0 --range 0,50000
+//! # from a saved embedding file:
+//! zest-shard-worker --listen tcp://127.0.0.1:7101 --data vecs.bin --range 50000,100000
+//! ```
+//!
+//! `--range lo,hi` serves rows `[lo, hi)` of the loaded/generated set —
+//! how one dataset is cut across worker processes. Keep every worker's
+//! row count a multiple of 4 (the last excepted) for bit-pinned `Exact`
+//! answers (see `zest::net::remote::aligned_split_lens`). Prints
+//! `READY <addr>` on stdout once listening.
+
+use anyhow::{bail, Result};
+use std::io::Write as _;
+use std::sync::Arc;
+use zest::coordinator::ServiceMetrics;
+use zest::data::embeddings::EmbeddingStore;
+use zest::net::server::{Server, ServerConfig};
+use zest::net::shard::ShardWorker;
+use zest::net::Addr;
+use zest::util::cli::Args;
+
+fn main() {
+    zest::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
+    args.check_known(&[
+        "listen",
+        "data",
+        "synth",
+        "range",
+        "max-conns",
+        "read-timeout-ms",
+    ])
+    .map_err(anyhow::Error::msg)?;
+    let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
+    let addr = Addr::parse(&listen)?;
+
+    let Some(full) = zest::data::rows_from_cli(&args)? else {
+        bail!("one of --data <file> or --synth n,d,seed is required");
+    };
+    let rows = slice_range(&args, full)?;
+    if rows.is_empty() {
+        bail!("shard worker has no rows to serve");
+    }
+    log::info!(
+        "shard worker: {} rows × {} dims",
+        rows.len(),
+        rows.dim()
+    );
+
+    let cfg = ServerConfig {
+        max_connections: args.get_or("max-conns", 64),
+        read_timeout: match args.get_or("read-timeout-ms", 30_000u64) {
+            0 => None,
+            ms => Some(std::time::Duration::from_millis(ms)),
+        },
+    };
+    let server = Server::serve(
+        &addr,
+        Arc::new(ShardWorker::new(rows)),
+        cfg,
+        Arc::new(ServiceMetrics::new()),
+    )?;
+    println!("READY {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    // Serve until killed.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn slice_range(args: &Args, full: EmbeddingStore) -> Result<EmbeddingStore> {
+    if !args.has("range") {
+        return Ok(full);
+    }
+    let r: Vec<usize> = args.get_list("range", &[]);
+    if r.len() != 2 || r[0] >= r[1] || r[1] > full.len() {
+        bail!(
+            "--range wants lo,hi with 0 <= lo < hi <= {} rows",
+            full.len()
+        );
+    }
+    let (lo, hi) = (r[0], r[1]);
+    let d = full.dim();
+    Ok(EmbeddingStore::from_data(hi - lo, d, full.rows(lo, hi).to_vec())?)
+}

@@ -35,6 +35,14 @@ pub struct ServiceMetrics {
     /// recordings from workers still draining an older snapshot are
     /// dropped rather than conflated into the wrong position.
     shards: Mutex<(u64, Vec<ShardStatAcc>)>,
+    /// Network-front-end counters (`net::Server` feeds these; all zero
+    /// for purely in-process services).
+    net_accepted: AtomicU64,
+    net_rejected: AtomicU64,
+    net_active: AtomicU64,
+    net_frames_in: AtomicU64,
+    net_frames_out: AtomicU64,
+    net_wire_errors: AtomicU64,
 }
 
 #[derive(Clone, Copy, Default)]
@@ -130,6 +138,37 @@ impl ServiceMetrics {
         acc.exec_ns += exec.as_nanos() as u64;
     }
 
+    /// One network connection accepted and being served.
+    pub fn on_conn_open(&self) {
+        self.net_accepted.fetch_add(1, Ordering::Relaxed);
+        self.net_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A served connection closed (any reason).
+    pub fn on_conn_close(&self) {
+        self.net_active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// A connection turned away at the limit (answered `Busy`, closed).
+    pub fn on_conn_rejected(&self) {
+        self.net_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request frame decoded off a connection.
+    pub fn on_frame_in(&self) {
+        self.net_frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One response frame written to a connection.
+    pub fn on_frame_out(&self) {
+        self.net_frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A malformed/truncated frame or an I/O failure on a connection.
+    pub fn on_wire_error(&self) {
+        self.net_wire_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn on_complete(&self, queue_wait: Duration, exec: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut q = self.queue_ns.lock().unwrap();
@@ -191,12 +230,37 @@ impl ServiceMetrics {
                     exec_ns: a.exec_ns,
                 })
                 .collect(),
+            net: NetStats {
+                accepted: self.net_accepted.load(Ordering::Relaxed),
+                rejected: self.net_rejected.load(Ordering::Relaxed),
+                active: self.net_active.load(Ordering::Relaxed),
+                frames_in: self.net_frames_in.load(Ordering::Relaxed),
+                frames_out: self.net_frames_out.load(Ordering::Relaxed),
+                wire_errors: self.net_wire_errors.load(Ordering::Relaxed),
+            },
             queue_p50: pct(&self.queue_ns, 0.50),
             queue_p95: pct(&self.queue_ns, 0.95),
             exec_p50: pct(&self.exec_ns, 0.50),
             exec_p95: pct(&self.exec_ns, 0.95),
         }
     }
+}
+
+/// Network-front-end counters (all zero for in-process-only services).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted and served.
+    pub accepted: u64,
+    /// Connections turned away at the connection limit.
+    pub rejected: u64,
+    /// Connections currently being served.
+    pub active: u64,
+    /// Request frames decoded.
+    pub frames_in: u64,
+    /// Response frames written.
+    pub frames_out: u64,
+    /// Malformed frames / connection I/O failures.
+    pub wire_errors: u64,
 }
 
 /// Point-in-time view of the service counters.
@@ -215,6 +279,8 @@ pub struct MetricsSnapshot {
     pub epoch: u64,
     /// Per-shard counters; empty for monolithic services.
     pub shard_stats: Vec<ShardStat>,
+    /// Network-front-end counters; all zero without a `net::Server`.
+    pub net: NetStats,
     pub queue_p50: Duration,
     pub queue_p95: Duration,
     pub exec_p50: Duration,
@@ -255,6 +321,18 @@ impl std::fmt::Display for MetricsSnapshot {
                 )?;
             }
             write!(f, "]")?;
+        }
+        if self.net.accepted > 0 || self.net.rejected > 0 {
+            write!(
+                f,
+                " net[conns={}/{} active={} frames={}/{} wire_errors={}]",
+                self.net.accepted,
+                self.net.rejected,
+                self.net.active,
+                self.net.frames_in,
+                self.net.frames_out,
+                self.net.wire_errors
+            )?;
         }
         Ok(())
     }
@@ -304,6 +382,28 @@ mod tests {
         assert_eq!(s.batch_throughput_rps, 0.0);
         assert_eq!(s.epoch, 0);
         assert!(s.shard_stats.is_empty());
+    }
+
+    #[test]
+    fn net_counters_track_connections_and_frames() {
+        let m = ServiceMetrics::new();
+        m.on_conn_open();
+        m.on_conn_open();
+        m.on_conn_rejected();
+        m.on_frame_in();
+        m.on_frame_out();
+        m.on_frame_in();
+        m.on_wire_error();
+        m.on_conn_close();
+        let s = m.snapshot();
+        assert_eq!(s.net.accepted, 2);
+        assert_eq!(s.net.rejected, 1);
+        assert_eq!(s.net.active, 1);
+        assert_eq!(s.net.frames_in, 2);
+        assert_eq!(s.net.frames_out, 1);
+        assert_eq!(s.net.wire_errors, 1);
+        let text = s.to_string();
+        assert!(text.contains("net[conns=2/1"), "{text}");
     }
 
     #[test]

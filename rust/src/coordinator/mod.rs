@@ -29,7 +29,7 @@ pub mod router;
 pub mod service;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use metrics::{MetricsSnapshot, ServiceMetrics, ShardStat};
+pub use metrics::{MetricsSnapshot, NetStats, ServiceMetrics, ShardStat};
 pub use router::Router;
 pub use service::{
     BackpressurePolicy, PartitionService, Request, Response, ServiceConfig, SubmitError,

@@ -1,11 +1,14 @@
 //! Estimator routing: maps an [`EstimatorKind`] + per-request (k, l) to a
-//! concrete estimator instance. FMBE is stateful (fitted feature maps),
-//! so the router owns one fitted copy — fitted lazily on the **first**
-//! store it is asked to serve and never refitted, so under epoch
-//! snapshots FMBE answers reflect the category set at fit time, not the
-//! batch's pinned epoch (ROADMAP: "FMBE refresh on epoch swap"). The
-//! sampling estimators are constructed per call (they are zero-cost POD
-//! structs) and always read the pinned snapshot.
+//! concrete estimator instance. FMBE is stateful (fitted feature maps
+//! with store-wide precomputed λ̃ sums), so the router owns one fitted
+//! copy **tagged with the snapshot epoch it was fitted on**: a request
+//! pinned to a different epoch refits before answering, so FMBE answers
+//! always reflect the pinned category set instead of whichever snapshot
+//! the router saw first (this closes the ROADMAP "FMBE refresh on epoch
+//! swap" item). The feature draw depends only on `(seed, d)`, so a refit
+//! re-reads the store for new λ̃ sums without changing the feature maps.
+//! The sampling estimators are constructed per call (they are zero-cost
+//! POD structs) and always read the pinned snapshot.
 
 use crate::estimators::{
     exact::Exact, fmbe::Fmbe, fmbe::FmbeConfig, mimps::Mimps, mince::Mince, nmimps::Nmimps,
@@ -14,10 +17,16 @@ use crate::estimators::{
 use crate::mips::MipsIndex;
 use crate::store::StoreView;
 use crate::util::rng::Rng;
+use std::sync::{Arc, RwLock};
 
-/// Routing table with a lazily fitted FMBE.
+/// Routing table with a lazily fitted, epoch-tagged FMBE.
 pub struct Router {
-    fmbe: std::sync::OnceLock<Fmbe>,
+    /// `(fitted_epoch, fitted estimator)` — `None` until the first FMBE
+    /// request. Readers clone the `Arc` out and estimate without holding
+    /// the lock; a request pinned to a different epoch refits under the
+    /// write lock (double-checked, so concurrent workers on the same
+    /// epoch fit once).
+    fmbe: RwLock<Option<(u64, Arc<Fmbe>)>>,
     fmbe_cfg: FmbeConfig,
     stratified_tail: bool,
 }
@@ -25,10 +34,32 @@ pub struct Router {
 impl Router {
     pub fn new(fmbe_cfg: FmbeConfig) -> Self {
         Router {
-            fmbe: std::sync::OnceLock::new(),
+            fmbe: RwLock::new(None),
             fmbe_cfg,
             stratified_tail: false,
         }
+    }
+
+    /// The fitted FMBE for `epoch`, refitting from `store` when the
+    /// cached copy was fitted on a different epoch. Pinned batches from
+    /// an older epoch refit backwards too — correctness (answers match
+    /// the pinned category set) over fit reuse; in steady state epochs
+    /// advance monotonically and each is fitted once.
+    fn fmbe_for(&self, epoch: u64, store: &dyn StoreView) -> Arc<Fmbe> {
+        if let Some((e, f)) = self.fmbe.read().unwrap().as_ref() {
+            if *e == epoch {
+                return f.clone();
+            }
+        }
+        let mut slot = self.fmbe.write().unwrap();
+        if let Some((e, f)) = slot.as_ref() {
+            if *e == epoch {
+                return f.clone();
+            }
+        }
+        let fitted = Arc::new(Fmbe::fit(store, self.fmbe_cfg.clone()));
+        *slot = Some((epoch, fitted.clone()));
+        fitted
     }
 
     /// Route MIMPS tail sampling through the shard-stratified draw
@@ -50,7 +81,10 @@ impl Router {
 
     /// Estimate through the routed estimator. `store`/`index` are the
     /// service's (monolithic, or an epoch-pinned sharded snapshot);
-    /// `k`/`l` come from the request.
+    /// `epoch` is the snapshot epoch they were pinned at (0 for
+    /// monolithic serving) — FMBE refits when it advances; `k`/`l` come
+    /// from the request.
+    #[allow(clippy::too_many_arguments)]
     pub fn estimate(
         &self,
         kind: EstimatorKind,
@@ -58,6 +92,7 @@ impl Router {
         l: usize,
         store: &dyn StoreView,
         index: &dyn MipsIndex,
+        epoch: u64,
         q: &[f32],
         rng: &mut Rng,
     ) -> f64 {
@@ -68,12 +103,7 @@ impl Router {
             EstimatorKind::Nmimps => Nmimps::new(k).estimate(&mut ctx, q),
             EstimatorKind::Mimps => self.mimps(k, l).estimate(&mut ctx, q),
             EstimatorKind::Mince => Mince::new(k, l).estimate(&mut ctx, q),
-            EstimatorKind::Fmbe => {
-                let fmbe = self
-                    .fmbe
-                    .get_or_init(|| Fmbe::fit(store, self.fmbe_cfg.clone()));
-                fmbe.estimate(&mut ctx, q)
-            }
+            EstimatorKind::Fmbe => self.fmbe_for(epoch, store).estimate(&mut ctx, q),
         }
     }
 
@@ -81,6 +111,7 @@ impl Router {
     /// serves the whole same-(kind, k, l) query block through
     /// `Estimator::estimate_batch`, which shares a single retrieval /
     /// scoring pass on batch-aware estimators. Results are in `qs` order.
+    #[allow(clippy::too_many_arguments)]
     pub fn estimate_batch(
         &self,
         kind: EstimatorKind,
@@ -88,6 +119,7 @@ impl Router {
         l: usize,
         store: &dyn StoreView,
         index: &dyn MipsIndex,
+        epoch: u64,
         qs: &[Vec<f32>],
         rng: &mut Rng,
     ) -> Vec<f64> {
@@ -98,12 +130,7 @@ impl Router {
             EstimatorKind::Nmimps => Nmimps::new(k).estimate_batch(&mut ctx, qs),
             EstimatorKind::Mimps => self.mimps(k, l).estimate_batch(&mut ctx, qs),
             EstimatorKind::Mince => Mince::new(k, l).estimate_batch(&mut ctx, qs),
-            EstimatorKind::Fmbe => {
-                let fmbe = self
-                    .fmbe
-                    .get_or_init(|| Fmbe::fit(store, self.fmbe_cfg.clone()));
-                fmbe.estimate_batch(&mut ctx, qs)
-            }
+            EstimatorKind::Fmbe => self.fmbe_for(epoch, store).estimate_batch(&mut ctx, qs),
         }
     }
 
@@ -140,7 +167,7 @@ mod tests {
         let mut rng = Rng::seeded(1);
         let q = store.row(10).to_vec();
         for kind in EstimatorKind::all() {
-            let z = router.estimate(*kind, 20, 20, &store, &index, &q, &mut rng);
+            let z = router.estimate(*kind, 20, 20, &store, &index, 0, &q, &mut rng);
             assert!(
                 z.is_finite(),
                 "{kind}: estimate must be finite, got {z}"
@@ -162,9 +189,84 @@ mod tests {
         let router = Router::new(FmbeConfig::default());
         let mut rng = Rng::seeded(2);
         let q = store.row(0).to_vec();
-        let z = router.estimate(EstimatorKind::Exact, 0, 0, &store, &index, &q, &mut rng);
+        let z = router.estimate(EstimatorKind::Exact, 0, 0, &store, &index, 0, &q, &mut rng);
         let want = index.partition(&q);
         assert!((z - want).abs() < 1e-9 * want);
+    }
+
+    /// FMBE must refit when the epoch advances: the λ̃ sums are
+    /// store-wide precomputations, so an FMBE answer from a stale fit
+    /// would ignore every category added since. The feature draw is
+    /// seed-deterministic, so the refitted estimate equals a fresh fit
+    /// on the new store exactly.
+    #[test]
+    fn fmbe_refits_on_epoch_advance() {
+        use crate::store::{ShardedStore, SnapshotHandle};
+        let store = generate(&SynthConfig {
+            n: 300,
+            d: 8,
+            ..SynthConfig::tiny()
+        });
+        let cfg = FmbeConfig {
+            p_features: 300,
+            ..Default::default()
+        };
+        let router = Router::new(cfg.clone());
+        let handle = SnapshotHandle::brute(ShardedStore::split(&store, 2));
+        let q = store.row(3).to_vec();
+        let mut rng = Rng::seeded(4);
+
+        let snap0 = handle.load();
+        let z0 = router.estimate(
+            EstimatorKind::Fmbe,
+            0,
+            0,
+            snap0.store.as_ref(),
+            snap0.index.as_ref(),
+            snap0.epoch,
+            &q,
+            &mut rng,
+        );
+        let want0 = crate::estimators::fmbe::Fmbe::fit(snap0.store.as_ref(), cfg.clone())
+            .estimate_query(&q);
+        assert_eq!(z0, want0, "epoch-0 fit matches a direct fit");
+
+        // Publish a bigger category set; the router must refit.
+        let added = generate(&SynthConfig {
+            n: 80,
+            d: 8,
+            seed: 42,
+            ..SynthConfig::tiny()
+        });
+        handle.add_categories(added).unwrap();
+        let snap1 = handle.load();
+        let z1 = router.estimate(
+            EstimatorKind::Fmbe,
+            0,
+            0,
+            snap1.store.as_ref(),
+            snap1.index.as_ref(),
+            snap1.epoch,
+            &q,
+            &mut rng,
+        );
+        let want1 = crate::estimators::fmbe::Fmbe::fit(snap1.store.as_ref(), cfg.clone())
+            .estimate_query(&q);
+        assert_eq!(z1, want1, "epoch-1 answer reflects the refit");
+        assert_ne!(z0, z1, "λ̃ must change with the category set");
+
+        // Same epoch again: the cached fit is reused (same bits).
+        let z1_again = router.estimate(
+            EstimatorKind::Fmbe,
+            0,
+            0,
+            snap1.store.as_ref(),
+            snap1.index.as_ref(),
+            snap1.epoch,
+            &q,
+            &mut rng,
+        );
+        assert_eq!(z1, z1_again);
     }
 
     #[test]

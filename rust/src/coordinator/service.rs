@@ -33,11 +33,8 @@ pub struct Response {
     /// epoch whose category set produced `z` (a request drained after an
     /// `add_categories` answers from the new epoch even if it was
     /// submitted before the swap — pinning happens at batch execution).
-    /// Exception: `Fmbe` answers come from the feature maps the router
-    /// fitted on the first snapshot it saw (`λ̃` is precomputed and
-    /// never re-reads the store), so an FMBE `z` may predate the
-    /// reported epoch — see the ROADMAP "FMBE refresh on epoch swap"
-    /// open item.
+    /// `Fmbe` included: the router refits its λ̃ sums whenever the
+    /// pinned epoch differs from the one it fitted on.
     pub epoch: u64,
     /// Time from submission until this request's batch group started
     /// executing (includes any earlier groups of the same drained batch).
@@ -125,6 +122,9 @@ pub struct PartitionService {
     /// Store dimensionality, for submit-time query validation (invariant
     /// across snapshot epochs — mutations cannot change d).
     dim: usize,
+    /// Shared with the workers; lets the service report what it is
+    /// serving (length / epoch) to network front-ends.
+    serving: Arc<Serving>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -143,7 +143,7 @@ enum Serving {
 
 /// Shared worker state.
 struct WorkerCtx {
-    serving: Serving,
+    serving: Arc<Serving>,
     router: Arc<Router>,
     metrics: Arc<ServiceMetrics>,
     runtime: Option<RuntimeHandle>,
@@ -211,8 +211,9 @@ impl PartitionService {
         }
 
         // Worker threads.
+        let serving = Arc::new(serving);
         let ctx = Arc::new(WorkerCtx {
-            serving,
+            serving: serving.clone(),
             router: Arc::new(router),
             metrics: metrics.clone(),
             runtime,
@@ -244,6 +245,7 @@ impl PartitionService {
             metrics,
             policy: cfg.backpressure,
             dim,
+            serving,
             threads,
         }
     }
@@ -253,7 +255,8 @@ impl PartitionService {
         // group answers from one consistent snapshot even if a category
         // mutation publishes a new epoch mid-batch.
         let pinned;
-        let (view, index, epoch): (&dyn StoreView, &dyn MipsIndex, u64) = match &ctx.serving {
+        let (view, index, epoch): (&dyn StoreView, &dyn MipsIndex, u64) = match ctx.serving.as_ref()
+        {
             Serving::Static { store, index } => (store.as_ref(), index.as_ref(), 0),
             Serving::Sharded { handle } => {
                 pinned = handle.load();
@@ -264,7 +267,8 @@ impl PartitionService {
         // (monolithic serving only — the artifact streams one contiguous
         // matrix).
         if batch.kind == EstimatorKind::Exact {
-            if let (Serving::Static { store, .. }, Some(rt)) = (&ctx.serving, &ctx.runtime) {
+            if let (Serving::Static { store, .. }, Some(rt)) = (ctx.serving.as_ref(), &ctx.runtime)
+            {
                 if Self::run_exact_batch_pjrt(ctx, store, &batch, rt).is_ok() {
                     return;
                 }
@@ -296,7 +300,7 @@ impl PartitionService {
                 .collect();
             let zs = ctx
                 .router
-                .estimate_batch(batch.kind, k, l, view, index, &qs, rng);
+                .estimate_batch(batch.kind, k, l, view, index, epoch, &qs, rng);
             let exec = started.elapsed();
             ctx.metrics.on_batch_executed(reqs.len(), exec);
             ctx.metrics.on_epoch(epoch);
@@ -434,6 +438,30 @@ impl PartitionService {
 
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The live metrics sink, shareable with a network front-end so
+    /// wire-level counters land next to the batching/queueing ones.
+    pub fn metrics_handle(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Store dimensionality served (invariant across epochs).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// `(categories, epoch)` currently served: the static store's size
+    /// (epoch 0) or the currently published snapshot's. Used by network
+    /// front-ends to answer manifest requests.
+    pub fn serving_info(&self) -> (usize, u64) {
+        match self.serving.as_ref() {
+            Serving::Static { store, .. } => (store.len(), 0),
+            Serving::Sharded { handle } => {
+                let snap = handle.load();
+                (StoreView::len(snap.store.as_ref()), snap.epoch)
+            }
+        }
     }
 
     /// Drain and stop all threads.

@@ -6,3 +6,29 @@
 pub mod corpus;
 pub mod embeddings;
 pub mod synth;
+
+/// Shared `--data <file>` / `--synth n,d,seed` loader for the serving
+/// binaries (`zest-server`, `zest-shard-worker`). Returns `Ok(None)`
+/// when neither flag is present so each binary can report its own
+/// usage error.
+pub fn rows_from_cli(
+    args: &crate::util::cli::Args,
+) -> anyhow::Result<Option<embeddings::EmbeddingStore>> {
+    use anyhow::Context as _;
+    if let Some(path) = args.get("data") {
+        let store = embeddings::EmbeddingStore::load(std::path::Path::new(path))
+            .with_context(|| format!("load {path}"))?;
+        return Ok(Some(store));
+    }
+    if args.has("synth") {
+        let spec: Vec<u64> = args.get_list("synth", &[]);
+        anyhow::ensure!(spec.len() == 3, "--synth wants n,d,seed");
+        return Ok(Some(synth::generate(&synth::SynthConfig {
+            n: spec[0] as usize,
+            d: spec[1] as usize,
+            seed: spec[2],
+            ..Default::default()
+        })));
+    }
+    Ok(None)
+}

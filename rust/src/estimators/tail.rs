@@ -87,17 +87,19 @@ impl TailScratch {
     }
 }
 
-/// Draw `l` distinct indices uniformly from `[0, n) \ head`, score them,
-/// and leave the result in `scratch.indices` / `scratch.exp_scores`.
-pub fn sample_tail_into(
-    store: &dyn StoreView,
+/// Draw `l` distinct indices uniformly from `[0, n) \ head` into
+/// `scratch.indices` **without scoring them**. This is the draw half of
+/// [`sample_tail_into`] — exposed so shard-transparent consumers that
+/// score elsewhere (the remote tail path in `net::remote` ships the
+/// drawn ids to shard workers) consume the RNG in exactly the same
+/// sequence as the in-process estimators.
+pub fn sample_tail_ids(
+    n: usize,
     head: &[Hit],
     l: usize,
-    q: &[f32],
     rng: &mut Rng,
     scratch: &mut TailScratch,
 ) {
-    let n = store.len();
     scratch.reset(n);
     if n == 0 {
         return;
@@ -132,6 +134,19 @@ pub fn sample_tail_into(
             scratch.indices.push(pool[i]);
         }
     }
+}
+
+/// Draw `l` distinct indices uniformly from `[0, n) \ head`, score them,
+/// and leave the result in `scratch.indices` / `scratch.exp_scores`.
+pub fn sample_tail_into(
+    store: &dyn StoreView,
+    head: &[Hit],
+    l: usize,
+    q: &[f32],
+    rng: &mut Rng,
+    scratch: &mut TailScratch,
+) {
+    sample_tail_ids(store.len(), head, l, rng, scratch);
     for &i in &scratch.indices {
         scratch
             .exp_scores

@@ -26,9 +26,11 @@
 //! paper's word2vec / Penn-Treebank workloads ([`data`]), an oracle
 //! with controlled retrieval-error injection ([`oracle`]), a log-bilinear
 //! language model trained with NCE ([`lm`]), a PJRT runtime that executes
-//! AOT-compiled JAX/Pallas scoring graphs ([`runtime`]), and a batching
-//! service coordinator ([`coordinator`]) — are all implemented here; the
-//! crate has no heavyweight dependencies.
+//! AOT-compiled JAX/Pallas scoring graphs ([`runtime`]), a batching
+//! service coordinator ([`coordinator`]), and a network serving layer
+//! ([`net`]: framed wire protocol, partition server/client, and
+//! cross-process remote shards) — are all implemented here; the crate
+//! has no heavyweight dependencies.
 //!
 //! ## Quickstart
 //!
@@ -58,6 +60,7 @@ pub mod linalg;
 pub mod lm;
 pub mod metrics;
 pub mod mips;
+pub mod net;
 pub mod oracle;
 pub mod runtime;
 pub mod store;

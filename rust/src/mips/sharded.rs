@@ -28,28 +28,38 @@ pub struct ShardedIndex {
 }
 
 impl ShardedIndex {
-    /// Build one sub-index per shard of `store` with `build`.
-    pub fn build<F>(store: &ShardedStore, build: F) -> ShardedIndex
+    /// Build one sub-index per shard of `store` with `build`, handing
+    /// each shard its **size-proportional share** of `total_threads`
+    /// ([`proportional_threads`]) — the one assembly path shared by
+    /// [`ShardedIndex::brute`] and the snapshot builders.
+    pub fn build<F>(store: &ShardedStore, total_threads: usize, build: F) -> ShardedIndex
     where
-        F: Fn(&Arc<EmbeddingStore>) -> Arc<dyn MipsIndex>,
+        F: Fn(&Arc<EmbeddingStore>, usize) -> Arc<dyn MipsIndex>,
     {
+        let lens: Vec<usize> = store.shards().iter().map(|sh| sh.len()).collect();
+        let budgets = proportional_threads(&lens, total_threads);
         let parts: Vec<(usize, Arc<dyn MipsIndex>)> = store
             .shards()
             .iter()
-            .map(|sh| (sh.offset(), build(sh.store())))
+            .zip(&budgets)
+            .map(|(sh, &threads)| (sh.offset(), build(sh.store(), threads)))
             .collect();
         Self::from_parts(parts)
     }
 
     /// Exact per-shard retrieval: one [`super::brute::BruteIndex`] per
-    /// shard, with the scoring threads split across shards so the
-    /// cross-shard scatter does not oversubscribe the machine.
+    /// shard, with the scoring threads split across shards
+    /// **proportionally to shard row counts** ([`proportional_threads`])
+    /// so the cross-shard scatter neither oversubscribes the machine nor
+    /// starves a large shard: the scatter's critical path is the slowest
+    /// shard, and after repeated `remove_categories` epochs shard sizes
+    /// diverge enough that the old even split left the biggest shard
+    /// scanning `max_s len_s` rows on `T/S` threads.
     pub fn brute(store: &ShardedStore) -> ShardedIndex {
-        let per_shard = per_shard_threads(store.num_shards());
-        Self::build(store, |s| {
+        Self::build(store, threadpool::default_threads(), |s, threads| {
             Arc::new(super::brute::BruteIndex::from_arc_with_threads(
                 s.clone(),
-                per_shard,
+                threads,
             ))
         })
     }
@@ -102,15 +112,44 @@ impl ShardedIndex {
     }
 }
 
-/// Fair scoring-thread budget for one shard of `num_shards`: the
-/// cross-shard scatter runs shards concurrently, so each shard gets its
-/// share of the machine instead of the full default (which would
-/// oversubscribe S-fold). Shared by [`ShardedIndex::brute`] and the
-/// snapshot builders.
-pub fn per_shard_threads(num_shards: usize) -> usize {
-    threadpool::default_threads()
-        .div_ceil(num_shards.max(1))
-        .max(1)
+/// Split `total` scoring threads across shards **proportionally to their
+/// row counts** (largest-remainder apportionment, every shard getting at
+/// least one thread). Near-equal shards degenerate to an even
+/// threads-over-shards split; after repeated `remove_categories`
+/// epochs shard sizes diverge, and the proportional split keeps the
+/// scatter's critical path near `N / total` rows-per-thread instead of
+/// letting the largest shard scan `max_s len_s` rows on a `total / S`
+/// budget. Deterministic: remainder ties break toward the larger shard,
+/// then the lower shard position.
+pub fn proportional_threads(lens: &[usize], total: usize) -> Vec<usize> {
+    let s = lens.len();
+    if s == 0 {
+        return vec![];
+    }
+    let total = total.max(1);
+    let n: u128 = lens.iter().map(|&l| l as u128).sum();
+    if n == 0 {
+        return vec![1; s];
+    }
+    let mut out: Vec<usize> = lens
+        .iter()
+        .map(|&l| ((l as u128 * total as u128) / n) as usize)
+        .collect();
+    let assigned: usize = out.iter().sum();
+    let mut order: Vec<usize> = (0..s).collect();
+    order.sort_by_key(|&i| {
+        let rem = (lens[i] as u128 * total as u128) % n;
+        (std::cmp::Reverse(rem), std::cmp::Reverse(lens[i]), i)
+    });
+    for &i in order.iter().take(total.saturating_sub(assigned)) {
+        out[i] += 1;
+    }
+    // Every non-empty shard scans at least on its own thread, even when
+    // S > total (the scatter runs shards concurrently regardless).
+    for t in &mut out {
+        *t = (*t).max(1);
+    }
+    out
 }
 
 /// Merge already-retrieved per-shard hits into one global top-`k`: sort
@@ -259,5 +298,70 @@ mod tests {
         let s = store(20);
         let idx: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&s));
         ShardedIndex::from_parts(vec![(5, idx)]);
+    }
+
+    #[test]
+    fn proportional_threads_is_size_proportional() {
+        // 8 threads over a 4:2:1:1 size split → 4:2:1:1 exactly.
+        assert_eq!(proportional_threads(&[400, 200, 100, 100], 8), vec![4, 2, 1, 1]);
+        // Even sizes degenerate to the even split.
+        assert_eq!(proportional_threads(&[100, 100, 100, 100], 8), vec![2, 2, 2, 2]);
+        // Remainders go to the largest fractional share (deterministic).
+        assert_eq!(proportional_threads(&[300, 200, 100], 4), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn proportional_threads_floors_at_one_per_shard() {
+        // More shards than threads: every shard still gets a thread.
+        assert_eq!(proportional_threads(&[10, 10, 10], 2), vec![1, 1, 1]);
+        // A tiny shard next to a huge one keeps its minimum.
+        let split = proportional_threads(&[10_000, 1], 8);
+        assert_eq!(split.len(), 2);
+        assert!(split[0] >= 7 && split[1] == 1, "{split:?}");
+        // Degenerate inputs.
+        assert_eq!(proportional_threads(&[], 8), Vec::<usize>::new());
+        assert_eq!(proportional_threads(&[0, 0], 8), vec![1, 1]);
+    }
+
+    #[test]
+    fn proportional_threads_conserves_total_when_feasible() {
+        // With S ≤ total and no starved shards, the budget is spent
+        // exactly (largest-remainder apportionment conserves the total).
+        for (lens, total) in [
+            (vec![503usize, 251, 119], 16usize),
+            (vec![600, 300, 100], 10),
+            (vec![64, 32, 16, 8], 10),
+        ] {
+            let split = proportional_threads(&lens, total);
+            assert_eq!(split.iter().sum::<usize>(), total, "{lens:?} → {split:?}");
+            assert!(split.iter().all(|&t| t >= 1));
+        }
+    }
+
+    #[test]
+    fn brute_assigns_threads_without_changing_results() {
+        // The proportional split must not change retrieval semantics,
+        // only thread budgets: skewed shard sizes still answer exactly.
+        let s = store(330);
+        let stores = vec![
+            Arc::new(
+                EmbeddingStore::from_data(256, 16, s.rows(0, 256).to_vec()).unwrap(),
+            ),
+            Arc::new(
+                EmbeddingStore::from_data(60, 16, s.rows(256, 316).to_vec()).unwrap(),
+            ),
+            Arc::new(
+                EmbeddingStore::from_data(14, 16, s.rows(316, 330).to_vec()).unwrap(),
+            ),
+        ];
+        let sharded = ShardedIndex::brute(&ShardedStore::from_stores(stores).unwrap());
+        let mono = BruteIndex::new(&s);
+        let q = s.row(5).to_vec();
+        let want = mono.top_k(&q, 20);
+        let got = sharded.top_k(&q, 20);
+        assert_eq!(
+            got.iter().map(|h| h.idx).collect::<Vec<_>>(),
+            want.iter().map(|h| h.idx).collect::<Vec<_>>()
+        );
     }
 }

@@ -1,0 +1,270 @@
+//! Connection-pooling client for the partition server.
+//!
+//! [`PartitionClient::estimate`] / [`estimate_batch`] mirror the
+//! in-process [`crate::coordinator::PartitionService`] API — same
+//! request fields, same [`crate::coordinator::Response`] out — so a
+//! caller can swap between in-process and over-the-wire serving without
+//! touching its own code. Idle connections are pooled (up to
+//! [`ClientConfig::max_idle`]); a call that finds the pool empty opens a
+//! fresh connection, and a call that trips over a stale pooled
+//! connection (server restarted, idle timeout) retries once on a fresh
+//! one before giving up.
+//!
+//! [`PartitionClient::estimate_batch`]: requires the caller to batch.
+
+use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
+use super::{Addr, Stream};
+use crate::coordinator::{Request, Response};
+use crate::estimators::EstimatorKind;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Client knobs.
+#[derive(Clone, Debug)]
+pub struct ClientConfig {
+    /// Idle connections kept for reuse.
+    pub max_idle: usize,
+    /// Per-call read timeout (covers the server's whole queue + exec
+    /// time for the call). `None` blocks forever.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            max_idle: 4,
+            read_timeout: Some(Duration::from_secs(60)),
+        }
+    }
+}
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport or codec failure.
+    Wire(wire::WireError),
+    /// The server answered with an error frame.
+    Remote { code: ErrorCode, message: String },
+    /// The server answered with an unexpected response variant.
+    Protocol(String),
+    /// The server hung up between request and response.
+    ConnectionClosed,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Remote { code, message } => write!(f, "remote {code:?}: {message}"),
+            ClientError::Protocol(m) => write!(f, "protocol: {m}"),
+            ClientError::ConnectionClosed => write!(f, "connection closed mid-call"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<wire::WireError> for ClientError {
+    fn from(e: wire::WireError) -> Self {
+        ClientError::Wire(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, ClientError>;
+
+/// A pool of idle connections to one address, with a call-level
+/// request/response roundtrip. Shared by [`PartitionClient`] and the
+/// remote-shard handles ([`super::remote::RemoteShard`]).
+pub struct Pool {
+    addr: Addr,
+    cfg: ClientConfig,
+    idle: Mutex<Vec<Stream>>,
+}
+
+impl Pool {
+    pub fn new(addr: Addr, cfg: ClientConfig) -> Pool {
+        Pool {
+            addr,
+            cfg,
+            idle: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// One request/response roundtrip. Pooled connections get one retry
+    /// on a fresh connection (covers the server having dropped an idle
+    /// connection); fresh-connection failures are returned as-is. An
+    /// error frame from the server keeps the connection pooled (the
+    /// stream stays frame-aligned) — except `Busy`, which the server
+    /// writes connection-level before closing; transport failures drop
+    /// the stream.
+    ///
+    /// Non-idempotent requests (`Commit` — the worker may have published
+    /// before the response was lost) are **never** re-sent: a failed
+    /// roundtrip surfaces as an error instead of a silent double-send.
+    pub fn call(&self, req: &WireRequest) -> Result<WireResponse> {
+        let resend_safe = !matches!(req, WireRequest::Commit { .. });
+        if let Some(stream) = self.idle.lock().unwrap().pop() {
+            match Self::roundtrip(stream, req) {
+                Ok((stream, resp)) => {
+                    self.pool_unless_closing(stream, &resp);
+                    return Ok(resp);
+                }
+                Err(_) if resend_safe => { /* fall through to a fresh connection */ }
+                Err(e) => return Err(e),
+            }
+        }
+        let stream = Stream::connect(&self.addr).map_err(wire::WireError::Io)?;
+        let _ = stream.set_read_timeout(self.cfg.read_timeout);
+        let (stream, resp) = Self::roundtrip(stream, req)?;
+        self.pool_unless_closing(stream, &resp);
+        Ok(resp)
+    }
+
+    /// Keep the stream for reuse unless the server is about to close it
+    /// (a `ConnLimit` rejection is written right before the drop —
+    /// handler-level errors, `Busy` included, keep the connection open).
+    fn pool_unless_closing(&self, stream: Stream, resp: &WireResponse) {
+        if matches!(
+            resp,
+            WireResponse::Error {
+                code: wire::ErrorCode::ConnLimit,
+                ..
+            }
+        ) {
+            return;
+        }
+        self.put_back(stream);
+    }
+
+    fn roundtrip(mut stream: Stream, req: &WireRequest) -> Result<(Stream, WireResponse)> {
+        wire::write_request(&mut stream, req)?;
+        match wire::read_response(&mut stream)? {
+            Some(resp) => Ok((stream, resp)),
+            None => Err(ClientError::ConnectionClosed),
+        }
+    }
+
+    fn put_back(&self, stream: Stream) {
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < self.cfg.max_idle {
+            idle.push(stream);
+        }
+    }
+}
+
+/// Turn an error frame into a typed [`ClientError::Remote`].
+pub(crate) fn remote_err(code: ErrorCode, message: String) -> ClientError {
+    ClientError::Remote { code, message }
+}
+
+/// Network client mirroring the in-process service API.
+pub struct PartitionClient {
+    pool: Pool,
+}
+
+impl PartitionClient {
+    /// Connect to a partition server and verify liveness with a ping.
+    pub fn connect(addr: Addr, cfg: ClientConfig) -> Result<PartitionClient> {
+        let client = PartitionClient {
+            pool: Pool::new(addr, cfg),
+        };
+        match client.pool.call(&WireRequest::Ping)? {
+            WireResponse::Pong => Ok(client),
+            WireResponse::Error { code, message } => Err(remote_err(code, message)),
+            other => Err(ClientError::Protocol(format!(
+                "ping answered with {other:?}"
+            ))),
+        }
+    }
+
+    /// `(categories, dim, epoch)` the server currently serves.
+    pub fn manifest(&self) -> Result<(usize, usize, u64)> {
+        match self.pool.call(&WireRequest::Manifest)? {
+            WireResponse::Manifest { len, dim, epoch } => Ok((len as usize, dim as usize, epoch)),
+            WireResponse::Error { code, message } => Err(remote_err(code, message)),
+            other => Err(ClientError::Protocol(format!(
+                "manifest answered with {other:?}"
+            ))),
+        }
+    }
+
+    /// Submit one estimation and wait — the wire mirror of
+    /// [`crate::coordinator::PartitionService::estimate`].
+    pub fn estimate(&self, request: Request) -> Result<Response> {
+        let wire_req = WireRequest::Estimate {
+            kind: request.kind,
+            k: request.k as u64,
+            l: request.l as u64,
+            query: request.query,
+        };
+        match self.pool.call(&wire_req)? {
+            WireResponse::Estimates(items) if items.len() == 1 => {
+                Ok(to_response(items.into_iter().next().unwrap()))
+            }
+            WireResponse::Error { code, message } => Err(remote_err(code, message)),
+            other => Err(ClientError::Protocol(format!(
+                "estimate answered with {other:?}"
+            ))),
+        }
+    }
+
+    /// Estimate a whole same-(kind, k, l) query block in one wire call —
+    /// the server coalesces it into shared `estimate_batch` groups, so
+    /// the wire overhead is paid once per block instead of per query.
+    pub fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        k: usize,
+        l: usize,
+        queries: Vec<Vec<f32>>,
+    ) -> Result<Vec<Response>> {
+        let n = queries.len();
+        if n == 0 {
+            return Ok(vec![]);
+        }
+        // The wire query block is (count, dim, flat floats): a ragged
+        // batch would silently re-slice into different vectors on the
+        // server, so reject it here.
+        let d = queries[0].len();
+        if let Some(bad) = queries.iter().find(|q| q.len() != d) {
+            return Err(ClientError::Protocol(format!(
+                "ragged batch: query of dimensionality {} next to {d}",
+                bad.len()
+            )));
+        }
+        let wire_req = WireRequest::EstimateBatch {
+            kind,
+            k: k as u64,
+            l: l as u64,
+            queries,
+        };
+        match self.pool.call(&wire_req)? {
+            WireResponse::Estimates(items) if items.len() == n => {
+                Ok(items.into_iter().map(to_response).collect())
+            }
+            WireResponse::Estimates(items) => Err(ClientError::Protocol(format!(
+                "batch of {n} answered with {} estimates",
+                items.len()
+            ))),
+            WireResponse::Error { code, message } => Err(remote_err(code, message)),
+            other => Err(ClientError::Protocol(format!(
+                "estimate_batch answered with {other:?}"
+            ))),
+        }
+    }
+}
+
+fn to_response(e: wire::Estimate) -> Response {
+    Response {
+        z: e.z,
+        kind: e.kind,
+        epoch: e.epoch,
+        queue_wait: Duration::from_nanos(e.queue_wait_ns),
+        exec_time: Duration::from_nanos(e.exec_ns),
+        scorings: e.scorings as usize,
+    }
+}

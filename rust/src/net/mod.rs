@@ -1,0 +1,248 @@
+//! Network serving layer: the cross-process seam around the coordinator.
+//!
+//! Four pieces:
+//!
+//! * [`wire`] — length-prefixed, versioned, hand-rolled little-endian
+//!   framing codec for requests, responses, `Hit` batches, shard
+//!   manifests and the two-phase epoch-publish handshake.
+//! * [`server`] — a blocking accept-loop [`server::Server`] exposing any
+//!   [`server::Handler`] over TCP or Unix domain sockets, with
+//!   connection limits, per-connection read timeouts, graceful shutdown
+//!   and per-connection metrics feeding
+//!   [`crate::coordinator::ServiceMetrics`].
+//! * [`client`] — [`client::PartitionClient`], a connection-pooling
+//!   client whose `estimate` / `estimate_batch` mirror the in-process
+//!   [`crate::coordinator::PartitionService`] API.
+//! * [`shard`] + [`remote`] — the cross-process shard seam:
+//!   [`shard::ShardWorker`] serves one shard's store behind the wire
+//!   ops (`TopK`, chained exp-sums, tail scoring, prepare/commit), and
+//!   [`remote::RemoteShardIndex`] / [`remote::RemoteCluster`] compose S
+//!   worker processes back into a [`crate::mips::sharded::ShardedIndex`]
+//!   scatter with the existing `hit_cmp` merge — N beyond one process'
+//!   memory. Epoch swaps become a two-phase publish (prepare on all
+//!   workers, then commit) through
+//!   [`crate::store::SnapshotHandle`]'s `prepare_*`/`commit` split.
+//!
+//! Addresses are written `tcp://host:port` or `unix:///path/to.sock`
+//! ([`Addr::parse`]); both transports speak the same frames.
+
+pub mod client;
+pub mod remote;
+pub mod server;
+pub mod shard;
+pub mod wire;
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+/// A serving endpoint: TCP host:port or a Unix-domain socket path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Addr {
+    /// `host:port`, e.g. `127.0.0.1:7071`.
+    Tcp(String),
+    /// Filesystem socket path (Unix only).
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl Addr {
+    /// Parse `tcp://host:port` or `unix:///path`. A bare string
+    /// containing `/` is taken as a socket path, otherwise as
+    /// `host:port`.
+    pub fn parse(s: &str) -> anyhow::Result<Addr> {
+        if let Some(rest) = s.strip_prefix("tcp://") {
+            return Ok(Addr::Tcp(rest.to_string()));
+        }
+        if let Some(rest) = s.strip_prefix("unix://") {
+            #[cfg(unix)]
+            return Ok(Addr::Unix(rest.into()));
+            #[cfg(not(unix))]
+            anyhow::bail!("unix sockets unavailable on this platform: {rest}");
+        }
+        if s.contains('/') {
+            #[cfg(unix)]
+            return Ok(Addr::Unix(s.into()));
+            #[cfg(not(unix))]
+            anyhow::bail!("unix sockets unavailable on this platform: {s}");
+        }
+        if s.contains(':') {
+            return Ok(Addr::Tcp(s.to_string()));
+        }
+        anyhow::bail!("unparseable address {s:?} (want tcp://host:port or unix:///path)")
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Tcp(hp) => write!(f, "tcp://{hp}"),
+            #[cfg(unix)]
+            Addr::Unix(p) => write!(f, "unix://{}", p.display()),
+        }
+    }
+}
+
+/// One connected byte stream over either transport.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to `addr` (blocking).
+    pub fn connect(addr: &Addr) -> std::io::Result<Stream> {
+        match addr {
+            Addr::Tcp(hp) => TcpStream::connect(hp.as_str()).map(Stream::Tcp),
+            #[cfg(unix)]
+            Addr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+        }
+    }
+
+    /// Bound read timeout (None = block forever).
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+
+    /// A second handle to the same connection (for out-of-band wakeups).
+    pub fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    /// Shut down the read half: a thread blocked in `read` wakes with a
+    /// clean EOF while in-flight writes still drain (how the server
+    /// unblocks connection threads during graceful shutdown).
+    pub fn shutdown_read(&self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Read),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Read),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound listening socket over either transport. Unix sockets unlink
+/// their path on bind (stale socket files from a previous run) and on
+/// drop.
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix {
+        listener: UnixListener,
+        path: std::path::PathBuf,
+    },
+}
+
+impl Listener {
+    pub fn bind(addr: &Addr) -> std::io::Result<Listener> {
+        match addr {
+            Addr::Tcp(hp) => TcpListener::bind(hp.as_str()).map(Listener::Tcp),
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                let _ = std::fs::remove_file(p);
+                Ok(Listener::Unix {
+                    listener: UnixListener::bind(p)?,
+                    path: p.clone(),
+                })
+            }
+        }
+    }
+
+    /// The actually bound address (resolves `:0` TCP ports).
+    pub fn bound_addr(&self) -> std::io::Result<Addr> {
+        match self {
+            Listener::Tcp(l) => Ok(Addr::Tcp(l.local_addr()?.to_string())),
+            #[cfg(unix)]
+            Listener::Unix { path, .. } => Ok(Addr::Unix(path.clone())),
+        }
+    }
+
+    pub fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix { listener, .. } => listener.accept().map(|(s, _)| Stream::Unix(s)),
+        }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parses_both_schemes() {
+        assert_eq!(
+            Addr::parse("tcp://127.0.0.1:7071").unwrap(),
+            Addr::Tcp("127.0.0.1:7071".to_string())
+        );
+        assert_eq!(
+            Addr::parse("localhost:80").unwrap(),
+            Addr::Tcp("localhost:80".to_string())
+        );
+        #[cfg(unix)]
+        {
+            assert_eq!(
+                Addr::parse("unix:///tmp/z.sock").unwrap(),
+                Addr::Unix("/tmp/z.sock".into())
+            );
+            assert_eq!(
+                Addr::parse("/tmp/z.sock").unwrap(),
+                Addr::Unix("/tmp/z.sock".into())
+            );
+            assert_eq!(
+                Addr::parse("unix:///tmp/z.sock").unwrap().to_string(),
+                "unix:///tmp/z.sock"
+            );
+        }
+        assert!(Addr::parse("nonsense").is_err());
+    }
+}

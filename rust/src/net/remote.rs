@@ -1,0 +1,914 @@
+//! Cross-process shards: compose S [`super::shard::ShardWorker`]
+//! processes into one logical category set, so N can exceed one
+//! process' memory.
+//!
+//! [`RemoteShardIndex`] is a [`MipsIndex`] over one worker's rows —
+//! `top_k_batch` goes over the wire, local hits come back, and the
+//! existing in-process [`ShardedIndex`] scatter/merge (same `hit_cmp`
+//! ordering) composes the workers exactly like local sub-indexes.
+//! [`RemoteCluster`] owns the worker handles, the derived scatter index,
+//! and the cluster-wide operations: chained exp-sums for `Exact`, remote
+//! tail scoring for the samplers, and two-phase epoch publishes.
+//!
+//! ## Bit-exactness contract (`Exact`)
+//!
+//! The chained exp-sum reproduces the in-process f64 accumulation
+//! exactly: worker s receives the running accumulator(s) after workers
+//! `0..s` and extends them over its own rows in strict row order. The
+//! per-row f32 scores also match the in-process kernels **when every
+//! worker's row count is a multiple of 4 (the last worker excepted)**:
+//! the blocked gemv/gemm kernels score rows in 4-row quads, so 4-aligned
+//! worker boundaries keep every row in the same quad-vs-remainder class
+//! as the single-process global tiling. [`aligned_split_lens`] produces
+//! such layouts; `RemoteCluster` logs a warning when connected workers
+//! break the alignment (answers are then still correct to the last ulp
+//! of a handful of f32 scores, just not bit-pinned).
+//! `rust/tests/net_e2e.rs` pins bit-identity over UDS for S ∈ {1,2,4}.
+//!
+//! ## Estimators over remote shards
+//!
+//! `Exact` (chained exp-sum), `Nmimps` (scatter top-k, exp-sum the
+//! hits), `Mimps` and `Uniform` (scatter top-k + the same global tail
+//! draw as in-process, scored remotely via `ScoreIds`) are served.
+//! `Mince` and `Fmbe` need estimator state colocated with the rows and
+//! answer `Unsupported` for now.
+//!
+//! ## Two-phase epoch publish
+//!
+//! A cluster mutation prepares on **every** worker (workers without
+//! local changes stage a pure epoch bump), and only if all S stage
+//! successfully commits everywhere; any prepare failure aborts the
+//! staged workers and leaves every epoch untouched. Worker epochs stay
+//! in lockstep, and [`RemoteCluster::refresh`] re-validates manifests
+//! after each publish.
+
+use super::client::{remote_err, ClientConfig, ClientError, Pool, Result};
+use super::server::Handler;
+use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
+use super::Addr;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::{tail, EstimatorKind};
+use crate::mips::sharded::ShardedIndex;
+use crate::mips::{Hit, MipsIndex};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Client handle to one shard worker process.
+pub struct RemoteShard {
+    pool: Pool,
+}
+
+impl RemoteShard {
+    /// Connect and fetch the worker's manifest: `(len, dim, epoch)`.
+    pub fn connect(addr: Addr, cfg: ClientConfig) -> Result<(RemoteShard, (usize, usize, u64))> {
+        let shard = RemoteShard {
+            pool: Pool::new(addr, cfg),
+        };
+        let manifest = shard.manifest()?;
+        Ok((shard, manifest))
+    }
+
+    pub fn addr(&self) -> &Addr {
+        self.pool.addr()
+    }
+
+    pub fn manifest(&self) -> Result<(usize, usize, u64)> {
+        match self.pool.call(&WireRequest::Manifest)? {
+            WireResponse::Manifest { len, dim, epoch } => Ok((len as usize, dim as usize, epoch)),
+            other => Err(unexpected("manifest", other)),
+        }
+    }
+
+    /// Local top-k for every query (local ids).
+    pub fn top_k_batch(&self, queries: &[Vec<f32>], k: usize) -> Result<Vec<Vec<Hit>>> {
+        let req = WireRequest::TopK {
+            k: k as u64,
+            queries: queries.to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::Hits(hits) => Ok(hits),
+            other => Err(unexpected("top_k", other)),
+        }
+    }
+
+    /// Continue a single-query chained exp-sum over this worker's rows.
+    pub fn exp_sum_chain(&self, acc: f64, query: &[f32]) -> Result<f64> {
+        let req = WireRequest::ExpSumChain {
+            acc,
+            query: query.to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::ExpSums(acc) if acc.len() == 1 => Ok(acc[0]),
+            other => Err(unexpected("exp_sum_chain", other)),
+        }
+    }
+
+    /// Continue a batched chained exp-sum (one accumulator per query).
+    pub fn exp_sum_chain_batch(&self, acc_in: Vec<f64>, queries: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let want = acc_in.len();
+        let req = WireRequest::ExpSumChainBatch {
+            acc_in,
+            queries: queries.to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::ExpSums(acc) if acc.len() == want => Ok(acc),
+            other => Err(unexpected("exp_sum_chain_batch", other)),
+        }
+    }
+
+    /// Inner products of the given **local** rows with the query.
+    pub fn score_ids(&self, ids: &[u64], query: &[f32]) -> Result<Vec<f32>> {
+        let req = WireRequest::ScoreIds {
+            ids: ids.to_vec(),
+            query: query.to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::Scores(s) if s.len() == ids.len() => Ok(s),
+            other => Err(unexpected("score_ids", other)),
+        }
+    }
+
+    pub fn prepare_add(&self, token: u64, rows: &EmbeddingStore) -> Result<u64> {
+        let req = WireRequest::PrepareAdd {
+            token,
+            dim: rows.dim() as u64,
+            rows: rows.data().to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::Prepared { epoch } => Ok(epoch),
+            other => Err(unexpected("prepare_add", other)),
+        }
+    }
+
+    pub fn prepare_remove(&self, token: u64, ids: &[u64]) -> Result<u64> {
+        let req = WireRequest::PrepareRemove {
+            token,
+            ids: ids.to_vec(),
+        };
+        match self.pool.call(&req)? {
+            WireResponse::Prepared { epoch } => Ok(epoch),
+            other => Err(unexpected("prepare_remove", other)),
+        }
+    }
+
+    pub fn commit(&self, token: u64) -> Result<u64> {
+        match self.pool.call(&WireRequest::Commit { token })? {
+            WireResponse::Committed { epoch } => Ok(epoch),
+            other => Err(unexpected("commit", other)),
+        }
+    }
+
+    pub fn abort(&self, token: u64) -> Result<()> {
+        match self.pool.call(&WireRequest::Abort { token })? {
+            WireResponse::Aborted => Ok(()),
+            other => Err(unexpected("abort", other)),
+        }
+    }
+}
+
+fn unexpected(what: &str, resp: WireResponse) -> ClientError {
+    match resp {
+        WireResponse::Error { code, message } => remote_err(code, message),
+        other => ClientError::Protocol(format!("{what} answered with {other:?}")),
+    }
+}
+
+/// [`MipsIndex`] over one remote shard worker. `len` is pinned at
+/// construction (cluster epoch) so the in-process scatter sees a stable
+/// layout; the cluster rebuilds these handles on every published epoch.
+///
+/// Wire failures inside the `MipsIndex` methods panic with context —
+/// the trait has no error channel — and are caught at the serving
+/// boundary (`net::Server` answers `Internal` instead of crashing).
+pub struct RemoteShardIndex {
+    shard: Arc<RemoteShard>,
+    len: usize,
+}
+
+impl RemoteShardIndex {
+    pub fn new(shard: Arc<RemoteShard>, len: usize) -> RemoteShardIndex {
+        RemoteShardIndex { shard, len }
+    }
+}
+
+impl MipsIndex for RemoteShardIndex {
+    fn top_k(&self, q: &[f32], k: usize) -> Vec<Hit> {
+        self.top_k_batch(std::slice::from_ref(&q.to_vec()), k)
+            .pop()
+            .unwrap_or_default()
+    }
+
+    fn top_k_batch(&self, qs: &[Vec<f32>], k: usize) -> Vec<Vec<Hit>> {
+        if qs.is_empty() {
+            return vec![];
+        }
+        self.shard.top_k_batch(qs, k).unwrap_or_else(|e| {
+            panic!("remote shard {}: top_k failed: {e}", self.shard.addr())
+        })
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn probe_cost(&self, _k: usize) -> usize {
+        // Exact brute retrieval on the worker: every local row scored.
+        self.len
+    }
+
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+}
+
+/// Near-even row split with every boundary 4-aligned: all shards but the
+/// last hold a multiple of 4 rows (the bit-exactness contract above),
+/// sizes within 4 of each other. Shard count is clamped so no shard is
+/// empty.
+pub fn aligned_split_lens(n: usize, s: usize) -> Vec<usize> {
+    if n == 0 {
+        return vec![];
+    }
+    let s = s.clamp(1, (n / 4).max(1));
+    let base = (n / s) & !3;
+    if base == 0 {
+        return vec![n];
+    }
+    let mut lens = vec![base; s];
+    lens[s - 1] = n - base * (s - 1);
+    lens
+}
+
+/// Cut `store` into [`aligned_split_lens`] row blocks (what each shard
+/// worker should serve).
+pub fn aligned_split(store: &EmbeddingStore, s: usize) -> Vec<EmbeddingStore> {
+    let d = store.dim();
+    let mut offset = 0usize;
+    aligned_split_lens(store.len(), s)
+        .into_iter()
+        .map(|len| {
+            let block =
+                EmbeddingStore::from_data(len, d, store.rows(offset, offset + len).to_vec())
+                    .expect("aligned split tiles the range");
+            offset += len;
+            block
+        })
+        .collect()
+}
+
+struct ClusterState {
+    lens: Vec<usize>,
+    epoch: u64,
+    index: Arc<ShardedIndex>,
+}
+
+/// A query block's answers plus the pinned cluster view they were
+/// computed against (see [`RemoteCluster::estimate_batch`]).
+pub struct ClusterAnswer {
+    /// Ẑ per query, in request order.
+    pub zs: Vec<f64>,
+    /// Epoch of the pinned view that produced `zs`.
+    pub epoch: u64,
+    /// Categories the pinned view served.
+    pub len: usize,
+}
+
+/// S shard workers composed into one logical store.
+///
+/// Concurrency model: one `RemoteCluster` is the single coordinator of
+/// its workers (the cross-process analogue of one `SnapshotHandle`).
+/// Mutations serialize on an internal publish lock and estimates pin
+/// one `ClusterState` (layout + scatter index) per request, so
+/// cluster-side reads never mix two layouts. What a remote seam cannot
+/// give is in-process snapshot pinning on the **workers**: a worker
+/// answers every wire call from its currently published epoch, so an
+/// estimate racing a publish may read rows of the new epoch through the
+/// old layout (versioned worker reads are a ROADMAP follow-on). Drive
+/// mutations and traffic from one coordinator process; a second
+/// coordinator's publish is fenced only by the worker-side staging
+/// token (`Busy`).
+pub struct RemoteCluster {
+    shards: Vec<Arc<RemoteShard>>,
+    dim: usize,
+    state: RwLock<Arc<ClusterState>>,
+    /// Serializes cluster-side mutations (global-id interpretation +
+    /// two-phase publish are read-modify-write on the layout).
+    publish_lock: Mutex<()>,
+    token: AtomicU64,
+}
+
+impl RemoteCluster {
+    /// Connect to every worker (in global shard order), validate that
+    /// dimensionalities match and epochs are in lockstep, and build the
+    /// scatter index.
+    pub fn connect(addrs: &[Addr], cfg: ClientConfig) -> Result<RemoteCluster> {
+        if addrs.is_empty() {
+            return Err(ClientError::Protocol("empty worker list".to_string()));
+        }
+        let mut shards = Vec::with_capacity(addrs.len());
+        let mut lens = Vec::with_capacity(addrs.len());
+        let mut dim = None;
+        let mut epoch = None;
+        for addr in addrs {
+            let (shard, (len, d, e)) = RemoteShard::connect(addr.clone(), cfg.clone())?;
+            match dim {
+                None => dim = Some(d),
+                Some(want) if want != d => {
+                    return Err(ClientError::Protocol(format!(
+                        "worker {addr} serves dim {d}, cluster dim is {want}"
+                    )));
+                }
+                _ => {}
+            }
+            match epoch {
+                None => epoch = Some(e),
+                Some(want) if want != e => {
+                    return Err(ClientError::Protocol(format!(
+                        "worker {addr} at epoch {e}, cluster epoch is {want} \
+                         (out-of-lockstep workers)"
+                    )));
+                }
+                _ => {}
+            }
+            shards.push(Arc::new(shard));
+            lens.push(len);
+        }
+        if lens[..lens.len() - 1].iter().any(|&l| l % 4 != 0) {
+            log::warn!(
+                "worker row counts {lens:?} are not 4-aligned; Exact answers stay correct \
+                 but are not bit-pinned to the in-process kernels (see aligned_split_lens)"
+            );
+        }
+        let index = Arc::new(Self::build_index(&shards, &lens));
+        Ok(RemoteCluster {
+            shards,
+            dim: dim.unwrap(),
+            state: RwLock::new(Arc::new(ClusterState {
+                lens,
+                epoch: epoch.unwrap(),
+                index,
+            })),
+            publish_lock: Mutex::new(()),
+            // Seed tokens with process-unique entropy so a replacement
+            // coordinator cannot collide with a crashed predecessor's
+            // orphaned staged preparation (worker staging is keyed by
+            // token; see `ShardWorker`).
+            token: AtomicU64::new(
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_nanos() as u64)
+                    .unwrap_or(0)
+                    ^ ((std::process::id() as u64) << 32),
+            ),
+        })
+    }
+
+    /// Pin the current cluster view (layout + scatter index) for one
+    /// unit of work — the cross-process analogue of `SnapshotHandle::load`.
+    fn state(&self) -> Arc<ClusterState> {
+        self.state.read().unwrap().clone()
+    }
+
+    fn build_index(shards: &[Arc<RemoteShard>], lens: &[usize]) -> ShardedIndex {
+        let mut offset = 0usize;
+        let parts: Vec<(usize, Arc<dyn MipsIndex>)> = shards
+            .iter()
+            .zip(lens)
+            .map(|(shard, &len)| {
+                let part = (
+                    offset,
+                    Arc::new(RemoteShardIndex::new(shard.clone(), len)) as Arc<dyn MipsIndex>,
+                );
+                offset += len;
+                part
+            })
+            .collect();
+        ShardedIndex::from_parts(parts)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.state().lens.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.state().epoch
+    }
+
+    /// The scatter-gather [`ShardedIndex`] over the current epoch's
+    /// remote shards (pin the `Arc` for a unit of work, like a snapshot).
+    pub fn index(&self) -> Arc<ShardedIndex> {
+        self.state().index.clone()
+    }
+
+    /// Single-query chained exact partition: Σ exp(vᵢ·q) accumulated
+    /// across workers in strict global row order (the gemv kernel chain
+    /// — mirrors `Exact::estimate`).
+    pub fn exp_sum(&self, q: &[f32]) -> Result<f64> {
+        let mut acc = 0f64;
+        for shard in &self.shards {
+            acc = shard.exp_sum_chain(acc, q)?;
+        }
+        Ok(acc)
+    }
+
+    /// Batched chained exact partition (the gemm kernel chain — mirrors
+    /// `Exact::estimate_batch`).
+    pub fn exp_sum_batch(&self, qs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let mut acc = vec![0f64; qs.len()];
+        if qs.is_empty() {
+            return Ok(acc);
+        }
+        for shard in &self.shards {
+            acc = shard.exp_sum_chain_batch(acc, qs)?;
+        }
+        Ok(acc)
+    }
+
+    /// Score global ids against `q`, scattering each id to its owning
+    /// worker under the caller's pinned layout. Results in `ids` order.
+    fn score_global_ids(&self, lens: &[usize], ids: &[usize], q: &[f32]) -> Result<Vec<f32>> {
+        let mut buckets: Vec<(Vec<u64>, Vec<usize>)> =
+            (0..self.shards.len()).map(|_| (vec![], vec![])).collect();
+        for (pos, &g) in ids.iter().enumerate() {
+            let mut offset = 0usize;
+            let mut owner = None;
+            for (s, &len) in lens.iter().enumerate() {
+                if g < offset + len {
+                    owner = Some((s, g - offset));
+                    break;
+                }
+                offset += len;
+            }
+            let Some((s, local)) = owner else {
+                return Err(ClientError::Protocol(format!(
+                    "tail id {g} out of range (cluster len {})",
+                    lens.iter().sum::<usize>()
+                )));
+            };
+            buckets[s].0.push(local as u64);
+            buckets[s].1.push(pos);
+        }
+        let mut out = vec![0f32; ids.len()];
+        for (s, (locals, positions)) in buckets.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let scores = self.shards[s].score_ids(&locals, q)?;
+            for (score, pos) in scores.into_iter().zip(positions) {
+                out[pos] = score;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Estimate a same-(kind, k, l) query block across the remote
+    /// shards, mirroring the in-process estimator math (`Exact` exactly;
+    /// the samplers with the same global tail draw, scored remotely).
+    /// The returned [`ClusterAnswer`] carries the epoch and category
+    /// count of the **pinned** cluster view that produced the answers,
+    /// so callers report a consistent `Response.epoch` even when a
+    /// publish lands mid-request.
+    pub fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        k: usize,
+        l: usize,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<ClusterAnswer> {
+        // One pinned cluster view for the whole block, so the head
+        // retrieval, tail sizing, tail scoring and the reported
+        // epoch/len all use one layout.
+        let state = self.state();
+        let zs = match kind {
+            EstimatorKind::Exact => self.exp_sum_batch(qs)?,
+            EstimatorKind::Nmimps => {
+                let heads = state.index.top_k_batch(qs, k);
+                heads.iter().map(|head| tail::head_sum(head)).collect()
+            }
+            EstimatorKind::Mimps => self.sampled_batch(&state, qs, k, l, rng)?,
+            EstimatorKind::Uniform => self.sampled_batch(&state, qs, 0, l, rng)?,
+            EstimatorKind::Mince | EstimatorKind::Fmbe => {
+                return Err(remote_err(
+                    ErrorCode::Unsupported,
+                    format!("{kind} is not served over remote shards yet"),
+                ))
+            }
+        };
+        Ok(ClusterAnswer {
+            zs,
+            epoch: state.epoch,
+            len: state.lens.iter().sum(),
+        })
+    }
+
+    /// MIMPS (k > 0) / Uniform (k = 0) over remote shards: retrieve the
+    /// head through the pinned scatter index, draw the same global tail
+    /// sample as the in-process estimators, and score the drawn ids on
+    /// their owning workers (same pinned layout throughout).
+    fn sampled_batch(
+        &self,
+        state: &ClusterState,
+        qs: &[Vec<f32>],
+        k: usize,
+        l: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        let n: usize = state.lens.iter().sum();
+        let heads: Vec<Vec<Hit>> = if k > 0 {
+            state.index.top_k_batch(qs, k)
+        } else {
+            vec![vec![]; qs.len()]
+        };
+        let mut scratch = tail::TailScratch::new();
+        let mut out = Vec::with_capacity(qs.len());
+        for (q, head) in qs.iter().zip(&heads) {
+            let head_z = tail::head_sum(head);
+            let k_eff = head.len();
+            if k_eff >= n || l == 0 {
+                out.push(head_z);
+                continue;
+            }
+            tail::sample_tail_ids(n, head, l, rng, &mut scratch);
+            let drawn = scratch.indices.len();
+            if drawn == 0 {
+                out.push(head_z);
+                continue;
+            }
+            let exp_sum: f64 = self
+                .score_global_ids(&state.lens, &scratch.indices, q)?
+                .iter()
+                .map(|&s| (s as f64).exp())
+                .sum();
+            out.push(head_z + (n - k_eff) as f64 * (exp_sum / drawn as f64));
+        }
+        Ok(out)
+    }
+
+    /// Two-phase cluster-wide append: the rows join the **last** worker
+    /// (preserving global id contiguity); every other worker stages a
+    /// pure epoch bump so epochs stay in lockstep. All-or-nothing: any
+    /// prepare failure aborts every staged worker. Returns the new
+    /// cluster epoch.
+    pub fn add_categories(&self, rows: &EmbeddingStore) -> Result<u64> {
+        let _p = self.publish_lock.lock().unwrap();
+        let last = self.shards.len() - 1;
+        self.publish(|s, shard: &RemoteShard, token: u64| {
+            if s == last {
+                shard.prepare_add(token, rows)
+            } else {
+                shard.prepare_remove(token, &[])
+            }
+        })
+    }
+
+    /// Two-phase cluster-wide removal of the given **global** ids
+    /// (current epoch's positions; remaining ids compact downward, like
+    /// the in-process `SnapshotHandle`). Emptying a worker outright is
+    /// rejected at prepare time and aborts the publish.
+    pub fn remove_categories(&self, global_ids: &[usize]) -> Result<u64> {
+        // The publish lock covers the global-id interpretation too: ids
+        // are positions in the layout we read here, and a concurrent
+        // publish would silently shift them.
+        let _p = self.publish_lock.lock().unwrap();
+        let lens = self.state().lens.clone();
+        let n: usize = lens.iter().sum();
+        let mut sorted: Vec<usize> = global_ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if let Some(&bad) = sorted.last() {
+            if bad >= n {
+                return Err(ClientError::Protocol(format!(
+                    "remove_categories: id {bad} out of range (len {n})"
+                )));
+            }
+        }
+        // Bucket global ids into per-worker local ids.
+        let mut per_worker: Vec<Vec<u64>> = vec![vec![]; self.shards.len()];
+        let mut it = sorted.into_iter().peekable();
+        let mut offset = 0usize;
+        for (s, &len) in lens.iter().enumerate() {
+            while let Some(&g) = it.peek() {
+                if g >= offset + len {
+                    break;
+                }
+                per_worker[s].push((g - offset) as u64);
+                it.next();
+            }
+            offset += len;
+        }
+        self.publish(|s, shard: &RemoteShard, token: u64| {
+            shard.prepare_remove(token, &per_worker[s])
+        })
+    }
+
+    /// The two-phase skeleton: prepare on all workers (aborting all on
+    /// the first failure), then commit on all, then refresh the cluster
+    /// view from the workers' manifests.
+    ///
+    /// A failed commit RPC is **ambiguous** (the worker may or may not
+    /// have published before the response was lost), so it is resolved
+    /// rather than blindly retried: the worker's manifest is consulted —
+    /// if it already serves the prepared epoch the commit landed and the
+    /// lost response is forgotten; otherwise one explicit commit retry
+    /// runs (covering pre-write transport failures, which `Pool::call`
+    /// deliberately does not resend for `Commit`). A worker that still
+    /// fails leaves the cluster out of lockstep; the original error is
+    /// surfaced (never masked by the follow-up refresh) and the next
+    /// `refresh()` keeps reporting the lockstep break until the worker
+    /// recovers.
+    fn publish<F>(&self, prepare: F) -> Result<u64>
+    where
+        F: Fn(usize, &RemoteShard, u64) -> Result<u64>,
+    {
+        let token = self.token.fetch_add(1, Ordering::SeqCst) + 1;
+        let mut attempted = 0usize;
+        let mut next_epoch = None;
+        let mut failure = None;
+        for (s, shard) in self.shards.iter().enumerate() {
+            // Count the worker as attempted *before* the RPC: a prepare
+            // whose response is lost may still have staged server-side.
+            attempted = s + 1;
+            match prepare(s, shard, token) {
+                Ok(epoch) => {
+                    next_epoch.get_or_insert(epoch);
+                }
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Abort every worker the prepare phase touched — including
+            // the failed one, whose staging is ambiguous (abort is
+            // token-checked and idempotent, so this clears a possible
+            // orphan instead of wedging all future publishes on Busy).
+            for shard in &self.shards[..attempted] {
+                let _ = shard.abort(token);
+            }
+            return Err(e);
+        }
+        let next_epoch = next_epoch.expect("at least one worker prepared");
+        let mut commit_failure = None;
+        for shard in &self.shards {
+            if let Err(first) = shard.commit(token) {
+                // Ambiguous failure: check whether the commit landed.
+                let landed = matches!(shard.manifest(), Ok((_, _, e)) if e == next_epoch);
+                if !landed && shard.commit(token).is_err() {
+                    // Keep committing the rest: a partial publish is
+                    // worse than a completed one with one reported
+                    // failure. The worker may still hold the staged
+                    // preparation — resolve_token(token, true) heals it
+                    // once the worker is reachable again.
+                    log::warn!(
+                        "commit of token {token} failed on worker {}: {first}; \
+                         run resolve_token({token}, true) once it is reachable",
+                        shard.addr()
+                    );
+                    commit_failure.get_or_insert(first);
+                }
+            }
+        }
+        // Refresh best-effort, but never let it mask a commit failure.
+        let refreshed = self.refresh();
+        if let Some(e) = commit_failure {
+            return Err(e);
+        }
+        refreshed?;
+        Ok(self.epoch())
+    }
+
+    /// Best-effort recovery for a publish whose commit phase partially
+    /// failed (the failure log names the token): re-send `Commit`
+    /// (`commit = true`) or `Abort` to every worker — both are
+    /// idempotent worker-side — then refresh. This heals a worker that
+    /// was unreachable during the commit phase and still holds the
+    /// staged preparation (which otherwise answers `Busy` to every
+    /// future publish until its process restarts).
+    pub fn resolve_token(&self, token: u64, commit: bool) -> Result<()> {
+        let _p = self.publish_lock.lock().unwrap();
+        for shard in &self.shards {
+            let res = if commit {
+                shard.commit(token).map(|_| ())
+            } else {
+                shard.abort(token)
+            };
+            match res {
+                Ok(()) => {}
+                // Nothing staged under this token: already resolved.
+                Err(ClientError::Remote {
+                    code: ErrorCode::StalePrepare,
+                    ..
+                }) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.refresh()
+    }
+
+    /// Re-read every worker's manifest, re-validate lockstep, and
+    /// rebuild the scatter index for the (possibly shifted) layout.
+    pub fn refresh(&self) -> Result<()> {
+        let mut lens = Vec::with_capacity(self.shards.len());
+        let mut epoch = None;
+        for shard in &self.shards {
+            let (len, d, e) = shard.manifest()?;
+            if d != self.dim {
+                return Err(ClientError::Protocol(format!(
+                    "worker {} switched to dim {d}",
+                    shard.addr()
+                )));
+            }
+            match epoch {
+                None => epoch = Some(e),
+                Some(want) if want != e => {
+                    return Err(ClientError::Protocol(format!(
+                        "worker {} at epoch {e}, cluster epoch is {want} \
+                         (publish left workers out of lockstep)",
+                        shard.addr()
+                    )));
+                }
+                _ => {}
+            }
+            lens.push(len);
+        }
+        let index = Arc::new(Self::build_index(&self.shards, &lens));
+        *self.state.write().unwrap() = Arc::new(ClusterState {
+            lens,
+            epoch: epoch.unwrap(),
+            index,
+        });
+        Ok(())
+    }
+}
+
+/// Per-request scoring budget over remote shards (mirror of
+/// `Router::scorings` for the remotely served kinds).
+fn scorings_for(kind: EstimatorKind, k: usize, l: usize, n: usize) -> usize {
+    match kind {
+        EstimatorKind::Exact => n,
+        EstimatorKind::Uniform => l,
+        EstimatorKind::Nmimps => k.min(n),
+        EstimatorKind::Mimps | EstimatorKind::Mince => (k + l).min(n),
+        EstimatorKind::Fmbe => 0,
+    }
+}
+
+/// [`Handler`] that serves `Estimate` / `EstimateBatch` from a
+/// [`RemoteCluster`] — the partition server's backend when the category
+/// set lives in shard worker processes instead of local memory.
+pub struct ClusterHandler {
+    cluster: Arc<RemoteCluster>,
+    rng: Mutex<Rng>,
+}
+
+impl ClusterHandler {
+    pub fn new(cluster: Arc<RemoteCluster>, seed: u64) -> ClusterHandler {
+        ClusterHandler {
+            cluster,
+            rng: Mutex::new(Rng::seeded(seed ^ 0x5EED_0CEA)),
+        }
+    }
+
+    fn estimate_block(
+        &self,
+        kind: EstimatorKind,
+        k: usize,
+        l: usize,
+        queries: &[Vec<f32>],
+    ) -> WireResponse {
+        let dim = self.cluster.dim();
+        if let Some(q) = queries.iter().find(|q| q.len() != dim) {
+            return WireResponse::Error {
+                code: ErrorCode::DimMismatch,
+                message: format!(
+                    "query dimensionality {} != store dimensionality {dim}",
+                    q.len()
+                ),
+            };
+        }
+        let started = Instant::now();
+        // Fork a per-request RNG (held lock is momentary) so concurrent
+        // requests never serialize on the scatter's wire round-trips;
+        // non-sampling kinds skip the lock entirely.
+        let mut rng = if matches!(kind, EstimatorKind::Mimps | EstimatorKind::Uniform) {
+            self.rng.lock().unwrap().fork()
+        } else {
+            Rng::seeded(0) // never drawn from
+        };
+        let answer = self.cluster.estimate_batch(kind, k, l, queries, &mut rng);
+        let exec_ns = started.elapsed().as_nanos() as u64;
+        match answer {
+            Ok(answer) => {
+                // Epoch and scoring budget come from the same pinned
+                // view that produced the answers.
+                let scorings = scorings_for(kind, k, l, answer.len) as u64;
+                let epoch = answer.epoch;
+                WireResponse::Estimates(
+                    answer
+                        .zs
+                        .into_iter()
+                        .map(|z| wire::Estimate {
+                            z,
+                            kind,
+                            epoch,
+                            scorings,
+                            queue_wait_ns: 0,
+                            exec_ns,
+                        })
+                        .collect(),
+                )
+            }
+            Err(ClientError::Remote { code, message }) => WireResponse::Error { code, message },
+            Err(e) => WireResponse::Error {
+                code: ErrorCode::Internal,
+                message: format!("remote scatter failed: {e}"),
+            },
+        }
+    }
+}
+
+impl Handler for ClusterHandler {
+    fn handle(&self, req: WireRequest) -> WireResponse {
+        match req {
+            WireRequest::Ping => WireResponse::Pong,
+            WireRequest::Manifest => WireResponse::Manifest {
+                len: self.cluster.len() as u64,
+                dim: self.cluster.dim() as u64,
+                epoch: self.cluster.epoch(),
+            },
+            WireRequest::Estimate { kind, k, l, query } => {
+                self.estimate_block(kind, k as usize, l as usize, std::slice::from_ref(&query))
+            }
+            WireRequest::EstimateBatch {
+                kind,
+                k,
+                l,
+                queries,
+            } => self.estimate_block(kind, k as usize, l as usize, &queries),
+            _ => WireResponse::Error {
+                code: ErrorCode::Unsupported,
+                message: "shard-worker operation sent to a partition server".to_string(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_split_lens_are_quad_aligned_and_cover() {
+        for (n, s) in [(503usize, 4usize), (512, 4), (100, 3), (7, 2), (4, 9), (1, 3)] {
+            let lens = aligned_split_lens(n, s);
+            assert_eq!(lens.iter().sum::<usize>(), n, "n={n} s={s}: {lens:?}");
+            assert!(lens.iter().all(|&l| l > 0), "n={n} s={s}: {lens:?}");
+            for &l in &lens[..lens.len() - 1] {
+                assert_eq!(l % 4, 0, "n={n} s={s}: {lens:?}");
+            }
+        }
+        assert_eq!(aligned_split_lens(0, 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn aligned_split_tiles_the_store() {
+        let s = crate::data::synth::generate(&crate::data::synth::SynthConfig {
+            n: 103,
+            d: 8,
+            ..crate::data::synth::SynthConfig::tiny()
+        });
+        let blocks = aligned_split(&s, 3);
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 103);
+        let mut offset = 0usize;
+        for b in &blocks {
+            for r in 0..b.len() {
+                assert_eq!(b.row(r), s.row(offset + r));
+            }
+            offset += b.len();
+        }
+    }
+
+    #[test]
+    fn scorings_mirror_router() {
+        assert_eq!(scorings_for(EstimatorKind::Exact, 5, 5, 1000), 1000);
+        assert_eq!(scorings_for(EstimatorKind::Mimps, 50, 60, 1000), 110);
+        assert_eq!(scorings_for(EstimatorKind::Nmimps, 2000, 0, 1000), 1000);
+    }
+}

@@ -1,0 +1,342 @@
+//! Blocking network server: a small accept loop serving framed
+//! request/response traffic ([`super::wire`]) over TCP or UDS.
+//!
+//! One thread accepts; each connection is served by its own thread
+//! (bounded by [`ServerConfig::max_connections`] — excess connections
+//! are answered with a `ConnLimit` error frame and closed). Connections are
+//! request-per-frame, pipelined sequentially; a malformed or truncated
+//! frame is answered with a `BadRequest` error frame and the connection
+//! is closed — the server never panics on wire input, and a panicking
+//! handler is caught and answered with an `Internal` error. Read
+//! timeouts bound how long an idle connection can hold a slot.
+//! [`Server::shutdown`] stops accepting, wakes the accept loop, and
+//! joins every connection thread.
+//!
+//! Per-connection activity (accepts, rejections, frames, wire errors)
+//! feeds the shared [`ServiceMetrics`] so network serving shows up next
+//! to batching/queueing in one `MetricsSnapshot`.
+
+use super::wire::{self, ErrorCode, Request, Response};
+use super::{Addr, Listener, Stream};
+use crate::coordinator::{PartitionService, ServiceMetrics, SubmitError};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Serves decoded requests. Implementations: [`ServiceHandler`]
+/// (partition server), [`super::shard::ShardWorker`] (shard worker),
+/// [`super::remote::ClusterHandler`] (partition server over remote
+/// shards).
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: Request) -> Response;
+}
+
+/// Server knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Concurrent connections served; further connections get `ConnLimit`.
+    pub max_connections: usize,
+    /// Per-connection read timeout; an idle connection past it is
+    /// closed (freeing its slot). `None` blocks forever.
+    pub read_timeout: Option<Duration>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_connections: 256,
+            read_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+/// One tracked connection: its serving thread plus a second handle to
+/// the stream so shutdown can wake a blocked read.
+type ConnEntry = (std::thread::JoinHandle<()>, Option<Stream>);
+
+/// A running server; dropping it without [`Server::shutdown`] detaches
+/// the threads (they exit as clients disconnect or time out).
+pub struct Server {
+    addr: Addr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<ConnEntry>>>,
+}
+
+impl Server {
+    /// Bind `addr` and start serving `handler`.
+    pub fn serve(
+        addr: &Addr,
+        handler: Arc<dyn Handler>,
+        cfg: ServerConfig,
+        metrics: Arc<ServiceMetrics>,
+    ) -> anyhow::Result<Server> {
+        let listener = Listener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let bound = listener.bound_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<ConnEntry>>> = Arc::new(Mutex::new(Vec::new()));
+        let active = Arc::new(AtomicUsize::new(0));
+
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let bound_str = bound.to_string();
+            std::thread::Builder::new()
+                .name("zest-net-accept".into())
+                .spawn(move || {
+                    log::info!("serving on {bound_str}");
+                    loop {
+                        let stream = match listener.accept() {
+                            Ok(s) => s,
+                            Err(e) => {
+                                if stop.load(Ordering::SeqCst) {
+                                    break;
+                                }
+                                log::warn!("accept failed: {e}");
+                                continue;
+                            }
+                        };
+                        if stop.load(Ordering::SeqCst) {
+                            break; // the shutdown wake-up connection
+                        }
+                        if active.load(Ordering::SeqCst) >= cfg.max_connections {
+                            metrics.on_conn_rejected();
+                            let mut stream = stream;
+                            let _ = wire::write_response(
+                                &mut stream,
+                                &Response::Error {
+                                    code: ErrorCode::ConnLimit,
+                                    message: format!(
+                                        "connection limit {} reached",
+                                        cfg.max_connections
+                                    ),
+                                },
+                            );
+                            continue; // drop closes it
+                        }
+                        metrics.on_conn_open();
+                        active.fetch_add(1, Ordering::SeqCst);
+                        // Second handle to the stream so shutdown can
+                        // wake this connection's blocked read.
+                        let waker = stream.try_clone().ok();
+                        let handler = handler.clone();
+                        let metrics = metrics.clone();
+                        let active = active.clone();
+                        let stop = stop.clone();
+                        let read_timeout = cfg.read_timeout;
+                        let join = std::thread::Builder::new()
+                            .name("zest-net-conn".into())
+                            .spawn(move || {
+                                serve_conn(stream, handler, read_timeout, &metrics, &stop);
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                metrics.on_conn_close();
+                            })
+                            .expect("spawn connection thread");
+                        let mut guard = conns.lock().unwrap();
+                        // Reap finished threads so the vector stays
+                        // bounded on long-lived servers.
+                        guard.retain(|(h, _)| !h.is_finished());
+                        guard.push((join, waker));
+                    }
+                })
+                .expect("spawn accept thread")
+        };
+
+        Ok(Server {
+            addr: bound,
+            stop,
+            accept_thread: Some(accept_thread),
+            conns,
+        })
+    }
+
+    /// The actually bound address (resolves `:0` TCP ports).
+    pub fn local_addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// Stop accepting, wake the accept loop, and join every thread.
+    /// In-flight connections finish the request they are handling;
+    /// connections blocked in a read are woken by shutting the read
+    /// half of their stream (clean EOF), so shutdown does not wait out
+    /// read timeouts — and terminates even with `read_timeout: None`.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = Stream::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let entries: Vec<ConnEntry> = std::mem::take(&mut *self.conns.lock().unwrap());
+        for (join, waker) in entries {
+            if let Some(w) = &waker {
+                let _ = w.shutdown_read();
+            }
+            let _ = join.join();
+        }
+    }
+}
+
+/// Serve one connection: read frames until EOF, error, timeout or stop.
+fn serve_conn(
+    mut stream: Stream,
+    handler: Arc<dyn Handler>,
+    read_timeout: Option<Duration>,
+    metrics: &ServiceMetrics,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_read_timeout(read_timeout);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let req = match wire::read_request(&mut stream) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean disconnect
+            Err(wire::WireError::Io(e))
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                break; // idle past the read timeout — free the slot
+            }
+            Err(e) => {
+                // Malformed/truncated frame (or transport failure):
+                // answer with an error frame (best effort) and close.
+                metrics.on_wire_error();
+                let _ = wire::write_response(
+                    &mut stream,
+                    &Response::Error {
+                        code: ErrorCode::BadRequest,
+                        message: e.to_string(),
+                    },
+                );
+                break;
+            }
+        };
+        metrics.on_frame_in();
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler.handle(req)))
+            .unwrap_or_else(|_| Response::Error {
+                code: ErrorCode::Internal,
+                message: "handler panicked".to_string(),
+            });
+        match wire::write_response(&mut stream, &resp) {
+            Ok(()) => metrics.on_frame_out(),
+            Err(_) => {
+                metrics.on_wire_error();
+                break;
+            }
+        }
+    }
+}
+
+/// [`Handler`] that fronts an in-process [`PartitionService`]: the
+/// partition server. `Estimate` / `EstimateBatch` go through the
+/// service's bounded queue, batcher and workers exactly like in-process
+/// submissions; `Manifest` reports the served store.
+pub struct ServiceHandler {
+    svc: Arc<PartitionService>,
+}
+
+impl ServiceHandler {
+    pub fn new(svc: Arc<PartitionService>) -> ServiceHandler {
+        ServiceHandler { svc }
+    }
+
+    fn submit_error(e: SubmitError) -> Response {
+        let code = match e {
+            SubmitError::Overloaded => ErrorCode::Overloaded,
+            SubmitError::Closed => ErrorCode::Closed,
+            SubmitError::DimMismatch { .. } => ErrorCode::DimMismatch,
+        };
+        Response::Error {
+            code,
+            message: e.to_string(),
+        }
+    }
+
+    fn to_wire(r: crate::coordinator::Response) -> wire::Estimate {
+        wire::Estimate {
+            z: r.z,
+            kind: r.kind,
+            epoch: r.epoch,
+            scorings: r.scorings as u64,
+            queue_wait_ns: r.queue_wait.as_nanos() as u64,
+            exec_ns: r.exec_time.as_nanos() as u64,
+        }
+    }
+}
+
+impl Handler for ServiceHandler {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Manifest => {
+                let (len, epoch) = self.svc.serving_info();
+                Response::Manifest {
+                    len: len as u64,
+                    dim: self.svc.dim() as u64,
+                    epoch,
+                }
+            }
+            Request::Estimate { kind, k, l, query } => {
+                match self.svc.estimate(crate::coordinator::Request {
+                    query,
+                    kind,
+                    k: k as usize,
+                    l: l as usize,
+                }) {
+                    Ok(r) => Response::Estimates(vec![Self::to_wire(r)]),
+                    Err(e) => Self::submit_error(e),
+                }
+            }
+            Request::EstimateBatch {
+                kind,
+                k,
+                l,
+                queries,
+            } => {
+                // Submit the whole block, then collect in order — the
+                // service's batcher coalesces them into shared
+                // estimate_batch groups.
+                let mut receivers = Vec::with_capacity(queries.len());
+                for query in queries {
+                    match self.svc.submit(crate::coordinator::Request {
+                        query,
+                        kind,
+                        k: k as usize,
+                        l: l as usize,
+                    }) {
+                        Ok(rx) => receivers.push(rx),
+                        Err(e) => return Self::submit_error(e),
+                    }
+                }
+                let mut items = Vec::with_capacity(receivers.len());
+                for rx in receivers {
+                    match rx.recv() {
+                        Ok(r) => items.push(Self::to_wire(r)),
+                        Err(_) => {
+                            return Response::Error {
+                                code: ErrorCode::Closed,
+                                message: "service closed mid-batch".to_string(),
+                            }
+                        }
+                    }
+                }
+                Response::Estimates(items)
+            }
+            // Shard-worker operations don't belong on a partition server.
+            Request::TopK { .. }
+            | Request::ExpSumChain { .. }
+            | Request::ExpSumChainBatch { .. }
+            | Request::ScoreIds { .. }
+            | Request::PrepareAdd { .. }
+            | Request::PrepareRemove { .. }
+            | Request::Commit { .. }
+            | Request::Abort { .. } => Response::Error {
+                code: ErrorCode::Unsupported,
+                message: "shard-worker operation sent to a partition server".to_string(),
+            },
+        }
+    }
+}

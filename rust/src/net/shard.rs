@@ -1,0 +1,400 @@
+//! Shard worker: serves **one shard** of the global category set behind
+//! the wire protocol, so a [`super::remote::RemoteCluster`] can compose
+//! S worker processes into one logical store.
+//!
+//! The worker owns an epoch-snapshotted [`SnapshotHandle`] over its
+//! local rows (internally a single-shard [`ShardedStore`] at startup;
+//! `PrepareAdd` epochs append internal shards). Local ids `[0, len)` are
+//! what the wire ops speak — the cluster maps them to global ids by the
+//! worker's offset, exactly like [`crate::mips::sharded::ShardedIndex`]
+//! globalizes in-process sub-indexes.
+//!
+//! Epoch swaps are two-phase: `PrepareAdd` / `PrepareRemove` build the
+//! next epoch through [`SnapshotHandle::prepare_add`] /
+//! [`prepare_remove`](SnapshotHandle::prepare_remove) and stage it under
+//! the coordinator's token **without publishing**; `Commit` publishes
+//! atomically (failing with `StalePrepare` if a different preparation
+//! got committed since); `Abort` drops the staged epoch. One staged
+//! preparation at a time — a second `Prepare*` under a different token
+//! answers `Busy`, so two coordinators cannot interleave a publish.
+//! A staged preparation persists until its `Commit`/`Abort` arrives (or
+//! the worker restarts): if a coordinator crashes mid-publish, the
+//! worker stays `Busy` to other tokens until an operator aborts with
+//! the orphaned token or restarts the worker. Coordinators draw tokens
+//! from process-unique entropy so a replacement coordinator cannot
+//! accidentally commit an orphan.
+
+use super::server::Handler;
+use super::wire::{ErrorCode, Request, Response};
+use crate::data::embeddings::EmbeddingStore;
+use crate::linalg;
+use crate::store::{
+    exp_sum_view_batch, exp_sum_view_chain, PendingEpoch, ShardedStore, SnapshotHandle, StoreView,
+};
+use std::sync::Mutex;
+
+/// The worker-side handler.
+pub struct ShardWorker {
+    handle: SnapshotHandle,
+    /// At most one staged (token, prepared epoch) at a time.
+    staged: Mutex<Option<(u64, PendingEpoch)>>,
+}
+
+impl ShardWorker {
+    /// Serve `rows` as this worker's shard (exact brute-force local
+    /// index).
+    pub fn new(rows: EmbeddingStore) -> ShardWorker {
+        Self::with_handle(SnapshotHandle::brute(ShardedStore::split(&rows, 1)))
+    }
+
+    /// Serve an existing handle (custom per-shard index families).
+    pub fn with_handle(handle: SnapshotHandle) -> ShardWorker {
+        ShardWorker {
+            handle,
+            staged: Mutex::new(None),
+        }
+    }
+
+    /// The underlying snapshot handle (tests, local mutation).
+    pub fn snapshot_handle(&self) -> &SnapshotHandle {
+        &self.handle
+    }
+
+    fn err(code: ErrorCode, message: impl Into<String>) -> Response {
+        Response::Error {
+            code,
+            message: message.into(),
+        }
+    }
+
+    fn check_dim(&self, got: usize, want: usize) -> Option<Response> {
+        if got != want {
+            return Some(Self::err(
+                ErrorCode::DimMismatch,
+                format!("query dimensionality {got} != shard dimensionality {want}"),
+            ));
+        }
+        None
+    }
+
+    fn stage(&self, token: u64, pending: PendingEpoch) -> Response {
+        let mut staged = self.staged.lock().unwrap();
+        if let Some((t, _)) = staged.as_ref() {
+            if *t != token {
+                return Self::err(
+                    ErrorCode::Busy,
+                    format!("another preparation (token {t}) is staged"),
+                );
+            }
+        }
+        let epoch = pending.epoch();
+        *staged = Some((token, pending));
+        Response::Prepared { epoch }
+    }
+}
+
+impl Handler for ShardWorker {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Manifest => {
+                let snap = self.handle.load();
+                Response::Manifest {
+                    len: StoreView::len(snap.store.as_ref()) as u64,
+                    dim: StoreView::dim(snap.store.as_ref()) as u64,
+                    epoch: snap.epoch,
+                }
+            }
+            Request::TopK { k, queries } => {
+                let snap = self.handle.load();
+                let d = StoreView::dim(snap.store.as_ref());
+                if let Some(resp) = queries
+                    .first()
+                    .and_then(|q| self.check_dim(q.len(), d))
+                {
+                    return resp;
+                }
+                Response::Hits(snap.index.top_k_batch(&queries, k as usize))
+            }
+            Request::ExpSumChain { acc, query } => {
+                let snap = self.handle.load();
+                let d = StoreView::dim(snap.store.as_ref());
+                if let Some(resp) = self.check_dim(query.len(), d) {
+                    return resp;
+                }
+                // Single-query gemv chain: continues the caller's strict
+                // sequential accumulation over this worker's rows.
+                Response::ExpSums(vec![exp_sum_view_chain(snap.store.as_ref(), &query, acc)])
+            }
+            Request::ExpSumChainBatch { acc_in, queries } => {
+                if acc_in.len() != queries.len() {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!(
+                            "{} accumulators for {} queries",
+                            acc_in.len(),
+                            queries.len()
+                        ),
+                    );
+                }
+                let snap = self.handle.load();
+                let d = StoreView::dim(snap.store.as_ref());
+                if let Some(resp) = queries
+                    .first()
+                    .and_then(|q| self.check_dim(q.len(), d))
+                {
+                    return resp;
+                }
+                // Batched gemm chain: exp_sum_view_batch accumulates
+                // *into* zs, so seeding with acc_in continues the chain.
+                let mut zs = acc_in;
+                if !queries.is_empty() {
+                    let qs_flat = linalg::flatten_queries(&queries, d);
+                    exp_sum_view_batch(snap.store.as_ref(), &qs_flat, queries.len(), &mut zs);
+                }
+                Response::ExpSums(zs)
+            }
+            Request::ScoreIds { ids, query } => {
+                let snap = self.handle.load();
+                let view = snap.store.as_ref();
+                let d = StoreView::dim(view);
+                if let Some(resp) = self.check_dim(query.len(), d) {
+                    return resp;
+                }
+                let n = StoreView::len(view);
+                let mut scores = Vec::with_capacity(ids.len());
+                for id in ids {
+                    let id = id as usize;
+                    if id >= n {
+                        return Self::err(
+                            ErrorCode::BadRequest,
+                            format!("row {id} out of range (len {n})"),
+                        );
+                    }
+                    scores.push(linalg::dot(StoreView::row(view, id), &query));
+                }
+                Response::Scores(scores)
+            }
+            Request::PrepareAdd { token, dim, rows } => {
+                let dim = dim as usize;
+                if dim == 0 || rows.len() % dim != 0 {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!("{} row floats not divisible by dim {dim}", rows.len()),
+                    );
+                }
+                let n = rows.len() / dim;
+                let store = match EmbeddingStore::from_data(n, dim, rows) {
+                    Ok(s) => s,
+                    Err(e) => return Self::err(ErrorCode::BadRequest, e.to_string()),
+                };
+                match self.handle.prepare_add(store) {
+                    Ok(pending) => self.stage(token, pending),
+                    Err(e) => Self::err(ErrorCode::BadRequest, e.to_string()),
+                }
+            }
+            Request::PrepareRemove { token, ids } => {
+                let ids: Vec<usize> = ids.into_iter().map(|i| i as usize).collect();
+                match self.handle.prepare_remove(&ids) {
+                    Ok(pending) => self.stage(token, pending),
+                    Err(e) => Self::err(ErrorCode::BadRequest, e.to_string()),
+                }
+            }
+            Request::Commit { token } => {
+                // Hold the stage lock across the publish so a concurrent
+                // Prepare cannot slip between take and commit.
+                let mut staged = self.staged.lock().unwrap();
+                match staged.take() {
+                    Some((t, pending)) if t == token => match self.handle.commit(pending) {
+                        Ok(epoch) => Response::Committed { epoch },
+                        Err(e) => Self::err(ErrorCode::StalePrepare, e.to_string()),
+                    },
+                    other => {
+                        *staged = other; // not ours: put it back untouched
+                        Self::err(
+                            ErrorCode::StalePrepare,
+                            format!("no preparation staged under token {token}"),
+                        )
+                    }
+                }
+            }
+            Request::Abort { token } => {
+                let mut staged = self.staged.lock().unwrap();
+                if matches!(staged.as_ref(), Some((t, _)) if *t == token) {
+                    *staged = None;
+                }
+                Response::Aborted
+            }
+            // Partition-server operations don't belong on a shard worker.
+            Request::Estimate { .. } | Request::EstimateBatch { .. } => Self::err(
+                ErrorCode::Unsupported,
+                "partition-server operation sent to a shard worker",
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthConfig};
+    use crate::mips::MipsIndex;
+
+    fn worker(n: usize, d: usize) -> (ShardWorker, EmbeddingStore) {
+        let s = generate(&SynthConfig {
+            n,
+            d,
+            ..SynthConfig::tiny()
+        });
+        (ShardWorker::new(s.clone()), s)
+    }
+
+    #[test]
+    fn manifest_and_topk_serve_local_rows() {
+        let (w, s) = worker(120, 8);
+        assert_eq!(
+            w.handle(Request::Manifest),
+            Response::Manifest {
+                len: 120,
+                dim: 8,
+                epoch: 0
+            }
+        );
+        let q = s.row(7).to_vec();
+        let resp = w.handle(Request::TopK {
+            k: 5,
+            queries: vec![q.clone()],
+        });
+        let Response::Hits(hits) = resp else {
+            panic!("{resp:?}");
+        };
+        let want = crate::mips::brute::BruteIndex::new(&s).top_k(&q, 5);
+        assert_eq!(hits[0], want);
+    }
+
+    #[test]
+    fn exp_sum_chain_continues_accumulator() {
+        let (w, s) = worker(100, 8);
+        let q = s.row(3).to_vec();
+        let local = crate::store::exp_sum_view(&s, &q);
+        let resp = w.handle(Request::ExpSumChain {
+            acc: 10.0,
+            query: q,
+        });
+        let Response::ExpSums(acc) = resp else {
+            panic!("{resp:?}");
+        };
+        assert_eq!(acc[0].to_bits(), (10.0 + local).to_bits());
+    }
+
+    #[test]
+    fn score_ids_match_direct_dots() {
+        let (w, s) = worker(60, 8);
+        let q = s.row(1).to_vec();
+        let resp = w.handle(Request::ScoreIds {
+            ids: vec![0, 17, 59],
+            query: q.clone(),
+        });
+        let Response::Scores(scores) = resp else {
+            panic!("{resp:?}");
+        };
+        for (i, &id) in [0usize, 17, 59].iter().enumerate() {
+            assert_eq!(scores[i], linalg::dot(s.row(id), &q));
+        }
+        // Out-of-range ids are a BadRequest, not a panic.
+        let resp = w.handle(Request::ScoreIds {
+            ids: vec![60],
+            query: q,
+        });
+        assert!(matches!(
+            resp,
+            Response::Error {
+                code: ErrorCode::BadRequest,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn two_phase_publish_stages_then_commits() {
+        let (w, _) = worker(40, 8);
+        let added = generate(&SynthConfig {
+            n: 8,
+            d: 8,
+            seed: 3,
+            ..SynthConfig::tiny()
+        });
+        let resp = w.handle(Request::PrepareAdd {
+            token: 1,
+            dim: 8,
+            rows: added.data().to_vec(),
+        });
+        assert_eq!(resp, Response::Prepared { epoch: 1 });
+        // Not published yet.
+        assert_eq!(w.snapshot_handle().epoch(), 0);
+        // A different token cannot stage or commit over it.
+        let busy = w.handle(Request::PrepareRemove {
+            token: 2,
+            ids: vec![],
+        });
+        assert!(matches!(
+            busy,
+            Response::Error {
+                code: ErrorCode::Busy,
+                ..
+            }
+        ));
+        let stale = w.handle(Request::Commit { token: 2 });
+        assert!(matches!(
+            stale,
+            Response::Error {
+                code: ErrorCode::StalePrepare,
+                ..
+            }
+        ));
+        // The staged preparation survives the mismatched commit.
+        assert_eq!(
+            w.handle(Request::Commit { token: 1 }),
+            Response::Committed { epoch: 1 }
+        );
+        assert_eq!(w.snapshot_handle().epoch(), 1);
+        let Response::Manifest { len, .. } = w.handle(Request::Manifest) else {
+            panic!()
+        };
+        assert_eq!(len, 48);
+    }
+
+    #[test]
+    fn abort_unstages_and_commit_then_fails() {
+        let (w, _) = worker(20, 8);
+        w.handle(Request::PrepareRemove {
+            token: 5,
+            ids: vec![0, 1],
+        });
+        assert_eq!(w.handle(Request::Abort { token: 5 }), Response::Aborted);
+        assert!(matches!(
+            w.handle(Request::Commit { token: 5 }),
+            Response::Error {
+                code: ErrorCode::StalePrepare,
+                ..
+            }
+        ));
+        assert_eq!(w.snapshot_handle().epoch(), 0);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error_frame() {
+        let (w, _) = worker(20, 8);
+        let resp = w.handle(Request::ExpSumChain {
+            acc: 0.0,
+            query: vec![0.0; 5],
+        });
+        assert!(matches!(
+            resp,
+            Response::Error {
+                code: ErrorCode::DimMismatch,
+                ..
+            }
+        ));
+    }
+}

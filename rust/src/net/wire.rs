@@ -1,0 +1,1126 @@
+//! Framed wire protocol: length-prefixed, versioned, hand-rolled
+//! little-endian binary codec (no serde) for every message the serving
+//! layer exchanges — estimation requests/responses, `Hit` batches, shard
+//! manifests, chained exp-sums, and the two-phase epoch-publish
+//! handshake.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! ┌─────────┬────────────┬─────────────┬──────────────────────┐
+//! │ "ZNW1"  │ version u16│ payload len │ payload              │
+//! │ 4 bytes │ LE         │ u32 LE      │ tag u8 + body        │
+//! └─────────┴────────────┴─────────────┴──────────────────────┘
+//! ```
+//!
+//! Every multi-byte integer and float is little-endian. Vectors are a
+//! `u32` count followed by raw elements; query blocks are `count u32,
+//! dim u32, count*dim f32`. A frame larger than [`MAX_FRAME_LEN`]
+//! (guarding allocation-from-the-wire), a bad magic, an unknown version,
+//! an unknown tag, a short body, or trailing bytes all decode to
+//! [`WireError::Malformed`]-family errors — the server answers with an
+//! error frame and closes the connection instead of panicking
+//! (`rust/tests/net_e2e.rs` pins this).
+//!
+//! Golden-byte tests at the bottom freeze the encoding: changing any of
+//! them is a wire-format break and requires a `VERSION` bump.
+
+use crate::estimators::EstimatorKind;
+use crate::mips::Hit;
+use std::io::{Read, Write};
+
+/// Frame magic: "ZNW1" (Zest NetWork, format 1).
+pub const MAGIC: [u8; 4] = *b"ZNW1";
+/// Protocol version carried in every frame header.
+pub const VERSION: u16 = 1;
+/// Upper bound on one frame's payload (guards against allocating
+/// attacker-controlled lengths; also the practical cap on one
+/// `PrepareAdd` row shipment — ~64M f32s).
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+const HEADER_LEN: usize = 10;
+
+/// Decode/transport failure.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    FrameTooLarge(usize),
+    Malformed(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            WireError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+            WireError::FrameTooLarge(n) => {
+                write!(f, "frame payload of {n} bytes exceeds cap {MAX_FRAME_LEN}")
+            }
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, WireError>;
+
+/// Typed error codes carried by [`Response::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Ingress queue full under shedding backpressure.
+    Overloaded,
+    /// Service shut down.
+    Closed,
+    /// Query dimensionality does not match the served store.
+    DimMismatch,
+    /// Operation not supported by this endpoint (e.g. a shard-worker op
+    /// sent to a partition server, or a remote-incapable estimator).
+    Unsupported,
+    /// Undecodable or semantically invalid request.
+    BadRequest,
+    /// Handler failure.
+    Internal,
+    /// Two-phase commit against a preparation that no longer matches.
+    StalePrepare,
+    /// Handler-level contention (e.g. a different coordinator's staged
+    /// preparation); the connection stays open — retry later.
+    Busy,
+    /// Connection limit reached; the server closes this connection
+    /// right after the error frame.
+    ConnLimit,
+    /// Forward-compatibility catch-all.
+    Unknown(u16),
+}
+
+impl ErrorCode {
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrorCode::Overloaded => 1,
+            ErrorCode::Closed => 2,
+            ErrorCode::DimMismatch => 3,
+            ErrorCode::Unsupported => 4,
+            ErrorCode::BadRequest => 5,
+            ErrorCode::Internal => 6,
+            ErrorCode::StalePrepare => 7,
+            ErrorCode::Busy => 8,
+            ErrorCode::ConnLimit => 9,
+            ErrorCode::Unknown(v) => v,
+        }
+    }
+
+    pub fn from_u16(v: u16) -> ErrorCode {
+        match v {
+            1 => ErrorCode::Overloaded,
+            2 => ErrorCode::Closed,
+            3 => ErrorCode::DimMismatch,
+            4 => ErrorCode::Unsupported,
+            5 => ErrorCode::BadRequest,
+            6 => ErrorCode::Internal,
+            7 => ErrorCode::StalePrepare,
+            8 => ErrorCode::Busy,
+            9 => ErrorCode::ConnLimit,
+            other => ErrorCode::Unknown(other),
+        }
+    }
+}
+
+/// One request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// What is served here? → [`Response::Manifest`].
+    Manifest,
+    /// One estimation (partition server).
+    Estimate {
+        kind: EstimatorKind,
+        k: u64,
+        l: u64,
+        query: Vec<f32>,
+    },
+    /// A query block of one (kind, k, l) configuration.
+    EstimateBatch {
+        kind: EstimatorKind,
+        k: u64,
+        l: u64,
+        queries: Vec<Vec<f32>>,
+    },
+    /// Shard worker: top-k for every query, local ids.
+    TopK { k: u64, queries: Vec<Vec<f32>> },
+    /// Shard worker: continue a single-query chained exp-sum — returns
+    /// `acc + Σ exp(row · q)` over the worker's rows, accumulated in
+    /// strict local row order (the single-query gemv kernel).
+    ExpSumChain { acc: f64, query: Vec<f32> },
+    /// Shard worker: batched chained exp-sum (the multi-query gemm
+    /// kernel); `acc_in[j]` seeds query `j`'s accumulator.
+    ExpSumChainBatch {
+        acc_in: Vec<f64>,
+        queries: Vec<Vec<f32>>,
+    },
+    /// Shard worker: raw inner products of the given local rows with the
+    /// query (remote tail scoring).
+    ScoreIds { ids: Vec<u64>, query: Vec<f32> },
+    /// Two-phase publish, phase 1: stage an epoch that appends the given
+    /// row-major block as new categories.
+    PrepareAdd {
+        token: u64,
+        dim: u64,
+        rows: Vec<f32>,
+    },
+    /// Two-phase publish, phase 1: stage an epoch that drops the given
+    /// local ids. Empty `ids` is a pure epoch bump, which is how workers
+    /// without local changes stay in lockstep.
+    PrepareRemove { token: u64, ids: Vec<u64> },
+    /// Two-phase publish, phase 2: atomically publish the staged epoch.
+    Commit { token: u64 },
+    /// Drop a staged preparation.
+    Abort { token: u64 },
+}
+
+/// One estimation answer (mirrors `coordinator::Response`; durations in
+/// nanoseconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Estimate {
+    pub z: f64,
+    pub kind: EstimatorKind,
+    pub epoch: u64,
+    pub scorings: u64,
+    pub queue_wait_ns: u64,
+    pub exec_ns: u64,
+}
+
+/// One response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    /// Serving manifest: categories, dimensionality, snapshot epoch.
+    Manifest { len: u64, dim: u64, epoch: u64 },
+    /// Estimation answers, in request order (one element for
+    /// [`Request::Estimate`]).
+    Estimates(Vec<Estimate>),
+    /// Per-query hit lists (local ids on shard workers).
+    Hits(Vec<Vec<Hit>>),
+    /// Continued accumulator(s) of a chained exp-sum.
+    ExpSums(Vec<f64>),
+    /// Raw inner products for [`Request::ScoreIds`], in id order.
+    Scores(Vec<f32>),
+    /// Phase-1 ack: the epoch the staged snapshot will publish as.
+    Prepared { epoch: u64 },
+    /// Phase-2 ack: the epoch now published.
+    Committed { epoch: u64 },
+    Aborted,
+    Error { code: ErrorCode, message: String },
+}
+
+// ---------------------------------------------------------------------
+// Primitive little-endian encode/decode.
+
+/// Append-only little-endian encoder.
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn with_tag(tag: u8) -> Enc {
+        Enc { buf: vec![tag] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Query block: `count u32, dim u32, count×dim f32`. All queries
+    /// must share one dimensionality (the protocol's invariant). Hard
+    /// assert — a ragged block would encode a frame that silently
+    /// re-slices into *different* queries on the peer, which is worse
+    /// than a panic at the call site.
+    fn queries(&mut self, qs: &[Vec<f32>]) {
+        self.u32(qs.len() as u32);
+        let d = qs.first().map_or(0, |q| q.len());
+        self.u32(d as u32);
+        for q in qs {
+            assert_eq!(q.len(), d, "ragged query block");
+            for &x in q {
+                self.f32(x);
+            }
+        }
+    }
+}
+
+/// Checked little-endian decoder over one payload.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Malformed(format!(
+                "short body: want {n} more bytes, have {}",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    /// A length prefix that the remaining body can actually hold
+    /// `elem_size`-byte elements for (rejects allocation bombs).
+    fn len_prefix(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_size) > self.buf.len() - self.pos {
+            return Err(WireError::Malformed(format!(
+                "length prefix {n} overruns body"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len_prefix(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireError::Malformed("non-utf8 string".to_string()))
+    }
+
+    fn queries(&mut self) -> Result<Vec<Vec<f32>>> {
+        let n = self.u32()? as usize;
+        let d = self.u32()? as usize;
+        // d == 0 with n > 0 would zero out the byte-cost check below and
+        // let a tiny frame claim ~4G queries (an allocation bomb).
+        if n > 0 && d == 0 {
+            return Err(WireError::Malformed(format!(
+                "query block claims {n} zero-dimensional queries"
+            )));
+        }
+        if n.saturating_mul(d).saturating_mul(4) > self.buf.len() - self.pos {
+            return Err(WireError::Malformed(format!(
+                "query block {n}×{d} overruns body"
+            )));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut q = Vec::with_capacity(d);
+            for _ in 0..d {
+                q.push(self.f32()?);
+            }
+            out.push(q);
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn kind_to_u8(kind: EstimatorKind) -> u8 {
+    match kind {
+        EstimatorKind::Exact => 0,
+        EstimatorKind::Uniform => 1,
+        EstimatorKind::Nmimps => 2,
+        EstimatorKind::Mimps => 3,
+        EstimatorKind::Mince => 4,
+        EstimatorKind::Fmbe => 5,
+    }
+}
+
+fn kind_from_u8(v: u8) -> Result<EstimatorKind> {
+    Ok(match v {
+        0 => EstimatorKind::Exact,
+        1 => EstimatorKind::Uniform,
+        2 => EstimatorKind::Nmimps,
+        3 => EstimatorKind::Mimps,
+        4 => EstimatorKind::Mince,
+        5 => EstimatorKind::Fmbe,
+        other => {
+            return Err(WireError::Malformed(format!(
+                "unknown estimator kind {other}"
+            )))
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// Message encode/decode.
+
+const REQ_PING: u8 = 1;
+const REQ_MANIFEST: u8 = 2;
+const REQ_ESTIMATE: u8 = 3;
+const REQ_ESTIMATE_BATCH: u8 = 4;
+const REQ_TOP_K: u8 = 5;
+const REQ_EXP_SUM_CHAIN: u8 = 6;
+const REQ_EXP_SUM_CHAIN_BATCH: u8 = 7;
+const REQ_SCORE_IDS: u8 = 8;
+const REQ_PREPARE_ADD: u8 = 9;
+const REQ_PREPARE_REMOVE: u8 = 10;
+const REQ_COMMIT: u8 = 11;
+const REQ_ABORT: u8 = 12;
+
+const RESP_PONG: u8 = 1;
+const RESP_MANIFEST: u8 = 2;
+const RESP_ESTIMATES: u8 = 3;
+const RESP_HITS: u8 = 4;
+const RESP_EXP_SUMS: u8 = 5;
+const RESP_SCORES: u8 = 6;
+const RESP_PREPARED: u8 = 7;
+const RESP_COMMITTED: u8 = 8;
+const RESP_ABORTED: u8 = 9;
+const RESP_ERROR: u8 = 10;
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Ping => Enc::with_tag(REQ_PING).buf,
+            Request::Manifest => Enc::with_tag(REQ_MANIFEST).buf,
+            Request::Estimate { kind, k, l, query } => {
+                let mut e = Enc::with_tag(REQ_ESTIMATE);
+                e.u8(kind_to_u8(*kind));
+                e.u64(*k);
+                e.u64(*l);
+                e.f32s(query);
+                e.buf
+            }
+            Request::EstimateBatch {
+                kind,
+                k,
+                l,
+                queries,
+            } => {
+                let mut e = Enc::with_tag(REQ_ESTIMATE_BATCH);
+                e.u8(kind_to_u8(*kind));
+                e.u64(*k);
+                e.u64(*l);
+                e.queries(queries);
+                e.buf
+            }
+            Request::TopK { k, queries } => {
+                let mut e = Enc::with_tag(REQ_TOP_K);
+                e.u64(*k);
+                e.queries(queries);
+                e.buf
+            }
+            Request::ExpSumChain { acc, query } => {
+                let mut e = Enc::with_tag(REQ_EXP_SUM_CHAIN);
+                e.f64(*acc);
+                e.f32s(query);
+                e.buf
+            }
+            Request::ExpSumChainBatch { acc_in, queries } => {
+                let mut e = Enc::with_tag(REQ_EXP_SUM_CHAIN_BATCH);
+                e.f64s(acc_in);
+                e.queries(queries);
+                e.buf
+            }
+            Request::ScoreIds { ids, query } => {
+                let mut e = Enc::with_tag(REQ_SCORE_IDS);
+                e.u64s(ids);
+                e.f32s(query);
+                e.buf
+            }
+            Request::PrepareAdd { token, dim, rows } => {
+                let mut e = Enc::with_tag(REQ_PREPARE_ADD);
+                e.u64(*token);
+                e.u64(*dim);
+                e.f32s(rows);
+                e.buf
+            }
+            Request::PrepareRemove { token, ids } => {
+                let mut e = Enc::with_tag(REQ_PREPARE_REMOVE);
+                e.u64(*token);
+                e.u64s(ids);
+                e.buf
+            }
+            Request::Commit { token } => {
+                let mut e = Enc::with_tag(REQ_COMMIT);
+                e.u64(*token);
+                e.buf
+            }
+            Request::Abort { token } => {
+                let mut e = Enc::with_tag(REQ_ABORT);
+                e.u64(*token);
+                e.buf
+            }
+        }
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Request> {
+        let mut d = Dec::new(payload);
+        let tag = d.u8()?;
+        let req = match tag {
+            REQ_PING => Request::Ping,
+            REQ_MANIFEST => Request::Manifest,
+            REQ_ESTIMATE => Request::Estimate {
+                kind: kind_from_u8(d.u8()?)?,
+                k: d.u64()?,
+                l: d.u64()?,
+                query: d.f32s()?,
+            },
+            REQ_ESTIMATE_BATCH => Request::EstimateBatch {
+                kind: kind_from_u8(d.u8()?)?,
+                k: d.u64()?,
+                l: d.u64()?,
+                queries: d.queries()?,
+            },
+            REQ_TOP_K => Request::TopK {
+                k: d.u64()?,
+                queries: d.queries()?,
+            },
+            REQ_EXP_SUM_CHAIN => Request::ExpSumChain {
+                acc: d.f64()?,
+                query: d.f32s()?,
+            },
+            REQ_EXP_SUM_CHAIN_BATCH => Request::ExpSumChainBatch {
+                acc_in: d.f64s()?,
+                queries: d.queries()?,
+            },
+            REQ_SCORE_IDS => Request::ScoreIds {
+                ids: d.u64s()?,
+                query: d.f32s()?,
+            },
+            REQ_PREPARE_ADD => Request::PrepareAdd {
+                token: d.u64()?,
+                dim: d.u64()?,
+                rows: d.f32s()?,
+            },
+            REQ_PREPARE_REMOVE => Request::PrepareRemove {
+                token: d.u64()?,
+                ids: d.u64s()?,
+            },
+            REQ_COMMIT => Request::Commit { token: d.u64()? },
+            REQ_ABORT => Request::Abort { token: d.u64()? },
+            other => {
+                return Err(WireError::Malformed(format!("unknown request tag {other}")));
+            }
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Pong => Enc::with_tag(RESP_PONG).buf,
+            Response::Manifest { len, dim, epoch } => {
+                let mut e = Enc::with_tag(RESP_MANIFEST);
+                e.u64(*len);
+                e.u64(*dim);
+                e.u64(*epoch);
+                e.buf
+            }
+            Response::Estimates(items) => {
+                let mut e = Enc::with_tag(RESP_ESTIMATES);
+                e.u32(items.len() as u32);
+                for it in items {
+                    e.f64(it.z);
+                    e.u8(kind_to_u8(it.kind));
+                    e.u64(it.epoch);
+                    e.u64(it.scorings);
+                    e.u64(it.queue_wait_ns);
+                    e.u64(it.exec_ns);
+                }
+                e.buf
+            }
+            Response::Hits(per_query) => {
+                let mut e = Enc::with_tag(RESP_HITS);
+                e.u32(per_query.len() as u32);
+                for hits in per_query {
+                    e.u32(hits.len() as u32);
+                    for h in hits {
+                        e.u64(h.idx as u64);
+                        e.f32(h.score);
+                    }
+                }
+                e.buf
+            }
+            Response::ExpSums(acc) => {
+                let mut e = Enc::with_tag(RESP_EXP_SUMS);
+                e.f64s(acc);
+                e.buf
+            }
+            Response::Scores(scores) => {
+                let mut e = Enc::with_tag(RESP_SCORES);
+                e.f32s(scores);
+                e.buf
+            }
+            Response::Prepared { epoch } => {
+                let mut e = Enc::with_tag(RESP_PREPARED);
+                e.u64(*epoch);
+                e.buf
+            }
+            Response::Committed { epoch } => {
+                let mut e = Enc::with_tag(RESP_COMMITTED);
+                e.u64(*epoch);
+                e.buf
+            }
+            Response::Aborted => Enc::with_tag(RESP_ABORTED).buf,
+            Response::Error { code, message } => {
+                let mut e = Enc::with_tag(RESP_ERROR);
+                e.u16(code.as_u16());
+                e.str(message);
+                e.buf
+            }
+        }
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Response> {
+        let mut d = Dec::new(payload);
+        let tag = d.u8()?;
+        let resp = match tag {
+            RESP_PONG => Response::Pong,
+            RESP_MANIFEST => Response::Manifest {
+                len: d.u64()?,
+                dim: d.u64()?,
+                epoch: d.u64()?,
+            },
+            RESP_ESTIMATES => {
+                let n = d.len_prefix(41)?; // 8 + 1 + 8·4 bytes per estimate
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(Estimate {
+                        z: d.f64()?,
+                        kind: kind_from_u8(d.u8()?)?,
+                        epoch: d.u64()?,
+                        scorings: d.u64()?,
+                        queue_wait_ns: d.u64()?,
+                        exec_ns: d.u64()?,
+                    });
+                }
+                Response::Estimates(items)
+            }
+            RESP_HITS => {
+                let n = d.len_prefix(4)?;
+                let mut per_query = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let m = d.len_prefix(12)?;
+                    let mut hits = Vec::with_capacity(m);
+                    for _ in 0..m {
+                        hits.push(Hit {
+                            idx: d.u64()? as usize,
+                            score: d.f32()?,
+                        });
+                    }
+                    per_query.push(hits);
+                }
+                Response::Hits(per_query)
+            }
+            RESP_EXP_SUMS => Response::ExpSums(d.f64s()?),
+            RESP_SCORES => Response::Scores(d.f32s()?),
+            RESP_PREPARED => Response::Prepared { epoch: d.u64()? },
+            RESP_COMMITTED => Response::Committed { epoch: d.u64()? },
+            RESP_ABORTED => Response::Aborted,
+            RESP_ERROR => Response::Error {
+                code: ErrorCode::from_u16(d.u16()?),
+                message: d.str()?,
+            },
+            other => {
+                return Err(WireError::Malformed(format!(
+                    "unknown response tag {other}"
+                )));
+            }
+        };
+        d.finish()?;
+        Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame I/O.
+
+/// Write one frame (header + payload) and flush.
+pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(WireError::FrameTooLarge(payload.len()));
+    }
+    let mut header = [0u8; HEADER_LEN];
+    header[..4].copy_from_slice(&MAGIC);
+    header[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    header[6..10].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` on a clean EOF **before** any
+/// header byte (the peer hung up between frames); a connection dying
+/// mid-frame is a truncation error.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<Vec<u8>>> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Malformed(format!(
+                    "connection closed {got} bytes into a frame header"
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) && got > 0 => {
+                // A timeout *mid-frame* is a truncation (the peer
+                // stalled with a frame half-sent), not an idle
+                // connection: callers answer with an error frame.
+                return Err(WireError::Malformed(format!(
+                    "timed out {got} bytes into a frame header"
+                )));
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic([
+            header[0], header[1], header[2], header[3],
+        ]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof || is_timeout(&e) {
+            WireError::Malformed(
+                "connection closed or stalled mid-payload (truncated frame)".to_string(),
+            )
+        } else {
+            WireError::Io(e)
+        }
+    })?;
+    Ok(Some(payload))
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Encode + frame one request.
+pub fn write_request(w: &mut dyn Write, req: &Request) -> Result<()> {
+    write_frame(w, &req.encode())
+}
+
+/// Read + decode one request (`Ok(None)` on clean EOF).
+pub fn read_request(r: &mut dyn Read) -> Result<Option<Request>> {
+    match read_frame(r)? {
+        Some(payload) => Ok(Some(Request::decode(&payload)?)),
+        None => Ok(None),
+    }
+}
+
+/// Encode + frame one response.
+pub fn write_response(w: &mut dyn Write, resp: &Response) -> Result<()> {
+    write_frame(w, &resp.encode())
+}
+
+/// Read + decode one response (`Ok(None)` on clean EOF).
+pub fn read_response(r: &mut dyn Read) -> Result<Option<Response>> {
+    match read_frame(r)? {
+        Some(payload) => Ok(Some(Response::decode(&payload)?)),
+        None => Ok(None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, payload).unwrap();
+        out
+    }
+
+    /// Golden bytes: the full Ping frame, byte for byte. Changing this
+    /// is a wire-format break.
+    #[test]
+    fn golden_ping_frame() {
+        let bytes = frame_bytes(&Request::Ping.encode());
+        assert_eq!(
+            bytes,
+            vec![b'Z', b'N', b'W', b'1', 0x01, 0x00, 0x01, 0x00, 0x00, 0x00, 0x01]
+        );
+    }
+
+    /// Golden bytes: an Estimate request payload with known fields.
+    #[test]
+    fn golden_estimate_payload() {
+        let req = Request::Estimate {
+            kind: EstimatorKind::Mimps,
+            k: 2,
+            l: 3,
+            query: vec![1.0, -2.0],
+        };
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x03,                                           // tag
+            0x03,                                           // kind = Mimps
+            0x02, 0, 0, 0, 0, 0, 0, 0,                      // k = 2
+            0x03, 0, 0, 0, 0, 0, 0, 0,                      // l = 3
+            0x02, 0, 0, 0,                                  // query len = 2
+            0x00, 0x00, 0x80, 0x3f,                         // 1.0f32
+            0x00, 0x00, 0x00, 0xc0,                         // -2.0f32
+        ];
+        assert_eq!(req.encode(), want);
+        assert_eq!(Request::decode(&want).unwrap(), req);
+    }
+
+    /// Golden bytes: a Hits response payload with one query, two hits.
+    #[test]
+    fn golden_hits_payload() {
+        let resp = Response::Hits(vec![vec![
+            Hit { idx: 7, score: 0.5 },
+            Hit { idx: 1, score: -1.5 },
+        ]]);
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x04,                                           // tag
+            0x01, 0, 0, 0,                                  // 1 query
+            0x02, 0, 0, 0,                                  // 2 hits
+            0x07, 0, 0, 0, 0, 0, 0, 0,                      // idx 7
+            0x00, 0x00, 0x00, 0x3f,                         // 0.5f32
+            0x01, 0, 0, 0, 0, 0, 0, 0,                      // idx 1
+            0x00, 0x00, 0xc0, 0xbf,                         // -1.5f32
+        ];
+        assert_eq!(resp.encode(), want);
+        assert_eq!(Response::decode(&want).unwrap(), resp);
+    }
+
+    #[test]
+    fn golden_error_payload() {
+        let resp = Response::Error {
+            code: ErrorCode::DimMismatch,
+            message: "bad".to_string(),
+        };
+        let want: Vec<u8> = vec![0x0a, 0x03, 0x00, 0x03, 0, 0, 0, b'b', b'a', b'd'];
+        assert_eq!(resp.encode(), want);
+        assert_eq!(Response::decode(&want).unwrap(), resp);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Manifest,
+            Request::Estimate {
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+                query: vec![0.25, 1e30, -0.0],
+            },
+            Request::EstimateBatch {
+                kind: EstimatorKind::Fmbe,
+                k: 10,
+                l: 20,
+                queries: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            },
+            Request::TopK {
+                k: 5,
+                queries: vec![vec![0.5; 7]; 3],
+            },
+            Request::ExpSumChain {
+                acc: 123.456,
+                query: vec![-1.0, 2.5],
+            },
+            Request::ExpSumChainBatch {
+                acc_in: vec![1.0, 2.0],
+                queries: vec![vec![0.0; 4]; 2],
+            },
+            Request::ScoreIds {
+                ids: vec![0, 9, u64::from(u32::MAX)],
+                query: vec![1.5; 3],
+            },
+            Request::PrepareAdd {
+                token: 42,
+                dim: 2,
+                rows: vec![1.0, 2.0, 3.0, 4.0],
+            },
+            Request::PrepareRemove {
+                token: 7,
+                ids: vec![],
+            },
+            Request::Commit { token: 9 },
+            Request::Abort { token: 11 },
+        ];
+        for req in reqs {
+            let got = Request::decode(&req.encode()).unwrap();
+            assert_eq!(got, req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resps = vec![
+            Response::Pong,
+            Response::Manifest {
+                len: 1_000_000,
+                dim: 300,
+                epoch: 17,
+            },
+            Response::Estimates(vec![Estimate {
+                z: 1234.5,
+                kind: EstimatorKind::Mimps,
+                epoch: 3,
+                scorings: 200,
+                queue_wait_ns: 5_000,
+                exec_ns: 77_000,
+            }]),
+            Response::Hits(vec![vec![], vec![Hit { idx: 0, score: 1.0 }]]),
+            Response::ExpSums(vec![1.0, f64::MAX, 1e-300]),
+            Response::Scores(vec![-1.0, 0.0, 3.5]),
+            Response::Prepared { epoch: 2 },
+            Response::Committed { epoch: 2 },
+            Response::Aborted,
+            Response::Error {
+                code: ErrorCode::Unknown(999),
+                message: "later version says hi".to_string(),
+            },
+        ];
+        for resp in resps {
+            let got = Response::decode(&resp.encode()).unwrap();
+            assert_eq!(got, resp);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_through_a_byte_stream() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::Commit { token: 5 }).unwrap();
+        write_request(&mut buf, &Request::Ping).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_request(&mut r).unwrap(),
+            Some(Request::Commit { token: 5 })
+        );
+        assert_eq!(read_request(&mut r).unwrap(), Some(Request::Ping));
+        assert_eq!(read_request(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = frame_bytes(&Request::Ping.encode());
+        bytes[0] = b'X';
+        let mut r = &bytes[..];
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut bytes = frame_bytes(&Request::Ping.encode());
+        bytes[4] = 9;
+        let mut r = &bytes[..];
+        assert!(matches!(read_frame(&mut r), Err(WireError::BadVersion(9))));
+    }
+
+    #[test]
+    fn truncated_frame_rejected_not_eof() {
+        let bytes = frame_bytes(&Request::Manifest.encode());
+        // Cut mid-header and mid-payload: both are malformed, not EOF.
+        for cut in [3usize, bytes.len() - 1] {
+            let mut r = &bytes[..cut];
+            assert!(
+                matches!(read_frame(&mut r), Err(WireError::Malformed(_))),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocating() {
+        let mut bytes = frame_bytes(&Request::Ping.encode());
+        // Claim a payload just past the cap.
+        let bad = (MAX_FRAME_LEN as u32) + 1;
+        bytes[6..10].copy_from_slice(&bad.to_le_bytes());
+        let mut r = &bytes[..];
+        assert!(matches!(
+            read_frame(&mut r),
+            Err(WireError::FrameTooLarge(_))
+        ));
+    }
+
+    #[test]
+    fn inner_length_bomb_rejected() {
+        // A ScoreIds whose id count claims more elements than the body
+        // holds must fail before allocating.
+        let mut payload = vec![8u8]; // REQ_SCORE_IDS
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            Request::decode(&payload),
+            Err(WireError::Malformed(_))
+        ));
+        // A query block claiming 4G zero-dimensional queries (d = 0
+        // zeroes the byte-cost bound) must also fail before allocating.
+        let mut payload = vec![5u8]; // REQ_TOP_K
+        payload.extend_from_slice(&7u64.to_le_bytes()); // k
+        payload.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+        payload.extend_from_slice(&0u32.to_le_bytes()); // dim = 0
+        assert!(matches!(
+            Request::decode(&payload),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut payload = Request::Ping.encode();
+        payload.push(0);
+        assert!(matches!(
+            Request::decode(&payload),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_tags_rejected() {
+        assert!(matches!(
+            Request::decode(&[200]),
+            Err(WireError::Malformed(_))
+        ));
+        assert!(matches!(
+            Response::decode(&[200]),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::Overloaded,
+            ErrorCode::Closed,
+            ErrorCode::DimMismatch,
+            ErrorCode::Unsupported,
+            ErrorCode::BadRequest,
+            ErrorCode::Internal,
+            ErrorCode::StalePrepare,
+            ErrorCode::Busy,
+            ErrorCode::ConnLimit,
+            ErrorCode::Unknown(4242),
+        ] {
+            assert_eq!(ErrorCode::from_u16(code.as_u16()), code);
+        }
+    }
+}

@@ -29,7 +29,7 @@ pub mod sharded;
 pub mod snapshot;
 
 pub use sharded::{Shard, ShardedStore};
-pub use snapshot::{ShardIndexBuilder, Snapshot, SnapshotHandle};
+pub use snapshot::{PendingEpoch, ShardIndexBuilder, Snapshot, SnapshotHandle};
 
 use crate::data::embeddings::EmbeddingStore;
 use crate::linalg;
@@ -135,12 +135,24 @@ fn gather_rows<'a>(
 /// `linalg::exp_sum_gemv` on a contiguous matrix — bit-identical for any
 /// shard layout (see module docs).
 pub fn exp_sum_view(view: &dyn StoreView, q: &[f32]) -> f64 {
+    exp_sum_view_chain(view, q, 0.0)
+}
+
+/// [`exp_sum_view`] continued from an initial accumulator: returns
+/// `acc0 + Σ exp(row · q)` with the accumulation order picking up exactly
+/// where a previous segment of a larger row range left off. This is the
+/// cross-process seam for distributed `Exact`: each shard worker extends
+/// the running f64 sum over its own rows in strict global row order, so a
+/// chain of workers reproduces the single-process sequential accumulation
+/// (see `net::remote` for the row-alignment contract that makes the
+/// per-row score bits match too).
+pub fn exp_sum_view_chain(view: &dyn StoreView, q: &[f32], acc0: f64) -> f64 {
     let n = view.len();
     let d = view.dim();
     assert_eq!(q.len(), d, "query dimensionality mismatch");
     let mut stage: Vec<f32> = Vec::new();
     let mut tile = [0f32; EXP_SUM_TILE];
-    let mut acc = 0f64;
+    let mut acc = acc0;
     let mut lo = 0usize;
     while lo < n {
         let hi = (lo + EXP_SUM_TILE).min(n);
@@ -158,6 +170,10 @@ pub fn exp_sum_view(view: &dyn StoreView, q: &[f32]) -> f64 {
 /// Batched streaming exp-sum: `zs[j] += Σ_rows exp(row · q_j)` with the
 /// same [`EXP_SUM_BATCH_TILE`]-row tiling and per-tile accumulation
 /// order as `linalg::exp_sum_gemm` — bit-identical for any shard layout.
+/// Because it accumulates **into** `zs`, it doubles as the batched chain
+/// kernel (cf. [`exp_sum_view_chain`]): seed `zs` with the partial sums
+/// of the preceding global rows and the per-query accumulation continues
+/// in strict row order.
 pub fn exp_sum_view_batch(view: &dyn StoreView, qs_flat: &[f32], nq: usize, zs: &mut [f64]) {
     let n = view.len();
     let d = view.dim();
@@ -224,6 +240,45 @@ mod tests {
     fn exp_sum_view_empty_store_is_zero() {
         let s = EmbeddingStore::from_data(0, 4, vec![]).unwrap();
         assert_eq!(exp_sum_view(&s, &[0.0; 4]), 0.0);
+    }
+
+    /// Chaining per-segment sums in global row order reproduces the
+    /// one-shot accumulation bit for bit when every segment boundary is
+    /// 4-row aligned (the quad-alignment contract `net::remote` relies
+    /// on: each gemv call then scores every row through the same blocked
+    /// quad path as the global tiling).
+    #[test]
+    fn exp_sum_view_chain_matches_one_shot_on_aligned_segments() {
+        let s = store(600, 12);
+        let q: Vec<f32> = (0..12).map(|j| (j as f32 * 0.21).cos()).collect();
+        let want = exp_sum_view(&s, &q);
+        for cut in [4usize, 256, 320, 400] {
+            let head = EmbeddingStore::from_data(cut, 12, s.rows(0, cut).to_vec()).unwrap();
+            let tail =
+                EmbeddingStore::from_data(600 - cut, 12, s.rows(cut, 600).to_vec()).unwrap();
+            let acc = exp_sum_view_chain(&head, &q, 0.0);
+            let got = exp_sum_view_chain(&tail, &q, acc);
+            assert_eq!(got.to_bits(), want.to_bits(), "cut={cut}: {got} vs {want}");
+        }
+    }
+
+    /// The batched kernel accumulates into `zs`, so seeding it with the
+    /// previous segment's partial sums chains the same way.
+    #[test]
+    fn exp_sum_view_batch_chains_on_aligned_segments() {
+        let s = store(512, 16);
+        let qs: Vec<Vec<f32>> = (0..3).map(|i| s.row(i * 100 + 1).to_vec()).collect();
+        let qs_flat = linalg::flatten_queries(&qs, 16);
+        let mut want = vec![0f64; qs.len()];
+        exp_sum_view_batch(&s, &qs_flat, qs.len(), &mut want);
+        let head = EmbeddingStore::from_data(256, 16, s.rows(0, 256).to_vec()).unwrap();
+        let tail = EmbeddingStore::from_data(256, 16, s.rows(256, 512).to_vec()).unwrap();
+        let mut got = vec![0f64; qs.len()];
+        exp_sum_view_batch(&head, &qs_flat, qs.len(), &mut got);
+        exp_sum_view_batch(&tail, &qs_flat, qs.len(), &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{g} vs {w}");
+        }
     }
 
     #[test]

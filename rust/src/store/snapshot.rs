@@ -14,6 +14,14 @@
 //! sub-index); `remove_categories` rebuilds exactly the shards that lost
 //! rows.
 //!
+//! Mutations come in two shapes: the one-shot `add_categories` /
+//! `remove_categories` (prepare + commit under the writer lock), and an
+//! explicit two-phase `prepare_*` → [`PendingEpoch`] →
+//! [`SnapshotHandle::commit`] split for coordinated cross-process swaps
+//! (`net::remote` prepares on every shard worker, then commits
+//! everywhere; a preparation invalidated by a concurrent commit fails
+//! with a stale-epoch error instead of publishing over it).
+//!
 //! Id semantics: global ids are positional **within a snapshot**.
 //! `add_categories` extends the id range (existing ids are unchanged);
 //! `remove_categories` compacts ids, shifting rows after a removed
@@ -23,7 +31,7 @@
 use super::sharded::ShardedStore;
 use super::StoreView;
 use crate::data::embeddings::EmbeddingStore;
-use crate::mips::sharded::{per_shard_threads, ShardedIndex};
+use crate::mips::sharded::{proportional_threads, ShardedIndex};
 use crate::mips::MipsIndex;
 use anyhow::{bail, Result};
 use std::sync::{Arc, Mutex, RwLock};
@@ -37,11 +45,46 @@ pub struct Snapshot {
 }
 
 /// How to index one (new or rebuilt) shard. The `usize` is the
-/// suggested scoring-thread budget for that shard
-/// ([`per_shard_threads`] of the shard count of the snapshot being
-/// built), so per-shard indexes stay fair as epochs add or drop shards.
+/// suggested scoring-thread budget for that shard — its
+/// size-proportional share ([`proportional_threads`]) of the snapshot
+/// being built — so per-shard indexes stay fair as epochs add, drop or
+/// shrink shards.
 pub type ShardIndexBuilder =
     Arc<dyn Fn(&Arc<EmbeddingStore>, usize) -> Arc<dyn MipsIndex> + Send + Sync>;
+
+/// A fully built but **unpublished** next epoch: the output of the
+/// `prepare_*` half of a two-phase publish. Holds the next epoch's store
+/// and index (untouched shards reused by `Arc`); [`SnapshotHandle::commit`]
+/// swaps it in iff the handle is still at the epoch the preparation was
+/// based on. Used by cross-process epoch swaps (`net::remote`): the
+/// coordinator prepares on every shard worker, and only when all of them
+/// staged successfully does it commit everywhere.
+pub struct PendingEpoch {
+    base_epoch: u64,
+    store: ShardedStore,
+    index: ShardedIndex,
+}
+
+impl PendingEpoch {
+    /// The published epoch this preparation was built from.
+    pub fn base_epoch(&self) -> u64 {
+        self.base_epoch
+    }
+
+    /// The epoch this preparation will publish as.
+    pub fn epoch(&self) -> u64 {
+        self.base_epoch + 1
+    }
+
+    /// Rows the prepared snapshot will serve.
+    pub fn len(&self) -> usize {
+        StoreView::len(&self.store)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Publisher of epoch snapshots.
 pub struct SnapshotHandle {
@@ -52,10 +95,14 @@ pub struct SnapshotHandle {
 }
 
 impl SnapshotHandle {
-    /// Publish epoch 0 of `store`, indexing every shard with `builder`.
+    /// Publish epoch 0 of `store`, indexing every shard with `builder`
+    /// at its size-proportional thread share.
     pub fn new(store: ShardedStore, builder: ShardIndexBuilder) -> SnapshotHandle {
-        let threads = per_shard_threads(store.num_shards());
-        let index = ShardedIndex::build(&store, |s| builder(s, threads));
+        let index = ShardedIndex::build(
+            &store,
+            crate::util::threadpool::default_threads(),
+            builder.as_ref(),
+        );
         SnapshotHandle {
             current: RwLock::new(Arc::new(Snapshot {
                 epoch: 0,
@@ -68,9 +115,10 @@ impl SnapshotHandle {
     }
 
     /// Convenience: exact (brute-force) per-shard indexes, each built
-    /// with the fair thread budget the handle passes for the snapshot
-    /// being published ([`per_shard_threads`]), so the cross-shard
-    /// scatter does not oversubscribe the machine as epochs add shards.
+    /// with the size-proportional thread budget the handle passes for
+    /// the snapshot being published ([`proportional_threads`]), so the
+    /// cross-shard scatter does not oversubscribe the machine as epochs
+    /// add, drop or shrink shards.
     pub fn brute(store: ShardedStore) -> SnapshotHandle {
         Self::new(
             store,
@@ -99,10 +147,33 @@ impl SnapshotHandle {
     /// `[old_len, old_len + rows.len())`. Every existing shard's store
     /// and index are reused by reference. Returns the new epoch.
     pub fn add_categories(&self, rows: EmbeddingStore) -> Result<u64> {
+        let _w = self.writer.lock().unwrap();
+        let pending = self.prepare_add(rows)?;
+        self.commit_locked(pending)
+    }
+
+    /// Remove the categories at the given global ids (of the **current**
+    /// snapshot) and publish the next epoch. Only shards that lost rows
+    /// are rebuilt (store + index); untouched shards are reused by
+    /// reference at their shifted offsets. Remaining ids compact
+    /// downward. Returns the new epoch.
+    pub fn remove_categories(&self, ids: &[usize]) -> Result<u64> {
+        if ids.is_empty() {
+            bail!("remove_categories: empty id set");
+        }
+        let _w = self.writer.lock().unwrap();
+        let pending = self.prepare_remove(ids)?;
+        self.commit_locked(pending)
+    }
+
+    /// First half of a two-phase append: build (but do not publish) the
+    /// snapshot that adds `rows` as one new shard. Does **not** take the
+    /// writer lock — a concurrent mutation invalidates the preparation,
+    /// which [`SnapshotHandle::commit`] detects by epoch.
+    pub fn prepare_add(&self, rows: EmbeddingStore) -> Result<PendingEpoch> {
         if rows.is_empty() {
             bail!("add_categories: empty row set");
         }
-        let _w = self.writer.lock().unwrap();
         let cur = self.load();
         if rows.dim() != StoreView::dim(cur.store.as_ref()) {
             bail!(
@@ -120,30 +191,36 @@ impl SnapshotHandle {
             .collect();
         stores.push(new_shard.clone());
         let store = ShardedStore::from_stores(stores)?;
-        // Reuse every existing sub-index; build one for the new shard.
+        // Reuse every existing sub-index; build one for the new shard at
+        // its size-proportional thread share of the new layout.
         let mut parts: Vec<(usize, Arc<dyn MipsIndex>)> = (0..cur.index.num_shards())
             .map(|s| (cur.index.shard_offset(s), cur.index.shard_index(s).clone()))
             .collect();
-        let threads = per_shard_threads(cur.store.num_shards() + 1);
+        let lens: Vec<usize> = store.shards().iter().map(|sh| sh.len()).collect();
+        let budgets = proportional_threads(&lens, crate::util::threadpool::default_threads());
         parts.push((
             StoreView::len(cur.store.as_ref()),
-            (self.builder)(&new_shard, threads),
+            (self.builder)(&new_shard, *budgets.last().expect("non-empty layout")),
         ));
         let index = ShardedIndex::from_parts(parts);
-        Ok(self.publish(&cur, store, index))
+        Ok(PendingEpoch {
+            base_epoch: cur.epoch,
+            store,
+            index,
+        })
     }
 
-    /// Remove the categories at the given global ids (of the **current**
-    /// snapshot) and publish the next epoch. Only shards that lost rows
-    /// are rebuilt (store + index); untouched shards are reused by
-    /// reference at their shifted offsets. Remaining ids compact
-    /// downward. Returns the new epoch.
-    pub fn remove_categories(&self, ids: &[usize]) -> Result<u64> {
-        if ids.is_empty() {
-            bail!("remove_categories: empty id set");
-        }
-        let _w = self.writer.lock().unwrap();
+    /// First half of a two-phase removal: build (but do not publish) the
+    /// snapshot that drops the given global ids. An **empty** id set is
+    /// a pure epoch bump ("touch"): every shard's store and index are
+    /// reused by reference — that is how workers without local changes
+    /// participate in a cluster-wide two-phase publish and keep their
+    /// epoch in lockstep.
+    pub fn prepare_remove(&self, ids: &[usize]) -> Result<PendingEpoch> {
         let cur = self.load();
+        if ids.is_empty() {
+            return Ok(self.prepare_touch_from(&cur));
+        }
         let n = StoreView::len(cur.store.as_ref());
         let mut sorted: Vec<usize> = ids.to_vec();
         sorted.sort_unstable();
@@ -154,17 +231,13 @@ impl SnapshotHandle {
             }
         }
         let d = StoreView::dim(cur.store.as_ref());
-        // Conservative budget: assume the current shard count (removal
-        // can only shrink it, so rebuilt shards never oversubscribe).
-        let threads = per_shard_threads(cur.store.num_shards());
-        let mut stores: Vec<Arc<EmbeddingStore>> = Vec::new();
-        let mut parts: Vec<(usize, Arc<dyn MipsIndex>)> = Vec::new();
-        let mut offset = 0usize;
+        // First pass: which local rows each shard loses, and the new
+        // layout's row counts (for the proportional thread budgets).
+        let mut drops_per_shard: Vec<Vec<usize>> = Vec::with_capacity(cur.store.num_shards());
         let mut drop_iter = sorted.iter().peekable();
-        for (s, sh) in cur.store.shards().iter().enumerate() {
+        for sh in cur.store.shards() {
             let lo = sh.offset();
             let hi = lo + sh.len();
-            // Global ids to drop inside this shard, as local rows.
             let mut local_drops: Vec<usize> = Vec::new();
             while let Some(&&g) = drop_iter.peek() {
                 if g >= hi {
@@ -173,11 +246,30 @@ impl SnapshotHandle {
                 local_drops.push(g - lo);
                 drop_iter.next();
             }
+            drops_per_shard.push(local_drops);
+        }
+        let new_lens: Vec<usize> = cur
+            .store
+            .shards()
+            .iter()
+            .zip(&drops_per_shard)
+            .map(|(sh, drops)| sh.len() - drops.len())
+            .filter(|&keep| keep > 0)
+            .collect();
+        let budgets = proportional_threads(&new_lens, crate::util::threadpool::default_threads());
+        // Second pass: rebuild exactly the shards that lost rows.
+        let mut stores: Vec<Arc<EmbeddingStore>> = Vec::new();
+        let mut parts: Vec<(usize, Arc<dyn MipsIndex>)> = Vec::new();
+        let mut offset = 0usize;
+        let mut kept = 0usize;
+        for (s, sh) in cur.store.shards().iter().enumerate() {
+            let local_drops = &drops_per_shard[s];
             if local_drops.is_empty() {
                 // Untouched: reuse store + index at the shifted offset.
                 stores.push(sh.store().clone());
                 parts.push((offset, cur.index.shard_index(s).clone()));
                 offset += sh.len();
+                kept += 1;
                 continue;
             }
             let keep = sh.len() - local_drops.len();
@@ -194,13 +286,58 @@ impl SnapshotHandle {
                 data.extend_from_slice(sh.store().row(r));
             }
             let rebuilt = Arc::new(EmbeddingStore::from_data(keep, d, data)?);
-            parts.push((offset, (self.builder)(&rebuilt, threads)));
+            parts.push((offset, (self.builder)(&rebuilt, budgets[kept])));
             stores.push(rebuilt);
             offset += keep;
+            kept += 1;
         }
         let store = ShardedStore::from_stores(stores)?;
         let index = ShardedIndex::from_parts(parts);
-        Ok(self.publish(&cur, store, index))
+        Ok(PendingEpoch {
+            base_epoch: cur.epoch,
+            store,
+            index,
+        })
+    }
+
+    /// Prepare a pure epoch bump: the next epoch serves the same shard
+    /// set, every store and index reused by `Arc`.
+    pub fn prepare_touch(&self) -> PendingEpoch {
+        let cur = self.load();
+        self.prepare_touch_from(&cur)
+    }
+
+    fn prepare_touch_from(&self, cur: &Snapshot) -> PendingEpoch {
+        let store = cur.store.as_ref().clone();
+        let parts: Vec<(usize, Arc<dyn MipsIndex>)> = (0..cur.index.num_shards())
+            .map(|s| (cur.index.shard_offset(s), cur.index.shard_index(s).clone()))
+            .collect();
+        PendingEpoch {
+            base_epoch: cur.epoch,
+            store,
+            index: ShardedIndex::from_parts(parts),
+        }
+    }
+
+    /// Second half of a two-phase publish: atomically swap `pending` in.
+    /// Fails — leaving the published snapshot untouched — when another
+    /// mutation committed since the preparation was built (the epoch
+    /// moved past `pending.base_epoch()`).
+    pub fn commit(&self, pending: PendingEpoch) -> Result<u64> {
+        let _w = self.writer.lock().unwrap();
+        self.commit_locked(pending)
+    }
+
+    fn commit_locked(&self, pending: PendingEpoch) -> Result<u64> {
+        let cur = self.load();
+        if cur.epoch != pending.base_epoch {
+            bail!(
+                "stale prepare: built from epoch {}, but epoch {} is published",
+                pending.base_epoch,
+                cur.epoch
+            );
+        }
+        Ok(self.publish(&cur, pending.store, pending.index))
     }
 
     /// Swap in the next epoch (write lock held only for the swap).
@@ -333,6 +470,56 @@ mod tests {
         let all: Vec<usize> = (0..10).collect();
         assert!(h.remove_categories(&all).is_err(), "cannot empty the store");
         assert_eq!(h.epoch(), 0, "failed mutations must not advance the epoch");
+    }
+
+    #[test]
+    fn two_phase_prepare_then_commit_publishes() {
+        let (h, _) = handle(40, 2);
+        let pending = h.prepare_add(extra_rows(8, 6, 5)).unwrap();
+        assert_eq!(pending.base_epoch(), 0);
+        assert_eq!(pending.epoch(), 1);
+        assert_eq!(pending.len(), 46);
+        // Nothing published until commit.
+        assert_eq!(h.epoch(), 0);
+        assert_eq!(h.commit(pending).unwrap(), 1);
+        assert_eq!(StoreView::len(h.load().store.as_ref()), 46);
+    }
+
+    #[test]
+    fn stale_prepare_is_rejected_at_commit() {
+        let (h, _) = handle(40, 2);
+        let pending = h.prepare_add(extra_rows(8, 6, 5)).unwrap();
+        // A concurrent mutation lands first.
+        h.add_categories(extra_rows(8, 3, 6)).unwrap();
+        let err = h.commit(pending).unwrap_err();
+        assert!(err.to_string().contains("stale prepare"), "{err}");
+        // The interleaved epoch survives untouched.
+        assert_eq!(h.epoch(), 1);
+        assert_eq!(StoreView::len(h.load().store.as_ref()), 43);
+    }
+
+    #[test]
+    fn prepare_touch_bumps_epoch_reusing_every_shard() {
+        let (h, _) = handle(30, 3);
+        let before = h.load();
+        let pending = h.prepare_touch();
+        assert_eq!(h.commit(pending).unwrap(), 1);
+        let after = h.load();
+        assert_eq!(StoreView::len(after.store.as_ref()), 30);
+        for s in 0..3 {
+            assert!(
+                Arc::ptr_eq(before.store.shard(s).store(), after.store.shard(s).store()),
+                "touch must reuse shard {s} store"
+            );
+            assert!(
+                Arc::ptr_eq(before.index.shard_index(s), after.index.shard_index(s)),
+                "touch must reuse shard {s} index"
+            );
+        }
+        // prepare_remove(&[]) is the same touch (cluster lockstep path).
+        let pending = h.prepare_remove(&[]).unwrap();
+        assert_eq!(pending.len(), 30);
+        assert_eq!(h.commit(pending).unwrap(), 2);
     }
 
     #[test]

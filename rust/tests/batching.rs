@@ -41,11 +41,11 @@ fn estimate_batch_matches_single_for_every_kind() {
         let singles: Vec<f64> = {
             let mut rng = Rng::seeded(123);
             qs.iter()
-                .map(|q| router.estimate(*kind, k, l, &s, &index, q, &mut rng))
+                .map(|q| router.estimate(*kind, k, l, &s, &index, 0, q, &mut rng))
                 .collect()
         };
         let mut rng = Rng::seeded(123);
-        let batched = router.estimate_batch(*kind, k, l, &s, &index, &qs, &mut rng);
+        let batched = router.estimate_batch(*kind, k, l, &s, &index, 0, &qs, &mut rng);
         assert_eq!(batched.len(), qs.len(), "{kind}");
         for (qi, (a, b)) in singles.iter().zip(&batched).enumerate() {
             assert!(
@@ -66,9 +66,9 @@ fn batched_sampling_consumes_rng_in_submission_order() {
     let router = Router::new(FmbeConfig::default());
     let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(600 + i * 20).to_vec()).collect();
     let mut rng = Rng::seeded(9);
-    let a = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, &qs, &mut rng);
+    let a = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, 0, &qs, &mut rng);
     let mut rng = Rng::seeded(9);
-    let b = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, &qs, &mut rng);
+    let b = router.estimate_batch(EstimatorKind::Mimps, 30, 30, &s, &index, 0, &qs, &mut rng);
     assert_eq!(a, b, "batched estimation is deterministic given the seed");
 }
 

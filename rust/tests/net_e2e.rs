@@ -1,0 +1,615 @@
+//! End-to-end suite for the network serving layer:
+//!
+//! * **Acceptance**: `Exact` served through `RemoteShardIndex` /
+//!   `RemoteCluster` over UDS is **bit-identical** to the in-process
+//!   `ShardedStore` answer for S ∈ {1, 2, 4} (4-aligned worker splits —
+//!   see `net::remote` module docs for the alignment contract).
+//! * **Acceptance**: a malformed / truncated frame closes the
+//!   connection with an error response; the server keeps serving.
+//! * `PartitionClient` ↔ `ServiceHandler` mirrors the in-process
+//!   service (same answers, typed error mapping, net metrics).
+//! * Two-phase epoch publish across workers: all-or-nothing prepare,
+//!   lockstep commit, and correct answers after add/remove.
+//! * The real `zest-server` + `zest-shard-worker` binaries over UDS.
+#![cfg(unix)]
+
+use std::io::Write as _;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use zest::coordinator::{PartitionService, Request, Router, ServiceConfig, ServiceMetrics};
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+use zest::estimators::{exact::Exact, mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
+use zest::mips::brute::BruteIndex;
+use zest::net::client::{ClientConfig, ClientError, PartitionClient};
+use zest::net::remote::{aligned_split, ClusterHandler, RemoteCluster};
+use zest::net::server::{Server, ServerConfig, ServiceHandler};
+use zest::net::shard::ShardWorker;
+use zest::net::{wire, Addr};
+use zest::store::{exp_sum_view, ShardedStore, SnapshotHandle, StoreView};
+use zest::util::rng::Rng;
+
+static SOCKET_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn sock_addr(tag: &str) -> Addr {
+    let seq = SOCKET_SEQ.fetch_add(1, Ordering::SeqCst);
+    Addr::Unix(std::env::temp_dir().join(format!(
+        "zest-e2e-{}-{tag}-{seq}.sock",
+        std::process::id()
+    )))
+}
+
+fn store(n: usize, d: usize) -> EmbeddingStore {
+    generate(&SynthConfig {
+        n,
+        d,
+        ..SynthConfig::tiny()
+    })
+}
+
+/// Start one in-process shard-worker server per 4-aligned block.
+fn spawn_workers(s: &EmbeddingStore, count: usize, tag: &str) -> (Vec<Server>, Vec<Addr>) {
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for (i, block) in aligned_split(s, count).into_iter().enumerate() {
+        let addr = sock_addr(&format!("{tag}{i}"));
+        let server = Server::serve(
+            &addr,
+            Arc::new(ShardWorker::new(block)),
+            ServerConfig::default(),
+            Arc::new(ServiceMetrics::new()),
+        )
+        .unwrap();
+        addrs.push(server.local_addr().clone());
+        servers.push(server);
+    }
+    (servers, addrs)
+}
+
+/// ACCEPTANCE: remote `Exact` is bit-identical to the in-process
+/// sharded answer for S ∈ {1, 2, 4}, single-query (gemv chain) and
+/// batched (gemm chain).
+#[test]
+fn remote_exact_bit_identical_over_uds() {
+    let s = store(600, 16);
+    let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(i * 140 + 3).to_vec()).collect();
+    for count in [1usize, 2, 4] {
+        let (servers, addrs) = spawn_workers(&s, count, "exact");
+        let cluster = RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap();
+        assert_eq!(cluster.len(), 600);
+        assert_eq!(cluster.dim(), 16);
+        assert_eq!(cluster.num_shards(), count);
+
+        // Single-query chain vs the in-process sharded streaming kernel.
+        let sharded = ShardedStore::split(&s, count);
+        for q in &qs {
+            let want = exp_sum_view(&sharded, q);
+            let got = cluster.exp_sum(q).unwrap();
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "S={count}: remote {got} vs in-process {want}"
+            );
+        }
+
+        // Batched chain vs the in-process batched Exact estimator.
+        let mono = BruteIndex::new(&s);
+        let want: Vec<f64> = {
+            let mut rng = Rng::seeded(0);
+            let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+            Exact.estimate_batch(&mut ctx, &qs)
+        };
+        let got = cluster.exp_sum_batch(&qs).unwrap();
+        for (qi, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "S={count} q{qi}: {g} vs {w}");
+        }
+
+        // Release pooled connections before joining the servers.
+        drop(cluster);
+        for server in servers {
+            server.shutdown();
+        }
+    }
+}
+
+/// ACCEPTANCE: garbage and truncated frames get an error response and a
+/// closed connection — and the server keeps serving afterwards.
+#[test]
+fn malformed_frames_close_with_error_not_panic() {
+    let s = store(40, 8);
+    let addr = sock_addr("malformed");
+    let metrics = Arc::new(ServiceMetrics::new());
+    let server = Server::serve(
+        &addr,
+        Arc::new(ShardWorker::new(s)),
+        ServerConfig::default(),
+        metrics.clone(),
+    )
+    .unwrap();
+    let Addr::Unix(path) = server.local_addr().clone() else {
+        panic!("expected a unix addr")
+    };
+
+    // Garbage bytes: the server answers BadRequest and closes.
+    {
+        let mut conn = UnixStream::connect(&path).unwrap();
+        conn.write_all(b"GARBAGEGARBAGEGARBAGE").unwrap();
+        conn.flush().unwrap();
+        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        assert!(
+            matches!(
+                resp,
+                wire::Response::Error {
+                    code: wire::ErrorCode::BadRequest,
+                    ..
+                }
+            ),
+            "{resp:?}"
+        );
+        assert_eq!(
+            wire::read_response(&mut conn).unwrap(),
+            None,
+            "connection must be closed after a malformed frame"
+        );
+    }
+
+    // Truncated frame: a valid header whose payload never arrives.
+    {
+        let mut conn = UnixStream::connect(&path).unwrap();
+        let mut header = Vec::new();
+        header.extend_from_slice(&wire::MAGIC);
+        header.extend_from_slice(&wire::VERSION.to_le_bytes());
+        header.extend_from_slice(&100u32.to_le_bytes());
+        header.extend_from_slice(&[1, 2, 3]); // 3 of the promised 100 bytes
+        conn.write_all(&header).unwrap();
+        conn.shutdown(std::net::Shutdown::Write).unwrap();
+        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        assert!(
+            matches!(
+                resp,
+                wire::Response::Error {
+                    code: wire::ErrorCode::BadRequest,
+                    ..
+                }
+            ),
+            "{resp:?}"
+        );
+    }
+
+    // The server survived both: a fresh connection still answers.
+    {
+        let mut conn = UnixStream::connect(&path).unwrap();
+        wire::write_request(&mut conn, &wire::Request::Manifest).unwrap();
+        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        assert_eq!(
+            resp,
+            wire::Response::Manifest {
+                len: 40,
+                dim: 8,
+                epoch: 0
+            }
+        );
+    }
+    assert!(metrics.snapshot().net.wire_errors >= 2);
+    server.shutdown();
+}
+
+/// `PartitionClient` against a `ServiceHandler` front-end: same answers
+/// as in-process submission, typed error mapping, shared net metrics.
+#[test]
+fn client_mirrors_in_process_service_over_uds() {
+    let s = store(500, 16);
+    let handle = Arc::new(SnapshotHandle::brute(ShardedStore::split(&s, 2)));
+    let svc = Arc::new(PartitionService::start_sharded(
+        handle,
+        Router::new(Default::default()),
+        ServiceConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        None,
+    ));
+    let addr = sock_addr("svc");
+    let server = Server::serve(
+        &addr,
+        Arc::new(ServiceHandler::new(svc.clone())),
+        ServerConfig::default(),
+        svc.metrics_handle(),
+    )
+    .unwrap();
+    let client = PartitionClient::connect(server.local_addr().clone(), ClientConfig::default())
+        .unwrap();
+
+    assert_eq!(client.manifest().unwrap(), (500, 16, 0));
+
+    // Exact answers are deterministic → remote equals in-process bit
+    // for bit (both are a batch-of-one through the same service).
+    let q = s.row(123).to_vec();
+    let local = svc
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap();
+    let remote = client
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap();
+    assert_eq!(remote.z.to_bits(), local.z.to_bits());
+    assert_eq!(remote.kind, EstimatorKind::Exact);
+    assert_eq!(remote.epoch, 0);
+    assert_eq!(remote.scorings, 500);
+
+    // Batched mirror.
+    let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 90 + 1).to_vec()).collect();
+    let batch = client
+        .estimate_batch(EstimatorKind::Mimps, 50, 50, qs.clone())
+        .unwrap();
+    assert_eq!(batch.len(), 5);
+    for r in &batch {
+        assert!(r.z.is_finite() && r.z > 0.0);
+        assert_eq!(r.scorings, 100);
+    }
+
+    // Submit-time validation arrives as a typed remote error.
+    let err = client
+        .estimate(Request {
+            query: vec![0.0; 3],
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap_err();
+    match err {
+        ClientError::Remote { code, message } => {
+            assert_eq!(code, wire::ErrorCode::DimMismatch);
+            assert!(message.contains("dimensionality"), "{message}");
+        }
+        other => panic!("want Remote(DimMismatch), got {other}"),
+    }
+
+    // Net counters land in the service's own metrics sink.
+    let m = svc.metrics();
+    assert!(m.net.accepted >= 1, "{m}");
+    assert!(m.net.frames_in >= 4, "{m}");
+    assert!(m.net.frames_out >= 4, "{m}");
+    drop(client); // release pooled connections before joining
+    server.shutdown();
+}
+
+/// A partition server over remote shard workers (`ClusterHandler`):
+/// the full scatter path — client → server → S workers — matches the
+/// in-process estimators.
+#[test]
+fn cluster_served_estimates_match_in_process() {
+    let s = store(600, 16);
+    let (workers, addrs) = spawn_workers(&s, 2, "cluster");
+    let cluster = Arc::new(RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap());
+    let seed = 11u64;
+    let addr = sock_addr("front");
+    let server = Server::serve(
+        &addr,
+        Arc::new(ClusterHandler::new(cluster, seed)),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let client = PartitionClient::connect(server.local_addr().clone(), ClientConfig::default())
+        .unwrap();
+    assert_eq!(client.manifest().unwrap(), (600, 16, 0));
+
+    // Exact: bit-identical to the in-process batched kernel.
+    let q = s.row(42).to_vec();
+    let remote = client
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+        })
+        .unwrap();
+    let mono = BruteIndex::new(&s);
+    let want: f64 = {
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+        Exact.estimate_batch(&mut ctx, std::slice::from_ref(&q))[0]
+    };
+    assert_eq!(remote.z.to_bits(), want.to_bits());
+
+    // MIMPS: same global tail draw as in-process (the handler's seeded
+    // RNG), scored remotely — agrees to float tolerance (head scores
+    // come from differently-chunked GEMM passes).
+    let remote_m = client
+        .estimate(Request {
+            query: q.clone(),
+            kind: EstimatorKind::Mimps,
+            k: 60,
+            l: 40,
+        })
+        .unwrap();
+    let want_m: f64 = {
+        // The handler seeds its RNG as seed ^ 0x5EED_0CEA and forks one
+        // child per sampling request; this MIMPS call is the first.
+        let mut parent = Rng::seeded(seed ^ 0x5EED_0CEA);
+        let mut rng = parent.fork();
+        let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+        Mimps::new(60, 40).estimate(&mut ctx, &q)
+    };
+    let rel = ((remote_m.z - want_m) / want_m).abs();
+    assert!(rel < 1e-5, "remote MIMPS {} vs in-process {want_m}", remote_m.z);
+
+    // Unsupported kinds are a typed error, not a wrong answer.
+    let err = client
+        .estimate(Request {
+            query: q,
+            kind: EstimatorKind::Fmbe,
+            k: 0,
+            l: 0,
+        })
+        .unwrap_err();
+    assert!(
+        matches!(
+            err,
+            ClientError::Remote {
+                code: wire::ErrorCode::Unsupported,
+                ..
+            }
+        ),
+        "{err}"
+    );
+
+    drop(client); // release pooled connections before joining
+    server.shutdown(); // dropping the handler releases its worker pools
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// Two-phase epoch publish across workers: lockstep commit on success,
+/// all-or-nothing abort on prepare failure, correct answers throughout.
+#[test]
+fn two_phase_publish_across_workers() {
+    let s = store(400, 8);
+    let (workers, addrs) = spawn_workers(&s, 2, "publish");
+    let cluster = RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap();
+    let q = s.row(9).to_vec();
+
+    // Epoch 1: append rows (they join the last worker; 4-aligned
+    // boundaries are preserved, so Exact stays bit-pinned).
+    let added = generate(&SynthConfig {
+        n: 24,
+        d: 8,
+        seed: 5,
+        ..SynthConfig::tiny()
+    });
+    assert_eq!(cluster.add_categories(&added).unwrap(), 1);
+    assert_eq!(cluster.len(), 424);
+    assert_eq!(cluster.epoch(), 1);
+    let mut combined = s.data().to_vec();
+    combined.extend_from_slice(added.data());
+    let grown = EmbeddingStore::from_data(424, 8, combined).unwrap();
+    let want = exp_sum_view(&grown, &q);
+    let got = cluster.exp_sum(&q).unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+
+    // Epoch 2: remove ids from both workers (ids compact downward;
+    // 4-alignment breaks, so compare to tolerance).
+    assert_eq!(cluster.remove_categories(&[0, 1, 250, 423]).unwrap(), 2);
+    assert_eq!(cluster.len(), 420);
+    let mut kept = Vec::new();
+    for i in 0..424 {
+        if ![0usize, 1, 250, 423].contains(&i) {
+            kept.extend_from_slice(StoreView::row(&grown, i));
+        }
+    }
+    let shrunk = EmbeddingStore::from_data(420, 8, kept).unwrap();
+    let want = exp_sum_view(&shrunk, &q);
+    let got = cluster.exp_sum(&q).unwrap();
+    assert!(
+        (got - want).abs() <= 1e-6 * want,
+        "after remove: {got} vs {want}"
+    );
+
+    // The scatter index tracks the new layout.
+    assert_eq!(cluster.index().len(), 420);
+
+    // A removal that would empty worker 0 outright fails at prepare,
+    // aborts everywhere, and leaves every epoch untouched.
+    let first_len = {
+        // worker 0's current row count = lens[0]
+        cluster.index().shard_offset(1)
+    };
+    let all_of_first: Vec<usize> = (0..first_len).collect();
+    assert!(cluster.remove_categories(&all_of_first).is_err());
+    assert_eq!(cluster.epoch(), 2, "failed publish must not advance");
+    assert_eq!(cluster.len(), 420);
+    cluster.refresh().unwrap();
+    assert_eq!(cluster.epoch(), 2, "workers stayed in lockstep at epoch 2");
+
+    drop(cluster); // release pooled connections before joining
+    for w in workers {
+        w.shutdown();
+    }
+}
+
+/// Connection limit: excess connections are answered `Busy` and closed;
+/// freeing a slot restores service.
+#[test]
+fn connection_limit_sheds_with_busy() {
+    let s = store(20, 8);
+    let addr = sock_addr("limit");
+    let metrics = Arc::new(ServiceMetrics::new());
+    let server = Server::serve(
+        &addr,
+        Arc::new(ShardWorker::new(s)),
+        ServerConfig {
+            max_connections: 1,
+            read_timeout: Some(std::time::Duration::from_secs(5)),
+        },
+        metrics.clone(),
+    )
+    .unwrap();
+    let Addr::Unix(path) = server.local_addr().clone() else {
+        panic!()
+    };
+
+    // Fill the one slot (and prove it serves).
+    let mut held = UnixStream::connect(&path).unwrap();
+    wire::write_request(&mut held, &wire::Request::Ping).unwrap();
+    assert_eq!(
+        wire::read_response(&mut held).unwrap(),
+        Some(wire::Response::Pong)
+    );
+
+    // The next connection is turned away with ConnLimit.
+    let mut second = UnixStream::connect(&path).unwrap();
+    let resp = wire::read_response(&mut second).unwrap().unwrap();
+    assert!(
+        matches!(
+            resp,
+            wire::Response::Error {
+                code: wire::ErrorCode::ConnLimit,
+                ..
+            }
+        ),
+        "{resp:?}"
+    );
+
+    // Free the slot; within a moment a fresh connection serves again.
+    drop(held);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        let mut retry = UnixStream::connect(&path).unwrap();
+        wire::write_request(&mut retry, &wire::Request::Ping).unwrap();
+        match wire::read_response(&mut retry).unwrap() {
+            Some(wire::Response::Pong) => break,
+            _ if std::time::Instant::now() < deadline => {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            other => panic!("slot never freed: {other:?}"),
+        }
+    }
+    assert!(metrics.snapshot().net.rejected >= 1);
+    server.shutdown();
+}
+
+/// The real binaries: two `zest-shard-worker` processes + one
+/// `zest-server --workers` over UDS, driven by `PartitionClient`, with
+/// the remote `Exact` answer bit-identical to in-process.
+#[test]
+fn spawned_binaries_serve_exact_bit_identical() {
+    struct ChildGuard(std::process::Child);
+    impl Drop for ChildGuard {
+        fn drop(&mut self) {
+            let _ = self.0.kill();
+            let _ = self.0.wait();
+        }
+    }
+
+    fn wait_ready(addr: &Addr) {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+        loop {
+            if let Ok(mut conn) = zest::net::Stream::connect(addr) {
+                if wire::write_request(&mut conn, &wire::Request::Ping).is_ok() {
+                    if let Ok(Some(wire::Response::Pong)) = wire::read_response(&mut conn) {
+                        return;
+                    }
+                }
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "server at {addr} never became ready"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+
+    // The binaries generate the same deterministic synthetic set.
+    let (n, d, seed) = (600usize, 16usize, 7u64);
+    let s = generate(&SynthConfig {
+        n,
+        d,
+        seed,
+        ..Default::default()
+    });
+
+    let mut guards = Vec::new();
+    let mut worker_addrs = Vec::new();
+    for (i, range) in [(0usize, 300usize), (300, 600)].iter().enumerate() {
+        let addr = sock_addr(&format!("bin-worker{i}"));
+        let Addr::Unix(path) = &addr else { panic!() };
+        let child = std::process::Command::new(env!("CARGO_BIN_EXE_zest-shard-worker"))
+            .args([
+                "--listen",
+                &format!("unix://{}", path.display()),
+                "--synth",
+                &format!("{n},{d},{seed}"),
+                "--range",
+                &format!("{},{}", range.0, range.1),
+            ])
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn zest-shard-worker");
+        guards.push(ChildGuard(child));
+        worker_addrs.push(addr);
+    }
+    for addr in &worker_addrs {
+        wait_ready(addr);
+    }
+
+    let front = sock_addr("bin-front");
+    let Addr::Unix(front_path) = &front else {
+        panic!()
+    };
+    let workers_flag = worker_addrs
+        .iter()
+        .map(|a| a.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let child = std::process::Command::new(env!("CARGO_BIN_EXE_zest-server"))
+        .args([
+            "--listen",
+            &format!("unix://{}", front_path.display()),
+            "--workers",
+            &workers_flag,
+        ])
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn zest-server");
+    guards.push(ChildGuard(child));
+    wait_ready(&front);
+
+    let client = PartitionClient::connect(front.clone(), ClientConfig::default()).unwrap();
+    assert_eq!(client.manifest().unwrap(), (n, d, 0));
+
+    let mono = BruteIndex::new(&s);
+    for qi in [3usize, 250, 599] {
+        let q = s.row(qi).to_vec();
+        let remote = client
+            .estimate(Request {
+                query: q.clone(),
+                kind: EstimatorKind::Exact,
+                k: 0,
+                l: 0,
+            })
+            .unwrap();
+        let want: f64 = {
+            let mut rng = Rng::seeded(0);
+            let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+            Exact.estimate_batch(&mut ctx, std::slice::from_ref(&q))[0]
+        };
+        assert_eq!(
+            remote.z.to_bits(),
+            want.to_bits(),
+            "q{qi}: remote {} vs in-process {want}",
+            remote.z
+        );
+    }
+}

@@ -260,6 +260,170 @@ fn prop_store_roundtrip_bit_exact() {
     });
 }
 
+/// Every randomly generated wire message survives encode → frame →
+/// unframe → decode unchanged (the codec is total on its own output).
+#[test]
+fn prop_wire_codec_roundtrips() {
+    use zest::estimators::EstimatorKind;
+    use zest::mips::Hit;
+    use zest::net::wire::{self, ErrorCode, Estimate, Request, Response};
+
+    fn random_query(rng: &mut Rng, d: usize) -> Vec<f32> {
+        (0..d).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn random_queries(rng: &mut Rng) -> Vec<Vec<f32>> {
+        let d = rng.range(1, 24);
+        let n = rng.below(6);
+        (0..n).map(|_| random_query(rng, d)).collect()
+    }
+
+    fn random_kind(rng: &mut Rng) -> EstimatorKind {
+        let all = EstimatorKind::all();
+        all[rng.below(all.len())]
+    }
+
+    check(200, |rng| {
+        let req = match rng.below(12) {
+            0 => Request::Ping,
+            1 => Request::Manifest,
+            2 => Request::Estimate {
+                kind: random_kind(rng),
+                k: rng.next_u64() >> 32,
+                l: rng.next_u64() >> 32,
+                query: random_query(rng, rng.range(1, 32)),
+            },
+            3 => Request::EstimateBatch {
+                kind: random_kind(rng),
+                k: rng.below(1000) as u64,
+                l: rng.below(1000) as u64,
+                queries: random_queries(rng),
+            },
+            4 => Request::TopK {
+                k: rng.below(100) as u64,
+                queries: random_queries(rng),
+            },
+            5 => Request::ExpSumChain {
+                acc: rng.normal() * 1e6,
+                query: random_query(rng, rng.range(1, 16)),
+            },
+            6 => Request::ExpSumChainBatch {
+                acc_in: (0..rng.below(5)).map(|_| rng.normal()).collect(),
+                queries: random_queries(rng),
+            },
+            7 => Request::ScoreIds {
+                ids: (0..rng.below(20)).map(|_| rng.next_u64() >> 16).collect(),
+                query: random_query(rng, rng.range(1, 16)),
+            },
+            8 => Request::PrepareAdd {
+                token: rng.next_u64(),
+                dim: rng.range(1, 8) as u64,
+                rows: (0..rng.below(64)).map(|_| rng.normal() as f32).collect(),
+            },
+            9 => Request::PrepareRemove {
+                token: rng.next_u64(),
+                ids: (0..rng.below(10)).map(|_| rng.next_u64() >> 40).collect(),
+            },
+            10 => Request::Commit {
+                token: rng.next_u64(),
+            },
+            _ => Request::Abort {
+                token: rng.next_u64(),
+            },
+        };
+        let mut framed = Vec::new();
+        wire::write_request(&mut framed, &req)
+            .map_err(|e| format!("write_request: {e}"))?;
+        let got = wire::read_request(&mut &framed[..])
+            .map_err(|e| format!("read_request: {e}"))?
+            .ok_or("unexpected EOF")?;
+        if got != req {
+            return Err(format!("request mangled: {req:?} → {got:?}"));
+        }
+
+        let resp = match rng.below(10) {
+            0 => Response::Pong,
+            1 => Response::Manifest {
+                len: rng.next_u64() >> 20,
+                dim: rng.below(2048) as u64,
+                epoch: rng.below(1000) as u64,
+            },
+            2 => Response::Estimates(
+                (0..rng.below(5))
+                    .map(|_| Estimate {
+                        z: rng.normal() * 1e10,
+                        kind: random_kind(rng),
+                        epoch: rng.below(100) as u64,
+                        scorings: rng.below(1_000_000) as u64,
+                        queue_wait_ns: rng.next_u64() >> 20,
+                        exec_ns: rng.next_u64() >> 20,
+                    })
+                    .collect(),
+            ),
+            3 => Response::Hits(
+                (0..rng.below(4))
+                    .map(|_| {
+                        (0..rng.below(8))
+                            .map(|_| Hit {
+                                idx: rng.below(1 << 40),
+                                score: rng.normal() as f32,
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            ),
+            4 => Response::ExpSums((0..rng.below(6)).map(|_| rng.normal() * 1e30).collect()),
+            5 => Response::Scores((0..rng.below(20)).map(|_| rng.normal() as f32).collect()),
+            6 => Response::Prepared {
+                epoch: rng.below(100) as u64,
+            },
+            7 => Response::Committed {
+                epoch: rng.below(100) as u64,
+            },
+            8 => Response::Aborted,
+            _ => Response::Error {
+                code: ErrorCode::from_u16((rng.below(12) + 1) as u16),
+                message: format!("case {} says λ̃ ≠ Z", rng.below(1000)),
+            },
+        };
+        let mut framed = Vec::new();
+        wire::write_response(&mut framed, &resp)
+            .map_err(|e| format!("write_response: {e}"))?;
+        let got = wire::read_response(&mut &framed[..])
+            .map_err(|e| format!("read_response: {e}"))?
+            .ok_or("unexpected EOF")?;
+        if got != resp {
+            return Err(format!("response mangled: {resp:?} → {got:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Truncating a valid frame at any byte boundary never panics and never
+/// yields a successfully decoded message — it is either a clean EOF (cut
+/// before the first header byte) or a malformed-frame error.
+#[test]
+fn prop_wire_truncation_is_total() {
+    use zest::net::wire::{self, Request, WireError};
+
+    check(60, |rng| {
+        let req = Request::ScoreIds {
+            ids: (0..rng.range(1, 30)).map(|_| rng.next_u64() >> 32).collect(),
+            query: (0..rng.range(1, 16)).map(|_| rng.normal() as f32).collect(),
+        };
+        let mut framed = Vec::new();
+        wire::write_request(&mut framed, &req).map_err(|e| format!("{e}"))?;
+        let cut = rng.below(framed.len());
+        match wire::read_request(&mut &framed[..cut]) {
+            Ok(None) if cut == 0 => Ok(()),
+            Ok(None) => Err(format!("cut {cut} of {} read as clean EOF", framed.len())),
+            Ok(Some(_)) => Err(format!("cut {cut} of {} decoded a message", framed.len())),
+            Err(WireError::Malformed(_)) => Ok(()),
+            Err(e) => Err(format!("cut {cut}: unexpected error class {e}")),
+        }
+    });
+}
+
 /// K-means-tree search with full budget equals brute top-k for any store.
 #[test]
 fn prop_tree_full_budget_exact() {

@@ -352,3 +352,67 @@ fn remove_categories_republishes_consistent_snapshot() {
         assert!(h.idx < 390);
     }
 }
+
+/// Snapshot Arc reuse, pinned end to end: across `add_categories` and
+/// `remove_categories` epochs, every untouched shard's **store** and
+/// **index** are pointer-identical (`Arc::ptr_eq`) to the previous
+/// snapshot's — category mutations rebuild exactly the shards they
+/// touch, nothing else.
+#[test]
+fn untouched_shards_are_arc_reused_across_epochs() {
+    let s = store(400, 16);
+    let handle = SnapshotHandle::brute(ShardedStore::split(&s, 4)); // shards of 100
+    let e0 = handle.load();
+
+    // add_categories: every existing shard reused, one new shard built.
+    let added = generate(&SynthConfig {
+        n: 40,
+        d: 16,
+        seed: 77,
+        ..SynthConfig::tiny()
+    });
+    handle.add_categories(added).unwrap();
+    let e1 = handle.load();
+    assert_eq!(e1.store.num_shards(), 5);
+    for sh in 0..4 {
+        assert!(
+            Arc::ptr_eq(e0.store.shard(sh).store(), e1.store.shard(sh).store()),
+            "add: shard {sh} store must be Arc-reused"
+        );
+        assert!(
+            Arc::ptr_eq(e0.index.shard_index(sh), e1.index.shard_index(sh)),
+            "add: shard {sh} index must be Arc-reused"
+        );
+    }
+    assert!(
+        !Arc::ptr_eq(e0.store.shard(0).store(), e1.store.shard(4).store()),
+        "the appended shard is new storage"
+    );
+
+    // remove_categories from shard 1 only: shards 0, 2, 3 and the added
+    // shard 4 all keep their exact allocations (stores and indexes),
+    // shard 1 is rebuilt.
+    handle.remove_categories(&[150, 151, 152]).unwrap();
+    let e2 = handle.load();
+    assert_eq!(StoreView::len(e2.store.as_ref()), 437);
+    for sh in [0usize, 2, 3, 4] {
+        assert!(
+            Arc::ptr_eq(e1.store.shard(sh).store(), e2.store.shard(sh).store()),
+            "remove: shard {sh} store must be Arc-reused"
+        );
+        assert!(
+            Arc::ptr_eq(e1.index.shard_index(sh), e2.index.shard_index(sh)),
+            "remove: shard {sh} index must be Arc-reused"
+        );
+    }
+    assert!(
+        !Arc::ptr_eq(e1.store.shard(1).store(), e2.store.shard(1).store()),
+        "remove: the touched shard's store is rebuilt"
+    );
+    assert!(
+        !Arc::ptr_eq(e1.index.shard_index(1), e2.index.shard_index(1)),
+        "remove: the touched shard's index is rebuilt"
+    );
+    // Offsets shifted but content preserved: old global 153 is now 150.
+    assert_eq!(StoreView::row(e2.store.as_ref(), 150), s.row(153));
+}
