@@ -1,0 +1,161 @@
+//! Parallel-vs-sequential publish fan-out benchmark (§Serving in
+//! `EXPERIMENTS.md`).
+//!
+//! Spawns S in-process shard-worker servers over loopback TCP whose
+//! handlers sleep a fixed `DELAY` on every publish op (emulating the
+//! per-op network + staging latency a real worker would add), then
+//! measures a cluster-wide epoch publish (pure epoch bump) two ways:
+//!
+//! * **sequential** — an explicit prepare-then-commit loop over raw
+//!   `RemoteShard` handles: what `RemoteCluster::publish` did before
+//!   the per-worker I/O-slot fan-out (Σ-over-workers latency);
+//! * **parallel** — `RemoteCluster::remove_categories(&[])` through the
+//!   fan-out path (max-over-workers latency).
+//!
+//! With per-op delay δ the model cost is ≈ `2·S·δ` sequential vs
+//! ≈ `2·δ` parallel, so the speedup approaches S. Writes the headline
+//! rows to `BENCH_fanout.json` (package root) and the full record to
+//! `results/fanout_<scale>.json`.
+
+mod bench_common;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use zest::bench::harness::Table;
+use zest::coordinator::ServiceMetrics;
+use zest::data::synth::{generate, SynthConfig};
+use zest::net::client::ClientConfig;
+use zest::net::remote::{aligned_split, RemoteCluster, RemoteShard};
+use zest::net::server::{Handler, Server, ServerConfig};
+use zest::net::shard::ShardWorker;
+use zest::net::{wire, Addr};
+use zest::util::json::Json;
+
+/// Emulated per-op worker latency on the publish path.
+const DELAY: Duration = Duration::from_millis(3);
+/// Publishes per measurement (averaged).
+const REPS: usize = 5;
+
+/// Wraps a [`ShardWorker`], sleeping [`DELAY`] on every publish op.
+struct SlowPublish {
+    inner: ShardWorker,
+}
+
+impl Handler for SlowPublish {
+    fn handle(&self, req: wire::Request) -> wire::Response {
+        if matches!(
+            req,
+            wire::Request::PrepareAdd { .. }
+                | wire::Request::PrepareRemove { .. }
+                | wire::Request::Commit { .. }
+        ) {
+            std::thread::sleep(DELAY);
+        }
+        self.inner.handle(req)
+    }
+}
+
+fn main() {
+    let env = bench_common::env();
+    let store = generate(&SynthConfig {
+        n: 64,
+        d: 8,
+        ..SynthConfig::tiny()
+    });
+    println!(
+        "== fanout (delay={}ms/op, {REPS} publishes per point) ==",
+        DELAY.as_millis()
+    );
+    let mut table = Table::new(&[
+        "workers",
+        "seq publish (ms)",
+        "par publish (ms)",
+        "speedup",
+    ]);
+    let mut rows_json: Vec<Json> = Vec::new();
+
+    for s in [2usize, 4, 8] {
+        let mut servers = Vec::new();
+        let mut addrs: Vec<Addr> = Vec::new();
+        for block in aligned_split(&store, s) {
+            let server = Server::serve(
+                &Addr::Tcp("127.0.0.1:0".to_string()),
+                Arc::new(SlowPublish {
+                    inner: ShardWorker::new(block),
+                }),
+                ServerConfig::default(),
+                Arc::new(ServiceMetrics::new()),
+            )
+            .expect("bind worker");
+            addrs.push(server.local_addr().clone());
+            servers.push(server);
+        }
+
+        // Sequential baseline: the pre-fan-out publish shape — one
+        // blocking RPC per worker per phase.
+        let shards: Vec<RemoteShard> = addrs
+            .iter()
+            .map(|a| {
+                RemoteShard::connect(a.clone(), ClientConfig::default())
+                    .expect("connect")
+                    .0
+            })
+            .collect();
+        let t0 = Instant::now();
+        for r in 0..REPS {
+            let token = 0xFA0_0000 + r as u64;
+            for shard in &shards {
+                shard.prepare_remove(token, &[]).expect("prepare");
+            }
+            for shard in &shards {
+                shard.commit(token).expect("commit");
+            }
+        }
+        let seq_s = t0.elapsed().as_secs_f64() / REPS as f64;
+        drop(shards);
+
+        // Parallel: the same pure epoch bump through the per-worker
+        // I/O-slot fan-out (includes the post-publish manifest refresh).
+        let cluster =
+            RemoteCluster::connect(&addrs, ClientConfig::default()).expect("connect cluster");
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            cluster.remove_categories(&[]).expect("publish");
+        }
+        let par_s = t0.elapsed().as_secs_f64() / REPS as f64;
+        drop(cluster);
+
+        let speedup = seq_s / par_s;
+        println!(
+            "workers={s}: sequential {:.2} ms, parallel {:.2} ms => {speedup:.2}x",
+            seq_s * 1e3,
+            par_s * 1e3
+        );
+        table.row(vec![
+            s.to_string(),
+            format!("{:.2}", seq_s * 1e3),
+            format!("{:.2}", par_s * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("workers", Json::num(s as f64)),
+            ("seq_publish_s", Json::num(seq_s)),
+            ("par_publish_s", Json::num(par_s)),
+            ("speedup", Json::num(speedup)),
+        ]));
+
+        for server in servers {
+            server.shutdown();
+        }
+    }
+
+    table.print();
+    let json = Json::obj(vec![
+        ("delay_ms", Json::num(DELAY.as_millis() as f64)),
+        ("reps", Json::num(REPS as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    std::fs::write("BENCH_fanout.json", json.to_string()).ok();
+    println!("(json: BENCH_fanout.json)");
+    bench_common::write_json(&env, "fanout", &json);
+}

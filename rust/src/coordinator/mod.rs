@@ -30,7 +30,7 @@ pub mod service;
 
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{MetricsSnapshot, NetStats, ServiceMetrics, ShardStat};
-pub use router::Router;
+pub use router::{EpochCache, Router};
 pub use service::{
     BackpressurePolicy, PartitionService, Request, Response, ServiceConfig, SubmitError,
 };

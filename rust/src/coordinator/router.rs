@@ -19,14 +19,76 @@ use crate::store::StoreView;
 use crate::util::rng::Rng;
 use std::sync::{Arc, RwLock};
 
+/// Epoch-tagged single-slot cache for fitted estimator state.
+///
+/// Holds `(fitted_epoch, fitted value)` — `None` until the first fit.
+/// Readers clone the `Arc` out and use it without holding the lock; a
+/// request pinned to a different epoch refits under the write lock
+/// (double-checked, so concurrent workers on the same epoch fit once).
+/// Requests pinned to an **older** epoch refit backwards too —
+/// correctness (answers match the pinned category set) over fit reuse;
+/// in steady state epochs advance monotonically and each is fitted
+/// once. Shared by [`Router`] (in-process FMBE) and
+/// `net::remote::RemoteCluster` (cluster-wide FMBE over shard workers,
+/// whose fit is fallible — hence the `try` variant).
+pub struct EpochCache<T> {
+    slot: RwLock<Option<(u64, Arc<T>)>>,
+}
+
+impl<T> Default for EpochCache<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EpochCache<T> {
+    /// An empty cache (first access fits).
+    pub fn new() -> Self {
+        EpochCache {
+            slot: RwLock::new(None),
+        }
+    }
+
+    /// The cached value for `epoch`, or `fit()` installed under the
+    /// write lock. A failed fit leaves the cache unchanged (the next
+    /// request retries).
+    pub fn get_or_try_fit<E>(
+        &self,
+        epoch: u64,
+        fit: impl FnOnce() -> Result<T, E>,
+    ) -> Result<Arc<T>, E> {
+        if let Some((e, f)) = self.slot.read().unwrap().as_ref() {
+            if *e == epoch {
+                return Ok(f.clone());
+            }
+        }
+        let mut slot = self.slot.write().unwrap();
+        if let Some((e, f)) = slot.as_ref() {
+            if *e == epoch {
+                return Ok(f.clone());
+            }
+        }
+        let fitted = Arc::new(fit()?);
+        *slot = Some((epoch, fitted.clone()));
+        Ok(fitted)
+    }
+
+    /// Infallible wrapper around [`EpochCache::get_or_try_fit`].
+    pub fn get_or_fit(&self, epoch: u64, fit: impl FnOnce() -> T) -> Arc<T> {
+        let fitted: Result<Arc<T>, std::convert::Infallible> =
+            self.get_or_try_fit(epoch, || Ok(fit()));
+        match fitted {
+            Ok(f) => f,
+            Err(never) => match never {},
+        }
+    }
+}
+
 /// Routing table with a lazily fitted, epoch-tagged FMBE.
 pub struct Router {
-    /// `(fitted_epoch, fitted estimator)` — `None` until the first FMBE
-    /// request. Readers clone the `Arc` out and estimate without holding
-    /// the lock; a request pinned to a different epoch refits under the
-    /// write lock (double-checked, so concurrent workers on the same
-    /// epoch fit once).
-    fmbe: RwLock<Option<(u64, Arc<Fmbe>)>>,
+    /// FMBE is stateful (fitted feature maps + store-wide λ̃ sums), so
+    /// the router owns one fitted copy per epoch through [`EpochCache`].
+    fmbe: EpochCache<Fmbe>,
     fmbe_cfg: FmbeConfig,
     stratified_tail: bool,
 }
@@ -34,32 +96,17 @@ pub struct Router {
 impl Router {
     pub fn new(fmbe_cfg: FmbeConfig) -> Self {
         Router {
-            fmbe: RwLock::new(None),
+            fmbe: EpochCache::new(),
             fmbe_cfg,
             stratified_tail: false,
         }
     }
 
     /// The fitted FMBE for `epoch`, refitting from `store` when the
-    /// cached copy was fitted on a different epoch. Pinned batches from
-    /// an older epoch refit backwards too — correctness (answers match
-    /// the pinned category set) over fit reuse; in steady state epochs
-    /// advance monotonically and each is fitted once.
+    /// cached copy was fitted on a different epoch (see [`EpochCache`]).
     fn fmbe_for(&self, epoch: u64, store: &dyn StoreView) -> Arc<Fmbe> {
-        if let Some((e, f)) = self.fmbe.read().unwrap().as_ref() {
-            if *e == epoch {
-                return f.clone();
-            }
-        }
-        let mut slot = self.fmbe.write().unwrap();
-        if let Some((e, f)) = slot.as_ref() {
-            if *e == epoch {
-                return f.clone();
-            }
-        }
-        let fitted = Arc::new(Fmbe::fit(store, self.fmbe_cfg.clone()));
-        *slot = Some((epoch, fitted.clone()));
-        fitted
+        self.fmbe
+            .get_or_fit(epoch, || Fmbe::fit(store, self.fmbe_cfg.clone()))
     }
 
     /// Route MIMPS tail sampling through the shard-stratified draw

@@ -71,6 +71,32 @@ fn ln_factorial(m: usize) -> f64 {
     (1..=m).map(|i| (i as f64).ln()).sum()
 }
 
+/// Degree + flattened Rademacher matrix of one feature, before any λ̃
+/// precomputation — the part of the fit that depends only on
+/// `(seed, d)`, never on the store.
+type Proto = (usize, Vec<f32>);
+
+/// The seed-deterministic feature draw shared by [`Fmbe::fit`] and
+/// [`Fmbe::from_lambdas`]: every fitter given the same `(seed, d,
+/// p_features, p_geom)` draws byte-identical degrees and ω vectors,
+/// which is what makes per-shard λ̃ vectors additive across workers.
+fn draw_protos(d: usize, cfg: &FmbeConfig) -> Vec<Proto> {
+    let mut rng = Rng::seeded(cfg.seed ^ 0xF3BE);
+    (0..cfg.p_features)
+        .map(|_| {
+            let m = rng.geometric_kar(cfg.p_geom);
+            let omegas: Vec<f32> = (0..m * d).map(|_| rng.rademacher()).collect();
+            (m, omegas)
+        })
+        .collect()
+}
+
+/// c_m² = a_m · p^{m+1} / P — the squared feature coefficient with both
+/// sides of the kernel folded in.
+fn coeff_sq(m: usize, cfg: &FmbeConfig) -> f64 {
+    ((cfg.p_geom.ln() * (m + 1) as f64) - ln_factorial(m)).exp() / cfg.p_features as f64
+}
+
 impl Fmbe {
     /// Draw the random features and precompute λ̃ over the store. The
     /// feature draw depends only on `(seed, d)` and the λ̃ sums stream
@@ -80,20 +106,11 @@ impl Fmbe {
     pub fn fit(store: &dyn StoreView, cfg: FmbeConfig) -> Fmbe {
         let d = store.dim();
         let n = store.len();
-        let mut rng = Rng::seeded(cfg.seed ^ 0xF3BE);
         // Sample degrees + omegas up-front (cheap), precompute in parallel.
-        let protos: Vec<(usize, Vec<f32>)> = (0..cfg.p_features)
-            .map(|_| {
-                let m = rng.geometric_kar(cfg.p_geom);
-                let omegas: Vec<f32> = (0..m * d).map(|_| rng.rademacher()).collect();
-                (m, omegas)
-            })
-            .collect();
+        let protos = draw_protos(d, &cfg);
         let features: Vec<Feature> = threadpool::par_map(protos.len(), cfg.threads, |j| {
             let (m, ref omegas) = protos[j];
-            // c_m² = a_m · p^{m+1} / P  (coefficient squared, both sides folded).
-            let c_sq = ((cfg.p_geom.ln() * (m + 1) as f64) - ln_factorial(m)).exp()
-                / cfg.p_features as f64;
+            let c_sq = coeff_sq(m, &cfg);
             // Σ_i Π_r (v_i·ω_r): stream contiguous row blocks once per
             // projection (per-row shard lookups through `row(i)` would
             // cost a binary search each on sharded views; the chunk walk
@@ -121,6 +138,43 @@ impl Fmbe {
             d,
             cfg,
         }
+    }
+
+    /// Rebuild an estimator from externally computed λ̃ values — the
+    /// remote-shard fit path (`net::remote`): each shard worker fits
+    /// [`Fmbe::fit`] over its local rows with the same `(seed,
+    /// p_features)`, the cluster sums the per-shard λ̃ vectors
+    /// element-wise (λ̃ is additive over a partition of the rows: each
+    /// entry is `c_m² · Σ_i Π_r (v_i·ω_r)` and the feature draw is
+    /// seed-deterministic), and this constructor re-draws the identical
+    /// feature maps and installs the summed λ̃. The result answers
+    /// queries exactly like a monolithic fit, up to the f64 summation
+    /// order of the per-shard partials (bit-identical for one shard).
+    ///
+    /// `lambdas.len()` must equal `cfg.p_features` (the per-feature λ̃
+    /// in draw order).
+    pub fn from_lambdas(d: usize, cfg: FmbeConfig, lambdas: Vec<f64>) -> Fmbe {
+        assert_eq!(
+            lambdas.len(),
+            cfg.p_features,
+            "λ̃ vector length must equal p_features"
+        );
+        let features: Vec<Feature> = draw_protos(d, &cfg)
+            .into_iter()
+            .zip(lambdas)
+            .map(|((degree, omegas), lambda)| Feature {
+                omegas,
+                degree,
+                lambda,
+            })
+            .collect();
+        Fmbe { features, d, cfg }
+    }
+
+    /// The per-feature λ̃ values in draw order (what
+    /// [`Fmbe::from_lambdas`] consumes; coefficients folded in).
+    pub fn lambdas(&self) -> Vec<f64> {
+        self.features.iter().map(|f| f.lambda).collect()
     }
 
     /// Ẑ(q) = Σ_j λ̃_j · Π_r (q·ω_r) — O(P·E[M]·d), no retrieval.
@@ -318,6 +372,55 @@ mod tests {
             );
         }
         assert!(f.estimate_queries(&[]).is_empty());
+    }
+
+    /// `from_lambdas` must reconstruct a fit exactly: same feature
+    /// draws, installed λ̃ — the contract the remote FMBE path
+    /// (per-shard fits summed cluster-side) builds on.
+    #[test]
+    fn from_lambdas_reconstructs_fit() {
+        let s = small_norm_store(90, 8);
+        let cfg = FmbeConfig {
+            p_features: 300,
+            seed: 5,
+            ..Default::default()
+        };
+        let fitted = Fmbe::fit(&s, cfg.clone());
+        let rebuilt = Fmbe::from_lambdas(8, cfg, fitted.lambdas());
+        let q = s.row(11).to_vec();
+        assert_eq!(
+            fitted.estimate_query(&q).to_bits(),
+            rebuilt.estimate_query(&q).to_bits()
+        );
+        let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(i * 20).to_vec()).collect();
+        assert_eq!(fitted.estimate_queries(&qs), rebuilt.estimate_queries(&qs));
+    }
+
+    /// Per-shard λ̃ vectors summed element-wise match a monolithic fit
+    /// to f64 summation-order tolerance (additivity over row partitions).
+    #[test]
+    fn per_shard_lambdas_sum_to_monolithic() {
+        use crate::data::embeddings::EmbeddingStore;
+        let s = small_norm_store(120, 8);
+        let cfg = FmbeConfig {
+            p_features: 200,
+            seed: 3,
+            ..Default::default()
+        };
+        let whole = Fmbe::fit(&s, cfg.clone()).lambdas();
+        let cut = 64usize; // 4-aligned row split, like a worker layout
+        let a = EmbeddingStore::from_data(cut, 8, s.rows(0, cut).to_vec()).unwrap();
+        let b =
+            EmbeddingStore::from_data(120 - cut, 8, s.rows(cut, 120).to_vec()).unwrap();
+        let la = Fmbe::fit(&a, cfg.clone()).lambdas();
+        let lb = Fmbe::fit(&b, cfg).lambdas();
+        for (j, ((w, x), y)) in whole.iter().zip(&la).zip(&lb).enumerate() {
+            let sum = x + y;
+            assert!(
+                (sum - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                "feature {j}: {sum} vs {w}"
+            );
+        }
     }
 
     #[test]

@@ -11,14 +11,16 @@
 //! in **sublinear** time using three families of estimators built on top
 //! of Maximum Inner Product Search (MIPS):
 //!
-//! * [`estimators::Mimps`] — MIPS-based importance sampling (paper eq. 5):
-//!   exact head over the top-`k` set `S_k(q)` plus a uniform-tail
-//!   correction from `l` samples.
-//! * [`estimators::Mince`] — MIPS-based noise-contrastive estimation
-//!   (paper eq. 6/7): solve for `Z` as the single parameter of the
-//!   head/noise discrimination objective with Newton or Halley steps.
-//! * [`estimators::Fmbe`] — Kar–Karnick random feature maps for the `exp`
-//!   dot-product kernel (paper eq. 8–10) with precomputed `λ̃` sums.
+//! * [`estimators::mimps::Mimps`] — MIPS-based importance sampling
+//!   (paper eq. 5): exact head over the top-`k` set `S_k(q)` plus a
+//!   uniform-tail correction from `l` samples.
+//! * [`estimators::mince::Mince`] — MIPS-based noise-contrastive
+//!   estimation (paper eq. 6/7): solve for `Z` as the single parameter
+//!   of the head/noise discrimination objective with Newton or Halley
+//!   steps.
+//! * [`estimators::fmbe::Fmbe`] — Kar–Karnick random feature maps for
+//!   the `exp` dot-product kernel (paper eq. 8–10) with precomputed
+//!   `λ̃` sums.
 //!
 //! Substrates — the storage layer with epoch-snapshotted sharding
 //! ([`store`]), the MIPS indexes ([`mips`], including the scatter-gather

@@ -7,7 +7,8 @@
 //! ## Dispatch
 //!
 //! Every public kernel dispatches at runtime between an explicit
-//! `std::arch` AVX2+FMA implementation ([`avx2`], x86_64 with both
+//! `std::arch` AVX2+FMA implementation (the private `avx2` module,
+//! x86_64 with both
 //! features detected) and a portable scalar fallback ([`scalar`], every
 //! other case — and forceable with `ZEST_NO_SIMD=1` for A/B benching).
 //! The detection result is cached in an atomic so the per-call cost is a
@@ -22,7 +23,7 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Which kernel family [`simd_enabled`] selected.
+/// Which kernel family the runtime dispatch ([`backend`]) selected.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
     Scalar,

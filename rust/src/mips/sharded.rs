@@ -88,6 +88,19 @@ impl ShardedIndex {
         }
     }
 
+    /// Override the scatter's thread budget (default: the machine's
+    /// scoring threads). Compute-bound sub-indexes want the default —
+    /// oversubscribing CPU threads buys nothing — but **I/O-bound**
+    /// sub-indexes (`net::remote::RemoteShardIndex`, where each call
+    /// blocks on a wire round-trip) want one thread per shard
+    /// regardless of core count, so every worker's RPC is in flight
+    /// concurrently and the scatter's critical path is the slowest
+    /// worker, not a core-limited serialization of fast ones.
+    pub fn with_scatter_threads(mut self, threads: usize) -> ShardedIndex {
+        self.threads = threads.max(1);
+        self
+    }
+
     pub fn num_shards(&self) -> usize {
         self.indexes.len()
     }

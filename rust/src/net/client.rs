@@ -1,8 +1,8 @@
 //! Connection-pooling client for the partition server.
 //!
-//! [`PartitionClient::estimate`] / [`estimate_batch`] mirror the
-//! in-process [`crate::coordinator::PartitionService`] API — same
-//! request fields, same [`crate::coordinator::Response`] out — so a
+//! [`PartitionClient::estimate`] / [`PartitionClient::estimate_batch`]
+//! mirror the in-process [`crate::coordinator::PartitionService`] API —
+//! same request fields, same [`crate::coordinator::Response`] out — so a
 //! caller can swap between in-process and over-the-wire serving without
 //! touching its own code. Idle connections are pooled (up to
 //! [`ClientConfig::max_idle`]); a call that finds the pool empty opens a
@@ -10,7 +10,11 @@
 //! connection (server restarted, idle timeout) retries once on a fresh
 //! one before giving up.
 //!
-//! [`PartitionClient::estimate_batch`]: requires the caller to batch.
+//! The shared [`Pool`] also backs the remote-shard handles
+//! ([`super::remote::RemoteShard`]), whose hot paths serialize borrowed
+//! payloads through [`Pool::call_encoded`] +
+//! [`wire::Encoded`](super::wire::Encoded) instead of cloning into
+//! owned [`WireRequest`] values.
 
 use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::{Addr, Stream};
@@ -70,6 +74,7 @@ impl From<wire::WireError> for ClientError {
     }
 }
 
+/// Client-level result alias.
 pub type Result<T> = std::result::Result<T, ClientError>;
 
 /// A pool of idle connections to one address, with a call-level
@@ -82,6 +87,7 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// A pool with no connections yet (they open lazily per call).
     pub fn new(addr: Addr, cfg: ClientConfig) -> Pool {
         Pool {
             addr,
@@ -90,25 +96,33 @@ impl Pool {
         }
     }
 
+    /// The address every pooled connection targets.
     pub fn addr(&self) -> &Addr {
         &self.addr
     }
 
-    /// One request/response roundtrip. Pooled connections get one retry
-    /// on a fresh connection (covers the server having dropped an idle
-    /// connection); fresh-connection failures are returned as-is. An
-    /// error frame from the server keeps the connection pooled (the
-    /// stream stays frame-aligned) — except `Busy`, which the server
-    /// writes connection-level before closing; transport failures drop
-    /// the stream.
-    ///
-    /// Non-idempotent requests (`Commit` — the worker may have published
-    /// before the response was lost) are **never** re-sent: a failed
-    /// roundtrip surfaces as an error instead of a silent double-send.
+    /// One request/response roundtrip from an owned [`WireRequest`] —
+    /// encodes and delegates to [`Pool::call_encoded`]. Non-idempotent
+    /// requests (`Commit` — the worker may have published before the
+    /// response was lost) are **never** re-sent: a failed roundtrip
+    /// surfaces as an error instead of a silent double-send.
     pub fn call(&self, req: &WireRequest) -> Result<WireResponse> {
         let resend_safe = !matches!(req, WireRequest::Commit { .. });
+        self.call_encoded(&req.encode(), resend_safe)
+    }
+
+    /// One request/response roundtrip from pre-encoded payload bytes
+    /// (the borrowed-encode fast path; build `payload` with
+    /// [`wire::Encoded`](super::wire::Encoded)). Pooled connections get
+    /// one retry on a fresh connection when `resend_safe` (covers the
+    /// server having dropped an idle connection); fresh-connection
+    /// failures are returned as-is. An error frame from the server
+    /// keeps the connection pooled (the stream stays frame-aligned) —
+    /// except `ConnLimit`, which the server writes right before closing;
+    /// transport failures drop the stream.
+    pub fn call_encoded(&self, payload: &[u8], resend_safe: bool) -> Result<WireResponse> {
         if let Some(stream) = self.idle.lock().unwrap().pop() {
-            match Self::roundtrip(stream, req) {
+            match Self::roundtrip(stream, payload) {
                 Ok((stream, resp)) => {
                     self.pool_unless_closing(stream, &resp);
                     return Ok(resp);
@@ -119,7 +133,7 @@ impl Pool {
         }
         let stream = Stream::connect(&self.addr).map_err(wire::WireError::Io)?;
         let _ = stream.set_read_timeout(self.cfg.read_timeout);
-        let (stream, resp) = Self::roundtrip(stream, req)?;
+        let (stream, resp) = Self::roundtrip(stream, payload)?;
         self.pool_unless_closing(stream, &resp);
         Ok(resp)
     }
@@ -140,8 +154,8 @@ impl Pool {
         self.put_back(stream);
     }
 
-    fn roundtrip(mut stream: Stream, req: &WireRequest) -> Result<(Stream, WireResponse)> {
-        wire::write_request(&mut stream, req)?;
+    fn roundtrip(mut stream: Stream, payload: &[u8]) -> Result<(Stream, WireResponse)> {
+        wire::write_frame(&mut stream, payload)?;
         match wire::read_response(&mut stream)? {
             Some(resp) => Ok((stream, resp)),
             None => Err(ClientError::ConnectionClosed),

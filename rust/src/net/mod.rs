@@ -15,16 +15,27 @@
 //!   [`crate::coordinator::PartitionService`] API.
 //! * [`shard`] + [`remote`] — the cross-process shard seam:
 //!   [`shard::ShardWorker`] serves one shard's store behind the wire
-//!   ops (`TopK`, chained exp-sums, tail scoring, prepare/commit), and
-//!   [`remote::RemoteShardIndex`] / [`remote::RemoteCluster`] compose S
-//!   worker processes back into a [`crate::mips::sharded::ShardedIndex`]
-//!   scatter with the existing `hit_cmp` merge — N beyond one process'
-//!   memory. Epoch swaps become a two-phase publish (prepare on all
-//!   workers, then commit) through
+//!   ops (`TopK`, chained exp-sums, tail scoring, FMBE fits,
+//!   prepare/commit), and [`remote::RemoteShardIndex`] /
+//!   [`remote::RemoteCluster`] compose S worker processes back into a
+//!   [`crate::mips::sharded::ShardedIndex`] scatter with the existing
+//!   `hit_cmp` merge — N beyond one process' memory, with **every**
+//!   estimator family served remotely. Each worker handle owns a
+//!   dedicated I/O slot, so cluster-wide operations (publishes, tail
+//!   scoring, FMBE fits, refreshes) fan out concurrently and cost the
+//!   slowest worker, not the sum. Epoch swaps become a two-phase
+//!   publish (prepare on all workers, then commit) through
 //!   [`crate::store::SnapshotHandle`]'s `prepare_*`/`commit` split.
 //!
 //! Addresses are written `tcp://host:port` or `unix:///path/to.sock`
-//! ([`Addr::parse`]); both transports speak the same frames.
+//! ([`Addr::parse`]); both transports speak the same frames. The wire
+//! format is specified in `docs/WIRE.md`; the crate-wide serving
+//! architecture (in-process vs remote request flow, the publish
+//! protocol's failure states) in `ARCHITECTURE.md`.
+
+// Every public item of the serving seam carries its invariants (epoch
+// lockstep, Busy semantics, pool reuse) in its docs; keep it that way.
+#![warn(missing_docs)]
 
 pub mod client;
 pub mod remote;
@@ -87,7 +98,9 @@ impl std::fmt::Display for Addr {
 
 /// One connected byte stream over either transport.
 pub enum Stream {
+    /// A connected TCP socket.
     Tcp(TcpStream),
+    /// A connected Unix-domain socket.
     #[cfg(unix)]
     Unix(UnixStream),
 }
@@ -164,15 +177,21 @@ impl Write for Stream {
 /// their path on bind (stale socket files from a previous run) and on
 /// drop.
 pub enum Listener {
+    /// A bound TCP listener.
     Tcp(TcpListener),
+    /// A bound Unix-domain listener plus the socket path it unlinks on
+    /// drop.
     #[cfg(unix)]
     Unix {
+        /// The bound listener.
         listener: UnixListener,
+        /// Socket path (removed on bind of a stale file, and on drop).
         path: std::path::PathBuf,
     },
 }
 
 impl Listener {
+    /// Bind `addr` (a stale Unix socket file is unlinked first).
     pub fn bind(addr: &Addr) -> std::io::Result<Listener> {
         match addr {
             Addr::Tcp(hp) => TcpListener::bind(hp.as_str()).map(Listener::Tcp),
@@ -196,6 +215,7 @@ impl Listener {
         }
     }
 
+    /// Block until the next connection arrives.
     pub fn accept(&self) -> std::io::Result<Stream> {
         match self {
             Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),

@@ -27,67 +27,228 @@
 //!
 //! ## Estimators over remote shards
 //!
-//! `Exact` (chained exp-sum), `Nmimps` (scatter top-k, exp-sum the
-//! hits), `Mimps` and `Uniform` (scatter top-k + the same global tail
-//! draw as in-process, scored remotely via `ScoreIds`) are served.
-//! `Mince` and `Fmbe` need estimator state colocated with the rows and
-//! answer `Unsupported` for now.
+//! Every estimator family is served:
+//!
+//! * `Exact` — chained exp-sum (sequential by design, see above).
+//! * `Nmimps` — scatter top-k, exp-sum the hits.
+//! * `Mimps` / `Uniform` — scatter top-k + the same global tail draw
+//!   as in-process, scored remotely via `ScoreIds`.
+//! * `Mince` — head from the scatter top-k, noise from the same global
+//!   tail draw as the in-process estimator, scored remotely via
+//!   `ScoreIds`, then the identical Halley solve cluster-side — the
+//!   paper's NCE estimator without shipping a single row.
+//! * `Fmbe` — each worker fits the seed-deterministic feature maps over
+//!   its local rows (`FitFmbe`), the cluster sums the per-shard λ̃
+//!   vectors (λ̃ is additive over row partitions) and rebuilds the
+//!   estimator via [`crate::estimators::fmbe::Fmbe::from_lambdas`].
+//!   The fit is epoch-tagged in an
+//!   [`EpochCache`](crate::coordinator::EpochCache) exactly like the
+//!   in-process `Router` refit: a publish invalidates it and the next
+//!   FMBE request refits from the new epoch. Cluster answers match the
+//!   monolithic fit up to the f64 summation order of per-shard partials
+//!   (bit-identical at S = 1).
+//!
+//! ## Parallel worker fan-out
+//!
+//! Each [`RemoteShard`] owns a dedicated I/O thread (its *in-flight
+//! request slot*): cluster-side operations submit a request to every
+//! worker's slot and then join, so the wall-clock cost of a cluster-wide
+//! operation is the **slowest worker, not the sum** of all workers.
+//! Fanned out this way: the two-phase `prepare_*`/`commit`/`abort`
+//! publish phases, `ScoreIds` tail scoring, `FitFmbe` fits, and
+//! manifest refreshes. The top-k scatter fans out through the
+//! [`ShardedIndex`] scoped pool (given one scatter thread per worker —
+//! the calls are I/O-bound, so the budget is worker count, not core
+//! count). The only deliberately sequential operation is the chained
+//! `Exact` exp-sum, whose bit-exactness contract *is* its ordering; the
+//! ROADMAP's "streaming/pipelined chained exp-sum" item tracks a
+//! two-mode API. A worker's slot serializes the requests sent to **that
+//! worker** (publish phases stay ordered per worker) while different
+//! workers proceed concurrently.
 //!
 //! ## Two-phase epoch publish
 //!
-//! A cluster mutation prepares on **every** worker (workers without
-//! local changes stage a pure epoch bump), and only if all S stage
-//! successfully commits everywhere; any prepare failure aborts the
-//! staged workers and leaves every epoch untouched. Worker epochs stay
-//! in lockstep, and [`RemoteCluster::refresh`] re-validates manifests
-//! after each publish.
+//! A cluster mutation prepares on **every** worker concurrently
+//! (workers without local changes stage a pure epoch bump), and only if
+//! all S stage successfully commits everywhere; any prepare failure
+//! aborts the staged workers and leaves every epoch untouched. Worker
+//! epochs stay in lockstep, and [`RemoteCluster::refresh`] re-validates
+//! manifests after each publish. `ARCHITECTURE.md` documents the full
+//! protocol, including the failure / [`RemoteCluster::resolve_token`]
+//! recovery states.
 
 use super::client::{remote_err, ClientConfig, ClientError, Pool, Result};
 use super::server::Handler;
-use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
+use super::wire::{self, Encoded, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::Addr;
+use crate::coordinator::EpochCache;
 use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::fmbe::{Fmbe, FmbeConfig};
+use crate::estimators::mince::{self, Solver};
 use crate::estimators::{tail, EstimatorKind};
 use crate::mips::sharded::ShardedIndex;
 use crate::mips::{Hit, MipsIndex};
 use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Instant;
 
+// ---------------------------------------------------------------------
+// Per-worker in-flight request slot.
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One dedicated I/O thread per worker: the shard's *in-flight request
+/// slot*. Jobs submitted to the slot run in submission order on that
+/// thread (per-worker ordering is preserved — the publish protocol
+/// relies on prepare-before-commit per worker), while slots of
+/// different workers run concurrently — which is what turns cluster
+/// operations from Σ-over-workers into max-over-workers latency.
+struct IoSlot {
+    tx: Option<mpsc::Sender<Job>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl IoSlot {
+    fn spawn(name: String) -> IoSlot {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let join = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawn shard I/O thread");
+        IoSlot {
+            tx: Some(tx),
+            join: Some(join),
+        }
+    }
+
+    /// Queue `f` on the slot thread; the returned [`Pending`] joins its
+    /// result. Jobs are plain closures returning values (never
+    /// panicking RPC wrappers), so a dead slot is a bug, not a runtime
+    /// condition.
+    fn run<T, F>(&self, f: F) -> Pending<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let _ = tx.send(f());
+        });
+        self.tx
+            .as_ref()
+            .expect("I/O slot running")
+            .send(job)
+            .expect("shard I/O thread alive");
+        Pending { rx }
+    }
+}
+
+impl Drop for IoSlot {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // channel closes → thread drains and exits
+        if let Some(join) = self.join.take() {
+            if join.thread().id() == std::thread::current().id() {
+                // The slot thread itself is running this destructor (a
+                // job held the last Arc to its own shard). Joining would
+                // self-deadlock; the thread exits on its own once the
+                // closed channel drains.
+                return;
+            }
+            let _ = join.join();
+        }
+    }
+}
+
+/// A not-yet-joined slot result (one-shot).
+struct Pending<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> Pending<T> {
+    /// Block until the slot thread finished the job.
+    fn join(self) -> T {
+        self.rx.recv().expect("shard I/O thread dropped a job")
+    }
+}
+
+/// One query's in-flight cross-worker `ScoreIds` scatter: the submit
+/// half of `RemoteCluster::score_global_ids`, joined later so batched
+/// callers can overlap scatters across queries.
+struct ScoreScatter {
+    /// Per non-empty worker bucket: expected score count, the in-flight
+    /// call, and the positions (in the original `ids` order) its scores
+    /// land in.
+    in_flight: Vec<(usize, Pending<Result<WireResponse>>, Vec<usize>)>,
+    /// Total ids scattered (output length).
+    len: usize,
+}
+
+impl ScoreScatter {
+    /// Join every worker bucket and gather scores in `ids` order.
+    fn join(self) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; self.len];
+        for (want, pending, positions) in self.in_flight {
+            let scores = to_scores(pending.join()?, want)?;
+            for (score, pos) in scores.into_iter().zip(positions) {
+                out[pos] = score;
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Client handle to one shard worker process.
+///
+/// Blocking RPC helpers serialize straight from borrowed payloads
+/// ([`Encoded`]) — no owned `Request` clone on the hot path — and the
+/// internal async `submit` path queues the call on the worker's I/O
+/// slot so the cluster can fan one operation out across all workers
+/// and join.
 pub struct RemoteShard {
     pool: Pool,
+    slot: IoSlot,
 }
 
 impl RemoteShard {
     /// Connect and fetch the worker's manifest: `(len, dim, epoch)`.
     pub fn connect(addr: Addr, cfg: ClientConfig) -> Result<(RemoteShard, (usize, usize, u64))> {
+        let slot = IoSlot::spawn(format!("zest-io-{addr}"));
         let shard = RemoteShard {
             pool: Pool::new(addr, cfg),
+            slot,
         };
         let manifest = shard.manifest()?;
         Ok((shard, manifest))
     }
 
+    /// The worker's serving address.
     pub fn addr(&self) -> &Addr {
         self.pool.addr()
     }
 
+    /// Issue a pre-encoded request on this worker's I/O slot and return
+    /// a joinable handle — the fan-out primitive every parallel cluster
+    /// operation is built from.
+    fn submit(self: &Arc<Self>, req: Encoded) -> Pending<Result<WireResponse>> {
+        let shard = Arc::clone(self);
+        self.slot
+            .run(move || shard.pool.call_encoded(req.payload(), req.resend_safe()))
+    }
+
+    /// The worker's current `(len, dim, epoch)` manifest.
     pub fn manifest(&self) -> Result<(usize, usize, u64)> {
-        match self.pool.call(&WireRequest::Manifest)? {
-            WireResponse::Manifest { len, dim, epoch } => Ok((len as usize, dim as usize, epoch)),
-            other => Err(unexpected("manifest", other)),
-        }
+        to_manifest(self.pool.call_encoded(Encoded::manifest().payload(), true)?)
     }
 
     /// Local top-k for every query (local ids).
     pub fn top_k_batch(&self, queries: &[Vec<f32>], k: usize) -> Result<Vec<Vec<Hit>>> {
-        let req = WireRequest::TopK {
-            k: k as u64,
-            queries: queries.to_vec(),
-        };
-        match self.pool.call(&req)? {
+        let req = Encoded::top_k(k as u64, queries);
+        match self.pool.call_encoded(req.payload(), true)? {
             WireResponse::Hits(hits) => Ok(hits),
             other => Err(unexpected("top_k", other)),
         }
@@ -95,11 +256,8 @@ impl RemoteShard {
 
     /// Continue a single-query chained exp-sum over this worker's rows.
     pub fn exp_sum_chain(&self, acc: f64, query: &[f32]) -> Result<f64> {
-        let req = WireRequest::ExpSumChain {
-            acc,
-            query: query.to_vec(),
-        };
-        match self.pool.call(&req)? {
+        let req = Encoded::exp_sum_chain(acc, query);
+        match self.pool.call_encoded(req.payload(), true)? {
             WireResponse::ExpSums(acc) if acc.len() == 1 => Ok(acc[0]),
             other => Err(unexpected("exp_sum_chain", other)),
         }
@@ -108,11 +266,8 @@ impl RemoteShard {
     /// Continue a batched chained exp-sum (one accumulator per query).
     pub fn exp_sum_chain_batch(&self, acc_in: Vec<f64>, queries: &[Vec<f32>]) -> Result<Vec<f64>> {
         let want = acc_in.len();
-        let req = WireRequest::ExpSumChainBatch {
-            acc_in,
-            queries: queries.to_vec(),
-        };
-        match self.pool.call(&req)? {
+        let req = Encoded::exp_sum_chain_batch(&acc_in, queries);
+        match self.pool.call_encoded(req.payload(), true)? {
             WireResponse::ExpSums(acc) if acc.len() == want => Ok(acc),
             other => Err(unexpected("exp_sum_chain_batch", other)),
         }
@@ -120,51 +275,81 @@ impl RemoteShard {
 
     /// Inner products of the given **local** rows with the query.
     pub fn score_ids(&self, ids: &[u64], query: &[f32]) -> Result<Vec<f32>> {
-        let req = WireRequest::ScoreIds {
-            ids: ids.to_vec(),
-            query: query.to_vec(),
-        };
-        match self.pool.call(&req)? {
-            WireResponse::Scores(s) if s.len() == ids.len() => Ok(s),
-            other => Err(unexpected("score_ids", other)),
-        }
+        let req = Encoded::score_ids(ids, query);
+        to_scores(self.pool.call_encoded(req.payload(), true)?, ids.len())
     }
 
+    /// Stage an epoch appending `rows` under `token` (publish phase 1).
     pub fn prepare_add(&self, token: u64, rows: &EmbeddingStore) -> Result<u64> {
-        let req = WireRequest::PrepareAdd {
-            token,
-            dim: rows.dim() as u64,
-            rows: rows.data().to_vec(),
-        };
-        match self.pool.call(&req)? {
-            WireResponse::Prepared { epoch } => Ok(epoch),
-            other => Err(unexpected("prepare_add", other)),
-        }
+        let req = Encoded::prepare_add(token, rows.dim() as u64, rows.data());
+        to_prepared(self.pool.call_encoded(req.payload(), true)?)
     }
 
+    /// Stage an epoch dropping the given local ids under `token`
+    /// (publish phase 1; empty `ids` is a pure epoch bump).
     pub fn prepare_remove(&self, token: u64, ids: &[u64]) -> Result<u64> {
-        let req = WireRequest::PrepareRemove {
-            token,
-            ids: ids.to_vec(),
-        };
-        match self.pool.call(&req)? {
-            WireResponse::Prepared { epoch } => Ok(epoch),
-            other => Err(unexpected("prepare_remove", other)),
-        }
+        let req = Encoded::prepare_remove(token, ids);
+        to_prepared(self.pool.call_encoded(req.payload(), true)?)
     }
 
+    /// Publish the epoch staged under `token` (publish phase 2; never
+    /// silently re-sent — see `Pool::call_encoded`).
     pub fn commit(&self, token: u64) -> Result<u64> {
-        match self.pool.call(&WireRequest::Commit { token })? {
-            WireResponse::Committed { epoch } => Ok(epoch),
-            other => Err(unexpected("commit", other)),
-        }
+        let req = Encoded::commit(token);
+        to_committed(self.pool.call_encoded(req.payload(), req.resend_safe())?)
     }
 
+    /// Drop the preparation staged under `token` (idempotent).
     pub fn abort(&self, token: u64) -> Result<()> {
-        match self.pool.call(&WireRequest::Abort { token })? {
+        let req = Encoded::abort(token);
+        match self.pool.call_encoded(req.payload(), true)? {
             WireResponse::Aborted => Ok(()),
             other => Err(unexpected("abort", other)),
         }
+    }
+
+    /// Fit FMBE over this worker's local rows: the per-feature λ̃
+    /// vector plus the epoch it was fitted on.
+    pub fn fit_fmbe(&self, seed: u64, p_features: usize) -> Result<(u64, Vec<f64>)> {
+        let req = Encoded::fit_fmbe(seed, p_features as u64);
+        to_lambdas(self.pool.call_encoded(req.payload(), true)?, p_features)
+    }
+}
+
+fn to_manifest(resp: WireResponse) -> Result<(usize, usize, u64)> {
+    match resp {
+        WireResponse::Manifest { len, dim, epoch } => Ok((len as usize, dim as usize, epoch)),
+        other => Err(unexpected("manifest", other)),
+    }
+}
+
+fn to_prepared(resp: WireResponse) -> Result<u64> {
+    match resp {
+        WireResponse::Prepared { epoch } => Ok(epoch),
+        other => Err(unexpected("prepare", other)),
+    }
+}
+
+fn to_committed(resp: WireResponse) -> Result<u64> {
+    match resp {
+        WireResponse::Committed { epoch } => Ok(epoch),
+        other => Err(unexpected("commit", other)),
+    }
+}
+
+fn to_scores(resp: WireResponse, want: usize) -> Result<Vec<f32>> {
+    match resp {
+        WireResponse::Scores(s) if s.len() == want => Ok(s),
+        other => Err(unexpected("score_ids", other)),
+    }
+}
+
+fn to_lambdas(resp: WireResponse, p_features: usize) -> Result<(u64, Vec<f64>)> {
+    match resp {
+        WireResponse::Lambdas { epoch, lambdas } if lambdas.len() == p_features => {
+            Ok((epoch, lambdas))
+        }
+        other => Err(unexpected("fit_fmbe", other)),
     }
 }
 
@@ -188,6 +373,7 @@ pub struct RemoteShardIndex {
 }
 
 impl RemoteShardIndex {
+    /// Wrap one worker handle as a `len`-row [`MipsIndex`].
     pub fn new(shard: Arc<RemoteShard>, len: usize) -> RemoteShardIndex {
         RemoteShardIndex { shard, len }
     }
@@ -297,6 +483,12 @@ pub struct RemoteCluster {
     /// two-phase publish are read-modify-write on the layout).
     publish_lock: Mutex<()>,
     token: AtomicU64,
+    /// Configuration of the cluster-wide FMBE fit (seed + feature
+    /// count; the wire op pins the geometric parameter to the default).
+    fmbe_cfg: FmbeConfig,
+    /// Epoch-tagged cluster FMBE — the remote analogue of the
+    /// `Router`'s in-process refit cache.
+    fmbe: EpochCache<Fmbe>,
 }
 
 impl RemoteCluster {
@@ -362,7 +554,24 @@ impl RemoteCluster {
                     .unwrap_or(0)
                     ^ ((std::process::id() as u64) << 32),
             ),
+            fmbe_cfg: FmbeConfig::default(),
+            fmbe: EpochCache::new(),
         })
+    }
+
+    /// Configure the cluster-wide FMBE fit (feature count + seed). The
+    /// wire `FitFmbe` op carries only `(seed, p_features)` and pins the
+    /// geometric parameter to the library default, so a non-default
+    /// `p_geom` is rejected at fit time. Clears any cached fit.
+    pub fn with_fmbe_config(mut self, cfg: FmbeConfig) -> RemoteCluster {
+        self.fmbe_cfg = cfg;
+        self.fmbe = EpochCache::new();
+        self
+    }
+
+    /// The cluster-wide FMBE fit configuration.
+    pub fn fmbe_config(&self) -> &FmbeConfig {
+        &self.fmbe_cfg
     }
 
     /// Pin the current cluster view (layout + scatter index) for one
@@ -385,25 +594,33 @@ impl RemoteCluster {
                 part
             })
             .collect();
-        ShardedIndex::from_parts(parts)
+        // One scatter thread per worker: the sub-index calls block on
+        // wire round-trips, so the budget is worker count, not cores —
+        // every worker's RPC must be in flight concurrently.
+        ShardedIndex::from_parts(parts).with_scatter_threads(shards.len())
     }
 
+    /// Number of worker processes composed by this cluster.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Dimensionality every worker serves.
     pub fn dim(&self) -> usize {
         self.dim
     }
 
+    /// Total categories across workers at the current epoch.
     pub fn len(&self) -> usize {
         self.state().lens.iter().sum()
     }
 
+    /// Whether the cluster currently serves zero categories.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The lockstep epoch of the current cluster view.
     pub fn epoch(&self) -> u64 {
         self.state().epoch
     }
@@ -438,9 +655,14 @@ impl RemoteCluster {
         Ok(acc)
     }
 
-    /// Score global ids against `q`, scattering each id to its owning
-    /// worker under the caller's pinned layout. Results in `ids` order.
-    fn score_global_ids(&self, lens: &[usize], ids: &[usize], q: &[f32]) -> Result<Vec<f32>> {
+    /// Submit the `ScoreIds` scatter for one query: bucket each global
+    /// id to its owning worker under the caller's pinned layout and
+    /// issue every bucket on its worker's I/O slot. The returned
+    /// [`ScoreScatter`] joins into scores in `ids` order. Splitting
+    /// submit from join lets batched callers put **every query's**
+    /// scatter in flight before joining any (cross-query overlap on top
+    /// of the per-query cross-worker overlap).
+    fn submit_score_ids(&self, lens: &[usize], ids: &[usize], q: &[f32]) -> Result<ScoreScatter> {
         let mut buckets: Vec<(Vec<u64>, Vec<usize>)> =
             (0..self.shards.len()).map(|_| (vec![], vec![])).collect();
         for (pos, &g) in ids.iter().enumerate() {
@@ -462,22 +684,33 @@ impl RemoteCluster {
             buckets[s].0.push(local as u64);
             buckets[s].1.push(pos);
         }
-        let mut out = vec![0f32; ids.len()];
-        for (s, (locals, positions)) in buckets.into_iter().enumerate() {
-            if locals.is_empty() {
-                continue;
-            }
-            let scores = self.shards[s].score_ids(&locals, q)?;
-            for (score, pos) in scores.into_iter().zip(positions) {
-                out[pos] = score;
-            }
-        }
-        Ok(out)
+        let in_flight: Vec<_> = buckets
+            .into_iter()
+            .enumerate()
+            .filter(|(_, (locals, _))| !locals.is_empty())
+            .map(|(s, (locals, positions))| {
+                let pending = self.shards[s].submit(Encoded::score_ids(&locals, q));
+                (locals.len(), pending, positions)
+            })
+            .collect();
+        Ok(ScoreScatter {
+            in_flight,
+            len: ids.len(),
+        })
+    }
+
+    /// Score global ids against `q` and wait: submit + join in one call
+    /// (single-query use; batched paths interleave the halves).
+    fn score_global_ids(&self, lens: &[usize], ids: &[usize], q: &[f32]) -> Result<Vec<f32>> {
+        self.submit_score_ids(lens, ids, q)?.join()
     }
 
     /// Estimate a same-(kind, k, l) query block across the remote
-    /// shards, mirroring the in-process estimator math (`Exact` exactly;
-    /// the samplers with the same global tail draw, scored remotely).
+    /// shards, mirroring the in-process estimator math for **every**
+    /// [`EstimatorKind`]: `Exact` exactly (chained); `Nmimps`, `Mimps`,
+    /// `Uniform` and `Mince` with the same global tail draw as
+    /// in-process, scored remotely; `Fmbe` from the epoch-tagged
+    /// cluster fit (per-shard λ̃ sums).
     /// The returned [`ClusterAnswer`] carries the epoch and category
     /// count of the **pinned** cluster view that produced the answers,
     /// so callers report a consistent `Response.epoch` even when a
@@ -502,12 +735,8 @@ impl RemoteCluster {
             }
             EstimatorKind::Mimps => self.sampled_batch(&state, qs, k, l, rng)?,
             EstimatorKind::Uniform => self.sampled_batch(&state, qs, 0, l, rng)?,
-            EstimatorKind::Mince | EstimatorKind::Fmbe => {
-                return Err(remote_err(
-                    ErrorCode::Unsupported,
-                    format!("{kind} is not served over remote shards yet"),
-                ))
-            }
+            EstimatorKind::Mince => self.mince_batch(&state, qs, k, l, rng)?,
+            EstimatorKind::Fmbe => self.fmbe_for(&state)?.estimate_queries(qs),
         };
         Ok(ClusterAnswer {
             zs,
@@ -520,6 +749,12 @@ impl RemoteCluster {
     /// head through the pinned scatter index, draw the same global tail
     /// sample as the in-process estimators, and score the drawn ids on
     /// their owning workers (same pinned layout throughout).
+    ///
+    /// Two phases so a batch costs one scoring wave, not Q sequential
+    /// ones: the draws run sequentially (RNG-sequence parity with the
+    /// in-process estimators) while every query's `ScoreIds` scatter is
+    /// submitted as soon as it is drawn; the joins run after all
+    /// scatters are in flight.
     fn sampled_batch(
         &self,
         state: &ClusterState,
@@ -535,28 +770,176 @@ impl RemoteCluster {
             vec![vec![]; qs.len()]
         };
         let mut scratch = tail::TailScratch::new();
-        let mut out = Vec::with_capacity(qs.len());
+        // Phase 1: draw + submit. `(head_z, k_eff, drawn, scatter)`.
+        let mut staged = Vec::with_capacity(qs.len());
         for (q, head) in qs.iter().zip(&heads) {
             let head_z = tail::head_sum(head);
             let k_eff = head.len();
             if k_eff >= n || l == 0 {
-                out.push(head_z);
+                staged.push((head_z, k_eff, 0usize, None));
                 continue;
             }
             tail::sample_tail_ids(n, head, l, rng, &mut scratch);
             let drawn = scratch.indices.len();
             if drawn == 0 {
-                out.push(head_z);
+                staged.push((head_z, k_eff, 0, None));
                 continue;
             }
-            let exp_sum: f64 = self
-                .score_global_ids(&state.lens, &scratch.indices, q)?
+            let scatter = self.submit_score_ids(&state.lens, &scratch.indices, q)?;
+            staged.push((head_z, k_eff, drawn, Some(scatter)));
+        }
+        // Phase 2: join in query order.
+        let mut out = Vec::with_capacity(qs.len());
+        for (head_z, k_eff, drawn, scatter) in staged {
+            let Some(scatter) = scatter else {
+                out.push(head_z);
+                continue;
+            };
+            let exp_sum: f64 = scatter
+                .join()?
                 .iter()
                 .map(|&s| (s as f64).exp())
                 .sum();
             out.push(head_z + (n - k_eff) as f64 * (exp_sum / drawn as f64));
         }
         Ok(out)
+    }
+
+    /// MINCE over remote shards, mirroring `Mince::estimate` term for
+    /// term: the head `S_k` from the pinned scatter index plays the
+    /// "data" samples, the **same global noise draw** as the in-process
+    /// estimator (via [`tail::sample_tail_ids`]) plays the noise —
+    /// scored on its owning workers through the parallel `ScoreIds`
+    /// fan-out — and the identical safeguarded Halley solve runs
+    /// cluster-side. Under a fixed seed the draw sequence matches the
+    /// in-process estimator exactly; answers agree to float tolerance
+    /// (head/noise scores come from differently-chunked scoring passes).
+    ///
+    /// Like the pre-existing `sampled_batch` path, the `ScoreIds`
+    /// round-trips carry no epoch: a publish racing this call can shift
+    /// a worker's local-id mapping under the pinned layout (see the
+    /// worker-side-pinning caveat on [`RemoteCluster`]; versioned
+    /// worker reads are the ROADMAP follow-on). Drive mutations and
+    /// traffic from one coordinator.
+    fn mince_batch(
+        &self,
+        state: &ClusterState,
+        qs: &[Vec<f32>],
+        k: usize,
+        l: usize,
+        rng: &mut Rng,
+    ) -> Result<Vec<f64>> {
+        let n: usize = state.lens.iter().sum();
+        let heads: Vec<Vec<Hit>> = state.index.top_k_batch(qs, k);
+        let mut scratch = tail::TailScratch::new();
+        // Phase 1: sequential draws (RNG-sequence parity) with every
+        // query's noise scatter submitted immediately, so a batch pays
+        // one scoring wave instead of Q sequential round-trips.
+        // `(head_z, scale, a, scatter)` per query.
+        let mut staged = Vec::with_capacity(qs.len());
+        for (q, head) in qs.iter().zip(&heads) {
+            if head.is_empty() {
+                return Err(remote_err(
+                    ErrorCode::BadRequest,
+                    "MINCE needs a non-empty head (k ≥ 1 and a non-empty store)".to_string(),
+                ));
+            }
+            let head_z = tail::head_sum(head);
+            let k_eff = head.len();
+            tail::sample_tail_ids(n, head, l, rng, &mut scratch);
+            if scratch.indices.is_empty() {
+                // Degenerate: no complement to sample — head sum, like
+                // the in-process estimator.
+                staged.push((head_z, 0.0, vec![], None));
+                continue;
+            }
+            let l_eff = scratch.indices.len();
+            // a_i, b_j with the k(N−k)/l scaling from paper eq. (7).
+            let scale = k_eff as f64 * (n - k_eff) as f64 / l_eff as f64;
+            let a: Vec<f64> = head
+                .iter()
+                .map(|h| (h.score as f64).exp() * scale)
+                .collect();
+            let scatter = self.submit_score_ids(&state.lens, &scratch.indices, q)?;
+            staged.push((head_z, scale, a, Some(scatter)));
+        }
+        // Phase 2: join + solve in query order.
+        let mut out = Vec::with_capacity(qs.len());
+        for (head_z, scale, a, scatter) in staged {
+            let Some(scatter) = scatter else {
+                out.push(head_z);
+                continue;
+            };
+            let b: Vec<f64> = scatter
+                .join()?
+                .into_iter()
+                .map(|s| (s as f64).exp() * scale)
+                .collect();
+            let z0 = head_z.max(1e-12);
+            out.push(mince::solve(&a, &b, z0, Solver::Halley).z);
+        }
+        Ok(out)
+    }
+
+    /// The cluster-wide FMBE for the pinned view's epoch, fitting on
+    /// demand: every worker runs `FitFmbe` **concurrently** (same seed
+    /// and feature count → identical feature draws), the per-shard λ̃
+    /// vectors are summed in worker order, and the estimator is rebuilt
+    /// cluster-side via [`Fmbe::from_lambdas`]. Cached per epoch (the
+    /// remote analogue of the `Router` refit); a publish invalidates it
+    /// and the next FMBE request refits. A fit that races a publish
+    /// (some worker already serving a different epoch) fails with a
+    /// retryable `Busy` error instead of mixing category sets — the
+    /// caller retries against the new epoch.
+    fn fmbe_for(&self, state: &ClusterState) -> Result<Arc<Fmbe>> {
+        self.fmbe
+            .get_or_try_fit(state.epoch, || self.fit_fmbe_cluster(state))
+    }
+
+    fn fit_fmbe_cluster(&self, state: &ClusterState) -> Result<Fmbe> {
+        let cfg = self.fmbe_cfg.clone();
+        if (cfg.p_geom - FmbeConfig::default().p_geom).abs() > 1e-12 {
+            return Err(ClientError::Protocol(format!(
+                "FitFmbe carries only (seed, p_features); p_geom must stay at the \
+                 default {} (got {})",
+                FmbeConfig::default().p_geom,
+                cfg.p_geom
+            )));
+        }
+        let p = cfg.p_features;
+        let in_flight: Vec<_> = self
+            .shards
+            .iter()
+            .map(|shard| shard.submit(Encoded::fit_fmbe(cfg.seed, p as u64)))
+            .collect();
+        let mut lambdas = vec![0f64; p];
+        for (shard, pending) in self.shards.iter().zip(in_flight) {
+            let (epoch, worker) = match pending.join()? {
+                WireResponse::Lambdas { epoch, lambdas } if lambdas.len() == p => {
+                    (epoch, lambdas)
+                }
+                other => return Err(unexpected("fit_fmbe", other)),
+            };
+            if epoch != state.epoch {
+                // Typed + retryable: `Busy` reaches wire clients as-is
+                // (unlike a Protocol error, which the handler would
+                // surface as `Internal`), so callers can tell this
+                // transient race from a server bug and just retry.
+                return Err(remote_err(
+                    ErrorCode::Busy,
+                    format!(
+                        "worker {} fitted FMBE at epoch {epoch}, pinned view is epoch {} \
+                         (publish raced the fit — retry)",
+                        shard.addr(),
+                        state.epoch
+                    ),
+                ));
+            }
+            for (acc, w) in lambdas.iter_mut().zip(&worker) {
+                *acc += w;
+            }
+        }
+        Ok(Fmbe::from_lambdas(self.dim, cfg, lambdas))
     }
 
     /// Two-phase cluster-wide append: the rows join the **last** worker
@@ -567,11 +950,11 @@ impl RemoteCluster {
     pub fn add_categories(&self, rows: &EmbeddingStore) -> Result<u64> {
         let _p = self.publish_lock.lock().unwrap();
         let last = self.shards.len() - 1;
-        self.publish(|s, shard: &RemoteShard, token: u64| {
+        self.publish(|s, token| {
             if s == last {
-                shard.prepare_add(token, rows)
+                Encoded::prepare_add(token, rows.dim() as u64, rows.data())
             } else {
-                shard.prepare_remove(token, &[])
+                Encoded::prepare_remove(token, &[])
             }
         })
     }
@@ -611,62 +994,80 @@ impl RemoteCluster {
             }
             offset += len;
         }
-        self.publish(|s, shard: &RemoteShard, token: u64| {
-            shard.prepare_remove(token, &per_worker[s])
-        })
+        self.publish(|s, token| Encoded::prepare_remove(token, &per_worker[s]))
     }
 
-    /// The two-phase skeleton: prepare on all workers (aborting all on
-    /// the first failure), then commit on all, then refresh the cluster
-    /// view from the workers' manifests.
+    /// The two-phase skeleton: prepare on **all workers concurrently**
+    /// (each worker's phase-1 request is built by `encode_prepare` and
+    /// issued on its I/O slot), join, abort everywhere on any failure;
+    /// then commit on all workers concurrently; then refresh the
+    /// cluster view from the workers' manifests. Fan-out makes publish
+    /// latency the slowest worker's prepare + commit instead of the sum
+    /// over workers (`tests/net_e2e.rs` pins the overlap with a
+    /// slow-worker handler).
     ///
     /// A failed commit RPC is **ambiguous** (the worker may or may not
     /// have published before the response was lost), so it is resolved
     /// rather than blindly retried: the worker's manifest is consulted —
     /// if it already serves the prepared epoch the commit landed and the
     /// lost response is forgotten; otherwise one explicit commit retry
-    /// runs (covering pre-write transport failures, which `Pool::call`
-    /// deliberately does not resend for `Commit`). A worker that still
-    /// fails leaves the cluster out of lockstep; the original error is
-    /// surfaced (never masked by the follow-up refresh) and the next
-    /// `refresh()` keeps reporting the lockstep break until the worker
-    /// recovers.
-    fn publish<F>(&self, prepare: F) -> Result<u64>
+    /// runs (covering pre-write transport failures, which the client
+    /// pool deliberately does not resend for `Commit`). A worker that
+    /// still fails leaves the cluster out of lockstep; the original
+    /// error is surfaced (never masked by the follow-up refresh) and the
+    /// next `refresh()` keeps reporting the lockstep break until the
+    /// worker recovers.
+    fn publish<F>(&self, encode_prepare: F) -> Result<u64>
     where
-        F: Fn(usize, &RemoteShard, u64) -> Result<u64>,
+        F: Fn(usize, u64) -> Encoded,
     {
         let token = self.token.fetch_add(1, Ordering::SeqCst) + 1;
-        let mut attempted = 0usize;
+        // Phase 1: fan the prepares out, then join in worker order.
+        let prepares: Vec<_> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| shard.submit(encode_prepare(s, token)))
+            .collect();
         let mut next_epoch = None;
         let mut failure = None;
-        for (s, shard) in self.shards.iter().enumerate() {
-            // Count the worker as attempted *before* the RPC: a prepare
-            // whose response is lost may still have staged server-side.
-            attempted = s + 1;
-            match prepare(s, shard, token) {
+        for pending in prepares {
+            match pending.join().and_then(to_prepared) {
                 Ok(epoch) => {
                     next_epoch.get_or_insert(epoch);
                 }
                 Err(e) => {
-                    failure = Some(e);
-                    break;
+                    // Keep joining: the remaining prepares are already in
+                    // flight and may have staged server-side.
+                    failure.get_or_insert(e);
                 }
             }
         }
         if let Some(e) = failure {
-            // Abort every worker the prepare phase touched — including
-            // the failed one, whose staging is ambiguous (abort is
-            // token-checked and idempotent, so this clears a possible
-            // orphan instead of wedging all future publishes on Busy).
-            for shard in &self.shards[..attempted] {
-                let _ = shard.abort(token);
+            // Abort every worker — every prepare was issued, and even the
+            // failed one's staging is ambiguous (abort is token-checked
+            // and idempotent, so this clears a possible orphan instead of
+            // wedging all future publishes on Busy). Aborts fan out too.
+            let aborts: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| shard.submit(Encoded::abort(token)))
+                .collect();
+            for pending in aborts {
+                let _ = pending.join();
             }
             return Err(e);
         }
         let next_epoch = next_epoch.expect("at least one worker prepared");
+        // Phase 2: fan the commits out, then join and resolve stragglers.
+        let commits: Vec<_> = self
+            .shards
+            .iter()
+            .map(|shard| shard.submit(Encoded::commit(token)))
+            .collect();
         let mut commit_failure = None;
-        for shard in &self.shards {
-            if let Err(first) = shard.commit(token) {
+        for (shard, pending) in self.shards.iter().zip(commits) {
+            if let Err(first) = pending.join().and_then(to_committed) {
                 // Ambiguous failure: check whether the commit landed.
                 let landed = matches!(shard.manifest(), Ok((_, _, e)) if e == next_epoch);
                 if !landed && shard.commit(token).is_err() {
@@ -721,13 +1122,19 @@ impl RemoteCluster {
         self.refresh()
     }
 
-    /// Re-read every worker's manifest, re-validate lockstep, and
-    /// rebuild the scatter index for the (possibly shifted) layout.
+    /// Re-read every worker's manifest (concurrently), re-validate
+    /// lockstep, and rebuild the scatter index for the (possibly
+    /// shifted) layout.
     pub fn refresh(&self) -> Result<()> {
+        let manifests: Vec<_> = self
+            .shards
+            .iter()
+            .map(|shard| shard.submit(Encoded::manifest()))
+            .collect();
         let mut lens = Vec::with_capacity(self.shards.len());
         let mut epoch = None;
-        for shard in &self.shards {
-            let (len, d, e) = shard.manifest()?;
+        for (shard, pending) in self.shards.iter().zip(manifests) {
+            let (len, d, e) = pending.join().and_then(to_manifest)?;
             if d != self.dim {
                 return Err(ClientError::Protocol(format!(
                     "worker {} switched to dim {d}",
@@ -758,14 +1165,15 @@ impl RemoteCluster {
 }
 
 /// Per-request scoring budget over remote shards (mirror of
-/// `Router::scorings` for the remotely served kinds).
-fn scorings_for(kind: EstimatorKind, k: usize, l: usize, n: usize) -> usize {
+/// `Router::scorings`; `p_features` is the cluster's FMBE feature
+/// count).
+fn scorings_for(kind: EstimatorKind, k: usize, l: usize, n: usize, p_features: usize) -> usize {
     match kind {
         EstimatorKind::Exact => n,
         EstimatorKind::Uniform => l,
         EstimatorKind::Nmimps => k.min(n),
         EstimatorKind::Mimps | EstimatorKind::Mince => (k + l).min(n),
-        EstimatorKind::Fmbe => 0,
+        EstimatorKind::Fmbe => p_features.min(n),
     }
 }
 
@@ -778,6 +1186,8 @@ pub struct ClusterHandler {
 }
 
 impl ClusterHandler {
+    /// Serve estimation from `cluster`; `seed` drives the per-request
+    /// sampling RNG forks.
     pub fn new(cluster: Arc<RemoteCluster>, seed: u64) -> ClusterHandler {
         ClusterHandler {
             cluster,
@@ -806,7 +1216,10 @@ impl ClusterHandler {
         // Fork a per-request RNG (held lock is momentary) so concurrent
         // requests never serialize on the scatter's wire round-trips;
         // non-sampling kinds skip the lock entirely.
-        let mut rng = if matches!(kind, EstimatorKind::Mimps | EstimatorKind::Uniform) {
+        let mut rng = if matches!(
+            kind,
+            EstimatorKind::Mimps | EstimatorKind::Uniform | EstimatorKind::Mince
+        ) {
             self.rng.lock().unwrap().fork()
         } else {
             Rng::seeded(0) // never drawn from
@@ -817,7 +1230,13 @@ impl ClusterHandler {
             Ok(answer) => {
                 // Epoch and scoring budget come from the same pinned
                 // view that produced the answers.
-                let scorings = scorings_for(kind, k, l, answer.len) as u64;
+                let scorings = scorings_for(
+                    kind,
+                    k,
+                    l,
+                    answer.len,
+                    self.cluster.fmbe_config().p_features,
+                ) as u64;
                 let epoch = answer.epoch;
                 WireResponse::Estimates(
                     answer
@@ -907,8 +1326,10 @@ mod tests {
 
     #[test]
     fn scorings_mirror_router() {
-        assert_eq!(scorings_for(EstimatorKind::Exact, 5, 5, 1000), 1000);
-        assert_eq!(scorings_for(EstimatorKind::Mimps, 50, 60, 1000), 110);
-        assert_eq!(scorings_for(EstimatorKind::Nmimps, 2000, 0, 1000), 1000);
+        assert_eq!(scorings_for(EstimatorKind::Exact, 5, 5, 1000, 100), 1000);
+        assert_eq!(scorings_for(EstimatorKind::Mimps, 50, 60, 1000, 100), 110);
+        assert_eq!(scorings_for(EstimatorKind::Mince, 50, 60, 1000, 100), 110);
+        assert_eq!(scorings_for(EstimatorKind::Nmimps, 2000, 0, 1000, 100), 1000);
+        assert_eq!(scorings_for(EstimatorKind::Fmbe, 0, 0, 1000, 100), 100);
     }
 }

@@ -28,6 +28,9 @@ use std::time::Duration;
 /// [`super::remote::ClusterHandler`] (partition server over remote
 /// shards).
 pub trait Handler: Send + Sync + 'static {
+    /// Answer one decoded request. Called concurrently from every
+    /// connection thread; a panic is caught by the server and answered
+    /// with an `Internal` error frame.
     fn handle(&self, req: Request) -> Response;
 }
 
@@ -239,6 +242,8 @@ pub struct ServiceHandler {
 }
 
 impl ServiceHandler {
+    /// Front the given service (shares its metrics sink with the server
+    /// via [`PartitionService::metrics_handle`]).
     pub fn new(svc: Arc<PartitionService>) -> ServiceHandler {
         ServiceHandler { svc }
     }
@@ -333,7 +338,8 @@ impl Handler for ServiceHandler {
             | Request::PrepareAdd { .. }
             | Request::PrepareRemove { .. }
             | Request::Commit { .. }
-            | Request::Abort { .. } => Response::Error {
+            | Request::Abort { .. }
+            | Request::FitFmbe { .. } => Response::Error {
                 code: ErrorCode::Unsupported,
                 message: "shard-worker operation sent to a partition server".to_string(),
             },

@@ -23,10 +23,18 @@
 //! the orphaned token or restarts the worker. Coordinators draw tokens
 //! from process-unique entropy so a replacement coordinator cannot
 //! accidentally commit an orphan.
+//!
+//! Beyond retrieval and publishes, the worker serves the estimator
+//! ops the cluster composes: chained exp-sums (`Exact`), tail scoring
+//! (`ScoreIds`, for the samplers and MINCE's noise draws), and
+//! `FitFmbe` — a local FMBE fit over the worker's rows whose λ̃ vector
+//! the cluster sums with the other workers' (λ̃ is additive over row
+//! partitions; see [`crate::estimators::fmbe::Fmbe::from_lambdas`]).
 
 use super::server::Handler;
 use super::wire::{ErrorCode, Request, Response};
 use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::fmbe::{Fmbe, FmbeConfig};
 use crate::linalg;
 use crate::store::{
     exp_sum_view_batch, exp_sum_view_chain, PendingEpoch, ShardedStore, SnapshotHandle, StoreView,
@@ -225,6 +233,34 @@ impl Handler for ShardWorker {
                 }
                 Response::Aborted
             }
+            Request::FitFmbe { seed, p_features } => {
+                // Cap P so one frame cannot demand an unbounded fit (the
+                // λ̃ response itself is 8·P bytes — 8 MB at the cap).
+                const MAX_FIT_FEATURES: u64 = 1 << 20;
+                if p_features == 0 || p_features > MAX_FIT_FEATURES {
+                    return Self::err(
+                        ErrorCode::BadRequest,
+                        format!("p_features {p_features} outside (0, {MAX_FIT_FEATURES}]"),
+                    );
+                }
+                // Fit over the currently published snapshot; the epoch in
+                // the answer lets the cluster reject a fit that raced a
+                // publish. The feature draw depends only on (seed, d) and
+                // the geometric parameter is protocol-pinned to the
+                // default, so identically configured workers draw the
+                // same maps and their λ̃ vectors sum to the global fit.
+                let snap = self.handle.load();
+                let cfg = FmbeConfig {
+                    p_features: p_features as usize,
+                    seed,
+                    ..Default::default()
+                };
+                let fitted = Fmbe::fit(snap.store.as_ref(), cfg);
+                Response::Lambdas {
+                    epoch: snap.epoch,
+                    lambdas: fitted.lambdas(),
+                }
+            }
             // Partition-server operations don't belong on a shard worker.
             Request::Estimate { .. } | Request::EstimateBatch { .. } => Self::err(
                 ErrorCode::Unsupported,
@@ -380,6 +416,43 @@ mod tests {
             }
         ));
         assert_eq!(w.snapshot_handle().epoch(), 0);
+    }
+
+    /// `FitFmbe` answers the same λ̃ vector a local fit over the
+    /// worker's rows produces, tagged with the published epoch.
+    #[test]
+    fn fit_fmbe_matches_local_fit() {
+        let (w, s) = worker(80, 8);
+        let resp = w.handle(Request::FitFmbe {
+            seed: 5,
+            p_features: 150,
+        });
+        let Response::Lambdas { epoch, lambdas } = resp else {
+            panic!("{resp:?}");
+        };
+        assert_eq!(epoch, 0);
+        let want = Fmbe::fit(
+            &s,
+            FmbeConfig {
+                p_features: 150,
+                seed: 5,
+                ..Default::default()
+            },
+        )
+        .lambdas();
+        assert_eq!(lambdas, want);
+        // Degenerate feature counts are a BadRequest, not a panic.
+        let resp = w.handle(Request::FitFmbe {
+            seed: 5,
+            p_features: 0,
+        });
+        assert!(matches!(
+            resp,
+            Response::Error {
+                code: ErrorCode::BadRequest,
+                ..
+            }
+        ));
     }
 
     #[test]

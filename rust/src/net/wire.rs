@@ -24,6 +24,19 @@
 //!
 //! Golden-byte tests at the bottom freeze the encoding: changing any of
 //! them is a wire-format break and requires a `VERSION` bump.
+//!
+//! The full frame specification — header layout, every op's encoding,
+//! the 4-aligned worker-split contract for bit-exact chained exp-sums,
+//! and the length-bomb limits — lives in `docs/WIRE.md` at the
+//! repository root; it is written so a non-Rust client can be
+//! implemented from the document alone. Keep the two in lockstep: any
+//! change here must update the document (and vice versa).
+//!
+//! Hot-path callers that would otherwise clone payloads into an owned
+//! [`Request`] just to serialize them can build the wire bytes straight
+//! from borrowed data through [`Encoded`] (same bytes, pinned by
+//! `borrowed_encode_matches_owned`), then send via
+//! `Pool::call_encoded` in [`super::client`].
 
 use crate::estimators::EstimatorKind;
 use crate::mips::Hit;
@@ -43,10 +56,16 @@ const HEADER_LEN: usize = 10;
 /// Decode/transport failure.
 #[derive(Debug)]
 pub enum WireError {
+    /// Underlying transport error (socket read/write failed).
     Io(std::io::Error),
+    /// The frame header did not start with [`MAGIC`].
     BadMagic([u8; 4]),
+    /// The frame header carried an unsupported protocol version.
     BadVersion(u16),
+    /// A frame length prefix exceeded [`MAX_FRAME_LEN`].
     FrameTooLarge(usize),
+    /// Undecodable payload: short body, trailing bytes, unknown tag,
+    /// inner length bomb, or a truncated/stalled frame.
     Malformed(String),
 }
 
@@ -74,6 +93,7 @@ impl From<std::io::Error> for WireError {
     }
 }
 
+/// Codec-level result alias.
 pub type Result<T> = std::result::Result<T, WireError>;
 
 /// Typed error codes carried by [`Response::Error`].
@@ -105,6 +125,7 @@ pub enum ErrorCode {
 }
 
 impl ErrorCode {
+    /// Wire representation of the code.
     pub fn as_u16(self) -> u16 {
         match self {
             ErrorCode::Overloaded => 1,
@@ -120,6 +141,8 @@ impl ErrorCode {
         }
     }
 
+    /// Decode a wire code; unrecognized values land in
+    /// [`ErrorCode::Unknown`] instead of failing the frame.
     pub fn from_u16(v: u16) -> ErrorCode {
         match v {
             1 => ErrorCode::Overloaded,
@@ -187,23 +210,44 @@ pub enum Request {
     Commit { token: u64 },
     /// Drop a staged preparation.
     Abort { token: u64 },
+    /// Shard worker: fit FMBE random-feature sums over the worker's
+    /// local rows and return the per-feature λ̃ vector
+    /// ([`Response::Lambdas`]). The feature draw depends only on
+    /// `(seed, dimensionality)` and the geometric parameter is pinned at
+    /// the protocol level to the library default (p = 2), so every
+    /// worker given the same `(seed, p_features)` draws identical
+    /// feature maps and the per-shard λ̃ vectors are additive —
+    /// the cluster sums them into the global fit without shipping rows.
+    FitFmbe {
+        /// Feature-draw seed (the coordinator's `FmbeConfig::seed`).
+        seed: u64,
+        /// Number of random features P (`FmbeConfig::p_features`).
+        p_features: u64,
+    },
 }
 
 /// One estimation answer (mirrors `coordinator::Response`; durations in
 /// nanoseconds).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Estimate {
+    /// The estimated partition value Ẑ(q).
     pub z: f64,
+    /// Estimator that produced the answer.
     pub kind: EstimatorKind,
+    /// Snapshot epoch the answer was computed against.
     pub epoch: u64,
+    /// Category-vector scorings the estimate performed.
     pub scorings: u64,
+    /// Time spent queued before execution, in nanoseconds.
     pub queue_wait_ns: u64,
+    /// Execution time, in nanoseconds.
     pub exec_ns: u64,
 }
 
 /// One response frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
+    /// Liveness ack for [`Request::Ping`].
     Pong,
     /// Serving manifest: categories, dimensionality, snapshot epoch.
     Manifest { len: u64, dim: u64, epoch: u64 },
@@ -220,7 +264,14 @@ pub enum Response {
     Prepared { epoch: u64 },
     /// Phase-2 ack: the epoch now published.
     Committed { epoch: u64 },
+    /// Ack for [`Request::Abort`] (idempotent: also answered when
+    /// nothing was staged under the token).
     Aborted,
+    /// Per-feature λ̃ sums over the worker's local rows for
+    /// [`Request::FitFmbe`], plus the epoch of the snapshot they were
+    /// fitted on (so the cluster can reject a fit that raced a publish).
+    Lambdas { epoch: u64, lambdas: Vec<f64> },
+    /// Typed failure; see [`ErrorCode`] for retry/close semantics.
     Error { code: ErrorCode, message: String },
 }
 
@@ -470,6 +521,7 @@ const REQ_PREPARE_ADD: u8 = 9;
 const REQ_PREPARE_REMOVE: u8 = 10;
 const REQ_COMMIT: u8 = 11;
 const REQ_ABORT: u8 = 12;
+const REQ_FIT_FMBE: u8 = 13;
 
 const RESP_PONG: u8 = 1;
 const RESP_MANIFEST: u8 = 2;
@@ -481,8 +533,10 @@ const RESP_PREPARED: u8 = 7;
 const RESP_COMMITTED: u8 = 8;
 const RESP_ABORTED: u8 = 9;
 const RESP_ERROR: u8 = 10;
+const RESP_LAMBDAS: u8 = 11;
 
 impl Request {
+    /// Serialize to the frame payload (tag byte + body).
     pub fn encode(&self) -> Vec<u8> {
         match self {
             Request::Ping => Enc::with_tag(REQ_PING).buf,
@@ -555,9 +609,17 @@ impl Request {
                 e.u64(*token);
                 e.buf
             }
+            Request::FitFmbe { seed, p_features } => {
+                let mut e = Enc::with_tag(REQ_FIT_FMBE);
+                e.u64(*seed);
+                e.u64(*p_features);
+                e.buf
+            }
         }
     }
 
+    /// Decode one frame payload; rejects unknown tags, short bodies,
+    /// inner length bombs and trailing bytes.
     pub fn decode(payload: &[u8]) -> Result<Request> {
         let mut d = Dec::new(payload);
         let tag = d.u8()?;
@@ -603,6 +665,10 @@ impl Request {
             },
             REQ_COMMIT => Request::Commit { token: d.u64()? },
             REQ_ABORT => Request::Abort { token: d.u64()? },
+            REQ_FIT_FMBE => Request::FitFmbe {
+                seed: d.u64()?,
+                p_features: d.u64()?,
+            },
             other => {
                 return Err(WireError::Malformed(format!("unknown request tag {other}")));
             }
@@ -613,6 +679,7 @@ impl Request {
 }
 
 impl Response {
+    /// Serialize to the frame payload (tag byte + body).
     pub fn encode(&self) -> Vec<u8> {
         match self {
             Response::Pong => Enc::with_tag(RESP_PONG).buf,
@@ -669,6 +736,12 @@ impl Response {
                 e.buf
             }
             Response::Aborted => Enc::with_tag(RESP_ABORTED).buf,
+            Response::Lambdas { epoch, lambdas } => {
+                let mut e = Enc::with_tag(RESP_LAMBDAS);
+                e.u64(*epoch);
+                e.f64s(lambdas);
+                e.buf
+            }
             Response::Error { code, message } => {
                 let mut e = Enc::with_tag(RESP_ERROR);
                 e.u16(code.as_u16());
@@ -678,6 +751,8 @@ impl Response {
         }
     }
 
+    /// Decode one frame payload; rejects unknown tags, short bodies,
+    /// inner length bombs and trailing bytes.
     pub fn decode(payload: &[u8]) -> Result<Response> {
         let mut d = Dec::new(payload);
         let tag = d.u8()?;
@@ -724,6 +799,10 @@ impl Response {
             RESP_PREPARED => Response::Prepared { epoch: d.u64()? },
             RESP_COMMITTED => Response::Committed { epoch: d.u64()? },
             RESP_ABORTED => Response::Aborted,
+            RESP_LAMBDAS => Response::Lambdas {
+                epoch: d.u64()?,
+                lambdas: d.f64s()?,
+            },
             RESP_ERROR => Response::Error {
                 code: ErrorCode::from_u16(d.u16()?),
                 message: d.str()?,
@@ -736,6 +815,128 @@ impl Response {
         };
         d.finish()?;
         Ok(resp)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Borrowed-encode fast path.
+
+/// A request payload encoded straight from **borrowed** data.
+///
+/// The owned [`Request`] variants force hot-path callers to clone their
+/// payloads (query blocks, row shipments, id lists) into the request
+/// value before [`Request::encode`] copies them a second time into the
+/// frame buffer — ~3× the row bytes at peak for a large `PrepareAdd`.
+/// `Encoded`'s constructors write the identical wire bytes (pinned by
+/// the `borrowed_encode_matches_owned` test) in **one** copy, borrowing
+/// every slice.
+///
+/// Also carried: whether the request is safe to silently re-send on a
+/// stale pooled connection ([`Encoded::resend_safe`] — `Commit` is not;
+/// see `Pool::call` in [`super::client`]).
+pub struct Encoded {
+    payload: Vec<u8>,
+    resend_safe: bool,
+}
+
+impl Encoded {
+    fn new(payload: Vec<u8>) -> Encoded {
+        Encoded {
+            payload,
+            resend_safe: true,
+        }
+    }
+
+    /// The frame payload bytes (tag + body).
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Whether a pooled-connection failure may transparently retry this
+    /// request on a fresh connection (`false` only for `Commit`, whose
+    /// effect may have landed before the response was lost).
+    pub fn resend_safe(&self) -> bool {
+        self.resend_safe
+    }
+
+    /// Pre-encoded [`Request::Manifest`] (scalar-only request: this
+    /// just reuses the owned encoder — the borrowed fast path exists
+    /// for slice payloads).
+    pub fn manifest() -> Encoded {
+        Encoded::new(Request::Manifest.encode())
+    }
+
+    /// Borrowed encode of [`Request::TopK`].
+    pub fn top_k(k: u64, queries: &[Vec<f32>]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_TOP_K);
+        e.u64(k);
+        e.queries(queries);
+        Encoded::new(e.buf)
+    }
+
+    /// Borrowed encode of [`Request::ExpSumChain`].
+    pub fn exp_sum_chain(acc: f64, query: &[f32]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_EXP_SUM_CHAIN);
+        e.f64(acc);
+        e.f32s(query);
+        Encoded::new(e.buf)
+    }
+
+    /// Borrowed encode of [`Request::ExpSumChainBatch`].
+    pub fn exp_sum_chain_batch(acc_in: &[f64], queries: &[Vec<f32>]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_EXP_SUM_CHAIN_BATCH);
+        e.f64s(acc_in);
+        e.queries(queries);
+        Encoded::new(e.buf)
+    }
+
+    /// Borrowed encode of [`Request::ScoreIds`].
+    pub fn score_ids(ids: &[u64], query: &[f32]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_SCORE_IDS);
+        e.u64s(ids);
+        e.f32s(query);
+        Encoded::new(e.buf)
+    }
+
+    /// Borrowed encode of [`Request::PrepareAdd`] (`rows` row-major,
+    /// `rows.len()` divisible by `dim`).
+    pub fn prepare_add(token: u64, dim: u64, rows: &[f32]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_PREPARE_ADD);
+        e.u64(token);
+        e.u64(dim);
+        e.f32s(rows);
+        Encoded::new(e.buf)
+    }
+
+    /// Borrowed encode of [`Request::PrepareRemove`].
+    pub fn prepare_remove(token: u64, ids: &[u64]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_PREPARE_REMOVE);
+        e.u64(token);
+        e.u64s(ids);
+        Encoded::new(e.buf)
+    }
+
+    /// Pre-encoded [`Request::Commit`] (scalar-only: reuses the owned
+    /// encoder). Marked **not** resend-safe: the worker may have
+    /// published before a lost response, so a silent re-send could
+    /// double-commit an epoch.
+    pub fn commit(token: u64) -> Encoded {
+        Encoded {
+            payload: Request::Commit { token }.encode(),
+            resend_safe: false,
+        }
+    }
+
+    /// Pre-encoded [`Request::Abort`] (scalar-only: reuses the owned
+    /// encoder).
+    pub fn abort(token: u64) -> Encoded {
+        Encoded::new(Request::Abort { token }.encode())
+    }
+
+    /// Pre-encoded [`Request::FitFmbe`] (scalar-only: reuses the owned
+    /// encoder).
+    pub fn fit_fmbe(seed: u64, p_features: u64) -> Encoded {
+        Encoded::new(Request::FitFmbe { seed, p_features }.encode())
     }
 }
 
@@ -921,6 +1122,114 @@ mod tests {
         assert_eq!(Response::decode(&want).unwrap(), resp);
     }
 
+    /// Golden bytes: a FitFmbe request payload with known fields.
+    #[test]
+    fn golden_fit_fmbe_payload() {
+        let req = Request::FitFmbe {
+            seed: 9,
+            p_features: 400,
+        };
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x0d,                                           // tag
+            0x09, 0, 0, 0, 0, 0, 0, 0,                      // seed = 9
+            0x90, 0x01, 0, 0, 0, 0, 0, 0,                   // p_features = 400
+        ];
+        assert_eq!(req.encode(), want);
+        assert_eq!(Request::decode(&want).unwrap(), req);
+    }
+
+    /// Golden bytes: a Lambdas response payload with known fields.
+    #[test]
+    fn golden_lambdas_payload() {
+        let resp = Response::Lambdas {
+            epoch: 2,
+            lambdas: vec![1.0, -0.5],
+        };
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x0b,                                           // tag
+            0x02, 0, 0, 0, 0, 0, 0, 0,                      // epoch = 2
+            0x02, 0, 0, 0,                                  // 2 lambdas
+            0, 0, 0, 0, 0, 0, 0xf0, 0x3f,                   // 1.0f64
+            0, 0, 0, 0, 0, 0, 0xe0, 0xbf,                   // -0.5f64
+        ];
+        assert_eq!(resp.encode(), want);
+        assert_eq!(Response::decode(&want).unwrap(), resp);
+    }
+
+    /// The borrowed-encode fast path must produce byte-identical
+    /// payloads to the owned [`Request::encode`] — it is the same wire
+    /// format, minus the intermediate clone.
+    #[test]
+    fn borrowed_encode_matches_owned() {
+        let queries = vec![vec![1.0f32, -2.0], vec![0.5, 3.25]];
+        let ids = vec![0u64, 17, 40];
+        let q = vec![0.25f32, -1.5];
+        let rows = vec![1.0f32, 2.0, 3.0, 4.0];
+        let accs = vec![1.5f64, -2.5];
+        let cases: Vec<(Encoded, Request)> = vec![
+            (Encoded::manifest(), Request::Manifest),
+            (
+                Encoded::top_k(7, &queries),
+                Request::TopK {
+                    k: 7,
+                    queries: queries.clone(),
+                },
+            ),
+            (
+                Encoded::exp_sum_chain(12.5, &q),
+                Request::ExpSumChain {
+                    acc: 12.5,
+                    query: q.clone(),
+                },
+            ),
+            (
+                Encoded::exp_sum_chain_batch(&accs, &queries),
+                Request::ExpSumChainBatch {
+                    acc_in: accs.clone(),
+                    queries: queries.clone(),
+                },
+            ),
+            (
+                Encoded::score_ids(&ids, &q),
+                Request::ScoreIds {
+                    ids: ids.clone(),
+                    query: q.clone(),
+                },
+            ),
+            (
+                Encoded::prepare_add(3, 2, &rows),
+                Request::PrepareAdd {
+                    token: 3,
+                    dim: 2,
+                    rows: rows.clone(),
+                },
+            ),
+            (
+                Encoded::prepare_remove(4, &ids),
+                Request::PrepareRemove {
+                    token: 4,
+                    ids: ids.clone(),
+                },
+            ),
+            (Encoded::commit(5), Request::Commit { token: 5 }),
+            (Encoded::abort(6), Request::Abort { token: 6 }),
+            (
+                Encoded::fit_fmbe(9, 400),
+                Request::FitFmbe {
+                    seed: 9,
+                    p_features: 400,
+                },
+            ),
+        ];
+        for (enc, req) in cases {
+            assert_eq!(enc.payload(), req.encode().as_slice(), "{req:?}");
+        }
+        assert!(!Encoded::commit(1).resend_safe(), "Commit must not resend");
+        assert!(Encoded::prepare_add(1, 2, &rows).resend_safe());
+    }
+
     #[test]
     fn request_roundtrips() {
         let reqs = vec![
@@ -965,6 +1274,10 @@ mod tests {
             },
             Request::Commit { token: 9 },
             Request::Abort { token: 11 },
+            Request::FitFmbe {
+                seed: u64::MAX,
+                p_features: 10_000,
+            },
         ];
         for req in reqs {
             let got = Request::decode(&req.encode()).unwrap();
@@ -995,6 +1308,10 @@ mod tests {
             Response::Prepared { epoch: 2 },
             Response::Committed { epoch: 2 },
             Response::Aborted,
+            Response::Lambdas {
+                epoch: 5,
+                lambdas: vec![0.0, -1e300, 42.5],
+            },
             Response::Error {
                 code: ErrorCode::Unknown(999),
                 message: "later version says hi".to_string(),

@@ -4,6 +4,13 @@
 //!   `RemoteCluster` over UDS is **bit-identical** to the in-process
 //!   `ShardedStore` answer for S ∈ {1, 2, 4} (4-aligned worker splits —
 //!   see `net::remote` module docs for the alignment contract).
+//! * **Acceptance**: remote MINCE and FMBE match the in-process
+//!   estimators on identical seeds for S ∈ {1, 2, 4} (MINCE to float
+//!   tolerance — identical draws, differently-chunked scoring passes;
+//!   FMBE bit-identical at S = 1, summation-order tolerance above).
+//! * **Acceptance**: `RemoteCluster::publish` issues all worker
+//!   prepares concurrently — a slow-worker handler proves the prepare
+//!   windows overlap and publish latency is max-not-sum.
 //! * **Acceptance**: a malformed / truncated frame closes the
 //!   connection with an error response; the server keeps serving.
 //! * `PartitionClient` ↔ `ServiceHandler` mirrors the in-process
@@ -20,11 +27,14 @@ use std::sync::Arc;
 use zest::coordinator::{PartitionService, Request, Router, ServiceConfig, ServiceMetrics};
 use zest::data::embeddings::EmbeddingStore;
 use zest::data::synth::{generate, SynthConfig};
-use zest::estimators::{exact::Exact, mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
+use zest::estimators::fmbe::{Fmbe, FmbeConfig};
+use zest::estimators::{
+    exact::Exact, mimps::Mimps, mince::Mince, EstimateContext, Estimator, EstimatorKind,
+};
 use zest::mips::brute::BruteIndex;
 use zest::net::client::{ClientConfig, ClientError, PartitionClient};
 use zest::net::remote::{aligned_split, ClusterHandler, RemoteCluster};
-use zest::net::server::{Server, ServerConfig, ServiceHandler};
+use zest::net::server::{Handler, Server, ServerConfig, ServiceHandler};
 use zest::net::shard::ShardWorker;
 use zest::net::{wire, Addr};
 use zest::store::{exp_sum_view, ShardedStore, SnapshotHandle, StoreView};
@@ -110,6 +120,185 @@ fn remote_exact_bit_identical_over_uds() {
         for server in servers {
             server.shutdown();
         }
+    }
+}
+
+/// ACCEPTANCE: remote MINCE and FMBE — the two estimators PR 3 could
+/// not serve from a remote shard set — match the in-process estimators
+/// on identical seeds for S ∈ {1, 2, 4}.
+///
+/// * MINCE consumes the RNG in exactly the in-process sequence (head
+///   from the scatter, noise via `tail::sample_tail_ids`, scored
+///   remotely) so the draws are identical; answers agree to float
+///   tolerance because head/noise scores come from differently-chunked
+///   scoring passes.
+/// * FMBE is fitted per worker (`FitFmbe`) and the λ̃ vectors summed
+///   cluster-side: bit-identical to a monolithic fit at S = 1, equal to
+///   f64 summation-order tolerance for S > 1.
+#[test]
+fn remote_mince_and_fmbe_match_in_process() {
+    let s = store(600, 16);
+    let qs: Vec<Vec<f32>> = (0..3).map(|i| s.row(i * 190 + 7).to_vec()).collect();
+    let (k, l, seed) = (40usize, 60usize, 123u64);
+    let fmbe_cfg = FmbeConfig {
+        p_features: 400,
+        seed: 9,
+        ..Default::default()
+    };
+
+    // In-process references.
+    let mono = BruteIndex::new(&s);
+    let want_mince: Vec<f64> = {
+        let mut rng = Rng::seeded(seed);
+        let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+        Mince::new(k, l).estimate_batch(&mut ctx, &qs)
+    };
+    let want_fmbe: Vec<f64> = Fmbe::fit(&s, fmbe_cfg.clone()).estimate_queries(&qs);
+
+    for count in [1usize, 2, 4] {
+        let (servers, addrs) = spawn_workers(&s, count, "mincefmbe");
+        let cluster = RemoteCluster::connect(&addrs, ClientConfig::default())
+            .unwrap()
+            .with_fmbe_config(fmbe_cfg.clone());
+
+        let mut rng = Rng::seeded(seed);
+        let mince = cluster
+            .estimate_batch(EstimatorKind::Mince, k, l, &qs, &mut rng)
+            .unwrap();
+        assert_eq!(mince.epoch, 0);
+        for (qi, (got, want)) in mince.zs.iter().zip(&want_mince).enumerate() {
+            let rel = ((got - want) / want).abs();
+            assert!(
+                rel < 2e-4,
+                "S={count} q{qi}: remote MINCE {got} vs in-process {want} (rel {rel})"
+            );
+        }
+
+        let mut rng = Rng::seeded(0); // FMBE draws nothing from it
+        let fmbe = cluster
+            .estimate_batch(EstimatorKind::Fmbe, 0, 0, &qs, &mut rng)
+            .unwrap();
+        for (qi, (got, want)) in fmbe.zs.iter().zip(&want_fmbe).enumerate() {
+            if count == 1 {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "S=1 q{qi}: remote FMBE {got} vs in-process {want}"
+                );
+            } else {
+                let rel = ((got - want) / want).abs();
+                assert!(
+                    rel < 1e-5,
+                    "S={count} q{qi}: remote FMBE {got} vs in-process {want} (rel {rel})"
+                );
+            }
+        }
+        // Second call answers from the epoch-tagged cached fit (same bits).
+        let again = cluster
+            .estimate_batch(EstimatorKind::Fmbe, 0, 0, &qs, &mut Rng::seeded(0))
+            .unwrap();
+        for (a, b) in again.zs.iter().zip(&fmbe.zs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        drop(cluster); // release pooled connections before joining
+        for server in servers {
+            server.shutdown();
+        }
+    }
+}
+
+/// ACCEPTANCE: the two-phase publish fans out: all worker prepares are
+/// in flight **concurrently**. Every worker's prepare sleeps `DELAY`;
+/// per-worker timestamps recorded by the test handler must pairwise
+/// overlap, and the whole publish must cost ~max, not Σ, of the worker
+/// delays.
+#[test]
+fn publish_prepares_overlap_across_workers() {
+    const WORKERS: usize = 3;
+    const DELAY: std::time::Duration = std::time::Duration::from_millis(300);
+
+    /// Wraps a [`ShardWorker`], sleeping in every `Prepare*` and logging
+    /// `(worker, start, end)` of the delayed handling window.
+    struct SlowPrepare {
+        inner: ShardWorker,
+        id: usize,
+        log: Arc<std::sync::Mutex<Vec<(usize, std::time::Instant, std::time::Instant)>>>,
+    }
+
+    impl Handler for SlowPrepare {
+        fn handle(&self, req: wire::Request) -> wire::Response {
+            let is_prepare = matches!(
+                req,
+                wire::Request::PrepareAdd { .. } | wire::Request::PrepareRemove { .. }
+            );
+            if !is_prepare {
+                return self.inner.handle(req);
+            }
+            let start = std::time::Instant::now();
+            std::thread::sleep(DELAY);
+            let resp = self.inner.handle(req);
+            self.log
+                .lock()
+                .unwrap()
+                .push((self.id, start, std::time::Instant::now()));
+            resp
+        }
+    }
+
+    let s = store(240, 8);
+    let log = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for (id, block) in aligned_split(&s, WORKERS).into_iter().enumerate() {
+        let addr = sock_addr(&format!("overlap{id}"));
+        let server = Server::serve(
+            &addr,
+            Arc::new(SlowPrepare {
+                inner: ShardWorker::new(block),
+                id,
+                log: log.clone(),
+            }),
+            ServerConfig::default(),
+            Arc::new(ServiceMetrics::new()),
+        )
+        .unwrap();
+        addrs.push(server.local_addr().clone());
+        servers.push(server);
+    }
+    let cluster = RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap();
+
+    let added = generate(&SynthConfig {
+        n: 8,
+        d: 8,
+        seed: 3,
+        ..SynthConfig::tiny()
+    });
+    let t0 = std::time::Instant::now();
+    assert_eq!(cluster.add_categories(&added).unwrap(), 1);
+    let elapsed = t0.elapsed();
+
+    let entries = log.lock().unwrap().clone();
+    assert_eq!(entries.len(), WORKERS, "{entries:?}");
+    // Latency is max-over-workers: a sequential prepare loop would cost
+    // ≥ 3 × DELAY (900 ms) before commits even start.
+    assert!(
+        elapsed < DELAY * 5 / 2,
+        "publish took {elapsed:?}; sequential would be ≥ {:?}",
+        DELAY * WORKERS as u32
+    );
+    // Every pair of prepare windows overlaps: the last one to start
+    // began before the first one ended.
+    let latest_start = entries.iter().map(|e| e.1).max().unwrap();
+    let earliest_end = entries.iter().map(|e| e.2).min().unwrap();
+    assert!(
+        latest_start < earliest_end,
+        "prepare windows did not overlap: {entries:?}"
+    );
+
+    drop(cluster);
+    for server in servers {
+        server.shutdown();
     }
 }
 
@@ -291,7 +480,16 @@ fn client_mirrors_in_process_service_over_uds() {
 fn cluster_served_estimates_match_in_process() {
     let s = store(600, 16);
     let (workers, addrs) = spawn_workers(&s, 2, "cluster");
-    let cluster = Arc::new(RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap());
+    let fmbe_cfg = FmbeConfig {
+        p_features: 300,
+        seed: 4,
+        ..Default::default()
+    };
+    let cluster = Arc::new(
+        RemoteCluster::connect(&addrs, ClientConfig::default())
+            .unwrap()
+            .with_fmbe_config(fmbe_cfg.clone()),
+    );
     let seed = 11u64;
     let addr = sock_addr("front");
     let server = Server::serve(
@@ -345,25 +543,24 @@ fn cluster_served_estimates_match_in_process() {
     let rel = ((remote_m.z - want_m) / want_m).abs();
     assert!(rel < 1e-5, "remote MIMPS {} vs in-process {want_m}", remote_m.z);
 
-    // Unsupported kinds are a typed error, not a wrong answer.
-    let err = client
+    // FMBE: the full client → server → FitFmbe-fan-out path answers,
+    // matching an in-process fit to λ̃ summation-order tolerance.
+    let remote_f = client
         .estimate(Request {
             query: q,
             kind: EstimatorKind::Fmbe,
             k: 0,
             l: 0,
         })
-        .unwrap_err();
+        .unwrap();
+    let want_f = Fmbe::fit(&s, fmbe_cfg).estimate_query(&s.row(42).to_vec());
+    let rel = ((remote_f.z - want_f) / want_f).abs();
     assert!(
-        matches!(
-            err,
-            ClientError::Remote {
-                code: wire::ErrorCode::Unsupported,
-                ..
-            }
-        ),
-        "{err}"
+        rel < 1e-5,
+        "remote FMBE {} vs in-process {want_f} (rel {rel})",
+        remote_f.z
     );
+    assert_eq!(remote_f.scorings, 300, "FMBE scorings mirror the router");
 
     drop(client); // release pooled connections before joining
     server.shutdown(); // dropping the handler releases its worker pools

@@ -284,7 +284,7 @@ fn prop_wire_codec_roundtrips() {
     }
 
     check(200, |rng| {
-        let req = match rng.below(12) {
+        let req = match rng.below(13) {
             0 => Request::Ping,
             1 => Request::Manifest,
             2 => Request::Estimate {
@@ -327,6 +327,10 @@ fn prop_wire_codec_roundtrips() {
             10 => Request::Commit {
                 token: rng.next_u64(),
             },
+            11 => Request::FitFmbe {
+                seed: rng.next_u64(),
+                p_features: rng.below(100_000) as u64,
+            },
             _ => Request::Abort {
                 token: rng.next_u64(),
             },
@@ -341,7 +345,7 @@ fn prop_wire_codec_roundtrips() {
             return Err(format!("request mangled: {req:?} → {got:?}"));
         }
 
-        let resp = match rng.below(10) {
+        let resp = match rng.below(11) {
             0 => Response::Pong,
             1 => Response::Manifest {
                 len: rng.next_u64() >> 20,
@@ -381,6 +385,10 @@ fn prop_wire_codec_roundtrips() {
                 epoch: rng.below(100) as u64,
             },
             8 => Response::Aborted,
+            9 => Response::Lambdas {
+                epoch: rng.below(100) as u64,
+                lambdas: (0..rng.below(16)).map(|_| rng.normal() * 1e6).collect(),
+            },
             _ => Response::Error {
                 code: ErrorCode::from_u16((rng.below(12) + 1) as u16),
                 message: format!("case {} says λ̃ ≠ Z", rng.below(1000)),

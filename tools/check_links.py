@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Check that relative links in the given markdown files resolve.
+
+Usage: check_links.py FILE.md [FILE.md ...]
+
+Validates every inline markdown link `[text](target)` whose target is a
+relative path (external URLs and pure #anchors are skipped): the target
+file or directory must exist relative to the linking file's directory.
+Exits non-zero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links only; reference-style definitions are rare in this repo.
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(path: Path) -> list[str]:
+    broken = []
+    text = path.read_text(encoding="utf-8")
+    # Strip fenced code blocks: their bracketed text is not a link.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for match in LINK.finditer(text):
+        target = match.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            broken.append(f"{path}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    broken = []
+    for name in argv:
+        path = Path(name)
+        if not path.exists():
+            broken.append(f"{name}: file not found")
+            continue
+        broken.extend(check(path))
+    for line in broken:
+        print(line, file=sys.stderr)
+    if broken:
+        print(f"{len(broken)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"link check OK ({len(argv)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
