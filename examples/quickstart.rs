@@ -61,8 +61,7 @@ fn main() {
     //    categories into 4 shards, serve through epoch snapshots, and
     //    publish new categories while estimates are in flight.
     use std::sync::Arc;
-    use zest::coordinator::{PartitionService, Request, Router, ServiceConfig};
-    use zest::estimators::EstimatorKind;
+    use zest::coordinator::{EstimateSpec, PartitionService, Router, ServiceConfig};
     use zest::store::{ShardedStore, SnapshotHandle, StoreView};
 
     let handle = Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, 4)));
@@ -75,14 +74,7 @@ fn main() {
     // Pin epoch 0 explicitly — this Arc<Snapshot> stays valid and
     // unchanged no matter how many epochs are published after it.
     let pinned = handle.load();
-    let rx = svc
-        .submit(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let rx = svc.submit(EstimateSpec::new(q.clone())).unwrap();
     // Publish epoch 1 while that request may still be in flight: the
     // batch answering it pins whichever snapshot was current when it
     // started executing — never a half-updated category set.
@@ -101,14 +93,7 @@ fn main() {
         r.epoch,
         StoreView::len(pinned.store.as_ref()),
     );
-    let r2 = svc
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let r2 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
     println!(
         "after the swap: Z={:.3} at epoch {} — the epoch advanced, in-flight answers never \
          mixed category sets",

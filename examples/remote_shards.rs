@@ -18,7 +18,7 @@
 //! ```
 
 use std::sync::Arc;
-use zest::coordinator::{Request, ServiceMetrics};
+use zest::coordinator::{EstimateSpec, ServiceMetrics};
 use zest::data::synth::{generate, SynthConfig};
 use zest::estimators::EstimatorKind;
 use zest::mips::brute::BruteIndex;
@@ -82,14 +82,7 @@ fn main() {
     let client =
         PartitionClient::connect(server.local_addr().clone(), ClientConfig::default()).unwrap();
     let q = store.row(4321).to_vec();
-    let remote = client
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let remote = client.estimate(EstimateSpec::new(q.clone())).unwrap();
     let local = BruteIndex::new(&store).partition(&q);
     println!(
         "Exact over 2 remote shards: Ẑ = {:.6e} (local {:.6e}, exec {:?})",
@@ -97,12 +90,12 @@ fn main() {
     );
 
     let mimps = client
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Mimps,
-            k: 1000,
-            l: 1000,
-        })
+        .estimate(
+            EstimateSpec::new(q.clone())
+                .kind(EstimatorKind::Mimps)
+                .k(1000)
+                .l(1000),
+        )
         .unwrap();
     println!(
         "MIMPS(k=1000,l=1000) remote: Ẑ = {:.6e} ({} scorings vs N = {})",
@@ -119,14 +112,7 @@ fn main() {
         ..Default::default()
     });
     let epoch = cluster.add_categories(&added).expect("two-phase publish");
-    let grown = client
-        .estimate(Request {
-            query: q,
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let grown = client.estimate(EstimateSpec::new(q)).unwrap();
     println!(
         "after add_categories (epoch {epoch}): N = {}, Ẑ = {:.6e} (epoch tag {})",
         cluster.len(),

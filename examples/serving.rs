@@ -57,12 +57,12 @@ fn main() {
                     };
                     let t = std::time::Instant::now();
                     let resp = svc
-                        .estimate(Request {
-                            query: store.row(qi).to_vec(),
-                            kind,
-                            k: 100,
-                            l: 100,
-                        })
+                        .estimate(
+                            EstimateSpec::new(store.row(qi).to_vec())
+                                .kind(kind)
+                                .k(100)
+                                .l(100),
+                        )
                         .expect("estimate");
                     lat.push(t.elapsed());
                     assert!(resp.z.is_finite());

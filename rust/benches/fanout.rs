@@ -36,7 +36,10 @@ const DELAY: Duration = Duration::from_millis(3);
 /// Publishes per measurement (averaged).
 const REPS: usize = 5;
 
-/// Wraps a [`ShardWorker`], sleeping [`DELAY`] on every publish op.
+/// Wraps a [`ShardWorker`], sleeping [`DELAY`] on every publish op and
+/// every exp-sum op (emulating per-op network + compute latency, so the
+/// chained-vs-pipelined `Exact` comparison below sees the same worker
+/// cost model as the publish comparison).
 struct SlowPublish {
     inner: ShardWorker,
 }
@@ -48,6 +51,9 @@ impl Handler for SlowPublish {
             wire::Request::PrepareAdd { .. }
                 | wire::Request::PrepareRemove { .. }
                 | wire::Request::Commit { .. }
+                | wire::Request::ExpSumChain { .. }
+                | wire::Request::ExpSumChainBatch { .. }
+                | wire::Request::ExpSumPart { .. }
         ) {
             std::thread::sleep(DELAY);
         }
@@ -71,8 +77,12 @@ fn main() {
         "seq publish (ms)",
         "par publish (ms)",
         "speedup",
+        "chained Z (ms)",
+        "pipelined Z (ms)",
+        "Z speedup",
     ]);
     let mut rows_json: Vec<Json> = Vec::new();
+    let queries: Vec<Vec<f32>> = (0..4).map(|i| store.row(i * 16).to_vec()).collect();
 
     for s in [2usize, 4, 8] {
         let mut servers = Vec::new();
@@ -123,25 +133,50 @@ fn main() {
             cluster.remove_categories(&[]).expect("publish");
         }
         let par_s = t0.elapsed().as_secs_f64() / REPS as f64;
+
+        // Two-mode Exact: the bit-exact chain pays S sequential delayed
+        // round-trips (≈ S·δ); the pipelined ExpSumPart fan-out pays
+        // the slowest worker (≈ δ) — max-over-workers latency for the
+        // last-ulp cost documented in net::remote.
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            cluster.exp_sum_batch(&queries).expect("chained exp-sum");
+        }
+        let chain_s = t0.elapsed().as_secs_f64() / REPS as f64;
+        let t0 = Instant::now();
+        for _ in 0..REPS {
+            cluster.exp_sum_parts(&queries).expect("pipelined exp-sum");
+        }
+        let pipe_s = t0.elapsed().as_secs_f64() / REPS as f64;
         drop(cluster);
 
         let speedup = seq_s / par_s;
+        let z_speedup = chain_s / pipe_s;
         println!(
-            "workers={s}: sequential {:.2} ms, parallel {:.2} ms => {speedup:.2}x",
+            "workers={s}: publish sequential {:.2} ms vs parallel {:.2} ms => {speedup:.2}x; \
+             exact chained {:.2} ms vs pipelined {:.2} ms => {z_speedup:.2}x",
             seq_s * 1e3,
-            par_s * 1e3
+            par_s * 1e3,
+            chain_s * 1e3,
+            pipe_s * 1e3
         );
         table.row(vec![
             s.to_string(),
             format!("{:.2}", seq_s * 1e3),
             format!("{:.2}", par_s * 1e3),
             format!("{speedup:.2}x"),
+            format!("{:.2}", chain_s * 1e3),
+            format!("{:.2}", pipe_s * 1e3),
+            format!("{z_speedup:.2}x"),
         ]);
         rows_json.push(Json::obj(vec![
             ("workers", Json::num(s as f64)),
             ("seq_publish_s", Json::num(seq_s)),
             ("par_publish_s", Json::num(par_s)),
             ("speedup", Json::num(speedup)),
+            ("chained_expsum_s", Json::num(chain_s)),
+            ("pipelined_expsum_s", Json::num(pipe_s)),
+            ("expsum_speedup", Json::num(z_speedup)),
         ]));
 
         for server in servers {

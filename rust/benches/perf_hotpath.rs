@@ -20,7 +20,7 @@ mod bench_common;
 
 use std::sync::Arc;
 use zest::bench::harness::time;
-use zest::coordinator::{PartitionService, Request, Router, ServiceConfig};
+use zest::coordinator::{EstimateSpec, PartitionService, Router, ServiceConfig};
 use zest::estimators::{mimps::Mimps, EstimateContext, Estimator, EstimatorKind};
 use zest::linalg;
 use zest::mips::brute::BruteIndex;
@@ -321,13 +321,8 @@ fn main() {
         let q = queries[qi % queries.len()].clone();
         qi += 1;
         std::hint::black_box(
-            svc.estimate(Request {
-                query: q,
-                kind: EstimatorKind::Mimps,
-                k: 100,
-                l: 100,
-            })
-            .unwrap(),
+            svc.estimate(EstimateSpec::new(q).kind(EstimatorKind::Mimps).k(100).l(100))
+                .unwrap(),
         );
     });
     println!(
@@ -338,12 +333,12 @@ fn main() {
     let t0 = std::time::Instant::now();
     let receivers: Vec<_> = (0..flood)
         .map(|i| {
-            svc.submit(Request {
-                query: queries[i % queries.len()].clone(),
-                kind: EstimatorKind::Mimps,
-                k: 100,
-                l: 100,
-            })
+            svc.submit(
+                EstimateSpec::new(queries[i % queries.len()].clone())
+                    .kind(EstimatorKind::Mimps)
+                    .k(100)
+                    .l(100),
+            )
             .unwrap()
         })
         .collect();

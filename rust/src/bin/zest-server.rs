@@ -1,13 +1,18 @@
 //! `zest-server` — the partition server: expose estimation over the
-//! wire (UDS or TCP), backed either by a **local** epoch-snapshotted
-//! sharded store or by **remote shard workers**.
+//! wire (UDS or TCP), backed by a **local** epoch-snapshotted sharded
+//! store or by **remote shard workers** — the latter either directly
+//! (`--workers`) or through the full batching service (`--cluster`).
 //!
 //! ```bash
 //! # local serving (the in-process PartitionService behind a socket):
 //! zest-server --listen tcp://127.0.0.1:7070 --synth 100000,128,0 --shards 4
-//! # over two shard-worker processes (cross-process shards):
+//! # direct pass-through to two shard-worker processes (no batcher):
 //! zest-server --listen unix:///tmp/zest.sock \
 //!     --workers unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
+//! # the dynamic batcher + backpressure + ServiceMetrics in front of
+//! # the same worker cluster (PartitionService over a ClusterBackend):
+//! zest-server --listen unix:///tmp/zest.sock \
+//!     --cluster unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
 //! ```
 //!
 //! Prints `READY <addr>` on stdout once listening. Clients speak
@@ -16,7 +21,7 @@
 use anyhow::{bail, Result};
 use std::io::Write as _;
 use std::sync::Arc;
-use zest::coordinator::{PartitionService, Router, ServiceConfig, ServiceMetrics};
+use zest::coordinator::{ClusterBackend, PartitionService, Router, ServiceConfig, ServiceMetrics};
 use zest::net::client::ClientConfig;
 use zest::net::remote::{ClusterHandler, RemoteCluster};
 use zest::net::server::{Handler, Server, ServerConfig, ServiceHandler};
@@ -42,6 +47,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     args.check_known(&[
         "listen",
         "workers",
+        "cluster",
         "data",
         "synth",
         "shards",
@@ -56,16 +62,45 @@ fn run(argv: Vec<String>) -> Result<()> {
     let addr = Addr::parse(&listen)?;
     let seed: u64 = args.get_or("seed", 0);
 
+    let parse_addrs = |list: &str| -> Result<Vec<Addr>> {
+        list.split(',').map(|s| Addr::parse(s.trim())).collect()
+    };
+
     let mut metrics: Option<Arc<ServiceMetrics>> = None;
-    let handler: Arc<dyn Handler> = if args.has("workers") {
-        // Cross-process shards: scatter across worker processes.
-        let worker_addrs: Result<Vec<Addr>> = args
-            .get("workers")
-            .unwrap()
-            .split(',')
-            .map(|s| Addr::parse(s.trim()))
-            .collect();
-        let worker_addrs = worker_addrs?;
+    let handler: Arc<dyn Handler> = if args.has("cluster") {
+        // Cross-process shards behind the full service: the dynamic
+        // batcher, backpressure policy and ServiceMetrics in front of
+        // the remote cluster (PartitionService over a ClusterBackend).
+        let worker_addrs = parse_addrs(args.get("cluster").unwrap())?;
+        let backend = ClusterBackend::connect(&worker_addrs, ClientConfig::default())
+            .map_err(|e| anyhow::anyhow!("connect cluster workers: {e}"))?;
+        let cluster = backend.cluster().clone();
+        log::info!(
+            "serving {} categories × {} dims from {} shard workers (epoch {}) \
+             through the batching service",
+            cluster.len(),
+            cluster.dim(),
+            cluster.num_shards(),
+            cluster.epoch()
+        );
+        let svc = Arc::new(PartitionService::start_with_backend(
+            backend,
+            ServiceConfig {
+                workers: args.get_or(
+                    "service-workers",
+                    zest::util::threadpool::default_threads().min(8),
+                ),
+                queue_capacity: args.get_or("queue-capacity", 1024),
+                seed,
+                ..Default::default()
+            },
+        ));
+        metrics = Some(svc.metrics_handle());
+        Arc::new(ServiceHandler::new(svc))
+    } else if args.has("workers") {
+        // Cross-process shards: scatter across worker processes
+        // (direct pass-through handler, no queue/batcher).
+        let worker_addrs = parse_addrs(args.get("workers").unwrap())?;
         let cluster = Arc::new(
             RemoteCluster::connect(&worker_addrs, ClientConfig::default())
                 .map_err(|e| anyhow::anyhow!("connect workers: {e}"))?,
@@ -81,7 +116,7 @@ fn run(argv: Vec<String>) -> Result<()> {
     } else {
         // Local serving: the in-process service behind a socket.
         let Some(store) = zest::data::rows_from_cli(&args)? else {
-            bail!("one of --workers, --data or --synth is required");
+            bail!("one of --cluster, --workers, --data or --synth is required");
         };
         let shards: usize = args.get_or("shards", 1);
         log::info!(

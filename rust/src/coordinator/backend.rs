@@ -1,0 +1,536 @@
+//! The serving backend seam: one trait every `PartitionService`
+//! front-end answers from, whether the categories live in this process
+//! or in a cluster of shard workers.
+//!
+//! Before this module the crate had **three** parallel serving
+//! front-ends, each re-mirroring `estimate`/`estimate_batch`: the
+//! coordinator's `PartitionService` (batching, backpressure, metrics —
+//! but only over in-process stores via a private enum), the
+//! `RemoteCluster` (cluster estimators, but no queue/batcher/metrics),
+//! and the wire `PartitionClient`. [`PartitionBackend`] collapses that
+//! triplication: the service's dynamic batcher, backpressure policy and
+//! metrics now sit in front of **any** backend, and the three
+//! implementations are
+//!
+//! * [`StaticBackend`] — one immutable monolithic store + MIPS index
+//!   (with the optional PJRT `score_batch` artifact for `Exact`);
+//! * [`SnapshotBackend`] — epoch snapshots of a sharded store behind a
+//!   [`SnapshotHandle`], publishing mutations without pausing in-flight
+//!   batches;
+//! * [`ClusterBackend`] — a [`RemoteCluster`] of shard-worker
+//!   processes, putting the batcher in front of remote serving for the
+//!   first time (`zest-server --cluster …`).
+//!
+//! A backend answers whole **batch groups** — every request in one
+//! [`PartitionBackend::estimate_batch`] call shares one `(kind,
+//! [`GroupParams`])` configuration — and pins one consistent view
+//! (snapshot epoch / cluster layout) per group, reporting the pinned
+//! epoch back so responses name the category set that produced them.
+
+use super::router::Router;
+use crate::data::embeddings::EmbeddingStore;
+use crate::estimators::EstimatorKind;
+use crate::mips::MipsIndex;
+use crate::net::client::{ClientConfig, ClientError};
+use crate::net::remote::RemoteCluster;
+use crate::net::Addr;
+use crate::runtime::{HostTensor, RuntimeHandle};
+use crate::store::{SnapshotHandle, StoreView};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// How an `Exact` request may trade bit-exactness for latency on
+/// backends where the exp-sum spans multiple workers.
+///
+/// In-process backends ignore the mode (their accumulation is always
+/// the bit-pinned kernel chain). Over a [`ClusterBackend`]:
+///
+/// * [`Precision::BitExact`] — the chained exp-sum: S **sequential**
+///   worker round-trips, each continuing the running f64
+///   accumulator(s) in strict global row order. Bit-identical to the
+///   in-process `Exact` kernels (given 4-aligned worker splits).
+/// * [`Precision::Pipelined`] — one `ExpSumPart` fan-out to **all**
+///   workers concurrently; each returns its per-query partial sums and
+///   the cluster reduces them in worker order. Latency is
+///   max-over-workers instead of Σ-over-workers, at the cost of a
+///   different f64 summation grouping: answers are **last-ulp
+///   different** from the chained mode (relative error on the order of
+///   S × f64 ulp; identical bits at S = 1).
+///
+/// Sampling estimators and FMBE are unaffected by the mode (their
+/// remote execution already fans out).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Bit-identical to in-process execution; S sequential round-trips
+    /// for remote `Exact`.
+    #[default]
+    BitExact,
+    /// Concurrent per-worker partials reduced in worker order;
+    /// max-over-workers latency, last-ulp-different `Exact` answers.
+    Pipelined,
+}
+
+/// The per-request knobs a batch group shares (everything of an
+/// [`super::EstimateSpec`] except the query, the kind — groups are
+/// already same-kind — and the deadline, which is per-request).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct GroupParams {
+    /// Head budget (top-k retrieval size); estimator-specific meaning.
+    pub k: usize,
+    /// Tail budget (uniform sample size); estimator-specific meaning.
+    pub l: usize,
+    /// Precision mode for multi-worker `Exact` (see [`Precision`]).
+    pub precision: Precision,
+}
+
+/// A backend failure (wire outage, unsupported publish, artifact
+/// error). The service logs it and drops the group's reply channels;
+/// publish hooks surface it to the caller.
+#[derive(Debug)]
+pub struct BackendError(String);
+
+impl BackendError {
+    /// Wrap a message as a backend failure.
+    pub fn new(msg: impl Into<String>) -> BackendError {
+        BackendError(msg.into())
+    }
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "backend: {}", self.0)
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// One batch group's answers plus the pinned view that produced them.
+#[derive(Clone, Debug)]
+pub struct GroupAnswer {
+    /// Ẑ per query, in request order.
+    pub zs: Vec<f64>,
+    /// Epoch of the pinned view (0 for epoch-less static backends).
+    pub epoch: u64,
+    /// Categories the pinned view served (the `n` of scoring budgets).
+    pub len: usize,
+    /// Per-shard row counts of the pinned view, in shard order — empty
+    /// for monolithic backends. Feeds the service's per-shard metrics.
+    pub shard_lens: Vec<usize>,
+}
+
+/// What a [`super::PartitionService`] answers from: a category set
+/// behind an epoch-pinned batched estimation call, a manifest, and
+/// (where supported) live category mutations.
+///
+/// Implementations must be callable from multiple worker threads
+/// concurrently and must **never panic** on request input — a remote
+/// backend converts transport failures into [`BackendError`].
+pub trait PartitionBackend: Send + Sync + 'static {
+    /// Dimensionality served. Invariant across epochs (mutations cannot
+    /// change d) — the service validates queries against it at submit.
+    fn dim(&self) -> usize;
+
+    /// `(categories, epoch)` currently served — the manifest network
+    /// front-ends answer from.
+    fn serving_info(&self) -> (usize, u64);
+
+    /// Answer one same-`(kind, params)` batch group, pinning one
+    /// consistent view (snapshot / cluster layout) for the whole group.
+    /// Results are in `qs` order.
+    fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        params: GroupParams,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<GroupAnswer, BackendError>;
+
+    /// Category scorings one request of this shape costs (sublinearity
+    /// accounting; `n` is the pinned view's category count).
+    fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize;
+
+    /// Publish hook: append `rows` as new categories, returning the new
+    /// epoch. Backends without mutation support return an error.
+    fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError>;
+
+    /// Publish hook: remove the given global ids (current epoch's
+    /// positions), returning the new epoch.
+    fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError>;
+}
+
+/// Delegation so an already-shared backend (`Arc<dyn PartitionBackend>`
+/// or `Arc<ClusterBackend>` kept for publishes) can be handed to
+/// [`super::PartitionService::start_with_backend`] directly.
+impl<T: PartitionBackend + ?Sized> PartitionBackend for Arc<T> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn serving_info(&self) -> (usize, u64) {
+        (**self).serving_info()
+    }
+
+    fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        params: GroupParams,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<GroupAnswer, BackendError> {
+        (**self).estimate_batch(kind, params, qs, rng)
+    }
+
+    fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
+        (**self).scorings(kind, params, n)
+    }
+
+    fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
+        (**self).add_categories(rows)
+    }
+
+    fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
+        (**self).remove_categories(ids)
+    }
+}
+
+// ---------------------------------------------------------------------
+// StaticBackend
+
+/// One immutable monolithic store + MIPS index (epoch 0 forever).
+/// `Exact` groups ride the AOT PJRT `score_batch` artifact when a
+/// runtime is attached, falling back to the native kernels.
+pub struct StaticBackend {
+    store: Arc<EmbeddingStore>,
+    index: Arc<dyn MipsIndex>,
+    router: Router,
+    runtime: Option<RuntimeHandle>,
+}
+
+impl StaticBackend {
+    /// Serve `store` through `index`, routing estimators via `router`.
+    pub fn new(store: Arc<EmbeddingStore>, index: Arc<dyn MipsIndex>, router: Router) -> Self {
+        StaticBackend {
+            store,
+            index,
+            router,
+            runtime: None,
+        }
+    }
+
+    /// Attach a PJRT runtime: `Exact` groups execute on the AOT
+    /// `score_batch` artifact (native fallback on any failure).
+    pub fn with_runtime(mut self, runtime: Option<RuntimeHandle>) -> Self {
+        self.runtime = runtime;
+        self
+    }
+
+    /// Batched exact partition via the AOT `score_batch` artifact: pad
+    /// the query batch to the artifact's B, stream the category matrix
+    /// in artifact-sized chunks (zero-padding the last one and
+    /// correcting the +1-per-padded-row bias), sum partials per query.
+    fn exact_batch_pjrt(&self, qs: &[Vec<f32>], rt: &RuntimeHandle) -> anyhow::Result<Vec<f64>> {
+        let (n, d) = (self.store.len(), self.store.dim());
+        // Shapes: v (chunk, d_a), qs (b_a, d_a) -> (b_a,)
+        let (chunk, d_a, b_a) = rt_score_batch_dims(rt)?;
+        anyhow::ensure!(d_a == d, "artifact d {d_a} != store d {d}");
+        let mut zs = vec![0f64; qs.len()];
+        for q_chunk in (0..qs.len()).step_by(b_a) {
+            let q_hi = (q_chunk + b_a).min(qs.len());
+            let mut flat = vec![0f32; b_a * d];
+            for (bi, q) in qs[q_chunk..q_hi].iter().enumerate() {
+                anyhow::ensure!(q.len() == d, "query dim mismatch");
+                flat[bi * d..(bi + 1) * d].copy_from_slice(q);
+            }
+            let qs_t = HostTensor::f32(flat, &[b_a, d]);
+            for lo in (0..n).step_by(chunk) {
+                let hi = (lo + chunk).min(n);
+                let rows = hi - lo;
+                let pad = chunk - rows;
+                let mut v = vec![0f32; chunk * d];
+                v[..rows * d].copy_from_slice(self.store.rows(lo, hi));
+                let out = rt.run(
+                    "score_batch",
+                    vec![HostTensor::f32(v, &[chunk, d]), qs_t.clone()],
+                )?;
+                let partials = out[0]
+                    .as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("score_batch returned non-f32"))?;
+                for (bi, z) in zs[q_chunk..q_hi].iter_mut().enumerate() {
+                    // Padded rows contribute exp(0) = 1 each; remove them.
+                    *z += partials[bi] as f64 - pad as f64;
+                }
+            }
+        }
+        Ok(zs)
+    }
+}
+
+impl PartitionBackend for StaticBackend {
+    fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    fn serving_info(&self) -> (usize, u64) {
+        (self.store.len(), 0)
+    }
+
+    fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        params: GroupParams,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<GroupAnswer, BackendError> {
+        // Exact groups ride the PJRT scoring artifact when attached
+        // (the artifact streams one contiguous matrix).
+        if kind == EstimatorKind::Exact {
+            if let Some(rt) = &self.runtime {
+                match self.exact_batch_pjrt(qs, rt) {
+                    Ok(zs) => {
+                        return Ok(GroupAnswer {
+                            zs,
+                            epoch: 0,
+                            len: self.store.len(),
+                            shard_lens: vec![],
+                        })
+                    }
+                    Err(e) => {
+                        log::warn!("PJRT exact batch failed ({e:#}); falling back to native path")
+                    }
+                }
+            }
+        }
+        let zs = self.router.estimate_batch(
+            kind,
+            params.k,
+            params.l,
+            self.store.as_ref(),
+            self.index.as_ref(),
+            0,
+            qs,
+            rng,
+        );
+        Ok(GroupAnswer {
+            zs,
+            epoch: 0,
+            len: self.store.len(),
+            shard_lens: vec![],
+        })
+    }
+
+    fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
+        self.router.scorings(kind, params.k, params.l, n)
+    }
+
+    fn add_categories(&self, _rows: EmbeddingStore) -> Result<u64, BackendError> {
+        Err(BackendError::new(
+            "static backend is immutable (serve a SnapshotBackend for live mutations)",
+        ))
+    }
+
+    fn remove_categories(&self, _ids: &[usize]) -> Result<u64, BackendError> {
+        Err(BackendError::new(
+            "static backend is immutable (serve a SnapshotBackend for live mutations)",
+        ))
+    }
+}
+
+/// score_batch artifact dims cache: (chunk, d, batch). Read once from
+/// the exporter's meta via the runtime's artifacts-dir environment
+/// variable contract.
+fn rt_score_batch_dims(_rt: &RuntimeHandle) -> anyhow::Result<(usize, usize, usize)> {
+    // The handle intentionally carries no meta; the backend reads the
+    // artifacts dir the same way the runtime did.
+    let dir = std::env::var("ZEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let meta = crate::runtime::ArtifactsMeta::load(std::path::Path::new(&dir))?;
+    let (_, args) = meta
+        .graphs
+        .get("score_batch")
+        .ok_or_else(|| anyhow::anyhow!("score_batch not exported"))?;
+    let chunk = args[0].shape[0];
+    let d = args[0].shape[1];
+    let b = args[1].shape[0];
+    Ok((chunk, d, b))
+}
+
+// ---------------------------------------------------------------------
+// SnapshotBackend
+
+/// Epoch snapshots over a sharded store: each batch group pins the
+/// current snapshot for its whole execution, so `add_categories` /
+/// `remove_categories` swap epochs without pausing in-flight work.
+pub struct SnapshotBackend {
+    handle: Arc<SnapshotHandle>,
+    router: Router,
+}
+
+impl SnapshotBackend {
+    /// Serve epoch snapshots published by `handle`; the caller may keep
+    /// its own `Arc<SnapshotHandle>` to publish mutations directly (the
+    /// trait's publish hooks delegate to the same handle).
+    pub fn new(handle: Arc<SnapshotHandle>, router: Router) -> Self {
+        SnapshotBackend { handle, router }
+    }
+
+    /// The underlying snapshot handle (shared, publish-capable).
+    pub fn handle(&self) -> &Arc<SnapshotHandle> {
+        &self.handle
+    }
+}
+
+impl PartitionBackend for SnapshotBackend {
+    fn dim(&self) -> usize {
+        StoreView::dim(self.handle.load().store.as_ref())
+    }
+
+    fn serving_info(&self) -> (usize, u64) {
+        let snap = self.handle.load();
+        (StoreView::len(snap.store.as_ref()), snap.epoch)
+    }
+
+    fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        params: GroupParams,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<GroupAnswer, BackendError> {
+        // Pin one snapshot for the whole group: the group answers from
+        // one consistent category set even if a mutation publishes a
+        // new epoch mid-execution.
+        let pinned = self.handle.load();
+        let view: &dyn StoreView = pinned.store.as_ref();
+        let zs = self.router.estimate_batch(
+            kind,
+            params.k,
+            params.l,
+            view,
+            pinned.index.as_ref(),
+            pinned.epoch,
+            qs,
+            rng,
+        );
+        let shard_lens = view
+            .as_sharded()
+            .map(|s| s.shards().iter().map(|shard| shard.len()).collect())
+            .unwrap_or_default();
+        Ok(GroupAnswer {
+            zs,
+            epoch: pinned.epoch,
+            len: view.len(),
+            shard_lens,
+        })
+    }
+
+    fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
+        self.router.scorings(kind, params.k, params.l, n)
+    }
+
+    fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
+        self.handle
+            .add_categories(rows)
+            .map_err(|e| BackendError::new(e.to_string()))
+    }
+
+    fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
+        self.handle
+            .remove_categories(ids)
+            .map_err(|e| BackendError::new(e.to_string()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// ClusterBackend
+
+/// A [`RemoteCluster`] of shard-worker processes behind the service
+/// seam: the dynamic batcher, backpressure policy and `ServiceMetrics`
+/// in front of cross-process serving. `Exact` groups honor the
+/// request's [`Precision`] mode (chained vs `ExpSumPart` fan-out).
+pub struct ClusterBackend {
+    cluster: Arc<RemoteCluster>,
+}
+
+impl ClusterBackend {
+    /// Connect to every worker and wrap the cluster as a backend.
+    pub fn connect(addrs: &[Addr], cfg: ClientConfig) -> Result<ClusterBackend, ClientError> {
+        Ok(ClusterBackend {
+            cluster: Arc::new(RemoteCluster::connect(addrs, cfg)?),
+        })
+    }
+
+    /// Wrap an existing (possibly shared) cluster handle.
+    pub fn new(cluster: Arc<RemoteCluster>) -> ClusterBackend {
+        ClusterBackend { cluster }
+    }
+
+    /// The wrapped cluster (manifest refreshes, `resolve_token`, …).
+    pub fn cluster(&self) -> &Arc<RemoteCluster> {
+        &self.cluster
+    }
+}
+
+impl PartitionBackend for ClusterBackend {
+    fn dim(&self) -> usize {
+        self.cluster.dim()
+    }
+
+    fn serving_info(&self) -> (usize, u64) {
+        (self.cluster.len(), self.cluster.epoch())
+    }
+
+    fn estimate_batch(
+        &self,
+        kind: EstimatorKind,
+        params: GroupParams,
+        qs: &[Vec<f32>],
+        rng: &mut Rng,
+    ) -> Result<GroupAnswer, BackendError> {
+        // The scatter index's MipsIndex methods panic on wire failures
+        // (the trait has no error channel). In the service's worker
+        // pool that panic would kill the worker thread, so convert it
+        // to a BackendError here — the serving analogue of the
+        // net::Server catch_unwind boundary.
+        let answer = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.cluster
+                .estimate_batch(kind, params.k, params.l, params.precision, qs, rng)
+        }))
+        .map_err(|p| {
+            let msg = p
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| p.downcast_ref::<&str>().copied())
+                .unwrap_or("no panic message");
+            BackendError::new(format!("remote scatter panicked: {msg}"))
+        })?
+        .map_err(|e| BackendError::new(e.to_string()))?;
+        Ok(GroupAnswer {
+            zs: answer.zs,
+            epoch: answer.epoch,
+            len: answer.len,
+            shard_lens: answer.shard_lens,
+        })
+    }
+
+    fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
+        // The one cluster-serving cost table, shared with ClusterHandler.
+        crate::net::remote::scorings_for(
+            kind,
+            params.k,
+            params.l,
+            n,
+            self.cluster.fmbe_config().p_features,
+        )
+    }
+
+    fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
+        self.cluster
+            .add_categories(&rows)
+            .map_err(|e| BackendError::new(e.to_string()))
+    }
+
+    fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
+        self.cluster
+            .remove_categories(ids)
+            .map_err(|e| BackendError::new(e.to_string()))
+    }
+}

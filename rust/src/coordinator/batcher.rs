@@ -6,6 +6,10 @@
 //! Policy: close a batch when it reaches `max_batch` requests of one
 //! kind, or when `max_wait` elapsed since the oldest queued request —
 //! the standard latency/throughput trade every dynamic batcher makes.
+//! Request deadlines are enforced by the batcher *thread* at drain time
+//! (see `PartitionService`): a closed batch is swept for requests whose
+//! `EstimateSpec::deadline` passed while queued before it reaches a
+//! worker.
 
 use super::service::QueuedRequest;
 use crate::estimators::EstimatorKind;
@@ -16,7 +20,9 @@ use std::time::{Duration, Instant};
 /// Batching policy knobs.
 #[derive(Clone, Debug)]
 pub struct BatcherConfig {
+    /// Close a batch once this many same-kind requests are buffered.
     pub max_batch: usize,
+    /// Flush a partial batch this long after its oldest request.
     pub max_wait: Duration,
 }
 
@@ -34,7 +40,9 @@ impl Default for BatcherConfig {
 
 /// A closed batch: same-kind requests ready for one worker.
 pub struct Batch {
+    /// The estimator kind every member shares.
     pub kind: EstimatorKind,
+    /// The batched requests, in arrival order.
     pub requests: Vec<QueuedRequest>,
 }
 
@@ -49,6 +57,7 @@ pub struct BatchAssembler {
 }
 
 impl BatchAssembler {
+    /// An assembler with empty per-kind buffers.
     pub fn new(cfg: BatcherConfig) -> Self {
         BatchAssembler {
             cfg,
@@ -87,7 +96,7 @@ impl BatchAssembler {
         let deadline = if self.total_pending() == 0 {
             match rx.recv() {
                 Ok(req) => {
-                    let kind = req.request.kind;
+                    let kind = req.spec.kind;
                     self.pending.entry(kind).or_default().push(req);
                     Instant::now() + self.cfg.max_wait
                 }
@@ -107,7 +116,7 @@ impl BatchAssembler {
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(req) => {
-                    let kind = req.request.kind;
+                    let kind = req.spec.kind;
                     self.pending.entry(kind).or_default().push(req);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -124,17 +133,12 @@ impl BatchAssembler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::service::{QueuedRequest, Request};
+    use crate::coordinator::service::{EstimateSpec, QueuedRequest};
 
     fn req(kind: EstimatorKind) -> QueuedRequest {
         let (tx, _rx) = mpsc::channel();
         QueuedRequest {
-            request: Request {
-                query: vec![0.0; 4],
-                kind,
-                k: 10,
-                l: 10,
-            },
+            spec: EstimateSpec::new(vec![0.0; 4]).kind(kind).k(10).l(10),
             reply: tx,
             enqueued: Instant::now(),
         }
@@ -190,7 +194,7 @@ mod tests {
         let mut asm = BatchAssembler::new(cfg);
         let mut sizes = std::collections::HashMap::new();
         while let Some(b) = asm.next_batch(&rx) {
-            assert!(b.requests.iter().all(|r| r.request.kind == b.kind));
+            assert!(b.requests.iter().all(|r| r.spec.kind == b.kind));
             *sizes.entry(b.kind).or_insert(0) += b.requests.len();
         }
         assert_eq!(sizes[&EstimatorKind::Mimps], 2);

@@ -11,6 +11,13 @@ pub struct ServiceMetrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     shed: AtomicU64,
+    /// Requests dropped for an expired `EstimateSpec::deadline` —
+    /// rejected at submit (already expired) or shed by the batcher at
+    /// drain time.
+    deadline_shed: AtomicU64,
+    /// Batch groups whose backend call failed (wire outage, artifact
+    /// error); every member's reply channel was dropped unanswered.
+    backend_errors: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     /// Wall-clock nanoseconds spent executing batches (not queueing) and
@@ -75,18 +82,34 @@ pub struct ShardStat {
 const RESERVOIR: usize = 65_536;
 
 impl ServiceMetrics {
+    /// A zeroed sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// One request accepted into the queue.
     pub fn on_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request rejected by the shedding backpressure policy.
     pub fn on_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `count` requests dropped for an expired deadline (at submit or
+    /// by the batcher at drain time).
+    pub fn on_deadline_shed(&self, count: usize) {
+        self.deadline_shed
+            .fetch_add(count as u64, Ordering::Relaxed);
+    }
+
+    /// One batch group failed in the backend (members unanswered).
+    pub fn on_backend_error(&self) {
+        self.backend_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One batch of `size` requests drained toward the workers.
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests
@@ -169,6 +192,8 @@ impl ServiceMetrics {
         self.net_wire_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request answered: its queue wait and (shared) group
+    /// execution time land in the latency reservoirs.
     pub fn on_complete(&self, queue_wait: Duration, exec: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         let mut q = self.queue_ns.lock().unwrap();
@@ -182,6 +207,7 @@ impl ServiceMetrics {
         }
     }
 
+    /// A point-in-time copy of every counter and latency percentile.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let pct = |v: &Mutex<Vec<u64>>, p: f64| -> Duration {
             let mut s = v.lock().unwrap().clone();
@@ -196,6 +222,8 @@ impl ServiceMetrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            deadline_shed: self.deadline_shed.load(Ordering::Relaxed),
+            backend_errors: self.backend_errors.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             mean_batch_size: {
                 let b = self.batches.load(Ordering::Relaxed);
@@ -266,10 +294,20 @@ pub struct NetStats {
 /// Point-in-time view of the service counters.
 #[derive(Clone, Debug)]
 pub struct MetricsSnapshot {
+    /// Requests accepted into the queue.
     pub submitted: u64,
+    /// Requests answered.
     pub completed: u64,
+    /// Requests rejected by the shedding backpressure policy.
     pub shed: u64,
+    /// Requests dropped for an expired deadline (at submit or at the
+    /// batcher's drain-time sweep).
+    pub deadline_shed: u64,
+    /// Batch groups whose backend call failed (members unanswered).
+    pub backend_errors: u64,
+    /// Batches drained toward the workers.
     pub batches: u64,
+    /// Mean drained-batch size.
     pub mean_batch_size: f64,
     /// Requests per second across executed batch groups (execution time
     /// only — queue wait excluded). 0.0 until a batch has executed.
@@ -281,9 +319,13 @@ pub struct MetricsSnapshot {
     pub shard_stats: Vec<ShardStat>,
     /// Network-front-end counters; all zero without a `net::Server`.
     pub net: NetStats,
+    /// Median queue wait.
     pub queue_p50: Duration,
+    /// 95th-percentile queue wait.
     pub queue_p95: Duration,
+    /// Median batch-group execution time.
     pub exec_p50: Duration,
+    /// 95th-percentile batch-group execution time.
     pub exec_p95: Duration,
 }
 
@@ -304,6 +346,12 @@ impl std::fmt::Display for MetricsSnapshot {
             self.exec_p50,
             self.exec_p95
         )?;
+        if self.deadline_shed > 0 {
+            write!(f, " deadline_shed={}", self.deadline_shed)?;
+        }
+        if self.backend_errors > 0 {
+            write!(f, " backend_errors={}", self.backend_errors)?;
+        }
         if !self.shard_stats.is_empty() {
             write!(f, " epoch={} shards=[", self.epoch)?;
             for (i, s) in self.shard_stats.iter().enumerate() {
@@ -374,9 +422,25 @@ mod tests {
     }
 
     #[test]
+    fn deadline_and_backend_counters_accumulate() {
+        let m = ServiceMetrics::new();
+        m.on_deadline_shed(3);
+        m.on_deadline_shed(1);
+        m.on_backend_error();
+        let s = m.snapshot();
+        assert_eq!(s.deadline_shed, 4);
+        assert_eq!(s.backend_errors, 1);
+        let text = s.to_string();
+        assert!(text.contains("deadline_shed=4"), "{text}");
+        assert!(text.contains("backend_errors=1"), "{text}");
+    }
+
+    #[test]
     fn empty_snapshot_is_zeroed() {
         let s = ServiceMetrics::new().snapshot();
         assert_eq!(s.completed, 0);
+        assert_eq!(s.deadline_shed, 0);
+        assert_eq!(s.backend_errors, 0);
         assert_eq!(s.queue_p95, Duration::ZERO);
         assert_eq!(s.mean_batch_size, 0.0);
         assert_eq!(s.batch_throughput_rps, 0.0);

@@ -1,36 +1,55 @@
-//! L3 coordinator: the serving system around the estimators.
+//! L4 coordinator: the serving system around the estimators.
 //!
-//! Shape (vLLM-router-like, scaled to this paper): requests — (query
-//! vector, estimator kind, k, l) — enter a **bounded** queue after
-//! submit-time dimensionality validation; a batcher thread drains it
-//! under a max-batch/max-delay policy and groups requests by estimator
-//! kind; a worker pool executes each drained batch as **one**
-//! `Estimator::estimate_batch` call per (k, l) group — a single batched
-//! retrieval/scoring pass (multi-query GEMM on the brute index) instead
-//! of a per-request loop. `Exact` requests ride the AOT-compiled PJRT
-//! `score_batch` artifact when a runtime is attached (monolithic
-//! serving).
+//! Shape (vLLM-router-like, scaled to this paper): requests — an
+//! [`EstimateSpec`] built fluently from a query vector (estimator kind,
+//! k/l budgets, [`Precision`] mode, optional deadline) — enter a
+//! **bounded** queue after submit-time dimensionality validation; a
+//! batcher thread drains it under a max-batch/max-delay policy, sheds
+//! requests whose deadline expired while queued, and groups the rest by
+//! estimator kind; a worker pool executes each drained batch as **one**
+//! [`PartitionBackend::estimate_batch`] call per
+//! [`backend::GroupParams`] group — a single batched retrieval/scoring
+//! pass (multi-query GEMM on the brute index) instead of a per-request
+//! loop.
 //!
-//! Sharded serving ([`PartitionService::start_sharded`]): workers answer
-//! from epoch snapshots of a [`crate::store::ShardedStore`]. Each
-//! drained batch pins the current `Arc<Snapshot>` for its whole
-//! execution and scatters its retrieval pass across the snapshot's
-//! shards in parallel (inside
-//! [`crate::mips::sharded::ShardedIndex::top_k_batch`], on the scoped
-//! thread pool); `add_categories` / `remove_categories` on the
-//! [`crate::store::SnapshotHandle`] publish new epochs without pausing
-//! in-flight batches. Metrics track queue wait, execution time, shed
-//! load, per-batch execution throughput, the serving epoch, and
-//! per-shard scorings/exec time.
+//! What the workers answer from is a [`PartitionBackend`] — the seam
+//! that lets one batching/backpressure/metrics front-end serve every
+//! category-set topology:
+//!
+//! * [`backend::StaticBackend`] — an immutable monolithic store (the
+//!   PJRT `score_batch` artifact rides `Exact` groups when attached);
+//! * [`backend::SnapshotBackend`] — epoch snapshots of a sharded store:
+//!   each batch group pins the current `Arc<Snapshot>` for its whole
+//!   execution and scatters across the snapshot's shards in parallel
+//!   (inside [`crate::mips::sharded::ShardedIndex::top_k_batch`]);
+//!   `add_categories` / `remove_categories` publish new epochs without
+//!   pausing in-flight batches;
+//! * [`backend::ClusterBackend`] — a [`crate::net::remote::RemoteCluster`]
+//!   of shard-worker processes, so the dynamic batcher and
+//!   `ServiceMetrics` front remote serving too
+//!   ([`PartitionService::start_with_backend`]).
+//!
+//! Metrics track queue wait, execution time, shed load (backpressure
+//! and deadline), per-batch execution throughput, backend failures, the
+//! serving epoch, and per-shard scorings/exec time.
 
+// The serving API is the crate's outward face; every public item
+// carries its contract in docs (CI builds rustdoc with warnings denied).
+#![warn(missing_docs)]
+
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod service;
 
+pub use backend::{
+    BackendError, ClusterBackend, GroupAnswer, GroupParams, PartitionBackend, Precision,
+    SnapshotBackend, StaticBackend,
+};
 pub use batcher::{Batch, BatcherConfig};
 pub use metrics::{MetricsSnapshot, NetStats, ServiceMetrics, ShardStat};
 pub use router::{EpochCache, Router};
 pub use service::{
-    BackpressurePolicy, PartitionService, Request, Response, ServiceConfig, SubmitError,
+    BackpressurePolicy, EstimateSpec, PartitionService, Response, ServiceConfig, SubmitError,
 };

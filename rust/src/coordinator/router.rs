@@ -94,6 +94,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router with an unfitted FMBE slot configured by `fmbe_cfg`.
     pub fn new(fmbe_cfg: FmbeConfig) -> Self {
         Router {
             fmbe: EpochCache::new(),

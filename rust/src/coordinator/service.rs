@@ -1,57 +1,163 @@
 //! The partition-estimation service: bounded ingress queue → batcher →
-//! worker pool → per-request reply channels. See module docs in
-//! [`crate::coordinator`].
+//! worker pool → per-request reply channels, answering from any
+//! [`PartitionBackend`]. See module docs in [`crate::coordinator`].
 
+use super::backend::{GroupParams, PartitionBackend, Precision, SnapshotBackend, StaticBackend};
 use super::batcher::{Batch, BatchAssembler, BatcherConfig};
 use super::metrics::ServiceMetrics;
 use super::router::Router;
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::EstimatorKind;
 use crate::mips::MipsIndex;
-use crate::runtime::{HostTensor, RuntimeHandle};
-use crate::store::{SnapshotHandle, StoreView};
+use crate::runtime::RuntimeHandle;
+use crate::store::SnapshotHandle;
 use crate::util::rng::Rng;
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// One estimation request.
+/// One estimation request, built fluently:
+///
+/// ```no_run
+/// # use zest::coordinator::{EstimateSpec, Precision};
+/// # use zest::estimators::EstimatorKind;
+/// # let query = vec![0.0f32; 16];
+/// # let deadline = std::time::Instant::now() + std::time::Duration::from_millis(5);
+/// let spec = EstimateSpec::new(query)
+///     .kind(EstimatorKind::Mimps)
+///     .k(100)
+///     .l(10)
+///     .precision(Precision::Pipelined)
+///     .deadline(deadline);
+/// ```
+///
+/// Defaults: [`EstimatorKind::Exact`] with `k = l = 0`,
+/// [`Precision::BitExact`], no deadline — the always-correct (and most
+/// expensive) configuration; callers opt into sublinearity explicitly.
+///
+/// The struct is `#[non_exhaustive]`: construct through
+/// [`EstimateSpec::new`] + the builder methods so new request knobs can
+/// be added without breaking callers.
+#[non_exhaustive]
 #[derive(Clone, Debug)]
-pub struct Request {
+pub struct EstimateSpec {
+    /// The query vector q (must match the backend's dimensionality).
     pub query: Vec<f32>,
+    /// Which estimator answers.
     pub kind: EstimatorKind,
+    /// Head budget (top-k retrieval size); meaning is estimator-specific.
     pub k: usize,
+    /// Tail budget (uniform sample size); meaning is estimator-specific.
     pub l: usize,
+    /// Bit-exact vs pipelined multi-worker `Exact` (see [`Precision`]).
+    pub precision: Precision,
+    /// Drop-dead time: a request still queued when its deadline passes
+    /// is shed by the batcher at drain time (counted in
+    /// [`super::MetricsSnapshot::deadline_shed`]) instead of wasting a
+    /// batch slot on an answer nobody is waiting for.
+    pub deadline: Option<Instant>,
+}
+
+impl EstimateSpec {
+    /// A spec for `query` with the default (exact, no-deadline) knobs.
+    pub fn new(query: Vec<f32>) -> EstimateSpec {
+        EstimateSpec {
+            query,
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+            precision: Precision::BitExact,
+            deadline: None,
+        }
+    }
+
+    /// A query-less spec used as the parameter template of batched
+    /// calls (e.g. `PartitionClient::estimate_batch`, where the queries
+    /// travel separately).
+    pub fn template() -> EstimateSpec {
+        EstimateSpec::new(Vec::new())
+    }
+
+    /// Select the estimator kind.
+    pub fn kind(mut self, kind: EstimatorKind) -> EstimateSpec {
+        self.kind = kind;
+        self
+    }
+
+    /// Set the head budget k.
+    pub fn k(mut self, k: usize) -> EstimateSpec {
+        self.k = k;
+        self
+    }
+
+    /// Set the tail budget l.
+    pub fn l(mut self, l: usize) -> EstimateSpec {
+        self.l = l;
+        self
+    }
+
+    /// Select the `Exact` precision mode (ignored by in-process
+    /// backends, which are always bit-exact).
+    pub fn precision(mut self, precision: Precision) -> EstimateSpec {
+        self.precision = precision;
+        self
+    }
+
+    /// Set an absolute drop-dead time.
+    pub fn deadline(mut self, deadline: Instant) -> EstimateSpec {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the deadline as a budget from now.
+    pub fn deadline_in(self, budget: Duration) -> EstimateSpec {
+        self.deadline(Instant::now() + budget)
+    }
+
+    /// The knobs a batch group shares (everything but query, kind and
+    /// deadline) — the coordinator's sub-batch grouping key.
+    pub fn params(&self) -> GroupParams {
+        GroupParams {
+            k: self.k,
+            l: self.l,
+            precision: self.precision,
+        }
+    }
 }
 
 /// The service's answer.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The estimated partition value Ẑ(q).
     pub z: f64,
+    /// Estimator that produced the answer.
     pub kind: EstimatorKind,
     /// Snapshot epoch the answering batch group pinned. Always 0 for a
-    /// service over a monolithic store; for sharded services this is the
-    /// epoch whose category set produced `z` (a request drained after an
-    /// `add_categories` answers from the new epoch even if it was
-    /// submitted before the swap — pinning happens at batch execution).
-    /// `Fmbe` included: the router refits its λ̃ sums whenever the
-    /// pinned epoch differs from the one it fitted on.
+    /// service over a monolithic store; for epoch-publishing backends
+    /// this is the epoch whose category set produced `z` (a request
+    /// drained after an `add_categories` answers from the new epoch
+    /// even if it was submitted before the swap — pinning happens at
+    /// batch execution). `Fmbe` included: the router refits its λ̃ sums
+    /// whenever the pinned epoch differs from the one it fitted on.
     pub epoch: u64,
     /// Time from submission until this request's batch group started
     /// executing (includes any earlier groups of the same drained batch).
-    pub queue_wait: std::time::Duration,
+    pub queue_wait: Duration,
     /// Execution time of the **batch group** that answered this request
     /// — requests batched together share one `estimate_batch` call, so
     /// they all report the same (shared) execution time, not a
     /// per-request slice of it.
-    pub exec_time: std::time::Duration,
+    pub exec_time: Duration,
     /// Category scorings this request cost (sublinearity accounting).
     pub scorings: usize,
 }
 
 /// Internal: request + reply channel + enqueue timestamp.
 pub struct QueuedRequest {
-    pub request: Request,
+    /// The request being served.
+    pub spec: EstimateSpec,
+    /// Where the worker sends the answer (dropped on deadline shed).
     pub reply: mpsc::Sender<Response>,
+    /// Submission timestamp (queue-wait accounting).
     pub enqueued: Instant,
 }
 
@@ -67,10 +173,15 @@ pub enum BackpressurePolicy {
 /// Service construction parameters.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
+    /// Worker threads executing drained batches.
     pub workers: usize,
+    /// Bounded ingress queue capacity.
     pub queue_capacity: usize,
+    /// Dynamic-batcher policy knobs.
     pub batcher: BatcherConfig,
+    /// Full-queue behavior (block vs shed).
     pub backpressure: BackpressurePolicy,
+    /// Seed of the per-worker sampling RNG forks.
     pub seed: u64,
 }
 
@@ -91,13 +202,23 @@ impl Default for ServiceConfig {
 pub enum SubmitError {
     /// Queue full under [`BackpressurePolicy::Shed`].
     Overloaded,
-    /// Service has shut down.
+    /// Service has shut down (or the answering backend failed — the
+    /// reply channel was dropped without an answer).
     Closed,
-    /// `Request.query` dimensionality differs from the store's. Checked
-    /// at `submit()` so a malformed request is rejected immediately
-    /// instead of waiting in queue and then failing (and poisoning its
-    /// batch group) mid-drain.
-    DimMismatch { got: usize, want: usize },
+    /// The spec's deadline passed before the request could execute:
+    /// rejected at submit when already expired, or shed by the batcher
+    /// at drain time.
+    DeadlineExceeded,
+    /// `EstimateSpec.query` dimensionality differs from the store's.
+    /// Checked at `submit()` so a malformed request is rejected
+    /// immediately instead of waiting in queue and then failing (and
+    /// poisoning its batch group) mid-drain.
+    DimMismatch {
+        /// The submitted query's dimensionality.
+        got: usize,
+        /// The served store's dimensionality.
+        want: usize,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -105,6 +226,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Overloaded => write!(f, "service overloaded (queue full)"),
             SubmitError::Closed => write!(f, "service closed"),
+            SubmitError::DeadlineExceeded => write!(f, "deadline exceeded"),
             SubmitError::DimMismatch { got, want } => {
                 write!(f, "query dimensionality {got} != store dimensionality {want}")
             }
@@ -114,43 +236,29 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// The running service.
+/// The running service: bounded queue → dynamic batcher → worker pool,
+/// answering from one [`PartitionBackend`].
 pub struct PartitionService {
     ingress: mpsc::SyncSender<QueuedRequest>,
     metrics: Arc<ServiceMetrics>,
     policy: BackpressurePolicy,
-    /// Store dimensionality, for submit-time query validation (invariant
-    /// across snapshot epochs — mutations cannot change d).
+    /// Backend dimensionality, for submit-time query validation
+    /// (invariant across snapshot epochs — mutations cannot change d).
     dim: usize,
-    /// Shared with the workers; lets the service report what it is
-    /// serving (length / epoch) to network front-ends.
-    serving: Arc<Serving>,
+    /// What the workers answer from; also serves manifest queries.
+    backend: Arc<dyn PartitionBackend>,
     threads: Vec<std::thread::JoinHandle<()>>,
-}
-
-/// What the workers answer from.
-enum Serving {
-    /// One immutable monolithic store + index.
-    Static {
-        store: Arc<EmbeddingStore>,
-        index: Arc<dyn MipsIndex>,
-    },
-    /// Epoch snapshots over a sharded store: each drained batch pins the
-    /// current snapshot for its whole execution, so `add_categories` /
-    /// `remove_categories` swap epochs without pausing in-flight work.
-    Sharded { handle: Arc<SnapshotHandle> },
 }
 
 /// Shared worker state.
 struct WorkerCtx {
-    serving: Arc<Serving>,
-    router: Arc<Router>,
+    backend: Arc<dyn PartitionBackend>,
     metrics: Arc<ServiceMetrics>,
-    runtime: Option<RuntimeHandle>,
 }
 
 impl PartitionService {
-    /// Start the batcher + worker threads over a monolithic store.
+    /// Start over a monolithic store + index ([`StaticBackend`];
+    /// `runtime` attaches the PJRT `score_batch` artifact for `Exact`).
     pub fn start(
         store: Arc<EmbeddingStore>,
         index: Arc<dyn MipsIndex>,
@@ -158,39 +266,63 @@ impl PartitionService {
         cfg: ServiceConfig,
         runtime: Option<RuntimeHandle>,
     ) -> PartitionService {
-        let dim = store.dim();
-        Self::start_serving(Serving::Static { store, index }, dim, router, cfg, runtime)
+        Self::start_with_backend(
+            StaticBackend::new(store, index, router).with_runtime(runtime),
+            cfg,
+        )
     }
 
-    /// Start over epoch snapshots of a sharded store. Batch groups
-    /// scatter across the snapshot's shards (through its
-    /// [`crate::mips::sharded::ShardedIndex`]) and per-shard metrics are
-    /// exported; the caller keeps its `Arc<SnapshotHandle>` to publish
-    /// category mutations while the service runs.
+    /// Start over epoch snapshots of a sharded store
+    /// ([`SnapshotBackend`]). Batch groups scatter across the
+    /// snapshot's shards (through its
+    /// [`crate::mips::sharded::ShardedIndex`]) and per-shard metrics
+    /// are exported; the caller keeps its `Arc<SnapshotHandle>` to
+    /// publish category mutations while the service runs. The
+    /// `runtime` parameter is accepted for signature compatibility but
+    /// unused: the PJRT scoring artifact streams one contiguous matrix
+    /// and rides only the monolithic [`PartitionService::start`] path.
     pub fn start_sharded(
         handle: Arc<SnapshotHandle>,
         router: Router,
         cfg: ServiceConfig,
         runtime: Option<RuntimeHandle>,
     ) -> PartitionService {
-        let dim = StoreView::dim(handle.load().store.as_ref());
-        Self::start_serving(Serving::Sharded { handle }, dim, router, cfg, runtime)
+        if runtime.is_some() {
+            log::warn!("PJRT runtime ignored for sharded serving (monolithic-only artifact)");
+        }
+        Self::start_with_backend(SnapshotBackend::new(handle, router), cfg)
     }
 
-    fn start_serving(
-        serving: Serving,
-        dim: usize,
-        router: Router,
+    /// Start the batcher + worker threads over **any**
+    /// [`PartitionBackend`] — the seam that puts the bounded queue,
+    /// dynamic batcher, backpressure policy and [`ServiceMetrics`] in
+    /// front of in-process *and* remote serving alike:
+    ///
+    /// ```no_run
+    /// # use zest::coordinator::{ClusterBackend, PartitionService, ServiceConfig};
+    /// # use zest::net::client::ClientConfig;
+    /// # let addrs: Vec<zest::net::Addr> = vec![];
+    /// let svc = PartitionService::start_with_backend(
+    ///     ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+    ///     ServiceConfig::default(),
+    /// );
+    /// ```
+    pub fn start_with_backend<B: PartitionBackend>(
+        backend: B,
         cfg: ServiceConfig,
-        runtime: Option<RuntimeHandle>,
     ) -> PartitionService {
+        let backend: Arc<dyn PartitionBackend> = Arc::new(backend);
+        let dim = backend.dim();
         let metrics = Arc::new(ServiceMetrics::new());
         let (ingress_tx, ingress_rx) = mpsc::sync_channel::<QueuedRequest>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let mut threads = Vec::new();
 
-        // Batcher thread.
+        // Batcher thread: assembles batches and enforces deadlines at
+        // drain time — a request whose deadline passed while queued is
+        // shed (reply channel dropped, counted in metrics) instead of
+        // occupying a batch slot.
         {
             let metrics = metrics.clone();
             let bcfg = cfg.batcher.clone();
@@ -199,7 +331,19 @@ impl PartitionService {
                     .name("zest-batcher".into())
                     .spawn(move || {
                         let mut asm = BatchAssembler::new(bcfg);
-                        while let Some(batch) = asm.next_batch(&ingress_rx) {
+                        while let Some(mut batch) = asm.next_batch(&ingress_rx) {
+                            let now = Instant::now();
+                            let before = batch.requests.len();
+                            batch
+                                .requests
+                                .retain(|qr| qr.spec.deadline.is_none_or(|d| now < d));
+                            let expired = before - batch.requests.len();
+                            if expired > 0 {
+                                metrics.on_deadline_shed(expired);
+                            }
+                            if batch.requests.is_empty() {
+                                continue;
+                            }
                             metrics.on_batch(batch.requests.len());
                             if batch_tx.send(batch).is_err() {
                                 break;
@@ -211,12 +355,9 @@ impl PartitionService {
         }
 
         // Worker threads.
-        let serving = Arc::new(serving);
         let ctx = Arc::new(WorkerCtx {
-            serving: serving.clone(),
-            router: Arc::new(router),
+            backend: backend.clone(),
             metrics: metrics.clone(),
-            runtime,
         });
         let mut seed_rng = Rng::seeded(cfg.seed ^ 0x5E55_1011);
         for w in 0..cfg.workers.max(1) {
@@ -245,85 +386,91 @@ impl PartitionService {
             metrics,
             policy: cfg.backpressure,
             dim,
-            serving,
+            backend,
             threads,
         }
     }
 
-    fn run_batch(ctx: &WorkerCtx, batch: Batch, rng: &mut Rng) {
-        // Pin the serving state once for the whole drained batch: every
-        // group answers from one consistent snapshot even if a category
-        // mutation publishes a new epoch mid-batch.
-        let pinned;
-        let (view, index, epoch): (&dyn StoreView, &dyn MipsIndex, u64) = match ctx.serving.as_ref()
-        {
-            Serving::Static { store, index } => (store.as_ref(), index.as_ref(), 0),
-            Serving::Sharded { handle } => {
-                pinned = handle.load();
-                (pinned.store.as_ref(), pinned.index.as_ref(), pinned.epoch)
-            }
-        };
-        // Exact batches ride the PJRT scoring artifact when attached
-        // (monolithic serving only — the artifact streams one contiguous
-        // matrix).
-        if batch.kind == EstimatorKind::Exact {
-            if let (Serving::Static { store, .. }, Some(rt)) = (ctx.serving.as_ref(), &ctx.runtime)
-            {
-                if Self::run_exact_batch_pjrt(ctx, store, &batch, rt).is_ok() {
-                    return;
-                }
-                log::warn!("PJRT exact batch failed; falling back to native path");
-            }
+    fn run_batch(ctx: &WorkerCtx, mut batch: Batch, rng: &mut Rng) {
+        // Second deadline sweep at execution time: a drained batch can
+        // wait in the worker channel behind slow groups, so re-check
+        // before paying the backend for answers nobody is waiting for
+        // (the batcher's drain-time sweep only covers queue wait).
+        let now = Instant::now();
+        let before = batch.requests.len();
+        batch
+            .requests
+            .retain(|qr| qr.spec.deadline.is_none_or(|d| now < d));
+        let expired = before - batch.requests.len();
+        if expired > 0 {
+            ctx.metrics.on_deadline_shed(expired);
         }
-        let n = view.len();
         // The batcher guarantees one kind per batch; sub-group by the
-        // (k, l) hyper-parameters so each group maps onto one estimator
-        // instance and is answered by a single `estimate_batch` call —
-        // one shared retrieval/scoring pass instead of a per-request
-        // loop. On sharded snapshots that pass scatters across shards in
-        // parallel inside `ShardedIndex::top_k_batch`. Order within a
-        // group is preserved; in practice a batch is one group (clients
-        // of a kind use one configuration).
-        let mut groups: Vec<((usize, usize), Vec<QueuedRequest>)> = Vec::new();
+        // request params ((k, l) hyper-parameters + precision mode) so
+        // each group maps onto one backend configuration and is
+        // answered by a single `estimate_batch` call — one shared
+        // retrieval/scoring pass instead of a per-request loop. The
+        // backend pins one consistent view (snapshot epoch / cluster
+        // layout) per group. Order within a group is preserved; in
+        // practice a batch is one group (clients of a kind use one
+        // configuration).
+        let mut groups: Vec<(GroupParams, Vec<QueuedRequest>)> = Vec::new();
         for qr in batch.requests {
-            let key = (qr.request.k, qr.request.l);
+            let key = qr.spec.params();
             match groups.iter_mut().find(|(g, _)| *g == key) {
                 Some((_, v)) => v.push(qr),
                 None => groups.push((key, vec![qr])),
             }
         }
-        for ((k, l), mut reqs) in groups {
+        for (params, mut reqs) in groups {
             let started = Instant::now();
             let qs: Vec<Vec<f32>> = reqs
                 .iter_mut()
-                .map(|qr| std::mem::take(&mut qr.request.query))
+                .map(|qr| std::mem::take(&mut qr.spec.query))
                 .collect();
-            let zs = ctx
-                .router
-                .estimate_batch(batch.kind, k, l, view, index, epoch, &qs, rng);
+            let answer = ctx.backend.estimate_batch(batch.kind, params, &qs, rng);
             let exec = started.elapsed();
-            ctx.metrics.on_batch_executed(reqs.len(), exec);
-            ctx.metrics.on_epoch(epoch);
-            let scorings = ctx.router.scorings(batch.kind, k, l, n);
-            // Per-shard accounting: apportion the request's scoring
-            // budget across shards by their share of the rows (exact for
-            // `Exact`, where scorings = n; proportional attribution for
-            // the samplers), and attribute the group's shared execution
-            // time to every shard the scatter touched.
-            if let Some(sharded) = view.as_sharded() {
-                for (s, shard) in sharded.shards().iter().enumerate() {
-                    let per_request = scorings * shard.len() / n.max(1);
-                    ctx.metrics
-                        .on_shard_batch(epoch, s, shard.len(), per_request * reqs.len(), exec);
+            let answer = match answer {
+                Ok(a) => a,
+                Err(e) => {
+                    // Dropping `reqs` drops the reply senders: waiting
+                    // callers observe a closed channel (SubmitError::
+                    // Closed), never a silent hang.
+                    log::warn!(
+                        "batch group of {} {} request(s) failed: {e}",
+                        reqs.len(),
+                        batch.kind
+                    );
+                    ctx.metrics.on_backend_error();
+                    continue;
                 }
+            };
+            ctx.metrics.on_batch_executed(reqs.len(), exec);
+            ctx.metrics.on_epoch(answer.epoch);
+            let n = answer.len;
+            let scorings = ctx.backend.scorings(batch.kind, params, n);
+            // Per-shard accounting: apportion the request's scoring
+            // budget across shards by their share of the rows (exact
+            // for `Exact`, where scorings = n; proportional attribution
+            // for the samplers), and attribute the group's shared
+            // execution time to every shard the scatter touched.
+            for (s, &shard_len) in answer.shard_lens.iter().enumerate() {
+                let per_request = scorings * shard_len / n.max(1);
+                ctx.metrics.on_shard_batch(
+                    answer.epoch,
+                    s,
+                    shard_len,
+                    per_request * reqs.len(),
+                    exec,
+                );
             }
-            for (qr, z) in reqs.into_iter().zip(zs) {
+            for (qr, z) in reqs.into_iter().zip(answer.zs) {
                 let queue_wait = started.duration_since(qr.enqueued);
                 ctx.metrics.on_complete(queue_wait, exec);
                 let _ = qr.reply.send(Response {
                     z,
                     kind: batch.kind,
-                    epoch,
+                    epoch: answer.epoch,
                     queue_wait,
                     exec_time: exec,
                     scorings,
@@ -332,83 +479,26 @@ impl PartitionService {
         }
     }
 
-    /// Batched exact partition via the AOT `score_batch` artifact:
-    /// pad the query batch to the artifact's B, stream the category
-    /// matrix in artifact-sized chunks (zero-padding the last one and
-    /// correcting the +1-per-padded-row bias), sum partials per query.
-    fn run_exact_batch_pjrt(
-        ctx: &WorkerCtx,
-        store: &Arc<EmbeddingStore>,
-        batch: &Batch,
-        rt: &RuntimeHandle,
-    ) -> anyhow::Result<()> {
-        let (n, d) = (store.len(), store.dim());
-        // Artifact shapes come from meta.json via a probe call contract:
-        // the service caches them in the handle-free config instead; here
-        // we read the declared shapes lazily from the first run failure.
-        // Shapes: v (chunk, d_a), qs (b_a, d_a) -> (b_a,)
-        let (chunk, d_a, b_a) = rt_score_batch_dims(rt)?;
-        anyhow::ensure!(d_a == d, "artifact d {d_a} != store d {d}");
-        let started = Instant::now();
-        let reqs = &batch.requests;
-        let mut zs = vec![0f64; reqs.len()];
-        for q_chunk in (0..reqs.len()).step_by(b_a) {
-            let q_hi = (q_chunk + b_a).min(reqs.len());
-            let mut qs = vec![0f32; b_a * d];
-            for (bi, qr) in reqs[q_chunk..q_hi].iter().enumerate() {
-                anyhow::ensure!(qr.request.query.len() == d, "query dim mismatch");
-                qs[bi * d..(bi + 1) * d].copy_from_slice(&qr.request.query);
-            }
-            let qs_t = HostTensor::f32(qs, &[b_a, d]);
-            for lo in (0..n).step_by(chunk) {
-                let hi = (lo + chunk).min(n);
-                let rows = hi - lo;
-                let pad = chunk - rows;
-                let mut v = vec![0f32; chunk * d];
-                v[..rows * d].copy_from_slice(store.rows(lo, hi));
-                let out = rt.run(
-                    "score_batch",
-                    vec![HostTensor::f32(v, &[chunk, d]), qs_t.clone()],
-                )?;
-                let partials = out[0]
-                    .as_f32()
-                    .ok_or_else(|| anyhow::anyhow!("score_batch returned non-f32"))?;
-                for (bi, z) in zs[q_chunk..q_hi].iter_mut().enumerate() {
-                    // Padded rows contribute exp(0) = 1 each; remove them.
-                    *z += partials[bi] as f64 - pad as f64;
-                }
-            }
-        }
-        let exec = started.elapsed();
-        ctx.metrics.on_batch_executed(reqs.len(), exec);
-        for (qr, z) in reqs.iter().zip(zs) {
-            let queue_wait = started.duration_since(qr.enqueued);
-            ctx.metrics.on_complete(queue_wait, exec);
-            let _ = qr.reply.send(Response {
-                z,
-                kind: EstimatorKind::Exact,
-                epoch: 0,
-                queue_wait,
-                exec_time: exec,
-                scorings: n,
-            });
-        }
-        Ok(())
-    }
-
-    /// Submit a request; returns the reply receiver. Dimensionality is
-    /// validated here — before the request can occupy queue space — so a
-    /// malformed query fails fast instead of after its queue wait.
-    pub fn submit(&self, request: Request) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        if request.query.len() != self.dim {
+    /// Submit a request; returns the reply receiver. Dimensionality and
+    /// an already-expired deadline are validated here — before the
+    /// request can occupy queue space — so a doomed query fails fast
+    /// instead of after its queue wait.
+    pub fn submit(&self, spec: EstimateSpec) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if spec.query.len() != self.dim {
             return Err(SubmitError::DimMismatch {
-                got: request.query.len(),
+                got: spec.query.len(),
                 want: self.dim,
             });
         }
+        if let Some(d) = spec.deadline {
+            if Instant::now() >= d {
+                self.metrics.on_deadline_shed(1);
+                return Err(SubmitError::DeadlineExceeded);
+            }
+        }
         let (tx, rx) = mpsc::channel();
         let qr = QueuedRequest {
-            request,
+            spec,
             reply: tx,
             enqueued: Instant::now(),
         };
@@ -430,12 +520,22 @@ impl PartitionService {
         }
     }
 
-    /// Convenience: submit and wait.
-    pub fn estimate(&self, request: Request) -> Result<Response, SubmitError> {
-        let rx = self.submit(request)?;
-        rx.recv().map_err(|_| SubmitError::Closed)
+    /// Convenience: submit and wait. A dropped reply channel surfaces
+    /// as [`SubmitError::DeadlineExceeded`] when the spec's deadline
+    /// has passed, else [`SubmitError::Closed`] — deliberately "no
+    /// answer by the deadline is a deadline miss", even if the
+    /// underlying drop was a backend failure (which
+    /// [`super::MetricsSnapshot::backend_errors`] still records).
+    pub fn estimate(&self, spec: EstimateSpec) -> Result<Response, SubmitError> {
+        let deadline = spec.deadline;
+        let rx = self.submit(spec)?;
+        rx.recv().map_err(|_| match deadline {
+            Some(d) if Instant::now() >= d => SubmitError::DeadlineExceeded,
+            _ => SubmitError::Closed,
+        })
     }
 
+    /// A point-in-time copy of the service counters.
     pub fn metrics(&self) -> super::metrics::MetricsSnapshot {
         self.metrics.snapshot()
     }
@@ -451,17 +551,16 @@ impl PartitionService {
         self.dim
     }
 
-    /// `(categories, epoch)` currently served: the static store's size
-    /// (epoch 0) or the currently published snapshot's. Used by network
-    /// front-ends to answer manifest requests.
+    /// `(categories, epoch)` currently served, straight from the
+    /// backend's manifest. Used by network front-ends to answer
+    /// manifest requests.
     pub fn serving_info(&self) -> (usize, u64) {
-        match self.serving.as_ref() {
-            Serving::Static { store, .. } => (store.len(), 0),
-            Serving::Sharded { handle } => {
-                let snap = handle.load();
-                (StoreView::len(snap.store.as_ref()), snap.epoch)
-            }
-        }
+        self.backend.serving_info()
+    }
+
+    /// The serving backend (publish hooks, manifest).
+    pub fn backend(&self) -> &Arc<dyn PartitionBackend> {
+        &self.backend
     }
 
     /// Drain and stop all threads.
@@ -471,23 +570,6 @@ impl PartitionService {
             let _ = t.join();
         }
     }
-}
-
-/// score_batch artifact dims cache: (chunk, d, batch). Read once from the
-/// exporter's meta via the runtime thread environment variable contract.
-fn rt_score_batch_dims(_rt: &RuntimeHandle) -> anyhow::Result<(usize, usize, usize)> {
-    // The handle intentionally carries no meta; the service reads the
-    // artifacts dir the same way the runtime did.
-    let dir = std::env::var("ZEST_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-    let meta = crate::runtime::ArtifactsMeta::load(std::path::Path::new(&dir))?;
-    let (_, args) = meta
-        .graphs
-        .get("score_batch")
-        .ok_or_else(|| anyhow::anyhow!("score_batch not exported"))?;
-    let chunk = args[0].shape[0];
-    let d = args[0].shape[1];
-    let b = args[1].shape[0];
-    Ok((chunk, d, b))
 }
 
 #[cfg(test)]
@@ -526,18 +608,44 @@ mod tests {
     }
 
     #[test]
+    fn spec_builder_defaults_are_exact() {
+        let spec = EstimateSpec::new(vec![1.0, 2.0]);
+        assert_eq!(spec.kind, EstimatorKind::Exact);
+        assert_eq!((spec.k, spec.l), (0, 0));
+        assert_eq!(spec.precision, Precision::BitExact);
+        assert!(spec.deadline.is_none());
+        let spec = spec
+            .kind(EstimatorKind::Mimps)
+            .k(100)
+            .l(10)
+            .precision(Precision::Pipelined)
+            .deadline_in(Duration::from_secs(1));
+        assert_eq!(spec.kind, EstimatorKind::Mimps);
+        assert_eq!((spec.k, spec.l), (100, 10));
+        assert_eq!(
+            spec.params(),
+            GroupParams {
+                k: 100,
+                l: 10,
+                precision: Precision::Pipelined
+            }
+        );
+        assert!(spec.deadline.is_some());
+    }
+
+    #[test]
     fn end_to_end_estimates_match_exact_within_tolerance() {
         let (svc, store) = start_service(BackpressurePolicy::Block, 64);
         let brute = BruteIndex::new(&store);
         let q = store.row(450).to_vec();
         let want = brute.partition(&q);
         let resp = svc
-            .estimate(Request {
-                query: q,
-                kind: EstimatorKind::Mimps,
-                k: 100,
-                l: 100,
-            })
+            .estimate(
+                EstimateSpec::new(q)
+                    .kind(EstimatorKind::Mimps)
+                    .k(100)
+                    .l(100),
+            )
             .unwrap();
         let rel = ((resp.z - want) / want).abs();
         assert!(rel < 0.5, "service MIMPS {} vs exact {want}", resp.z);
@@ -557,12 +665,7 @@ mod tests {
                 for i in 0..25 {
                     let q = store.row((t * 25 + i) % store.len()).to_vec();
                     let r = svc
-                        .estimate(Request {
-                            query: q,
-                            kind: EstimatorKind::Mimps,
-                            k: 20,
-                            l: 20,
-                        })
+                        .estimate(EstimateSpec::new(q).kind(EstimatorKind::Mimps).k(20).l(20))
                         .unwrap();
                     assert!(r.z.is_finite() && r.z > 0.0);
                 }
@@ -585,25 +688,15 @@ mod tests {
     #[test]
     fn mixed_hyperparams_in_one_batch_answer_independently() {
         // Two different (k, l) configs of one kind may share a drained
-        // batch; the (k, l) grouping must answer each with its own
+        // batch; the params grouping must answer each with its own
         // estimator instance.
         let (svc, store) = start_service(BackpressurePolicy::Block, 64);
         let q = store.row(10).to_vec();
         let rx_a = svc
-            .submit(Request {
-                query: q.clone(),
-                kind: EstimatorKind::Nmimps,
-                k: 50,
-                l: 0,
-            })
+            .submit(EstimateSpec::new(q.clone()).kind(EstimatorKind::Nmimps).k(50))
             .unwrap();
         let rx_b = svc
-            .submit(Request {
-                query: q,
-                kind: EstimatorKind::Nmimps,
-                k: 500,
-                l: 0,
-            })
+            .submit(EstimateSpec::new(q).kind(EstimatorKind::Nmimps).k(500))
             .unwrap();
         let a = rx_a.recv().unwrap();
         let b = rx_b.recv().unwrap();
@@ -622,12 +715,12 @@ mod tests {
     fn dim_mismatch_rejected_at_submit_time() {
         let (svc, store) = start_service(BackpressurePolicy::Block, 16);
         let err = svc
-            .submit(Request {
-                query: vec![0.0; 7],
-                kind: EstimatorKind::Mimps,
-                k: 5,
-                l: 5,
-            })
+            .submit(
+                EstimateSpec::new(vec![0.0; 7])
+                    .kind(EstimatorKind::Mimps)
+                    .k(5)
+                    .l(5),
+            )
             .unwrap_err();
         assert_eq!(err, SubmitError::DimMismatch { got: 7, want: 16 });
         assert_eq!(
@@ -636,16 +729,36 @@ mod tests {
         );
         // Rejected requests never occupy the queue; valid ones still flow.
         let ok = svc
-            .estimate(Request {
-                query: store.row(0).to_vec(),
-                kind: EstimatorKind::Nmimps,
-                k: 10,
-                l: 0,
-            })
+            .estimate(
+                EstimateSpec::new(store.row(0).to_vec())
+                    .kind(EstimatorKind::Nmimps)
+                    .k(10),
+            )
             .unwrap();
         assert!(ok.z > 0.0);
         let m = svc.metrics();
         assert_eq!(m.submitted, 1, "dim-mismatched submit must not count");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_rejected_at_submit_and_shed_at_drain() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 64);
+        let q = store.row(0).to_vec();
+        // Already expired at submit: fast rejection, no queue space.
+        let err = svc
+            .estimate(
+                EstimateSpec::new(q.clone()).deadline(Instant::now() - Duration::from_millis(1)),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::DeadlineExceeded);
+        assert_eq!(svc.metrics().deadline_shed, 1);
+        // A generous deadline passes untouched.
+        let ok = svc
+            .estimate(EstimateSpec::new(q).deadline_in(Duration::from_secs(30)))
+            .unwrap();
+        assert!(ok.z > 0.0);
+        assert_eq!(svc.metrics().deadline_shed, 1);
         svc.shutdown();
     }
 
@@ -671,14 +784,7 @@ mod tests {
             None,
         );
         let q = store.row(10).to_vec();
-        let r0 = svc
-            .estimate(Request {
-                query: q.clone(),
-                kind: EstimatorKind::Exact,
-                k: 0,
-                l: 0,
-            })
-            .unwrap();
+        let r0 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
         assert_eq!(r0.epoch, 0);
         // The service rides the batched exact kernel; the single-query
         // reference agrees to the last ulp on AVX2, while the scalar
@@ -699,24 +805,12 @@ mod tests {
             ..SynthConfig::tiny()
         });
         assert_eq!(handle.add_categories(added).unwrap(), 1);
-        let r1 = svc
-            .estimate(Request {
-                query: q.clone(),
-                kind: EstimatorKind::Exact,
-                k: 0,
-                l: 0,
-            })
-            .unwrap();
+        let r1 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
         assert_eq!(r1.epoch, 1);
         assert!(r1.z > r0.z, "new categories only add positive mass");
         // MIMPS flows through the sharded scatter too.
         let rm = svc
-            .estimate(Request {
-                query: q,
-                kind: EstimatorKind::Mimps,
-                k: 50,
-                l: 50,
-            })
+            .estimate(EstimateSpec::new(q).kind(EstimatorKind::Mimps).k(50).l(50))
             .unwrap();
         assert!(rm.z.is_finite() && rm.z > 0.0);
         assert_eq!(rm.epoch, 1);
@@ -724,6 +818,15 @@ mod tests {
         assert_eq!(m.epoch, 1);
         assert_eq!(m.shard_stats.len(), 5, "4 original shards + 1 added");
         assert!(m.shard_stats.iter().all(|s| s.batches >= 1));
+        // The trait's publish hooks reach the same handle.
+        let more = generate(&SynthConfig {
+            n: 16,
+            d: 16,
+            seed: 5,
+            ..SynthConfig::tiny()
+        });
+        assert_eq!(svc.backend().add_categories(more).unwrap(), 2);
+        assert_eq!(svc.serving_info(), (656, 2));
         svc.shutdown();
     }
 
@@ -755,12 +858,7 @@ mod tests {
         let mut rejected = 0;
         let mut receivers = Vec::new();
         for i in 0..200 {
-            match svc.submit(Request {
-                query: store.row(i % store.len()).to_vec(),
-                kind: EstimatorKind::Exact,
-                k: 0,
-                l: 0,
-            }) {
+            match svc.submit(EstimateSpec::new(store.row(i % store.len()).to_vec())) {
                 Ok(rx) => receivers.push(rx),
                 Err(SubmitError::Overloaded) => rejected += 1,
                 Err(e) => panic!("{e}"),

@@ -88,17 +88,43 @@ pub enum EstimatorKind {
     Fmbe,
 }
 
-impl EstimatorKind {
-    pub fn parse(s: &str) -> Option<EstimatorKind> {
+/// Error of [`EstimatorKind::from_str`]: the name matched no kind.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownEstimatorKind(String);
+
+impl std::fmt::Display for UnknownEstimatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown estimator kind {:?} (want one of exact, uniform, nmimps, mimps, mince, fmbe)",
+            self.0
+        )
+    }
+}
+
+impl std::error::Error for UnknownEstimatorKind {}
+
+impl std::str::FromStr for EstimatorKind {
+    type Err = UnknownEstimatorKind;
+
+    /// Case-insensitive kind name, e.g. `"mimps".parse::<EstimatorKind>()`.
+    fn from_str(s: &str) -> Result<EstimatorKind, UnknownEstimatorKind> {
         match s.to_ascii_lowercase().as_str() {
-            "exact" => Some(EstimatorKind::Exact),
-            "uniform" => Some(EstimatorKind::Uniform),
-            "nmimps" => Some(EstimatorKind::Nmimps),
-            "mimps" => Some(EstimatorKind::Mimps),
-            "mince" => Some(EstimatorKind::Mince),
-            "fmbe" => Some(EstimatorKind::Fmbe),
-            _ => None,
+            "exact" => Ok(EstimatorKind::Exact),
+            "uniform" => Ok(EstimatorKind::Uniform),
+            "nmimps" => Ok(EstimatorKind::Nmimps),
+            "mimps" => Ok(EstimatorKind::Mimps),
+            "mince" => Ok(EstimatorKind::Mince),
+            "fmbe" => Ok(EstimatorKind::Fmbe),
+            _ => Err(UnknownEstimatorKind(s.to_string())),
         }
+    }
+}
+
+impl EstimatorKind {
+    /// `Option`-shaped wrapper around the [`std::str::FromStr`] impl.
+    pub fn parse(s: &str) -> Option<EstimatorKind> {
+        s.parse().ok()
     }
 
     pub fn all() -> &'static [EstimatorKind] {
@@ -128,7 +154,11 @@ mod tests {
         for k in EstimatorKind::all() {
             let s = k.to_string();
             assert_eq!(EstimatorKind::parse(&s), Some(*k), "{s}");
+            assert_eq!(s.parse::<EstimatorKind>(), Ok(*k), "{s}");
+            assert_eq!(s.to_ascii_uppercase().parse::<EstimatorKind>(), Ok(*k));
         }
         assert_eq!(EstimatorKind::parse("bogus"), None);
+        let err = "bogus".parse::<EstimatorKind>().unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
     }
 }

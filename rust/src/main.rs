@@ -230,12 +230,12 @@ fn cmd_serve(cfg: &Config, args: &Args) -> Result<()> {
     let rxs: Vec<_> = (0..requests)
         .map(|_| {
             let qi = rng.below(store.len());
-            svc.submit(Request {
-                query: store.row(qi).to_vec(),
-                kind: EstimatorKind::Mimps,
-                k: cfg.k,
-                l: cfg.l,
-            })
+            svc.submit(
+                EstimateSpec::new(store.row(qi).to_vec())
+                    .kind(EstimatorKind::Mimps)
+                    .k(cfg.k)
+                    .l(cfg.l),
+            )
             .expect("submit")
         })
         .collect();

@@ -2,7 +2,10 @@
 //!
 //! [`PartitionClient::estimate`] / [`PartitionClient::estimate_batch`]
 //! mirror the in-process [`crate::coordinator::PartitionService`] API —
-//! same request fields, same [`crate::coordinator::Response`] out — so a
+//! the same [`EstimateSpec`] request builder in (precision mode and
+//! deadline included; the deadline ships as a relative budget so clocks
+//! never need to agree), the same
+//! [`crate::coordinator::Response`] out — so a
 //! caller can swap between in-process and over-the-wire serving without
 //! touching its own code. Idle connections are pooled (up to
 //! [`ClientConfig::max_idle`]); a call that finds the pool empty opens a
@@ -18,10 +21,9 @@
 
 use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::{Addr, Stream};
-use crate::coordinator::{Request, Response};
-use crate::estimators::EstimatorKind;
+use crate::coordinator::{EstimateSpec, Response};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Client knobs.
 #[derive(Clone, Debug)]
@@ -207,13 +209,20 @@ impl PartitionClient {
     }
 
     /// Submit one estimation and wait — the wire mirror of
-    /// [`crate::coordinator::PartitionService::estimate`].
-    pub fn estimate(&self, request: Request) -> Result<Response> {
+    /// [`crate::coordinator::PartitionService::estimate`]. The spec's
+    /// deadline is shipped as the **remaining** budget at send time; a
+    /// spec already expired fails fast with a
+    /// [`wire::ErrorCode::DeadlineExceeded`] remote error without a
+    /// round-trip.
+    pub fn estimate(&self, spec: EstimateSpec) -> Result<Response> {
+        let deadline_ns = remaining_budget_ns(spec.deadline)?;
         let wire_req = WireRequest::Estimate {
-            kind: request.kind,
-            k: request.k as u64,
-            l: request.l as u64,
-            query: request.query,
+            kind: spec.kind,
+            k: spec.k as u64,
+            l: spec.l as u64,
+            precision: spec.precision,
+            deadline_ns,
+            query: spec.query,
         };
         match self.pool.call(&wire_req)? {
             WireResponse::Estimates(items) if items.len() == 1 => {
@@ -226,14 +235,14 @@ impl PartitionClient {
         }
     }
 
-    /// Estimate a whole same-(kind, k, l) query block in one wire call —
+    /// Estimate a whole query block sharing `template`'s parameters
+    /// (kind, k, l, precision, deadline — `template.query` is unused;
+    /// build one with [`EstimateSpec::template`]) in one wire call —
     /// the server coalesces it into shared `estimate_batch` groups, so
     /// the wire overhead is paid once per block instead of per query.
     pub fn estimate_batch(
         &self,
-        kind: EstimatorKind,
-        k: usize,
-        l: usize,
+        template: &EstimateSpec,
         queries: Vec<Vec<f32>>,
     ) -> Result<Vec<Response>> {
         let n = queries.len();
@@ -250,10 +259,13 @@ impl PartitionClient {
                 bad.len()
             )));
         }
+        let deadline_ns = remaining_budget_ns(template.deadline)?;
         let wire_req = WireRequest::EstimateBatch {
-            kind,
-            k: k as u64,
-            l: l as u64,
+            kind: template.kind,
+            k: template.k as u64,
+            l: template.l as u64,
+            precision: template.precision,
+            deadline_ns,
             queries,
         };
         match self.pool.call(&wire_req)? {
@@ -270,6 +282,22 @@ impl PartitionClient {
             ))),
         }
     }
+}
+
+/// The wire deadline budget for `deadline`: 0 when unset, the remaining
+/// nanoseconds otherwise. An already-expired deadline is a typed error
+/// — the request would only be shed server-side anyway.
+fn remaining_budget_ns(deadline: Option<Instant>) -> Result<u64> {
+    let Some(d) = deadline else { return Ok(0) };
+    let remaining = d.saturating_duration_since(Instant::now());
+    if remaining.is_zero() {
+        return Err(remote_err(
+            ErrorCode::DeadlineExceeded,
+            "deadline expired before the request was sent".to_string(),
+        ));
+    }
+    // A deadline can never ship as "0 = none": the minimum budget is 1ns.
+    Ok((remaining.as_nanos() as u64).max(1))
 }
 
 fn to_response(e: wire::Estimate) -> Response {

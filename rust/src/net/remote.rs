@@ -59,12 +59,15 @@
 //! manifest refreshes. The top-k scatter fans out through the
 //! [`ShardedIndex`] scoped pool (given one scatter thread per worker —
 //! the calls are I/O-bound, so the budget is worker count, not core
-//! count). The only deliberately sequential operation is the chained
-//! `Exact` exp-sum, whose bit-exactness contract *is* its ordering; the
-//! ROADMAP's "streaming/pipelined chained exp-sum" item tracks a
-//! two-mode API. A worker's slot serializes the requests sent to **that
-//! worker** (publish phases stay ordered per worker) while different
-//! workers proceed concurrently.
+//! count). `Exact` is two-mode
+//! ([`Precision`](crate::coordinator::Precision)): the **bit-exact
+//! chain** stays deliberately sequential — its ordering *is* the
+//! contract — while `Precision::Pipelined` fans an `ExpSumPart` out to
+//! every worker concurrently and reduces the per-worker partials in
+//! worker order (max-over-workers latency, last-ulp-different answers;
+//! see [`RemoteCluster::exp_sum_parts`]). A worker's slot serializes
+//! the requests sent to **that worker** (publish phases stay ordered
+//! per worker) while different workers proceed concurrently.
 //!
 //! ## Two-phase epoch publish
 //!
@@ -81,7 +84,7 @@ use super::client::{remote_err, ClientConfig, ClientError, Pool, Result};
 use super::server::Handler;
 use super::wire::{self, Encoded, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::Addr;
-use crate::coordinator::EpochCache;
+use crate::coordinator::{EpochCache, Precision};
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::fmbe::{Fmbe, FmbeConfig};
 use crate::estimators::mince::{self, Solver};
@@ -459,6 +462,10 @@ pub struct ClusterAnswer {
     pub epoch: u64,
     /// Categories the pinned view served.
     pub len: usize,
+    /// Per-worker row counts of the pinned view, in worker order
+    /// (feeds per-shard service metrics when the cluster serves behind
+    /// a `PartitionService`).
+    pub shard_lens: Vec<usize>,
 }
 
 /// S shard workers composed into one logical store.
@@ -482,6 +489,11 @@ pub struct RemoteCluster {
     /// Serializes cluster-side mutations (global-id interpretation +
     /// two-phase publish are read-modify-write on the layout).
     publish_lock: Mutex<()>,
+    /// The last publish whose commit phase did not land on every worker:
+    /// `(token, target epoch)`. [`RemoteCluster::refresh`] uses it to
+    /// auto-heal a reconnected worker that missed its commit (the first
+    /// step of reconnect/failover); cleared once lockstep is restored.
+    unresolved: Mutex<Option<(u64, u64)>>,
     token: AtomicU64,
     /// Configuration of the cluster-wide FMBE fit (seed + feature
     /// count; the wire op pins the geometric parameter to the default).
@@ -543,6 +555,7 @@ impl RemoteCluster {
                 index,
             })),
             publish_lock: Mutex::new(()),
+            unresolved: Mutex::new(None),
             // Seed tokens with process-unique entropy so a replacement
             // coordinator cannot collide with a crashed predecessor's
             // orphaned staged preparation (worker staging is keyed by
@@ -655,6 +668,40 @@ impl RemoteCluster {
         Ok(acc)
     }
 
+    /// Batched **pipelined** exact partition ([`Precision::Pipelined`]):
+    /// one `ExpSumPart` is submitted to every worker's I/O slot
+    /// concurrently, and the per-worker partial sums are reduced in
+    /// worker order. Latency is the slowest worker instead of the sum
+    /// of all S round-trips the bit-exact chain pays; the price is the
+    /// f64 summation *grouping* — each worker accumulates its own rows
+    /// from zero and the partials are then added, so answers are
+    /// last-ulp different from [`RemoteCluster::exp_sum_batch`]
+    /// (identical bits at S = 1, where the reduce adds a single partial
+    /// to zero). `tests/net_e2e.rs` pins the relative-error bound for
+    /// S ∈ {1, 2, 4}.
+    pub fn exp_sum_parts(&self, qs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let mut zs = vec![0f64; qs.len()];
+        if qs.is_empty() {
+            return Ok(zs);
+        }
+        let in_flight: Vec<_> = self
+            .shards
+            .iter()
+            .map(|shard| shard.submit(Encoded::exp_sum_part(qs)))
+            .collect();
+        for pending in in_flight {
+            match pending.join()? {
+                WireResponse::ExpSums(partials) if partials.len() == qs.len() => {
+                    for (z, p) in zs.iter_mut().zip(partials) {
+                        *z += p;
+                    }
+                }
+                other => return Err(unexpected("exp_sum_part", other)),
+            }
+        }
+        Ok(zs)
+    }
+
     /// Submit the `ScoreIds` scatter for one query: bucket each global
     /// id to its owning worker under the caller's pinned layout and
     /// issue every bucket on its worker's I/O slot. The returned
@@ -705,12 +752,16 @@ impl RemoteCluster {
         self.submit_score_ids(lens, ids, q)?.join()
     }
 
-    /// Estimate a same-(kind, k, l) query block across the remote
-    /// shards, mirroring the in-process estimator math for **every**
-    /// [`EstimatorKind`]: `Exact` exactly (chained); `Nmimps`, `Mimps`,
-    /// `Uniform` and `Mince` with the same global tail draw as
+    /// Estimate a same-(kind, k, l, precision) query block across the
+    /// remote shards, mirroring the in-process estimator math for
+    /// **every** [`EstimatorKind`]: `Exact` exactly under
+    /// [`Precision::BitExact`] (the sequential chain) or
+    /// last-ulp-different under [`Precision::Pipelined`] (the
+    /// `ExpSumPart` fan-out, max-over-workers latency); `Nmimps`,
+    /// `Mimps`, `Uniform` and `Mince` with the same global tail draw as
     /// in-process, scored remotely; `Fmbe` from the epoch-tagged
-    /// cluster fit (per-shard λ̃ sums).
+    /// cluster fit (per-shard λ̃ sums). Non-`Exact` kinds ignore the
+    /// precision mode — their remote execution already fans out.
     /// The returned [`ClusterAnswer`] carries the epoch and category
     /// count of the **pinned** cluster view that produced the answers,
     /// so callers report a consistent `Response.epoch` even when a
@@ -720,6 +771,7 @@ impl RemoteCluster {
         kind: EstimatorKind,
         k: usize,
         l: usize,
+        precision: Precision,
         qs: &[Vec<f32>],
         rng: &mut Rng,
     ) -> Result<ClusterAnswer> {
@@ -728,7 +780,10 @@ impl RemoteCluster {
         // epoch/len all use one layout.
         let state = self.state();
         let zs = match kind {
-            EstimatorKind::Exact => self.exp_sum_batch(qs)?,
+            EstimatorKind::Exact => match precision {
+                Precision::BitExact => self.exp_sum_batch(qs)?,
+                Precision::Pipelined => self.exp_sum_parts(qs)?,
+            },
             EstimatorKind::Nmimps => {
                 let heads = state.index.top_k_batch(qs, k);
                 heads.iter().map(|head| tail::head_sum(head)).collect()
@@ -742,6 +797,7 @@ impl RemoteCluster {
             zs,
             epoch: state.epoch,
             len: state.lens.iter().sum(),
+            shard_lens: state.lens.clone(),
         })
     }
 
@@ -1085,6 +1141,12 @@ impl RemoteCluster {
                 }
             }
         }
+        // Record an incomplete commit phase before refreshing, so the
+        // refresh-time auto-heal (now and on any later `refresh()`)
+        // knows which token to re-commit once the straggler reconnects.
+        if commit_failure.is_some() {
+            *self.unresolved.lock().unwrap() = Some((token, next_epoch));
+        }
         // Refresh best-effort, but never let it mask a commit failure.
         let refreshed = self.refresh();
         if let Some(e) = commit_failure {
@@ -1125,15 +1187,54 @@ impl RemoteCluster {
     /// Re-read every worker's manifest (concurrently), re-validate
     /// lockstep, and rebuild the scatter index for the (possibly
     /// shifted) layout.
+    ///
+    /// **Auto-heal**: when the manifests are out of lockstep *and* the
+    /// lag matches the recorded incomplete publish — a worker one epoch
+    /// behind the target of the last commit phase that failed on it —
+    /// the worker evidently reconnected still holding the staged
+    /// preparation, so `refresh` re-sends that `Commit` (the same
+    /// resolution `resolve_token(token, true)` would run, scoped to the
+    /// lagging workers) and re-reads the manifests before giving up.
+    /// This heals a worker that was unreachable during phase 2 without
+    /// operator intervention — the first step of the ROADMAP
+    /// reconnect/failover item. Lockstep breaks that do *not* match a
+    /// recorded token (external mutation, worker restarted with
+    /// different data) still surface as errors.
     pub fn refresh(&self) -> Result<()> {
-        let manifests: Vec<_> = self
+        let mut manifests = self.fetch_manifests()?;
+        if Self::lockstep_epoch(&manifests).is_none() && self.heal_missed_commits(&manifests) {
+            manifests = self.fetch_manifests()?;
+        }
+        let Some(epoch) = Self::lockstep_epoch(&manifests) else {
+            let detail: Vec<String> = self
+                .shards
+                .iter()
+                .zip(&manifests)
+                .map(|(shard, (_, e))| format!("{} at epoch {e}", shard.addr()))
+                .collect();
+            return Err(ClientError::Protocol(format!(
+                "workers out of lockstep: {}",
+                detail.join(", ")
+            )));
+        };
+        let lens: Vec<usize> = manifests.into_iter().map(|(len, _)| len).collect();
+        let index = Arc::new(Self::build_index(&self.shards, &lens));
+        *self.state.write().unwrap() = Arc::new(ClusterState { lens, epoch, index });
+        // Lockstep restored: nothing left to resolve.
+        *self.unresolved.lock().unwrap() = None;
+        Ok(())
+    }
+
+    /// Every worker's `(len, epoch)` manifest, fetched concurrently,
+    /// with dimensionality validated against the cluster's.
+    fn fetch_manifests(&self) -> Result<Vec<(usize, u64)>> {
+        let in_flight: Vec<_> = self
             .shards
             .iter()
             .map(|shard| shard.submit(Encoded::manifest()))
             .collect();
-        let mut lens = Vec::with_capacity(self.shards.len());
-        let mut epoch = None;
-        for (shard, pending) in self.shards.iter().zip(manifests) {
+        let mut manifests = Vec::with_capacity(self.shards.len());
+        for (shard, pending) in self.shards.iter().zip(in_flight) {
             let (len, d, e) = pending.join().and_then(to_manifest)?;
             if d != self.dim {
                 return Err(ClientError::Protocol(format!(
@@ -1141,33 +1242,79 @@ impl RemoteCluster {
                     shard.addr()
                 )));
             }
-            match epoch {
-                None => epoch = Some(e),
-                Some(want) if want != e => {
-                    return Err(ClientError::Protocol(format!(
-                        "worker {} at epoch {e}, cluster epoch is {want} \
-                         (publish left workers out of lockstep)",
-                        shard.addr()
-                    )));
-                }
-                _ => {}
-            }
-            lens.push(len);
+            manifests.push((len, e));
         }
-        let index = Arc::new(Self::build_index(&self.shards, &lens));
-        *self.state.write().unwrap() = Arc::new(ClusterState {
-            lens,
-            epoch: epoch.unwrap(),
-            index,
-        });
-        Ok(())
+        Ok(manifests)
+    }
+
+    /// The common epoch if every manifest agrees, else `None`.
+    fn lockstep_epoch(manifests: &[(usize, u64)]) -> Option<u64> {
+        let first = manifests.first()?.1;
+        manifests.iter().all(|&(_, e)| e == first).then_some(first)
+    }
+
+    /// Re-send the recorded incomplete `Commit` to every worker lagging
+    /// exactly one epoch behind its target; returns whether any worker
+    /// accepted (so the caller re-reads manifests). A `StalePrepare`
+    /// answer also counts as resolved — the worker lost the staging
+    /// (e.g. restarted), and the follow-up manifest read decides
+    /// whether it is actually healthy.
+    fn heal_missed_commits(&self, manifests: &[(usize, u64)]) -> bool {
+        let Some((token, target)) = *self.unresolved.lock().unwrap() else {
+            return false;
+        };
+        // Only heal toward the recorded target: if the committed side
+        // has moved past it (or never reached it), this is not the
+        // failure we recorded.
+        if manifests.iter().map(|&(_, e)| e).max() != Some(target) {
+            return false;
+        }
+        let mut healed = false;
+        for (shard, &(_, e)) in self.shards.iter().zip(manifests) {
+            if e + 1 != target {
+                continue;
+            }
+            match shard.commit(token) {
+                Ok(epoch) => {
+                    log::info!(
+                        "auto-healed worker {}: committed token {token} to epoch {epoch} \
+                         after its missed commit",
+                        shard.addr()
+                    );
+                    healed = true;
+                }
+                Err(ClientError::Remote {
+                    code: ErrorCode::StalePrepare,
+                    ..
+                }) => {
+                    // Nothing staged under the token anymore; re-read
+                    // the manifest and let lockstep validation decide.
+                    healed = true;
+                }
+                Err(e) => {
+                    log::warn!(
+                        "auto-heal of worker {} failed: {e}; \
+                         run resolve_token({token}, true) once it is reachable",
+                        shard.addr()
+                    );
+                }
+            }
+        }
+        healed
     }
 }
 
 /// Per-request scoring budget over remote shards (mirror of
 /// `Router::scorings`; `p_features` is the cluster's FMBE feature
-/// count).
-fn scorings_for(kind: EstimatorKind, k: usize, l: usize, n: usize, p_features: usize) -> usize {
+/// count). Shared with `coordinator::ClusterBackend` so the cost table
+/// lives once for all cluster-serving paths.
+pub(crate) fn scorings_for(
+    kind: EstimatorKind,
+    k: usize,
+    l: usize,
+    n: usize,
+    p_features: usize,
+) -> usize {
     match kind {
         EstimatorKind::Exact => n,
         EstimatorKind::Uniform => l,
@@ -1200,6 +1347,8 @@ impl ClusterHandler {
         kind: EstimatorKind,
         k: usize,
         l: usize,
+        precision: Precision,
+        deadline_ns: u64,
         queries: &[Vec<f32>],
     ) -> WireResponse {
         let dim = self.cluster.dim();
@@ -1212,6 +1361,12 @@ impl ClusterHandler {
                 ),
             };
         }
+        // This handler has no ingress queue, so there is no drain point
+        // at which a queued deadline could be shed: execution starts
+        // immediately and the budget is ignored (`deadline_ns` is
+        // honored by the batcher when the cluster serves behind a
+        // `PartitionService` — `zest-server --cluster`).
+        let _ = deadline_ns;
         let started = Instant::now();
         // Fork a per-request RNG (held lock is momentary) so concurrent
         // requests never serialize on the scatter's wire round-trips;
@@ -1224,7 +1379,9 @@ impl ClusterHandler {
         } else {
             Rng::seeded(0) // never drawn from
         };
-        let answer = self.cluster.estimate_batch(kind, k, l, queries, &mut rng);
+        let answer = self
+            .cluster
+            .estimate_batch(kind, k, l, precision, queries, &mut rng);
         let exec_ns = started.elapsed().as_nanos() as u64;
         match answer {
             Ok(answer) => {
@@ -1271,15 +1428,31 @@ impl Handler for ClusterHandler {
                 dim: self.cluster.dim() as u64,
                 epoch: self.cluster.epoch(),
             },
-            WireRequest::Estimate { kind, k, l, query } => {
-                self.estimate_block(kind, k as usize, l as usize, std::slice::from_ref(&query))
-            }
+            WireRequest::Estimate {
+                kind,
+                k,
+                l,
+                precision,
+                deadline_ns,
+                query,
+            } => self.estimate_block(
+                kind,
+                k as usize,
+                l as usize,
+                precision,
+                deadline_ns,
+                std::slice::from_ref(&query),
+            ),
             WireRequest::EstimateBatch {
                 kind,
                 k,
                 l,
+                precision,
+                deadline_ns,
                 queries,
-            } => self.estimate_block(kind, k as usize, l as usize, &queries),
+            } => {
+                self.estimate_block(kind, k as usize, l as usize, precision, deadline_ns, &queries)
+            }
             _ => WireResponse::Error {
                 code: ErrorCode::Unsupported,
                 message: "shard-worker operation sent to a partition server".to_string(),

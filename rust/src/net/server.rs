@@ -18,10 +18,11 @@
 
 use super::wire::{self, ErrorCode, Request, Response};
 use super::{Addr, Listener, Stream};
-use crate::coordinator::{PartitionService, ServiceMetrics, SubmitError};
+use crate::coordinator::{EstimateSpec, PartitionService, Precision, ServiceMetrics, SubmitError};
+use crate::estimators::EstimatorKind;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Serves decoded requests. Implementations: [`ServiceHandler`]
 /// (partition server), [`super::shard::ShardWorker`] (shard worker),
@@ -252,12 +253,39 @@ impl ServiceHandler {
         let code = match e {
             SubmitError::Overloaded => ErrorCode::Overloaded,
             SubmitError::Closed => ErrorCode::Closed,
+            SubmitError::DeadlineExceeded => ErrorCode::DeadlineExceeded,
             SubmitError::DimMismatch { .. } => ErrorCode::DimMismatch,
         };
         Response::Error {
             code,
             message: e.to_string(),
         }
+    }
+
+    /// The wire deadline budget as an absolute instant (one clock read
+    /// per request frame, shared by every query of a batch).
+    fn wire_deadline(deadline_ns: u64) -> Option<Instant> {
+        (deadline_ns > 0).then(|| Instant::now() + Duration::from_nanos(deadline_ns))
+    }
+
+    /// The wire request fields as an in-process [`EstimateSpec`].
+    fn to_spec(
+        query: Vec<f32>,
+        kind: EstimatorKind,
+        k: u64,
+        l: u64,
+        precision: Precision,
+        deadline: Option<Instant>,
+    ) -> EstimateSpec {
+        let mut spec = EstimateSpec::new(query)
+            .kind(kind)
+            .k(k as usize)
+            .l(l as usize)
+            .precision(precision);
+        if let Some(d) = deadline {
+            spec = spec.deadline(d);
+        }
+        spec
     }
 
     fn to_wire(r: crate::coordinator::Response) -> wire::Estimate {
@@ -284,13 +312,19 @@ impl Handler for ServiceHandler {
                     epoch,
                 }
             }
-            Request::Estimate { kind, k, l, query } => {
-                match self.svc.estimate(crate::coordinator::Request {
-                    query,
-                    kind,
-                    k: k as usize,
-                    l: l as usize,
-                }) {
+            Request::Estimate {
+                kind,
+                k,
+                l,
+                precision,
+                deadline_ns,
+                query,
+            } => {
+                let deadline = Self::wire_deadline(deadline_ns);
+                match self
+                    .svc
+                    .estimate(Self::to_spec(query, kind, k, l, precision, deadline))
+                {
                     Ok(r) => Response::Estimates(vec![Self::to_wire(r)]),
                     Err(e) => Self::submit_error(e),
                 }
@@ -299,19 +333,22 @@ impl Handler for ServiceHandler {
                 kind,
                 k,
                 l,
+                precision,
+                deadline_ns,
                 queries,
             } => {
                 // Submit the whole block, then collect in order — the
                 // service's batcher coalesces them into shared
-                // estimate_batch groups.
+                // estimate_batch groups. One absolute deadline for the
+                // whole block (single clock read), so every query shares
+                // the wire budget exactly.
+                let deadline = Self::wire_deadline(deadline_ns);
                 let mut receivers = Vec::with_capacity(queries.len());
                 for query in queries {
-                    match self.svc.submit(crate::coordinator::Request {
-                        query,
-                        kind,
-                        k: k as usize,
-                        l: l as usize,
-                    }) {
+                    match self
+                        .svc
+                        .submit(Self::to_spec(query, kind, k, l, precision, deadline))
+                    {
                         Ok(rx) => receivers.push(rx),
                         Err(e) => return Self::submit_error(e),
                     }
@@ -320,11 +357,17 @@ impl Handler for ServiceHandler {
                 for rx in receivers {
                     match rx.recv() {
                         Ok(r) => items.push(Self::to_wire(r)),
+                        // A dropped reply channel is either the batcher's
+                        // drain-time deadline shed or a shutdown/backend
+                        // failure — the deadline tells which.
                         Err(_) => {
-                            return Response::Error {
-                                code: ErrorCode::Closed,
-                                message: "service closed mid-batch".to_string(),
-                            }
+                            let expired =
+                                deadline.is_some_and(|d| Instant::now() >= d);
+                            return Self::submit_error(if expired {
+                                SubmitError::DeadlineExceeded
+                            } else {
+                                SubmitError::Closed
+                            });
                         }
                     }
                 }
@@ -334,6 +377,7 @@ impl Handler for ServiceHandler {
             Request::TopK { .. }
             | Request::ExpSumChain { .. }
             | Request::ExpSumChainBatch { .. }
+            | Request::ExpSumPart { .. }
             | Request::ScoreIds { .. }
             | Request::PrepareAdd { .. }
             | Request::PrepareRemove { .. }

@@ -162,6 +162,26 @@ impl Handler for ShardWorker {
                 }
                 Response::ExpSums(zs)
             }
+            Request::ExpSumPart { queries } => {
+                let snap = self.handle.load();
+                let d = StoreView::dim(snap.store.as_ref());
+                if let Some(resp) = queries
+                    .first()
+                    .and_then(|q| self.check_dim(q.len(), d))
+                {
+                    return resp;
+                }
+                // Partial sums from zero over this worker's rows: the
+                // same batched gemm kernel as the chained op seeded with
+                // zero accumulators, so the pipelined reduction differs
+                // from the chain only in the final f64 grouping.
+                let mut zs = vec![0f64; queries.len()];
+                if !queries.is_empty() {
+                    let qs_flat = linalg::flatten_queries(&queries, d);
+                    exp_sum_view_batch(snap.store.as_ref(), &qs_flat, queries.len(), &mut zs);
+                }
+                Response::ExpSums(zs)
+            }
             Request::ScoreIds { ids, query } => {
                 let snap = self.handle.load();
                 let view = snap.store.as_ref();
@@ -321,6 +341,38 @@ mod tests {
             panic!("{resp:?}");
         };
         assert_eq!(acc[0].to_bits(), (10.0 + local).to_bits());
+    }
+
+    /// `ExpSumPart` equals the chained batch op seeded with zeros, bit
+    /// for bit — the pipelined fan-out's per-worker contract.
+    #[test]
+    fn exp_sum_part_matches_zero_seeded_chain() {
+        let (w, s) = worker(100, 8);
+        let queries: Vec<Vec<f32>> = (0..3).map(|i| s.row(i * 30).to_vec()).collect();
+        let part = w.handle(Request::ExpSumPart {
+            queries: queries.clone(),
+        });
+        let chain = w.handle(Request::ExpSumChainBatch {
+            acc_in: vec![0.0; queries.len()],
+            queries,
+        });
+        let (Response::ExpSums(part), Response::ExpSums(chain)) = (part, chain) else {
+            panic!("non-ExpSums answer");
+        };
+        for (p, c) in part.iter().zip(&chain) {
+            assert_eq!(p.to_bits(), c.to_bits());
+        }
+        // Dimension mismatches are an error frame, not a panic.
+        let resp = w.handle(Request::ExpSumPart {
+            queries: vec![vec![0.0; 3]],
+        });
+        assert!(matches!(
+            resp,
+            Response::Error {
+                code: ErrorCode::DimMismatch,
+                ..
+            }
+        ));
     }
 
     #[test]

@@ -38,14 +38,18 @@
 //! `borrowed_encode_matches_owned`), then send via
 //! `Pool::call_encoded` in [`super::client`].
 
+use crate::coordinator::Precision;
 use crate::estimators::EstimatorKind;
 use crate::mips::Hit;
 use std::io::{Read, Write};
 
 /// Frame magic: "ZNW1" (Zest NetWork, format 1).
 pub const MAGIC: [u8; 4] = *b"ZNW1";
-/// Protocol version carried in every frame header.
-pub const VERSION: u16 = 1;
+/// Protocol version carried in every frame header. Version 2 extended
+/// `Estimate`/`EstimateBatch` with a precision byte and a deadline
+/// budget, and added the `ExpSumPart` worker op (see `docs/WIRE.md`
+/// §8 for the history).
+pub const VERSION: u16 = 2;
 /// Upper bound on one frame's payload (guards against allocating
 /// attacker-controlled lengths; also the practical cap on one
 /// `PrepareAdd` row shipment — ~64M f32s).
@@ -120,6 +124,10 @@ pub enum ErrorCode {
     /// Connection limit reached; the server closes this connection
     /// right after the error frame.
     ConnLimit,
+    /// The request's deadline budget expired before it could execute
+    /// (rejected at submit, shed by the batcher at drain time, or
+    /// already expired on receipt).
+    DeadlineExceeded,
     /// Forward-compatibility catch-all.
     Unknown(u16),
 }
@@ -137,6 +145,7 @@ impl ErrorCode {
             ErrorCode::StalePrepare => 7,
             ErrorCode::Busy => 8,
             ErrorCode::ConnLimit => 9,
+            ErrorCode::DeadlineExceeded => 10,
             ErrorCode::Unknown(v) => v,
         }
     }
@@ -154,6 +163,7 @@ impl ErrorCode {
             7 => ErrorCode::StalePrepare,
             8 => ErrorCode::Busy,
             9 => ErrorCode::ConnLimit,
+            10 => ErrorCode::DeadlineExceeded,
             other => ErrorCode::Unknown(other),
         }
     }
@@ -171,13 +181,24 @@ pub enum Request {
         kind: EstimatorKind,
         k: u64,
         l: u64,
+        /// Bit-exact vs pipelined multi-worker `Exact` (byte 0/1 on the
+        /// wire; unknown bytes are malformed).
+        precision: Precision,
+        /// Remaining deadline budget in nanoseconds, measured from the
+        /// server's receipt of the frame; 0 = no deadline. Relative
+        /// rather than absolute so clocks never need to agree.
+        deadline_ns: u64,
         query: Vec<f32>,
     },
-    /// A query block of one (kind, k, l) configuration.
+    /// A query block of one (kind, k, l, precision) configuration.
     EstimateBatch {
         kind: EstimatorKind,
         k: u64,
         l: u64,
+        /// Shared precision mode of the block (see [`Request::Estimate`]).
+        precision: Precision,
+        /// Shared deadline budget of the block in nanoseconds (0 = none).
+        deadline_ns: u64,
         queries: Vec<Vec<f32>>,
     },
     /// Shard worker: top-k for every query, local ids.
@@ -210,6 +231,18 @@ pub enum Request {
     Commit { token: u64 },
     /// Drop a staged preparation.
     Abort { token: u64 },
+    /// Shard worker: **partial** exp-sums over this worker's rows only —
+    /// one f64 per query, accumulated from zero in strict local row
+    /// order (the same kernel as [`Request::ExpSumChainBatch`] seeded
+    /// with zeros). The pipelined-`Exact` fan-out op: the cluster sends
+    /// it to all workers concurrently and reduces the partials in
+    /// worker order, trading the chained mode's bit-exactness
+    /// (last-ulp-different f64 summation grouping) for
+    /// max-over-workers latency.
+    ExpSumPart {
+        /// The query block to partially exp-sum.
+        queries: Vec<Vec<f32>>,
+    },
     /// Shard worker: fit FMBE random-feature sums over the worker's
     /// local rows and return the per-feature λ̃ vector
     /// ([`Response::Lambdas`]). The feature draw depends only on
@@ -490,6 +523,25 @@ fn kind_to_u8(kind: EstimatorKind) -> u8 {
     }
 }
 
+fn precision_to_u8(p: Precision) -> u8 {
+    match p {
+        Precision::BitExact => 0,
+        Precision::Pipelined => 1,
+    }
+}
+
+fn precision_from_u8(v: u8) -> Result<Precision> {
+    Ok(match v {
+        0 => Precision::BitExact,
+        1 => Precision::Pipelined,
+        other => {
+            return Err(WireError::Malformed(format!(
+                "unknown precision mode {other}"
+            )))
+        }
+    })
+}
+
 fn kind_from_u8(v: u8) -> Result<EstimatorKind> {
     Ok(match v {
         0 => EstimatorKind::Exact,
@@ -522,6 +574,7 @@ const REQ_PREPARE_REMOVE: u8 = 10;
 const REQ_COMMIT: u8 = 11;
 const REQ_ABORT: u8 = 12;
 const REQ_FIT_FMBE: u8 = 13;
+const REQ_EXP_SUM_PART: u8 = 14;
 
 const RESP_PONG: u8 = 1;
 const RESP_MANIFEST: u8 = 2;
@@ -541,11 +594,20 @@ impl Request {
         match self {
             Request::Ping => Enc::with_tag(REQ_PING).buf,
             Request::Manifest => Enc::with_tag(REQ_MANIFEST).buf,
-            Request::Estimate { kind, k, l, query } => {
+            Request::Estimate {
+                kind,
+                k,
+                l,
+                precision,
+                deadline_ns,
+                query,
+            } => {
                 let mut e = Enc::with_tag(REQ_ESTIMATE);
                 e.u8(kind_to_u8(*kind));
                 e.u64(*k);
                 e.u64(*l);
+                e.u8(precision_to_u8(*precision));
+                e.u64(*deadline_ns);
                 e.f32s(query);
                 e.buf
             }
@@ -553,12 +615,16 @@ impl Request {
                 kind,
                 k,
                 l,
+                precision,
+                deadline_ns,
                 queries,
             } => {
                 let mut e = Enc::with_tag(REQ_ESTIMATE_BATCH);
                 e.u8(kind_to_u8(*kind));
                 e.u64(*k);
                 e.u64(*l);
+                e.u8(precision_to_u8(*precision));
+                e.u64(*deadline_ns);
                 e.queries(queries);
                 e.buf
             }
@@ -615,6 +681,11 @@ impl Request {
                 e.u64(*p_features);
                 e.buf
             }
+            Request::ExpSumPart { queries } => {
+                let mut e = Enc::with_tag(REQ_EXP_SUM_PART);
+                e.queries(queries);
+                e.buf
+            }
         }
     }
 
@@ -630,12 +701,16 @@ impl Request {
                 kind: kind_from_u8(d.u8()?)?,
                 k: d.u64()?,
                 l: d.u64()?,
+                precision: precision_from_u8(d.u8()?)?,
+                deadline_ns: d.u64()?,
                 query: d.f32s()?,
             },
             REQ_ESTIMATE_BATCH => Request::EstimateBatch {
                 kind: kind_from_u8(d.u8()?)?,
                 k: d.u64()?,
                 l: d.u64()?,
+                precision: precision_from_u8(d.u8()?)?,
+                deadline_ns: d.u64()?,
                 queries: d.queries()?,
             },
             REQ_TOP_K => Request::TopK {
@@ -668,6 +743,9 @@ impl Request {
             REQ_FIT_FMBE => Request::FitFmbe {
                 seed: d.u64()?,
                 p_features: d.u64()?,
+            },
+            REQ_EXP_SUM_PART => Request::ExpSumPart {
+                queries: d.queries()?,
             },
             other => {
                 return Err(WireError::Malformed(format!("unknown request tag {other}")));
@@ -890,6 +968,13 @@ impl Encoded {
         Encoded::new(e.buf)
     }
 
+    /// Borrowed encode of [`Request::ExpSumPart`].
+    pub fn exp_sum_part(queries: &[Vec<f32>]) -> Encoded {
+        let mut e = Enc::with_tag(REQ_EXP_SUM_PART);
+        e.queries(queries);
+        Encoded::new(e.buf)
+    }
+
     /// Borrowed encode of [`Request::ScoreIds`].
     pub fn score_ids(ids: &[u64], query: &[f32]) -> Encoded {
         let mut e = Enc::with_tag(REQ_SCORE_IDS);
@@ -1056,24 +1141,27 @@ mod tests {
         out
     }
 
-    /// Golden bytes: the full Ping frame, byte for byte. Changing this
-    /// is a wire-format break.
+    /// Golden bytes: the full Ping frame, byte for byte (version 2).
+    /// Changing this is a wire-format break.
     #[test]
     fn golden_ping_frame() {
         let bytes = frame_bytes(&Request::Ping.encode());
         assert_eq!(
             bytes,
-            vec![b'Z', b'N', b'W', b'1', 0x01, 0x00, 0x01, 0x00, 0x00, 0x00, 0x01]
+            vec![b'Z', b'N', b'W', b'1', 0x02, 0x00, 0x01, 0x00, 0x00, 0x00, 0x01]
         );
     }
 
-    /// Golden bytes: an Estimate request payload with known fields.
+    /// Golden bytes: an Estimate request payload with known fields
+    /// (version 2 added the precision byte + deadline budget).
     #[test]
     fn golden_estimate_payload() {
         let req = Request::Estimate {
             kind: EstimatorKind::Mimps,
             k: 2,
             l: 3,
+            precision: Precision::Pipelined,
+            deadline_ns: 5_000,
             query: vec![1.0, -2.0],
         };
         #[rustfmt::skip]
@@ -1082,9 +1170,38 @@ mod tests {
             0x03,                                           // kind = Mimps
             0x02, 0, 0, 0, 0, 0, 0, 0,                      // k = 2
             0x03, 0, 0, 0, 0, 0, 0, 0,                      // l = 3
+            0x01,                                           // precision = Pipelined
+            0x88, 0x13, 0, 0, 0, 0, 0, 0,                   // deadline_ns = 5000
             0x02, 0, 0, 0,                                  // query len = 2
             0x00, 0x00, 0x80, 0x3f,                         // 1.0f32
             0x00, 0x00, 0x00, 0xc0,                         // -2.0f32
+        ];
+        assert_eq!(req.encode(), want);
+        assert_eq!(Request::decode(&want).unwrap(), req);
+        // An unknown precision byte is malformed, not defaulted.
+        let mut bad = want.clone();
+        bad[18] = 7;
+        assert!(matches!(
+            Request::decode(&bad),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    /// Golden bytes: an ExpSumPart request payload with known fields.
+    #[test]
+    fn golden_exp_sum_part_payload() {
+        let req = Request::ExpSumPart {
+            queries: vec![vec![1.0, -2.0], vec![0.5, 0.25]],
+        };
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x0e,                                           // tag
+            0x02, 0, 0, 0,                                  // 2 queries
+            0x02, 0, 0, 0,                                  // dim = 2
+            0x00, 0x00, 0x80, 0x3f,                         // 1.0f32
+            0x00, 0x00, 0x00, 0xc0,                         // -2.0f32
+            0x00, 0x00, 0x00, 0x3f,                         // 0.5f32
+            0x00, 0x00, 0x80, 0x3e,                         // 0.25f32
         ];
         assert_eq!(req.encode(), want);
         assert_eq!(Request::decode(&want).unwrap(), req);
@@ -1192,6 +1309,12 @@ mod tests {
                 },
             ),
             (
+                Encoded::exp_sum_part(&queries),
+                Request::ExpSumPart {
+                    queries: queries.clone(),
+                },
+            ),
+            (
                 Encoded::score_ids(&ids, &q),
                 Request::ScoreIds {
                     ids: ids.clone(),
@@ -1239,13 +1362,20 @@ mod tests {
                 kind: EstimatorKind::Exact,
                 k: 0,
                 l: 0,
+                precision: Precision::BitExact,
+                deadline_ns: 0,
                 query: vec![0.25, 1e30, -0.0],
             },
             Request::EstimateBatch {
                 kind: EstimatorKind::Fmbe,
                 k: 10,
                 l: 20,
+                precision: Precision::Pipelined,
+                deadline_ns: u64::MAX,
                 queries: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            },
+            Request::ExpSumPart {
+                queries: vec![vec![0.5; 3]; 2],
             },
             Request::TopK {
                 k: 5,
@@ -1435,6 +1565,7 @@ mod tests {
             ErrorCode::StalePrepare,
             ErrorCode::Busy,
             ErrorCode::ConnLimit,
+            ErrorCode::DeadlineExceeded,
             ErrorCode::Unknown(4242),
         ] {
             assert_eq!(ErrorCode::from_u16(code.as_u16()), code);

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 use zest::coordinator::{
-    BackpressurePolicy, BatcherConfig, PartitionService, Request, Router, ServiceConfig,
+    BackpressurePolicy, BatcherConfig, EstimateSpec, PartitionService, Router, ServiceConfig,
     SubmitError,
 };
 use zest::data::embeddings::EmbeddingStore;
@@ -58,22 +58,17 @@ fn nan_query_does_not_wedge_service() {
     );
     let mut bad = vec![0f32; s.dim()];
     bad[0] = f32::NAN;
-    let r = svc.estimate(Request {
-        query: bad,
-        kind: EstimatorKind::Mimps,
-        k: 10,
-        l: 10,
-    });
+    let r = svc.estimate(EstimateSpec::new(bad).kind(EstimatorKind::Mimps).k(10).l(10));
     // Either a response (possibly NaN) or nothing — but not a hang/panic.
     assert!(r.is_ok());
     // The service still answers a sane request afterwards.
     let ok = svc
-        .estimate(Request {
-            query: s.row(0).to_vec(),
-            kind: EstimatorKind::Mimps,
-            k: 10,
-            l: 10,
-        })
+        .estimate(
+            EstimateSpec::new(s.row(0).to_vec())
+                .kind(EstimatorKind::Mimps)
+                .k(10)
+                .l(10),
+        )
         .unwrap();
     assert!(ok.z.is_finite());
     svc.shutdown();
@@ -147,12 +142,7 @@ fn overload_sheds_but_completes_accepted() {
     let mut accepted = Vec::new();
     let mut shed = 0usize;
     for i in 0..300 {
-        match svc.submit(Request {
-            query: s.row(i % s.len()).to_vec(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        }) {
+        match svc.submit(EstimateSpec::new(s.row(i % s.len()).to_vec())) {
             Ok(rx) => accepted.push(rx),
             Err(SubmitError::Overloaded) => shed += 1,
             Err(e) => panic!("unexpected {e}"),

@@ -131,12 +131,7 @@ fn service_exact_via_pjrt_matches_native() {
         let q = store.row(qi).to_vec();
         let want = brute.partition(&q);
         let resp = svc
-            .estimate(zest::coordinator::Request {
-                query: q,
-                kind: EstimatorKind::Exact,
-                k: 0,
-                l: 0,
-            })
+            .estimate(zest::coordinator::EstimateSpec::new(q))
             .unwrap();
         let rel = ((resp.z - want) / want).abs();
         assert!(rel < 1e-3, "qi={qi}: pjrt-exact {} vs {want}", resp.z);
@@ -171,12 +166,12 @@ fn service_mimps_over_tree_index() {
         let q = store.row(qi).to_vec();
         let want = brute.partition(&q);
         let r = svc
-            .estimate(zest::coordinator::Request {
-                query: q,
-                kind: EstimatorKind::Mimps,
-                k: 100,
-                l: 100,
-            })
+            .estimate(
+                zest::coordinator::EstimateSpec::new(q)
+                    .kind(EstimatorKind::Mimps)
+                    .k(100)
+                    .l(100),
+            )
             .unwrap();
         errs.push(zest::metrics::abs_rel_err_pct(r.z, want));
     }

@@ -24,7 +24,10 @@ use std::io::Write as _;
 use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use zest::coordinator::{PartitionService, Request, Router, ServiceConfig, ServiceMetrics};
+use zest::coordinator::{
+    ClusterBackend, EstimateSpec, PartitionService, Precision, Router, ServiceConfig,
+    ServiceMetrics, SubmitError,
+};
 use zest::data::embeddings::EmbeddingStore;
 use zest::data::synth::{generate, SynthConfig};
 use zest::estimators::fmbe::{Fmbe, FmbeConfig};
@@ -163,7 +166,7 @@ fn remote_mince_and_fmbe_match_in_process() {
 
         let mut rng = Rng::seeded(seed);
         let mince = cluster
-            .estimate_batch(EstimatorKind::Mince, k, l, &qs, &mut rng)
+            .estimate_batch(EstimatorKind::Mince, k, l, Precision::BitExact, &qs, &mut rng)
             .unwrap();
         assert_eq!(mince.epoch, 0);
         for (qi, (got, want)) in mince.zs.iter().zip(&want_mince).enumerate() {
@@ -176,7 +179,7 @@ fn remote_mince_and_fmbe_match_in_process() {
 
         let mut rng = Rng::seeded(0); // FMBE draws nothing from it
         let fmbe = cluster
-            .estimate_batch(EstimatorKind::Fmbe, 0, 0, &qs, &mut rng)
+            .estimate_batch(EstimatorKind::Fmbe, 0, 0, Precision::BitExact, &qs, &mut rng)
             .unwrap();
         for (qi, (got, want)) in fmbe.zs.iter().zip(&want_fmbe).enumerate() {
             if count == 1 {
@@ -195,7 +198,14 @@ fn remote_mince_and_fmbe_match_in_process() {
         }
         // Second call answers from the epoch-tagged cached fit (same bits).
         let again = cluster
-            .estimate_batch(EstimatorKind::Fmbe, 0, 0, &qs, &mut Rng::seeded(0))
+            .estimate_batch(
+                EstimatorKind::Fmbe,
+                0,
+                0,
+                Precision::BitExact,
+                &qs,
+                &mut Rng::seeded(0),
+            )
             .unwrap();
         for (a, b) in again.zs.iter().zip(&fmbe.zs) {
             assert_eq!(a.to_bits(), b.to_bits());
@@ -415,22 +425,8 @@ fn client_mirrors_in_process_service_over_uds() {
     // Exact answers are deterministic → remote equals in-process bit
     // for bit (both are a batch-of-one through the same service).
     let q = s.row(123).to_vec();
-    let local = svc
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
-    let remote = client
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let local = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+    let remote = client.estimate(EstimateSpec::new(q.clone())).unwrap();
     assert_eq!(remote.z.to_bits(), local.z.to_bits());
     assert_eq!(remote.kind, EstimatorKind::Exact);
     assert_eq!(remote.epoch, 0);
@@ -439,7 +435,10 @@ fn client_mirrors_in_process_service_over_uds() {
     // Batched mirror.
     let qs: Vec<Vec<f32>> = (0..5).map(|i| s.row(i * 90 + 1).to_vec()).collect();
     let batch = client
-        .estimate_batch(EstimatorKind::Mimps, 50, 50, qs.clone())
+        .estimate_batch(
+            &EstimateSpec::template().kind(EstimatorKind::Mimps).k(50).l(50),
+            qs.clone(),
+        )
         .unwrap();
     assert_eq!(batch.len(), 5);
     for r in &batch {
@@ -448,14 +447,7 @@ fn client_mirrors_in_process_service_over_uds() {
     }
 
     // Submit-time validation arrives as a typed remote error.
-    let err = client
-        .estimate(Request {
-            query: vec![0.0; 3],
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap_err();
+    let err = client.estimate(EstimateSpec::new(vec![0.0; 3])).unwrap_err();
     match err {
         ClientError::Remote { code, message } => {
             assert_eq!(code, wire::ErrorCode::DimMismatch);
@@ -505,14 +497,7 @@ fn cluster_served_estimates_match_in_process() {
 
     // Exact: bit-identical to the in-process batched kernel.
     let q = s.row(42).to_vec();
-    let remote = client
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap();
+    let remote = client.estimate(EstimateSpec::new(q.clone())).unwrap();
     let mono = BruteIndex::new(&s);
     let want: f64 = {
         let mut rng = Rng::seeded(0);
@@ -525,12 +510,12 @@ fn cluster_served_estimates_match_in_process() {
     // RNG), scored remotely — agrees to float tolerance (head scores
     // come from differently-chunked GEMM passes).
     let remote_m = client
-        .estimate(Request {
-            query: q.clone(),
-            kind: EstimatorKind::Mimps,
-            k: 60,
-            l: 40,
-        })
+        .estimate(
+            EstimateSpec::new(q.clone())
+                .kind(EstimatorKind::Mimps)
+                .k(60)
+                .l(40),
+        )
         .unwrap();
     let want_m: f64 = {
         // The handler seeds its RNG as seed ^ 0x5EED_0CEA and forks one
@@ -546,12 +531,7 @@ fn cluster_served_estimates_match_in_process() {
     // FMBE: the full client → server → FitFmbe-fan-out path answers,
     // matching an in-process fit to λ̃ summation-order tolerance.
     let remote_f = client
-        .estimate(Request {
-            query: q,
-            kind: EstimatorKind::Fmbe,
-            k: 0,
-            l: 0,
-        })
+        .estimate(EstimateSpec::new(q).kind(EstimatorKind::Fmbe))
         .unwrap();
     let want_f = Fmbe::fit(&s, fmbe_cfg).estimate_query(&s.row(42).to_vec());
     let rel = ((remote_f.z - want_f) / want_f).abs();
@@ -789,14 +769,7 @@ fn spawned_binaries_serve_exact_bit_identical() {
     let mono = BruteIndex::new(&s);
     for qi in [3usize, 250, 599] {
         let q = s.row(qi).to_vec();
-        let remote = client
-            .estimate(Request {
-                query: q.clone(),
-                kind: EstimatorKind::Exact,
-                k: 0,
-                l: 0,
-            })
-            .unwrap();
+        let remote = client.estimate(EstimateSpec::new(q.clone())).unwrap();
         let want: f64 = {
             let mut rng = Rng::seeded(0);
             let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
@@ -808,5 +781,381 @@ fn spawned_binaries_serve_exact_bit_identical() {
             "q{qi}: remote {} vs in-process {want}",
             remote.z
         );
+    }
+}
+
+/// ACCEPTANCE: the two-mode `Exact` over remote shards.
+/// `Precision::BitExact` (the sequential chain) stays bit-identical to
+/// the in-process batched kernel; `Precision::Pipelined` (the
+/// `ExpSumPart` fan-out, reduced in worker order) matches it within a
+/// tight relative-error bound — and bit-exactly at S = 1, where the
+/// reduce adds a single partial to zero. Pinned for S ∈ {1, 2, 4}.
+#[test]
+fn pipelined_exact_matches_chain_within_ulp_bound() {
+    let s = store(600, 16);
+    let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(i * 140 + 11).to_vec()).collect();
+    let mono = BruteIndex::new(&s);
+    let want: Vec<f64> = {
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+        Exact.estimate_batch(&mut ctx, &qs)
+    };
+    for count in [1usize, 2, 4] {
+        let (servers, addrs) = spawn_workers(&s, count, "pipelined");
+        let cluster = RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap();
+
+        let chained = cluster.exp_sum_batch(&qs).unwrap();
+        let pipelined = cluster.exp_sum_parts(&qs).unwrap();
+        for (qi, ((c, p), w)) in chained.iter().zip(&pipelined).zip(&want).enumerate() {
+            assert_eq!(
+                c.to_bits(),
+                w.to_bits(),
+                "S={count} q{qi}: chained {c} vs in-process {w}"
+            );
+            if count == 1 {
+                assert_eq!(
+                    p.to_bits(),
+                    w.to_bits(),
+                    "S=1 q{qi}: pipelined must equal the chain bit for bit"
+                );
+            } else {
+                let rel = ((p - w) / w).abs();
+                assert!(
+                    rel < 1e-12,
+                    "S={count} q{qi}: pipelined {p} vs chained {w} (rel {rel})"
+                );
+            }
+        }
+
+        // The same two modes through the cluster's estimator entry point.
+        let mut rng = Rng::seeded(0);
+        let bit = cluster
+            .estimate_batch(
+                EstimatorKind::Exact,
+                0,
+                0,
+                Precision::BitExact,
+                &qs,
+                &mut rng,
+            )
+            .unwrap();
+        let pipe = cluster
+            .estimate_batch(
+                EstimatorKind::Exact,
+                0,
+                0,
+                Precision::Pipelined,
+                &qs,
+                &mut rng,
+            )
+            .unwrap();
+        for ((b, p), w) in bit.zs.iter().zip(&pipe.zs).zip(&want) {
+            assert_eq!(b.to_bits(), w.to_bits());
+            let rel = ((p - w) / w).abs();
+            assert!(rel < 1e-12, "pipelined {p} vs {w} (rel {rel})");
+        }
+
+        drop(cluster);
+        for server in servers {
+            server.shutdown();
+        }
+    }
+}
+
+/// ACCEPTANCE: `PartitionService::start_with_backend(ClusterBackend::…)`
+/// serves estimate/estimate_batch **through the dynamic batcher** with
+/// metrics populated — the batching/backpressure/metrics front-end over
+/// a remote cluster for the first time. `Precision::BitExact` answers
+/// stay bit-identical to in-process `Exact` for S ∈ {1, 2, 4};
+/// `Precision::Pipelined` passes the documented relative-error bound.
+#[test]
+fn cluster_backend_serves_through_batcher_with_metrics() {
+    let s = store(600, 16);
+    let qs: Vec<Vec<f32>> = (0..6).map(|i| s.row(i * 90 + 5).to_vec()).collect();
+    let mono = BruteIndex::new(&s);
+    let want: Vec<f64> = {
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext::new(&s, &mono, &mut rng);
+        Exact.estimate_batch(&mut ctx, &qs)
+    };
+    for count in [1usize, 2, 4] {
+        let (servers, addrs) = spawn_workers(&s, count, &format!("svcback{count}"));
+        let svc = PartitionService::start_with_backend(
+            ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+            ServiceConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(svc.dim(), 16);
+        assert_eq!(svc.serving_info(), (600, 0));
+
+        // estimate: both precision modes, one request each.
+        let r_bit = svc.estimate(EstimateSpec::new(qs[0].clone())).unwrap();
+        assert_eq!(
+            r_bit.z.to_bits(),
+            want[0].to_bits(),
+            "S={count}: batched BitExact over ClusterBackend vs in-process"
+        );
+        assert_eq!(r_bit.scorings, 600);
+        assert_eq!(r_bit.epoch, 0);
+        let r_pipe = svc
+            .estimate(EstimateSpec::new(qs[0].clone()).precision(Precision::Pipelined))
+            .unwrap();
+        let rel = ((r_pipe.z - want[0]) / want[0]).abs();
+        assert!(rel < 1e-12, "pipelined {} vs {} (rel {rel})", r_pipe.z, want[0]);
+
+        // estimate_batch: a submitted block coalesces through the
+        // batcher into shared estimate_batch groups.
+        let rxs: Vec<_> = qs
+            .iter()
+            .map(|q| svc.submit(EstimateSpec::new(q.clone())).unwrap())
+            .collect();
+        for (rx, w) in rxs.into_iter().zip(&want) {
+            assert_eq!(rx.recv().unwrap().z.to_bits(), w.to_bits());
+        }
+
+        // A sampler scatters through the same backend.
+        let rm = svc
+            .estimate(
+                EstimateSpec::new(qs[1].clone())
+                    .kind(EstimatorKind::Mimps)
+                    .k(50)
+                    .l(50),
+            )
+            .unwrap();
+        assert!(rm.z.is_finite() && rm.z > 0.0);
+        assert_eq!(rm.scorings, 100);
+
+        let m = svc.metrics();
+        assert_eq!(m.completed, 9, "S={count}: {m}");
+        assert!(m.batches >= 1);
+        assert!(m.batch_throughput_rps > 0.0);
+        assert_eq!(m.backend_errors, 0);
+        assert_eq!(
+            m.shard_stats.len(),
+            count,
+            "per-worker metrics populated: {m}"
+        );
+        assert!(m.shard_stats.iter().all(|st| st.batches >= 1));
+
+        svc.shutdown(); // drops the backend → releases worker pools
+        for server in servers {
+            server.shutdown();
+        }
+    }
+}
+
+/// Batcher deadline-shed and backpressure, driven through
+/// `start_with_backend` with a `ClusterBackend`: a deadline that
+/// expires while queued is shed at drain time (typed error + metric), a
+/// full queue under `Shed` rejects with `Overloaded`.
+#[test]
+fn cluster_backend_deadline_shed_and_backpressure() {
+    /// Wraps a [`ShardWorker`], sleeping on every exp-sum op so batches
+    /// are slow enough to fill the queue deterministically.
+    struct SlowScore {
+        inner: ShardWorker,
+        delay: std::time::Duration,
+    }
+
+    impl Handler for SlowScore {
+        fn handle(&self, req: wire::Request) -> wire::Response {
+            if matches!(
+                req,
+                wire::Request::ExpSumChain { .. }
+                    | wire::Request::ExpSumChainBatch { .. }
+                    | wire::Request::ExpSumPart { .. }
+            ) {
+                std::thread::sleep(self.delay);
+            }
+            self.inner.handle(req)
+        }
+    }
+
+    let s = store(160, 8);
+    let addr = sock_addr("slowworker");
+    let server = Server::serve(
+        &addr,
+        Arc::new(SlowScore {
+            inner: ShardWorker::new(s.clone()),
+            delay: std::time::Duration::from_millis(20),
+        }),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let addrs = vec![server.local_addr().clone()];
+
+    // Deadline shedding: a long batcher wait guarantees the short
+    // deadline expires while the request is queued, so the drain-time
+    // sweep sheds it and the caller gets the typed error.
+    let svc = PartitionService::start_with_backend(
+        ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+        ServiceConfig {
+            workers: 1,
+            batcher: zest::coordinator::BatcherConfig {
+                max_batch: 64,
+                max_wait: std::time::Duration::from_millis(300),
+            },
+            ..Default::default()
+        },
+    );
+    let q = s.row(0).to_vec();
+    let err = svc
+        .estimate(
+            EstimateSpec::new(q.clone()).deadline_in(std::time::Duration::from_millis(50)),
+        )
+        .unwrap_err();
+    assert_eq!(err, SubmitError::DeadlineExceeded);
+    assert_eq!(svc.metrics().deadline_shed, 1);
+    // An already-expired deadline is rejected at submit.
+    let err = svc
+        .estimate(
+            EstimateSpec::new(q.clone())
+                .deadline(std::time::Instant::now() - std::time::Duration::from_millis(1)),
+        )
+        .unwrap_err();
+    assert_eq!(err, SubmitError::DeadlineExceeded);
+    assert_eq!(svc.metrics().deadline_shed, 2);
+    // Deadline-free requests still answer correctly afterwards.
+    let ok = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+    assert!(ok.z.is_finite() && ok.z > 0.0);
+    svc.shutdown();
+
+    // Backpressure: tiny queue + slow remote batches → Shed policy
+    // rejects with Overloaded and counts the shed load.
+    let svc = PartitionService::start_with_backend(
+        ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+        ServiceConfig {
+            workers: 1,
+            queue_capacity: 2,
+            backpressure: zest::coordinator::BackpressurePolicy::Shed,
+            batcher: zest::coordinator::BatcherConfig {
+                max_batch: 1,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ..Default::default()
+        },
+    );
+    let mut rejected = 0usize;
+    let mut receivers = Vec::new();
+    for i in 0..200 {
+        match svc.submit(EstimateSpec::new(s.row(i % s.len()).to_vec())) {
+            Ok(rx) => receivers.push(rx),
+            Err(SubmitError::Overloaded) => rejected += 1,
+            Err(e) => panic!("{e}"),
+        }
+    }
+    assert!(rejected > 0, "flood over a slow cluster should shed load");
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.shed as usize, rejected, "{m}");
+    svc.shutdown();
+    server.shutdown();
+}
+
+/// `RemoteCluster::refresh` auto-heals a worker that missed a commit:
+/// after a publish whose commit phase failed on one worker (simulated
+/// outage), the cluster is out of lockstep and the publish reports the
+/// error — then, once the worker is reachable again, a plain
+/// `refresh()` detects the one-epoch lag, re-sends the recorded commit,
+/// and restores lockstep without operator intervention.
+#[test]
+fn refresh_auto_heals_a_missed_commit() {
+    use std::sync::atomic::AtomicBool;
+
+    /// Wraps a [`ShardWorker`]; while `blocked`, every `Commit` answers
+    /// an injected `Internal` error (the worker is "unreachable" for
+    /// the commit phase but keeps its staged preparation).
+    struct FlakyCommit {
+        inner: ShardWorker,
+        blocked: Arc<AtomicBool>,
+    }
+
+    impl Handler for FlakyCommit {
+        fn handle(&self, req: wire::Request) -> wire::Response {
+            if matches!(req, wire::Request::Commit { .. })
+                && self.blocked.load(Ordering::SeqCst)
+            {
+                return wire::Response::Error {
+                    code: wire::ErrorCode::Internal,
+                    message: "injected outage".to_string(),
+                };
+            }
+            self.inner.handle(req)
+        }
+    }
+
+    let s = store(240, 8);
+    let blocked = Arc::new(AtomicBool::new(false));
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for (i, block) in aligned_split(&s, 2).into_iter().enumerate() {
+        let addr = sock_addr(&format!("heal{i}"));
+        let handler: Arc<dyn Handler> = if i == 1 {
+            Arc::new(FlakyCommit {
+                inner: ShardWorker::new(block),
+                blocked: blocked.clone(),
+            })
+        } else {
+            Arc::new(ShardWorker::new(block))
+        };
+        let server = Server::serve(
+            &addr,
+            handler,
+            ServerConfig::default(),
+            Arc::new(ServiceMetrics::new()),
+        )
+        .unwrap();
+        addrs.push(server.local_addr().clone());
+        servers.push(server);
+    }
+    let cluster = RemoteCluster::connect(&addrs, ClientConfig::default()).unwrap();
+    let q = s.row(3).to_vec();
+    let before = cluster.exp_sum(&q).unwrap();
+
+    // Publish with worker 1's commits failing: worker 0 commits epoch 1,
+    // worker 1 stays at epoch 0 holding the staged preparation.
+    blocked.store(true, Ordering::SeqCst);
+    let added = generate(&SynthConfig {
+        n: 8,
+        d: 8,
+        seed: 21,
+        ..SynthConfig::tiny()
+    });
+    assert!(
+        cluster.add_categories(&added).is_err(),
+        "a failed commit phase must surface"
+    );
+    assert!(
+        cluster.refresh().is_err(),
+        "workers are out of lockstep while the outage lasts"
+    );
+
+    // The worker reconnects; a plain refresh heals the missed commit.
+    blocked.store(false, Ordering::SeqCst);
+    cluster.refresh().unwrap();
+    assert_eq!(cluster.epoch(), 1, "lockstep restored at the target epoch");
+    assert_eq!(cluster.len(), 248);
+    // The healed cluster serves the grown category set (bit-identical:
+    // the appended rows land on the last worker, boundaries unchanged).
+    let mut combined = s.data().to_vec();
+    combined.extend_from_slice(added.data());
+    let grown = EmbeddingStore::from_data(248, 8, combined).unwrap();
+    let want = exp_sum_view(&grown, &q);
+    let got = cluster.exp_sum(&q).unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+    assert!(got > before);
+
+    // Healed state is sticky: another publish goes through cleanly.
+    assert_eq!(cluster.remove_categories(&[0]).unwrap(), 2);
+    assert_eq!(cluster.len(), 247);
+
+    drop(cluster);
+    for server in servers {
+        server.shutdown();
     }
 }

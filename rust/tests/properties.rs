@@ -264,6 +264,7 @@ fn prop_store_roundtrip_bit_exact() {
 /// unframe → decode unchanged (the codec is total on its own output).
 #[test]
 fn prop_wire_codec_roundtrips() {
+    use zest::coordinator::Precision;
     use zest::estimators::EstimatorKind;
     use zest::mips::Hit;
     use zest::net::wire::{self, ErrorCode, Estimate, Request, Response};
@@ -283,20 +284,32 @@ fn prop_wire_codec_roundtrips() {
         all[rng.below(all.len())]
     }
 
+    fn random_precision(rng: &mut Rng) -> Precision {
+        if rng.below(2) == 0 {
+            Precision::BitExact
+        } else {
+            Precision::Pipelined
+        }
+    }
+
     check(200, |rng| {
-        let req = match rng.below(13) {
+        let req = match rng.below(14) {
             0 => Request::Ping,
             1 => Request::Manifest,
             2 => Request::Estimate {
                 kind: random_kind(rng),
                 k: rng.next_u64() >> 32,
                 l: rng.next_u64() >> 32,
+                precision: random_precision(rng),
+                deadline_ns: rng.next_u64() >> 8,
                 query: random_query(rng, rng.range(1, 32)),
             },
             3 => Request::EstimateBatch {
                 kind: random_kind(rng),
                 k: rng.below(1000) as u64,
                 l: rng.below(1000) as u64,
+                precision: random_precision(rng),
+                deadline_ns: rng.next_u64() >> 8,
                 queries: random_queries(rng),
             },
             4 => Request::TopK {
@@ -330,6 +343,9 @@ fn prop_wire_codec_roundtrips() {
             11 => Request::FitFmbe {
                 seed: rng.next_u64(),
                 p_features: rng.below(100_000) as u64,
+            },
+            12 => Request::ExpSumPart {
+                queries: random_queries(rng),
             },
             _ => Request::Abort {
                 token: rng.next_u64(),

@@ -15,12 +15,12 @@
 //!   batches keep answering from the snapshot they pinned.
 
 use std::sync::Arc;
-use zest::coordinator::{PartitionService, Request, Router, ServiceConfig};
+use zest::coordinator::{EstimateSpec, PartitionService, Router, ServiceConfig};
 use zest::data::embeddings::EmbeddingStore;
 use zest::data::synth::{generate, SynthConfig};
 use zest::estimators::fmbe::{Fmbe, FmbeConfig};
 use zest::estimators::mimps::Mimps;
-use zest::estimators::{exact::Exact, tail, EstimateContext, Estimator, EstimatorKind};
+use zest::estimators::{exact::Exact, tail, EstimateContext, Estimator};
 use zest::mips::brute::BruteIndex;
 use zest::mips::sharded::ShardedIndex;
 use zest::mips::MipsIndex;
@@ -239,13 +239,7 @@ fn epoch_swap_concurrent_with_inflight_batches() {
     let submit = |count: usize| {
         (0..count)
             .map(|_| {
-                svc.submit(Request {
-                    query: q.clone(),
-                    kind: EstimatorKind::Exact,
-                    k: 0,
-                    l: 0,
-                })
-                .unwrap()
+                svc.submit(EstimateSpec::new(q.clone())).unwrap()
             })
             .collect::<Vec<_>>()
     };
@@ -304,14 +298,7 @@ fn sharded_service_rejects_dim_mismatch_at_submit() {
         ServiceConfig::default(),
         None,
     );
-    let err = svc
-        .submit(Request {
-            query: vec![0.0; 3],
-            kind: EstimatorKind::Exact,
-            k: 0,
-            l: 0,
-        })
-        .unwrap_err();
+    let err = svc.submit(EstimateSpec::new(vec![0.0; 3])).unwrap_err();
     assert_eq!(
         err,
         zest::coordinator::SubmitError::DimMismatch { got: 3, want: 16 }
