@@ -16,6 +16,17 @@
 //! ≈ `2·δ` parallel, so the speedup approaches S. Writes the headline
 //! rows to `BENCH_fanout.json` (package root) and the full record to
 //! `results/fanout_<scale>.json`.
+//!
+//! A second, wire-v3 **connection-scale** section benchmarks the
+//! reactor rewrite itself and writes `BENCH_reactor.json`:
+//!
+//! * **concurrent-clients sweep** — one reactor pool serving 1→256
+//!   client connections, aggregate RPC throughput per point;
+//! * **pipelined-RPC depth sweep** — D concurrent `ExpSumPart`
+//!   scatters multiplexed on one connection per worker: per-scatter
+//!   latency stays ≈ max-over-workers (δ), not Σ, at every depth > 1,
+//!   because overlapped frames share the socket instead of queuing
+//!   behind a one-slot pipeline.
 
 mod bench_common;
 
@@ -193,4 +204,173 @@ fn main() {
     std::fs::write("BENCH_fanout.json", json.to_string()).ok();
     println!("(json: BENCH_fanout.json)");
     bench_common::write_json(&env, "fanout", &json);
+
+    reactor_section(&env, &store);
+}
+
+/// Wire-v3 connection-scale benchmarks: the reactor pool under many
+/// concurrent connections, and multiplexed pipelined scatters at
+/// increasing in-flight depth. Writes `BENCH_reactor.json`.
+fn reactor_section(env: &bench_common::BenchEnv, store: &zest::data::embeddings::EmbeddingStore) {
+    // -- Concurrent-clients sweep: C connections on a 2-thread reactor
+    // pool, R manifest RPCs each; aggregate throughput per point.
+    const RPCS_PER_CLIENT: usize = 20;
+    println!("\n== reactor: concurrent-clients sweep ({RPCS_PER_CLIENT} RPCs/client) ==");
+    let server = Server::serve(
+        &Addr::Tcp("127.0.0.1:0".to_string()),
+        Arc::new(ShardWorker::new(store.clone())),
+        ServerConfig {
+            max_connections: 300,
+            reactor_threads: 2,
+            handler_threads: 8,
+            ..Default::default()
+        },
+        Arc::new(ServiceMetrics::new()),
+    )
+    .expect("bind sweep server");
+    let addr = server.local_addr().clone();
+    let mut conn_table = Table::new(&["clients", "wall (ms)", "RPC/s"]);
+    let mut conn_rows: Vec<Json> = Vec::new();
+    for clients in [1usize, 8, 64, 256] {
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..clients {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let (shard, _) = RemoteShard::connect(addr, ClientConfig::default())
+                        .expect("connect sweep client");
+                    for _ in 0..RPCS_PER_CLIENT {
+                        shard.manifest().expect("manifest");
+                    }
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let rps = (clients * RPCS_PER_CLIENT) as f64 / wall_s;
+        println!("clients={clients}: {:.2} ms wall, {rps:.0} RPC/s", wall_s * 1e3);
+        conn_table.row(vec![
+            clients.to_string(),
+            format!("{:.2}", wall_s * 1e3),
+            format!("{rps:.0}"),
+        ]);
+        conn_rows.push(Json::obj(vec![
+            ("clients", Json::num(clients as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("rps", Json::num(rps)),
+        ]));
+    }
+    conn_table.print();
+    server.shutdown();
+
+    // -- Pipelined-RPC depth sweep: S delayed workers, D concurrent
+    // scatters sharing one multiplexed connection per worker. Each
+    // scatter pays ≈ max-over-workers (δ); overlapped depth divides the
+    // effective per-scatter latency instead of multiplying the wall
+    // clock — the "max, not sum" pipeline claim in net::remote.
+    const SWEEP_WORKERS: usize = 4;
+    println!(
+        "\n== reactor: pipelined depth sweep ({SWEEP_WORKERS} workers, δ={}ms/op, {REPS} reps) ==",
+        DELAY.as_millis()
+    );
+    let queries: Vec<Vec<f32>> = (0..4).map(|i| store.row(i * 16).to_vec()).collect();
+    let mut servers = Vec::new();
+    let mut addrs: Vec<Addr> = Vec::new();
+    for block in aligned_split(store, SWEEP_WORKERS) {
+        let server = Server::serve(
+            &Addr::Tcp("127.0.0.1:0".to_string()),
+            Arc::new(SlowPublish {
+                inner: ShardWorker::new(block),
+            }),
+            ServerConfig {
+                handler_threads: 16,
+                ..Default::default()
+            },
+            Arc::new(ServiceMetrics::new()),
+        )
+        .expect("bind depth-sweep worker");
+        addrs.push(server.local_addr().clone());
+        servers.push(server);
+    }
+    let cluster =
+        RemoteCluster::connect(&addrs, ClientConfig::default()).expect("connect depth cluster");
+    let delay_s = DELAY.as_secs_f64();
+    let mut depth_table = Table::new(&[
+        "depth",
+        "wall (ms)",
+        "per-scatter (ms)",
+        "max model (ms)",
+        "sum model (ms)",
+    ]);
+    let mut depth_rows: Vec<Json> = Vec::new();
+    for depth in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..depth {
+                let cluster = &cluster;
+                let queries = &queries;
+                scope.spawn(move || {
+                    for _ in 0..REPS {
+                        cluster.exp_sum_parts(queries).expect("pipelined scatter");
+                    }
+                });
+            }
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let per_scatter_s = wall_s / (depth * REPS) as f64;
+        // A scatter's floor is one delayed op on the slowest worker
+        // (max model, ≈ δ); a serialized pipeline would cost every
+        // overlapped scatter its own δ in turn (sum model, ≈ depth·δ
+        // per wall-clock slot).
+        let max_model_s = delay_s;
+        let sum_model_s = delay_s * depth as f64;
+        println!(
+            "depth={depth}: wall {:.2} ms, per-scatter {:.3} ms (max model {:.1} ms, \
+             serialized model {:.1} ms)",
+            wall_s * 1e3,
+            per_scatter_s * 1e3,
+            max_model_s * 1e3,
+            sum_model_s * 1e3
+        );
+        depth_table.row(vec![
+            depth.to_string(),
+            format!("{:.2}", wall_s * 1e3),
+            format!("{:.3}", per_scatter_s * 1e3),
+            format!("{:.1}", max_model_s * 1e3),
+            format!("{:.1}", sum_model_s * 1e3),
+        ]);
+        depth_rows.push(Json::obj(vec![
+            ("depth", Json::num(depth as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("per_scatter_s", Json::num(per_scatter_s)),
+            ("max_model_s", Json::num(max_model_s)),
+            ("sum_model_s", Json::num(sum_model_s)),
+        ]));
+    }
+    depth_table.print();
+    drop(cluster);
+    for server in servers {
+        server.shutdown();
+    }
+
+    let json = Json::obj(vec![
+        (
+            "connection_sweep",
+            Json::obj(vec![
+                ("rpcs_per_client", Json::num(RPCS_PER_CLIENT as f64)),
+                ("rows", Json::Arr(conn_rows)),
+            ]),
+        ),
+        (
+            "depth_sweep",
+            Json::obj(vec![
+                ("workers", Json::num(SWEEP_WORKERS as f64)),
+                ("delay_ms", Json::num(DELAY.as_millis() as f64)),
+                ("reps", Json::num(REPS as f64)),
+                ("rows", Json::Arr(depth_rows)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_reactor.json", json.to_string()).ok();
+    println!("(json: BENCH_reactor.json)");
+    bench_common::write_json(env, "reactor", &json);
 }

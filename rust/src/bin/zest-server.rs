@@ -55,6 +55,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "queue-capacity",
         "max-conns",
         "read-timeout-ms",
+        "reactor-threads",
+        "handler-threads",
         "seed",
     ])
     .map_err(anyhow::Error::msg)?;
@@ -144,12 +146,15 @@ fn run(argv: Vec<String>) -> Result<()> {
         Arc::new(ServiceHandler::new(svc))
     };
 
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         max_connections: args.get_or("max-conns", 256),
         read_timeout: match args.get_or("read-timeout-ms", 30_000u64) {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        reactor_threads: args.get_or("reactor-threads", defaults.reactor_threads),
+        handler_threads: args.get_or("handler-threads", defaults.handler_threads),
     };
     let server = Server::serve(
         &addr,

@@ -47,6 +47,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "range",
         "max-conns",
         "read-timeout-ms",
+        "reactor-threads",
+        "handler-threads",
     ])
     .map_err(anyhow::Error::msg)?;
     let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
@@ -65,12 +67,15 @@ fn run(argv: Vec<String>) -> Result<()> {
         rows.dim()
     );
 
+    let defaults = ServerConfig::default();
     let cfg = ServerConfig {
         max_connections: args.get_or("max-conns", 64),
         read_timeout: match args.get_or("read-timeout-ms", 30_000u64) {
             0 => None,
             ms => Some(std::time::Duration::from_millis(ms)),
         },
+        reactor_threads: args.get_or("reactor-threads", defaults.reactor_threads),
+        handler_threads: args.get_or("handler-threads", defaults.handler_threads),
     };
     let server = Server::serve(
         &addr,

@@ -85,20 +85,41 @@ pub struct GroupParams {
 
 /// A backend failure (wire outage, unsupported publish, artifact
 /// error). The service logs it and drops the group's reply channels;
-/// publish hooks surface it to the caller.
+/// publish hooks surface it to the caller. Cluster backends carry the
+/// failing worker's index when the underlying fan-out named one
+/// (`ClientError::Shard`), which the service feeds into the per-shard
+/// error counters — a failed scatter names its shard from a
+/// `MetricsSnapshot` alone.
 #[derive(Debug)]
-pub struct BackendError(String);
+pub struct BackendError {
+    msg: String,
+    shard: Option<usize>,
+}
 
 impl BackendError {
     /// Wrap a message as a backend failure.
     pub fn new(msg: impl Into<String>) -> BackendError {
-        BackendError(msg.into())
+        BackendError {
+            msg: msg.into(),
+            shard: None,
+        }
+    }
+
+    /// Attribute the failure to a worker shard index.
+    pub fn with_shard(mut self, shard: Option<usize>) -> BackendError {
+        self.shard = shard;
+        self
+    }
+
+    /// The worker shard this failure is attributed to, if any.
+    pub fn shard(&self) -> Option<usize> {
+        self.shard
     }
 }
 
 impl std::fmt::Display for BackendError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "backend: {}", self.0)
+        write!(f, "backend: {}", self.msg)
     }
 }
 
@@ -502,7 +523,10 @@ impl PartitionBackend for ClusterBackend {
                 .unwrap_or("no panic message");
             BackendError::new(format!("remote scatter panicked: {msg}"))
         })?
-        .map_err(|e| BackendError::new(e.to_string()))?;
+        // `ClientError::Shard` attribution (set at the cluster fan-out
+        // join sites) flows through to the service's per-shard error
+        // counters; the message keeps the "worker N:" rendering.
+        .map_err(|e| BackendError::new(e.to_string()).with_shard(e.shard()))?;
         Ok(GroupAnswer {
             zs: answer.zs,
             epoch: answer.epoch,
@@ -525,12 +549,12 @@ impl PartitionBackend for ClusterBackend {
     fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
         self.cluster
             .add_categories(&rows)
-            .map_err(|e| BackendError::new(e.to_string()))
+            .map_err(|e| BackendError::new(e.to_string()).with_shard(e.shard()))
     }
 
     fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
         self.cluster
             .remove_categories(ids)
-            .map_err(|e| BackendError::new(e.to_string()))
+            .map_err(|e| BackendError::new(e.to_string()).with_shard(e.shard()))
     }
 }

@@ -58,6 +58,7 @@ struct ShardStatAcc {
     scorings: u64,
     batches: u64,
     exec_ns: u64,
+    errors: u64,
 }
 
 /// Point-in-time per-shard counters (sharded serving only). Counters
@@ -77,6 +78,11 @@ pub struct ShardStat {
     /// Wall-clock execution time of those groups (each group's time is
     /// attributed to every shard it scattered over).
     pub exec_ns: u64,
+    /// Failed fan-out calls attributed to this shard this epoch (a
+    /// scatter whose failure named this worker — see
+    /// `ClientError::Shard` in `net::client`). Lets an operator spot
+    /// the failing worker from a metrics snapshot alone.
+    pub errors: u64,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -159,6 +165,19 @@ impl ServiceMetrics {
         acc.scorings += scorings as u64;
         acc.batches += 1;
         acc.exec_ns += exec.as_nanos() as u64;
+    }
+
+    /// Attribute one failed fan-out call to shard `shard` of the
+    /// **current** epoch table (failures are observed on the serving
+    /// path, which always runs against the current snapshot; the table
+    /// grows as needed so an error on a never-recorded shard still
+    /// lands).
+    pub fn on_shard_error(&self, shard: usize) {
+        let mut g = self.shards.lock().unwrap();
+        if g.1.len() <= shard {
+            g.1.resize(shard + 1, ShardStatAcc::default());
+        }
+        g.1[shard].errors += 1;
     }
 
     /// One network connection accepted and being served.
@@ -256,6 +275,7 @@ impl ServiceMetrics {
                     scorings: a.scorings,
                     batches: a.batches,
                     exec_ns: a.exec_ns,
+                    errors: a.errors,
                 })
                 .collect(),
             net: NetStats {
@@ -367,6 +387,9 @@ impl std::fmt::Display for MetricsSnapshot {
                     s.batches,
                     Duration::from_nanos(s.exec_ns)
                 )?;
+                if s.errors > 0 {
+                    write!(f, ",errors={}", s.errors)?;
+                }
             }
             write!(f, "]")?;
         }
@@ -489,6 +512,26 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("epoch=3"), "{text}");
         assert!(text.contains("shards=["), "{text}");
+    }
+
+    #[test]
+    fn shard_errors_attribute_to_the_failing_worker() {
+        let m = ServiceMetrics::new();
+        m.on_shard_batch(1, 0, 10, 10, Duration::from_millis(1));
+        m.on_shard_batch(1, 1, 10, 10, Duration::from_millis(1));
+        // Two failures on worker 1, one on a worker the batch path never
+        // recorded (the table grows to hold it).
+        m.on_shard_error(1);
+        m.on_shard_error(1);
+        m.on_shard_error(3);
+        let s = m.snapshot();
+        assert_eq!(s.shard_stats.len(), 4);
+        assert_eq!(s.shard_stats[0].errors, 0);
+        assert_eq!(s.shard_stats[1].errors, 2);
+        assert_eq!(s.shard_stats[3].errors, 1);
+        let text = s.to_string();
+        assert!(text.contains("errors=2"), "{text}");
+        assert!(!text.contains("0:len=10,scorings=10,batches=1,exec=1ms,errors"), "{text}");
     }
 
     #[test]

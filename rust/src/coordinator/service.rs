@@ -442,6 +442,13 @@ impl PartitionService {
                         batch.kind
                     );
                     ctx.metrics.on_backend_error();
+                    // Cluster backends attribute scatter failures to the
+                    // worker that caused them (`ClientError::Shard`);
+                    // surface that in the per-shard error counters so a
+                    // failing worker is identifiable from metrics alone.
+                    if let Some(shard) = e.shard() {
+                        ctx.metrics.on_shard_error(shard);
+                    }
                     continue;
                 }
             };

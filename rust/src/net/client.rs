@@ -22,6 +22,7 @@
 use super::wire::{self, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::{Addr, Stream};
 use crate::coordinator::{EstimateSpec, Response};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -55,6 +56,35 @@ pub enum ClientError {
     Protocol(String),
     /// The server hung up between request and response.
     ConnectionClosed,
+    /// A cluster fan-out failure attributed to one worker shard — the
+    /// wrapper [`super::remote::RemoteCluster`] puts around per-worker
+    /// errors so metrics (and operators) can name the failing shard.
+    Shard {
+        /// Worker index within the cluster's shard order.
+        shard: usize,
+        /// The underlying failure.
+        source: Box<ClientError>,
+    },
+}
+
+impl ClientError {
+    /// The worker index this failure is attributed to, if any (set by
+    /// the cluster fan-out paths in [`super::remote`]).
+    pub fn shard(&self) -> Option<usize> {
+        match self {
+            ClientError::Shard { shard, .. } => Some(*shard),
+            _ => None,
+        }
+    }
+
+    /// The error with any shard attribution stripped (for callers that
+    /// dispatch on the underlying `Remote` code).
+    pub fn into_unattributed(self) -> ClientError {
+        match self {
+            ClientError::Shard { source, .. } => source.into_unattributed(),
+            other => other,
+        }
+    }
 }
 
 impl std::fmt::Display for ClientError {
@@ -64,6 +94,7 @@ impl std::fmt::Display for ClientError {
             ClientError::Remote { code, message } => write!(f, "remote {code:?}: {message}"),
             ClientError::Protocol(m) => write!(f, "protocol: {m}"),
             ClientError::ConnectionClosed => write!(f, "connection closed mid-call"),
+            ClientError::Shard { shard, source } => write!(f, "worker {shard}: {source}"),
         }
     }
 }
@@ -86,6 +117,9 @@ pub struct Pool {
     addr: Addr,
     cfg: ClientConfig,
     idle: Mutex<Vec<Stream>>,
+    /// Wire v3 request-id source (ids start at 1; 0 is reserved for
+    /// connection-level server frames).
+    next_id: AtomicU64,
 }
 
 impl Pool {
@@ -95,6 +129,7 @@ impl Pool {
             addr,
             cfg,
             idle: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(1),
         }
     }
 
@@ -124,7 +159,7 @@ impl Pool {
     /// transport failures drop the stream.
     pub fn call_encoded(&self, payload: &[u8], resend_safe: bool) -> Result<WireResponse> {
         if let Some(stream) = self.idle.lock().unwrap().pop() {
-            match Self::roundtrip(stream, payload) {
+            match self.roundtrip(stream, payload) {
                 Ok((stream, resp)) => {
                     self.pool_unless_closing(stream, &resp);
                     return Ok(resp);
@@ -135,7 +170,7 @@ impl Pool {
         }
         let stream = Stream::connect(&self.addr).map_err(wire::WireError::Io)?;
         let _ = stream.set_read_timeout(self.cfg.read_timeout);
-        let (stream, resp) = Self::roundtrip(stream, payload)?;
+        let (stream, resp) = self.roundtrip(stream, payload)?;
         self.pool_unless_closing(stream, &resp);
         Ok(resp)
     }
@@ -156,10 +191,20 @@ impl Pool {
         self.put_back(stream);
     }
 
-    fn roundtrip(mut stream: Stream, payload: &[u8]) -> Result<(Stream, WireResponse)> {
-        wire::write_frame(&mut stream, payload)?;
+    /// One tagged request/response exchange. Pooled connections are
+    /// strictly one-call-at-a-time, so the response must echo the
+    /// request id just sent — anything else is a protocol error. The
+    /// exception is a connection-level error frame (id 0), which the
+    /// server emits before it has read any request (`ConnLimit`).
+    fn roundtrip(&self, mut stream: Stream, payload: &[u8]) -> Result<(Stream, WireResponse)> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        wire::write_frame(&mut stream, id, payload)?;
         match wire::read_response(&mut stream)? {
-            Some(resp) => Ok((stream, resp)),
+            Some((got, resp)) if got == id => Ok((stream, resp)),
+            Some((0, resp @ WireResponse::Error { .. })) => Ok((stream, resp)),
+            Some((got, _)) => Err(ClientError::Protocol(format!(
+                "response tagged {got} on a call tagged {id}"
+            ))),
             None => Err(ClientError::ConnectionClosed),
         }
     }

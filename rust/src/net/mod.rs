@@ -1,15 +1,27 @@
 //! Network serving layer: the cross-process seam around the coordinator.
 //!
-//! Four pieces:
+//! Five pieces:
 //!
 //! * [`wire`] — length-prefixed, versioned, hand-rolled little-endian
 //!   framing codec for requests, responses, `Hit` batches, shard
-//!   manifests and the two-phase epoch-publish handshake.
-//! * [`server`] — a blocking accept-loop [`server::Server`] exposing any
-//!   [`server::Handler`] over TCP or Unix domain sockets, with
-//!   connection limits, per-connection read timeouts, graceful shutdown
-//!   and per-connection metrics feeding
-//!   [`crate::coordinator::ServiceMetrics`].
+//!   manifests and the two-phase epoch-publish handshake. Since wire
+//!   **v3** every frame header carries a `request_id: u64`, so one
+//!   connection multiplexes many overlapped RPCs and responses may
+//!   return out of request order.
+//! * [`reactor`] — the readiness shim: a hand-rolled `mio`-style
+//!   [`reactor::Poller`] (epoll on Linux, kqueue on macOS/BSD via raw
+//!   syscalls — no tokio, no external crates) plus a pipe-backed
+//!   [`reactor::Waker`] for cross-thread wakeups and graceful shutdown.
+//! * [`server`] — a readiness-driven [`server::Server`] exposing any
+//!   [`server::Handler`] over TCP or Unix domain sockets: a fixed pool
+//!   of reactor threads multiplexes all connections through
+//!   nonblocking sockets, per-connection read/write buffers and a
+//!   frame-assembly state machine, dispatching decoded requests to a
+//!   handler pool and writing responses back in completion order (the
+//!   request id keeps them attributable). Connection limits,
+//!   per-connection read timeouts, graceful shutdown and per-connection
+//!   metrics feeding [`crate::coordinator::ServiceMetrics`] are
+//!   preserved from the blocking implementation.
 //! * [`client`] — [`client::PartitionClient`], a connection-pooling
 //!   client whose `estimate` / `estimate_batch` mirror the in-process
 //!   [`crate::coordinator::PartitionService`] API.
@@ -21,10 +33,11 @@
 //!   [`crate::mips::sharded::ShardedIndex`] scatter with the existing
 //!   `hit_cmp` merge — N beyond one process' memory, with **every**
 //!   estimator family served remotely. Each worker handle owns a
-//!   dedicated I/O slot, so cluster-wide operations (publishes, tail
-//!   scoring, FMBE fits, refreshes) fan out concurrently and cost the
-//!   slowest worker, not the sum. Epoch swaps become a two-phase
-//!   publish (prepare on all workers, then commit) through
+//!   multiplexed submission pipeline (one connection, many in-flight
+//!   request ids), so cluster-wide operations (publishes, tail scoring,
+//!   FMBE fits, refreshes) and concurrent batches genuinely overlap and
+//!   cost the slowest worker, not the sum. Epoch swaps become a
+//!   two-phase publish (prepare on all workers, then commit) through
 //!   [`crate::store::SnapshotHandle`]'s `prepare_*`/`commit` split.
 //!
 //! Addresses are written `tcp://host:port` or `unix:///path/to.sock`
@@ -38,6 +51,7 @@
 #![warn(missing_docs)]
 
 pub mod client;
+pub mod reactor;
 pub mod remote;
 pub mod server;
 pub mod shard;
@@ -45,6 +59,7 @@ pub mod wire;
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::time::Duration;
@@ -134,13 +149,34 @@ impl Stream {
     }
 
     /// Shut down the read half: a thread blocked in `read` wakes with a
-    /// clean EOF while in-flight writes still drain (how the server
-    /// unblocks connection threads during graceful shutdown).
+    /// clean EOF while in-flight writes still drain (how the
+    /// multiplexed remote pipeline unblocks its reader thread during
+    /// shutdown).
     pub fn shutdown_read(&self) -> std::io::Result<()> {
         match self {
             Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Read),
             #[cfg(unix)]
             Stream::Unix(s) => s.shutdown(std::net::Shutdown::Read),
+        }
+    }
+
+    /// Toggle nonblocking mode (the reactor server drives every
+    /// accepted connection nonblocking).
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+        }
+    }
+}
+
+impl AsRawFd for Stream {
+    fn as_raw_fd(&self) -> RawFd {
+        match self {
+            Stream::Tcp(s) => s.as_raw_fd(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.as_raw_fd(),
         }
     }
 }

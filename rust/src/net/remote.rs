@@ -48,12 +48,19 @@
 //!   monolithic fit up to the f64 summation order of per-shard partials
 //!   (bit-identical at S = 1).
 //!
-//! ## Parallel worker fan-out
+//! ## Multiplexed worker pipelines
 //!
-//! Each [`RemoteShard`] owns a dedicated I/O thread (its *in-flight
-//! request slot*): cluster-side operations submit a request to every
-//! worker's slot and then join, so the wall-clock cost of a cluster-wide
-//! operation is the **slowest worker, not the sum** of all workers.
+//! Each [`RemoteShard`] owns **one persistent wire-v3 connection**
+//! driven by a two-thread pipeline: a *writer* drains an mpsc
+//! submission queue onto the socket in submission order, and a *reader*
+//! routes response frames back to per-request completion slots keyed by
+//! the `request_id` every v3 frame carries. Submitting is non-blocking
+//! and many requests ride the connection concurrently, so cluster-side
+//! operations submit to every worker and then join — the wall-clock
+//! cost of a cluster-wide operation is the **slowest worker, not the
+//! sum**, and concurrent batches (scatters, two-phase publishes,
+//! `ScoreIds` tail scoring from overlapping requests) genuinely overlap
+//! on one socket per worker instead of queueing behind each other.
 //! Fanned out this way: the two-phase `prepare_*`/`commit`/`abort`
 //! publish phases, `ScoreIds` tail scoring, `FitFmbe` fits, and
 //! manifest refreshes. The top-k scatter fans out through the
@@ -65,9 +72,12 @@
 //! contract — while `Precision::Pipelined` fans an `ExpSumPart` out to
 //! every worker concurrently and reduces the per-worker partials in
 //! worker order (max-over-workers latency, last-ulp-different answers;
-//! see [`RemoteCluster::exp_sum_parts`]). A worker's slot serializes
-//! the requests sent to **that worker** (publish phases stay ordered
-//! per worker) while different workers proceed concurrently.
+//! see [`RemoteCluster::exp_sum_parts`]). Per-worker **submission
+//! order** is preserved on the wire (the publish protocol relies on
+//! prepare-before-commit per worker), while responses may complete out
+//! of order. Fan-out failures are wrapped in [`ClientError::Shard`] at
+//! the cluster join sites, so metrics and operators can name the
+//! failing worker without parsing messages.
 //!
 //! ## Two-phase epoch publish
 //!
@@ -80,10 +90,10 @@
 //! protocol, including the failure / [`RemoteCluster::resolve_token`]
 //! recovery states.
 
-use super::client::{remote_err, ClientConfig, ClientError, Pool, Result};
+use super::client::{remote_err, ClientConfig, ClientError, Result};
 use super::server::Handler;
 use super::wire::{self, Encoded, ErrorCode, Request as WireRequest, Response as WireResponse};
-use super::Addr;
+use super::{Addr, Stream};
 use crate::coordinator::{EpochCache, Precision};
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::fmbe::{Fmbe, FmbeConfig};
@@ -92,90 +102,372 @@ use crate::estimators::{tail, EstimatorKind};
 use crate::mips::sharded::ShardedIndex;
 use crate::mips::{Hit, MipsIndex};
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::Instant;
 
 // ---------------------------------------------------------------------
-// Per-worker in-flight request slot.
+// Per-worker multiplexed request pipeline.
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// One dedicated I/O thread per worker: the shard's *in-flight request
-/// slot*. Jobs submitted to the slot run in submission order on that
-/// thread (per-worker ordering is preserved — the publish protocol
-/// relies on prepare-before-commit per worker), while slots of
-/// different workers run concurrently — which is what turns cluster
-/// operations from Σ-over-workers into max-over-workers latency.
-struct IoSlot {
-    tx: Option<mpsc::Sender<Job>>,
-    join: Option<std::thread::JoinHandle<()>>,
+/// Why a call failed before producing a response. `retryable` is `true`
+/// only when the request frame **provably never reached the socket**
+/// (the connection was already dead at submit, or died while the job
+/// sat unsent in the submission queue), so one re-submission on a fresh
+/// connection cannot double-execute anything — not even a `Commit`. A
+/// request that was (even partially) written is ambiguous and is never
+/// silently re-sent; higher layers resolve it (see
+/// `RemoteCluster::publish`).
+struct CallFailure {
+    error: ClientError,
+    retryable: bool,
 }
 
-impl IoSlot {
-    fn spawn(name: String) -> IoSlot {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let join = std::thread::Builder::new()
-            .name(name)
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    job();
-                }
-            })
-            .expect("spawn shard I/O thread");
-        IoSlot {
-            tx: Some(tx),
-            join: Some(join),
+type CallResult = std::result::Result<WireResponse, CallFailure>;
+
+/// One in-flight request's completion slot in the [`MuxTable`].
+struct PendingEntry {
+    tx: mpsc::Sender<CallResult>,
+    /// Flipped by the writer thread right before the frame hits the
+    /// socket; decides [`CallFailure::retryable`] when the connection
+    /// dies with the call outstanding.
+    sent: bool,
+}
+
+/// The completion table of one multiplexed connection. `dead` and the
+/// entries flip together under one lock, so a submission can never slip
+/// an entry in after the reader drained the table (which would leave
+/// its [`Pending`] waiting forever).
+struct MuxTable {
+    dead: bool,
+    pending: HashMap<u64, PendingEntry>,
+}
+
+struct MuxShared {
+    table: Mutex<MuxTable>,
+}
+
+impl MuxShared {
+    /// Mark the connection dead and fail every outstanding call.
+    /// `describe` renders one error per call; calls whose frames never
+    /// reached the socket come back `retryable`.
+    fn fail_all(&self, describe: impl Fn() -> ClientError) {
+        let mut table = self.table.lock().unwrap();
+        table.dead = true;
+        for (_, entry) in table.pending.drain() {
+            let _ = entry.tx.send(Err(CallFailure {
+                error: describe(),
+                retryable: !entry.sent,
+            }));
         }
     }
+}
 
-    /// Queue `f` on the slot thread; the returned [`Pending`] joins its
-    /// result. Jobs are plain closures returning values (never
-    /// panicking RPC wrappers), so a dead slot is a bug, not a runtime
-    /// condition.
-    fn run<T, F>(&self, f: F) -> Pending<T>
-    where
-        T: Send + 'static,
-        F: FnOnce() -> T + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel();
-        let job: Job = Box::new(move || {
-            let _ = tx.send(f());
-        });
-        self.tx
-            .as_ref()
-            .expect("I/O slot running")
-            .send(job)
-            .expect("shard I/O thread alive");
-        Pending { rx }
+/// Writer half of a [`MuxConn`]: drains the submission queue onto the
+/// socket **in submission order** (per-worker ordering is what the
+/// publish protocol's prepare-before-commit relies on). Exits when the
+/// queue closes (connection dropped) or a write fails.
+fn mux_writer(mut stream: Stream, rx: mpsc::Receiver<(u64, Arc<Encoded>)>, shared: Arc<MuxShared>) {
+    while let Ok((id, req)) = rx.recv() {
+        {
+            let mut table = shared.table.lock().unwrap();
+            if table.dead {
+                // The reader already failed every pending (this one came
+                // back retryable — its frame was never written). Nothing
+                // left to write to.
+                continue;
+            }
+            match table.pending.get_mut(&id) {
+                Some(entry) => entry.sent = true,
+                // Already answered or failed; nothing waits on the frame.
+                None => continue,
+            }
+        }
+        if let Err(e) = wire::write_frame(&mut stream, id, req.payload()) {
+            // Broken socket: this call is ambiguous (bytes may be on the
+            // wire), the queued rest was never written. Fail this one
+            // here, then wake the reader so it drains the rest.
+            let mut table = shared.table.lock().unwrap();
+            table.dead = true;
+            if let Some(entry) = table.pending.remove(&id) {
+                let _ = entry.tx.send(Err(CallFailure {
+                    error: ClientError::Wire(e),
+                    retryable: false,
+                }));
+            }
+            drop(table);
+            let _ = stream.shutdown_read();
+            return;
+        }
     }
 }
 
-impl Drop for IoSlot {
-    fn drop(&mut self) {
-        drop(self.tx.take()); // channel closes → thread drains and exits
-        if let Some(join) = self.join.take() {
-            if join.thread().id() == std::thread::current().id() {
-                // The slot thread itself is running this destructor (a
-                // job held the last Arc to its own shard). Joining would
-                // self-deadlock; the thread exits on its own once the
-                // closed channel drains.
+/// Reader half of a [`MuxConn`]: routes every response frame to the
+/// completion slot its `request_id` names. Responses may arrive in any
+/// order — that is the point of the multiplexed pipeline. Exits on EOF,
+/// a transport/codec failure, or a connection-level (id 0) error frame,
+/// failing all outstanding calls.
+fn mux_reader(mut stream: Stream, shared: Arc<MuxShared>) {
+    loop {
+        match wire::read_response(&mut stream) {
+            Ok(Some((0, WireResponse::Error { code, message }))) => {
+                // Connection-level error frame (e.g. `ConnLimit`): the
+                // server wrote it before reading any request and is
+                // closing, so it answers every outstanding call.
+                shared.fail_all(|| remote_err(code, message.clone()));
                 return;
             }
-            let _ = join.join();
+            Ok(Some((id, resp))) => {
+                let entry = shared.table.lock().unwrap().pending.remove(&id);
+                match entry {
+                    Some(entry) => {
+                        let _ = entry.tx.send(Ok(resp));
+                    }
+                    // A response no call waits for (request-id mismatch
+                    // from a confused server): log and keep serving the
+                    // calls that do match instead of dying.
+                    None => log::warn!(
+                        "mux reader: response tagged {id} matches no in-flight request (ignored)"
+                    ),
+                }
+            }
+            Ok(None) => {
+                shared.fail_all(|| ClientError::ConnectionClosed);
+                return;
+            }
+            Err(wire::WireError::Io(ref e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) && shared.table.lock().unwrap().pending.is_empty() =>
+            {
+                // Idle read timeout with nothing in flight: keep the
+                // connection warm. (A timeout *with* calls outstanding
+                // falls through below — the per-call read timeout bounds
+                // how long a quiet socket may sit on unanswered calls.)
+                continue;
+            }
+            Err(e) => {
+                let reason = format!("connection to worker lost: {e}");
+                shared.fail_all(|| ClientError::Protocol(reason.clone()));
+                return;
+            }
         }
     }
 }
 
-/// A not-yet-joined slot result (one-shot).
-struct Pending<T> {
-    rx: mpsc::Receiver<T>,
+/// One multiplexed connection to a worker: the writer/reader thread
+/// pair around a single socket plus the shared completion table.
+struct MuxConn {
+    tx: Option<mpsc::Sender<(u64, Arc<Encoded>)>>,
+    /// Kept for `Drop`: shutting the read half down unblocks the reader.
+    stream: Stream,
+    shared: Arc<MuxShared>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    reader: Option<std::thread::JoinHandle<()>>,
 }
 
-impl<T> Pending<T> {
-    /// Block until the slot thread finished the job.
-    fn join(self) -> T {
-        self.rx.recv().expect("shard I/O thread dropped a job")
+impl MuxConn {
+    fn open(addr: &Addr, cfg: &ClientConfig, name: &str) -> Result<MuxConn> {
+        let stream = Stream::connect(addr).map_err(wire::WireError::Io)?;
+        let _ = stream.set_read_timeout(cfg.read_timeout);
+        let writer_stream = stream.try_clone().map_err(wire::WireError::Io)?;
+        let reader_stream = stream.try_clone().map_err(wire::WireError::Io)?;
+        let shared = Arc::new(MuxShared {
+            table: Mutex::new(MuxTable {
+                dead: false,
+                pending: HashMap::new(),
+            }),
+        });
+        let (tx, rx) = mpsc::channel();
+        let writer = std::thread::Builder::new()
+            .name(format!("{name}-wr"))
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || mux_writer(writer_stream, rx, shared)
+            })
+            .expect("spawn shard mux writer");
+        let reader = std::thread::Builder::new()
+            .name(format!("{name}-rd"))
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || mux_reader(reader_stream, shared)
+            })
+            .expect("spawn shard mux reader");
+        Ok(MuxConn {
+            tx: Some(tx),
+            stream,
+            shared,
+            writer: Some(writer),
+            reader: Some(reader),
+        })
+    }
+
+    fn dead(&self) -> bool {
+        self.shared.table.lock().unwrap().dead
+    }
+}
+
+impl Drop for MuxConn {
+    fn drop(&mut self) {
+        // Close the submission queue (writer drains what's queued and
+        // exits), then shut the read half down so a reader blocked in
+        // `read` wakes with a clean EOF and fails any leftovers.
+        drop(self.tx.take());
+        if let Some(writer) = self.writer.take() {
+            let _ = writer.join();
+        }
+        let _ = self.stream.shutdown_read();
+        if let Some(reader) = self.reader.take() {
+            let _ = reader.join();
+        }
+    }
+}
+
+/// A worker's multiplexed submission pipeline: the lazily (re)opened
+/// [`MuxConn`] plus the request-id source. Cheaply cloneable (shared
+/// inner) so a joinable [`Pending`] can re-submit a provably-unsent
+/// call on a fresh connection.
+#[derive(Clone)]
+struct MuxSlot {
+    inner: Arc<MuxSlotInner>,
+}
+
+struct MuxSlotInner {
+    addr: Addr,
+    cfg: ClientConfig,
+    name: String,
+    /// Wire v3 request ids (start at 1; 0 is reserved for
+    /// connection-level server frames).
+    next_id: AtomicU64,
+    conn: Mutex<Option<MuxConn>>,
+}
+
+impl MuxSlot {
+    fn new(addr: Addr, cfg: ClientConfig) -> MuxSlot {
+        let name = format!("zest-mux-{addr}");
+        MuxSlot {
+            inner: Arc::new(MuxSlotInner {
+                addr,
+                cfg,
+                name,
+                next_id: AtomicU64::new(1),
+                conn: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Register a completion slot and enqueue the request frame —
+    /// non-blocking (socket I/O happens on the pipeline threads), so a
+    /// caller can put many requests in flight before joining any. A
+    /// dead or never-opened connection is (re)opened here: the lazy
+    /// reconnect that heals a worker restart on the next submission.
+    fn submit(&self, req: Arc<Encoded>) -> Pending {
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            slot: self.clone(),
+            req: Arc::clone(&req),
+            rx,
+        };
+        let mut conn = self.inner.conn.lock().unwrap();
+        let reopen = match conn.as_ref() {
+            Some(c) => c.dead(),
+            None => true,
+        };
+        if reopen {
+            match MuxConn::open(&self.inner.addr, &self.inner.cfg, &self.inner.name) {
+                Ok(c) => *conn = Some(c),
+                Err(error) => {
+                    // Connect failures are hard errors: there is no
+                    // fresher connection a retry could land on.
+                    let _ = tx.send(Err(CallFailure {
+                        error,
+                        retryable: false,
+                    }));
+                    return pending;
+                }
+            }
+        }
+        let c = conn.as_ref().expect("connection just opened");
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut table = c.shared.table.lock().unwrap();
+            if table.dead {
+                // Died between the liveness check and now; the frame was
+                // never written, so the caller may retry.
+                let _ = tx.send(Err(CallFailure {
+                    error: ClientError::ConnectionClosed,
+                    retryable: true,
+                }));
+                return pending;
+            }
+            table.pending.insert(
+                id,
+                PendingEntry {
+                    tx: tx.clone(),
+                    sent: false,
+                },
+            );
+        }
+        let queue = c.tx.as_ref().expect("live connection keeps its queue");
+        if queue.send((id, req)).is_err() {
+            // The writer exited before accepting the job: never written.
+            let entry = c.shared.table.lock().unwrap().pending.remove(&id);
+            if entry.is_some() {
+                let _ = tx.send(Err(CallFailure {
+                    error: ClientError::ConnectionClosed,
+                    retryable: true,
+                }));
+            }
+            // else: `fail_all` already answered it (retryable — unsent).
+        }
+        pending
+    }
+}
+
+/// A not-yet-joined multiplexed call: joins when the reader routes the
+/// response carrying this call's request id back (or the connection
+/// dies). A call that provably never reached the socket is re-submitted
+/// once on a fresh connection — the mux analogue of the pooled client's
+/// stale-connection retry, minus any possibility of double-sending.
+struct Pending {
+    slot: MuxSlot,
+    req: Arc<Encoded>,
+    rx: mpsc::Receiver<CallResult>,
+}
+
+impl Pending {
+    /// Block until the worker answered this call (or it failed).
+    fn join(self) -> Result<WireResponse> {
+        let Pending { slot, req, rx } = self;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(f)) if f.retryable => match slot.submit(req).rx.recv() {
+                Ok(Ok(resp)) => Ok(resp),
+                Ok(Err(f)) => Err(f.error),
+                Err(_) => Err(dropped_call()),
+            },
+            Ok(Err(f)) => Err(f.error),
+            Err(_) => Err(dropped_call()),
+        }
+    }
+}
+
+/// Defensive: every completion path sends before dropping the sender,
+/// so a bare disconnect is a pipeline bug — surfaced as an error
+/// instead of a panic.
+fn dropped_call() -> ClientError {
+    ClientError::Protocol("multiplexed connection dropped a call without answering".to_string())
+}
+
+/// Wrap a fan-out failure with the worker index it came from. Applied
+/// only at the cluster join sites — the blocking [`RemoteShard`]
+/// helpers stay unwrapped so callers (publish healing, token
+/// resolution) can match on [`ClientError::Remote`] codes directly.
+fn attribute(e: ClientError, shard: usize) -> ClientError {
+    ClientError::Shard {
+        shard,
+        source: Box::new(e),
     }
 }
 
@@ -183,10 +475,10 @@ impl<T> Pending<T> {
 /// half of `RemoteCluster::score_global_ids`, joined later so batched
 /// callers can overlap scatters across queries.
 struct ScoreScatter {
-    /// Per non-empty worker bucket: expected score count, the in-flight
-    /// call, and the positions (in the original `ids` order) its scores
-    /// land in.
-    in_flight: Vec<(usize, Pending<Result<WireResponse>>, Vec<usize>)>,
+    /// Per non-empty worker bucket: worker index, expected score count,
+    /// the in-flight call, and the positions (in the original `ids`
+    /// order) its scores land in.
+    in_flight: Vec<(usize, usize, Pending, Vec<usize>)>,
     /// Total ids scattered (output length).
     len: usize,
 }
@@ -195,8 +487,11 @@ impl ScoreScatter {
     /// Join every worker bucket and gather scores in `ids` order.
     fn join(self) -> Result<Vec<f32>> {
         let mut out = vec![0f32; self.len];
-        for (want, pending, positions) in self.in_flight {
-            let scores = to_scores(pending.join()?, want)?;
+        for (shard, want, pending, positions) in self.in_flight {
+            let scores = pending
+                .join()
+                .and_then(|resp| to_scores(resp, want))
+                .map_err(|e| attribute(e, shard))?;
             for (score, pos) in scores.into_iter().zip(positions) {
                 out[pos] = score;
             }
@@ -207,23 +502,24 @@ impl ScoreScatter {
 
 /// Client handle to one shard worker process.
 ///
-/// Blocking RPC helpers serialize straight from borrowed payloads
-/// ([`Encoded`]) — no owned `Request` clone on the hot path — and the
-/// internal async `submit` path queues the call on the worker's I/O
-/// slot so the cluster can fan one operation out across all workers
-/// and join.
+/// All traffic rides the worker's multiplexed pipeline ([`MuxSlot`]):
+/// one persistent connection carrying many overlapped request ids. The
+/// blocking RPC helpers serialize straight from borrowed payloads
+/// ([`Encoded`]) — no owned `Request` clone on the hot path — and are
+/// just submit + join, so they interleave freely with the cluster's
+/// fan-out traffic on the same socket.
 pub struct RemoteShard {
-    pool: Pool,
-    slot: IoSlot,
+    slot: MuxSlot,
 }
 
 impl RemoteShard {
     /// Connect and fetch the worker's manifest: `(len, dim, epoch)`.
+    /// The connection itself opens lazily on this first call and is
+    /// re-opened transparently on the first submission after it dies
+    /// (worker restart, idle disconnect).
     pub fn connect(addr: Addr, cfg: ClientConfig) -> Result<(RemoteShard, (usize, usize, u64))> {
-        let slot = IoSlot::spawn(format!("zest-io-{addr}"));
         let shard = RemoteShard {
-            pool: Pool::new(addr, cfg),
-            slot,
+            slot: MuxSlot::new(addr, cfg),
         };
         let manifest = shard.manifest()?;
         Ok((shard, manifest))
@@ -231,27 +527,31 @@ impl RemoteShard {
 
     /// The worker's serving address.
     pub fn addr(&self) -> &Addr {
-        self.pool.addr()
+        &self.slot.inner.addr
     }
 
-    /// Issue a pre-encoded request on this worker's I/O slot and return
-    /// a joinable handle — the fan-out primitive every parallel cluster
-    /// operation is built from.
-    fn submit(self: &Arc<Self>, req: Encoded) -> Pending<Result<WireResponse>> {
-        let shard = Arc::clone(self);
-        self.slot
-            .run(move || shard.pool.call_encoded(req.payload(), req.resend_safe()))
+    /// Issue a pre-encoded request on this worker's multiplexed
+    /// pipeline and return a joinable handle — the fan-out primitive
+    /// every parallel cluster operation is built from. Submissions do
+    /// not block on the socket, and any number may be in flight on the
+    /// one connection at once (responses route back by request id).
+    fn submit(&self, req: Encoded) -> Pending {
+        self.slot.submit(Arc::new(req))
+    }
+
+    /// Submit + join in one blocking call.
+    fn call(&self, req: Encoded) -> Result<WireResponse> {
+        self.submit(req).join()
     }
 
     /// The worker's current `(len, dim, epoch)` manifest.
     pub fn manifest(&self) -> Result<(usize, usize, u64)> {
-        to_manifest(self.pool.call_encoded(Encoded::manifest().payload(), true)?)
+        to_manifest(self.call(Encoded::manifest())?)
     }
 
     /// Local top-k for every query (local ids).
     pub fn top_k_batch(&self, queries: &[Vec<f32>], k: usize) -> Result<Vec<Vec<Hit>>> {
-        let req = Encoded::top_k(k as u64, queries);
-        match self.pool.call_encoded(req.payload(), true)? {
+        match self.call(Encoded::top_k(k as u64, queries))? {
             WireResponse::Hits(hits) => Ok(hits),
             other => Err(unexpected("top_k", other)),
         }
@@ -259,8 +559,7 @@ impl RemoteShard {
 
     /// Continue a single-query chained exp-sum over this worker's rows.
     pub fn exp_sum_chain(&self, acc: f64, query: &[f32]) -> Result<f64> {
-        let req = Encoded::exp_sum_chain(acc, query);
-        match self.pool.call_encoded(req.payload(), true)? {
+        match self.call(Encoded::exp_sum_chain(acc, query))? {
             WireResponse::ExpSums(acc) if acc.len() == 1 => Ok(acc[0]),
             other => Err(unexpected("exp_sum_chain", other)),
         }
@@ -269,8 +568,7 @@ impl RemoteShard {
     /// Continue a batched chained exp-sum (one accumulator per query).
     pub fn exp_sum_chain_batch(&self, acc_in: Vec<f64>, queries: &[Vec<f32>]) -> Result<Vec<f64>> {
         let want = acc_in.len();
-        let req = Encoded::exp_sum_chain_batch(&acc_in, queries);
-        match self.pool.call_encoded(req.payload(), true)? {
+        match self.call(Encoded::exp_sum_chain_batch(&acc_in, queries))? {
             WireResponse::ExpSums(acc) if acc.len() == want => Ok(acc),
             other => Err(unexpected("exp_sum_chain_batch", other)),
         }
@@ -278,34 +576,33 @@ impl RemoteShard {
 
     /// Inner products of the given **local** rows with the query.
     pub fn score_ids(&self, ids: &[u64], query: &[f32]) -> Result<Vec<f32>> {
-        let req = Encoded::score_ids(ids, query);
-        to_scores(self.pool.call_encoded(req.payload(), true)?, ids.len())
+        let want = ids.len();
+        to_scores(self.call(Encoded::score_ids(ids, query))?, want)
     }
 
     /// Stage an epoch appending `rows` under `token` (publish phase 1).
     pub fn prepare_add(&self, token: u64, rows: &EmbeddingStore) -> Result<u64> {
-        let req = Encoded::prepare_add(token, rows.dim() as u64, rows.data());
-        to_prepared(self.pool.call_encoded(req.payload(), true)?)
+        to_prepared(self.call(Encoded::prepare_add(token, rows.dim() as u64, rows.data()))?)
     }
 
     /// Stage an epoch dropping the given local ids under `token`
     /// (publish phase 1; empty `ids` is a pure epoch bump).
     pub fn prepare_remove(&self, token: u64, ids: &[u64]) -> Result<u64> {
-        let req = Encoded::prepare_remove(token, ids);
-        to_prepared(self.pool.call_encoded(req.payload(), true)?)
+        to_prepared(self.call(Encoded::prepare_remove(token, ids))?)
     }
 
-    /// Publish the epoch staged under `token` (publish phase 2; never
-    /// silently re-sent — see `Pool::call_encoded`).
+    /// Publish the epoch staged under `token` (publish phase 2). Never
+    /// re-sent once its frame may have reached the wire — the pipeline
+    /// only retries calls that provably were never written (see
+    /// [`CallFailure`]), so an ambiguous commit failure surfaces as an
+    /// error for `RemoteCluster::publish` to resolve.
     pub fn commit(&self, token: u64) -> Result<u64> {
-        let req = Encoded::commit(token);
-        to_committed(self.pool.call_encoded(req.payload(), req.resend_safe())?)
+        to_committed(self.call(Encoded::commit(token))?)
     }
 
     /// Drop the preparation staged under `token` (idempotent).
     pub fn abort(&self, token: u64) -> Result<()> {
-        let req = Encoded::abort(token);
-        match self.pool.call_encoded(req.payload(), true)? {
+        match self.call(Encoded::abort(token))? {
             WireResponse::Aborted => Ok(()),
             other => Err(unexpected("abort", other)),
         }
@@ -314,8 +611,7 @@ impl RemoteShard {
     /// Fit FMBE over this worker's local rows: the per-feature λ̃
     /// vector plus the epoch it was fitted on.
     pub fn fit_fmbe(&self, seed: u64, p_features: usize) -> Result<(u64, Vec<f64>)> {
-        let req = Encoded::fit_fmbe(seed, p_features as u64);
-        to_lambdas(self.pool.call_encoded(req.payload(), true)?, p_features)
+        to_lambdas(self.call(Encoded::fit_fmbe(seed, p_features as u64))?, p_features)
     }
 }
 
@@ -649,8 +945,8 @@ impl RemoteCluster {
     /// — mirrors `Exact::estimate`).
     pub fn exp_sum(&self, q: &[f32]) -> Result<f64> {
         let mut acc = 0f64;
-        for shard in &self.shards {
-            acc = shard.exp_sum_chain(acc, q)?;
+        for (s, shard) in self.shards.iter().enumerate() {
+            acc = shard.exp_sum_chain(acc, q).map_err(|e| attribute(e, s))?;
         }
         Ok(acc)
     }
@@ -662,8 +958,10 @@ impl RemoteCluster {
         if qs.is_empty() {
             return Ok(acc);
         }
-        for shard in &self.shards {
-            acc = shard.exp_sum_chain_batch(acc, qs)?;
+        for (s, shard) in self.shards.iter().enumerate() {
+            acc = shard
+                .exp_sum_chain_batch(acc, qs)
+                .map_err(|e| attribute(e, s))?;
         }
         Ok(acc)
     }
@@ -689,14 +987,14 @@ impl RemoteCluster {
             .iter()
             .map(|shard| shard.submit(Encoded::exp_sum_part(qs)))
             .collect();
-        for pending in in_flight {
-            match pending.join()? {
+        for (s, pending) in in_flight.into_iter().enumerate() {
+            match pending.join().map_err(|e| attribute(e, s))? {
                 WireResponse::ExpSums(partials) if partials.len() == qs.len() => {
                     for (z, p) in zs.iter_mut().zip(partials) {
                         *z += p;
                     }
                 }
-                other => return Err(unexpected("exp_sum_part", other)),
+                other => return Err(attribute(unexpected("exp_sum_part", other), s)),
             }
         }
         Ok(zs)
@@ -737,7 +1035,7 @@ impl RemoteCluster {
             .filter(|(_, (locals, _))| !locals.is_empty())
             .map(|(s, (locals, positions))| {
                 let pending = self.shards[s].submit(Encoded::score_ids(&locals, q));
-                (locals.len(), pending, positions)
+                (s, locals.len(), pending, positions)
             })
             .collect();
         Ok(ScoreScatter {
@@ -969,12 +1267,12 @@ impl RemoteCluster {
             .map(|shard| shard.submit(Encoded::fit_fmbe(cfg.seed, p as u64)))
             .collect();
         let mut lambdas = vec![0f64; p];
-        for (shard, pending) in self.shards.iter().zip(in_flight) {
-            let (epoch, worker) = match pending.join()? {
+        for (s, (shard, pending)) in self.shards.iter().zip(in_flight).enumerate() {
+            let (epoch, worker) = match pending.join().map_err(|e| attribute(e, s))? {
                 WireResponse::Lambdas { epoch, lambdas } if lambdas.len() == p => {
                     (epoch, lambdas)
                 }
-                other => return Err(unexpected("fit_fmbe", other)),
+                other => return Err(attribute(unexpected("fit_fmbe", other), s)),
             };
             if epoch != state.epoch {
                 // Typed + retryable: `Busy` reaches wire clients as-is
@@ -1067,8 +1365,8 @@ impl RemoteCluster {
     /// rather than blindly retried: the worker's manifest is consulted —
     /// if it already serves the prepared epoch the commit landed and the
     /// lost response is forgotten; otherwise one explicit commit retry
-    /// runs (covering pre-write transport failures, which the client
-    /// pool deliberately does not resend for `Commit`). A worker that
+    /// runs (covering mid-write transport failures, which the
+    /// multiplexed pipeline deliberately never resends). A worker that
     /// still fails leaves the cluster out of lockstep; the original
     /// error is surfaced (never masked by the follow-up refresh) and the
     /// next `refresh()` keeps reporting the lockstep break until the
@@ -1087,8 +1385,12 @@ impl RemoteCluster {
             .collect();
         let mut next_epoch = None;
         let mut failure = None;
-        for pending in prepares {
-            match pending.join().and_then(to_prepared) {
+        for (s, pending) in prepares.into_iter().enumerate() {
+            match pending
+                .join()
+                .and_then(to_prepared)
+                .map_err(|e| attribute(e, s))
+            {
                 Ok(epoch) => {
                     next_epoch.get_or_insert(epoch);
                 }
@@ -1122,8 +1424,12 @@ impl RemoteCluster {
             .map(|shard| shard.submit(Encoded::commit(token)))
             .collect();
         let mut commit_failure = None;
-        for (shard, pending) in self.shards.iter().zip(commits) {
-            if let Err(first) = pending.join().and_then(to_committed) {
+        for (s, (shard, pending)) in self.shards.iter().zip(commits).enumerate() {
+            if let Err(first) = pending
+                .join()
+                .and_then(to_committed)
+                .map_err(|e| attribute(e, s))
+            {
                 // Ambiguous failure: check whether the commit landed.
                 let landed = matches!(shard.manifest(), Ok((_, _, e)) if e == next_epoch);
                 if !landed && shard.commit(token).is_err() {
@@ -1410,11 +1716,20 @@ impl ClusterHandler {
                         .collect(),
                 )
             }
-            Err(ClientError::Remote { code, message }) => WireResponse::Error { code, message },
-            Err(e) => WireResponse::Error {
-                code: ErrorCode::Internal,
-                message: format!("remote scatter failed: {e}"),
-            },
+            Err(e) => {
+                // Strip any shard attribution before dispatching on the
+                // code so typed errors (`Busy`, `DimMismatch`, …) keep
+                // their retry semantics over the wire; the attributed
+                // rendering survives in the `Internal` message.
+                let attributed = format!("remote scatter failed: {e}");
+                match e.into_unattributed() {
+                    ClientError::Remote { code, message } => WireResponse::Error { code, message },
+                    _ => WireResponse::Error {
+                        code: ErrorCode::Internal,
+                        message: attributed,
+                    },
+                }
+            }
         }
     }
 }

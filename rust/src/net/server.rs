@@ -1,27 +1,43 @@
-//! Blocking network server: a small accept loop serving framed
-//! request/response traffic ([`super::wire`]) over TCP or UDS.
+//! Readiness-driven network server: a fixed pool of reactor threads
+//! multiplexing framed request/response traffic ([`super::wire`]) over
+//! TCP or UDS.
 //!
-//! One thread accepts; each connection is served by its own thread
-//! (bounded by [`ServerConfig::max_connections`] — excess connections
-//! are answered with a `ConnLimit` error frame and closed). Connections are
-//! request-per-frame, pipelined sequentially; a malformed or truncated
-//! frame is answered with a `BadRequest` error frame and the connection
-//! is closed — the server never panics on wire input, and a panicking
-//! handler is caught and answered with an `Internal` error. Read
-//! timeouts bound how long an idle connection can hold a slot.
-//! [`Server::shutdown`] stops accepting, wakes the accept loop, and
-//! joins every connection thread.
+//! One thread accepts (bounded by [`ServerConfig::max_connections`] —
+//! excess connections are answered with a `ConnLimit` error frame and
+//! closed) and hands each accepted socket, switched to nonblocking, to
+//! one of [`ServerConfig::reactor_threads`] reactor threads. Each
+//! reactor owns a [`super::reactor::Poller`] and drives its share of
+//! connections through per-connection read/write buffers and a
+//! frame-assembly state machine: inbound bytes accumulate until a full
+//! v3 frame (header + payload) is present, decoded requests are
+//! dispatched to a shared pool of [`ServerConfig::handler_threads`]
+//! handler threads, and completed responses are routed back to the
+//! owning reactor (wakeup pipe) which writes them out **in completion
+//! order** — one connection can carry many overlapped RPCs, each
+//! response echoing the `request_id` of the frame it answers.
+//!
+//! A malformed or truncated frame is answered with a `BadRequest` error
+//! frame and the connection is closed — the server never panics on wire
+//! input, and a panicking handler is caught and answered with an
+//! `Internal` error. Read timeouts bound how long an *idle* connection
+//! (no in-flight requests) can hold a slot. [`Server::shutdown`] stops
+//! accepting, wakes every reactor through its wakeup pipe, flushes
+//! in-flight responses, and joins every thread.
 //!
 //! Per-connection activity (accepts, rejections, frames, wire errors)
 //! feeds the shared [`ServiceMetrics`] so network serving shows up next
 //! to batching/queueing in one `MetricsSnapshot`.
 
+use super::reactor::{Event, Poller, Waker};
 use super::wire::{self, ErrorCode, Request, Response};
 use super::{Addr, Listener, Stream};
 use crate::coordinator::{EstimateSpec, PartitionService, Precision, ServiceMetrics, SubmitError};
 use crate::estimators::EstimatorKind;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Serves decoded requests. Implementations: [`ServiceHandler`]
@@ -29,9 +45,10 @@ use std::time::{Duration, Instant};
 /// [`super::remote::ClusterHandler`] (partition server over remote
 /// shards).
 pub trait Handler: Send + Sync + 'static {
-    /// Answer one decoded request. Called concurrently from every
-    /// connection thread; a panic is caught by the server and answered
-    /// with an `Internal` error frame.
+    /// Answer one decoded request. Called concurrently from the
+    /// server's handler pool — including for overlapped requests from
+    /// the *same* connection; a panic is caught by the server and
+    /// answered with an `Internal` error frame.
     fn handle(&self, req: Request) -> Response;
 }
 
@@ -40,9 +57,18 @@ pub trait Handler: Send + Sync + 'static {
 pub struct ServerConfig {
     /// Concurrent connections served; further connections get `ConnLimit`.
     pub max_connections: usize,
-    /// Per-connection read timeout; an idle connection past it is
-    /// closed (freeing its slot). `None` blocks forever.
+    /// Per-connection read timeout; an idle connection (no in-flight
+    /// requests, nothing buffered) past it is closed, freeing its slot.
+    /// `None` keeps idle connections forever.
     pub read_timeout: Option<Duration>,
+    /// Reactor (event-loop) threads multiplexing the connections. A
+    /// handful suffices for hundreds of connections; clamped to ≥ 1.
+    pub reactor_threads: usize,
+    /// Handler threads executing decoded requests (these may block in
+    /// the service/store, so they are separate from the reactors).
+    /// Also the cap on overlapped in-flight requests making progress at
+    /// once. Clamped to ≥ 1.
+    pub handler_threads: usize,
 }
 
 impl Default for ServerConfig {
@@ -50,46 +76,212 @@ impl Default for ServerConfig {
         ServerConfig {
             max_connections: 256,
             read_timeout: Some(Duration::from_secs(30)),
+            reactor_threads: 2,
+            handler_threads: 16,
         }
     }
 }
 
-/// One tracked connection: its serving thread plus a second handle to
-/// the stream so shutdown can wake a blocked read.
-type ConnEntry = (std::thread::JoinHandle<()>, Option<Stream>);
+/// Wakeup-pipe token inside each reactor (connection slots count up
+/// from 0).
+const WAKER_TOKEN: u64 = u64::MAX;
+
+/// A finished handler invocation on its way back to the reactor that
+/// owns the connection.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    request_id: u64,
+    payload: Vec<u8>,
+}
+
+/// One decoded request on its way to the handler pool.
+struct HandlerJob {
+    reactor: usize,
+    slot: usize,
+    gen: u64,
+    request_id: u64,
+    req: Request,
+}
+
+/// What other threads push into a reactor between polls.
+#[derive(Default)]
+struct Inbox {
+    conns: Vec<Stream>,
+    completions: Vec<Completion>,
+}
+
+/// The cross-thread half of one reactor: its wakeup pipe plus the
+/// mailbox the accept thread and handler pool feed.
+struct ReactorShared {
+    waker: Waker,
+    inbox: Mutex<Inbox>,
+}
+
+impl ReactorShared {
+    fn push_conn(&self, s: Stream) {
+        self.inbox.lock().unwrap().conns.push(s);
+        self.waker.wake();
+    }
+
+    fn push_completion(&self, c: Completion) {
+        self.inbox.lock().unwrap().completions.push(c);
+        self.waker.wake();
+    }
+}
+
+/// One connection owned by a reactor.
+struct Conn {
+    stream: Stream,
+    /// Accumulated unparsed inbound bytes (the frame-assembly buffer).
+    buf: Vec<u8>,
+    /// Outbound frames not yet fully written, oldest first.
+    out: VecDeque<Vec<u8>>,
+    /// Write offset into `out.front()`.
+    out_pos: usize,
+    /// Requests dispatched to the handler pool, not yet answered.
+    in_flight: usize,
+    /// Peer sent EOF (or the read half failed): no more requests, but
+    /// in-flight responses still drain.
+    read_closed: bool,
+    /// Close as soon as the outbound buffer drains (error-frame path).
+    closing: bool,
+    /// Interests currently registered with the poller.
+    interest: (bool, bool),
+    last_activity: Instant,
+}
+
+impl Conn {
+    fn wants(&self) -> (bool, bool) {
+        (!self.read_closed && !self.closing, !self.out.is_empty())
+    }
+
+    /// Done: nothing buffered in either direction and nothing pending.
+    fn drained(&self) -> bool {
+        self.in_flight == 0 && self.out.is_empty()
+    }
+
+    fn queue_frame(&mut self, request_id: u64, payload: &[u8]) {
+        let mut frame = Vec::with_capacity(wire::HEADER_LEN + payload.len());
+        frame.extend_from_slice(&wire::encode_header(request_id, payload.len()));
+        frame.extend_from_slice(payload);
+        self.out.push_back(frame);
+    }
+}
 
 /// A running server; dropping it without [`Server::shutdown`] detaches
-/// the threads (they exit as clients disconnect or time out).
+/// the threads (the pool keeps serving until the process exits).
 pub struct Server {
     addr: Addr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
-    conns: Arc<Mutex<Vec<ConnEntry>>>,
+    reactors: Vec<Arc<ReactorShared>>,
+    reactor_threads: Vec<std::thread::JoinHandle<()>>,
+    handler_tx: Option<mpsc::Sender<HandlerJob>>,
+    handler_threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
-    /// Bind `addr` and start serving `handler`.
+    /// Bind `addr` and start serving `handler` on a reactor pool.
     pub fn serve(
         addr: &Addr,
         handler: Arc<dyn Handler>,
         cfg: ServerConfig,
         metrics: Arc<ServiceMetrics>,
     ) -> anyhow::Result<Server> {
-        let listener = Listener::bind(addr)
-            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let listener = Listener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
         let bound = listener.bound_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let conns: Arc<Mutex<Vec<ConnEntry>>> = Arc::new(Mutex::new(Vec::new()));
         let active = Arc::new(AtomicUsize::new(0));
+
+        // Reactor pool: poller + waker per thread, created up front so
+        // the accept thread can address them immediately.
+        let n_reactors = cfg.reactor_threads.max(1);
+        let mut reactors = Vec::with_capacity(n_reactors);
+        let mut pollers = Vec::with_capacity(n_reactors);
+        for _ in 0..n_reactors {
+            let poller = Poller::new().map_err(|e| anyhow::anyhow!("poller: {e}"))?;
+            let waker =
+                Waker::new(&poller, WAKER_TOKEN).map_err(|e| anyhow::anyhow!("waker: {e}"))?;
+            reactors.push(Arc::new(ReactorShared {
+                waker,
+                inbox: Mutex::new(Inbox::default()),
+            }));
+            pollers.push(poller);
+        }
+
+        // Handler pool: a shared receiver; jobs carry their way home.
+        let (handler_tx, handler_rx) = mpsc::channel::<HandlerJob>();
+        let handler_rx = Arc::new(Mutex::new(handler_rx));
+        let mut handler_threads = Vec::new();
+        for i in 0..cfg.handler_threads.max(1) {
+            let rx = handler_rx.clone();
+            let handler = handler.clone();
+            let reactors: Vec<Arc<ReactorShared>> = reactors.clone();
+            handler_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("zest-net-handler-{i}"))
+                    .spawn(move || loop {
+                        let job = match rx.lock().unwrap().recv() {
+                            Ok(j) => j,
+                            Err(_) => break,
+                        };
+                        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            handler.handle(job.req)
+                        }))
+                        .unwrap_or_else(|_| Response::Error {
+                            code: ErrorCode::Internal,
+                            message: "handler panicked".to_string(),
+                        });
+                        reactors[job.reactor].push_completion(Completion {
+                            slot: job.slot,
+                            gen: job.gen,
+                            request_id: job.request_id,
+                            payload: resp.encode(),
+                        });
+                    })
+                    .expect("spawn handler thread"),
+            );
+        }
+
+        let mut reactor_threads = Vec::with_capacity(n_reactors);
+        for (i, poller) in pollers.into_iter().enumerate() {
+            let shared = reactors[i].clone();
+            let stop = stop.clone();
+            let active = active.clone();
+            let metrics = metrics.clone();
+            let tx = handler_tx.clone();
+            let read_timeout = cfg.read_timeout;
+            reactor_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("zest-net-reactor-{i}"))
+                    .spawn(move || {
+                        Reactor {
+                            id: i,
+                            poller,
+                            shared,
+                            stop,
+                            active,
+                            metrics,
+                            handler_tx: tx,
+                            read_timeout,
+                            slots: Vec::new(),
+                        }
+                        .run()
+                    })
+                    .expect("spawn reactor thread"),
+            );
+        }
 
         let accept_thread = {
             let stop = stop.clone();
-            let conns = conns.clone();
+            let reactors: Vec<Arc<ReactorShared>> = reactors.clone();
             let bound_str = bound.to_string();
             std::thread::Builder::new()
                 .name("zest-net-accept".into())
                 .spawn(move || {
-                    log::info!("serving on {bound_str}");
+                    log::info!("serving on {bound_str} ({} reactors)", reactors.len());
+                    let mut next = 0usize;
                     loop {
                         let stream = match listener.accept() {
                             Ok(s) => s,
@@ -107,8 +299,10 @@ impl Server {
                         if active.load(Ordering::SeqCst) >= cfg.max_connections {
                             metrics.on_conn_rejected();
                             let mut stream = stream;
+                            // Connection-level error: request id 0.
                             let _ = wire::write_response(
                                 &mut stream,
+                                0,
                                 &Response::Error {
                                     code: ErrorCode::ConnLimit,
                                     message: format!(
@@ -119,29 +313,13 @@ impl Server {
                             );
                             continue; // drop closes it
                         }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue; // drop a socket we cannot drive
+                        }
                         metrics.on_conn_open();
                         active.fetch_add(1, Ordering::SeqCst);
-                        // Second handle to the stream so shutdown can
-                        // wake this connection's blocked read.
-                        let waker = stream.try_clone().ok();
-                        let handler = handler.clone();
-                        let metrics = metrics.clone();
-                        let active = active.clone();
-                        let stop = stop.clone();
-                        let read_timeout = cfg.read_timeout;
-                        let join = std::thread::Builder::new()
-                            .name("zest-net-conn".into())
-                            .spawn(move || {
-                                serve_conn(stream, handler, read_timeout, &metrics, &stop);
-                                active.fetch_sub(1, Ordering::SeqCst);
-                                metrics.on_conn_close();
-                            })
-                            .expect("spawn connection thread");
-                        let mut guard = conns.lock().unwrap();
-                        // Reap finished threads so the vector stays
-                        // bounded on long-lived servers.
-                        guard.retain(|(h, _)| !h.is_finished());
-                        guard.push((join, waker));
+                        reactors[next % reactors.len()].push_conn(stream);
+                        next = next.wrapping_add(1);
                     }
                 })
                 .expect("spawn accept thread")
@@ -151,7 +329,10 @@ impl Server {
             addr: bound,
             stop,
             accept_thread: Some(accept_thread),
-            conns,
+            reactors,
+            reactor_threads,
+            handler_tx: Some(handler_tx),
+            handler_threads,
         })
     }
 
@@ -160,11 +341,11 @@ impl Server {
         &self.addr
     }
 
-    /// Stop accepting, wake the accept loop, and join every thread.
-    /// In-flight connections finish the request they are handling;
-    /// connections blocked in a read are woken by shutting the read
-    /// half of their stream (clean EOF), so shutdown does not wait out
-    /// read timeouts — and terminates even with `read_timeout: None`.
+    /// Stop accepting, wake every reactor through its wakeup pipe, and
+    /// join every thread. In-flight requests finish and their responses
+    /// are flushed before the reactors close their connections, so
+    /// shutdown does not wait out read timeouts — and terminates even
+    /// with `read_timeout: None`.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Wake the blocking accept with a throwaway connection.
@@ -172,65 +353,379 @@ impl Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let entries: Vec<ConnEntry> = std::mem::take(&mut *self.conns.lock().unwrap());
-        for (join, waker) in entries {
-            if let Some(w) = &waker {
-                let _ = w.shutdown_read();
-            }
-            let _ = join.join();
+        // Reactors drain in-flight work (handler completions keep
+        // waking them), then close their connections and exit.
+        for r in &self.reactors {
+            r.waker.wake();
+        }
+        for t in self.reactor_threads.drain(..) {
+            let _ = t.join();
+        }
+        // With the reactors gone every job sender is dropped; the
+        // handler pool drains and exits.
+        self.handler_tx.take();
+        for t in self.handler_threads.drain(..) {
+            let _ = t.join();
         }
     }
 }
 
-/// Serve one connection: read frames until EOF, error, timeout or stop.
-fn serve_conn(
-    mut stream: Stream,
-    handler: Arc<dyn Handler>,
+/// The per-thread event loop: owns its poller and its connections.
+struct Reactor {
+    id: usize,
+    poller: Poller,
+    shared: Arc<ReactorShared>,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    metrics: Arc<ServiceMetrics>,
+    handler_tx: mpsc::Sender<HandlerJob>,
     read_timeout: Option<Duration>,
-    metrics: &ServiceMetrics,
-    stop: &AtomicBool,
-) {
-    let _ = stream.set_read_timeout(read_timeout);
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        let req = match wire::read_request(&mut stream) {
-            Ok(Some(req)) => req,
-            Ok(None) => break, // clean disconnect
-            Err(wire::WireError::Io(e))
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                break; // idle past the read timeout — free the slot
-            }
-            Err(e) => {
-                // Malformed/truncated frame (or transport failure):
-                // answer with an error frame (best effort) and close.
-                metrics.on_wire_error();
-                let _ = wire::write_response(
-                    &mut stream,
-                    &Response::Error {
-                        code: ErrorCode::BadRequest,
-                        message: e.to_string(),
-                    },
-                );
+    /// Connection slots; the index is the poller token. `gen` guards
+    /// against completions for a closed connection landing on a new one
+    /// that reused the slot.
+    slots: Vec<(u64, Option<Conn>)>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        let mut scratch = vec![0u8; 64 << 10];
+        // Poll granularity: fine enough to sweep read timeouts, coarse
+        // enough to stay idle-cheap.
+        let tick = match self.read_timeout {
+            Some(t) => (t / 4).clamp(Duration::from_millis(10), Duration::from_millis(500)),
+            None => Duration::from_millis(500),
+        };
+        loop {
+            self.drain_inbox();
+            if self.stop.load(Ordering::SeqCst) && self.quiesced() {
                 break;
+            }
+            if self.poller.wait(&mut events, Some(tick)).is_err() {
+                // A failing poller means the loop can no longer make
+                // progress; bail out rather than spin.
+                break;
+            }
+            let mut saw_wake = false;
+            for i in 0..events.len() {
+                let ev = events[i];
+                if ev.token == WAKER_TOKEN {
+                    saw_wake = true;
+                    continue;
+                }
+                let slot = ev.token as usize;
+                if ev.readable {
+                    self.handle_readable(slot, &mut scratch);
+                }
+                if ev.writable {
+                    self.handle_writable(slot);
+                }
+                self.update_interest(slot);
+            }
+            if saw_wake {
+                self.shared.waker.drain();
+                self.drain_inbox();
+            }
+            self.sweep_idle();
+        }
+        // Stop: every remaining connection is drained; close them all.
+        for slot in 0..self.slots.len() {
+            self.close(slot);
+        }
+    }
+
+    /// True once shutdown can proceed: nothing queued for this reactor
+    /// and every connection has flushed its in-flight work.
+    fn quiesced(&self) -> bool {
+        let inbox = self.shared.inbox.lock().unwrap();
+        inbox.conns.is_empty()
+            && inbox.completions.is_empty()
+            && self.slots.iter().all(|(_, c)| match c {
+                Some(conn) => conn.drained(),
+                None => true,
+            })
+    }
+
+    fn drain_inbox(&mut self) {
+        let Inbox { conns, completions } = {
+            let mut inbox = self.shared.inbox.lock().unwrap();
+            std::mem::take(&mut *inbox)
+        };
+        for stream in conns {
+            self.add_conn(stream);
+        }
+        for c in completions {
+            self.deliver(c);
+        }
+    }
+
+    fn add_conn(&mut self, stream: Stream) {
+        let slot = match self.slots.iter().position(|(_, c)| c.is_none()) {
+            Some(i) => i,
+            None => {
+                self.slots.push((0, None));
+                self.slots.len() - 1
             }
         };
-        metrics.on_frame_in();
-        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler.handle(req)))
-            .unwrap_or_else(|_| Response::Error {
-                code: ErrorCode::Internal,
-                message: "handler panicked".to_string(),
-            });
-        match wire::write_response(&mut stream, &resp) {
-            Ok(()) => metrics.on_frame_out(),
-            Err(_) => {
-                metrics.on_wire_error();
-                break;
+        if self
+            .poller
+            .register(stream.as_raw_fd(), slot as u64, true, false)
+            .is_err()
+        {
+            // Cannot drive this socket: count it closed again.
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.on_conn_close();
+            return;
+        }
+        self.slots[slot].0 += 1;
+        self.slots[slot].1 = Some(Conn {
+            stream,
+            buf: Vec::new(),
+            out: VecDeque::new(),
+            out_pos: 0,
+            in_flight: 0,
+            read_closed: false,
+            closing: false,
+            interest: (true, false),
+            last_activity: Instant::now(),
+        });
+    }
+
+    /// Route one handler completion to its connection (dropped if the
+    /// connection died while the handler ran), queue the response frame
+    /// and flush opportunistically.
+    fn deliver(&mut self, c: Completion) {
+        let Some((gen, Some(conn))) = self.slots.get_mut(c.slot).map(|(g, c)| (*g, c.as_mut()))
+        else {
+            return;
+        };
+        if gen != c.gen {
+            return;
+        }
+        conn.in_flight -= 1;
+        conn.queue_frame(c.request_id, &c.payload);
+        self.metrics.on_frame_out();
+        self.handle_writable(c.slot);
+        self.update_interest(c.slot);
+    }
+
+    fn handle_readable(&mut self, slot: usize, scratch: &mut [u8]) {
+        let Some((_, Some(conn))) = self.slots.get_mut(slot) else {
+            return;
+        };
+        if conn.read_closed || conn.closing {
+            return;
+        }
+        loop {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.buf.extend_from_slice(&scratch[..n]);
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // Transport failure: nothing sensible left to send.
+                    self.metrics.on_wire_error();
+                    self.close(slot);
+                    return;
+                }
             }
         }
+        self.parse_frames(slot);
+        // Peer EOF with a partial frame still buffered: truncated input
+        // is malformed — answer a connection-level (id 0) error before
+        // closing, like any other unframeable byte stream.
+        let truncated = match self.slots.get_mut(slot) {
+            Some((_, Some(conn)))
+                if conn.read_closed && !conn.closing && !conn.buf.is_empty() =>
+            {
+                let resp = bad_request(&wire::WireError::Malformed(
+                    "connection closed mid-frame".to_string(),
+                ));
+                conn.queue_frame(0, &resp.encode());
+                conn.closing = true;
+                true
+            }
+            _ => false,
+        };
+        if truncated {
+            self.metrics.on_wire_error();
+            self.handle_writable(slot);
+            return;
+        }
+        self.try_close_if_done(slot);
+    }
+
+    /// The frame-assembly state machine: peel complete frames off the
+    /// inbound buffer, dispatch decoded requests, answer malformed
+    /// input with a `BadRequest` frame and close.
+    fn parse_frames(&mut self, slot: usize) {
+        loop {
+            let Some((gen, Some(conn))) = self.slots.get_mut(slot).map(|(g, c)| (*g, c.as_mut()))
+            else {
+                return;
+            };
+            if conn.closing || conn.buf.len() < wire::HEADER_LEN {
+                return;
+            }
+            let mut header = [0u8; wire::HEADER_LEN];
+            header.copy_from_slice(&conn.buf[..wire::HEADER_LEN]);
+            let (request_id, len) = match wire::decode_header(&header) {
+                Ok(h) => h,
+                Err(e) => {
+                    // Unframeable input: the id cannot be trusted, so
+                    // the error frame is connection-level (id 0).
+                    self.metrics.on_wire_error();
+                    conn.queue_frame(0, &bad_request(&e).encode());
+                    conn.closing = true;
+                    return;
+                }
+            };
+            if conn.buf.len() < wire::HEADER_LEN + len {
+                return; // wait for the rest of the payload
+            }
+            let payload: Vec<u8> = conn
+                .buf
+                .drain(..wire::HEADER_LEN + len)
+                .skip(wire::HEADER_LEN)
+                .collect();
+            match Request::decode(&payload) {
+                Ok(req) => {
+                    self.metrics.on_frame_in();
+                    conn.in_flight += 1;
+                    let job = HandlerJob {
+                        reactor: self.id,
+                        slot,
+                        gen,
+                        request_id,
+                        req,
+                    };
+                    if self.handler_tx.send(job).is_err() {
+                        // Shutdown raced us: answer directly.
+                        let (_, Some(conn)) = &mut self.slots[slot] else {
+                            return;
+                        };
+                        conn.in_flight -= 1;
+                        conn.queue_frame(
+                            request_id,
+                            &Response::Error {
+                                code: ErrorCode::Closed,
+                                message: "server shutting down".to_string(),
+                            }
+                            .encode(),
+                        );
+                        conn.closing = true;
+                        return;
+                    }
+                }
+                Err(e) => {
+                    self.metrics.on_wire_error();
+                    conn.queue_frame(request_id, &bad_request(&e).encode());
+                    conn.closing = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_writable(&mut self, slot: usize) {
+        let Some((_, Some(conn))) = self.slots.get_mut(slot) else {
+            return;
+        };
+        while let Some(front) = conn.out.front() {
+            match conn.stream.write(&front[conn.out_pos..]) {
+                Ok(0) => {
+                    self.metrics.on_wire_error();
+                    self.close(slot);
+                    return;
+                }
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.last_activity = Instant::now();
+                    if conn.out_pos == front.len() {
+                        conn.out.pop_front();
+                        conn.out_pos = 0;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.metrics.on_wire_error();
+                    self.close(slot);
+                    return;
+                }
+            }
+        }
+        self.try_close_if_done(slot);
+    }
+
+    /// Close once a connection has nothing left to do: the error-frame
+    /// path (`closing`) and the peer-EOF path both wait for in-flight
+    /// responses to flush first.
+    fn try_close_if_done(&mut self, slot: usize) {
+        let Some((_, Some(conn))) = self.slots.get(slot).map(|(g, c)| (g, c.as_ref())) else {
+            return;
+        };
+        if (conn.closing || conn.read_closed) && conn.drained() {
+            self.close(slot);
+        }
+    }
+
+    /// Re-sync poller interest with what the connection currently needs
+    /// (read while open, write while the outbound buffer is nonempty).
+    fn update_interest(&mut self, slot: usize) {
+        let Some((_, Some(conn))) = self.slots.get_mut(slot) else {
+            return;
+        };
+        let want = conn.wants();
+        if want != conn.interest {
+            let fd = conn.stream.as_raw_fd();
+            if self.poller.reregister(fd, slot as u64, want.0, want.1).is_ok() {
+                conn.interest = want;
+            }
+        }
+    }
+
+    /// Idle connections (no buffered or in-flight work) past the read
+    /// timeout are closed, freeing their slots.
+    fn sweep_idle(&mut self) {
+        let Some(timeout) = self.read_timeout else {
+            return;
+        };
+        let now = Instant::now();
+        for slot in 0..self.slots.len() {
+            let stale = match &self.slots[slot].1 {
+                Some(c) => c.drained() && now.duration_since(c.last_activity) > timeout,
+                None => false,
+            };
+            if stale {
+                self.close(slot);
+            }
+        }
+    }
+
+    fn close(&mut self, slot: usize) {
+        let Some((_, conn_opt)) = self.slots.get_mut(slot) else {
+            return;
+        };
+        if let Some(conn) = conn_opt.take() {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            drop(conn);
+            self.active.fetch_sub(1, Ordering::SeqCst);
+            self.metrics.on_conn_close();
+        }
+    }
+}
+
+fn bad_request(e: &wire::WireError) -> Response {
+    Response::Error {
+        code: ErrorCode::BadRequest,
+        message: e.to_string(),
     }
 }
 
@@ -361,8 +856,7 @@ impl Handler for ServiceHandler {
                         // drain-time deadline shed or a shutdown/backend
                         // failure — the deadline tells which.
                         Err(_) => {
-                            let expired =
-                                deadline.is_some_and(|d| Instant::now() >= d);
+                            let expired = deadline.is_some_and(|d| Instant::now() >= d);
                             return Self::submit_error(if expired {
                                 SubmitError::DeadlineExceeded
                             } else {

@@ -30,6 +30,14 @@
 //! `FitFmbe` — a local FMBE fit over the worker's rows whose λ̃ vector
 //! the cluster sums with the other workers' (λ̃ is additive over row
 //! partitions; see [`crate::estimators::fmbe::Fmbe::from_lambdas`]).
+//!
+//! Under the wire-v3 reactor server, one connection carries many
+//! overlapped requests and the handler pool executes them
+//! **concurrently** — there is no per-connection serialization. Every
+//! op here is therefore written against shared state only through the
+//! lock-free epoch snapshots ([`SnapshotHandle::load`]) or the `staged`
+//! mutex; a retrieval racing a publish simply answers from whichever
+//! epoch it loaded, tagged so the caller can detect the race.
 
 use super::server::Handler;
 use super::wire::{ErrorCode, Request, Response};

@@ -4,14 +4,23 @@
 //! manifests, chained exp-sums, and the two-phase epoch-publish
 //! handshake.
 //!
-//! ## Frame layout
+//! ## Frame layout (version 3)
 //!
 //! ```text
-//! ┌─────────┬────────────┬─────────────┬──────────────────────┐
-//! │ "ZNW1"  │ version u16│ payload len │ payload              │
-//! │ 4 bytes │ LE         │ u32 LE      │ tag u8 + body        │
-//! └─────────┴────────────┴─────────────┴──────────────────────┘
+//! ┌─────────┬────────────┬─────────────┬────────────────┬───────────────┐
+//! │ "ZNW1"  │ version u16│ payload len │ request id u64 │ payload       │
+//! │ 4 bytes │ LE         │ u32 LE      │ LE             │ tag u8 + body │
+//! └─────────┴────────────┴─────────────┴────────────────┴───────────────┘
 //! ```
+//!
+//! Version 3 added the `request_id` header field: a response frame
+//! echoes the id of the request it answers, so one connection can carry
+//! many overlapped RPCs and responses may return **out of request
+//! order** (the reactor server and the multiplexed [`super::remote`]
+//! pipeline both rely on this). Id `0` is reserved for
+//! connection-level frames a server emits before it has read any
+//! request (e.g. the `ConnLimit` rejection); clients start their ids at
+//! 1.
 //!
 //! Every multi-byte integer and float is little-endian. Vectors are a
 //! `u32` count followed by raw elements; query blocks are `count u32,
@@ -47,15 +56,20 @@ use std::io::{Read, Write};
 pub const MAGIC: [u8; 4] = *b"ZNW1";
 /// Protocol version carried in every frame header. Version 2 extended
 /// `Estimate`/`EstimateBatch` with a precision byte and a deadline
-/// budget, and added the `ExpSumPart` worker op (see `docs/WIRE.md`
-/// §8 for the history).
-pub const VERSION: u16 = 2;
+/// budget, and added the `ExpSumPart` worker op; version 3 widened the
+/// header with a `request_id: u64` so one connection multiplexes many
+/// overlapped RPCs (see `docs/WIRE.md` §8 for the history).
+pub const VERSION: u16 = 3;
 /// Upper bound on one frame's payload (guards against allocating
 /// attacker-controlled lengths; also the practical cap on one
 /// `PrepareAdd` row shipment — ~64M f32s).
 pub const MAX_FRAME_LEN: usize = 256 << 20;
 
-const HEADER_LEN: usize = 10;
+/// Fixed frame-header size: magic (4) + version (2) + payload length
+/// (4) + request id (8). Exposed so readiness-driven readers (the
+/// reactor's frame-assembly state machine) can buffer exactly one
+/// header before deciding how much payload to expect.
+pub const HEADER_LEN: usize = 18;
 
 /// Decode/transport failure.
 #[derive(Debug)]
@@ -1028,25 +1042,59 @@ impl Encoded {
 // ---------------------------------------------------------------------
 // Frame I/O.
 
-/// Write one frame (header + payload) and flush.
-pub fn write_frame(w: &mut dyn Write, payload: &[u8]) -> Result<()> {
-    if payload.len() > MAX_FRAME_LEN {
-        return Err(WireError::FrameTooLarge(payload.len()));
-    }
+/// Build the fixed 18-byte v3 header for a frame of `payload_len`
+/// bytes answering/carrying `request_id`. The caller has already
+/// checked `payload_len <= MAX_FRAME_LEN`.
+pub fn encode_header(request_id: u64, payload_len: usize) -> [u8; HEADER_LEN] {
     let mut header = [0u8; HEADER_LEN];
     header[..4].copy_from_slice(&MAGIC);
     header[4..6].copy_from_slice(&VERSION.to_le_bytes());
-    header[6..10].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[6..10].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    header[10..18].copy_from_slice(&request_id.to_le_bytes());
+    header
+}
+
+/// Validate a buffered header and extract `(request_id, payload_len)`.
+/// This is the pure half of [`read_frame`], shared with the reactor's
+/// incremental frame-assembly state machine which accumulates header
+/// bytes across readiness events instead of blocking for them.
+pub fn decode_header(header: &[u8; HEADER_LEN]) -> Result<(u64, usize)> {
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic([
+            header[0], header[1], header[2], header[3],
+        ]));
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::FrameTooLarge(len));
+    }
+    let request_id = u64::from_le_bytes([
+        header[10], header[11], header[12], header[13], header[14], header[15], header[16],
+        header[17],
+    ]);
+    Ok((request_id, len))
+}
+
+/// Write one frame (header + payload) carrying `request_id`, and flush.
+pub fn write_frame(w: &mut dyn Write, request_id: u64, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(WireError::FrameTooLarge(payload.len()));
+    }
+    let header = encode_header(request_id, payload.len());
     w.write_all(&header)?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame's payload. `Ok(None)` on a clean EOF **before** any
-/// header byte (the peer hung up between frames); a connection dying
-/// mid-frame is a truncation error.
-pub fn read_frame(r: &mut dyn Read) -> Result<Option<Vec<u8>>> {
+/// Read one frame's `(request_id, payload)`. `Ok(None)` on a clean EOF
+/// **before** any header byte (the peer hung up between frames); a
+/// connection dying mid-frame is a truncation error.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u64, Vec<u8>)>> {
     let mut header = [0u8; HEADER_LEN];
     let mut got = 0usize;
     while got < HEADER_LEN {
@@ -1072,19 +1120,7 @@ pub fn read_frame(r: &mut dyn Read) -> Result<Option<Vec<u8>>> {
             Err(e) => return Err(WireError::Io(e)),
         }
     }
-    if header[..4] != MAGIC {
-        return Err(WireError::BadMagic([
-            header[0], header[1], header[2], header[3],
-        ]));
-    }
-    let version = u16::from_le_bytes([header[4], header[5]]);
-    if version != VERSION {
-        return Err(WireError::BadVersion(version));
-    }
-    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]) as usize;
-    if len > MAX_FRAME_LEN {
-        return Err(WireError::FrameTooLarge(len));
-    }
+    let (request_id, len) = decode_header(&header)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof || is_timeout(&e) {
@@ -1095,7 +1131,7 @@ pub fn read_frame(r: &mut dyn Read) -> Result<Option<Vec<u8>>> {
             WireError::Io(e)
         }
     })?;
-    Ok(Some(payload))
+    Ok(Some((request_id, payload)))
 }
 
 fn is_timeout(e: &std::io::Error) -> bool {
@@ -1105,28 +1141,29 @@ fn is_timeout(e: &std::io::Error) -> bool {
     )
 }
 
-/// Encode + frame one request.
-pub fn write_request(w: &mut dyn Write, req: &Request) -> Result<()> {
-    write_frame(w, &req.encode())
+/// Encode + frame one request under `request_id`.
+pub fn write_request(w: &mut dyn Write, request_id: u64, req: &Request) -> Result<()> {
+    write_frame(w, request_id, &req.encode())
 }
 
-/// Read + decode one request (`Ok(None)` on clean EOF).
-pub fn read_request(r: &mut dyn Read) -> Result<Option<Request>> {
+/// Read + decode one request with its id (`Ok(None)` on clean EOF).
+pub fn read_request(r: &mut dyn Read) -> Result<Option<(u64, Request)>> {
     match read_frame(r)? {
-        Some(payload) => Ok(Some(Request::decode(&payload)?)),
+        Some((id, payload)) => Ok(Some((id, Request::decode(&payload)?))),
         None => Ok(None),
     }
 }
 
-/// Encode + frame one response.
-pub fn write_response(w: &mut dyn Write, resp: &Response) -> Result<()> {
-    write_frame(w, &resp.encode())
+/// Encode + frame one response echoing `request_id`.
+pub fn write_response(w: &mut dyn Write, request_id: u64, resp: &Response) -> Result<()> {
+    write_frame(w, request_id, &resp.encode())
 }
 
-/// Read + decode one response (`Ok(None)` on clean EOF).
-pub fn read_response(r: &mut dyn Read) -> Result<Option<Response>> {
+/// Read + decode one response with the request id it answers
+/// (`Ok(None)` on clean EOF).
+pub fn read_response(r: &mut dyn Read) -> Result<Option<(u64, Response)>> {
     match read_frame(r)? {
-        Some(payload) => Ok(Some(Response::decode(&payload)?)),
+        Some((id, payload)) => Ok(Some((id, Response::decode(&payload)?))),
         None => Ok(None),
     }
 }
@@ -1137,18 +1174,30 @@ mod tests {
 
     fn frame_bytes(payload: &[u8]) -> Vec<u8> {
         let mut out = Vec::new();
-        write_frame(&mut out, payload).unwrap();
+        write_frame(&mut out, 0, payload).unwrap();
         out
     }
 
-    /// Golden bytes: the full Ping frame, byte for byte (version 2).
-    /// Changing this is a wire-format break.
+    /// Golden bytes: the full Ping frame, byte for byte (version 3:
+    /// request id 7 in the header). Changing this is a wire-format
+    /// break.
     #[test]
     fn golden_ping_frame() {
-        let bytes = frame_bytes(&Request::Ping.encode());
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, 7, &Request::Ping.encode()).unwrap();
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            b'Z', b'N', b'W', b'1',                         // magic
+            0x03, 0x00,                                     // version 3
+            0x01, 0x00, 0x00, 0x00,                         // payload len 1
+            0x07, 0, 0, 0, 0, 0, 0, 0,                      // request id 7
+            0x01,                                           // Ping tag
+        ];
+        assert_eq!(bytes, want);
+        let mut r = &bytes[..];
         assert_eq!(
-            bytes,
-            vec![b'Z', b'N', b'W', b'1', 0x02, 0x00, 0x01, 0x00, 0x00, 0x00, 0x01]
+            read_request(&mut r).unwrap(),
+            Some((7u64, Request::Ping))
         );
     }
 
@@ -1456,15 +1505,30 @@ mod tests {
     #[test]
     fn frame_roundtrip_through_a_byte_stream() {
         let mut buf = Vec::new();
-        write_request(&mut buf, &Request::Commit { token: 5 }).unwrap();
-        write_request(&mut buf, &Request::Ping).unwrap();
+        write_request(&mut buf, 1, &Request::Commit { token: 5 }).unwrap();
+        write_request(&mut buf, u64::MAX, &Request::Ping).unwrap();
         let mut r = &buf[..];
         assert_eq!(
             read_request(&mut r).unwrap(),
-            Some(Request::Commit { token: 5 })
+            Some((1, Request::Commit { token: 5 }))
         );
-        assert_eq!(read_request(&mut r).unwrap(), Some(Request::Ping));
+        assert_eq!(
+            read_request(&mut r).unwrap(),
+            Some((u64::MAX, Request::Ping))
+        );
         assert_eq!(read_request(&mut r).unwrap(), None, "clean EOF");
+    }
+
+    #[test]
+    fn header_helpers_match_frame_io() {
+        let payload = Request::Ping.encode();
+        let header = encode_header(42, payload.len());
+        assert_eq!(decode_header(&header).unwrap(), (42, payload.len()));
+        let mut framed = header.to_vec();
+        framed.extend_from_slice(&payload);
+        let mut by_writer = Vec::new();
+        write_frame(&mut by_writer, 42, &payload).unwrap();
+        assert_eq!(framed, by_writer);
     }
 
     #[test]
@@ -1486,8 +1550,9 @@ mod tests {
     #[test]
     fn truncated_frame_rejected_not_eof() {
         let bytes = frame_bytes(&Request::Manifest.encode());
-        // Cut mid-header and mid-payload: both are malformed, not EOF.
-        for cut in [3usize, bytes.len() - 1] {
+        // Cut mid-magic, mid-request-id and mid-payload: all are
+        // malformed, not EOF.
+        for cut in [3usize, 12, bytes.len() - 1] {
             let mut r = &bytes[..cut];
             assert!(
                 matches!(read_frame(&mut r), Err(WireError::Malformed(_))),

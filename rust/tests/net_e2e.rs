@@ -13,6 +13,10 @@
 //!   windows overlap and publish latency is max-not-sum.
 //! * **Acceptance**: a malformed / truncated frame closes the
 //!   connection with an error response; the server keeps serving.
+//! * **Acceptance** (wire v3): ≥256 concurrent connections served by a
+//!   reactor pool of ≤4 threads; ≥8 overlapped RPCs on **one** socket
+//!   completing out of submission order; a rogue response with a
+//!   mismatched request id is a typed client error, not a panic.
 //! * `PartitionClient` ↔ `ServiceHandler` mirrors the in-process
 //!   service (same answers, typed error mapping, net metrics).
 //! * Two-phase epoch publish across workers: all-or-nothing prepare,
@@ -335,7 +339,8 @@ fn malformed_frames_close_with_error_not_panic() {
         let mut conn = UnixStream::connect(&path).unwrap();
         conn.write_all(b"GARBAGEGARBAGEGARBAGE").unwrap();
         conn.flush().unwrap();
-        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        let (id, resp) = wire::read_response(&mut conn).unwrap().unwrap();
+        assert_eq!(id, 0, "unframeable input gets a connection-level error");
         assert!(
             matches!(
                 resp,
@@ -360,10 +365,12 @@ fn malformed_frames_close_with_error_not_panic() {
         header.extend_from_slice(&wire::MAGIC);
         header.extend_from_slice(&wire::VERSION.to_le_bytes());
         header.extend_from_slice(&100u32.to_le_bytes());
+        header.extend_from_slice(&7u64.to_le_bytes()); // request id
         header.extend_from_slice(&[1, 2, 3]); // 3 of the promised 100 bytes
         conn.write_all(&header).unwrap();
         conn.shutdown(std::net::Shutdown::Write).unwrap();
-        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        let (id, resp) = wire::read_response(&mut conn).unwrap().unwrap();
+        assert_eq!(id, 0, "a truncated frame's id cannot be trusted");
         assert!(
             matches!(
                 resp,
@@ -379,8 +386,9 @@ fn malformed_frames_close_with_error_not_panic() {
     // The server survived both: a fresh connection still answers.
     {
         let mut conn = UnixStream::connect(&path).unwrap();
-        wire::write_request(&mut conn, &wire::Request::Manifest).unwrap();
-        let resp = wire::read_response(&mut conn).unwrap().unwrap();
+        wire::write_request(&mut conn, 5, &wire::Request::Manifest).unwrap();
+        let (id, resp) = wire::read_response(&mut conn).unwrap().unwrap();
+        assert_eq!(id, 5, "the response echoes the request id");
         assert_eq!(
             resp,
             wire::Response::Manifest {
@@ -629,6 +637,7 @@ fn connection_limit_sheds_with_busy() {
         ServerConfig {
             max_connections: 1,
             read_timeout: Some(std::time::Duration::from_secs(5)),
+            ..Default::default()
         },
         metrics.clone(),
     )
@@ -639,15 +648,17 @@ fn connection_limit_sheds_with_busy() {
 
     // Fill the one slot (and prove it serves).
     let mut held = UnixStream::connect(&path).unwrap();
-    wire::write_request(&mut held, &wire::Request::Ping).unwrap();
+    wire::write_request(&mut held, 1, &wire::Request::Ping).unwrap();
     assert_eq!(
         wire::read_response(&mut held).unwrap(),
-        Some(wire::Response::Pong)
+        Some((1, wire::Response::Pong))
     );
 
-    // The next connection is turned away with ConnLimit.
+    // The next connection is turned away with ConnLimit (id 0: the
+    // rejection answers the connection, not any request).
     let mut second = UnixStream::connect(&path).unwrap();
-    let resp = wire::read_response(&mut second).unwrap().unwrap();
+    let (id, resp) = wire::read_response(&mut second).unwrap().unwrap();
+    assert_eq!(id, 0);
     assert!(
         matches!(
             resp,
@@ -664,9 +675,9 @@ fn connection_limit_sheds_with_busy() {
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
     loop {
         let mut retry = UnixStream::connect(&path).unwrap();
-        wire::write_request(&mut retry, &wire::Request::Ping).unwrap();
+        wire::write_request(&mut retry, 1, &wire::Request::Ping).unwrap();
         match wire::read_response(&mut retry).unwrap() {
-            Some(wire::Response::Pong) => break,
+            Some((1, wire::Response::Pong)) => break,
             _ if std::time::Instant::now() < deadline => {
                 std::thread::sleep(std::time::Duration::from_millis(20));
             }
@@ -694,8 +705,8 @@ fn spawned_binaries_serve_exact_bit_identical() {
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
         loop {
             if let Ok(mut conn) = zest::net::Stream::connect(addr) {
-                if wire::write_request(&mut conn, &wire::Request::Ping).is_ok() {
-                    if let Ok(Some(wire::Response::Pong)) = wire::read_response(&mut conn) {
+                if wire::write_request(&mut conn, 1, &wire::Request::Ping).is_ok() {
+                    if let Ok(Some((1, wire::Response::Pong))) = wire::read_response(&mut conn) {
                         return;
                     }
                 }
@@ -1158,4 +1169,202 @@ fn refresh_auto_heals_a_missed_commit() {
     for server in servers {
         server.shutdown();
     }
+}
+
+/// ACCEPTANCE (wire v3): a reactor pool of ≤4 threads serves ≥256
+/// concurrent connections — far more sockets than threads, all open at
+/// once, each answering a request.
+#[test]
+fn reactor_pool_serves_256_connections_on_4_threads() {
+    const CONNS: usize = 256;
+    let s = store(20, 8);
+    let addr = sock_addr("manyconns");
+    let server = Server::serve(
+        &addr,
+        Arc::new(ShardWorker::new(s)),
+        ServerConfig {
+            max_connections: CONNS + 8,
+            read_timeout: Some(std::time::Duration::from_secs(30)),
+            reactor_threads: 4,
+            handler_threads: 8,
+        },
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let Addr::Unix(path) = server.local_addr().clone() else {
+        panic!()
+    };
+
+    // Open every connection before exchanging any frames: the whole set
+    // is concurrently registered across the reactor pool.
+    let mut conns: Vec<UnixStream> = (0..CONNS)
+        .map(|_| UnixStream::connect(&path).unwrap())
+        .collect();
+    for (i, conn) in conns.iter_mut().enumerate() {
+        let id = i as u64 + 1;
+        wire::write_request(conn, id, &wire::Request::Manifest).unwrap();
+    }
+    for (i, conn) in conns.iter_mut().enumerate() {
+        let id = i as u64 + 1;
+        let got = wire::read_response(conn).unwrap();
+        assert_eq!(
+            got,
+            Some((
+                id,
+                wire::Response::Manifest {
+                    len: 20,
+                    dim: 8,
+                    epoch: 0
+                }
+            )),
+            "connection {i}"
+        );
+    }
+    drop(conns);
+    server.shutdown();
+}
+
+/// ACCEPTANCE (wire v3): one socket carries ≥8 overlapped RPCs that
+/// complete **out of submission order** — the first-submitted request
+/// sleeps longest, so its response arrives last, and the total wall
+/// clock is far below the sum of the handler delays.
+#[test]
+fn overlapped_rpcs_complete_out_of_submission_order() {
+    const IN_FLIGHT: u64 = 8;
+    const STEP_MS: u64 = 80;
+
+    /// Sleeps `acc` milliseconds in `ExpSumChain`, then echoes `acc` —
+    /// a handler whose latency the test controls per request.
+    struct SleepEcho;
+    impl Handler for SleepEcho {
+        fn handle(&self, req: wire::Request) -> wire::Response {
+            match req {
+                wire::Request::ExpSumChain { acc, .. } => {
+                    std::thread::sleep(std::time::Duration::from_millis(acc as u64));
+                    wire::Response::ExpSums(vec![acc])
+                }
+                _ => wire::Response::Pong,
+            }
+        }
+    }
+
+    let addr = sock_addr("overlap-rpc");
+    let server = Server::serve(
+        &addr,
+        Arc::new(SleepEcho),
+        ServerConfig {
+            handler_threads: IN_FLIGHT as usize,
+            ..Default::default()
+        },
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let Addr::Unix(path) = server.local_addr().clone() else {
+        panic!()
+    };
+
+    // One socket, 8 requests back to back: id i sleeps (9 - i) × STEP
+    // ms, so submission order 1..8 should complete roughly reversed.
+    let mut conn = UnixStream::connect(&path).unwrap();
+    let delay_of = |id: u64| ((IN_FLIGHT + 1 - id) * STEP_MS) as f64;
+    let t0 = std::time::Instant::now();
+    for id in 1..=IN_FLIGHT {
+        let req = wire::Request::ExpSumChain {
+            acc: delay_of(id),
+            query: vec![],
+        };
+        wire::write_request(&mut conn, id, &req).unwrap();
+    }
+    let mut arrivals = Vec::new();
+    for _ in 0..IN_FLIGHT {
+        let (id, resp) = wire::read_response(&mut conn).unwrap().unwrap();
+        let wire::Response::ExpSums(v) = resp else {
+            panic!("{resp:?}")
+        };
+        assert_eq!(v, vec![delay_of(id)], "response routed to the wrong id");
+        arrivals.push(id);
+    }
+    let elapsed = t0.elapsed();
+
+    let submitted: Vec<u64> = (1..=IN_FLIGHT).collect();
+    let mut seen = arrivals.clone();
+    seen.sort_unstable();
+    assert_eq!(seen, submitted, "every RPC answered exactly once");
+    assert_ne!(
+        arrivals, submitted,
+        "overlapped RPCs must complete out of submission order"
+    );
+    assert_ne!(
+        arrivals.first(),
+        Some(&1),
+        "the longest-sleeping (first-submitted) RPC cannot finish first"
+    );
+    // Overlap: sum of delays is 8+7+…+1 = 36 steps; the max is 8 steps.
+    let sum_ms = STEP_MS * (IN_FLIGHT * (IN_FLIGHT + 1) / 2);
+    assert!(
+        elapsed < std::time::Duration::from_millis(sum_ms / 2),
+        "8 in-flight RPCs took {elapsed:?} — not overlapped (serial ≈ {sum_ms} ms)"
+    );
+    drop(conn);
+    server.shutdown();
+}
+
+/// ACCEPTANCE (wire v3): a response tagged with the wrong request id is
+/// survivable on both client paths — the pooled client surfaces a typed
+/// protocol error, and the multiplexed pipeline ignores the unknown
+/// frame and still routes the real answer. No panics either way.
+#[test]
+fn request_id_mismatch_is_an_error_not_a_panic() {
+    use std::os::unix::net::UnixListener;
+    use zest::net::remote::RemoteShard;
+
+    // Rogue A: answers the first request with id+1 — the pooled
+    // client's echo check must reject it.
+    let addr = sock_addr("rogue-a");
+    let Addr::Unix(path) = addr.clone() else {
+        panic!()
+    };
+    let listener = UnixListener::bind(&path).unwrap();
+    let rogue = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        let (id, _req) = wire::read_request(&mut stream).unwrap().unwrap();
+        wire::write_response(&mut stream, id + 1, &wire::Response::Pong).unwrap();
+        // Hold the socket until the client gives up on it.
+        let _ = wire::read_request(&mut stream);
+    });
+    let err = PartitionClient::connect(addr, ClientConfig::default()).unwrap_err();
+    assert!(
+        matches!(err, ClientError::Protocol(_)),
+        "want Protocol error, got {err}"
+    );
+    rogue.join().unwrap();
+
+    // Rogue B: prepends a frame with an id nobody asked for, then the
+    // real answer — the multiplexed reader drops the stray and the
+    // call completes.
+    let addr = sock_addr("rogue-b");
+    let Addr::Unix(path) = addr.clone() else {
+        panic!()
+    };
+    let listener = UnixListener::bind(&path).unwrap();
+    let rogue = std::thread::spawn(move || {
+        let (mut stream, _) = listener.accept().unwrap();
+        while let Ok(Some((id, req))) = wire::read_request(&mut stream) {
+            if !matches!(req, wire::Request::Manifest) {
+                break;
+            }
+            wire::write_response(&mut stream, id + 999, &wire::Response::Pong).unwrap();
+            let manifest = wire::Response::Manifest {
+                len: 40,
+                dim: 8,
+                epoch: 0,
+            };
+            wire::write_response(&mut stream, id, &manifest).unwrap();
+        }
+    });
+    let (shard, manifest) = RemoteShard::connect(addr, ClientConfig::default()).unwrap();
+    assert_eq!(manifest, (40, 8, 0));
+    assert_eq!(shard.manifest().unwrap(), (40, 8, 0));
+    drop(shard);
+    rogue.join().unwrap();
 }

@@ -351,12 +351,16 @@ fn prop_wire_codec_roundtrips() {
                 token: rng.next_u64(),
             },
         };
+        let req_id = rng.next_u64();
         let mut framed = Vec::new();
-        wire::write_request(&mut framed, &req)
+        wire::write_request(&mut framed, req_id, &req)
             .map_err(|e| format!("write_request: {e}"))?;
-        let got = wire::read_request(&mut &framed[..])
+        let (got_id, got) = wire::read_request(&mut &framed[..])
             .map_err(|e| format!("read_request: {e}"))?
             .ok_or("unexpected EOF")?;
+        if got_id != req_id {
+            return Err(format!("request id mangled: {req_id} → {got_id}"));
+        }
         if got != req {
             return Err(format!("request mangled: {req:?} → {got:?}"));
         }
@@ -410,12 +414,16 @@ fn prop_wire_codec_roundtrips() {
                 message: format!("case {} says λ̃ ≠ Z", rng.below(1000)),
             },
         };
+        let resp_id = rng.next_u64();
         let mut framed = Vec::new();
-        wire::write_response(&mut framed, &resp)
+        wire::write_response(&mut framed, resp_id, &resp)
             .map_err(|e| format!("write_response: {e}"))?;
-        let got = wire::read_response(&mut &framed[..])
+        let (got_id, got) = wire::read_response(&mut &framed[..])
             .map_err(|e| format!("read_response: {e}"))?
             .ok_or("unexpected EOF")?;
+        if got_id != resp_id {
+            return Err(format!("response id mangled: {resp_id} → {got_id}"));
+        }
         if got != resp {
             return Err(format!("response mangled: {resp:?} → {got:?}"));
         }
@@ -436,7 +444,7 @@ fn prop_wire_truncation_is_total() {
             query: (0..rng.range(1, 16)).map(|_| rng.normal() as f32).collect(),
         };
         let mut framed = Vec::new();
-        wire::write_request(&mut framed, &req).map_err(|e| format!("{e}"))?;
+        wire::write_request(&mut framed, rng.next_u64(), &req).map_err(|e| format!("{e}"))?;
         let cut = rng.below(framed.len());
         match wire::read_request(&mut &framed[..cut]) {
             Ok(None) if cut == 0 => Ok(()),
