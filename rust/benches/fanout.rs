@@ -27,6 +27,19 @@
 //!   latency stays ≈ max-over-workers (δ), not Σ, at every depth > 1,
 //!   because overlapped frames share the socket instead of queuing
 //!   behind a one-slot pipeline.
+//!
+//! A third **front-door** section (§Front door in `EXPERIMENTS.md`)
+//! benchmarks the epoch-keyed result cache and the single-flight
+//! coalescer in front of the batcher, writing `BENCH_frontdoor.json`:
+//!
+//! * **repeat-rate sweep** — the same request stream under three
+//!   repeat mixes (uniform over a query pool, Zipf s = 1.0, and
+//!   all-identical), splitting per-request latency into cold (executed)
+//!   vs warm (cache-hit) p50 — the hit path must be ≥ 10× faster on
+//!   the all-identical mix;
+//! * **coalesced herd** — 64 identical concurrent requests on a cold
+//!   cache: single-flight makes the whole herd cost ~one execution's
+//!   wall time instead of 64.
 
 mod bench_common;
 
@@ -206,6 +219,7 @@ fn main() {
     bench_common::write_json(&env, "fanout", &json);
 
     reactor_section(&env, &store);
+    frontdoor_section(&env);
 }
 
 /// Wire-v3 connection-scale benchmarks: the reactor pool under many
@@ -373,4 +387,152 @@ fn reactor_section(env: &bench_common::BenchEnv, store: &zest::data::embeddings:
     std::fs::write("BENCH_reactor.json", json.to_string()).ok();
     println!("(json: BENCH_reactor.json)");
     bench_common::write_json(env, "reactor", &json);
+}
+
+/// Front-door benchmarks: cold-vs-warm latency under Zipf-skewed repeat
+/// mixes, and the coalesced-herd wall time. Writes
+/// `BENCH_frontdoor.json`.
+fn frontdoor_section(env: &bench_common::BenchEnv) {
+    use zest::coordinator::{EstimateSpec, PartitionService, Router, ServiceConfig};
+    use zest::store::{ShardedStore, SnapshotHandle};
+    use zest::util::rng::{Rng, Zipf};
+
+    /// Distinct queries in the pool each mix draws from.
+    const POOL: usize = 64;
+    /// Sequential requests per mix.
+    const REQUESTS: usize = 512;
+    /// Identical concurrent requests in the herd measurement.
+    const HERD: usize = 64;
+
+    let store = bench_common::store(env);
+    let stride = store.len() / POOL;
+    let pool: Vec<Vec<f32>> = (0..POOL).map(|i| store.row(i * stride).to_vec()).collect();
+
+    // The in-process service over a local snapshot: the front door is a
+    // coordinator stage, so no sockets are needed to measure it.
+    let start_service = || {
+        PartitionService::start_sharded(
+            Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, 2))),
+            Router::new(Default::default()),
+            ServiceConfig {
+                workers: 2,
+                ..Default::default()
+            },
+            None,
+        )
+    };
+    let p50_s = |lat: &mut Vec<Duration>| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        lat.sort();
+        lat[lat.len() / 2].as_secs_f64()
+    };
+
+    println!(
+        "\n== frontdoor: repeat-rate sweep ({REQUESTS} Exact requests, pool of {POOL}) =="
+    );
+    let mut table = Table::new(&[
+        "mix",
+        "hit rate",
+        "cold p50 (µs)",
+        "warm p50 (µs)",
+        "warm speedup",
+    ]);
+    let mut mix_rows: Vec<Json> = Vec::new();
+    for mix in ["uniform", "zipf-1.0", "all-identical"] {
+        let svc = start_service();
+        let mut rng = Rng::seeded(7);
+        let zipf = Zipf::new(POOL, 1.0);
+        let mut cold: Vec<Duration> = Vec::new();
+        let mut warm: Vec<Duration> = Vec::new();
+        for _ in 0..REQUESTS {
+            let qi = match mix {
+                "uniform" => rng.below(POOL),
+                "zipf-1.0" => zipf.sample(&mut rng),
+                _ => 0,
+            };
+            let t0 = Instant::now();
+            let r = svc
+                .estimate(EstimateSpec::new(pool[qi].clone()))
+                .expect("estimate");
+            let lat = t0.elapsed();
+            if r.served_from_cache {
+                warm.push(lat);
+            } else {
+                cold.push(lat);
+            }
+        }
+        let hit_rate = warm.len() as f64 / REQUESTS as f64;
+        let (cold_p50, warm_p50) = (p50_s(&mut cold), p50_s(&mut warm));
+        let speedup = cold_p50 / warm_p50.max(1e-9);
+        println!(
+            "mix={mix}: hit rate {:.3}, cold p50 {:.1} µs vs warm p50 {:.1} µs => {speedup:.0}x",
+            hit_rate,
+            cold_p50 * 1e6,
+            warm_p50 * 1e6
+        );
+        table.row(vec![
+            mix.to_string(),
+            format!("{hit_rate:.3}"),
+            format!("{:.1}", cold_p50 * 1e6),
+            format!("{:.1}", warm_p50 * 1e6),
+            format!("{speedup:.0}x"),
+        ]);
+        mix_rows.push(Json::obj(vec![
+            ("mix", Json::str(mix)),
+            ("hit_rate", Json::num(hit_rate)),
+            ("cold_p50_s", Json::num(cold_p50)),
+            ("warm_p50_s", Json::num(warm_p50)),
+            ("warm_speedup", Json::num(speedup)),
+        ]));
+        svc.shutdown();
+    }
+    table.print();
+
+    // Coalesced herd: HERD identical concurrent requests on a cold
+    // cache, released together — single-flight rides one batcher slot
+    // and one execution, so the wall time is ~one cold request.
+    let svc = start_service();
+    let q = pool[POOL - 1].clone();
+    let barrier = std::sync::Barrier::new(HERD);
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..HERD {
+            let (svc, q, barrier) = (&svc, &q, &barrier);
+            scope.spawn(move || {
+                barrier.wait();
+                svc.estimate(EstimateSpec::new(q.clone()))
+                    .expect("herd estimate");
+            });
+        }
+    });
+    let herd_wall_s = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    println!(
+        "herd: {HERD} identical concurrent requests in {:.2} ms \
+         ({} coalesced, {} executed)",
+        herd_wall_s * 1e3,
+        m.coalesced,
+        m.cache_misses
+    );
+    svc.shutdown();
+
+    let json = Json::obj(vec![
+        ("pool", Json::num(POOL as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("mixes", Json::Arr(mix_rows)),
+        (
+            "herd",
+            Json::obj(vec![
+                ("size", Json::num(HERD as f64)),
+                ("wall_s", Json::num(herd_wall_s)),
+                ("coalesced", Json::num(m.coalesced as f64)),
+                ("executed", Json::num(m.cache_misses as f64)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_frontdoor.json", json.to_string()).ok();
+    println!("(json: BENCH_frontdoor.json)");
+    bench_common::write_json(env, "frontdoor", &json);
 }

@@ -53,6 +53,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "shards",
         "service-workers",
         "queue-capacity",
+        "cache-entries",
+        "cache-bytes",
         "max-conns",
         "read-timeout-ms",
         "reactor-threads",
@@ -63,6 +65,11 @@ fn run(argv: Vec<String>) -> Result<()> {
     let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
     let addr = Addr::parse(&listen)?;
     let seed: u64 = args.get_or("seed", 0);
+    // Front-door result cache bounds (entries and bytes; whichever is
+    // tighter wins — see coordinator::CacheConfig). 0 disables caching.
+    let cache_defaults = ServiceConfig::default();
+    let cache_entries: usize = args.get_or("cache-entries", cache_defaults.cache_entries);
+    let cache_bytes: usize = args.get_or("cache-bytes", cache_defaults.cache_bytes);
 
     let parse_addrs = |list: &str| -> Result<Vec<Addr>> {
         list.split(',').map(|s| Addr::parse(s.trim())).collect()
@@ -94,6 +101,8 @@ fn run(argv: Vec<String>) -> Result<()> {
                 ),
                 queue_capacity: args.get_or("queue-capacity", 1024),
                 seed,
+                cache_entries,
+                cache_bytes,
                 ..Default::default()
             },
         ));
@@ -137,6 +146,8 @@ fn run(argv: Vec<String>) -> Result<()> {
                 ),
                 queue_capacity: args.get_or("queue-capacity", 1024),
                 seed,
+                cache_entries,
+                cache_bytes,
                 ..Default::default()
             },
             None,

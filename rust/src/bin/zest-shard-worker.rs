@@ -45,6 +45,11 @@ fn run(argv: Vec<String>) -> Result<()> {
         "data",
         "synth",
         "range",
+        // Accepted for launcher-script uniformity with `zest-server`;
+        // shard workers hold no front-door cache (caching happens at
+        // the coordinator, which keys on the publish epoch).
+        "cache-entries",
+        "cache-bytes",
         "max-conns",
         "read-timeout-ms",
         "reactor-threads",

@@ -155,6 +155,15 @@ pub trait PartitionBackend: Send + Sync + 'static {
     /// front-ends answer from.
     fn serving_info(&self) -> (usize, u64);
 
+    /// The serving epoch alone (the epoch component of
+    /// [`serving_info`](PartitionBackend::serving_info)). The front
+    /// door keys its result cache on this: the submit path reads it
+    /// into every fingerprint, and publishes advance it — which is
+    /// exactly what invalidates every previously cached answer.
+    fn epoch(&self) -> u64 {
+        self.serving_info().1
+    }
+
     /// Answer one same-`(kind, params)` batch group, pinning one
     /// consistent view (snapshot / cluster layout) for the whole group.
     /// Results are in `qs` order.
@@ -172,10 +181,14 @@ pub trait PartitionBackend: Send + Sync + 'static {
 
     /// Publish hook: append `rows` as new categories, returning the new
     /// epoch. Backends without mutation support return an error.
+    /// Publish through [`super::PartitionService::add_categories`] when
+    /// a service fronts this backend, so the front door observes the
+    /// new epoch immediately instead of at the next executed batch.
     fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError>;
 
     /// Publish hook: remove the given global ids (current epoch's
-    /// positions), returning the new epoch.
+    /// positions), returning the new epoch (same front-door observation
+    /// note as [`add_categories`](PartitionBackend::add_categories)).
     fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError>;
 }
 
@@ -189,6 +202,10 @@ impl<T: PartitionBackend + ?Sized> PartitionBackend for Arc<T> {
 
     fn serving_info(&self) -> (usize, u64) {
         (**self).serving_info()
+    }
+
+    fn epoch(&self) -> u64 {
+        (**self).epoch()
     }
 
     fn estimate_batch(

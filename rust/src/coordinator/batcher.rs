@@ -13,6 +13,13 @@
 //! when more requests are buffered than one batch holds, the ones
 //! closest to their deadline ship first (deadline-less requests last,
 //! in arrival order), shrinking the shed count under burst load.
+//!
+//! Batch *sizing* is deadline-aware too: when the earliest queued
+//! deadline would expire before the accumulation window closes,
+//! waiting the window out could only convert that request into a
+//! drain-time shed — the assembler ships the partial batch immediately
+//! with whatever slack the request still has, instead of waiting out
+//! the full `max_wait` timer.
 
 use super::service::QueuedRequest;
 use crate::estimators::EstimatorKind;
@@ -98,6 +105,18 @@ impl BatchAssembler {
         self.pending.values().map(|v| v.len()).sum()
     }
 
+    /// Earliest `EstimateSpec::deadline` across every pending buffer
+    /// (not just the fullest kind: any tight request justifies an
+    /// early flush, and `ready_batch(force)` prefers the fullest kind
+    /// only among non-empty buffers it will reach on subsequent calls).
+    fn earliest_pending_deadline(&self) -> Option<Instant> {
+        self.pending
+            .values()
+            .flatten()
+            .filter_map(|qr| qr.spec.deadline)
+            .min()
+    }
+
     /// Blocking assembly loop step.
     pub fn next_batch(&mut self, rx: &mpsc::Receiver<QueuedRequest>) -> Option<Batch> {
         // Fast path: a full batch is already buffered.
@@ -121,6 +140,16 @@ impl BatchAssembler {
         loop {
             if let Some(b) = self.ready_batch(false) {
                 return Some(b);
+            }
+            // Deadline-aware sizing: a queued request whose deadline
+            // falls inside the accumulation window gains nothing from
+            // further waiting (it would only be swept at drain time) —
+            // flush the partial batch now, preserving its slack.
+            if self
+                .earliest_pending_deadline()
+                .is_some_and(|d| d <= deadline)
+            {
+                return self.ready_batch(true);
             }
             let now = Instant::now();
             if now >= deadline {
@@ -153,6 +182,7 @@ mod tests {
             spec: EstimateSpec::new(vec![0.0; 4]).kind(kind).k(10).l(10),
             reply: tx,
             enqueued: Instant::now(),
+            fingerprint: None,
         }
     }
 
@@ -190,6 +220,28 @@ mod tests {
         let b = asm.next_batch(&rx).unwrap();
         assert_eq!(b.requests.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn tight_deadline_shrinks_the_flush_window() {
+        let cfg = BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_secs(10), // would dominate the test if waited out
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut q = req(EstimatorKind::Uniform);
+        q.spec = q.spec.deadline(Instant::now() + Duration::from_millis(20));
+        tx.send(q).unwrap();
+        let mut asm = BatchAssembler::new(cfg);
+        let t0 = Instant::now();
+        let b = asm.next_batch(&rx).unwrap();
+        assert_eq!(b.requests.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "a deadline inside the window flushes immediately, not after max_wait \
+             (elapsed {:?})",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Bounded, sharded, epoch-generation-tagged LRU result cache.
+//!
+//! Capacity is bounded twice — in **entries** and in **bytes** — and
+//! the effective per-shard cap is whichever bound is tighter (every
+//! entry costs the same [`ENTRY_BYTES`]: the query is represented only
+//! by its fingerprint hash, so nothing variable-length is stored).
+//!
+//! **Epoch invalidation is O(1) and sweep-free**: the cache keeps one
+//! atomic *generation* (the highest epoch it has observed), every
+//! entry is tagged with the epoch it answers for, and a publish simply
+//! advances the generation. Entries of older generations can never be
+//! served — a fresh fingerprint embeds the new epoch and misses them,
+//! and a stale fingerprint that does reach one is rejected and lazily
+//! removed on touch — so no lock is held over the whole map and no
+//! eviction storm follows a publish; dead entries age out through the
+//! normal LRU tail.
+
+use super::fingerprint::Fingerprint;
+use crate::estimators::EstimatorKind;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Result-cache capacity knobs (see
+/// [`ServiceConfig`](crate::coordinator::ServiceConfig) for where they
+/// are configured and the `--cache-entries` / `--cache-bytes` flags on
+/// the binaries).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Maximum cached results across all shards; 0 disables the cache
+    /// (in-flight coalescing still runs).
+    pub entries: usize,
+    /// Maximum cache footprint in bytes ([`ENTRY_BYTES`] per entry);
+    /// 0 disables the cache.
+    pub bytes: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            entries: 8192,
+            bytes: 4 << 20,
+        }
+    }
+}
+
+/// The epoch-exact payload a hit serves back (timings are not cached:
+/// a hit's queue wait and execution time are ~zero by construction).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedAnswer {
+    /// The estimate Ẑ(q), bit-identical to the execution that filled
+    /// the entry.
+    pub z: f64,
+    /// Estimator that produced it.
+    pub kind: EstimatorKind,
+    /// Epoch the answer was computed at (doubles as the entry's
+    /// generation tag).
+    pub epoch: u64,
+    /// Scoring cost of the *original* execution — a hit re-serves the
+    /// accounting along with the answer so sublinearity bookkeeping
+    /// stays meaningful.
+    pub scorings: usize,
+}
+
+/// Accounted bytes per cache entry: slot payload + intrusive-list
+/// links + hash-map key/index overhead, rounded up to a stable
+/// constant so the byte bound is deterministic across platforms.
+pub const ENTRY_BYTES: usize = 128;
+
+const NIL: usize = usize::MAX;
+const SHARDS: usize = 8;
+
+struct Slot {
+    fp: Fingerprint,
+    val: CachedAnswer,
+    /// Toward more-recently-used (NIL at the head).
+    prev: usize,
+    /// Toward less-recently-used (NIL at the tail).
+    next: usize,
+}
+
+/// One lock's worth of LRU state: an index map plus an intrusive
+/// doubly-linked recency list over a slot arena (free slots recycled
+/// through a free list, so a warm shard never reallocates).
+struct ShardState {
+    map: HashMap<Fingerprint, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl ShardState {
+    fn new() -> ShardState {
+        ShardState {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        match prev {
+            NIL => self.head = next,
+            p => self.slots[p].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slots[n].prev = prev,
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        match self.head {
+            NIL => self.tail = i,
+            h => self.slots[h].prev = i,
+        }
+        self.head = i;
+    }
+
+    /// Remove slot `i` entirely (map + list), recycling its arena slot.
+    fn remove(&mut self, i: usize) {
+        self.detach(i);
+        self.map.remove(&self.slots[i].fp);
+        self.free.push(i);
+    }
+}
+
+/// The sharded LRU described in the module docs. All methods are
+/// `&self`: shards lock independently, the generation is atomic.
+pub struct ResultCache {
+    shards: Vec<Mutex<ShardState>>,
+    /// Effective per-shard entry cap (min of the entry bound and the
+    /// byte bound ÷ [`ENTRY_BYTES`], split across shards).
+    shard_cap: usize,
+    /// Highest epoch observed; entries tagged below it are dead.
+    generation: AtomicU64,
+}
+
+impl ResultCache {
+    /// Build with `cfg` capacities; either bound at 0 disables caching.
+    pub fn new(cfg: CacheConfig) -> ResultCache {
+        let total = cfg.entries.min(cfg.bytes / ENTRY_BYTES);
+        ResultCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(ShardState::new())).collect(),
+            shard_cap: total.div_ceil(SHARDS),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: &Fingerprint) -> &Mutex<ShardState> {
+        &self.shards[(fp.mix() % SHARDS as u64) as usize]
+    }
+
+    /// Advance the generation to `epoch` (a publish observation).
+    /// Returns `true` when this call actually moved it forward — the
+    /// O(1) invalidation of everything cached for earlier epochs.
+    pub fn advance_generation(&self, epoch: u64) -> bool {
+        self.generation.fetch_max(epoch, Ordering::AcqRel) < epoch
+    }
+
+    /// The highest epoch observed so far.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Look `fp` up; a hit refreshes its recency. An entry from an
+    /// older generation is treated as absent and lazily removed.
+    pub fn get(&self, fp: &Fingerprint) -> Option<CachedAnswer> {
+        if self.shard_cap == 0 {
+            return None;
+        }
+        let generation = self.generation();
+        let mut s = self.shard(fp).lock().unwrap();
+        let i = *s.map.get(fp)?;
+        if s.slots[i].val.epoch != generation {
+            s.remove(i);
+            return None;
+        }
+        let val = s.slots[i].val;
+        s.detach(i);
+        s.push_front(i);
+        Some(val)
+    }
+
+    /// Insert (or refresh) `fp → val`, evicting least-recently-used
+    /// entries past the shard cap. Returns how many entries were
+    /// evicted. Values not tagged with the current generation are
+    /// dropped (a group that pinned an older view racing a publish)
+    /// rather than cached unreachable.
+    pub fn insert(&self, fp: Fingerprint, val: CachedAnswer) -> usize {
+        if self.shard_cap == 0 || val.epoch != self.generation() {
+            return 0;
+        }
+        let mut s = self.shard(&fp).lock().unwrap();
+        if let Some(&i) = s.map.get(&fp) {
+            s.slots[i].val = val;
+            s.detach(i);
+            s.push_front(i);
+            return 0;
+        }
+        let i = match s.free.pop() {
+            Some(i) => {
+                s.slots[i].fp = fp;
+                s.slots[i].val = val;
+                i
+            }
+            None => {
+                s.slots.push(Slot {
+                    fp,
+                    val,
+                    prev: NIL,
+                    next: NIL,
+                });
+                s.slots.len() - 1
+            }
+        };
+        s.map.insert(fp, i);
+        s.push_front(i);
+        let mut evicted = 0;
+        while s.map.len() > self.shard_cap {
+            let t = s.tail;
+            debug_assert_ne!(t, NIL, "cap > 0 and over-full ⇒ non-empty tail");
+            s.remove(t);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Live entries across all shards (stale-generation entries still
+    /// count until lazily removed — they hold real capacity).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    /// Whether no entries are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(q: f32, epoch: u64) -> Fingerprint {
+        Fingerprint {
+            query_hash: super::super::fingerprint::hash_query(&[q]),
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+            precision: crate::coordinator::backend::Precision::BitExact,
+            epoch,
+        }
+    }
+
+    fn val(z: f64, epoch: u64) -> CachedAnswer {
+        CachedAnswer {
+            z,
+            kind: EstimatorKind::Exact,
+            epoch,
+            scorings: 7,
+        }
+    }
+
+    #[test]
+    fn hit_returns_exactly_what_was_inserted() {
+        let c = ResultCache::new(CacheConfig::default());
+        assert_eq!(c.get(&fp(1.0, 0)), None);
+        assert_eq!(c.insert(fp(1.0, 0), val(42.5, 0)), 0);
+        let hit = c.get(&fp(1.0, 0)).unwrap();
+        assert_eq!(hit.z.to_bits(), 42.5f64.to_bits());
+        assert_eq!(hit.scorings, 7);
+        assert_eq!(c.get(&fp(2.0, 0)), None, "distinct query misses");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_within_bounds() {
+        // One entry per shard * SHARDS total; force everything into a
+        // tiny cap so eviction order is observable per shard.
+        let c = ResultCache::new(CacheConfig {
+            entries: SHARDS, // cap 1 per shard
+            bytes: usize::MAX,
+        });
+        // Find three fingerprints landing on the same shard.
+        let mut same: Vec<Fingerprint> = Vec::new();
+        let target = fp(0.0, 0).mix() % SHARDS as u64;
+        let mut q = 1.0f32;
+        same.push(fp(0.0, 0));
+        while same.len() < 3 {
+            if fp(q, 0).mix() % SHARDS as u64 == target {
+                same.push(fp(q, 0));
+            }
+            q += 1.0;
+        }
+        assert_eq!(c.insert(same[0], val(1.0, 0)), 0);
+        let evicted = c.insert(same[1], val(2.0, 0));
+        assert_eq!(evicted, 1, "cap 1: second insert evicts the first");
+        assert_eq!(c.get(&same[0]), None);
+        assert_eq!(c.get(&same[1]).unwrap().z, 2.0);
+        // Refresh keeps the refreshed entry alive.
+        assert_eq!(c.insert(same[1], val(2.5, 0)), 0);
+        c.insert(same[2], val(3.0, 0));
+        assert_eq!(c.get(&same[1]), None);
+        assert_eq!(c.get(&same[2]).unwrap().z, 3.0);
+    }
+
+    #[test]
+    fn byte_bound_caps_like_the_entry_bound() {
+        let c = ResultCache::new(CacheConfig {
+            entries: usize::MAX,
+            bytes: SHARDS * ENTRY_BYTES, // again cap 1 per shard
+        });
+        assert_eq!(c.shard_cap, 1);
+        let zero = CacheConfig {
+            entries: 100,
+            bytes: 0,
+        };
+        let disabled = ResultCache::new(zero);
+        assert_eq!(disabled.insert(fp(1.0, 0), val(1.0, 0)), 0);
+        assert_eq!(disabled.get(&fp(1.0, 0)), None, "bytes=0 disables");
+        assert!(disabled.is_empty());
+    }
+
+    #[test]
+    fn generation_advance_invalidates_without_a_sweep() {
+        let c = ResultCache::new(CacheConfig::default());
+        c.insert(fp(1.0, 0), val(1.0, 0));
+        c.insert(fp(2.0, 0), val(2.0, 0));
+        assert_eq!(c.len(), 2);
+        assert!(c.advance_generation(1), "first observation advances");
+        assert!(!c.advance_generation(1), "repeat observation does not");
+        assert!(!c.advance_generation(0), "older epochs never regress");
+        assert_eq!(c.generation(), 1);
+        // Old-epoch fingerprints are dead (and lazily removed on touch).
+        assert_eq!(c.get(&fp(1.0, 0)), None);
+        assert_eq!(c.len(), 1, "touched stale entry was removed");
+        // Inserts tagged with a stale epoch are refused.
+        assert_eq!(c.insert(fp(3.0, 0), val(3.0, 0)), 0);
+        assert_eq!(c.get(&fp(3.0, 0)), None);
+        // The new generation caches normally.
+        c.insert(fp(1.0, 1), val(10.0, 1));
+        assert_eq!(c.get(&fp(1.0, 1)).unwrap().z, 10.0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Single-flight coalescing: N in-flight identical requests cost one
+//! batcher slot and one backend execution.
+//!
+//! The first request for a fingerprint becomes the **leader** and is
+//! enqueued normally; every later identical request while the leader
+//! is in flight becomes a **follower** — it never touches the queue,
+//! it just subscribes its reply sender to the leader's completion.
+//! When the leader's batch group completes, the answer fans out to
+//! every follower (each gets its own `queue_wait`, measured from its
+//! own subscription). Deadlines stay per-follower: a follower whose
+//! deadline expired before the leader completed is shed individually
+//! (its sender dropped, `deadline_shed` counted) instead of receiving
+//! a late answer.
+//!
+//! Failure semantics:
+//!
+//! * A **leader error** (backend failure) drops every follower's
+//!   sender — they observe the same `Closed` the leader does — and
+//!   caches nothing, so one failure never poisons the fingerprint.
+//! * A leader **shed** (deadline expired while queued, or the ingress
+//!   rejected the enqueue) abandons the flight the same way; followers
+//!   map the dropped channel through their own deadline exactly like
+//!   direct submitters.
+//! * A follower whose deadline **outlives** the leader's is not
+//!   coalesced (the leader might be shed before answering it): it runs
+//!   as an independent duplicate instead, without replacing the
+//!   in-flight slot — whichever execution completes first answers the
+//!   subscribed followers.
+
+use super::fingerprint::Fingerprint;
+use crate::coordinator::service::Response;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::{mpsc, Mutex};
+use std::time::Instant;
+
+/// One subscribed follower.
+struct Subscriber {
+    tx: mpsc::Sender<Response>,
+    deadline: Option<Instant>,
+    subscribed: Instant,
+}
+
+/// One in-flight fingerprint: the leader's deadline (for the
+/// outlives check) plus everyone waiting on its completion.
+struct InFlight {
+    leader_deadline: Option<Instant>,
+    followers: Vec<Subscriber>,
+}
+
+/// How [`Coalescer::join`] classified a request.
+pub(crate) enum Role {
+    /// Subscribed to an in-flight leader; do not enqueue.
+    Follow,
+    /// No flight existed — the caller is now the leader and owns the
+    /// in-flight slot (must `complete` or `abandon` it).
+    Lead,
+    /// A flight exists but this request outlives its leader: enqueue
+    /// it as an independent duplicate that owns no slot.
+    IndependentDuplicate,
+}
+
+/// The in-flight request table. All methods are `&self` behind one
+/// mutex — every operation is a short map touch; the fan-out sends
+/// happen after the lock is released.
+pub(crate) struct Coalescer {
+    inflight: Mutex<HashMap<Fingerprint, InFlight>>,
+}
+
+/// `candidate` can still need an answer after `leader` has given up.
+fn outlives(candidate: Option<Instant>, leader: Option<Instant>) -> bool {
+    match (candidate, leader) {
+        (_, None) => false,
+        (None, Some(_)) => true,
+        (Some(c), Some(l)) => c > l,
+    }
+}
+
+impl Coalescer {
+    pub(crate) fn new() -> Coalescer {
+        Coalescer {
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Join the flight for `fp`: subscribe behind an existing leader,
+    /// or claim leadership. `miss_recheck` runs under the table lock
+    /// when no flight exists — the front door re-probes the cache
+    /// there, closing the race where a completion (cache fill, then
+    /// slot removal) lands between the caller's cache miss and this
+    /// call; `Some(answer)` short-circuits the join.
+    pub(crate) fn join<F, T>(
+        &self,
+        fp: Fingerprint,
+        tx: &mpsc::Sender<Response>,
+        deadline: Option<Instant>,
+        miss_recheck: F,
+    ) -> Result<Role, T>
+    where
+        F: FnOnce() -> Option<T>,
+    {
+        let mut table = self.inflight.lock().unwrap();
+        match table.entry(fp) {
+            Entry::Occupied(mut e) => {
+                let flight = e.get_mut();
+                if outlives(deadline, flight.leader_deadline) {
+                    return Ok(Role::IndependentDuplicate);
+                }
+                flight.followers.push(Subscriber {
+                    tx: tx.clone(),
+                    deadline,
+                    subscribed: Instant::now(),
+                });
+                Ok(Role::Follow)
+            }
+            Entry::Vacant(v) => {
+                if let Some(hit) = miss_recheck() {
+                    return Err(hit);
+                }
+                v.insert(InFlight {
+                    leader_deadline: deadline,
+                    followers: Vec::new(),
+                });
+                Ok(Role::Lead)
+            }
+        }
+    }
+
+    /// Take the flight for `fp` down (leader completed or died),
+    /// returning the followers to answer/drop. `None` when no flight
+    /// was registered (an independent duplicate finishing second).
+    fn take(&self, fp: &Fingerprint) -> Option<Vec<Subscriber>> {
+        self.inflight
+            .lock()
+            .unwrap()
+            .remove(fp)
+            .map(|f| f.followers)
+    }
+
+    /// Fan a completed leader's `resp` out to every follower whose
+    /// deadline still stands. Returns `(answered, shed)` follower
+    /// counts; each answered follower reports its own queue wait and
+    /// the leader group's shared execution time.
+    pub(crate) fn complete(&self, fp: &Fingerprint, resp: &Response) -> (Vec<Response>, usize) {
+        let Some(followers) = self.take(fp) else {
+            return (Vec::new(), 0);
+        };
+        let now = Instant::now();
+        let mut shed = 0;
+        let mut answered = Vec::new();
+        for sub in followers {
+            if sub.deadline.is_some_and(|d| now >= d) {
+                shed += 1; // sender dropped: follower sees DeadlineExceeded
+                continue;
+            }
+            let fanned = Response {
+                queue_wait: now.duration_since(sub.subscribed),
+                ..resp.clone()
+            };
+            if sub.tx.send(fanned.clone()).is_ok() {
+                answered.push(fanned);
+            }
+        }
+        (answered, shed)
+    }
+
+    /// Drop the flight without an answer (leader error or shed): every
+    /// follower's sender is dropped, propagating the failure without
+    /// caching anything. Returns how many dropped followers had
+    /// already-expired deadlines (counted as deadline sheds).
+    pub(crate) fn abandon(&self, fp: &Fingerprint) -> usize {
+        let Some(followers) = self.take(fp) else {
+            return 0;
+        };
+        let now = Instant::now();
+        followers
+            .iter()
+            .filter(|s| s.deadline.is_some_and(|d| now >= d))
+            .count()
+    }
+
+    /// In-flight fingerprints (tests/metrics).
+    pub(crate) fn len(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimators::EstimatorKind;
+    use std::time::Duration;
+
+    fn fp() -> Fingerprint {
+        Fingerprint {
+            query_hash: 9,
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+            precision: crate::coordinator::backend::Precision::BitExact,
+            epoch: 0,
+        }
+    }
+
+    fn resp(z: f64) -> Response {
+        Response {
+            z,
+            kind: EstimatorKind::Exact,
+            epoch: 0,
+            queue_wait: Duration::ZERO,
+            exec_time: Duration::from_micros(5),
+            scorings: 3,
+            served_from_cache: false,
+        }
+    }
+
+    #[test]
+    fn leader_then_followers_then_fanout() {
+        let c = Coalescer::new();
+        let (ltx, _lrx) = mpsc::channel();
+        assert!(matches!(
+            c.join(fp(), &ltx, None, || None::<Response>),
+            Ok(Role::Lead)
+        ));
+        let (ftx, frx) = mpsc::channel();
+        assert!(matches!(
+            c.join(fp(), &ftx, None, || None::<Response>),
+            Ok(Role::Follow)
+        ));
+        assert_eq!(c.len(), 1);
+        let (answered, shed) = c.complete(&fp(), &resp(4.5));
+        assert_eq!((answered.len(), shed), (1, 0));
+        let got = frx.recv().unwrap();
+        assert_eq!(got.z.to_bits(), 4.5f64.to_bits());
+        assert_eq!(c.len(), 0);
+        // Completing again (independent duplicate) is a quiet no-op.
+        assert_eq!(c.complete(&fp(), &resp(4.5)).0.len(), 0);
+    }
+
+    #[test]
+    fn expired_follower_is_shed_individually() {
+        let c = Coalescer::new();
+        let (ltx, _lrx) = mpsc::channel();
+        let leader_dl = Some(Instant::now() + Duration::from_secs(60));
+        c.join(fp(), &ltx, leader_dl, || None::<Response>).ok();
+        let (ftx, frx) = mpsc::channel();
+        // Expired (relative to fan-out time) but earlier than the
+        // leader's deadline, so it coalesces rather than duplicating.
+        c.join(fp(), &ftx, Some(Instant::now()), || None::<Response>)
+            .ok();
+        drop(ftx);
+        std::thread::sleep(Duration::from_millis(2));
+        let (answered, shed) = c.complete(&fp(), &resp(1.0));
+        assert_eq!((answered.len(), shed), (0, 1));
+        assert!(frx.recv().is_err(), "shed follower's channel is dropped");
+    }
+
+    #[test]
+    fn outliving_deadline_becomes_independent_duplicate() {
+        let c = Coalescer::new();
+        let (ltx, _lrx) = mpsc::channel();
+        let soon = Some(Instant::now() + Duration::from_millis(1));
+        c.join(fp(), &ltx, soon, || None::<Response>).ok();
+        let (dtx, _drx) = mpsc::channel();
+        assert!(matches!(
+            c.join(fp(), &dtx, None, || None::<Response>),
+            Ok(Role::IndependentDuplicate)
+        ));
+        assert_eq!(c.len(), 1, "duplicate owns no slot");
+    }
+
+    #[test]
+    fn abandon_drops_followers_without_poisoning() {
+        let c = Coalescer::new();
+        let (ltx, _lrx) = mpsc::channel();
+        c.join(fp(), &ltx, None, || None::<Response>).ok();
+        let (ftx, frx) = mpsc::channel();
+        c.join(fp(), &ftx, None, || None::<Response>).ok();
+        drop(ftx);
+        assert_eq!(c.abandon(&fp()), 0);
+        assert!(frx.recv().is_err(), "follower observes the failure");
+        // The fingerprint is immediately usable again.
+        let (t2, _r2) = mpsc::channel();
+        assert!(matches!(
+            c.join(fp(), &t2, None, || None::<Response>),
+            Ok(Role::Lead)
+        ));
+    }
+
+    #[test]
+    fn miss_recheck_short_circuits_under_the_lock() {
+        let c = Coalescer::new();
+        let (tx, _rx) = mpsc::channel();
+        let got = c.join(fp(), &tx, None, || Some(resp(7.0)));
+        match got {
+            Err(r) => assert_eq!(r.z, 7.0),
+            Ok(_) => panic!("recheck hit must short-circuit"),
+        }
+        assert_eq!(c.len(), 0, "no slot registered on a recheck hit");
+    }
+}

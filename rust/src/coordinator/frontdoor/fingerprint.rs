@@ -1,0 +1,164 @@
+//! Canonical request fingerprints: the identity under which the front
+//! door caches and coalesces.
+//!
+//! A fingerprint is `(query-hash over f32 bit patterns, kind, k, l,
+//! precision, epoch)`. Two requests with equal fingerprints are served
+//! interchangeably:
+//!
+//! * The query is folded in by **bit pattern** (`f32::to_bits`), not by
+//!   float comparison — `0.0` and `-0.0` fingerprint differently, NaNs
+//!   fingerprint stably, and the hash is exactly reproducible across
+//!   platforms.
+//! * `k`/`l` are **canonicalized per kind** before hashing: `Exact` and
+//!   `Fmbe` ignore both budgets, `Uniform` only reads `l`, `Nmimps`
+//!   only reads `k` — so e.g. `Exact` requests with stray `k` values
+//!   all land on one cache line instead of fragmenting the hit space.
+//! * The **epoch** is baked into the identity, which is what makes
+//!   cache hits exact rather than stale: a publish changes the epoch,
+//!   every new fingerprint changes with it, and nothing cached under
+//!   the previous epoch can match again (see
+//!   [`super::cache::ResultCache`] for the eager half of that
+//!   invalidation).
+//!
+//! The query itself is *not* stored anywhere — the 64-bit FNV-1a hash
+//! stands in for it, exactly as the fingerprint is specified. A hash
+//! collision between two distinct queries would alias their cache
+//! slots; at 64 bits that requires on the order of 2³² distinct live
+//! queries before birthday collisions become plausible, far beyond the
+//! cache capacities the front door is configured with.
+
+use crate::coordinator::backend::Precision;
+use crate::coordinator::service::EstimateSpec;
+use crate::estimators::EstimatorKind;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the little-endian bytes of each component's f32 bit
+/// pattern, length included (so a prefix never hashes equal to the
+/// full vector).
+pub fn hash_query(q: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for b in (q.len() as u64).to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+    for x in q {
+        for b in x.to_bits().to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// The canonical identity of a request for caching/coalescing: equal
+/// fingerprints ⇒ interchangeable answers (within the fingerprint's
+/// epoch; see the module docs for the query-hash collision caveat).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// [`hash_query`] of the query's f32 bit patterns.
+    pub query_hash: u64,
+    /// Estimator kind answering the request.
+    pub kind: EstimatorKind,
+    /// Head budget, canonicalized to 0 for kinds that ignore it.
+    pub k: usize,
+    /// Tail budget, canonicalized to 0 for kinds that ignore it.
+    pub l: usize,
+    /// `Exact` precision mode (kept for all kinds: a future pipelined
+    /// sampler mode must not alias today's bit-exact answers).
+    pub precision: Precision,
+    /// The serving epoch observed at submit. Publishes advance it, so
+    /// stale entries can never match a fresh fingerprint.
+    pub epoch: u64,
+}
+
+impl Fingerprint {
+    /// Fingerprint `spec` as served at `epoch`, canonicalizing the
+    /// budgets the spec's kind does not read.
+    pub fn of(spec: &EstimateSpec, epoch: u64) -> Fingerprint {
+        let (k, l) = match spec.kind {
+            EstimatorKind::Exact | EstimatorKind::Fmbe => (0, 0),
+            EstimatorKind::Uniform => (0, spec.l),
+            EstimatorKind::Nmimps => (spec.k, 0),
+            EstimatorKind::Mimps | EstimatorKind::Mince => (spec.k, spec.l),
+        };
+        Fingerprint {
+            query_hash: hash_query(&spec.query),
+            kind: spec.kind,
+            k,
+            l,
+            precision: spec.precision,
+            epoch,
+        }
+    }
+
+    /// A well-mixed 64-bit digest of every field, used by the sharded
+    /// cache to pick a shard (the raw `query_hash` alone would send all
+    /// kinds/budgets of one query to one shard).
+    pub(crate) fn mix(&self) -> u64 {
+        let mut h = self.query_hash ^ FNV_OFFSET;
+        for word in [
+            self.kind as u64,
+            self.k as u64,
+            self.l as u64,
+            match self.precision {
+                Precision::BitExact => 0,
+                Precision::Pipelined => 1,
+            },
+            self.epoch,
+        ] {
+            for b in word.to_le_bytes() {
+                h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(kind: EstimatorKind, k: usize, l: usize) -> EstimateSpec {
+        EstimateSpec::new(vec![1.0, -2.5, 3.25]).kind(kind).k(k).l(l)
+    }
+
+    #[test]
+    fn query_hash_is_bit_pattern_sensitive() {
+        assert_ne!(hash_query(&[0.0]), hash_query(&[-0.0]));
+        assert_ne!(hash_query(&[1.0, 2.0]), hash_query(&[2.0, 1.0]));
+        assert_ne!(hash_query(&[1.0]), hash_query(&[1.0, 0.0]));
+        assert_eq!(hash_query(&[1.5, -7.0]), hash_query(&[1.5, -7.0]));
+    }
+
+    #[test]
+    fn budgets_canonicalized_per_kind() {
+        // Exact ignores both budgets: stray values collapse.
+        assert_eq!(
+            Fingerprint::of(&spec(EstimatorKind::Exact, 10, 20), 0),
+            Fingerprint::of(&spec(EstimatorKind::Exact, 0, 0), 0)
+        );
+        // Uniform reads only l.
+        assert_eq!(
+            Fingerprint::of(&spec(EstimatorKind::Uniform, 99, 20), 0),
+            Fingerprint::of(&spec(EstimatorKind::Uniform, 0, 20), 0)
+        );
+        assert_ne!(
+            Fingerprint::of(&spec(EstimatorKind::Uniform, 0, 20), 0),
+            Fingerprint::of(&spec(EstimatorKind::Uniform, 0, 21), 0)
+        );
+        // Mimps reads both.
+        assert_ne!(
+            Fingerprint::of(&spec(EstimatorKind::Mimps, 10, 20), 0),
+            Fingerprint::of(&spec(EstimatorKind::Mimps, 11, 20), 0)
+        );
+    }
+
+    #[test]
+    fn epoch_and_precision_separate_fingerprints() {
+        let s = spec(EstimatorKind::Exact, 0, 0);
+        assert_ne!(Fingerprint::of(&s, 0), Fingerprint::of(&s, 1));
+        let p = s.clone().precision(Precision::Pipelined);
+        assert_ne!(Fingerprint::of(&s, 0), Fingerprint::of(&p, 0));
+        assert_ne!(Fingerprint::of(&s, 0).mix(), Fingerprint::of(&s, 1).mix());
+    }
+}

@@ -1,0 +1,187 @@
+//! The service **front door**: the performance layer between
+//! [`PartitionService::submit`](crate::coordinator::PartitionService::submit)
+//! and the dynamic batcher, over any
+//! [`PartitionBackend`](crate::coordinator::PartitionBackend).
+//!
+//! Every estimator in this crate is deterministic per epoch under a
+//! fixed seed, so a result cached under its serving epoch is **bit
+//! exact** — not a stale approximation — until the next category
+//! publish. The front door exploits that in three pieces, applied in
+//! order at submit time (after dimension/budget validation):
+//!
+//! 1. **[`fingerprint`]** — the canonical request identity
+//!    `(query-hash over f32 bit patterns, kind, k, l, precision,
+//!    epoch)`, with budgets the kind ignores canonicalized away.
+//! 2. **[`cache`]** — a bounded, sharded LRU over fingerprints
+//!    (capacity in entries *and* bytes). Hits are answered
+//!    synchronously from `submit` without ever enqueueing; a publish
+//!    invalidates the previous epoch in O(1) via a generation tag, no
+//!    sweep.
+//! 3. **[`coalesce`]** — single-flight execution: concurrent identical
+//!    requests behind one in-flight leader cost one batcher slot and
+//!    one backend call (one cluster scatter), with per-follower
+//!    deadlines and leader errors propagated without poisoning the
+//!    cache.
+//!
+//! Front-door traffic is accounted in
+//! [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot):
+//! `cache_hits` / `cache_misses` / `coalesced` / `cache_evictions` /
+//! `cache_invalidations`. Hits and coalesced followers still count as
+//! `submitted` and `completed` — they are answered requests; the
+//! counters above explain *how cheaply*.
+
+pub mod cache;
+pub mod coalesce;
+pub mod fingerprint;
+
+pub use cache::{CacheConfig, CachedAnswer, ResultCache, ENTRY_BYTES};
+pub use fingerprint::Fingerprint;
+
+use super::metrics::ServiceMetrics;
+use super::service::Response;
+use coalesce::{Coalescer, Role};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// What the front door decided about one submitted request.
+pub enum Admission {
+    /// Served synchronously from the result cache: deliver this
+    /// response on the reply channel and return — nothing enqueues.
+    Hit(Response),
+    /// Subscribed to an identical in-flight request — nothing to
+    /// enqueue; the leader's completion will answer it.
+    Coalesced,
+    /// The request must be enqueued. `Some(fp)` when it leads the
+    /// flight for its fingerprint (its completion/abandonment settles
+    /// the followers); `None` for an independent duplicate that owns
+    /// no in-flight slot (it outlives the current leader's deadline).
+    Lead(Option<Fingerprint>),
+}
+
+/// The assembled front door (cache + coalescer). One per service,
+/// shared by the submit path, the batcher's deadline sweep, and the
+/// worker completion path.
+pub struct FrontDoor {
+    cache: ResultCache,
+    coalescer: Coalescer,
+}
+
+impl FrontDoor {
+    /// Build with the given cache capacities (a zero capacity disables
+    /// caching; coalescing is always on).
+    pub fn new(cfg: CacheConfig) -> FrontDoor {
+        FrontDoor {
+            cache: ResultCache::new(cfg),
+            coalescer: Coalescer::new(),
+        }
+    }
+
+    fn hit_response(a: CachedAnswer) -> Response {
+        Response {
+            z: a.z,
+            kind: a.kind,
+            epoch: a.epoch,
+            queue_wait: Duration::ZERO,
+            exec_time: Duration::ZERO,
+            scorings: a.scorings,
+            served_from_cache: true,
+        }
+    }
+
+    /// Classify one validated request. Cache probe first; on a miss,
+    /// join the in-flight table (re-probing the cache under the table
+    /// lock, so a completion racing this submit cannot slip between
+    /// the two checks). Ticks the hit/miss/coalesced counters.
+    pub fn admit(
+        &self,
+        fp: Fingerprint,
+        tx: &mpsc::Sender<Response>,
+        deadline: Option<Instant>,
+        metrics: &ServiceMetrics,
+    ) -> Admission {
+        if let Some(a) = self.cache.get(&fp) {
+            metrics.on_cache_hit();
+            return Admission::Hit(Self::hit_response(a));
+        }
+        match self
+            .coalescer
+            .join(fp, tx, deadline, || self.cache.get(&fp))
+        {
+            Err(a) => {
+                metrics.on_cache_hit();
+                Admission::Hit(Self::hit_response(a))
+            }
+            Ok(Role::Follow) => {
+                metrics.on_coalesced();
+                Admission::Coalesced
+            }
+            Ok(Role::Lead) => {
+                metrics.on_cache_miss();
+                Admission::Lead(Some(fp))
+            }
+            Ok(Role::IndependentDuplicate) => {
+                metrics.on_cache_miss();
+                Admission::Lead(None)
+            }
+        }
+    }
+
+    /// A leader completed with `resp`: fill the cache (unless the
+    /// answering view raced past the fingerprint's epoch) and fan the
+    /// answer out to the followers, shedding the individually-expired
+    /// ones. Fan-out recipients are counted as completed requests.
+    pub fn complete(&self, fp: &Fingerprint, resp: &Response, metrics: &ServiceMetrics) {
+        if resp.epoch == fp.epoch {
+            let evicted = self.cache.insert(
+                *fp,
+                CachedAnswer {
+                    z: resp.z,
+                    kind: resp.kind,
+                    epoch: resp.epoch,
+                    scorings: resp.scorings,
+                },
+            );
+            if evicted > 0 {
+                metrics.on_cache_evictions(evicted as u64);
+            }
+        }
+        let (answered, shed) = self.coalescer.complete(fp, resp);
+        if shed > 0 {
+            metrics.on_deadline_shed(shed);
+        }
+        for r in answered {
+            metrics.on_complete(r.queue_wait, r.exec_time);
+        }
+    }
+
+    /// A leader died unanswered (backend error, deadline shed, or an
+    /// ingress rejection): drop its followers so they observe the
+    /// failure, caching nothing — a failed flight never poisons its
+    /// fingerprint.
+    pub fn abandon(&self, fp: &Fingerprint, metrics: &ServiceMetrics) {
+        let shed = self.coalescer.abandon(fp);
+        if shed > 0 {
+            metrics.on_deadline_shed(shed);
+        }
+    }
+
+    /// Observe a serving epoch (submit-time manifest read, a batch
+    /// group's answer, or a publish through the service). The first
+    /// observation of a new epoch invalidates every earlier-epoch
+    /// cache entry in O(1) and ticks `cache_invalidations`.
+    pub fn observe_epoch(&self, epoch: u64, metrics: &ServiceMetrics) {
+        if self.cache.advance_generation(epoch) {
+            metrics.on_cache_invalidation();
+        }
+    }
+
+    /// Live cached entries (tests/introspection).
+    pub fn cached_entries(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// In-flight coalescing slots (tests/introspection).
+    pub fn inflight_len(&self) -> usize {
+        self.coalescer.len()
+    }
+}

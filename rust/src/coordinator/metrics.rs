@@ -42,6 +42,17 @@ pub struct ServiceMetrics {
     /// recordings from workers still draining an older snapshot are
     /// dropped rather than conflated into the wrong position.
     shards: Mutex<(u64, Vec<ShardStatAcc>)>,
+    /// Front-door counters (`coordinator::frontdoor`): requests
+    /// answered synchronously from the epoch-keyed result cache, cache
+    /// misses that went on to enqueue, followers coalesced behind an
+    /// in-flight identical leader, LRU evictions, and O(1) whole-epoch
+    /// invalidations triggered by a category publish. Hits and
+    /// coalesced followers still count in `submitted`/`completed`.
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    coalesced: AtomicU64,
+    cache_evictions: AtomicU64,
+    cache_invalidations: AtomicU64,
     /// Network-front-end counters (`net::Server` feeds these; all zero
     /// for purely in-process services).
     net_accepted: AtomicU64,
@@ -180,6 +191,34 @@ impl ServiceMetrics {
         g.1[shard].errors += 1;
     }
 
+    /// One request answered synchronously from the result cache.
+    pub fn on_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request that missed the cache and went on to enqueue (as a
+    /// flight leader or an independent duplicate).
+    pub fn on_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request coalesced behind an identical in-flight leader
+    /// (never enqueued; answered by the leader's completion).
+    pub fn on_coalesced(&self) {
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `count` entries evicted from the result cache by the LRU bound.
+    pub fn on_cache_evictions(&self, count: u64) {
+        self.cache_evictions.fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// One whole-epoch cache invalidation (a category publish advanced
+    /// the serving epoch past every cached entry).
+    pub fn on_cache_invalidation(&self) {
+        self.cache_invalidations.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// One network connection accepted and being served.
     pub fn on_conn_open(&self) {
         self.net_accepted.fetch_add(1, Ordering::Relaxed);
@@ -262,6 +301,11 @@ impl ServiceMetrics {
                 }
             },
             epoch: self.epoch.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            cache_invalidations: self.cache_invalidations.load(Ordering::Relaxed),
             shard_stats: self
                 .shards
                 .lock()
@@ -335,6 +379,19 @@ pub struct MetricsSnapshot {
     /// Snapshot epoch of the most recently executed batch group (0 for
     /// monolithic services).
     pub epoch: u64,
+    /// Requests answered synchronously from the front-door result cache
+    /// (bit-exact within their epoch; counted in `completed` too).
+    pub cache_hits: u64,
+    /// Requests that missed the cache and enqueued toward the batcher.
+    pub cache_misses: u64,
+    /// Requests coalesced behind an identical in-flight leader — they
+    /// consumed no batcher slot and no backend call.
+    pub coalesced: u64,
+    /// Result-cache entries evicted by the LRU capacity bounds.
+    pub cache_evictions: u64,
+    /// Whole-epoch cache invalidations (category publishes observed by
+    /// the front door).
+    pub cache_invalidations: u64,
     /// Per-shard counters; empty for monolithic services.
     pub shard_stats: Vec<ShardStat>,
     /// Network-front-end counters; all zero without a `net::Server`.
@@ -371,6 +428,20 @@ impl std::fmt::Display for MetricsSnapshot {
         }
         if self.backend_errors > 0 {
             write!(f, " backend_errors={}", self.backend_errors)?;
+        }
+        if self.cache_hits > 0 || self.cache_misses > 0 || self.coalesced > 0 {
+            write!(
+                f,
+                " frontdoor[hits={} misses={} coalesced={}",
+                self.cache_hits, self.cache_misses, self.coalesced
+            )?;
+            if self.cache_evictions > 0 {
+                write!(f, " evictions={}", self.cache_evictions)?;
+            }
+            if self.cache_invalidations > 0 {
+                write!(f, " invalidations={}", self.cache_invalidations)?;
+            }
+            write!(f, "]")?;
         }
         if !self.shard_stats.is_empty() {
             write!(f, " epoch={} shards=[", self.epoch)?;
@@ -469,6 +540,32 @@ mod tests {
         assert_eq!(s.batch_throughput_rps, 0.0);
         assert_eq!(s.epoch, 0);
         assert!(s.shard_stats.is_empty());
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.cache_misses, 0);
+        assert_eq!(s.coalesced, 0);
+        assert!(!s.to_string().contains("frontdoor["));
+    }
+
+    #[test]
+    fn frontdoor_counters_accumulate_and_render() {
+        let m = ServiceMetrics::new();
+        m.on_cache_hit();
+        m.on_cache_hit();
+        m.on_cache_miss();
+        m.on_coalesced();
+        m.on_cache_evictions(5);
+        m.on_cache_invalidation();
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.coalesced, 1);
+        assert_eq!(s.cache_evictions, 5);
+        assert_eq!(s.cache_invalidations, 1);
+        let text = s.to_string();
+        assert!(
+            text.contains("frontdoor[hits=2 misses=1 coalesced=1 evictions=5 invalidations=1]"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -29,9 +29,19 @@
 //!   `ServiceMetrics` front remote serving too
 //!   ([`PartitionService::start_with_backend`]).
 //!
+//! In front of the queue sits the [`frontdoor`]: every validated
+//! request is fingerprinted (`query-hash`, kind, canonicalized k/l,
+//! precision, serving epoch); an epoch-keyed sharded LRU answers
+//! repeats **bit-exactly** without enqueueing (every estimator is
+//! deterministic per epoch under a fixed seed, and a category publish
+//! invalidates the previous epoch in O(1)); concurrent identical
+//! requests single-flight behind one leader so a thundering herd costs
+//! one batcher slot and one backend call.
+//!
 //! Metrics track queue wait, execution time, shed load (backpressure
 //! and deadline), per-batch execution throughput, backend failures, the
-//! serving epoch, and per-shard scorings/exec time.
+//! serving epoch, per-shard scorings/exec time, and front-door traffic
+//! (cache hits/misses/evictions/invalidations, coalesced followers).
 
 // The serving API is the crate's outward face; every public item
 // carries its contract in docs (CI builds rustdoc with warnings denied).
@@ -39,6 +49,7 @@
 
 pub mod backend;
 pub mod batcher;
+pub mod frontdoor;
 pub mod metrics;
 pub mod router;
 pub mod service;
@@ -48,6 +59,7 @@ pub use backend::{
     SnapshotBackend, StaticBackend,
 };
 pub use batcher::{Batch, BatcherConfig};
+pub use frontdoor::{Admission, CacheConfig, FrontDoor, Fingerprint};
 pub use metrics::{MetricsSnapshot, NetStats, ServiceMetrics, ShardStat};
 pub use router::{EpochCache, Router};
 pub use service::{

@@ -2,8 +2,11 @@
 //! worker pool → per-request reply channels, answering from any
 //! [`PartitionBackend`]. See module docs in [`crate::coordinator`].
 
-use super::backend::{GroupParams, PartitionBackend, Precision, SnapshotBackend, StaticBackend};
+use super::backend::{
+    BackendError, GroupParams, PartitionBackend, Precision, SnapshotBackend, StaticBackend,
+};
 use super::batcher::{Batch, BatchAssembler, BatcherConfig};
+use super::frontdoor::{Admission, CacheConfig, Fingerprint, FrontDoor};
 use super::metrics::ServiceMetrics;
 use super::router::Router;
 use crate::data::embeddings::EmbeddingStore;
@@ -148,7 +151,16 @@ pub struct Response {
     /// per-request slice of it.
     pub exec_time: Duration,
     /// Category scorings this request cost (sublinearity accounting).
+    /// A cache hit reports the **original** execution's cost — the
+    /// number of scorings that produced the answer — even though the
+    /// repeat itself scored nothing.
     pub scorings: usize,
+    /// `true` when the answer was served synchronously from the
+    /// front-door result cache (bit-identical to the execution that
+    /// filled it, same epoch; `queue_wait`/`exec_time` are zero).
+    /// Coalesced followers report `false` — their answer came from a
+    /// live execution, just a shared one.
+    pub served_from_cache: bool,
 }
 
 /// Internal: request + reply channel + enqueue timestamp.
@@ -159,6 +171,12 @@ pub struct QueuedRequest {
     pub reply: mpsc::Sender<Response>,
     /// Submission timestamp (queue-wait accounting).
     pub enqueued: Instant,
+    /// The front-door fingerprint whose in-flight slot this request
+    /// **leads** — its completion fills the cache and answers the
+    /// coalesced followers; its death (deadline shed, backend error)
+    /// must abandon them. `None` for independent duplicates (they own
+    /// no slot) and for requests built outside the submit path.
+    pub fingerprint: Option<Fingerprint>,
 }
 
 /// What to do when the ingress queue is full.
@@ -183,6 +201,13 @@ pub struct ServiceConfig {
     pub backpressure: BackpressurePolicy,
     /// Seed of the per-worker sampling RNG forks.
     pub seed: u64,
+    /// Front-door result-cache capacity in entries (`0` disables the
+    /// cache; single-flight coalescing stays on regardless).
+    pub cache_entries: usize,
+    /// Front-door result-cache capacity in bytes (`0` disables the
+    /// cache); the effective bound is the tighter of the two
+    /// capacities.
+    pub cache_bytes: usize,
 }
 
 impl Default for ServiceConfig {
@@ -193,6 +218,8 @@ impl Default for ServiceConfig {
             batcher: BatcherConfig::default(),
             backpressure: BackpressurePolicy::Block,
             seed: 0,
+            cache_entries: CacheConfig::default().entries,
+            cache_bytes: CacheConfig::default().bytes,
         }
     }
 }
@@ -219,6 +246,24 @@ pub enum SubmitError {
         /// The served store's dimensionality.
         want: usize,
     },
+    /// The spec's head budget `k` is unusable for its kind — zero, or
+    /// larger than the served category count. Checked at `submit()`
+    /// for the kinds that read `k` (`Nmimps`, `Mimps`, `Mince`), so a
+    /// garbage spec can't reach mid-drain estimator code or fragment
+    /// the front door's fingerprint space.
+    KOutOfRange {
+        /// The submitted head budget.
+        got: usize,
+        /// The served category count (inclusive upper bound for `k`).
+        max: usize,
+    },
+    /// The spec's tail budget `l` is zero for a kind that draws a
+    /// uniform sample (`Uniform`, `Mimps`, `Mince`). Same submit-time
+    /// rejection rationale as [`SubmitError::KOutOfRange`].
+    LOutOfRange {
+        /// The submitted tail budget.
+        got: usize,
+    },
 }
 
 impl std::fmt::Display for SubmitError {
@@ -229,6 +274,12 @@ impl std::fmt::Display for SubmitError {
             SubmitError::DeadlineExceeded => write!(f, "deadline exceeded"),
             SubmitError::DimMismatch { got, want } => {
                 write!(f, "query dimensionality {got} != store dimensionality {want}")
+            }
+            SubmitError::KOutOfRange { got, max } => {
+                write!(f, "head budget k={got} out of range (want 1..={max})")
+            }
+            SubmitError::LOutOfRange { got } => {
+                write!(f, "tail budget l={got} out of range (want >= 1)")
             }
         }
     }
@@ -247,6 +298,8 @@ pub struct PartitionService {
     dim: usize,
     /// What the workers answer from; also serves manifest queries.
     backend: Arc<dyn PartitionBackend>,
+    /// The fingerprint → cache → coalesce stage in front of the queue.
+    frontdoor: Arc<FrontDoor>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -254,6 +307,7 @@ pub struct PartitionService {
 struct WorkerCtx {
     backend: Arc<dyn PartitionBackend>,
     metrics: Arc<ServiceMetrics>,
+    frontdoor: Arc<FrontDoor>,
 }
 
 impl PartitionService {
@@ -314,6 +368,14 @@ impl PartitionService {
         let backend: Arc<dyn PartitionBackend> = Arc::new(backend);
         let dim = backend.dim();
         let metrics = Arc::new(ServiceMetrics::new());
+        let frontdoor = Arc::new(FrontDoor::new(CacheConfig {
+            entries: cfg.cache_entries,
+            bytes: cfg.cache_bytes,
+        }));
+        // Align the cache generation with the backend's current epoch,
+        // so a service started over an already-mutated backend caches
+        // under the epoch it actually serves from the first request on.
+        frontdoor.observe_epoch(backend.epoch(), &metrics);
         let (ingress_tx, ingress_rx) = mpsc::sync_channel::<QueuedRequest>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -325,6 +387,7 @@ impl PartitionService {
         // occupying a batch slot.
         {
             let metrics = metrics.clone();
+            let frontdoor = frontdoor.clone();
             let bcfg = cfg.batcher.clone();
             threads.push(
                 std::thread::Builder::new()
@@ -333,11 +396,8 @@ impl PartitionService {
                         let mut asm = BatchAssembler::new(bcfg);
                         while let Some(mut batch) = asm.next_batch(&ingress_rx) {
                             let now = Instant::now();
-                            let before = batch.requests.len();
-                            batch
-                                .requests
-                                .retain(|qr| qr.spec.deadline.is_none_or(|d| now < d));
-                            let expired = before - batch.requests.len();
+                            let expired =
+                                sweep_expired(&mut batch.requests, now, &frontdoor, &metrics);
                             if expired > 0 {
                                 metrics.on_deadline_shed(expired);
                             }
@@ -358,6 +418,7 @@ impl PartitionService {
         let ctx = Arc::new(WorkerCtx {
             backend: backend.clone(),
             metrics: metrics.clone(),
+            frontdoor: frontdoor.clone(),
         });
         let mut seed_rng = Rng::seeded(cfg.seed ^ 0x5E55_1011);
         for w in 0..cfg.workers.max(1) {
@@ -387,6 +448,7 @@ impl PartitionService {
             policy: cfg.backpressure,
             dim,
             backend,
+            frontdoor,
             threads,
         }
     }
@@ -397,11 +459,7 @@ impl PartitionService {
         // before paying the backend for answers nobody is waiting for
         // (the batcher's drain-time sweep only covers queue wait).
         let now = Instant::now();
-        let before = batch.requests.len();
-        batch
-            .requests
-            .retain(|qr| qr.spec.deadline.is_none_or(|d| now < d));
-        let expired = before - batch.requests.len();
+        let expired = sweep_expired(&mut batch.requests, now, &ctx.frontdoor, &ctx.metrics);
         if expired > 0 {
             ctx.metrics.on_deadline_shed(expired);
         }
@@ -435,7 +493,11 @@ impl PartitionService {
                 Err(e) => {
                     // Dropping `reqs` drops the reply senders: waiting
                     // callers observe a closed channel (SubmitError::
-                    // Closed), never a silent hang.
+                    // Closed), never a silent hang. Leaders first
+                    // abandon their in-flight slot so coalesced
+                    // followers observe the same failure — and nothing
+                    // is cached, so one failure never poisons its
+                    // fingerprint.
                     log::warn!(
                         "batch group of {} {} request(s) failed: {e}",
                         reqs.len(),
@@ -449,11 +511,21 @@ impl PartitionService {
                     if let Some(shard) = e.shard() {
                         ctx.metrics.on_shard_error(shard);
                     }
+                    for qr in &reqs {
+                        if let Some(fp) = qr.fingerprint {
+                            ctx.frontdoor.abandon(&fp, &ctx.metrics);
+                        }
+                    }
                     continue;
                 }
             };
             ctx.metrics.on_batch_executed(reqs.len(), exec);
             ctx.metrics.on_epoch(answer.epoch);
+            // The pinned view's epoch reaches the front door before any
+            // completion below tries to cache under it — without this,
+            // the first batch after an externally-published epoch would
+            // be refused by the cache's generation check.
+            ctx.frontdoor.observe_epoch(answer.epoch, &ctx.metrics);
             let n = answer.len;
             let scorings = ctx.backend.scorings(batch.kind, params, n);
             // Per-shard accounting: apportion the request's scoring
@@ -474,22 +546,39 @@ impl PartitionService {
             for (qr, z) in reqs.into_iter().zip(answer.zs) {
                 let queue_wait = started.duration_since(qr.enqueued);
                 ctx.metrics.on_complete(queue_wait, exec);
-                let _ = qr.reply.send(Response {
+                let resp = Response {
                     z,
                     kind: batch.kind,
                     epoch: answer.epoch,
                     queue_wait,
                     exec_time: exec,
                     scorings,
-                });
+                    served_from_cache: false,
+                };
+                // A leader's completion settles its flight: the cache
+                // fills (if the answering epoch still matches the
+                // fingerprint) and the coalesced followers get the
+                // answer, each with its own queue wait.
+                if let Some(fp) = qr.fingerprint {
+                    ctx.frontdoor.complete(&fp, &resp, &ctx.metrics);
+                }
+                let _ = qr.reply.send(resp);
             }
         }
     }
 
-    /// Submit a request; returns the reply receiver. Dimensionality and
-    /// an already-expired deadline are validated here — before the
-    /// request can occupy queue space — so a doomed query fails fast
-    /// instead of after its queue wait.
+    /// Submit a request; returns the reply receiver. Dimensionality,
+    /// estimator budgets and an already-expired deadline are validated
+    /// here — before the request can occupy queue space — so a doomed
+    /// query fails fast instead of after its queue wait.
+    ///
+    /// Validated requests then pass the front door: a result cached
+    /// under the current epoch answers synchronously (the receiver is
+    /// returned already holding the [`Response`], `served_from_cache`
+    /// set); a request identical to one already in flight coalesces
+    /// behind it instead of occupying a second batch slot; everything
+    /// else enqueues toward the batcher as the leader of its
+    /// fingerprint.
     pub fn submit(&self, spec: EstimateSpec) -> Result<mpsc::Receiver<Response>, SubmitError> {
         if spec.query.len() != self.dim {
             return Err(SubmitError::DimMismatch {
@@ -497,32 +586,78 @@ impl PartitionService {
                 want: self.dim,
             });
         }
+        let (n, epoch) = self.backend.serving_info();
+        // Budget validation, scoped to the budgets the kind reads (the
+        // default Exact spec carries k = l = 0 and must stay valid).
+        if matches!(
+            spec.kind,
+            EstimatorKind::Nmimps | EstimatorKind::Mimps | EstimatorKind::Mince
+        ) && (spec.k == 0 || spec.k > n)
+        {
+            return Err(SubmitError::KOutOfRange { got: spec.k, max: n });
+        }
+        if matches!(
+            spec.kind,
+            EstimatorKind::Uniform | EstimatorKind::Mimps | EstimatorKind::Mince
+        ) && spec.l == 0
+        {
+            return Err(SubmitError::LOutOfRange { got: spec.l });
+        }
         if let Some(d) = spec.deadline {
             if Instant::now() >= d {
                 self.metrics.on_deadline_shed(1);
                 return Err(SubmitError::DeadlineExceeded);
             }
         }
+        // Observe the serving epoch before fingerprinting so a publish
+        // that bypassed the service's own hooks still invalidates the
+        // cache no later than the next submit.
+        self.frontdoor.observe_epoch(epoch, &self.metrics);
+        let fp = Fingerprint::of(&spec, epoch);
         let (tx, rx) = mpsc::channel();
+        let fingerprint = match self.frontdoor.admit(fp, &tx, spec.deadline, &self.metrics) {
+            Admission::Hit(resp) => {
+                self.metrics.on_submit();
+                self.metrics.on_complete(Duration::ZERO, Duration::ZERO);
+                let _ = tx.send(resp);
+                return Ok(rx);
+            }
+            Admission::Coalesced => {
+                self.metrics.on_submit();
+                return Ok(rx);
+            }
+            Admission::Lead(fingerprint) => fingerprint,
+        };
         let qr = QueuedRequest {
             spec,
             reply: tx,
             enqueued: Instant::now(),
+            fingerprint,
         };
         self.metrics.on_submit();
+        // An enqueue failure on a registered leader must abandon its
+        // flight: followers observe the failure now, and the next
+        // identical submit can lead instead of coalescing forever
+        // behind a request that never ran.
+        let abandon = |e: SubmitError| {
+            if let Some(fp) = &fingerprint {
+                self.frontdoor.abandon(fp, &self.metrics);
+            }
+            e
+        };
         match self.policy {
             BackpressurePolicy::Block => self
                 .ingress
                 .send(qr)
-                .map_err(|_| SubmitError::Closed)
+                .map_err(|_| abandon(SubmitError::Closed))
                 .map(|_| rx),
             BackpressurePolicy::Shed => match self.ingress.try_send(qr) {
                 Ok(()) => Ok(rx),
                 Err(mpsc::TrySendError::Full(_)) => {
                     self.metrics.on_shed();
-                    Err(SubmitError::Overloaded)
+                    Err(abandon(SubmitError::Overloaded))
                 }
-                Err(mpsc::TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+                Err(mpsc::TrySendError::Disconnected(_)) => Err(abandon(SubmitError::Closed)),
             },
         }
     }
@@ -565,9 +700,40 @@ impl PartitionService {
         self.backend.serving_info()
     }
 
-    /// The serving backend (publish hooks, manifest).
+    /// The serving backend (publish hooks, manifest). Publishes issued
+    /// directly on the backend are still safe — every submit re-reads
+    /// the manifest — but prefer
+    /// [`add_categories`](PartitionService::add_categories) /
+    /// [`remove_categories`](PartitionService::remove_categories) so
+    /// the front-door cache is invalidated at publish time rather than
+    /// at the next request.
     pub fn backend(&self) -> &Arc<dyn PartitionBackend> {
         &self.backend
+    }
+
+    /// Publish hook: append `rows` as new categories through the
+    /// backend, then observe the new epoch at the front door — every
+    /// result cached under the previous epoch is invalidated in O(1)
+    /// before this returns.
+    pub fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
+        let epoch = self.backend.add_categories(rows)?;
+        self.frontdoor.observe_epoch(epoch, &self.metrics);
+        Ok(epoch)
+    }
+
+    /// Publish hook: remove the given global ids through the backend,
+    /// with the same immediate front-door invalidation as
+    /// [`add_categories`](PartitionService::add_categories).
+    pub fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
+        let epoch = self.backend.remove_categories(ids)?;
+        self.frontdoor.observe_epoch(epoch, &self.metrics);
+        Ok(epoch)
+    }
+
+    /// The front door (cache/coalescer introspection for tests and
+    /// operational tooling).
+    pub fn frontdoor(&self) -> &Arc<FrontDoor> {
+        &self.frontdoor
     }
 
     /// Drain and stop all threads.
@@ -577,6 +743,30 @@ impl PartitionService {
             let _ = t.join();
         }
     }
+}
+
+/// Drop requests whose deadline passed, abandoning the in-flight slot
+/// of any shed **leader** so its coalesced followers observe the
+/// failure immediately (and the fingerprint becomes claimable again)
+/// instead of waiting on a flight nobody will complete. Returns the
+/// dropped count for `on_deadline_shed`.
+fn sweep_expired(
+    requests: &mut Vec<QueuedRequest>,
+    now: Instant,
+    frontdoor: &FrontDoor,
+    metrics: &ServiceMetrics,
+) -> usize {
+    let before = requests.len();
+    requests.retain(|qr| {
+        let keep = qr.spec.deadline.is_none_or(|d| now < d);
+        if !keep {
+            if let Some(fp) = qr.fingerprint {
+                frontdoor.abandon(&fp, metrics);
+            }
+        }
+        keep
+    });
+    before - requests.len()
 }
 
 #[cfg(test)]
@@ -745,6 +935,210 @@ mod tests {
         assert!(ok.z > 0.0);
         let m = svc.metrics();
         assert_eq!(m.submitted, 1, "dim-mismatched submit must not count");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn budgets_validated_at_submit_per_kind() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 16);
+        let q = store.row(0).to_vec();
+        // k out of range for a k-reading kind (n = 500).
+        let err = svc
+            .submit(EstimateSpec::new(q.clone()).kind(EstimatorKind::Nmimps).k(501))
+            .unwrap_err();
+        assert_eq!(err, SubmitError::KOutOfRange { got: 501, max: 500 });
+        assert_eq!(
+            err.to_string(),
+            "head budget k=501 out of range (want 1..=500)"
+        );
+        let err = svc
+            .submit(
+                EstimateSpec::new(q.clone())
+                    .kind(EstimatorKind::Mimps)
+                    .k(0)
+                    .l(10),
+            )
+            .unwrap_err();
+        assert_eq!(err, SubmitError::KOutOfRange { got: 0, max: 500 });
+        // l = 0 for a sampling kind.
+        let err = svc
+            .submit(EstimateSpec::new(q.clone()).kind(EstimatorKind::Uniform))
+            .unwrap_err();
+        assert_eq!(err, SubmitError::LOutOfRange { got: 0 });
+        assert_eq!(err.to_string(), "tail budget l=0 out of range (want >= 1)");
+        // The default Exact spec ignores both budgets and stays valid.
+        let ok = svc.estimate(EstimateSpec::new(q)).unwrap();
+        assert!(ok.z > 0.0);
+        let m = svc.metrics();
+        assert_eq!(m.submitted, 1, "rejected specs never count as submitted");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cache_hit_is_bit_identical_and_counted() {
+        let (svc, store) = start_service(BackpressurePolicy::Block, 64);
+        let spec = || {
+            EstimateSpec::new(store.row(3).to_vec())
+                .kind(EstimatorKind::Mimps)
+                .k(50)
+                .l(50)
+        };
+        let r1 = svc.estimate(spec()).unwrap();
+        assert!(!r1.served_from_cache);
+        let r2 = svc.estimate(spec()).unwrap();
+        assert!(r2.served_from_cache, "identical repeat must hit the cache");
+        assert_eq!(r1.z.to_bits(), r2.z.to_bits(), "hits are bit-identical");
+        assert_eq!(r2.kind, r1.kind);
+        assert_eq!(r2.epoch, r1.epoch);
+        assert_eq!(
+            r2.scorings, r1.scorings,
+            "a hit reports the original execution's scoring cost"
+        );
+        assert_eq!(r2.queue_wait, Duration::ZERO);
+        assert_eq!(r2.exec_time, Duration::ZERO);
+        // A different budget is a different fingerprint.
+        let r3 = svc.estimate(spec().k(60)).unwrap();
+        assert!(!r3.served_from_cache);
+        let m = svc.metrics();
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 2);
+        assert_eq!(m.completed, 3, "hits still count as completed requests");
+        assert_eq!(svc.frontdoor().cached_entries(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn publish_invalidates_cache_and_next_answer_is_fresh() {
+        use crate::store::{ShardedStore, SnapshotHandle};
+        let store = generate(&SynthConfig {
+            n: 600,
+            d: 16,
+            ..SynthConfig::tiny()
+        });
+        let handle = Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, 2)));
+        let svc = PartitionService::start_sharded(
+            handle,
+            Router::new(FmbeConfig::default()),
+            ServiceConfig {
+                workers: 1,
+                ..Default::default()
+            },
+            None,
+        );
+        let q = store.row(7).to_vec();
+        let r0 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        let hit = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(hit.served_from_cache);
+        assert_eq!(hit.z.to_bits(), r0.z.to_bits());
+        // Publish through the service wrapper: the cache dies with the
+        // epoch, before the call returns.
+        let added = generate(&SynthConfig {
+            n: 32,
+            d: 16,
+            seed: 9,
+            ..SynthConfig::tiny()
+        });
+        assert_eq!(svc.add_categories(added).unwrap(), 1);
+        let r1 = svc.estimate(EstimateSpec::new(q)).unwrap();
+        assert!(!r1.served_from_cache, "publish must invalidate the hit");
+        assert_eq!(r1.epoch, 1);
+        assert!(r1.z > r0.z, "new categories add positive mass");
+        let m = svc.metrics();
+        assert_eq!(m.cache_invalidations, 1);
+        assert_eq!(m.cache_hits, 1);
+        assert_eq!(m.cache_misses, 2);
+        svc.shutdown();
+    }
+
+    /// A backend that sleeps, then fails once: lets a follower coalesce
+    /// behind a leader whose execution errors.
+    struct FailOnceBackend {
+        inner: StaticBackend,
+        fail_next: std::sync::atomic::AtomicBool,
+        calls: Arc<std::sync::atomic::AtomicUsize>,
+    }
+
+    impl PartitionBackend for FailOnceBackend {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn serving_info(&self) -> (usize, u64) {
+            self.inner.serving_info()
+        }
+        fn estimate_batch(
+            &self,
+            kind: EstimatorKind,
+            params: GroupParams,
+            qs: &[Vec<f32>],
+            rng: &mut Rng,
+        ) -> Result<super::super::backend::GroupAnswer, BackendError> {
+            use std::sync::atomic::Ordering;
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(120));
+            if self.fail_next.swap(false, Ordering::SeqCst) {
+                return Err(BackendError::new("injected failure"));
+            }
+            self.inner.estimate_batch(kind, params, qs, rng)
+        }
+        fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
+            self.inner.scorings(kind, params, n)
+        }
+        fn add_categories(&self, rows: EmbeddingStore) -> Result<u64, BackendError> {
+            self.inner.add_categories(rows)
+        }
+        fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
+            self.inner.remove_categories(ids)
+        }
+    }
+
+    #[test]
+    fn leader_error_propagates_to_followers_without_poisoning() {
+        let store = Arc::new(generate(&SynthConfig {
+            n: 200,
+            d: 8,
+            ..SynthConfig::tiny()
+        }));
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&store));
+        let calls = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let backend = FailOnceBackend {
+            inner: StaticBackend::new(store.clone(), index, Router::new(FmbeConfig::default())),
+            fail_next: std::sync::atomic::AtomicBool::new(true),
+            calls: calls.clone(),
+        };
+        let svc = PartitionService::start_with_backend(
+            backend,
+            ServiceConfig {
+                workers: 1,
+                ..Default::default()
+            },
+        );
+        let q = store.row(0).to_vec();
+        // Leader drains quickly (250 µs window) and sleeps 120 ms in
+        // the backend; the follower submits well inside that window.
+        let rx_lead = svc.submit(EstimateSpec::new(q.clone())).unwrap();
+        let rx_follow = svc.submit(EstimateSpec::new(q.clone())).unwrap();
+        assert!(
+            rx_lead.recv().is_err(),
+            "leader observes the backend failure as a dropped channel"
+        );
+        assert!(
+            rx_follow.recv().is_err(),
+            "the coalesced follower observes the same failure"
+        );
+        let m = svc.metrics();
+        assert_eq!(m.coalesced, 1, "second identical submit coalesced");
+        assert_eq!(m.backend_errors, 1);
+        assert_eq!(svc.frontdoor().cached_entries(), 0, "failure cached nothing");
+        assert_eq!(svc.frontdoor().inflight_len(), 0, "flight fully settled");
+        // The fingerprint is not poisoned: a fresh submit re-executes
+        // and succeeds.
+        let r = svc.estimate(EstimateSpec::new(q)).unwrap();
+        assert!(r.z > 0.0 && !r.served_from_cache);
+        assert_eq!(
+            calls.load(std::sync::atomic::Ordering::SeqCst),
+            2,
+            "failed flight + retry; the coalesced follower cost no call"
+        );
         svc.shutdown();
     }
 

@@ -353,5 +353,6 @@ fn to_response(e: wire::Estimate) -> Response {
         queue_wait: Duration::from_nanos(e.queue_wait_ns),
         exec_time: Duration::from_nanos(e.exec_ns),
         scorings: e.scorings as usize,
+        served_from_cache: e.served_from_cache,
     }
 }

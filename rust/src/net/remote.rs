@@ -1712,6 +1712,9 @@ impl ClusterHandler {
                             scorings,
                             queue_wait_ns: 0,
                             exec_ns,
+                            // Shard workers hold no front-door cache;
+                            // caching happens at the coordinator.
+                            served_from_cache: false,
                         })
                         .collect(),
                 )

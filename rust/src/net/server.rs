@@ -750,6 +750,9 @@ impl ServiceHandler {
             SubmitError::Closed => ErrorCode::Closed,
             SubmitError::DeadlineExceeded => ErrorCode::DeadlineExceeded,
             SubmitError::DimMismatch { .. } => ErrorCode::DimMismatch,
+            SubmitError::KOutOfRange { .. } | SubmitError::LOutOfRange { .. } => {
+                ErrorCode::BadRequest
+            }
         };
         Response::Error {
             code,
@@ -791,6 +794,7 @@ impl ServiceHandler {
             scorings: r.scorings as u64,
             queue_wait_ns: r.queue_wait.as_nanos() as u64,
             exec_ns: r.exec_time.as_nanos() as u64,
+            served_from_cache: r.served_from_cache,
         }
     }
 }

@@ -4,7 +4,7 @@
 //! manifests, chained exp-sums, and the two-phase epoch-publish
 //! handshake.
 //!
-//! ## Frame layout (version 3)
+//! ## Frame layout (version 4)
 //!
 //! ```text
 //! ┌─────────┬────────────┬─────────────┬────────────────┬───────────────┐
@@ -58,8 +58,9 @@ pub const MAGIC: [u8; 4] = *b"ZNW1";
 /// `Estimate`/`EstimateBatch` with a precision byte and a deadline
 /// budget, and added the `ExpSumPart` worker op; version 3 widened the
 /// header with a `request_id: u64` so one connection multiplexes many
-/// overlapped RPCs (see `docs/WIRE.md` §8 for the history).
-pub const VERSION: u16 = 3;
+/// overlapped RPCs; version 4 appended a `served_from_cache` byte to
+/// each `Estimates` entry (see `docs/WIRE.md` §8 for the history).
+pub const VERSION: u16 = 4;
 /// Upper bound on one frame's payload (guards against allocating
 /// attacker-controlled lengths; also the practical cap on one
 /// `PrepareAdd` row shipment — ~64M f32s).
@@ -289,6 +290,11 @@ pub struct Estimate {
     pub queue_wait_ns: u64,
     /// Execution time, in nanoseconds.
     pub exec_ns: u64,
+    /// Whether the coordinator's front-door cache answered this request
+    /// without executing it (bit-identical replay of an earlier answer;
+    /// `scorings`/`exec_ns` then describe the original execution while
+    /// `queue_wait_ns` is zero). Wire version 4.
+    pub served_from_cache: bool,
 }
 
 /// One response frame.
@@ -792,6 +798,7 @@ impl Response {
                     e.u64(it.scorings);
                     e.u64(it.queue_wait_ns);
                     e.u64(it.exec_ns);
+                    e.u8(u8::from(it.served_from_cache));
                 }
                 e.buf
             }
@@ -856,7 +863,7 @@ impl Response {
                 epoch: d.u64()?,
             },
             RESP_ESTIMATES => {
-                let n = d.len_prefix(41)?; // 8 + 1 + 8·4 bytes per estimate
+                let n = d.len_prefix(42)?; // 8 + 1 + 8·4 + 1 bytes per estimate
                 let mut items = Vec::with_capacity(n);
                 for _ in 0..n {
                     items.push(Estimate {
@@ -866,6 +873,15 @@ impl Response {
                         scorings: d.u64()?,
                         queue_wait_ns: d.u64()?,
                         exec_ns: d.u64()?,
+                        served_from_cache: match d.u8()? {
+                            0 => false,
+                            1 => true,
+                            other => {
+                                return Err(WireError::Malformed(format!(
+                                    "bad served_from_cache byte {other}"
+                                )))
+                            }
+                        },
                     });
                 }
                 Response::Estimates(items)
@@ -1178,7 +1194,7 @@ mod tests {
         out
     }
 
-    /// Golden bytes: the full Ping frame, byte for byte (version 3:
+    /// Golden bytes: the full Ping frame, byte for byte (version 4:
     /// request id 7 in the header). Changing this is a wire-format
     /// break.
     #[test]
@@ -1188,7 +1204,7 @@ mod tests {
         #[rustfmt::skip]
         let want: Vec<u8> = vec![
             b'Z', b'N', b'W', b'1',                         // magic
-            0x03, 0x00,                                     // version 3
+            0x04, 0x00,                                     // version 4
             0x01, 0x00, 0x00, 0x00,                         // payload len 1
             0x07, 0, 0, 0, 0, 0, 0, 0,                      // request id 7
             0x01,                                           // Ping tag
@@ -1303,6 +1319,43 @@ mod tests {
         ];
         assert_eq!(req.encode(), want);
         assert_eq!(Request::decode(&want).unwrap(), req);
+    }
+
+    /// Golden bytes: an Estimates response payload with one entry
+    /// (version 4 appended the `served_from_cache` byte — 42 bytes per
+    /// estimate).
+    #[test]
+    fn golden_estimates_payload() {
+        let resp = Response::Estimates(vec![Estimate {
+            z: 1.0,
+            kind: EstimatorKind::Mince,
+            epoch: 3,
+            scorings: 600,
+            queue_wait_ns: 5_000,
+            exec_ns: 400,
+            served_from_cache: true,
+        }]);
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x03,                                           // tag
+            0x01, 0, 0, 0,                                  // 1 estimate
+            0, 0, 0, 0, 0, 0, 0xf0, 0x3f,                   // z = 1.0f64
+            0x04,                                           // kind = Mince
+            0x03, 0, 0, 0, 0, 0, 0, 0,                      // epoch = 3
+            0x58, 0x02, 0, 0, 0, 0, 0, 0,                   // scorings = 600
+            0x88, 0x13, 0, 0, 0, 0, 0, 0,                   // queue_wait_ns = 5000
+            0x90, 0x01, 0, 0, 0, 0, 0, 0,                   // exec_ns = 400
+            0x01,                                           // served_from_cache
+        ];
+        assert_eq!(resp.encode(), want);
+        assert_eq!(Response::decode(&want).unwrap(), resp);
+        // Anything but 0/1 in the cache byte is malformed, not defaulted.
+        let mut bad = want.clone();
+        *bad.last_mut().unwrap() = 7;
+        assert!(matches!(
+            Response::decode(&bad),
+            Err(WireError::Malformed(_))
+        ));
     }
 
     /// Golden bytes: a Lambdas response payload with known fields.
@@ -1480,6 +1533,7 @@ mod tests {
                 scorings: 200,
                 queue_wait_ns: 5_000,
                 exec_ns: 77_000,
+                served_from_cache: false,
             }]),
             Response::Hits(vec![vec![], vec![Hit { idx: 0, score: 1.0 }]]),
             Response::ExpSums(vec![1.0, f64::MAX, 1e-300]),

@@ -17,6 +17,10 @@
 //!   reactor pool of ≤4 threads; ≥8 overlapped RPCs on **one** socket
 //!   completing out of submission order; a rogue response with a
 //!   mismatched request id is a typed client error, not a panic.
+//! * **Acceptance** (front door): a 64-way identical-request herd costs
+//!   exactly one backend group call (`coalesced == 63`, bit-identical
+//!   answers); epoch-keyed cache hits are bit-identical and an
+//!   `add_categories` publish invalidates them, for S ∈ {1, 2, 4}.
 //! * `PartitionClient` ↔ `ServiceHandler` mirrors the in-process
 //!   service (same answers, typed error mapping, net metrics).
 //! * Two-phase epoch publish across workers: all-or-nothing prepare,
@@ -1066,6 +1070,186 @@ fn cluster_backend_deadline_shed_and_backpressure() {
     assert_eq!(m.shed as usize, rejected, "{m}");
     svc.shutdown();
     server.shutdown();
+}
+
+/// ACCEPTANCE (front door): a 64-way thundering herd of identical
+/// requests against a slow cluster costs exactly **one** backend group
+/// call — one leader executes, 63 followers coalesce onto its
+/// completion slot — and every caller gets the bit-identical answer.
+#[test]
+fn identical_request_herd_coalesces_to_one_backend_call() {
+    /// Wraps a [`ShardWorker`], counting and slowing every exp-sum op
+    /// so the whole herd is in flight before the leader completes.
+    struct SlowCountedScore {
+        inner: ShardWorker,
+        delay: std::time::Duration,
+        calls: Arc<AtomicUsize>,
+    }
+
+    impl Handler for SlowCountedScore {
+        fn handle(&self, req: wire::Request) -> wire::Response {
+            if matches!(
+                req,
+                wire::Request::ExpSumChain { .. }
+                    | wire::Request::ExpSumChainBatch { .. }
+                    | wire::Request::ExpSumPart { .. }
+            ) {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(self.delay);
+            }
+            self.inner.handle(req)
+        }
+    }
+
+    let s = store(160, 8);
+    let calls = Arc::new(AtomicUsize::new(0));
+    let addr = sock_addr("herdworker");
+    let server = Server::serve(
+        &addr,
+        Arc::new(SlowCountedScore {
+            inner: ShardWorker::new(s.clone()),
+            // Long enough that every follower's submit lands while the
+            // leader's flight is still executing, even on a loaded CI
+            // machine.
+            delay: std::time::Duration::from_millis(250),
+            calls: calls.clone(),
+        }),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let addrs = vec![server.local_addr().clone()];
+    let svc = PartitionService::start_with_backend(
+        ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+        ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        },
+    );
+
+    const HERD: usize = 64;
+    let barrier = std::sync::Barrier::new(HERD);
+    let q = s.row(7).to_vec();
+    let answers: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..HERD)
+            .map(|_| {
+                let (svc, barrier, q) = (&svc, &barrier, &q);
+                scope.spawn(move || {
+                    barrier.wait();
+                    svc.estimate(EstimateSpec::new(q.clone())).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let bits = answers[0].z.to_bits();
+    assert!(answers[0].z.is_finite() && answers[0].z > 0.0);
+    for r in &answers {
+        assert_eq!(r.z.to_bits(), bits, "herd answers must be bit-identical");
+        assert!(
+            !r.served_from_cache,
+            "in-flight coalescing is not a cache hit"
+        );
+    }
+    assert_eq!(
+        calls.load(Ordering::SeqCst),
+        1,
+        "the whole herd must cost one backend group call"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.coalesced, (HERD - 1) as u64, "{m}");
+    assert_eq!(m.cache_misses, 1, "{m}");
+    assert_eq!(m.completed, HERD as u64, "{m}");
+    assert_eq!(m.backend_errors, 0, "{m}");
+
+    // A straggler arriving after the flight completed is a cache hit —
+    // still no new backend call.
+    let late = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+    assert!(late.served_from_cache);
+    assert_eq!(late.z.to_bits(), bits);
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert_eq!(svc.metrics().cache_hits, 1);
+
+    svc.shutdown();
+    server.shutdown();
+}
+
+/// ACCEPTANCE (front door): within an epoch a repeated request is a
+/// bit-identical cache hit; an `add_categories` publish through the
+/// service invalidates the whole cached epoch in O(1), and the next
+/// answer is fresh and bit-exact vs uncached in-process execution on
+/// the grown set — for S ∈ {1, 2, 4} (4-aligned appends keep `Exact`
+/// bit-pinned; see `net::remote` module docs).
+#[test]
+fn publish_invalidates_front_door_cache_across_cluster_sizes() {
+    let s = store(600, 16);
+    let q = s.row(11).to_vec();
+    let added = generate(&SynthConfig {
+        n: 24,
+        d: 16,
+        seed: 5,
+        ..SynthConfig::tiny()
+    });
+    let mut combined = s.data().to_vec();
+    combined.extend_from_slice(added.data());
+    let grown = EmbeddingStore::from_data(624, 16, combined).unwrap();
+
+    // Uncached in-process references for both epochs.
+    let want = |set: &EmbeddingStore| -> f64 {
+        let index = BruteIndex::new(set);
+        let mut rng = Rng::seeded(0);
+        let mut ctx = EstimateContext::new(set, &index, &mut rng);
+        Exact.estimate_batch(&mut ctx, &[q.clone()])[0]
+    };
+    let (want0, want1) = (want(&s), want(&grown));
+
+    for count in [1usize, 2, 4] {
+        let (servers, addrs) = spawn_workers(&s, count, &format!("inval{count}"));
+        let svc = PartitionService::start_with_backend(
+            ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+            ServiceConfig {
+                workers: 2,
+                ..Default::default()
+            },
+        );
+
+        let r1 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(!r1.served_from_cache);
+        assert_eq!(r1.z.to_bits(), want0.to_bits(), "S={count}");
+        let hit = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(
+            hit.served_from_cache,
+            "S={count}: repeat within the epoch must hit"
+        );
+        assert_eq!(hit.z.to_bits(), want0.to_bits(), "S={count}");
+        assert_eq!(hit.epoch, 0);
+
+        // Publish through the service: the front door observes the new
+        // epoch synchronously, not at the next executed batch.
+        assert_eq!(svc.add_categories(added.clone()).unwrap(), 1);
+        let r2 = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(
+            !r2.served_from_cache,
+            "S={count}: publish must invalidate the cached epoch"
+        );
+        assert_eq!(r2.epoch, 1);
+        assert_eq!(
+            r2.z.to_bits(),
+            want1.to_bits(),
+            "S={count}: fresh answer on the grown set"
+        );
+
+        let m = svc.metrics();
+        assert_eq!(m.cache_hits, 1, "{m}");
+        assert_eq!(m.cache_misses, 2, "{m}");
+        assert_eq!(m.cache_invalidations, 1, "{m}");
+
+        svc.shutdown();
+        for server in servers {
+            server.shutdown();
+        }
+    }
 }
 
 /// `RemoteCluster::refresh` auto-heals a worker that missed a commit:

@@ -381,6 +381,7 @@ fn prop_wire_codec_roundtrips() {
                         scorings: rng.below(1_000_000) as u64,
                         queue_wait_ns: rng.next_u64() >> 20,
                         exec_ns: rng.next_u64() >> 20,
+                        served_from_cache: rng.below(2) == 1,
                     })
                     .collect(),
             ),
