@@ -40,6 +40,12 @@
 //! * **coalesced herd** — 64 identical concurrent requests on a cold
 //!   cache: single-flight makes the whole herd cost ~one execution's
 //!   wall time instead of 64.
+//!
+//! A fourth **observability** section (§obs) guards the tracing
+//! overhead, writing `BENCH_obs.json`: the same executed-request
+//! workload at `trace_sample_rate` 0 / 0.01 / 1.0 — the off path must
+//! cost nothing (no allocation, one sampler branch), and the ratios
+//! are recorded for trend tracking rather than hard-asserted.
 
 mod bench_common;
 
@@ -220,6 +226,7 @@ fn main() {
 
     reactor_section(&env, &store);
     frontdoor_section(&env);
+    obs_section(&env);
 }
 
 /// Wire-v3 connection-scale benchmarks: the reactor pool under many
@@ -535,4 +542,88 @@ fn frontdoor_section(env: &bench_common::BenchEnv) {
     std::fs::write("BENCH_frontdoor.json", json.to_string()).ok();
     println!("(json: BENCH_frontdoor.json)");
     bench_common::write_json(env, "frontdoor", &json);
+}
+
+/// Observability overhead guard (§obs): the same executed-request
+/// workload with tracing off, 1%-sampled, and fully sampled. Tracing
+/// off must be free (the `Option<Trace>` fast path allocates nothing);
+/// even 100% sampling only adds a handful of `Instant::now()` calls and
+/// one ring insert per request. Records the measured ratios to
+/// `BENCH_obs.json` — no hard assert, machines vary, but a ratio far
+/// from 1.0 at rate 0 is a regression worth chasing.
+fn obs_section(env: &bench_common::BenchEnv) {
+    use zest::coordinator::{EstimateSpec, PartitionService, Router, ServiceConfig};
+    use zest::store::{ShardedStore, SnapshotHandle};
+
+    /// Distinct queries cycled through each run.
+    const POOL: usize = 16;
+    /// Sequential executed requests per sampling rate.
+    const REQUESTS: usize = 512;
+
+    let store = bench_common::store(env);
+    let stride = store.len() / POOL;
+    let pool: Vec<Vec<f32>> = (0..POOL).map(|i| store.row(i * stride).to_vec()).collect();
+
+    println!("\n== obs: tracing overhead ({REQUESTS} executed requests per rate) ==");
+    let mut table = Table::new(&["sample rate", "wall (ms)", "per-req (µs)", "vs off"]);
+    let mut rate_rows: Vec<Json> = Vec::new();
+    let mut base_per_req_s = 0.0f64;
+    for rate in [0.0f64, 0.01, 1.0] {
+        // Cache off so every request runs the full pipeline — a cache
+        // hit would skip the very stages the trace instruments.
+        let svc = PartitionService::start_sharded(
+            Arc::new(SnapshotHandle::brute(ShardedStore::split(&store, 2))),
+            Router::new(Default::default()),
+            ServiceConfig {
+                workers: 2,
+                cache_entries: 0,
+                trace_sample_rate: rate,
+                ..Default::default()
+            },
+            None,
+        );
+        // Warm the pipeline before timing.
+        for q in pool.iter().take(4) {
+            svc.estimate(EstimateSpec::new(q.clone())).expect("warmup");
+        }
+        let t0 = Instant::now();
+        for i in 0..REQUESTS {
+            svc.estimate(EstimateSpec::new(pool[i % POOL].clone()))
+                .expect("estimate");
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let per_req_s = wall_s / REQUESTS as f64;
+        if rate == 0.0 {
+            base_per_req_s = per_req_s;
+        }
+        let ratio = per_req_s / base_per_req_s.max(1e-12);
+        println!(
+            "rate={rate}: wall {:.2} ms, per-request {:.1} µs ({ratio:.2}x vs off)",
+            wall_s * 1e3,
+            per_req_s * 1e6
+        );
+        table.row(vec![
+            format!("{rate}"),
+            format!("{:.2}", wall_s * 1e3),
+            format!("{:.1}", per_req_s * 1e6),
+            format!("{ratio:.2}x"),
+        ]);
+        rate_rows.push(Json::obj(vec![
+            ("sample_rate", Json::num(rate)),
+            ("wall_s", Json::num(wall_s)),
+            ("per_request_s", Json::num(per_req_s)),
+            ("ratio_vs_off", Json::num(ratio)),
+        ]));
+        svc.shutdown();
+    }
+    table.print();
+
+    let json = Json::obj(vec![
+        ("pool", Json::num(POOL as f64)),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("rates", Json::Arr(rate_rows)),
+    ]);
+    std::fs::write("BENCH_obs.json", json.to_string()).ok();
+    println!("(json: BENCH_obs.json)");
+    bench_common::write_json(env, "obs", &json);
 }

@@ -1,0 +1,112 @@
+//! `zest-top` — a terminal dashboard over the `GetMetrics` wire op.
+//!
+//! Polls a running `zest-server` (any mode) for its merged
+//! [`zest::obs::MetricsBlob`] and renders counters as per-interval
+//! rates next to the histogram percentiles, like `top` for a partition
+//! server:
+//!
+//! ```bash
+//! cargo run --release --example zest_top -- \
+//!     --server unix:///tmp/zest.sock --interval-ms 1000
+//! # a fixed number of refreshes (handy under a script):
+//! cargo run --release --example zest_top -- \
+//!     --server tcp://127.0.0.1:7070 --iterations 5
+//! ```
+//!
+//! The same blob backs `--metrics-listen` (Prometheus text); this
+//! example speaks the binary wire op instead so it works on UDS-only
+//! deployments with nothing else installed.
+
+use std::sync::Arc;
+use zest::net::client::{ClientConfig, PartitionClient};
+use zest::net::Addr;
+use zest::obs::MetricsBlob;
+use zest::util::cli::Args;
+
+/// Counters worth a rate column, in display order.
+const RATE_COUNTERS: &[&str] = &[
+    "submitted",
+    "completed",
+    "cache_hits",
+    "coalesced",
+    "shed",
+    "backend_errors",
+    "net_frames_in",
+    "net_frames_out",
+];
+
+fn main() {
+    zest::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
+    args.check_known(&["server", "interval-ms", "iterations"])
+        .map_err(anyhow::Error::msg)?;
+    let server: String = args.require("server").map_err(anyhow::Error::msg)?;
+    let interval = std::time::Duration::from_millis(args.get_or("interval-ms", 1000u64));
+    // 0 = run until interrupted.
+    let iterations: u64 = args.get_or("iterations", 0);
+
+    let addr = Addr::parse(&server)?;
+    let client = Arc::new(PartitionClient::connect(addr, ClientConfig::default())?);
+
+    let mut prev: Option<MetricsBlob> = None;
+    let mut round = 0u64;
+    loop {
+        let blob = client
+            .get_metrics()
+            .map_err(|e| anyhow::anyhow!("scrape failed: {e}"))?;
+        render(&blob, prev.as_ref(), interval);
+        prev = Some(blob);
+        round += 1;
+        if iterations > 0 && round >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One refresh: counter totals + per-interval deltas, then latency
+/// percentiles for every histogram the server reports.
+fn render(blob: &MetricsBlob, prev: Option<&MetricsBlob>, interval: std::time::Duration) {
+    println!("── zest-top ──────────────────────────────────────────");
+    println!("{:<18} {:>12} {:>12}", "counter", "total", "per-sec");
+    let secs = interval.as_secs_f64().max(1e-9);
+    for name in RATE_COUNTERS {
+        let total = blob.counter(name);
+        let delta = total.saturating_sub(prev.map_or(total, |p| p.counter(name)));
+        println!(
+            "{name:<18} {total:>12} {:>12.1}",
+            if prev.is_some() { delta as f64 / secs } else { 0.0 }
+        );
+    }
+    println!("{:<18} {:>10} {:>10} {:>10} {:>8}", "latency", "p50", "p99", "p999", "count");
+    for (name, h) in &blob.hists {
+        if h.count == 0 {
+            continue;
+        }
+        println!(
+            "{name:<18} {:>10} {:>10} {:>10} {:>8}",
+            fmt_ns(h.quantile(0.5)),
+            fmt_ns(h.quantile(0.99)),
+            fmt_ns(h.quantile(0.999)),
+            h.count
+        );
+    }
+}
+
+/// Nanoseconds, humanized to the nearest sensible unit.
+fn fmt_ns(ns: u64) -> String {
+    match ns {
+        0..=9_999 => format!("{ns}ns"),
+        10_000..=9_999_999 => format!("{}µs", ns / 1_000),
+        10_000_000..=9_999_999_999 => format!("{}ms", ns / 1_000_000),
+        _ => format!("{:.1}s", ns as f64 / 1e9),
+    }
+}

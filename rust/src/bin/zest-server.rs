@@ -13,8 +13,15 @@
 //! # the same worker cluster (PartitionService over a ClusterBackend):
 //! zest-server --listen unix:///tmp/zest.sock \
 //!     --cluster unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
+//! # with telemetry: trace 1% of requests, expose Prometheus text:
+//! zest-server --listen unix:///tmp/zest.sock --synth 100000,128,0 \
+//!     --trace-sample-rate 0.01 --metrics-listen tcp://127.0.0.1:9464
 //! ```
 //!
+//! `--metrics-listen ADDR` serves `GET /metrics` (Prometheus text;
+//! merged with the shard workers' own counters in the `--cluster` and
+//! `--workers` modes). `--trace-sample-rate R` traces every ⌈1/R⌉-th
+//! request through the service stages (see `docs/OBSERVABILITY.md`).
 //! Prints `READY <addr>` on stdout once listening. Clients speak
 //! [`zest::net::client::PartitionClient`].
 
@@ -26,8 +33,12 @@ use zest::net::client::ClientConfig;
 use zest::net::remote::{ClusterHandler, RemoteCluster};
 use zest::net::server::{Handler, Server, ServerConfig, ServiceHandler};
 use zest::net::Addr;
+use zest::obs::{MetricsBlob, MetricsHttpServer};
 use zest::store::{ShardedStore, SnapshotHandle};
 use zest::util::cli::Args;
+
+/// What `--metrics-listen` exposes.
+type MetricsSource = Arc<dyn Fn() -> MetricsBlob + Send + Sync>;
 
 fn main() {
     zest::util::logging::init();
@@ -60,6 +71,8 @@ fn run(argv: Vec<String>) -> Result<()> {
         "reactor-threads",
         "handler-threads",
         "seed",
+        "trace-sample-rate",
+        "metrics-listen",
     ])
     .map_err(anyhow::Error::msg)?;
     let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
@@ -70,11 +83,18 @@ fn run(argv: Vec<String>) -> Result<()> {
     let cache_defaults = ServiceConfig::default();
     let cache_entries: usize = args.get_or("cache-entries", cache_defaults.cache_entries);
     let cache_bytes: usize = args.get_or("cache-bytes", cache_defaults.cache_bytes);
+    // Fraction of requests carrying a per-stage trace (0 disables; 1
+    // traces everything). Sampled traces land in the service's ring and
+    // feed the per-stage histograms `--metrics-listen` exposes.
+    let trace_sample_rate: f64 = args.get_or("trace-sample-rate", 0.0);
 
     let parse_addrs = |list: &str| -> Result<Vec<Addr>> {
         list.split(',').map(|s| Addr::parse(s.trim())).collect()
     };
 
+    // What a `GET /metrics` scrape reports: the serving stack's own
+    // sink, merged with the worker fan-out where one exists.
+    let metrics_source: MetricsSource;
     let mut metrics: Option<Arc<ServiceMetrics>> = None;
     let handler: Arc<dyn Handler> = if args.has("cluster") {
         // Cross-process shards behind the full service: the dynamic
@@ -103,10 +123,19 @@ fn run(argv: Vec<String>) -> Result<()> {
                 seed,
                 cache_entries,
                 cache_bytes,
+                trace_sample_rate,
                 ..Default::default()
             },
         ));
         metrics = Some(svc.metrics_handle());
+        let scrape = svc.clone();
+        metrics_source = Arc::new(move || {
+            let mut blob = scrape.metrics_handle().blob();
+            if let Some(workers) = scrape.backend().metrics() {
+                blob.merge(&workers);
+            }
+            blob
+        });
         Arc::new(ServiceHandler::new(svc))
     } else if args.has("workers") {
         // Cross-process shards: scatter across worker processes
@@ -123,6 +152,16 @@ fn run(argv: Vec<String>) -> Result<()> {
             cluster.num_shards(),
             cluster.epoch()
         );
+        // No service in front: scrapes merge the wire server's own
+        // sink with the worker fan-out.
+        let sink = Arc::new(ServiceMetrics::new());
+        metrics = Some(sink.clone());
+        let scrape_cluster = cluster.clone();
+        metrics_source = Arc::new(move || {
+            let mut blob = sink.blob();
+            blob.merge(&scrape_cluster.cluster_metrics());
+            blob
+        });
         Arc::new(ClusterHandler::new(cluster, seed))
     } else {
         // Local serving: the in-process service behind a socket.
@@ -148,12 +187,15 @@ fn run(argv: Vec<String>) -> Result<()> {
                 seed,
                 cache_entries,
                 cache_bytes,
+                trace_sample_rate,
                 ..Default::default()
             },
             None,
         ));
         // Wire-level counters land in the service's own metrics sink.
         metrics = Some(svc.metrics_handle());
+        let scrape = svc.clone();
+        metrics_source = Arc::new(move || scrape.metrics_handle().blob());
         Arc::new(ServiceHandler::new(svc))
     };
 
@@ -173,6 +215,17 @@ fn run(argv: Vec<String>) -> Result<()> {
         cfg,
         metrics.unwrap_or_else(|| Arc::new(ServiceMetrics::new())),
     )?;
+    // Optional Prometheus-text endpoint; held for the process lifetime.
+    let _metrics_http = match args.get("metrics-listen") {
+        Some(listen) => {
+            let maddr = Addr::parse(listen)?;
+            let http = MetricsHttpServer::serve(&maddr, metrics_source)
+                .map_err(|e| anyhow::anyhow!("bind metrics endpoint {maddr}: {e}"))?;
+            log::info!("metrics on {} (GET /metrics)", http.addr());
+            Some(http)
+        }
+        None => None,
+    };
     println!("READY {}", server.local_addr());
     std::io::stdout().flush().ok();
     loop {

@@ -82,11 +82,15 @@ fn run(argv: Vec<String>) -> Result<()> {
         reactor_threads: args.get_or("reactor-threads", defaults.reactor_threads),
         handler_threads: args.get_or("handler-threads", defaults.handler_threads),
     };
+    // One sink shared by the worker handler and the wire server, so a
+    // `GetMetrics` scrape reports this worker's connection/frame
+    // counters and handler-pool histograms alongside everything else.
+    let metrics = Arc::new(ServiceMetrics::new());
     let server = Server::serve(
         &addr,
-        Arc::new(ShardWorker::new(rows)),
+        Arc::new(ShardWorker::new(rows).with_metrics(metrics.clone())),
         cfg,
-        Arc::new(ServiceMetrics::new()),
+        metrics,
     )?;
     println!("READY {}", server.local_addr());
     std::io::stdout().flush().ok();

@@ -34,6 +34,7 @@ use crate::mips::MipsIndex;
 use crate::net::client::{ClientConfig, ClientError};
 use crate::net::remote::RemoteCluster;
 use crate::net::Addr;
+use crate::obs::{MetricsBlob, Trace};
 use crate::runtime::{HostTensor, RuntimeHandle};
 use crate::store::{SnapshotHandle, StoreView};
 use crate::util::rng::Rng;
@@ -166,13 +167,17 @@ pub trait PartitionBackend: Send + Sync + 'static {
 
     /// Answer one same-`(kind, params)` batch group, pinning one
     /// consistent view (snapshot / cluster layout) for the whole group.
-    /// Results are in `qs` order.
+    /// Results are in `qs` order. `trace`, when present, is a sampled
+    /// request's span collector: backends that fan work out (the
+    /// cluster backend's per-worker scatter RPCs) record per-shard
+    /// spans on it; in-process backends may ignore it.
     fn estimate_batch(
         &self,
         kind: EstimatorKind,
         params: GroupParams,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        trace: Option<&Trace>,
     ) -> Result<GroupAnswer, BackendError>;
 
     /// Category scorings one request of this shape costs (sublinearity
@@ -190,6 +195,15 @@ pub trait PartitionBackend: Send + Sync + 'static {
     /// positions), returning the new epoch (same front-door observation
     /// note as [`add_categories`](PartitionBackend::add_categories)).
     fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError>;
+
+    /// Backend-side telemetry, if the backend has any of its own:
+    /// cluster backends fan `GetMetrics` out to their shard workers and
+    /// return the merged per-worker blob; in-process backends have
+    /// nothing beyond what the service already measures and return
+    /// `None` (the default).
+    fn metrics(&self) -> Option<MetricsBlob> {
+        None
+    }
 }
 
 /// Delegation so an already-shared backend (`Arc<dyn PartitionBackend>`
@@ -214,8 +228,9 @@ impl<T: PartitionBackend + ?Sized> PartitionBackend for Arc<T> {
         params: GroupParams,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        trace: Option<&Trace>,
     ) -> Result<GroupAnswer, BackendError> {
-        (**self).estimate_batch(kind, params, qs, rng)
+        (**self).estimate_batch(kind, params, qs, rng, trace)
     }
 
     fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
@@ -228,6 +243,10 @@ impl<T: PartitionBackend + ?Sized> PartitionBackend for Arc<T> {
 
     fn remove_categories(&self, ids: &[usize]) -> Result<u64, BackendError> {
         (**self).remove_categories(ids)
+    }
+
+    fn metrics(&self) -> Option<MetricsBlob> {
+        (**self).metrics()
     }
 }
 
@@ -318,6 +337,7 @@ impl PartitionBackend for StaticBackend {
         params: GroupParams,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        _trace: Option<&Trace>,
     ) -> Result<GroupAnswer, BackendError> {
         // Exact groups ride the PJRT scoring artifact when attached
         // (the artifact streams one contiguous matrix).
@@ -432,6 +452,7 @@ impl PartitionBackend for SnapshotBackend {
         params: GroupParams,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        _trace: Option<&Trace>,
     ) -> Result<GroupAnswer, BackendError> {
         // Pin one snapshot for the whole group: the group answers from
         // one consistent category set even if a mutation publishes a
@@ -522,6 +543,7 @@ impl PartitionBackend for ClusterBackend {
         params: GroupParams,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        trace: Option<&Trace>,
     ) -> Result<GroupAnswer, BackendError> {
         // The scatter index's MipsIndex methods panic on wire failures
         // (the trait has no error channel). In the service's worker
@@ -530,7 +552,7 @@ impl PartitionBackend for ClusterBackend {
         // net::Server catch_unwind boundary.
         let answer = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.cluster
-                .estimate_batch(kind, params.k, params.l, params.precision, qs, rng)
+                .estimate_batch(kind, params.k, params.l, params.precision, qs, rng, trace)
         }))
         .map_err(|p| {
             let msg = p
@@ -573,5 +595,11 @@ impl PartitionBackend for ClusterBackend {
         self.cluster
             .remove_categories(ids)
             .map_err(|e| BackendError::new(e.to_string()).with_shard(e.shard()))
+    }
+
+    fn metrics(&self) -> Option<MetricsBlob> {
+        // Best-effort: a worker that cannot be scraped right now drops
+        // out of this snapshot rather than failing the whole scrape.
+        Some(self.cluster.cluster_metrics())
     }
 }

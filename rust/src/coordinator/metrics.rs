@@ -1,6 +1,19 @@
-//! Service metrics: lock-free counters plus latency reservoirs, cheap
-//! enough to sit on the request path.
+//! Service metrics: lock-free counters plus lock-free log-linear
+//! latency histograms, cheap enough to sit on the request path.
+//!
+//! Latency percentiles come from [`crate::obs::Histogram`]s — every
+//! sample lands forever (the bounded reservoirs this module used to
+//! keep silently dropped everything past the first 65,536 samples, so
+//! percentiles reflected only startup traffic; the
+//! `histograms_reflect_late_traffic_not_just_startup` test pins the
+//! fix). Sampled request traces additionally feed per-stage histograms
+//! (frontdoor / per-worker RPC / worker-side exec) via
+//! [`ServiceMetrics::on_trace`], and the whole sink exports as a
+//! mergeable [`MetricsBlob`] for the `GetMetrics` wire op and the
+//! Prometheus endpoint.
 
+use crate::obs::hist::Histogram;
+use crate::obs::{CompletedTrace, MetricsBlob};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -28,13 +41,29 @@ pub struct ServiceMetrics {
     /// Snapshot epoch observed by the most recently executed batch group
     /// (0 until one executes; monolithic services stay at 0).
     epoch: AtomicU64,
-    /// Nanosecond latency samples (bounded reservoir). `exec_ns` records
-    /// the *batch-group* execution time once per completed request (all
-    /// members of a group share one `estimate_batch` call), so exec
-    /// percentiles reflect batch latency, not per-request CPU share —
-    /// divide by `mean_batch_size` for a per-request view.
-    queue_ns: Mutex<Vec<u64>>,
-    exec_ns: Mutex<Vec<u64>>,
+    /// Nanosecond latency histograms (lock-free, unbounded sample
+    /// count). `exec_ns` records the *batch-group* execution time once
+    /// per completed request (all members of a group share one
+    /// `estimate_batch` call), so exec percentiles reflect batch
+    /// latency, not per-request CPU share — divide by
+    /// `mean_batch_size` for a per-request view. `e2e_ns` is queue
+    /// wait + execution per completed request.
+    queue_ns: Histogram,
+    exec_ns: Histogram,
+    e2e_ns: Histogram,
+    /// Per-stage histograms fed by sampled request traces
+    /// ([`ServiceMetrics::on_trace`]): front-door admit time, client
+    /// wall of one per-worker scatter RPC, and worker-reported
+    /// server-side exec of that RPC. Sampled — their counts are a
+    /// fraction of `completed`.
+    frontdoor_ns: Histogram,
+    rpc_ns: Histogram,
+    worker_exec_ns: Histogram,
+    /// Server-side frame handling, fed by the net handler pool
+    /// ([`ServiceMetrics::on_net_handle`]): decode-to-handler lag and
+    /// handler wall time, for every frame (not sampled).
+    net_handle_ns: Histogram,
+    net_exec_ns: Histogram,
     /// Per-shard accumulators (sharded serving only), indexed by shard
     /// position — scoped to one epoch (the `u64`), because shard
     /// positions are only stable within a snapshot: a mutation can
@@ -95,8 +124,6 @@ pub struct ShardStat {
     /// the failing worker from a metrics snapshot alone.
     pub errors: u64,
 }
-
-const RESERVOIR: usize = 65_536;
 
 impl ServiceMetrics {
     /// A zeroed sink.
@@ -250,32 +277,63 @@ impl ServiceMetrics {
         self.net_wire_errors.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// One request answered: its queue wait and (shared) group
-    /// execution time land in the latency reservoirs.
+    /// One request answered: its queue wait, (shared) group execution
+    /// time, and their sum land in the latency histograms.
     pub fn on_complete(&self, queue_wait: Duration, exec: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut q = self.queue_ns.lock().unwrap();
-        if q.len() < RESERVOIR {
-            q.push(queue_wait.as_nanos() as u64);
+        self.queue_ns.record_duration(queue_wait);
+        self.exec_ns.record_duration(exec);
+        self.e2e_ns
+            .record_duration(queue_wait.saturating_add(exec));
+    }
+
+    /// Fold one completed sampled trace into the per-stage histograms:
+    /// `frontdoor` spans feed the admit histogram, `rpc` spans (one per
+    /// scattered worker) the RPC-wall histogram, and `worker` spans
+    /// (the worker's self-reported exec from the wire timing annex) the
+    /// worker-exec histogram.
+    pub fn on_trace(&self, trace: &CompletedTrace) {
+        for ev in &trace.events {
+            match ev.name.as_str() {
+                "frontdoor" => self.frontdoor_ns.record(ev.dur_ns),
+                "rpc" => self.rpc_ns.record(ev.dur_ns),
+                "worker" => self.worker_exec_ns.record(ev.dur_ns),
+                _ => {}
+            }
         }
-        drop(q);
-        let mut e = self.exec_ns.lock().unwrap();
-        if e.len() < RESERVOIR {
-            e.push(exec.as_nanos() as u64);
-        }
+    }
+
+    /// One frame handled by the network handler pool: `lag` between
+    /// frame decode and handler start, `exec` the handler wall time.
+    pub fn on_net_handle(&self, lag: Duration, exec: Duration) {
+        self.net_handle_ns.record_duration(lag);
+        self.net_exec_ns.record_duration(exec);
     }
 
     /// A point-in-time copy of every counter and latency percentile.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let pct = |v: &Mutex<Vec<u64>>, p: f64| -> Duration {
-            let mut s = v.lock().unwrap().clone();
-            if s.is_empty() {
-                return Duration::ZERO;
+        let queue = self.queue_ns.snapshot();
+        let exec = self.exec_ns.snapshot();
+        let e2e = self.e2e_ns.snapshot();
+        let stage_stats = [
+            ("frontdoor", &self.frontdoor_ns),
+            ("rpc", &self.rpc_ns),
+            ("worker_exec", &self.worker_exec_ns),
+            ("net_handle", &self.net_handle_ns),
+            ("net_exec", &self.net_exec_ns),
+        ]
+        .into_iter()
+        .filter(|(_, h)| h.count() > 0)
+        .map(|(name, h)| {
+            let s = h.snapshot();
+            StageStat {
+                stage: name.to_string(),
+                count: s.count,
+                p50: s.p50(),
+                p99: s.p99(),
             }
-            s.sort_unstable();
-            let idx = ((s.len() - 1) as f64 * p) as usize;
-            Duration::from_nanos(s[idx])
-        };
+        })
+        .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -330,10 +388,65 @@ impl ServiceMetrics {
                 frames_out: self.net_frames_out.load(Ordering::Relaxed),
                 wire_errors: self.net_wire_errors.load(Ordering::Relaxed),
             },
-            queue_p50: pct(&self.queue_ns, 0.50),
-            queue_p95: pct(&self.queue_ns, 0.95),
-            exec_p50: pct(&self.exec_ns, 0.50),
-            exec_p95: pct(&self.exec_ns, 0.95),
+            queue_p50: queue.quantile_duration(0.50),
+            queue_p95: queue.quantile_duration(0.95),
+            queue_p99: queue.quantile_duration(0.99),
+            exec_p50: exec.quantile_duration(0.50),
+            exec_p95: exec.quantile_duration(0.95),
+            exec_p99: exec.quantile_duration(0.99),
+            e2e_p50: e2e.quantile_duration(0.50),
+            e2e_p99: e2e.quantile_duration(0.99),
+            e2e_p999: e2e.quantile_duration(0.999),
+            stage_stats,
+        }
+    }
+
+    /// Export every counter and histogram as a mergeable, wire-ready
+    /// [`MetricsBlob`] — the payload of the `GetMetrics` op and the
+    /// source of the Prometheus endpoint. `epoch` and `net_active` are
+    /// point-in-time gauges; everything else is monotone.
+    pub fn blob(&self) -> MetricsBlob {
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        MetricsBlob {
+            counters: vec![
+                ("submitted".to_string(), c(&self.submitted)),
+                ("completed".to_string(), c(&self.completed)),
+                ("shed".to_string(), c(&self.shed)),
+                ("deadline_shed".to_string(), c(&self.deadline_shed)),
+                ("backend_errors".to_string(), c(&self.backend_errors)),
+                ("batches".to_string(), c(&self.batches)),
+                ("batched_requests".to_string(), c(&self.batched_requests)),
+                ("batch_exec_ns".to_string(), c(&self.batch_exec_ns)),
+                (
+                    "batch_exec_requests".to_string(),
+                    c(&self.batch_exec_requests),
+                ),
+                ("epoch".to_string(), c(&self.epoch)),
+                ("cache_hits".to_string(), c(&self.cache_hits)),
+                ("cache_misses".to_string(), c(&self.cache_misses)),
+                ("coalesced".to_string(), c(&self.coalesced)),
+                ("cache_evictions".to_string(), c(&self.cache_evictions)),
+                (
+                    "cache_invalidations".to_string(),
+                    c(&self.cache_invalidations),
+                ),
+                ("net_accepted".to_string(), c(&self.net_accepted)),
+                ("net_rejected".to_string(), c(&self.net_rejected)),
+                ("net_active".to_string(), c(&self.net_active)),
+                ("net_frames_in".to_string(), c(&self.net_frames_in)),
+                ("net_frames_out".to_string(), c(&self.net_frames_out)),
+                ("net_wire_errors".to_string(), c(&self.net_wire_errors)),
+            ],
+            hists: vec![
+                ("queue_ns".to_string(), self.queue_ns.snapshot()),
+                ("exec_ns".to_string(), self.exec_ns.snapshot()),
+                ("e2e_ns".to_string(), self.e2e_ns.snapshot()),
+                ("frontdoor_ns".to_string(), self.frontdoor_ns.snapshot()),
+                ("rpc_ns".to_string(), self.rpc_ns.snapshot()),
+                ("worker_exec_ns".to_string(), self.worker_exec_ns.snapshot()),
+                ("net_handle_ns".to_string(), self.net_handle_ns.snapshot()),
+                ("net_exec_ns".to_string(), self.net_exec_ns.snapshot()),
+            ],
         }
     }
 }
@@ -400,10 +513,38 @@ pub struct MetricsSnapshot {
     pub queue_p50: Duration,
     /// 95th-percentile queue wait.
     pub queue_p95: Duration,
+    /// 99th-percentile queue wait.
+    pub queue_p99: Duration,
     /// Median batch-group execution time.
     pub exec_p50: Duration,
     /// 95th-percentile batch-group execution time.
     pub exec_p95: Duration,
+    /// 99th-percentile batch-group execution time.
+    pub exec_p99: Duration,
+    /// Median end-to-end (queue + exec) latency.
+    pub e2e_p50: Duration,
+    /// 99th-percentile end-to-end latency.
+    pub e2e_p99: Duration,
+    /// 99.9th-percentile end-to-end latency.
+    pub e2e_p999: Duration,
+    /// Per-stage percentiles from sampled traces and the net handler
+    /// pool; empty until a stage has recorded a sample.
+    pub stage_stats: Vec<StageStat>,
+}
+
+/// Percentiles of one pipeline stage (`frontdoor`, `rpc`,
+/// `worker_exec`, `net_handle`, `net_exec`). Trace-fed stages only
+/// count sampled requests.
+#[derive(Clone, Debug)]
+pub struct StageStat {
+    /// Stage name.
+    pub stage: String,
+    /// Samples recorded.
+    pub count: u64,
+    /// Median stage latency.
+    pub p50: Duration,
+    /// 99th-percentile stage latency.
+    pub p99: Duration,
 }
 
 impl std::fmt::Display for MetricsSnapshot {
@@ -411,7 +552,8 @@ impl std::fmt::Display for MetricsSnapshot {
         write!(
             f,
             "submitted={} completed={} shed={} batches={} mean_batch={:.1} \
-             batch_rps={:.0} queue_p50={:?} queue_p95={:?} exec_p50={:?} exec_p95={:?}",
+             batch_rps={:.0} queue_p50={:?} queue_p95={:?} exec_p50={:?} exec_p95={:?} \
+             queue_p99={:?} exec_p99={:?} e2e_p50={:?} e2e_p99={:?} e2e_p999={:?}",
             self.submitted,
             self.completed,
             self.shed,
@@ -421,8 +563,27 @@ impl std::fmt::Display for MetricsSnapshot {
             self.queue_p50,
             self.queue_p95,
             self.exec_p50,
-            self.exec_p95
+            self.exec_p95,
+            self.queue_p99,
+            self.exec_p99,
+            self.e2e_p50,
+            self.e2e_p99,
+            self.e2e_p999
         )?;
+        if !self.stage_stats.is_empty() {
+            write!(f, " stages=[")?;
+            for (i, s) in self.stage_stats.iter().enumerate() {
+                if i > 0 {
+                    write!(f, " ")?;
+                }
+                write!(
+                    f,
+                    "{}:n={},p50={:?},p99={:?}",
+                    s.stage, s.count, s.p50, s.p99
+                )?;
+            }
+            write!(f, "]")?;
+        }
         if self.deadline_shed > 0 {
             write!(f, " deadline_shed={}", self.deadline_shed)?;
         }
@@ -629,6 +790,111 @@ mod tests {
         let text = s.to_string();
         assert!(text.contains("errors=2"), "{text}");
         assert!(!text.contains("0:len=10,scorings=10,batches=1,exec=1ms,errors"), "{text}");
+    }
+
+    /// Regression for the reservoir saturation bug: the old bounded
+    /// reservoirs silently dropped every sample past 65,536, so
+    /// percentiles froze on startup traffic. With histograms, 100k
+    /// fast startup samples followed by 100k samples 100× slower must
+    /// move p99 (and the median) to the late traffic.
+    #[test]
+    fn histograms_reflect_late_traffic_not_just_startup() {
+        let m = ServiceMetrics::new();
+        let fast = Duration::from_micros(10);
+        let slow = Duration::from_millis(1);
+        for _ in 0..100_000 {
+            m.on_complete(fast, fast);
+        }
+        for _ in 0..100_000 {
+            m.on_complete(slow, slow);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 200_000);
+        // Late traffic is half the distribution: p99 must sit at the
+        // slow mode, far above the fast startup samples the old
+        // reservoir would have frozen on.
+        assert!(
+            s.queue_p99 >= slow,
+            "queue_p99 {:?} ignores post-saturation traffic",
+            s.queue_p99
+        );
+        assert!(s.exec_p99 >= slow, "exec_p99 {:?}", s.exec_p99);
+        assert!(s.e2e_p99 >= Duration::from_millis(2), "e2e_p99 {:?}", s.e2e_p99);
+        // ...while the histogram keeps the early samples too (p-low
+        // stays fast, within the 1/32 bucket error).
+        assert!(s.queue_p50 <= slow, "queue_p50 {:?}", s.queue_p50);
+    }
+
+    #[test]
+    fn traces_feed_stage_histograms() {
+        use crate::obs::{SpanEvent, Trace};
+        let m = ServiceMetrics::new();
+        let t = Trace::start(1);
+        for (name, dur_ns, track) in [
+            ("frontdoor", 1_000, 0),
+            ("queue", 5_000, 0),
+            ("rpc", 40_000, 1),
+            ("rpc", 60_000, 2),
+            ("worker", 30_000, 1),
+            ("worker", 50_000, 2),
+        ] {
+            t.add(SpanEvent {
+                name: name.to_string(),
+                start_ns: 0,
+                dur_ns,
+                track,
+                args: vec![],
+            });
+        }
+        m.on_trace(&t.finish());
+        m.on_net_handle(Duration::from_micros(2), Duration::from_micros(90));
+        let s = m.snapshot();
+        let stage = |name: &str| {
+            s.stage_stats
+                .iter()
+                .find(|st| st.stage == name)
+                .unwrap_or_else(|| panic!("stage {name} missing: {:?}", s.stage_stats))
+                .clone()
+        };
+        assert_eq!(stage("frontdoor").count, 1);
+        assert_eq!(stage("rpc").count, 2);
+        assert_eq!(stage("worker_exec").count, 2);
+        assert!(stage("worker_exec").p99 >= Duration::from_nanos(50_000));
+        assert_eq!(stage("net_handle").count, 1);
+        assert!(stage("net_exec").p50 >= Duration::from_micros(90));
+        // "queue" spans are already covered by on_complete, not stages.
+        assert!(!s.stage_stats.iter().any(|st| st.stage == "queue"));
+        let text = s.to_string();
+        assert!(text.contains("stages=["), "{text}");
+        assert!(text.contains("rpc:n=2"), "{text}");
+        // The wire blob exports the same histograms by name.
+        let blob = m.blob();
+        assert_eq!(blob.hist("rpc_ns").unwrap().count, 2);
+        assert_eq!(blob.hist("worker_exec_ns").unwrap().count, 2);
+    }
+
+    #[test]
+    fn blob_exports_counters_and_merges() {
+        let m = ServiceMetrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_shed();
+        m.on_complete(Duration::from_micros(50), Duration::from_micros(100));
+        let blob = m.blob();
+        assert_eq!(blob.counter("submitted"), 2);
+        assert_eq!(blob.counter("shed"), 1);
+        assert_eq!(blob.counter("completed"), 1);
+        assert_eq!(blob.hist("queue_ns").unwrap().count, 1);
+        assert_eq!(blob.hist("e2e_ns").unwrap().count, 1);
+        // Merging two services' blobs adds counters and histograms —
+        // the coordinator+workers `GetMetrics` path.
+        let m2 = ServiceMetrics::new();
+        m2.on_submit();
+        m2.on_complete(Duration::from_micros(70), Duration::from_micros(70));
+        let mut merged = blob.clone();
+        merged.merge(&m2.blob());
+        assert_eq!(merged.counter("submitted"), 3);
+        assert_eq!(merged.hist("queue_ns").unwrap().count, 2);
     }
 
     #[test]

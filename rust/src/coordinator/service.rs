@@ -12,6 +12,7 @@ use super::router::Router;
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::EstimatorKind;
 use crate::mips::MipsIndex;
+use crate::obs::{Trace, TraceRing, TraceSampler, COORD_TRACK};
 use crate::runtime::RuntimeHandle;
 use crate::store::SnapshotHandle;
 use crate::util::rng::Rng;
@@ -58,6 +59,15 @@ pub struct EstimateSpec {
     /// [`super::MetricsSnapshot::deadline_shed`]) instead of wasting a
     /// batch slot on an answer nobody is waiting for.
     pub deadline: Option<Instant>,
+    /// Per-request trace handle. `None` (the default) means the
+    /// service's own sampler decides
+    /// ([`ServiceConfig::trace_sample_rate`]); attaching one with
+    /// [`EstimateSpec::trace`] forces this request to be traced
+    /// regardless of the sampling rate. The handle travels with the
+    /// request through the queue, batcher and backend; the completed
+    /// trace lands in [`PartitionService::traces`]. Ignored by
+    /// fingerprinting — traced and untraced twins still coalesce.
+    pub trace: Option<Trace>,
 }
 
 impl EstimateSpec {
@@ -70,6 +80,7 @@ impl EstimateSpec {
             l: 0,
             precision: Precision::BitExact,
             deadline: None,
+            trace: None,
         }
     }
 
@@ -114,6 +125,14 @@ impl EstimateSpec {
     /// Set the deadline as a budget from now.
     pub fn deadline_in(self, budget: Duration) -> EstimateSpec {
         self.deadline(Instant::now() + budget)
+    }
+
+    /// Attach a [`Trace`]: this request records stage spans regardless
+    /// of the service's sampling rate, and its completed trace lands in
+    /// [`PartitionService::traces`].
+    pub fn trace(mut self, trace: Trace) -> EstimateSpec {
+        self.trace = Some(trace);
+        self
     }
 
     /// The knobs a batch group shares (everything but query, kind and
@@ -208,6 +227,15 @@ pub struct ServiceConfig {
     /// cache); the effective bound is the tighter of the two
     /// capacities.
     pub cache_bytes: usize,
+    /// Fraction of requests that record a stage-span [`Trace`]
+    /// (`0.0` = off, `1.0` = every request; rounded to an every-Nth
+    /// period — see [`TraceSampler`]). Requests carrying an explicit
+    /// [`EstimateSpec::trace`] are always traced.
+    pub trace_sample_rate: f64,
+    /// Completed traces retained for dumping (bounded ring, oldest
+    /// evicted; `0` drops completed traces — stage histograms still
+    /// fill).
+    pub trace_ring: usize,
 }
 
 impl Default for ServiceConfig {
@@ -220,6 +248,8 @@ impl Default for ServiceConfig {
             seed: 0,
             cache_entries: CacheConfig::default().entries,
             cache_bytes: CacheConfig::default().bytes,
+            trace_sample_rate: 0.0,
+            trace_ring: 256,
         }
     }
 }
@@ -300,6 +330,10 @@ pub struct PartitionService {
     backend: Arc<dyn PartitionBackend>,
     /// The fingerprint → cache → coalesce stage in front of the queue.
     frontdoor: Arc<FrontDoor>,
+    /// Every-Nth request sampler handing out [`Trace`]s at submit.
+    sampler: TraceSampler,
+    /// Bounded ring of completed traces (Chrome-dumpable).
+    traces: Arc<TraceRing>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -308,6 +342,7 @@ struct WorkerCtx {
     backend: Arc<dyn PartitionBackend>,
     metrics: Arc<ServiceMetrics>,
     frontdoor: Arc<FrontDoor>,
+    traces: Arc<TraceRing>,
 }
 
 impl PartitionService {
@@ -376,6 +411,8 @@ impl PartitionService {
         // so a service started over an already-mutated backend caches
         // under the epoch it actually serves from the first request on.
         frontdoor.observe_epoch(backend.epoch(), &metrics);
+        let sampler = TraceSampler::new(cfg.trace_sample_rate);
+        let traces = Arc::new(TraceRing::new(cfg.trace_ring));
         let (ingress_tx, ingress_rx) = mpsc::sync_channel::<QueuedRequest>(cfg.queue_capacity);
         let (batch_tx, batch_rx) = mpsc::channel::<Batch>();
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -419,6 +456,7 @@ impl PartitionService {
             backend: backend.clone(),
             metrics: metrics.clone(),
             frontdoor: frontdoor.clone(),
+            traces: traces.clone(),
         });
         let mut seed_rng = Rng::seeded(cfg.seed ^ 0x5E55_1011);
         for w in 0..cfg.workers.max(1) {
@@ -449,6 +487,8 @@ impl PartitionService {
             dim,
             backend,
             frontdoor,
+            sampler,
+            traces,
             threads,
         }
     }
@@ -482,11 +522,29 @@ impl PartitionService {
         }
         for (params, mut reqs) in groups {
             let started = Instant::now();
+            // Queue span per traced request: submit-side enqueue to the
+            // moment its group starts executing. The first trace in the
+            // group also rides into the backend, where cluster backends
+            // attribute per-shard scatter RPCs to it.
+            let group_trace = reqs.iter().find_map(|qr| qr.spec.trace.clone());
+            for qr in &reqs {
+                if let Some(t) = &qr.spec.trace {
+                    t.span_at(
+                        "queue",
+                        qr.enqueued,
+                        started.duration_since(qr.enqueued),
+                        COORD_TRACK,
+                        Vec::new(),
+                    );
+                }
+            }
             let qs: Vec<Vec<f32>> = reqs
                 .iter_mut()
                 .map(|qr| std::mem::take(&mut qr.spec.query))
                 .collect();
-            let answer = ctx.backend.estimate_batch(batch.kind, params, &qs, rng);
+            let answer =
+                ctx.backend
+                    .estimate_batch(batch.kind, params, &qs, rng, group_trace.as_ref());
             let exec = started.elapsed();
             let answer = match answer {
                 Ok(a) => a,
@@ -516,9 +574,28 @@ impl PartitionService {
                             ctx.frontdoor.abandon(&fp, &ctx.metrics);
                         }
                     }
+                    // Failed traces still seal (without a batch span) so
+                    // the ring shows where the pipeline stopped.
+                    for qr in reqs {
+                        Self::finish_trace(ctx, qr.spec.trace);
+                    }
                     continue;
                 }
             };
+            for qr in &reqs {
+                if let Some(t) = &qr.spec.trace {
+                    t.span_at(
+                        "batch",
+                        started,
+                        exec,
+                        COORD_TRACK,
+                        vec![
+                            ("requests".into(), reqs.len().to_string()),
+                            ("epoch".into(), answer.epoch.to_string()),
+                        ],
+                    );
+                }
+            }
             ctx.metrics.on_batch_executed(reqs.len(), exec);
             ctx.metrics.on_epoch(answer.epoch);
             // The pinned view's epoch reaches the front door before any
@@ -562,8 +639,22 @@ impl PartitionService {
                 if let Some(fp) = qr.fingerprint {
                     ctx.frontdoor.complete(&fp, &resp, &ctx.metrics);
                 }
+                // Seal before the reply send: a caller that has its
+                // answer can rely on the completed trace being in the
+                // ring already.
+                Self::finish_trace(ctx, qr.spec.trace);
                 let _ = qr.reply.send(resp);
             }
+        }
+    }
+
+    /// Seal a request's trace (if any): feed the per-stage histograms
+    /// and retain the completed trace in the dump ring.
+    fn finish_trace(ctx: &WorkerCtx, trace: Option<Trace>) {
+        if let Some(t) = trace {
+            let done = t.finish();
+            ctx.metrics.on_trace(&done);
+            ctx.traces.push(done);
         }
     }
 
@@ -579,7 +670,7 @@ impl PartitionService {
     /// behind it instead of occupying a second batch slot; everything
     /// else enqueues toward the batcher as the leader of its
     /// fingerprint.
-    pub fn submit(&self, spec: EstimateSpec) -> Result<mpsc::Receiver<Response>, SubmitError> {
+    pub fn submit(&self, mut spec: EstimateSpec) -> Result<mpsc::Receiver<Response>, SubmitError> {
         if spec.query.len() != self.dim {
             return Err(SubmitError::DimMismatch {
                 got: spec.query.len(),
@@ -609,24 +700,60 @@ impl PartitionService {
                 return Err(SubmitError::DeadlineExceeded);
             }
         }
+        // Sampling decision: an explicit spec-attached trace wins;
+        // otherwise the service's every-Nth sampler decides. From here
+        // the handle rides inside the spec, through queue and batcher
+        // to the backend.
+        if spec.trace.is_none() {
+            spec.trace = self.sampler.sample();
+        }
+        let trace = spec.trace.clone();
+        let fd_start = Instant::now();
         // Observe the serving epoch before fingerprinting so a publish
         // that bypassed the service's own hooks still invalidates the
         // cache no later than the next submit.
         self.frontdoor.observe_epoch(epoch, &self.metrics);
         let fp = Fingerprint::of(&spec, epoch);
         let (tx, rx) = mpsc::channel();
+        let frontdoor_span = |outcome: &str| {
+            if let Some(t) = &trace {
+                t.span_at(
+                    "frontdoor",
+                    fd_start,
+                    fd_start.elapsed(),
+                    COORD_TRACK,
+                    vec![("outcome".into(), outcome.into())],
+                );
+            }
+        };
+        // A request answered (or subsumed) at the front door never
+        // reaches a worker: seal its trace here.
+        let seal = |trace: Option<Trace>| {
+            if let Some(t) = trace {
+                let done = t.finish();
+                self.metrics.on_trace(&done);
+                self.traces.push(done);
+            }
+        };
         let fingerprint = match self.frontdoor.admit(fp, &tx, spec.deadline, &self.metrics) {
             Admission::Hit(resp) => {
+                frontdoor_span("hit");
+                seal(trace);
                 self.metrics.on_submit();
                 self.metrics.on_complete(Duration::ZERO, Duration::ZERO);
                 let _ = tx.send(resp);
                 return Ok(rx);
             }
             Admission::Coalesced => {
+                frontdoor_span("coalesced");
+                seal(trace);
                 self.metrics.on_submit();
                 return Ok(rx);
             }
-            Admission::Lead(fingerprint) => fingerprint,
+            Admission::Lead(fingerprint) => {
+                frontdoor_span("lead");
+                fingerprint
+            }
         };
         let qr = QueuedRequest {
             spec,
@@ -734,6 +861,14 @@ impl PartitionService {
     /// operational tooling).
     pub fn frontdoor(&self) -> &Arc<FrontDoor> {
         &self.frontdoor
+    }
+
+    /// The bounded ring of completed request traces — dump with
+    /// [`TraceRing::to_chrome_json`]. Empty unless
+    /// [`ServiceConfig::trace_sample_rate`] is non-zero or specs carry
+    /// explicit [`EstimateSpec::trace`] handles.
+    pub fn traces(&self) -> &Arc<TraceRing> {
+        &self.traces
     }
 
     /// Drain and stop all threads.
@@ -1071,6 +1206,7 @@ mod tests {
             params: GroupParams,
             qs: &[Vec<f32>],
             rng: &mut Rng,
+            trace: Option<&Trace>,
         ) -> Result<super::super::backend::GroupAnswer, BackendError> {
             use std::sync::atomic::Ordering;
             self.calls.fetch_add(1, Ordering::SeqCst);
@@ -1078,7 +1214,7 @@ mod tests {
             if self.fail_next.swap(false, Ordering::SeqCst) {
                 return Err(BackendError::new("injected failure"));
             }
-            self.inner.estimate_batch(kind, params, qs, rng)
+            self.inner.estimate_batch(kind, params, qs, rng, trace)
         }
         fn scorings(&self, kind: EstimatorKind, params: GroupParams, n: usize) -> usize {
             self.inner.scorings(kind, params, n)
@@ -1229,6 +1365,90 @@ mod tests {
         assert_eq!(svc.backend().add_categories(more).unwrap(), 2);
         assert_eq!(svc.serving_info(), (656, 2));
         svc.shutdown();
+    }
+
+    #[test]
+    fn sampled_traces_record_stage_spans_and_land_in_ring() {
+        let (svc, store) = start_service_traced(1.0);
+        let q = store.row(2).to_vec();
+        let r = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(r.z > 0.0);
+        assert_eq!(svc.traces().len(), 1, "every request sampled at rate 1.0");
+        let done = &svc.traces().completed()[0];
+        let names: Vec<&str> = done.events.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["frontdoor", "queue", "batch"],
+            "coordinator span tree in start order"
+        );
+        assert!(done.wall_ns >= done.stage_ns("batch"));
+        assert!(done
+            .events
+            .iter()
+            .all(|e| e.track == crate::obs::COORD_TRACK));
+        // A cache hit's trace ends at the front door.
+        let hit = svc.estimate(EstimateSpec::new(q)).unwrap();
+        assert!(hit.served_from_cache);
+        let traces = svc.traces().completed();
+        assert_eq!(traces.len(), 2);
+        let hit_trace = &traces[1];
+        assert_eq!(hit_trace.events.len(), 1);
+        assert_eq!(hit_trace.events[0].name, "frontdoor");
+        assert_eq!(
+            hit_trace.events[0].args,
+            vec![("outcome".to_string(), "hit".to_string())]
+        );
+        // Chrome dump of the ring parses as JSON.
+        let dump = svc.traces().to_chrome_json();
+        assert!(crate::util::json::Json::parse(&dump).is_ok(), "{dump}");
+        // Stage histograms picked the frontdoor spans up.
+        let m = svc.metrics();
+        assert!(m.stage_stats.iter().any(|s| s.stage == "frontdoor"));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tracing_off_records_nothing_but_explicit_traces_still_work() {
+        let (svc, store) = start_service_traced(0.0);
+        let q = store.row(5).to_vec();
+        let r = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+        assert!(r.z > 0.0);
+        assert!(svc.traces().is_empty(), "rate 0.0 samples nothing");
+        // An explicitly attached trace is honored regardless of rate.
+        let t = crate::obs::Trace::start(77);
+        let r = svc
+            .estimate(EstimateSpec::new(store.row(6).to_vec()).trace(t))
+            .unwrap();
+        assert!(r.z > 0.0);
+        let traces = svc.traces().completed();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].id, 77);
+        assert!(traces[0].stage_ns("batch") > 0);
+        svc.shutdown();
+    }
+
+    fn start_service_traced(rate: f64) -> (PartitionService, Arc<EmbeddingStore>) {
+        let store = Arc::new(generate(&SynthConfig {
+            n: 300,
+            d: 16,
+            ..SynthConfig::tiny()
+        }));
+        let index: Arc<dyn MipsIndex> = Arc::new(BruteIndex::new(&store));
+        let svc = PartitionService::start(
+            store.clone(),
+            index,
+            Router::new(FmbeConfig {
+                p_features: 100,
+                ..Default::default()
+            }),
+            ServiceConfig {
+                workers: 1,
+                trace_sample_rate: rate,
+                ..Default::default()
+            },
+            None,
+        );
+        (svc, store)
     }
 
     #[test]

@@ -29,10 +29,12 @@
 //! with controlled retrieval-error injection ([`oracle`]), a log-bilinear
 //! language model trained with NCE ([`lm`]), a PJRT runtime that executes
 //! AOT-compiled JAX/Pallas scoring graphs ([`runtime`]), a batching
-//! service coordinator ([`coordinator`]), and a network serving layer
+//! service coordinator ([`coordinator`]), a network serving layer
 //! ([`net`]: framed wire protocol, partition server/client, and
-//! cross-process remote shards) — are all implemented here; the crate
-//! has no heavyweight dependencies.
+//! cross-process remote shards), and an observability layer ([`obs`]:
+//! lock-free histograms, sampled request tracing, and scrapeable
+//! telemetry) — are all implemented here; the crate has no
+//! heavyweight dependencies.
 //!
 //! ## Quickstart
 //!
@@ -63,6 +65,7 @@ pub mod lm;
 pub mod metrics;
 pub mod mips;
 pub mod net;
+pub mod obs;
 pub mod oracle;
 pub mod runtime;
 pub mod store;

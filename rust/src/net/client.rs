@@ -242,6 +242,21 @@ impl PartitionClient {
         }
     }
 
+    /// The server's merged telemetry snapshot ([`WireRequest::GetMetrics`]):
+    /// service counters plus histogram percentiles, with every shard
+    /// worker's own snapshot folded in when the server fronts a
+    /// cluster. `zest-top` polls this; `--metrics-listen` serves the
+    /// same blob as Prometheus text.
+    pub fn get_metrics(&self) -> Result<crate::obs::MetricsBlob> {
+        match self.pool.call(&WireRequest::GetMetrics)? {
+            WireResponse::Metrics(blob) => Ok(blob),
+            WireResponse::Error { code, message } => Err(remote_err(code, message)),
+            other => Err(ClientError::Protocol(format!(
+                "get_metrics answered with {other:?}"
+            ))),
+        }
+    }
+
     /// `(categories, dim, epoch)` the server currently serves.
     pub fn manifest(&self) -> Result<(usize, usize, u64)> {
         match self.pool.call(&WireRequest::Manifest)? {

@@ -50,11 +50,15 @@
 //!
 //! ## Multiplexed worker pipelines
 //!
-//! Each [`RemoteShard`] owns **one persistent wire-v3 connection**
+//! Each [`RemoteShard`] owns **one persistent multiplexed connection**
 //! driven by a two-thread pipeline: a *writer* drains an mpsc
 //! submission queue onto the socket in submission order, and a *reader*
 //! routes response frames back to per-request completion slots keyed by
-//! the `request_id` every v3 frame carries. Submitting is non-blocking
+//! the `request_id` every frame carries (wire v3+; v5 adds a header
+//! flag that asks the worker to annex server-side
+//! [`wire::WireTimes`] onto its response — see `record_shard_spans`
+//! for how those become per-shard trace spans). Submitting is
+//! non-blocking
 //! and many requests ride the connection concurrently, so cluster-side
 //! operations submit to every worker and then join — the wall-clock
 //! cost of a cluster-wide operation is the **slowest worker, not the
@@ -101,11 +105,12 @@ use crate::estimators::mince::{self, Solver};
 use crate::estimators::{tail, EstimatorKind};
 use crate::mips::sharded::ShardedIndex;
 use crate::mips::{Hit, MipsIndex};
+use crate::obs::{MetricsBlob, Trace};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // Per-worker multiplexed request pipeline.
@@ -123,7 +128,9 @@ struct CallFailure {
     retryable: bool,
 }
 
-type CallResult = std::result::Result<WireResponse, CallFailure>;
+/// A routed response plus the server-side timing annex it carried (only
+/// on responses to [`wire::FLAG_TRACED`] requests).
+type CallResult = std::result::Result<(WireResponse, Option<wire::WireTimes>), CallFailure>;
 
 /// One in-flight request's completion slot in the [`MuxTable`].
 struct PendingEntry {
@@ -167,8 +174,12 @@ impl MuxShared {
 /// socket **in submission order** (per-worker ordering is what the
 /// publish protocol's prepare-before-commit relies on). Exits when the
 /// queue closes (connection dropped) or a write fails.
-fn mux_writer(mut stream: Stream, rx: mpsc::Receiver<(u64, Arc<Encoded>)>, shared: Arc<MuxShared>) {
-    while let Ok((id, req)) = rx.recv() {
+fn mux_writer(
+    mut stream: Stream,
+    rx: mpsc::Receiver<(u64, u8, Arc<Encoded>)>,
+    shared: Arc<MuxShared>,
+) {
+    while let Ok((id, flags, req)) = rx.recv() {
         {
             let mut table = shared.table.lock().unwrap();
             if table.dead {
@@ -183,7 +194,7 @@ fn mux_writer(mut stream: Stream, rx: mpsc::Receiver<(u64, Arc<Encoded>)>, share
                 None => continue,
             }
         }
-        if let Err(e) = wire::write_frame(&mut stream, id, req.payload()) {
+        if let Err(e) = wire::write_frame_flagged(&mut stream, id, flags, req.payload()) {
             // Broken socket: this call is ambiguous (bytes may be on the
             // wire), the queued rest was never written. Fail this one
             // here, then wake the reader so it drains the rest.
@@ -209,19 +220,19 @@ fn mux_writer(mut stream: Stream, rx: mpsc::Receiver<(u64, Arc<Encoded>)>, share
 /// failing all outstanding calls.
 fn mux_reader(mut stream: Stream, shared: Arc<MuxShared>) {
     loop {
-        match wire::read_response(&mut stream) {
-            Ok(Some((0, WireResponse::Error { code, message }))) => {
+        match wire::read_response_timed(&mut stream) {
+            Ok(Some((0, WireResponse::Error { code, message }, _))) => {
                 // Connection-level error frame (e.g. `ConnLimit`): the
                 // server wrote it before reading any request and is
                 // closing, so it answers every outstanding call.
                 shared.fail_all(|| remote_err(code, message.clone()));
                 return;
             }
-            Ok(Some((id, resp))) => {
+            Ok(Some((id, resp, times))) => {
                 let entry = shared.table.lock().unwrap().pending.remove(&id);
                 match entry {
                     Some(entry) => {
-                        let _ = entry.tx.send(Ok(resp));
+                        let _ = entry.tx.send(Ok((resp, times)));
                     }
                     // A response no call waits for (request-id mismatch
                     // from a confused server): log and keep serving the
@@ -259,7 +270,7 @@ fn mux_reader(mut stream: Stream, shared: Arc<MuxShared>) {
 /// One multiplexed connection to a worker: the writer/reader thread
 /// pair around a single socket plus the shared completion table.
 struct MuxConn {
-    tx: Option<mpsc::Sender<(u64, Arc<Encoded>)>>,
+    tx: Option<mpsc::Sender<(u64, u8, Arc<Encoded>)>>,
     /// Kept for `Drop`: shutting the read half down unblocks the reader.
     stream: Stream,
     shared: Arc<MuxShared>,
@@ -363,10 +374,18 @@ impl MuxSlot {
     /// dead or never-opened connection is (re)opened here: the lazy
     /// reconnect that heals a worker restart on the next submission.
     fn submit(&self, req: Arc<Encoded>) -> Pending {
+        self.submit_flagged(req, 0)
+    }
+
+    /// [`MuxSlot::submit`] with explicit header flags —
+    /// [`wire::FLAG_TRACED`] asks the server to append its timing annex
+    /// to the response.
+    fn submit_flagged(&self, req: Arc<Encoded>, flags: u8) -> Pending {
         let (tx, rx) = mpsc::channel();
         let pending = Pending {
             slot: self.clone(),
             req: Arc::clone(&req),
+            flags,
             rx,
         };
         let mut conn = self.inner.conn.lock().unwrap();
@@ -410,7 +429,7 @@ impl MuxSlot {
             );
         }
         let queue = c.tx.as_ref().expect("live connection keeps its queue");
-        if queue.send((id, req)).is_err() {
+        if queue.send((id, flags, req)).is_err() {
             // The writer exited before accepting the job: never written.
             let entry = c.shared.table.lock().unwrap().pending.remove(&id);
             if entry.is_some() {
@@ -433,17 +452,30 @@ impl MuxSlot {
 struct Pending {
     slot: MuxSlot,
     req: Arc<Encoded>,
+    flags: u8,
     rx: mpsc::Receiver<CallResult>,
 }
 
 impl Pending {
     /// Block until the worker answered this call (or it failed).
     fn join(self) -> Result<WireResponse> {
-        let Pending { slot, req, rx } = self;
+        self.join_timed().map(|(resp, _)| resp)
+    }
+
+    /// [`Pending::join`], keeping the server-side timing annex (present
+    /// only when the call was submitted with [`wire::FLAG_TRACED`] and
+    /// the server honored it).
+    fn join_timed(self) -> Result<(WireResponse, Option<wire::WireTimes>)> {
+        let Pending {
+            slot,
+            req,
+            flags,
+            rx,
+        } = self;
         match rx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(f)) if f.retryable => match slot.submit(req).rx.recv() {
-                Ok(Ok(resp)) => Ok(resp),
+            Ok(Ok(out)) => Ok(out),
+            Ok(Err(f)) if f.retryable => match slot.submit_flagged(req, flags).rx.recv() {
+                Ok(Ok(out)) => Ok(out),
                 Ok(Err(f)) => Err(f.error),
                 Err(_) => Err(dropped_call()),
             },
@@ -468,6 +500,39 @@ fn attribute(e: ClientError, shard: usize) -> ClientError {
     ClientError::Shard {
         shard,
         source: Box::new(e),
+    }
+}
+
+/// Record one scatter RPC on a sampled request's trace, on the shard's
+/// track (`1 + shard`): an `rpc` span covering the client-side wall
+/// (submit → joined response) and, when the worker's timing annex came
+/// back, a nested `worker` span for the server-side handler execution
+/// offset by the worker's own queueing lag.
+fn record_shard_spans(
+    trace: &Trace,
+    shard: usize,
+    start: Instant,
+    times: Option<wire::WireTimes>,
+) {
+    let track = 1 + shard as u64;
+    trace.span_at(
+        "rpc",
+        start,
+        start.elapsed(),
+        track,
+        vec![("shard".to_string(), shard.to_string())],
+    );
+    if let Some(t) = times {
+        trace.span_at(
+            "worker",
+            start + Duration::from_nanos(t.handle_lag_ns),
+            Duration::from_nanos(t.exec_ns),
+            track,
+            vec![
+                ("shard".to_string(), shard.to_string()),
+                ("handle_lag_ns".to_string(), t.handle_lag_ns.to_string()),
+            ],
+        );
     }
 }
 
@@ -537,6 +602,13 @@ impl RemoteShard {
     /// one connection at once (responses route back by request id).
     fn submit(&self, req: Encoded) -> Pending {
         self.slot.submit(Arc::new(req))
+    }
+
+    /// [`RemoteShard::submit`] with [`wire::FLAG_TRACED`] set: the
+    /// worker's response carries its timing annex (handle lag + exec
+    /// wall), joined via [`Pending::join_timed`].
+    fn submit_traced(&self, req: Encoded) -> Pending {
+        self.slot.submit_flagged(Arc::new(req), wire::FLAG_TRACED)
     }
 
     /// Submit + join in one blocking call.
@@ -954,14 +1026,36 @@ impl RemoteCluster {
     /// Batched chained exact partition (the gemm kernel chain — mirrors
     /// `Exact::estimate_batch`).
     pub fn exp_sum_batch(&self, qs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        self.exp_sum_batch_traced(qs, None)
+    }
+
+    /// [`RemoteCluster::exp_sum_batch`] recording each sequential
+    /// worker round-trip on `trace` (when sampled): per-shard `rpc`
+    /// client wall + the worker's annex-reported `worker` exec span.
+    fn exp_sum_batch_traced(&self, qs: &[Vec<f32>], trace: Option<&Trace>) -> Result<Vec<f64>> {
         let mut acc = vec![0f64; qs.len()];
         if qs.is_empty() {
             return Ok(acc);
         }
         for (s, shard) in self.shards.iter().enumerate() {
-            acc = shard
-                .exp_sum_chain_batch(acc, qs)
-                .map_err(|e| attribute(e, s))?;
+            let want = acc.len();
+            acc = match trace {
+                None => shard.exp_sum_chain_batch(acc, qs),
+                Some(t) => {
+                    let req = Encoded::exp_sum_chain_batch(&acc, qs);
+                    let start = Instant::now();
+                    shard.submit_traced(req).join_timed().and_then(
+                        |(resp, times)| {
+                            record_shard_spans(t, s, start, times);
+                            match resp {
+                                WireResponse::ExpSums(acc) if acc.len() == want => Ok(acc),
+                                other => Err(unexpected("exp_sum_chain_batch", other)),
+                            }
+                        },
+                    )
+                }
+            }
+            .map_err(|e| attribute(e, s))?;
         }
         Ok(acc)
     }
@@ -978,17 +1072,36 @@ impl RemoteCluster {
     /// to zero). `tests/net_e2e.rs` pins the relative-error bound for
     /// S ∈ {1, 2, 4}.
     pub fn exp_sum_parts(&self, qs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        self.exp_sum_parts_traced(qs, None)
+    }
+
+    /// [`RemoteCluster::exp_sum_parts`] recording each concurrent
+    /// worker fan-out leg on `trace` (when sampled): the per-shard
+    /// `rpc` spans overlap, which is exactly what distinguishes this
+    /// mode from the sequential chain in a trace dump.
+    fn exp_sum_parts_traced(&self, qs: &[Vec<f32>], trace: Option<&Trace>) -> Result<Vec<f64>> {
         let mut zs = vec![0f64; qs.len()];
         if qs.is_empty() {
             return Ok(zs);
         }
+        let start = Instant::now();
         let in_flight: Vec<_> = self
             .shards
             .iter()
-            .map(|shard| shard.submit(Encoded::exp_sum_part(qs)))
+            .map(|shard| {
+                let req = Encoded::exp_sum_part(qs);
+                match trace {
+                    None => shard.submit(req),
+                    Some(_) => shard.submit_traced(req),
+                }
+            })
             .collect();
         for (s, pending) in in_flight.into_iter().enumerate() {
-            match pending.join().map_err(|e| attribute(e, s))? {
+            let (resp, times) = pending.join_timed().map_err(|e| attribute(e, s))?;
+            if let Some(t) = trace {
+                record_shard_spans(t, s, start, times);
+            }
+            match resp {
                 WireResponse::ExpSums(partials) if partials.len() == qs.len() => {
                     for (z, p) in zs.iter_mut().zip(partials) {
                         *z += p;
@@ -1072,6 +1185,7 @@ impl RemoteCluster {
         precision: Precision,
         qs: &[Vec<f32>],
         rng: &mut Rng,
+        trace: Option<&Trace>,
     ) -> Result<ClusterAnswer> {
         // One pinned cluster view for the whole block, so the head
         // retrieval, tail sizing, tail scoring and the reported
@@ -1079,8 +1193,8 @@ impl RemoteCluster {
         let state = self.state();
         let zs = match kind {
             EstimatorKind::Exact => match precision {
-                Precision::BitExact => self.exp_sum_batch(qs)?,
-                Precision::Pipelined => self.exp_sum_parts(qs)?,
+                Precision::BitExact => self.exp_sum_batch_traced(qs, trace)?,
+                Precision::Pipelined => self.exp_sum_parts_traced(qs, trace)?,
             },
             EstimatorKind::Nmimps => {
                 let heads = state.index.top_k_batch(qs, k);
@@ -1608,6 +1722,33 @@ impl RemoteCluster {
         }
         healed
     }
+
+    /// Merged telemetry from every worker: `GetMetrics` fanned out
+    /// concurrently, snapshots folded with [`MetricsBlob::merge`]
+    /// (sums counters, pools histogram buckets). Best-effort — a
+    /// worker that fails to answer is logged and skipped rather than
+    /// failing the scrape, so one sick worker cannot blind the
+    /// monitoring for the rest of the cluster.
+    pub fn cluster_metrics(&self) -> MetricsBlob {
+        let in_flight: Vec<_> = self
+            .shards
+            .iter()
+            .map(|shard| shard.submit(Encoded::get_metrics()))
+            .collect();
+        let mut merged = MetricsBlob::default();
+        for (shard, pending) in self.shards.iter().zip(in_flight) {
+            match pending.join() {
+                Ok(WireResponse::Metrics(blob)) => merged.merge(&blob),
+                Ok(other) => log::warn!(
+                    "metrics scrape of worker {} answered unexpectedly: {:?}",
+                    shard.addr(),
+                    std::mem::discriminant(&other)
+                ),
+                Err(e) => log::warn!("metrics scrape of worker {} failed: {e}", shard.addr()),
+            }
+        }
+        merged
+    }
 }
 
 /// Per-request scoring budget over remote shards (mirror of
@@ -1687,7 +1828,7 @@ impl ClusterHandler {
         };
         let answer = self
             .cluster
-            .estimate_batch(kind, k, l, precision, queries, &mut rng);
+            .estimate_batch(kind, k, l, precision, queries, &mut rng, None);
         let exec_ns = started.elapsed().as_nanos() as u64;
         match answer {
             Ok(answer) => {
@@ -1771,6 +1912,10 @@ impl Handler for ClusterHandler {
             } => {
                 self.estimate_block(kind, k as usize, l as usize, precision, deadline_ns, &queries)
             }
+            // Scrape fans out to every worker and merges; the server
+            // loop wrapping this handler folds its own net counters in
+            // at the exposition layer.
+            WireRequest::GetMetrics => WireResponse::Metrics(self.cluster.cluster_metrics()),
             _ => WireResponse::Error {
                 code: ErrorCode::Unsupported,
                 message: "shard-worker operation sent to a partition server".to_string(),

@@ -9,7 +9,7 @@
 //! reactor owns a [`super::reactor::Poller`] and drives its share of
 //! connections through per-connection read/write buffers and a
 //! frame-assembly state machine: inbound bytes accumulate until a full
-//! v3 frame (header + payload) is present, decoded requests are
+//! frame (header + payload) is present, decoded requests are
 //! dispatched to a shared pool of [`ServerConfig::handler_threads`]
 //! handler threads, and completed responses are routed back to the
 //! owning reactor (wakeup pipe) which writes them out **in completion
@@ -93,6 +93,9 @@ struct Completion {
     gen: u64,
     request_id: u64,
     payload: Vec<u8>,
+    /// Server-side timings to annex onto the response frame; `Some`
+    /// exactly when the request frame carried [`wire::FLAG_TRACED`].
+    times: Option<wire::WireTimes>,
 }
 
 /// One decoded request on its way to the handler pool.
@@ -102,6 +105,11 @@ struct HandlerJob {
     gen: u64,
     request_id: u64,
     req: Request,
+    /// The request frame asked for a [`wire::WireTimes`] annex.
+    traced: bool,
+    /// When the frame was peeled off the read buffer — the handler
+    /// thread measures its pickup lag (handler-pool queueing) from it.
+    parsed_at: Instant,
 }
 
 /// What other threads push into a reactor between polls.
@@ -162,9 +170,33 @@ impl Conn {
     }
 
     fn queue_frame(&mut self, request_id: u64, payload: &[u8]) {
-        let mut frame = Vec::with_capacity(wire::HEADER_LEN + payload.len());
-        frame.extend_from_slice(&wire::encode_header(request_id, payload.len()));
+        self.queue_frame_timed(request_id, payload, None);
+    }
+
+    /// [`Conn::queue_frame`] with an optional [`wire::WireTimes`] annex:
+    /// the annex bytes ride inside the payload length and the header
+    /// carries [`wire::FLAG_TRACED`] so the client peels them back off
+    /// (mirrors [`wire::write_response_timed`], assembled into the
+    /// nonblocking outbound buffer instead of a blocking writer).
+    fn queue_frame_timed(
+        &mut self,
+        request_id: u64,
+        payload: &[u8],
+        times: Option<wire::WireTimes>,
+    ) {
+        let annex = times.map(|t| t.encode());
+        let annex_len = annex.as_ref().map_or(0, |a| a.len());
+        let flags = if annex.is_some() { wire::FLAG_TRACED } else { 0 };
+        let mut frame = Vec::with_capacity(wire::HEADER_LEN + payload.len() + annex_len);
+        frame.extend_from_slice(&wire::encode_header_flagged(
+            request_id,
+            payload.len() + annex_len,
+            flags,
+        ));
         frame.extend_from_slice(payload);
+        if let Some(a) = annex {
+            frame.extend_from_slice(&a);
+        }
         self.out.push_back(frame);
     }
 }
@@ -218,6 +250,7 @@ impl Server {
             let rx = handler_rx.clone();
             let handler = handler.clone();
             let reactors: Vec<Arc<ReactorShared>> = reactors.clone();
+            let metrics = metrics.clone();
             handler_threads.push(
                 std::thread::Builder::new()
                     .name(format!("zest-net-handler-{i}"))
@@ -226,6 +259,7 @@ impl Server {
                             Ok(j) => j,
                             Err(_) => break,
                         };
+                        let picked_up = Instant::now();
                         let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                             handler.handle(job.req)
                         }))
@@ -233,11 +267,23 @@ impl Server {
                             code: ErrorCode::Internal,
                             message: "handler panicked".to_string(),
                         });
+                        // Handle lag = time the decoded frame sat in the
+                        // handler-pool queue; exec = time inside the
+                        // handler. Both always feed the histograms; they
+                        // ride back on the wire only when asked for.
+                        let lag = picked_up.saturating_duration_since(job.parsed_at);
+                        let exec = picked_up.elapsed();
+                        metrics.on_net_handle(lag, exec);
+                        let times = job.traced.then(|| wire::WireTimes {
+                            handle_lag_ns: lag.as_nanos() as u64,
+                            exec_ns: exec.as_nanos() as u64,
+                        });
                         reactors[job.reactor].push_completion(Completion {
                             slot: job.slot,
                             gen: job.gen,
                             request_id: job.request_id,
                             payload: resp.encode(),
+                            times,
                         });
                     })
                     .expect("spawn handler thread"),
@@ -503,7 +549,7 @@ impl Reactor {
             return;
         }
         conn.in_flight -= 1;
-        conn.queue_frame(c.request_id, &c.payload);
+        conn.queue_frame_timed(c.request_id, &c.payload, c.times);
         self.metrics.on_frame_out();
         self.handle_writable(c.slot);
         self.update_interest(c.slot);
@@ -575,7 +621,7 @@ impl Reactor {
             }
             let mut header = [0u8; wire::HEADER_LEN];
             header.copy_from_slice(&conn.buf[..wire::HEADER_LEN]);
-            let (request_id, len) = match wire::decode_header(&header) {
+            let (request_id, flags, len) = match wire::decode_header(&header) {
                 Ok(h) => h,
                 Err(e) => {
                     // Unframeable input: the id cannot be trusted, so
@@ -604,6 +650,8 @@ impl Reactor {
                         gen,
                         request_id,
                         req,
+                        traced: flags & wire::FLAG_TRACED != 0,
+                        parsed_at: Instant::now(),
                     };
                     if self.handler_tx.send(job).is_err() {
                         // Shutdown raced us: answer directly.
@@ -870,6 +918,19 @@ impl Handler for ServiceHandler {
                     }
                 }
                 Response::Estimates(items)
+            }
+            Request::GetMetrics => {
+                // One scrape answers for the whole serving stack: the
+                // coordinator's counters/histograms (which already
+                // include the wire-level counters — the server shares
+                // the service's metrics sink) merged with whatever the
+                // backend contributes (a cluster backend fans the same
+                // scrape out to its workers).
+                let mut blob = self.svc.metrics_handle().blob();
+                if let Some(backend) = self.svc.backend().metrics() {
+                    blob.merge(&backend);
+                }
+                Response::Metrics(blob)
             }
             // Shard-worker operations don't belong on a partition server.
             Request::TopK { .. }

@@ -41,19 +41,27 @@
 
 use super::server::Handler;
 use super::wire::{ErrorCode, Request, Response};
+use crate::coordinator::ServiceMetrics;
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::fmbe::{Fmbe, FmbeConfig};
 use crate::linalg;
 use crate::store::{
     exp_sum_view_batch, exp_sum_view_chain, PendingEpoch, ShardedStore, SnapshotHandle, StoreView,
 };
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// The worker-side handler.
 pub struct ShardWorker {
     handle: SnapshotHandle,
     /// At most one staged (token, prepared epoch) at a time.
     staged: Mutex<Option<(u64, PendingEpoch)>>,
+    /// Telemetry answered to `GetMetrics`. Share this sink with the
+    /// [`super::server::Server`] wrapping the worker (via
+    /// [`ShardWorker::with_metrics`] /
+    /// [`ShardWorker::metrics_handle`]) so one scrape reports the
+    /// worker's wire counters and handler histograms; a worker driven
+    /// without a server answers from its own (then handler-only) sink.
+    metrics: Arc<ServiceMetrics>,
 }
 
 impl ShardWorker {
@@ -68,7 +76,21 @@ impl ShardWorker {
         ShardWorker {
             handle,
             staged: Mutex::new(None),
+            metrics: Arc::new(ServiceMetrics::new()),
         }
+    }
+
+    /// Answer `GetMetrics` from `metrics` instead of a private sink —
+    /// pass the same `Arc` to the server fronting this worker so
+    /// scrapes see the full picture.
+    pub fn with_metrics(mut self, metrics: Arc<ServiceMetrics>) -> ShardWorker {
+        self.metrics = metrics;
+        self
+    }
+
+    /// The sink `GetMetrics` answers from.
+    pub fn metrics_handle(&self) -> Arc<ServiceMetrics> {
+        self.metrics.clone()
     }
 
     /// The underlying snapshot handle (tests, local mutation).
@@ -289,6 +311,7 @@ impl Handler for ShardWorker {
                     lambdas: fitted.lambdas(),
                 }
             }
+            Request::GetMetrics => Response::Metrics(self.metrics.blob()),
             // Partition-server operations don't belong on a shard worker.
             Request::Estimate { .. } | Request::EstimateBatch { .. } => Self::err(
                 ErrorCode::Unsupported,

@@ -4,13 +4,13 @@
 //! manifests, chained exp-sums, and the two-phase epoch-publish
 //! handshake.
 //!
-//! ## Frame layout (version 4)
+//! ## Frame layout (version 5)
 //!
 //! ```text
-//! ┌─────────┬────────────┬─────────────┬────────────────┬───────────────┐
-//! │ "ZNW1"  │ version u16│ payload len │ request id u64 │ payload       │
-//! │ 4 bytes │ LE         │ u32 LE      │ LE             │ tag u8 + body │
-//! └─────────┴────────────┴─────────────┴────────────────┴───────────────┘
+//! ┌─────────┬────────────┬─────────────┬────────────────┬──────────┬───────────────┐
+//! │ "ZNW1"  │ version u16│ payload len │ request id u64 │ flags u8 │ payload       │
+//! │ 4 bytes │ LE         │ u32 LE      │ LE             │          │ tag u8 + body │
+//! └─────────┴────────────┴─────────────┴────────────────┴──────────┴───────────────┘
 //! ```
 //!
 //! Version 3 added the `request_id` header field: a response frame
@@ -21,6 +21,16 @@
 //! connection-level frames a server emits before it has read any
 //! request (e.g. the `ConnLimit` rejection); clients start their ids at
 //! 1.
+//!
+//! Version 5 widened the header with a `flags` byte. The only defined
+//! bit is [`FLAG_TRACED`]: a client sets it on a request frame to ask
+//! the server for server-side timings; the server echoes the bit on
+//! the response frame and **appends a 16-byte timing annex**
+//! ([`WireTimes`]: `handle_lag_ns u64, exec_ns u64`) after the normal
+//! response payload (the header's `len` covers payload + annex; the
+//! annex is stripped at the frame layer before `Response::decode`).
+//! Unknown flag bits are malformed — they would change frame
+//! interpretation, so they cannot be skipped forward-compatibly.
 //!
 //! Every multi-byte integer and float is little-endian. Vectors are a
 //! `u32` count followed by raw elements; query blocks are `count u32,
@@ -50,6 +60,8 @@
 use crate::coordinator::Precision;
 use crate::estimators::EstimatorKind;
 use crate::mips::Hit;
+use crate::obs::hist::HistogramSnapshot;
+use crate::obs::MetricsBlob;
 use std::io::{Read, Write};
 
 /// Frame magic: "ZNW1" (Zest NetWork, format 1).
@@ -59,18 +71,72 @@ pub const MAGIC: [u8; 4] = *b"ZNW1";
 /// budget, and added the `ExpSumPart` worker op; version 3 widened the
 /// header with a `request_id: u64` so one connection multiplexes many
 /// overlapped RPCs; version 4 appended a `served_from_cache` byte to
-/// each `Estimates` entry (see `docs/WIRE.md` §8 for the history).
-pub const VERSION: u16 = 4;
+/// each `Estimates` entry; version 5 widened the header with a `flags`
+/// byte ([`FLAG_TRACED`] + response timing annex) and added the
+/// `GetMetrics`/`Metrics` telemetry ops (see `docs/WIRE.md` §8 for the
+/// history).
+pub const VERSION: u16 = 5;
 /// Upper bound on one frame's payload (guards against allocating
 /// attacker-controlled lengths; also the practical cap on one
 /// `PrepareAdd` row shipment — ~64M f32s).
 pub const MAX_FRAME_LEN: usize = 256 << 20;
 
 /// Fixed frame-header size: magic (4) + version (2) + payload length
-/// (4) + request id (8). Exposed so readiness-driven readers (the
-/// reactor's frame-assembly state machine) can buffer exactly one
-/// header before deciding how much payload to expect.
-pub const HEADER_LEN: usize = 18;
+/// (4) + request id (8) + flags (1). Exposed so readiness-driven
+/// readers (the reactor's frame-assembly state machine) can buffer
+/// exactly one header before deciding how much payload to expect.
+pub const HEADER_LEN: usize = 19;
+
+/// Header flag bit: the sender of a request frame asks for server-side
+/// timings; the server echoes the bit on the response frame and
+/// appends a [`WireTimes`] annex after the response payload.
+pub const FLAG_TRACED: u8 = 0b0000_0001;
+
+/// Every header flag bit this version defines; anything outside is
+/// malformed.
+const FLAGS_MASK: u8 = FLAG_TRACED;
+
+/// Server-side timing annex appended to a [`FLAG_TRACED`] response
+/// frame: how long the decoded request waited for a handler thread and
+/// how long the handler ran. Fixed [`WireTimes::LEN`] bytes (two LE
+/// u64s) so the frame layer can strip it without understanding the
+/// payload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireTimes {
+    /// Nanoseconds between frame decode and handler start (the
+    /// server-side queueing lag).
+    pub handle_lag_ns: u64,
+    /// Nanoseconds the handler ran (server-side execution wall time).
+    pub exec_ns: u64,
+}
+
+impl WireTimes {
+    /// Encoded annex size in bytes.
+    pub const LEN: usize = 16;
+
+    /// Encode as the 16-byte wire annex.
+    pub fn encode(&self) -> [u8; WireTimes::LEN] {
+        let mut out = [0u8; WireTimes::LEN];
+        out[..8].copy_from_slice(&self.handle_lag_ns.to_le_bytes());
+        out[8..].copy_from_slice(&self.exec_ns.to_le_bytes());
+        out
+    }
+
+    /// Decode the 16-byte wire annex.
+    pub fn decode(bytes: &[u8]) -> Result<WireTimes> {
+        if bytes.len() != WireTimes::LEN {
+            return Err(WireError::Malformed(format!(
+                "timing annex of {} bytes (want {})",
+                bytes.len(),
+                WireTimes::LEN
+            )));
+        }
+        Ok(WireTimes {
+            handle_lag_ns: u64::from_le_bytes(bytes[..8].try_into().unwrap()),
+            exec_ns: u64::from_le_bytes(bytes[8..].try_into().unwrap()),
+        })
+    }
+}
 
 /// Decode/transport failure.
 #[derive(Debug)]
@@ -272,6 +338,10 @@ pub enum Request {
         /// Number of random features P (`FmbeConfig::p_features`).
         p_features: u64,
     },
+    /// Telemetry scrape → [`Response::Metrics`]. Served by partition
+    /// servers (which merge in their workers' blobs) and shard workers
+    /// alike; wire version 5.
+    GetMetrics,
 }
 
 /// One estimation answer (mirrors `coordinator::Response`; durations in
@@ -324,6 +394,11 @@ pub enum Response {
     /// [`Request::FitFmbe`], plus the epoch of the snapshot they were
     /// fitted on (so the cluster can reject a fit that raced a publish).
     Lambdas { epoch: u64, lambdas: Vec<f64> },
+    /// Telemetry snapshot for [`Request::GetMetrics`]: named counters
+    /// plus named histogram snapshots (sparse `(bucket, count)`
+    /// encoding). Blobs merge exactly across nodes
+    /// ([`crate::obs::MetricsBlob::merge`]); wire version 5.
+    Metrics(MetricsBlob),
     /// Typed failure; see [`ErrorCode`] for retry/close semantics.
     Error { code: ErrorCode, message: String },
 }
@@ -595,6 +670,7 @@ const REQ_COMMIT: u8 = 11;
 const REQ_ABORT: u8 = 12;
 const REQ_FIT_FMBE: u8 = 13;
 const REQ_EXP_SUM_PART: u8 = 14;
+const REQ_GET_METRICS: u8 = 15;
 
 const RESP_PONG: u8 = 1;
 const RESP_MANIFEST: u8 = 2;
@@ -607,6 +683,7 @@ const RESP_COMMITTED: u8 = 8;
 const RESP_ABORTED: u8 = 9;
 const RESP_ERROR: u8 = 10;
 const RESP_LAMBDAS: u8 = 11;
+const RESP_METRICS: u8 = 12;
 
 impl Request {
     /// Serialize to the frame payload (tag byte + body).
@@ -706,6 +783,7 @@ impl Request {
                 e.queries(queries);
                 e.buf
             }
+            Request::GetMetrics => Enc::with_tag(REQ_GET_METRICS).buf,
         }
     }
 
@@ -767,6 +845,7 @@ impl Request {
             REQ_EXP_SUM_PART => Request::ExpSumPart {
                 queries: d.queries()?,
             },
+            REQ_GET_METRICS => Request::GetMetrics,
             other => {
                 return Err(WireError::Malformed(format!("unknown request tag {other}")));
             }
@@ -841,6 +920,27 @@ impl Response {
                 e.f64s(lambdas);
                 e.buf
             }
+            Response::Metrics(blob) => {
+                let mut e = Enc::with_tag(RESP_METRICS);
+                e.u32(blob.counters.len() as u32);
+                for (name, v) in &blob.counters {
+                    e.str(name);
+                    e.u64(*v);
+                }
+                e.u32(blob.hists.len() as u32);
+                for (name, h) in &blob.hists {
+                    e.str(name);
+                    e.u64(h.count);
+                    e.u64(h.sum);
+                    e.u64(h.max);
+                    e.u32(h.buckets.len() as u32);
+                    for &(idx, cnt) in &h.buckets {
+                        e.u32(idx);
+                        e.u64(cnt);
+                    }
+                }
+                e.buf
+            }
             Response::Error { code, message } => {
                 let mut e = Enc::with_tag(RESP_ERROR);
                 e.u16(code.as_u16());
@@ -911,6 +1011,37 @@ impl Response {
                 epoch: d.u64()?,
                 lambdas: d.f64s()?,
             },
+            RESP_METRICS => {
+                // Minimum bytes per element guard the length prefixes:
+                // a counter is ≥ 12 bytes (empty name + value), a
+                // histogram header ≥ 32, a sparse bucket exactly 12.
+                let nc = d.len_prefix(12)?;
+                let mut counters = Vec::with_capacity(nc);
+                for _ in 0..nc {
+                    counters.push((d.str()?, d.u64()?));
+                }
+                let nh = d.len_prefix(32)?;
+                let mut hists = Vec::with_capacity(nh);
+                for _ in 0..nh {
+                    let name = d.str()?;
+                    let (count, sum, max) = (d.u64()?, d.u64()?, d.u64()?);
+                    let nb = d.len_prefix(12)?;
+                    let mut buckets = Vec::with_capacity(nb);
+                    for _ in 0..nb {
+                        buckets.push((d.u32()?, d.u64()?));
+                    }
+                    hists.push((
+                        name,
+                        HistogramSnapshot {
+                            count,
+                            sum,
+                            max,
+                            buckets,
+                        },
+                    ));
+                }
+                Response::Metrics(MetricsBlob { counters, hists })
+            }
             RESP_ERROR => Response::Error {
                 code: ErrorCode::from_u16(d.u16()?),
                 message: d.str()?,
@@ -1053,28 +1184,45 @@ impl Encoded {
     pub fn fit_fmbe(seed: u64, p_features: u64) -> Encoded {
         Encoded::new(Request::FitFmbe { seed, p_features }.encode())
     }
+
+    /// Pre-encoded [`Request::GetMetrics`] (scalar-only: reuses the
+    /// owned encoder).
+    pub fn get_metrics() -> Encoded {
+        Encoded::new(Request::GetMetrics.encode())
+    }
 }
 
 // ---------------------------------------------------------------------
 // Frame I/O.
 
-/// Build the fixed 18-byte v3 header for a frame of `payload_len`
-/// bytes answering/carrying `request_id`. The caller has already
-/// checked `payload_len <= MAX_FRAME_LEN`.
+/// Build the fixed 19-byte v5 header (flags clear) for a frame of
+/// `payload_len` bytes answering/carrying `request_id`. The caller has
+/// already checked `payload_len <= MAX_FRAME_LEN`.
 pub fn encode_header(request_id: u64, payload_len: usize) -> [u8; HEADER_LEN] {
+    encode_header_flagged(request_id, payload_len, 0)
+}
+
+/// [`encode_header`] with explicit header `flags` (see [`FLAG_TRACED`]).
+pub fn encode_header_flagged(
+    request_id: u64,
+    payload_len: usize,
+    flags: u8,
+) -> [u8; HEADER_LEN] {
     let mut header = [0u8; HEADER_LEN];
     header[..4].copy_from_slice(&MAGIC);
     header[4..6].copy_from_slice(&VERSION.to_le_bytes());
     header[6..10].copy_from_slice(&(payload_len as u32).to_le_bytes());
     header[10..18].copy_from_slice(&request_id.to_le_bytes());
+    header[18] = flags;
     header
 }
 
-/// Validate a buffered header and extract `(request_id, payload_len)`.
-/// This is the pure half of [`read_frame`], shared with the reactor's
-/// incremental frame-assembly state machine which accumulates header
-/// bytes across readiness events instead of blocking for them.
-pub fn decode_header(header: &[u8; HEADER_LEN]) -> Result<(u64, usize)> {
+/// Validate a buffered header and extract
+/// `(request_id, flags, payload_len)`. This is the pure half of
+/// [`read_frame`], shared with the reactor's incremental
+/// frame-assembly state machine which accumulates header bytes across
+/// readiness events instead of blocking for them.
+pub fn decode_header(header: &[u8; HEADER_LEN]) -> Result<(u64, u8, usize)> {
     if header[..4] != MAGIC {
         return Err(WireError::BadMagic([
             header[0], header[1], header[2], header[3],
@@ -1092,25 +1240,46 @@ pub fn decode_header(header: &[u8; HEADER_LEN]) -> Result<(u64, usize)> {
         header[10], header[11], header[12], header[13], header[14], header[15], header[16],
         header[17],
     ]);
-    Ok((request_id, len))
+    let flags = header[18];
+    if flags & !FLAGS_MASK != 0 {
+        return Err(WireError::Malformed(format!(
+            "unknown header flag bits {flags:#04x}"
+        )));
+    }
+    Ok((request_id, flags, len))
 }
 
-/// Write one frame (header + payload) carrying `request_id`, and flush.
+/// Write one frame (header + payload, flags clear) carrying
+/// `request_id`, and flush.
 pub fn write_frame(w: &mut dyn Write, request_id: u64, payload: &[u8]) -> Result<()> {
+    write_frame_flagged(w, request_id, 0, payload)
+}
+
+/// [`write_frame`] with explicit header `flags`. For a traced response
+/// the caller has already appended the [`WireTimes`] annex to
+/// `payload`.
+pub fn write_frame_flagged(
+    w: &mut dyn Write,
+    request_id: u64,
+    flags: u8,
+    payload: &[u8],
+) -> Result<()> {
     if payload.len() > MAX_FRAME_LEN {
         return Err(WireError::FrameTooLarge(payload.len()));
     }
-    let header = encode_header(request_id, payload.len());
+    let header = encode_header_flagged(request_id, payload.len(), flags);
     w.write_all(&header)?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame's `(request_id, payload)`. `Ok(None)` on a clean EOF
-/// **before** any header byte (the peer hung up between frames); a
-/// connection dying mid-frame is a truncation error.
-pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u64, Vec<u8>)>> {
+/// Read one frame's `(request_id, flags, payload)`. `Ok(None)` on a
+/// clean EOF **before** any header byte (the peer hung up between
+/// frames); a connection dying mid-frame is a truncation error. On a
+/// [`FLAG_TRACED`] frame the payload still **includes** the trailing
+/// timing annex — [`read_response`]/[`read_response_timed`] strip it.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u64, u8, Vec<u8>)>> {
     let mut header = [0u8; HEADER_LEN];
     let mut got = 0usize;
     while got < HEADER_LEN {
@@ -1136,7 +1305,7 @@ pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u64, Vec<u8>)>> {
             Err(e) => return Err(WireError::Io(e)),
         }
     }
-    let (request_id, len) = decode_header(&header)?;
+    let (request_id, flags, len) = decode_header(&header)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof || is_timeout(&e) {
@@ -1147,7 +1316,23 @@ pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u64, Vec<u8>)>> {
             WireError::Io(e)
         }
     })?;
-    Ok(Some((request_id, payload)))
+    Ok(Some((request_id, flags, payload)))
+}
+
+/// Split a traced response payload into `(message bytes, annex)`.
+/// Identity for untraced frames.
+fn split_times(flags: u8, payload: &[u8]) -> Result<(&[u8], Option<WireTimes>)> {
+    if flags & FLAG_TRACED == 0 {
+        return Ok((payload, None));
+    }
+    if payload.len() < WireTimes::LEN {
+        return Err(WireError::Malformed(format!(
+            "traced frame of {} bytes cannot hold a timing annex",
+            payload.len()
+        )));
+    }
+    let (msg, annex) = payload.split_at(payload.len() - WireTimes::LEN);
+    Ok((msg, Some(WireTimes::decode(annex)?)))
 }
 
 fn is_timeout(e: &std::io::Error) -> bool {
@@ -1163,9 +1348,12 @@ pub fn write_request(w: &mut dyn Write, request_id: u64, req: &Request) -> Resul
 }
 
 /// Read + decode one request with its id (`Ok(None)` on clean EOF).
+/// The request's [`FLAG_TRACED`] bit, if any, is dropped — servers
+/// that honor it read frames through the reactor's header state
+/// machine instead.
 pub fn read_request(r: &mut dyn Read) -> Result<Option<(u64, Request)>> {
     match read_frame(r)? {
-        Some((id, payload)) => Ok(Some((id, Request::decode(&payload)?))),
+        Some((id, _flags, payload)) => Ok(Some((id, Request::decode(&payload)?))),
         None => Ok(None),
     }
 }
@@ -1175,13 +1363,52 @@ pub fn write_response(w: &mut dyn Write, request_id: u64, resp: &Response) -> Re
     write_frame(w, request_id, &resp.encode())
 }
 
+/// Encode + frame one traced response: [`FLAG_TRACED`] set and the
+/// [`WireTimes`] annex appended after the response payload.
+pub fn write_response_timed(
+    w: &mut dyn Write,
+    request_id: u64,
+    resp: &Response,
+    times: WireTimes,
+) -> Result<()> {
+    let mut payload = resp.encode();
+    payload.extend_from_slice(&times.encode());
+    write_frame_flagged(w, request_id, FLAG_TRACED, &payload)
+}
+
 /// Read + decode one response with the request id it answers
-/// (`Ok(None)` on clean EOF).
+/// (`Ok(None)` on clean EOF). A traced frame's timing annex is
+/// stripped and discarded — use [`read_response_timed`] to keep it.
 pub fn read_response(r: &mut dyn Read) -> Result<Option<(u64, Response)>> {
-    match read_frame(r)? {
-        Some((id, payload)) => Ok(Some((id, Response::decode(&payload)?))),
+    match read_response_timed(r)? {
+        Some((id, resp, _times)) => Ok(Some((id, resp))),
         None => Ok(None),
     }
+}
+
+/// Read + decode one response plus the [`WireTimes`] annex when the
+/// frame carried [`FLAG_TRACED`] (`Ok(None)` on clean EOF).
+pub fn read_response_timed(
+    r: &mut dyn Read,
+) -> Result<Option<(u64, Response, Option<WireTimes>)>> {
+    match read_frame(r)? {
+        Some((id, flags, payload)) => {
+            let (msg, times) = split_times(flags, &payload)?;
+            Ok(Some((id, Response::decode(msg)?, times)))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Decode a response frame body delivered by a frame-at-a-time reader
+/// (the remote mux loop): strips the annex when `flags` carries
+/// [`FLAG_TRACED`].
+pub fn decode_response_payload(
+    flags: u8,
+    payload: &[u8],
+) -> Result<(Response, Option<WireTimes>)> {
+    let (msg, times) = split_times(flags, payload)?;
+    Ok((Response::decode(msg)?, times))
 }
 
 #[cfg(test)]
@@ -1194,9 +1421,9 @@ mod tests {
         out
     }
 
-    /// Golden bytes: the full Ping frame, byte for byte (version 4:
-    /// request id 7 in the header). Changing this is a wire-format
-    /// break.
+    /// Golden bytes: the full Ping frame, byte for byte (version 5:
+    /// request id 7 in the header, flags byte clear). Changing this is
+    /// a wire-format break.
     #[test]
     fn golden_ping_frame() {
         let mut bytes = Vec::new();
@@ -1204,9 +1431,10 @@ mod tests {
         #[rustfmt::skip]
         let want: Vec<u8> = vec![
             b'Z', b'N', b'W', b'1',                         // magic
-            0x04, 0x00,                                     // version 4
+            0x05, 0x00,                                     // version 5
             0x01, 0x00, 0x00, 0x00,                         // payload len 1
             0x07, 0, 0, 0, 0, 0, 0, 0,                      // request id 7
+            0x00,                                           // flags (none)
             0x01,                                           // Ping tag
         ];
         assert_eq!(bytes, want);
@@ -1358,6 +1586,53 @@ mod tests {
         ));
     }
 
+    /// Golden bytes: a Metrics response payload with one counter and
+    /// one sparse-bucketed histogram (wire version 5).
+    #[test]
+    fn golden_metrics_payload() {
+        let resp = Response::Metrics(MetricsBlob {
+            counters: vec![("completed".to_string(), 7)],
+            hists: vec![(
+                "queue_ns".to_string(),
+                HistogramSnapshot {
+                    count: 2,
+                    sum: 3000,
+                    max: 2000,
+                    buckets: vec![(10, 1), (96, 1)],
+                },
+            )],
+        });
+        #[rustfmt::skip]
+        let want: Vec<u8> = vec![
+            0x0c,                                           // tag
+            0x01, 0, 0, 0,                                  // 1 counter
+            0x09, 0, 0, 0,                                  // name len 9
+            b'c', b'o', b'm', b'p', b'l', b'e', b't', b'e', b'd',
+            0x07, 0, 0, 0, 0, 0, 0, 0,                      // value = 7
+            0x01, 0, 0, 0,                                  // 1 histogram
+            0x08, 0, 0, 0,                                  // name len 8
+            b'q', b'u', b'e', b'u', b'e', b'_', b'n', b's',
+            0x02, 0, 0, 0, 0, 0, 0, 0,                      // count = 2
+            0xb8, 0x0b, 0, 0, 0, 0, 0, 0,                   // sum = 3000
+            0xd0, 0x07, 0, 0, 0, 0, 0, 0,                   // max = 2000
+            0x02, 0, 0, 0,                                  // 2 buckets
+            0x0a, 0, 0, 0,                                  // bucket idx 10
+            0x01, 0, 0, 0, 0, 0, 0, 0,                      // count 1
+            0x60, 0, 0, 0,                                  // bucket idx 96
+            0x01, 0, 0, 0, 0, 0, 0, 0,                      // count 1
+        ];
+        assert_eq!(resp.encode(), want);
+        assert_eq!(Response::decode(&want).unwrap(), resp);
+        // A bucket-count bomb must be rejected before allocating.
+        let mut bomb = vec![0x0c];
+        bomb.extend_from_slice(&0u32.to_le_bytes()); // no counters
+        bomb.extend_from_slice(&u32::MAX.to_le_bytes()); // 4G histograms
+        assert!(matches!(
+            Response::decode(&bomb),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
     /// Golden bytes: a Lambdas response payload with known fields.
     #[test]
     fn golden_lambdas_payload() {
@@ -1447,6 +1722,7 @@ mod tests {
                     p_features: 400,
                 },
             ),
+            (Encoded::get_metrics(), Request::GetMetrics),
         ];
         for (enc, req) in cases {
             assert_eq!(enc.payload(), req.encode().as_slice(), "{req:?}");
@@ -1510,6 +1786,7 @@ mod tests {
                 seed: u64::MAX,
                 p_features: 10_000,
             },
+            Request::GetMetrics,
         ];
         for req in reqs {
             let got = Request::decode(&req.encode()).unwrap();
@@ -1545,6 +1822,21 @@ mod tests {
                 epoch: 5,
                 lambdas: vec![0.0, -1e300, 42.5],
             },
+            Response::Metrics(MetricsBlob {
+                counters: vec![("completed".to_string(), u64::MAX), ("shed".to_string(), 0)],
+                hists: vec![
+                    (
+                        "e2e_ns".to_string(),
+                        HistogramSnapshot {
+                            count: 3,
+                            sum: 12_000,
+                            max: 9_000,
+                            buckets: vec![(0, 1), (400, 2)],
+                        },
+                    ),
+                    ("empty".to_string(), HistogramSnapshot::default()),
+                ],
+            }),
             Response::Error {
                 code: ErrorCode::Unknown(999),
                 message: "later version says hi".to_string(),
@@ -1577,12 +1869,73 @@ mod tests {
     fn header_helpers_match_frame_io() {
         let payload = Request::Ping.encode();
         let header = encode_header(42, payload.len());
-        assert_eq!(decode_header(&header).unwrap(), (42, payload.len()));
+        assert_eq!(decode_header(&header).unwrap(), (42, 0, payload.len()));
         let mut framed = header.to_vec();
         framed.extend_from_slice(&payload);
         let mut by_writer = Vec::new();
         write_frame(&mut by_writer, 42, &payload).unwrap();
         assert_eq!(framed, by_writer);
+        // The flagged variant only differs in the flags byte.
+        let flagged = encode_header_flagged(42, payload.len(), FLAG_TRACED);
+        assert_eq!(&flagged[..18], &header[..18]);
+        assert_eq!(flagged[18], FLAG_TRACED);
+        assert_eq!(
+            decode_header(&flagged).unwrap(),
+            (42, FLAG_TRACED, payload.len())
+        );
+    }
+
+    #[test]
+    fn unknown_flag_bits_rejected() {
+        let mut header = encode_header(1, 0);
+        header[18] = 0b0000_0010;
+        assert!(matches!(decode_header(&header), Err(WireError::Malformed(_))));
+        header[18] = 0xff;
+        assert!(matches!(decode_header(&header), Err(WireError::Malformed(_))));
+    }
+
+    /// A traced response carries FLAG_TRACED and a 16-byte annex after
+    /// the payload; the annex is stripped before decode and surfaced
+    /// through the timed reader only.
+    #[test]
+    fn traced_response_roundtrips_with_annex() {
+        let times = WireTimes {
+            handle_lag_ns: 1_500,
+            exec_ns: 42_000,
+        };
+        let resp = Response::Pong;
+        let mut bytes = Vec::new();
+        write_response_timed(&mut bytes, 9, &resp, times).unwrap();
+        // Header: flags byte set, len covers payload + annex.
+        assert_eq!(bytes[18], FLAG_TRACED);
+        let len = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        assert_eq!(len, resp.encode().len() + WireTimes::LEN);
+        // Timed reader surfaces the annex...
+        let mut r = &bytes[..];
+        assert_eq!(
+            read_response_timed(&mut r).unwrap(),
+            Some((9, Response::Pong, Some(times)))
+        );
+        // ...the plain reader strips and discards it.
+        let mut r = &bytes[..];
+        assert_eq!(read_response(&mut r).unwrap(), Some((9, Response::Pong)));
+        // A traced frame too short to hold the annex is malformed.
+        let short = encode_header_flagged(3, 1, FLAG_TRACED);
+        let mut framed = short.to_vec();
+        framed.push(RESP_PONG);
+        let mut r = &framed[..];
+        assert!(matches!(
+            read_response(&mut r),
+            Err(WireError::Malformed(_))
+        ));
+        // An untraced frame never grows an annex.
+        let mut plain = Vec::new();
+        write_response(&mut plain, 2, &Response::Pong).unwrap();
+        let mut r = &plain[..];
+        assert_eq!(
+            read_response_timed(&mut r).unwrap(),
+            Some((2, Response::Pong, None))
+        );
     }
 
     #[test]

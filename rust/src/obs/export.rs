@@ -1,0 +1,264 @@
+//! Scrapeable telemetry export: a generic metrics blob, Prometheus
+//! text exposition, and a minimal HTTP endpoint serving it.
+//!
+//! [`MetricsBlob`] is the wire- and merge-friendly form of a metrics
+//! snapshot: named counters plus named [`HistogramSnapshot`]s. Because
+//! histograms merge exactly (bucket-wise addition), a coordinator can
+//! fan `GetMetrics` out to its shard workers and fold every response
+//! into one cluster-wide blob whose percentiles are as accurate as any
+//! single node's.
+//!
+//! [`MetricsHttpServer`] binds a plain HTTP/1.0 listener (TCP or UDS)
+//! and answers `GET /metrics` with [`MetricsBlob::to_prometheus_text`]
+//! — enough for Prometheus, curl, or the CI smoke test, with no HTTP
+//! dependency.
+
+use crate::net::{Addr, Listener, Stream};
+use crate::obs::hist::HistogramSnapshot;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A named-counters + named-histograms snapshot, mergeable across
+/// nodes and encodable on the wire.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsBlob {
+    /// Monotonic counters and point-in-time gauges, by name.
+    pub counters: Vec<(String, u64)>,
+    /// Latency/size distributions, by name.
+    pub hists: Vec<(String, HistogramSnapshot)>,
+}
+
+impl MetricsBlob {
+    /// The counter named `name`, or 0 when absent.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    /// The histogram named `name`, if present.
+    pub fn hist(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Fold `other` into `self`: counters with the same name add,
+    /// histograms with the same name merge exactly, unseen names
+    /// append. Merging a worker's blob into the coordinator's yields
+    /// cluster-wide totals and distributions.
+    pub fn merge(&mut self, other: &MetricsBlob) {
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        for (name, h) in &other.hists {
+            match self.hists.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => mine.merge(h),
+                None => self.hists.push((name.clone(), h.clone())),
+            }
+        }
+    }
+
+    /// Render in the Prometheus text exposition format. Counters
+    /// become `zest_<name>` counter samples; histograms become
+    /// summaries with p50/p99/p999 quantile samples plus `_sum` and
+    /// `_count` (sums of nanosecond values are emitted as recorded).
+    pub fn to_prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let full = format!("zest_{name}");
+            out.push_str(&format!("# TYPE {full} counter\n{full} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            let full = format!("zest_{name}");
+            out.push_str(&format!("# TYPE {full} summary\n"));
+            for (q, label) in [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")] {
+                out.push_str(&format!(
+                    "{full}{{quantile=\"{label}\"}} {}\n",
+                    h.quantile(q)
+                ));
+            }
+            out.push_str(&format!("{full}_sum {}\n", h.sum));
+            out.push_str(&format!("{full}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+/// A background thread serving `GET /metrics` (Prometheus text) on a
+/// [`crate::net::Addr`]. Dropping the server (or calling
+/// [`MetricsHttpServer::shutdown`]) stops the thread.
+pub struct MetricsHttpServer {
+    addr: Addr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttpServer {
+    /// Bind `addr` and serve `source()` as Prometheus text on every
+    /// `GET /metrics` (or `GET /`). `tcp://host:0` resolves to an
+    /// ephemeral port readable from [`MetricsHttpServer::addr`].
+    pub fn serve(
+        addr: &Addr,
+        source: Arc<dyn Fn() -> MetricsBlob + Send + Sync>,
+    ) -> std::io::Result<MetricsHttpServer> {
+        let listener = Listener::bind(addr)?;
+        let bound = listener.bound_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("zest-metrics-http".into())
+            .spawn(move || {
+                while !flag.load(Ordering::Acquire) {
+                    let mut stream = match listener.accept() {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if flag.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                    let _ = serve_one(&mut stream, &*source);
+                }
+            })?;
+        Ok(MetricsHttpServer {
+            addr: bound,
+            stop,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (with `:0` resolved).
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn shutdown(&mut self) {
+        if let Some(thread) = self.thread.take() {
+            self.stop.store(true, Ordering::Release);
+            // Unblock the accept call with a throwaway connection.
+            let _ = Stream::connect(&self.addr);
+            let _ = thread.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one HTTP request head and answer it. Tolerates pipelined-free
+/// HTTP/1.0 clients only (curl, Prometheus scrapers): read until the
+/// blank line, answer, close.
+fn serve_one(
+    stream: &mut Stream,
+    source: &(dyn Fn() -> MetricsBlob + Send + Sync),
+) -> std::io::Result<()> {
+    let mut head = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") && head.len() < 8192 {
+        match stream.read(&mut byte) {
+            Ok(0) => break,
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(e),
+        }
+    }
+    let request_line = std::str::from_utf8(&head)
+        .unwrap_or("")
+        .lines()
+        .next()
+        .unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, body) = if method == "GET" && (path == "/metrics" || path == "/") {
+        ("200 OK", source().to_prometheus_text())
+    } else {
+        ("404 Not Found", String::from("not found\n"))
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Histogram;
+
+    fn blob_with(counter: u64, samples: &[u64]) -> MetricsBlob {
+        let h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        MetricsBlob {
+            counters: vec![("completed".into(), counter)],
+            hists: vec![("queue_ns".into(), h.snapshot())],
+        }
+    }
+
+    #[test]
+    fn merge_adds_counters_and_merges_hists() {
+        let mut a = blob_with(3, &[100, 200]);
+        let b = blob_with(4, &[300]);
+        a.merge(&b);
+        assert_eq!(a.counter("completed"), 7);
+        assert_eq!(a.hist("queue_ns").unwrap().count, 3);
+        // Unseen names append.
+        let extra = MetricsBlob {
+            counters: vec![("shed".into(), 2)],
+            hists: vec![],
+        };
+        a.merge(&extra);
+        assert_eq!(a.counter("shed"), 2);
+        assert_eq!(a.counter("missing"), 0);
+        assert!(a.hist("missing").is_none());
+    }
+
+    #[test]
+    fn prometheus_text_exposes_counters_and_summaries() {
+        let text = blob_with(5, &[1_000, 2_000, 4_000]).to_prometheus_text();
+        assert!(text.contains("# TYPE zest_completed counter"));
+        assert!(text.contains("zest_completed 5"));
+        assert!(text.contains("# TYPE zest_queue_ns summary"));
+        assert!(text.contains("zest_queue_ns{quantile=\"0.5\"}"));
+        assert!(text.contains("zest_queue_ns{quantile=\"0.999\"}"));
+        assert!(text.contains("zest_queue_ns_count 3"));
+    }
+
+    #[test]
+    fn http_endpoint_serves_metrics_and_404s_elsewhere() {
+        let source: Arc<dyn Fn() -> MetricsBlob + Send + Sync> =
+            Arc::new(|| blob_with(9, &[5_000]));
+        let mut server =
+            MetricsHttpServer::serve(&Addr::parse("tcp://127.0.0.1:0").unwrap(), source)
+                .expect("bind ephemeral metrics port");
+        let addr = server.addr().clone();
+
+        let fetch = |path: &str| {
+            let mut s = Stream::connect(&addr).unwrap();
+            s.write_all(format!("GET {path} HTTP/1.0\r\nHost: x\r\n\r\n").as_bytes())
+                .unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let ok = fetch("/metrics");
+        assert!(ok.starts_with("HTTP/1.0 200"), "got: {ok}");
+        assert!(ok.contains("zest_completed 9"));
+        assert!(fetch("/nope").starts_with("HTTP/1.0 404"));
+        server.shutdown();
+    }
+}

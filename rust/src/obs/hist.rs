@@ -1,0 +1,404 @@
+//! Lock-free log-linear latency histograms.
+//!
+//! [`Histogram`] is the recording side: a fixed array of atomic
+//! counters a hot path can feed with one `fetch_add`, no locks and no
+//! allocation — the replacement for the old bounded
+//! `Mutex<Vec<u64>>` reservoirs in [`crate::coordinator::ServiceMetrics`],
+//! which silently dropped every sample past the first 65,536 and froze
+//! percentiles on startup traffic.
+//!
+//! ## Bucket scheme
+//!
+//! Values (nanoseconds) are bucketed **log-linearly**: each power-of-2
+//! range `[2^h, 2^(h+1))` splits into `2^SUB_BITS = 32` equal linear
+//! sub-buckets, and values below 32 get one exact bucket each. A
+//! bucket's width is therefore at most `1/32` of its lower bound, so
+//! any quantile read from bucket upper bounds is within **+3.125%**
+//! relative error of the true sample — uniform across the full `u64`
+//! range, with no saturation and no bias toward early samples.
+//!
+//! Bucket counts are plain `AtomicU64`s, which makes histograms
+//! **mergeable by addition**: [`HistogramSnapshot::merge`] sums two
+//! snapshots bucket-by-bucket, exactly — the property
+//! `RemoteCluster::cluster_metrics` uses to combine per-worker
+//! latency distributions into one cluster-wide view.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-bucket resolution: each power-of-2 range splits into
+/// `2^SUB_BITS` linear sub-buckets (32 → ≤ 3.125% relative error).
+pub const SUB_BITS: u32 = 5;
+
+const SUB_COUNT: usize = 1 << SUB_BITS;
+const SUB_MASK: u64 = (SUB_COUNT as u64) - 1;
+
+/// Total bucket count: one exact bucket per value below `2^SUB_BITS`,
+/// then 32 sub-buckets per power-of-2 range up to `2^64`.
+pub const NUM_BUCKETS: usize = (64 - SUB_BITS as usize) * SUB_COUNT;
+
+/// Map a value to its bucket index (0-based, `< NUM_BUCKETS`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_COUNT as u64 {
+        return v as usize;
+    }
+    let h = 63 - v.leading_zeros(); // highest set bit; h >= SUB_BITS
+    let shift = h - SUB_BITS;
+    let base = ((h - SUB_BITS + 1) as usize) << SUB_BITS;
+    base + ((v >> shift) & SUB_MASK) as usize
+}
+
+/// Inclusive `[lower, upper]` value range of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    debug_assert!(i < NUM_BUCKETS);
+    if i < SUB_COUNT {
+        return (i as u64, i as u64);
+    }
+    let h = (i >> SUB_BITS) as u32 + SUB_BITS - 1;
+    let sub = (i as u64) & SUB_MASK;
+    let width = 1u64 << (h - SUB_BITS);
+    let lo = (SUB_COUNT as u64 + sub) << (h - SUB_BITS);
+    (lo, lo.saturating_add(width - 1))
+}
+
+/// A lock-free log-linear histogram of `u64` samples (nanoseconds by
+/// convention). Recording is one relaxed `fetch_add` per counter —
+/// cheap enough for the request hot path — and never saturates:
+/// every sample lands, no matter how many came before it.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram (allocates the full fixed bucket array:
+    /// `NUM_BUCKETS` × 8 bytes ≈ 15 KiB).
+    pub fn new() -> Histogram {
+        let buckets = (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record one duration as nanoseconds.
+    #[inline]
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// A point-in-time sparse copy of the counters (the mergeable /
+    /// wire-shippable form; quantiles are computed on it).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.push((i as u32, c));
+            }
+        }
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+
+    /// Convenience quantile straight off the live counters (snapshots
+    /// internally; prefer [`Histogram::snapshot`] when reading several).
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+/// A point-in-time, sparse, mergeable copy of a [`Histogram`]:
+/// `(bucket index, count)` pairs in ascending index order plus the
+/// count/sum/max scalars. This is the form that travels on the wire
+/// (`Response::Metrics`) and that [`merge`](HistogramSnapshot::merge)
+/// combines across workers.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Samples recorded.
+    pub count: u64,
+    /// Sum of all samples (mean = `sum / count`).
+    pub sum: u64,
+    /// Largest sample recorded.
+    pub max: u64,
+    /// Sparse `(bucket index, count)` pairs, ascending by index.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// The `q`-quantile (`0.0 ..= 1.0`) as the **upper bound** of the
+    /// bucket holding the target sample — at most `1/2^SUB_BITS`
+    /// (3.125%) above the true sample value, never below it. Returns 0
+    /// on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total: u64 = self.buckets.iter().map(|&(_, c)| c).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for &(i, c) in &self.buckets {
+            cum += c;
+            if cum >= target {
+                return bucket_bounds(i as usize).1;
+            }
+        }
+        bucket_bounds(self.buckets.last().map(|&(i, _)| i as usize).unwrap_or(0)).1
+    }
+
+    /// [`quantile`](HistogramSnapshot::quantile) as a [`Duration`]
+    /// (samples are nanoseconds by convention).
+    pub fn quantile_duration(&self, q: f64) -> Duration {
+        Duration::from_nanos(self.quantile(q))
+    }
+
+    /// Median.
+    pub fn p50(&self) -> Duration {
+        self.quantile_duration(0.50)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> Duration {
+        self.quantile_duration(0.99)
+    }
+
+    /// 99.9th percentile.
+    pub fn p999(&self) -> Duration {
+        self.quantile_duration(0.999)
+    }
+
+    /// Mean sample value (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Fold `other` into `self` by bucket-wise addition. Merging is
+    /// exact (no re-sampling error) and associative/commutative, so a
+    /// cluster-wide distribution can be assembled from per-worker
+    /// snapshots in any order.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+        let mut merged = Vec::with_capacity(self.buckets.len() + other.buckets.len());
+        let (mut a, mut b) = (self.buckets.iter().peekable(), other.buckets.iter().peekable());
+        loop {
+            match (a.peek(), b.peek()) {
+                (Some(&&(ia, ca)), Some(&&(ib, cb))) => {
+                    if ia == ib {
+                        merged.push((ia, ca + cb));
+                        a.next();
+                        b.next();
+                    } else if ia < ib {
+                        merged.push((ia, ca));
+                        a.next();
+                    } else {
+                        merged.push((ib, cb));
+                        b.next();
+                    }
+                }
+                (Some(&&x), None) => {
+                    merged.push(x);
+                    a.next();
+                }
+                (None, Some(&&x)) => {
+                    merged.push(x);
+                    b.next();
+                }
+                (None, None) => break,
+            }
+        }
+        self.buckets = merged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_bounds_cover_and_stay_tight() {
+        let mut probes: Vec<u64> = (0..200u64).collect();
+        for h in SUB_BITS..63 {
+            let p = 1u64 << h;
+            probes.extend_from_slice(&[p - 1, p, p + 1, p + (p >> 1), (p << 1) - 1]);
+        }
+        probes.push(u64::MAX);
+        let mut rng = Rng::seeded(7);
+        for _ in 0..10_000 {
+            probes.push(rng.next_u64());
+        }
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(i < NUM_BUCKETS, "index {i} out of range for {v}");
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "{v} outside bucket [{lo}, {hi}]");
+            if v >= SUB_COUNT as u64 {
+                // Relative width bound: the quantile error guarantee.
+                assert!(
+                    (hi - lo) as f64 <= lo as f64 / SUB_COUNT as f64,
+                    "bucket [{lo}, {hi}] wider than lo/{SUB_COUNT}"
+                );
+            } else {
+                assert_eq!(lo, hi, "linear region buckets are exact");
+            }
+        }
+        // Buckets tile the line: consecutive indices abut exactly.
+        for i in 0..NUM_BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(i);
+            let (lo_next, _) = bucket_bounds(i + 1);
+            assert_eq!(hi.wrapping_add(1), lo_next, "gap after bucket {i}");
+        }
+    }
+
+    /// Quantiles against an exact sorted-Vec oracle, on three sample
+    /// shapes: uniform, lognormal-ish (exp of a sum of uniforms), and
+    /// an adversarial pile-up exactly on bucket edges.
+    #[test]
+    fn quantiles_match_oracle_within_bucket_error() {
+        let mut rng = Rng::seeded(42);
+        let uniform: Vec<u64> = (0..100_000)
+            .map(|_| rng.below(50_000_000) as u64)
+            .collect();
+        let lognormal: Vec<u64> = (0..100_000)
+            .map(|_| (1e4 * (0.8 * rng.normal()).exp()) as u64)
+            .collect();
+        let edges: Vec<u64> = (0..50_000)
+            .map(|_| {
+                let h = SUB_BITS + rng.below(20) as u32;
+                let p = 1u64 << h;
+                // Exactly on and around power-of-2 / sub-bucket edges.
+                match rng.below(4) {
+                    0 => p,
+                    1 => p - 1,
+                    2 => p + (p >> SUB_BITS),
+                    _ => p + (p >> SUB_BITS) - 1,
+                }
+            })
+            .collect();
+        for samples in [&uniform, &lognormal, &edges] {
+            let h = Histogram::new();
+            for &v in samples.iter() {
+                h.record(v);
+            }
+            let mut sorted = samples.to_vec();
+            sorted.sort_unstable();
+            let snap = h.snapshot();
+            assert_eq!(snap.count, samples.len() as u64);
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let exact = sorted[((q * sorted.len() as f64).ceil() as usize).max(1) - 1];
+                let got = snap.quantile(q);
+                assert!(got >= exact, "q{q}: {got} < exact {exact}");
+                let bound = exact + exact / (SUB_COUNT as u64 / 2) + 1;
+                assert!(got <= bound, "q{q}: {got} > bound {bound} (exact {exact})");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_exact() {
+        let mut rng = Rng::seeded(3);
+        let mk = |rng: &mut Rng, scale: usize| {
+            let h = Histogram::new();
+            for _ in 0..10_000 {
+                h.record(rng.below(scale) as u64);
+            }
+            h.snapshot()
+        };
+        let a = mk(&mut rng, 1_000);
+        let b = mk(&mut rng, 1_000_000);
+        let c = mk(&mut rng, 1_000_000_000);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+        assert_eq!(ab_c.count, 30_000);
+        assert_eq!(
+            ab_c.buckets.iter().map(|&(_, c)| c).sum::<u64>(),
+            30_000,
+            "no sample lost or duplicated by merging"
+        );
+        // Merging with an empty snapshot is the identity.
+        let mut with_empty = ab_c.clone();
+        with_empty.merge(&HistogramSnapshot::default());
+        assert_eq!(with_empty, ab_c);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 100_000;
+        let h = Arc::new(Histogram::new());
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_THREAD {
+                        h.record((t as u64 + 1) * 1_000 + (i % 997));
+                    }
+                })
+            })
+            .collect();
+        for j in handles {
+            j.join().unwrap();
+        }
+        let snap = h.snapshot();
+        let want = (THREADS as u64) * PER_THREAD;
+        assert_eq!(snap.count, want, "total count must be exact");
+        assert_eq!(
+            snap.buckets.iter().map(|&(_, c)| c).sum::<u64>(),
+            want,
+            "bucket counts must sum to the total"
+        );
+        assert!(snap.max >= 8_000 && snap.quantile(1.0) >= 8_000);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,24 @@
+//! Observability: lock-free histograms, per-request tracing, and
+//! scrapeable telemetry export.
+//!
+//! Three legs, layered bottom-up:
+//!
+//! - [`hist`] — atomic log-linear [`Histogram`]s with mergeable
+//!   [`HistogramSnapshot`]s: the storage behind every latency
+//!   percentile the serving stack reports.
+//! - [`trace`] — sampled per-request [`Trace`] spans (frontdoor →
+//!   queue → batch → per-worker RPC) collected in a bounded
+//!   [`TraceRing`] and dumpable as Chrome `trace_event` JSON.
+//! - [`export`] — the [`MetricsBlob`] name→value form that crosses the
+//!   wire (`GetMetrics`), merges across cluster nodes, and renders as
+//!   Prometheus text via [`MetricsHttpServer`].
+//!
+//! See `docs/OBSERVABILITY.md` for the operator-facing tour.
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{MetricsBlob, MetricsHttpServer};
+pub use hist::{Histogram, HistogramSnapshot};
+pub use trace::{CompletedTrace, SpanEvent, Trace, TraceRing, TraceSampler, COORD_TRACK};

@@ -1,0 +1,373 @@
+//! Per-request tracing: sampled spans, a bounded completed-trace ring,
+//! and Chrome `trace_event` JSON export.
+//!
+//! A [`Trace`] is a cheap clonable handle (an `Arc`) attached to a
+//! sampled `EstimateSpec` at the front door and carried through the
+//! queue, the batcher, the backend and — for cluster backends — each
+//! per-worker scatter RPC. Every stage appends a [`SpanEvent`] with
+//! monotonic timestamps relative to the trace's origin:
+//!
+//! ```text
+//! track 0 (coordinator): frontdoor ─ queue ─ batch
+//! track 1+s (shard s):              rpc [worker_handle_ns/worker_exec_ns]
+//! ```
+//!
+//! Completed traces land in the service's bounded [`TraceRing`], which
+//! dumps as a Chrome `trace_event` JSON array
+//! ([`TraceRing::to_chrome_json`]) loadable in `chrome://tracing` /
+//! Perfetto: one "process" per trace (pid = trace id), one "thread"
+//! per track (tid 0 = coordinator, tid 1+s = shard s).
+//!
+//! Sampling ([`TraceSampler`]) is deterministic every-Nth rather than
+//! random so overhead is predictable and tests are reproducible; rate
+//! `0.0` disables tracing entirely and costs one relaxed atomic
+//! increment per request.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Track id of coordinator-side spans (Chrome `tid` 0); shard `s`
+/// records on track `1 + s`.
+pub const COORD_TRACK: u64 = 0;
+
+/// One recorded span: a named interval on a track, with optional
+/// string arguments (shown in the Chrome trace viewer's detail pane).
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Stage name (`frontdoor`, `queue`, `batch`, `rpc`, ...).
+    pub name: String,
+    /// Start offset from the trace origin, nanoseconds.
+    pub start_ns: u64,
+    /// Span duration, nanoseconds.
+    pub dur_ns: u64,
+    /// Track: [`COORD_TRACK`] or `1 + shard` for per-worker spans.
+    pub track: u64,
+    /// Extra key/value detail (admit outcome, worker-side timings...).
+    pub args: Vec<(String, String)>,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    id: u64,
+    origin: Instant,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+/// A live per-request trace handle. Clones share one event list; the
+/// handle crosses threads with the request (queue → batcher → worker →
+/// cluster scatter). Only sampled requests carry one, so the interior
+/// mutex is off the common path entirely.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    inner: Arc<TraceInner>,
+}
+
+impl Trace {
+    /// Start a trace now; `id` becomes the Chrome `pid`.
+    pub fn start(id: u64) -> Trace {
+        Trace {
+            inner: Arc::new(TraceInner {
+                id,
+                origin: Instant::now(),
+                events: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// The trace id.
+    pub fn id(&self) -> u64 {
+        self.inner.id
+    }
+
+    /// The monotonic instant all span offsets are relative to.
+    pub fn origin(&self) -> Instant {
+        self.inner.origin
+    }
+
+    /// Nanoseconds elapsed since the origin.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.inner.origin.elapsed().as_nanos() as u64
+    }
+
+    /// Append a fully specified span.
+    pub fn add(&self, ev: SpanEvent) {
+        self.inner.events.lock().unwrap().push(ev);
+    }
+
+    /// Append a span that started at `start` (an instant at or after
+    /// the origin) and lasted `dur`, on `track`, with `args`.
+    pub fn span_at(
+        &self,
+        name: &str,
+        start: Instant,
+        dur: Duration,
+        track: u64,
+        args: Vec<(String, String)>,
+    ) {
+        let start_ns = start
+            .checked_duration_since(self.inner.origin)
+            .unwrap_or(Duration::ZERO)
+            .as_nanos() as u64;
+        self.add(SpanEvent {
+            name: name.to_string(),
+            start_ns,
+            dur_ns: dur.as_nanos() as u64,
+            track,
+            args,
+        });
+    }
+
+    /// Append a coordinator-track span running from `start` to now.
+    pub fn span_since(&self, name: &str, start: Instant) {
+        self.span_at(name, start, start.elapsed(), COORD_TRACK, Vec::new());
+    }
+
+    /// A copy of the events recorded so far.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.inner.events.lock().unwrap().clone()
+    }
+
+    /// Seal the trace into its completed, ring-storable form. Events
+    /// are sorted by start offset so dumps read chronologically even
+    /// when worker spans raced in out of order.
+    pub fn finish(&self) -> CompletedTrace {
+        let mut events = self.events();
+        events.sort_by_key(|e| (e.start_ns, e.track));
+        CompletedTrace {
+            id: self.inner.id,
+            wall_ns: self.elapsed_ns(),
+            events,
+        }
+    }
+}
+
+/// A finished trace: id, end-to-end wall time, and its spans in start
+/// order.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    /// Trace id (Chrome `pid`).
+    pub id: u64,
+    /// Origin-to-finish wall time, nanoseconds.
+    pub wall_ns: u64,
+    /// Spans in ascending start order.
+    pub events: Vec<SpanEvent>,
+}
+
+impl CompletedTrace {
+    /// The total duration recorded under spans named `name`.
+    pub fn stage_ns(&self, name: &str) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.dur_ns)
+            .sum()
+    }
+}
+
+/// Bounded ring of completed traces: pushes past the capacity evict
+/// the oldest, so the ring always holds the most recent window.
+pub struct TraceRing {
+    cap: usize,
+    ring: Mutex<VecDeque<CompletedTrace>>,
+}
+
+impl TraceRing {
+    /// A ring holding at most `cap` completed traces (`cap == 0`
+    /// accepts nothing).
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing {
+            cap,
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Store one completed trace, evicting the oldest when full.
+    pub fn push(&self, t: CompletedTrace) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut g = self.ring.lock().unwrap();
+        if g.len() == self.cap {
+            g.pop_front();
+        }
+        g.push_back(t);
+    }
+
+    /// Completed traces currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Whether the ring holds no traces.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A copy of the held traces, oldest first.
+    pub fn completed(&self) -> Vec<CompletedTrace> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Dump every held trace as a Chrome `trace_event` JSON array of
+    /// complete (`"ph": "X"`) events — loadable directly in
+    /// `chrome://tracing` or Perfetto. `ts`/`dur` are microseconds
+    /// (fractional, preserving nanosecond resolution); `pid` is the
+    /// trace id and `tid` the track.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events = Vec::new();
+        for t in self.ring.lock().unwrap().iter() {
+            for e in &t.events {
+                let mut obj = vec![
+                    ("name", Json::str(&e.name)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.start_ns as f64 / 1e3)),
+                    ("dur", Json::num(e.dur_ns as f64 / 1e3)),
+                    ("pid", Json::num(t.id as f64)),
+                    ("tid", Json::num(e.track as f64)),
+                ];
+                if !e.args.is_empty() {
+                    obj.push((
+                        "args",
+                        Json::obj(
+                            e.args
+                                .iter()
+                                .map(|(k, v)| (k.as_str(), Json::str(v)))
+                                .collect(),
+                        ),
+                    ));
+                }
+                events.push(Json::obj(obj));
+            }
+        }
+        Json::Arr(events).to_string()
+    }
+}
+
+/// Deterministic every-Nth request sampler handing out fresh traces.
+pub struct TraceSampler {
+    /// Sample every `period`-th request; 0 = tracing off.
+    period: u64,
+    tick: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl TraceSampler {
+    /// A sampler firing on roughly `rate` of requests (`1.0` = every
+    /// request, `0.01` = every 100th, `<= 0.0` = never). The rate is
+    /// rounded to the nearest every-Nth period.
+    pub fn new(rate: f64) -> TraceSampler {
+        let period = if rate <= 0.0 {
+            0
+        } else {
+            (1.0 / rate.min(1.0)).round().max(1.0) as u64
+        };
+        TraceSampler {
+            period,
+            tick: AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether any request can ever be sampled.
+    pub fn enabled(&self) -> bool {
+        self.period > 0
+    }
+
+    /// Hand out a fresh [`Trace`] if this request is sampled. One
+    /// relaxed atomic increment when tracing is on; a plain load when
+    /// off.
+    pub fn sample(&self) -> Option<Trace> {
+        if self.period == 0 {
+            return None;
+        }
+        if self.tick.fetch_add(1, Ordering::Relaxed) % self.period != 0 {
+            return None;
+        }
+        Some(Trace::start(self.next_id.fetch_add(1, Ordering::Relaxed) + 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_accumulate_and_finish_sorted() {
+        let t = Trace::start(9);
+        let origin = t.origin();
+        t.span_at(
+            "rpc",
+            origin + Duration::from_micros(50),
+            Duration::from_micros(20),
+            2,
+            vec![("shard".into(), "1".into())],
+        );
+        t.span_at("queue", origin, Duration::from_micros(40), COORD_TRACK, vec![]);
+        let done = t.finish();
+        assert_eq!(done.id, 9);
+        assert_eq!(done.events.len(), 2);
+        assert_eq!(done.events[0].name, "queue", "sorted by start offset");
+        assert_eq!(done.events[1].track, 2);
+        assert_eq!(done.stage_ns("rpc"), 20_000);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_evicts_oldest() {
+        let ring = TraceRing::new(2);
+        for id in 1..=3 {
+            ring.push(Trace::start(id).finish());
+        }
+        let held = ring.completed();
+        assert_eq!(held.len(), 2);
+        assert_eq!(held[0].id, 2);
+        assert_eq!(held[1].id, 3);
+        assert!(TraceRing::new(0).is_empty());
+    }
+
+    #[test]
+    fn chrome_dump_is_valid_json_with_complete_events() {
+        let ring = TraceRing::new(8);
+        let t = Trace::start(1);
+        t.span_at(
+            "batch",
+            t.origin(),
+            Duration::from_micros(5),
+            COORD_TRACK,
+            vec![("group".into(), "k=5,l=5".into())],
+        );
+        ring.push(t.finish());
+        let dump = ring.to_chrome_json();
+        let parsed = Json::parse(&dump).expect("chrome dump must be valid JSON");
+        let events = parsed.as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("name").unwrap().as_str(), Some("batch"));
+        assert_eq!(e.get("dur").unwrap().as_f64(), Some(5.0));
+        assert_eq!(e.get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            e.get("args").unwrap().get("group").unwrap().as_str(),
+            Some("k=5,l=5")
+        );
+    }
+
+    #[test]
+    fn sampler_rates_fire_every_nth() {
+        let off = TraceSampler::new(0.0);
+        assert!(!off.enabled());
+        assert!((0..100).all(|_| off.sample().is_none()));
+        let all = TraceSampler::new(1.0);
+        assert!((0..100).all(|_| all.sample().is_some()));
+        let one_pct = TraceSampler::new(0.01);
+        let fired = (0..1000).filter(|_| one_pct.sample().is_some()).count();
+        assert_eq!(fired, 10, "1% sampling fires exactly every 100th");
+        // Ids are distinct and start at 1.
+        let s = TraceSampler::new(1.0);
+        let a = s.sample().unwrap();
+        let b = s.sample().unwrap();
+        assert_eq!((a.id(), b.id()), (1, 2));
+    }
+}

@@ -1,6 +1,8 @@
 //! Tiny leveled logger backing the `log` crate facade (substitute for
-//! `env_logger`). Level comes from `ZEST_LOG` (error|warn|info|debug|trace),
-//! default `info`. Output goes to stderr with elapsed-time stamps.
+//! `env_logger`). Level comes from `ZEST_LOG` (error|warn|info|debug|trace,
+//! matched case-insensitively), default `info`; an unrecognized value
+//! warns once on stderr and falls back to `info`. Output goes to stderr
+//! with elapsed-time stamps.
 
 use log::{Level, LevelFilter, Metadata, Record};
 use std::time::Instant;
@@ -32,16 +34,32 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse a `ZEST_LOG` level name, case-insensitively. `None` means
+/// the value is not a recognized level.
+pub(crate) fn parse_level(value: &str) -> Option<LevelFilter> {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 /// Install the logger once; safe to call repeatedly.
 pub fn init() {
     static INIT: std::sync::Once = std::sync::Once::new();
     INIT.call_once(|| {
-        let level = match std::env::var("ZEST_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        let level = match std::env::var("ZEST_LOG") {
+            Ok(raw) => parse_level(&raw).unwrap_or_else(|| {
+                eprintln!(
+                    "[zest] unrecognized ZEST_LOG={raw:?} \
+                     (expected error|warn|info|debug|trace); defaulting to info"
+                );
+                LevelFilter::Info
+            }),
+            Err(_) => LevelFilter::Info,
         };
         let logger = Box::leak(Box::new(StderrLogger {
             start: Instant::now(),
@@ -53,10 +71,31 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use log::LevelFilter;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn levels_parse_case_insensitively() {
+        for (raw, want) in [
+            ("error", LevelFilter::Error),
+            ("ERROR", LevelFilter::Error),
+            ("Warn", LevelFilter::Warn),
+            ("INFO", LevelFilter::Info),
+            ("info", LevelFilter::Info),
+            ("DeBuG", LevelFilter::Debug),
+            ("trace", LevelFilter::Trace),
+            (" trace ", LevelFilter::Trace),
+        ] {
+            assert_eq!(super::parse_level(raw), Some(want), "raw={raw:?}");
+        }
+        for raw in ["", "verbose", "infoo", "3", "warn,debug"] {
+            assert_eq!(super::parse_level(raw), None, "raw={raw:?}");
+        }
     }
 }

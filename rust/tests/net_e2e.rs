@@ -21,6 +21,11 @@
 //!   exactly one backend group call (`coalesced == 63`, bit-identical
 //!   answers); epoch-keyed cache hits are bit-identical and an
 //!   `add_categories` publish invalidates them, for S ∈ {1, 2, 4}.
+//! * **Acceptance** (observability): a traced request through the full
+//!   cluster stack records frontdoor → queue → batch → per-worker RPC
+//!   spans with worker-side exec attributed per shard (wire-v5 timing
+//!   annex), dumps as Chrome trace JSON, and `GetMetrics` merges the
+//!   coordinator's and every worker's snapshots into one blob.
 //! * `PartitionClient` ↔ `ServiceHandler` mirrors the in-process
 //!   service (same answers, typed error mapping, net metrics).
 //! * Two-phase epoch publish across workers: all-or-nothing prepare,
@@ -69,17 +74,21 @@ fn store(n: usize, d: usize) -> EmbeddingStore {
     })
 }
 
-/// Start one in-process shard-worker server per 4-aligned block.
+/// Start one in-process shard-worker server per 4-aligned block. Each
+/// worker shares its metrics sink with its server, like the real
+/// `zest-shard-worker` binary, so `GetMetrics` scrapes see the wire
+/// counters.
 fn spawn_workers(s: &EmbeddingStore, count: usize, tag: &str) -> (Vec<Server>, Vec<Addr>) {
     let mut servers = Vec::new();
     let mut addrs = Vec::new();
     for (i, block) in aligned_split(s, count).into_iter().enumerate() {
         let addr = sock_addr(&format!("{tag}{i}"));
+        let metrics = Arc::new(ServiceMetrics::new());
         let server = Server::serve(
             &addr,
-            Arc::new(ShardWorker::new(block)),
+            Arc::new(ShardWorker::new(block).with_metrics(metrics.clone())),
             ServerConfig::default(),
-            Arc::new(ServiceMetrics::new()),
+            metrics,
         )
         .unwrap();
         addrs.push(server.local_addr().clone());
@@ -174,7 +183,7 @@ fn remote_mince_and_fmbe_match_in_process() {
 
         let mut rng = Rng::seeded(seed);
         let mince = cluster
-            .estimate_batch(EstimatorKind::Mince, k, l, Precision::BitExact, &qs, &mut rng)
+            .estimate_batch(EstimatorKind::Mince, k, l, Precision::BitExact, &qs, &mut rng, None)
             .unwrap();
         assert_eq!(mince.epoch, 0);
         for (qi, (got, want)) in mince.zs.iter().zip(&want_mince).enumerate() {
@@ -187,7 +196,7 @@ fn remote_mince_and_fmbe_match_in_process() {
 
         let mut rng = Rng::seeded(0); // FMBE draws nothing from it
         let fmbe = cluster
-            .estimate_batch(EstimatorKind::Fmbe, 0, 0, Precision::BitExact, &qs, &mut rng)
+            .estimate_batch(EstimatorKind::Fmbe, 0, 0, Precision::BitExact, &qs, &mut rng, None)
             .unwrap();
         for (qi, (got, want)) in fmbe.zs.iter().zip(&want_fmbe).enumerate() {
             if count == 1 {
@@ -213,6 +222,7 @@ fn remote_mince_and_fmbe_match_in_process() {
                 Precision::BitExact,
                 &qs,
                 &mut Rng::seeded(0),
+                None,
             )
             .unwrap();
         for (a, b) in again.zs.iter().zip(&fmbe.zs) {
@@ -852,6 +862,7 @@ fn pipelined_exact_matches_chain_within_ulp_bound() {
                 Precision::BitExact,
                 &qs,
                 &mut rng,
+                None,
             )
             .unwrap();
         let pipe = cluster
@@ -862,6 +873,7 @@ fn pipelined_exact_matches_chain_within_ulp_bound() {
                 Precision::Pipelined,
                 &qs,
                 &mut rng,
+                None,
             )
             .unwrap();
         for ((b, p), w) in bit.zs.iter().zip(&pipe.zs).zip(&want) {
@@ -1551,4 +1563,116 @@ fn request_id_mismatch_is_an_error_not_a_panic() {
     assert_eq!(shard.manifest().unwrap(), (40, 8, 0));
     drop(shard);
     rogue.join().unwrap();
+}
+
+/// ACCEPTANCE (observability): a traced request served by the full
+/// stack — `PartitionService` → `ClusterBackend` → two shard-worker
+/// servers — records the complete span tree (frontdoor → queue →
+/// batch → per-worker RPC, with worker-side exec attributed to each
+/// shard through the wire-v5 timing annex), dumps as valid Chrome
+/// trace-event JSON, and a `GetMetrics` scrape over the wire returns
+/// the merged coordinator+worker blob whose per-stage percentiles come
+/// from the new histograms.
+#[test]
+fn traced_cluster_request_spans_all_stages_with_per_worker_attribution() {
+    let s = store(600, 16);
+    let (workers, addrs) = spawn_workers(&s, 2, "traced");
+    let svc = Arc::new(PartitionService::start_with_backend(
+        ClusterBackend::connect(&addrs, ClientConfig::default()).unwrap(),
+        ServiceConfig {
+            workers: 1,
+            trace_sample_rate: 1.0,
+            ..Default::default()
+        },
+    ));
+
+    // One traced request through the batcher and the remote exp-sum
+    // chain (Exact / BitExact: sequential, one RPC per shard).
+    let r = svc.estimate(EstimateSpec::new(s.row(42).to_vec())).unwrap();
+    assert!(r.z.is_finite() && r.z > 0.0);
+
+    // The sealed trace: coordinator stages on track 0, one rpc+worker
+    // span pair per shard on tracks 1 and 2.
+    let traces = svc.traces().completed();
+    assert_eq!(traces.len(), 1, "rate-1.0 sampling must trace the request");
+    let t = &traces[0];
+    let names: Vec<&str> = t.events.iter().map(|e| e.name.as_str()).collect();
+    for stage in ["frontdoor", "queue", "batch", "rpc", "worker"] {
+        assert!(names.contains(&stage), "missing {stage} in {names:?}");
+    }
+    for shard in 0..2u64 {
+        let track = 1 + shard;
+        let rpc = t
+            .events
+            .iter()
+            .find(|e| e.name == "rpc" && e.track == track)
+            .unwrap_or_else(|| panic!("no rpc span on track {track}"));
+        assert!(
+            rpc.args.contains(&("shard".to_string(), shard.to_string())),
+            "rpc span must name its shard: {:?}",
+            rpc.args
+        );
+        let worker = t
+            .events
+            .iter()
+            .find(|e| e.name == "worker" && e.track == track)
+            .unwrap_or_else(|| panic!("no worker span on track {track}"));
+        // The worker-side exec window (annex handle-lag + exec) nests
+        // inside the client-observed rpc window: the server did its
+        // work between this client's send and receive, and the
+        // in-process workers share the test's monotonic clock.
+        assert!(worker.start_ns >= rpc.start_ns);
+        assert!(
+            worker.start_ns + worker.dur_ns <= rpc.start_ns + rpc.dur_ns,
+            "worker window [{}, +{}] outside rpc window [{}, +{}]",
+            worker.start_ns,
+            worker.dur_ns,
+            rpc.start_ns,
+            rpc.dur_ns
+        );
+    }
+    assert!(t.wall_ns >= t.stage_ns("batch"));
+
+    // The ring dumps as valid Chrome trace-event JSON.
+    let dump = svc.traces().to_chrome_json();
+    assert!(zest::util::json::Json::parse(&dump).is_ok(), "{dump}");
+
+    // The trace fed the per-stage histograms.
+    let m = svc.metrics();
+    let stages: Vec<&str> = m.stage_stats.iter().map(|st| st.stage.as_str()).collect();
+    for want in ["frontdoor", "rpc", "worker_exec"] {
+        assert!(stages.contains(&want), "missing stage {want} in {stages:?}");
+    }
+
+    // GetMetrics over the wire: the scrape merges the coordinator's
+    // blob with both workers' own snapshots.
+    let addr = sock_addr("traced-front");
+    let front = Server::serve(
+        &addr,
+        Arc::new(ServiceHandler::new(svc.clone())),
+        ServerConfig::default(),
+        svc.metrics_handle(),
+    )
+    .unwrap();
+    let client =
+        PartitionClient::connect(front.local_addr().clone(), ClientConfig::default()).unwrap();
+    let blob = client.get_metrics().unwrap();
+    assert!(blob.counter("completed") >= 1);
+    let rpc_hist = blob.hist("rpc_ns").expect("rpc_ns histogram in the blob");
+    assert_eq!(rpc_hist.count, 2, "one rpc sample per shard");
+    assert!(rpc_hist.quantile(0.5) > 0 && rpc_hist.quantile(0.99) >= rpc_hist.quantile(0.5));
+    assert_eq!(blob.hist("worker_exec_ns").unwrap().count, 2);
+    // net_handle_ns samples only come from wire servers — seeing them
+    // in the scrape proves the workers' blobs were merged in.
+    assert!(
+        blob.hist("net_handle_ns").unwrap().count >= 2,
+        "worker handler timings must merge into the scrape"
+    );
+
+    drop(client);
+    front.shutdown();
+    drop(svc); // releases the backend → worker pools
+    for w in workers {
+        w.shutdown();
+    }
 }

@@ -292,8 +292,24 @@ fn prop_wire_codec_roundtrips() {
         }
     }
 
+    fn random_blob(rng: &mut Rng) -> zest::obs::MetricsBlob {
+        let counters = (0..rng.below(4))
+            .map(|i| (format!("counter_{i}"), rng.next_u64() >> 16))
+            .collect();
+        let hists = (0..rng.below(3))
+            .map(|i| {
+                let h = zest::obs::Histogram::new();
+                for _ in 0..rng.below(40) {
+                    h.record(rng.next_u64() >> 40);
+                }
+                (format!("hist_{i}_ns"), h.snapshot())
+            })
+            .collect();
+        zest::obs::MetricsBlob { counters, hists }
+    }
+
     check(200, |rng| {
-        let req = match rng.below(14) {
+        let req = match rng.below(15) {
             0 => Request::Ping,
             1 => Request::Manifest,
             2 => Request::Estimate {
@@ -347,6 +363,7 @@ fn prop_wire_codec_roundtrips() {
             12 => Request::ExpSumPart {
                 queries: random_queries(rng),
             },
+            13 => Request::GetMetrics,
             _ => Request::Abort {
                 token: rng.next_u64(),
             },
@@ -365,7 +382,7 @@ fn prop_wire_codec_roundtrips() {
             return Err(format!("request mangled: {req:?} → {got:?}"));
         }
 
-        let resp = match rng.below(11) {
+        let resp = match rng.below(12) {
             0 => Response::Pong,
             1 => Response::Manifest {
                 len: rng.next_u64() >> 20,
@@ -410,6 +427,7 @@ fn prop_wire_codec_roundtrips() {
                 epoch: rng.below(100) as u64,
                 lambdas: (0..rng.below(16)).map(|_| rng.normal() * 1e6).collect(),
             },
+            10 => Response::Metrics(random_blob(rng)),
             _ => Response::Error {
                 code: ErrorCode::from_u16((rng.below(12) + 1) as u16),
                 message: format!("case {} says λ̃ ≠ Z", rng.below(1000)),
@@ -427,6 +445,25 @@ fn prop_wire_codec_roundtrips() {
         }
         if got != resp {
             return Err(format!("response mangled: {resp:?} → {got:?}"));
+        }
+
+        // v5 traced frames: the same response with a WireTimes annex
+        // roundtrips both the message and the annex.
+        let times = wire::WireTimes {
+            handle_lag_ns: rng.next_u64() >> 20,
+            exec_ns: rng.next_u64() >> 20,
+        };
+        let mut framed = Vec::new();
+        wire::write_response_timed(&mut framed, resp_id, &resp, times)
+            .map_err(|e| format!("write_response_timed: {e}"))?;
+        let (got_id, got, got_times) = wire::read_response_timed(&mut &framed[..])
+            .map_err(|e| format!("read_response_timed: {e}"))?
+            .ok_or("unexpected EOF on traced frame")?;
+        if got_id != resp_id || got != resp {
+            return Err("traced response mangled".to_string());
+        }
+        if got_times != Some(times) {
+            return Err(format!("times annex mangled: {times:?} → {got_times:?}"));
         }
         Ok(())
     });
