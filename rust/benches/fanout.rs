@@ -46,6 +46,16 @@
 //! workload at `trace_sample_rate` 0 / 0.01 / 1.0 — the off path must
 //! cost nothing (no allocation, one sampler branch), and the ratios
 //! are recorded for trend tracking rather than hard-asserted.
+//!
+//! A fifth **failover** section (§failover) measures the replica-set
+//! layer, writing `BENCH_failover.json`: scatter-read p50/p99 with all
+//! replicas healthy vs with one replica of each shard killed mid-run
+//! (failover absorbing the dead picks), and the time-to-heal of the
+//! `refresh()` that replays the missed publish once the replicas
+//! return.
+//!
+//! `ZEST_FANOUT_SECTION=<fanout|reactor|frontdoor|obs|failover>` runs
+//! one section alone (CI's net-smoke job extracts §failover this way).
 
 mod bench_common;
 
@@ -93,11 +103,36 @@ impl Handler for SlowPublish {
 
 fn main() {
     let env = bench_common::env();
+    // `ZEST_FANOUT_SECTION=failover` (or fanout/reactor/frontdoor/obs)
+    // runs one section alone — CI's net-smoke job uses it to produce
+    // `BENCH_failover.json` without paying for the full sweep.
+    let only = std::env::var("ZEST_FANOUT_SECTION").ok();
+    let run = |name: &str| only.as_deref().map_or(true, |o| o == name);
     let store = generate(&SynthConfig {
         n: 64,
         d: 8,
         ..SynthConfig::tiny()
     });
+    if run("fanout") {
+        fanout_section(&env, &store);
+    }
+    if run("reactor") {
+        reactor_section(&env, &store);
+    }
+    if run("frontdoor") {
+        frontdoor_section(&env);
+    }
+    if run("obs") {
+        obs_section(&env);
+    }
+    if run("failover") {
+        failover_section(&env, &store);
+    }
+}
+
+/// The original publish fan-out comparison (sequential vs parallel
+/// publish, chained vs pipelined `Exact`). Writes `BENCH_fanout.json`.
+fn fanout_section(env: &bench_common::BenchEnv, store: &zest::data::embeddings::EmbeddingStore) {
     println!(
         "== fanout (delay={}ms/op, {REPS} publishes per point) ==",
         DELAY.as_millis()
@@ -222,11 +257,7 @@ fn main() {
     ]);
     std::fs::write("BENCH_fanout.json", json.to_string()).ok();
     println!("(json: BENCH_fanout.json)");
-    bench_common::write_json(&env, "fanout", &json);
-
-    reactor_section(&env, &store);
-    frontdoor_section(&env);
-    obs_section(&env);
+    bench_common::write_json(env, "fanout", &json);
 }
 
 /// Wire-v3 connection-scale benchmarks: the reactor pool under many
@@ -626,4 +657,144 @@ fn obs_section(env: &bench_common::BenchEnv) {
     std::fs::write("BENCH_obs.json", json.to_string()).ok();
     println!("(json: BENCH_obs.json)");
     bench_common::write_json(env, "obs", &json);
+}
+
+/// Replica-failover cost (§failover): scatter-read p50/p99 with every
+/// replica healthy vs with one replica of **each** shard dead (the
+/// failed picks absorbed by transparent failover), plus the wall time
+/// of the `refresh()` that heals the dead replicas once they return.
+/// Writes `BENCH_failover.json`.
+fn failover_section(env: &bench_common::BenchEnv, store: &zest::data::embeddings::EmbeddingStore) {
+    use zest::testing::fault::{FaultMode, FaultProxy};
+
+    /// Shards × replicas in the measured cluster.
+    const SHARDS: usize = 2;
+    /// Scatter reads per phase (healthy / one-dead).
+    const READS: usize = 200;
+
+    let pctl = |lat: &mut Vec<Duration>, p: usize| -> f64 {
+        lat.sort();
+        lat[(lat.len() * p / 100).min(lat.len() - 1)].as_secs_f64()
+    };
+
+    println!("\n== failover: scatter reads, {SHARDS} shards × 2 replicas ({READS} reads/phase) ==");
+    // Replica 0 of each shard sits behind a fault proxy (so "kill" is
+    // sever + refuse, exactly the chaos-test action); replica 1 is
+    // direct.
+    let mut servers = Vec::new();
+    let mut proxies = Vec::new();
+    let mut groups: Vec<Vec<Addr>> = Vec::new();
+    for block in aligned_split(store, SHARDS) {
+        let mut group = Vec::new();
+        for r in 0..2 {
+            let server = Server::serve(
+                &Addr::Tcp("127.0.0.1:0".to_string()),
+                Arc::new(ShardWorker::new(block.clone())),
+                ServerConfig::default(),
+                Arc::new(ServiceMetrics::new()),
+            )
+            .expect("bind failover worker");
+            let addr = server.local_addr().clone();
+            servers.push(server);
+            if r == 0 {
+                let proxy = FaultProxy::start(&Addr::Tcp("127.0.0.1:0".to_string()), addr)
+                    .expect("start fault proxy");
+                group.push(proxy.addr().clone());
+                proxies.push(proxy);
+            } else {
+                group.push(addr);
+            }
+        }
+        groups.push(group);
+    }
+    let cluster = RemoteCluster::connect_groups(&groups, ClientConfig::default())
+        .expect("connect failover cluster");
+    let q = store.row(0).to_vec();
+
+    // Phase 1: every replica healthy.
+    let mut healthy: Vec<Duration> = Vec::with_capacity(READS);
+    for _ in 0..READS {
+        let t0 = Instant::now();
+        cluster.exp_sum(&q).expect("healthy read");
+        healthy.push(t0.elapsed());
+    }
+
+    // Phase 2: replica 0 of every shard dead. The first read(s) pay the
+    // failover discovery (p99); the rest route straight to the
+    // survivors (p50).
+    for proxy in &proxies {
+        proxy.set_mode(FaultMode::Refuse);
+        proxy.cut_all();
+    }
+    let mut one_dead: Vec<Duration> = Vec::with_capacity(READS);
+    for _ in 0..READS {
+        let t0 = Instant::now();
+        cluster.exp_sum(&q).expect("read with one replica dead");
+        one_dead.push(t0.elapsed());
+    }
+    let failovers = cluster.failovers();
+
+    // Lag the dead replicas by one publish, bring them back, and time
+    // the publish-log heal.
+    cluster.remove_categories(&[]).expect("publish while dead");
+    for proxy in &proxies {
+        proxy.restore();
+    }
+    let t0 = Instant::now();
+    cluster.refresh().expect("healing refresh");
+    let heal_s = t0.elapsed().as_secs_f64();
+    assert!(
+        cluster.replica_status().iter().all(|g| g.iter().all(|&h| h)),
+        "refresh did not restore full health"
+    );
+
+    let (h50, h99) = (pctl(&mut healthy, 50), pctl(&mut healthy, 99));
+    let (d50, d99) = (pctl(&mut one_dead, 50), pctl(&mut one_dead, 99));
+    let mut table = Table::new(&["phase", "p50 (µs)", "p99 (µs)"]);
+    table.row(vec![
+        "healthy".to_string(),
+        format!("{:.1}", h50 * 1e6),
+        format!("{:.1}", h99 * 1e6),
+    ]);
+    table.row(vec![
+        "one replica dead".to_string(),
+        format!("{:.1}", d50 * 1e6),
+        format!("{:.1}", d99 * 1e6),
+    ]);
+    table.print();
+    println!(
+        "failovers={failovers}; time-to-heal (refresh with 2 lagged replicas): {:.2} ms",
+        heal_s * 1e3
+    );
+
+    let json = Json::obj(vec![
+        ("shards", Json::num(SHARDS as f64)),
+        ("replicas", Json::num(2.0)),
+        ("reads_per_phase", Json::num(READS as f64)),
+        (
+            "healthy",
+            Json::obj(vec![
+                ("p50_s", Json::num(h50)),
+                ("p99_s", Json::num(h99)),
+            ]),
+        ),
+        (
+            "one_dead",
+            Json::obj(vec![
+                ("p50_s", Json::num(d50)),
+                ("p99_s", Json::num(d99)),
+            ]),
+        ),
+        ("failovers", Json::num(failovers as f64)),
+        ("heal_s", Json::num(heal_s)),
+    ]);
+    std::fs::write("BENCH_failover.json", json.to_string()).ok();
+    println!("(json: BENCH_failover.json)");
+    bench_common::write_json(env, "failover", &json);
+
+    drop(cluster);
+    drop(proxies);
+    for server in servers {
+        server.shutdown();
+    }
 }

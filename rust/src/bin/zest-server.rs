@@ -13,6 +13,10 @@
 //! # the same worker cluster (PartitionService over a ClusterBackend):
 //! zest-server --listen unix:///tmp/zest.sock \
 //!     --cluster unix:///tmp/shard0.sock,unix:///tmp/shard1.sock
+//! # replicated shards: `|` groups replicas of one shard; reads
+//! # load-balance across them and fail over transparently:
+//! zest-server --listen unix:///tmp/zest.sock \
+//!     --cluster unix:///tmp/s0a.sock|unix:///tmp/s0b.sock,unix:///tmp/s1a.sock|unix:///tmp/s1b.sock
 //! # with telemetry: trace 1% of requests, expose Prometheus text:
 //! zest-server --listen unix:///tmp/zest.sock --synth 100000,128,0 \
 //!     --trace-sample-rate 0.01 --metrics-listen tcp://127.0.0.1:9464
@@ -88,10 +92,6 @@ fn run(argv: Vec<String>) -> Result<()> {
     // feed the per-stage histograms `--metrics-listen` exposes.
     let trace_sample_rate: f64 = args.get_or("trace-sample-rate", 0.0);
 
-    let parse_addrs = |list: &str| -> Result<Vec<Addr>> {
-        list.split(',').map(|s| Addr::parse(s.trim())).collect()
-    };
-
     // What a `GET /metrics` scrape reports: the serving stack's own
     // sink, merged with the worker fan-out where one exists.
     let metrics_source: MetricsSource;
@@ -100,16 +100,19 @@ fn run(argv: Vec<String>) -> Result<()> {
         // Cross-process shards behind the full service: the dynamic
         // batcher, backpressure policy and ServiceMetrics in front of
         // the remote cluster (PartitionService over a ClusterBackend).
-        let worker_addrs = parse_addrs(args.get("cluster").unwrap())?;
-        let backend = ClusterBackend::connect(&worker_addrs, ClientConfig::default())
+        // `,` separates shards, `|` separates replicas of one shard
+        // (e.g. `w0a|w0b,w1a|w1b` — see net::parse_worker_groups).
+        let groups = zest::net::parse_worker_groups(args.get("cluster").unwrap())?;
+        let backend = ClusterBackend::connect_groups(&groups, ClientConfig::default())
             .map_err(|e| anyhow::anyhow!("connect cluster workers: {e}"))?;
         let cluster = backend.cluster().clone();
         log::info!(
-            "serving {} categories × {} dims from {} shard workers (epoch {}) \
+            "serving {} categories × {} dims from {} shards × {:?} replicas (epoch {}) \
              through the batching service",
             cluster.len(),
             cluster.dim(),
             cluster.num_shards(),
+            cluster.replica_status().iter().map(Vec::len).collect::<Vec<_>>(),
             cluster.epoch()
         );
         let svc = Arc::new(PartitionService::start_with_backend(
@@ -127,6 +130,9 @@ fn run(argv: Vec<String>) -> Result<()> {
                 ..Default::default()
             },
         ));
+        // Failovers tick the same per-shard table the batcher's scatter
+        // errors land in (`shard_stats[..].failovers`).
+        cluster.set_metrics(svc.metrics_handle());
         metrics = Some(svc.metrics_handle());
         let scrape = svc.clone();
         metrics_source = Arc::new(move || {
@@ -139,22 +145,25 @@ fn run(argv: Vec<String>) -> Result<()> {
         Arc::new(ServiceHandler::new(svc))
     } else if args.has("workers") {
         // Cross-process shards: scatter across worker processes
-        // (direct pass-through handler, no queue/batcher).
-        let worker_addrs = parse_addrs(args.get("workers").unwrap())?;
+        // (direct pass-through handler, no queue/batcher). Same
+        // replica-group grammar as `--cluster`.
+        let groups = zest::net::parse_worker_groups(args.get("workers").unwrap())?;
         let cluster = Arc::new(
-            RemoteCluster::connect(&worker_addrs, ClientConfig::default())
+            RemoteCluster::connect_groups(&groups, ClientConfig::default())
                 .map_err(|e| anyhow::anyhow!("connect workers: {e}"))?,
         );
         log::info!(
-            "serving {} categories × {} dims from {} shard workers (epoch {})",
+            "serving {} categories × {} dims from {} shards × {:?} replicas (epoch {})",
             cluster.len(),
             cluster.dim(),
             cluster.num_shards(),
+            cluster.replica_status().iter().map(Vec::len).collect::<Vec<_>>(),
             cluster.epoch()
         );
         // No service in front: scrapes merge the wire server's own
         // sink with the worker fan-out.
         let sink = Arc::new(ServiceMetrics::new());
+        cluster.set_metrics(sink.clone());
         metrics = Some(sink.clone());
         let scrape_cluster = cluster.clone();
         metrics_source = Arc::new(move || {

@@ -14,6 +14,13 @@
 //! row count a multiple of 4 (the last excepted) for bit-pinned `Exact`
 //! answers (see `zest::net::remote::aligned_split_lens`). Prints
 //! `READY <addr>` on stdout once listening.
+//!
+//! **Replicas**: a replica set is simply several workers started with
+//! the *same* `--range` (and data source), listed with `|` in the
+//! coordinator's `--cluster`/`--workers` grammar
+//! (`s0a|s0b,s1a|s1b`). Identical rows + the deterministic kernels
+//! make replica answers bit-identical at a given epoch, which is what
+//! lets `RemoteCluster` fail reads over transparently.
 
 use anyhow::{bail, Result};
 use std::io::Write as _;

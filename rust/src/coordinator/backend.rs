@@ -517,6 +517,19 @@ impl ClusterBackend {
         })
     }
 
+    /// Connect to every **replica group** (`groups[s]` holds shard
+    /// `s`'s replica addresses) and wrap the cluster as a backend.
+    /// Reads load-balance across each group's healthy replicas and fail
+    /// over transparently; see `RemoteCluster::connect_groups`.
+    pub fn connect_groups(
+        groups: &[Vec<Addr>],
+        cfg: ClientConfig,
+    ) -> Result<ClusterBackend, ClientError> {
+        Ok(ClusterBackend {
+            cluster: Arc::new(RemoteCluster::connect_groups(groups, cfg)?),
+        })
+    }
+
     /// Wrap an existing (possibly shared) cluster handle.
     pub fn new(cluster: Arc<RemoteCluster>) -> ClusterBackend {
         ClusterBackend { cluster }

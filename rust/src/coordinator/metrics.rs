@@ -99,6 +99,7 @@ struct ShardStatAcc {
     batches: u64,
     exec_ns: u64,
     errors: u64,
+    failovers: u64,
 }
 
 /// Point-in-time per-shard counters (sharded serving only). Counters
@@ -123,6 +124,11 @@ pub struct ShardStat {
     /// `ClientError::Shard` in `net::client`). Lets an operator spot
     /// the failing worker from a metrics snapshot alone.
     pub errors: u64,
+    /// Reads transparently re-routed to an alternate replica of this
+    /// shard this epoch (`net::RemoteCluster` replica failover). A
+    /// rising count with zero `errors` is the healthy-failover
+    /// signature: a replica is down but its peers absorb the traffic.
+    pub failovers: u64,
 }
 
 impl ServiceMetrics {
@@ -216,6 +222,18 @@ impl ServiceMetrics {
             g.1.resize(shard + 1, ShardStatAcc::default());
         }
         g.1[shard].errors += 1;
+    }
+
+    /// Attribute one replica failover (a read transparently re-routed
+    /// to an alternate replica) to shard `shard` of the **current**
+    /// epoch table, mirroring [`ServiceMetrics::on_shard_error`]'s
+    /// grow-as-needed semantics.
+    pub fn on_shard_failover(&self, shard: usize) {
+        let mut g = self.shards.lock().unwrap();
+        if g.1.len() <= shard {
+            g.1.resize(shard + 1, ShardStatAcc::default());
+        }
+        g.1[shard].failovers += 1;
     }
 
     /// One request answered synchronously from the result cache.
@@ -378,6 +396,7 @@ impl ServiceMetrics {
                     batches: a.batches,
                     exec_ns: a.exec_ns,
                     errors: a.errors,
+                    failovers: a.failovers,
                 })
                 .collect(),
             net: NetStats {
@@ -621,6 +640,9 @@ impl std::fmt::Display for MetricsSnapshot {
                 )?;
                 if s.errors > 0 {
                     write!(f, ",errors={}", s.errors)?;
+                }
+                if s.failovers > 0 {
+                    write!(f, ",failovers={}", s.failovers)?;
                 }
             }
             write!(f, "]")?;

@@ -56,6 +56,11 @@ pub enum ClientError {
     Protocol(String),
     /// The server hung up between request and response.
     ConnectionClosed,
+    /// The transport to the server died mid-stream (read error, timeout
+    /// with calls outstanding, codec failure on a response). Distinct
+    /// from [`ClientError::Protocol`] so failover layers can treat it
+    /// as transient: the *connection* failed, not the request.
+    ConnectionLost(String),
     /// A cluster fan-out failure attributed to one worker shard — the
     /// wrapper [`super::remote::RemoteCluster`] puts around per-worker
     /// errors so metrics (and operators) can name the failing shard.
@@ -85,6 +90,44 @@ impl ClientError {
             other => other,
         }
     }
+
+    /// Whether this failure says "the *connection or worker* failed",
+    /// not "the *request* is wrong" — the retryable-vs-fatal split the
+    /// replica failover in [`super::remote`] dispatches on. Transient:
+    /// transport/codec failures ([`ClientError::Wire`]), a hung-up or
+    /// mid-stream-dead connection ([`ClientError::ConnectionClosed`],
+    /// [`ClientError::ConnectionLost`]), and a `ConnLimit` rejection
+    /// (the server turned the connection away before reading anything).
+    /// Everything else — every other [`ClientError::Remote`] code
+    /// (`Busy`, `StalePrepare`, `BadRequest`, `DimMismatch`,
+    /// `Unsupported`, `DeadlineExceeded`, `Internal`) and
+    /// [`ClientError::Protocol`] — describes the request or the
+    /// server's answer and would fail identically on any replica, so a
+    /// blind retry is never safe. Failover re-submission itself is only
+    /// safe for idempotent reads; the publish path never routes through
+    /// it (`Commit` in particular is never blindly re-sent — see
+    /// [`resend_safe`] and the mux pipeline's provably-unsent rule).
+    pub fn is_transient(&self) -> bool {
+        match self {
+            ClientError::Wire(_)
+            | ClientError::ConnectionClosed
+            | ClientError::ConnectionLost(_) => true,
+            ClientError::Remote { code, .. } => *code == ErrorCode::ConnLimit,
+            ClientError::Protocol(_) => false,
+            ClientError::Shard { source, .. } => source.is_transient(),
+        }
+    }
+}
+
+/// Whether a failed roundtrip of `req` may be re-sent blindly on a
+/// fresh connection. `Commit` is the one wire request that is **never**
+/// resend-safe: the worker may have published the staged epoch before
+/// the response was lost, and a second `Commit` racing a later publish
+/// under the same token could double-execute. Everything else is either
+/// a pure read or idempotent worker-side (`Prepare*` restages under the
+/// same token, `Abort` is a token-checked no-op when nothing matches).
+pub fn resend_safe(req: &WireRequest) -> bool {
+    !matches!(req, WireRequest::Commit { .. })
 }
 
 impl std::fmt::Display for ClientError {
@@ -94,6 +137,7 @@ impl std::fmt::Display for ClientError {
             ClientError::Remote { code, message } => write!(f, "remote {code:?}: {message}"),
             ClientError::Protocol(m) => write!(f, "protocol: {m}"),
             ClientError::ConnectionClosed => write!(f, "connection closed mid-call"),
+            ClientError::ConnectionLost(m) => write!(f, "connection lost: {m}"),
             ClientError::Shard { shard, source } => write!(f, "worker {shard}: {source}"),
         }
     }
@@ -144,8 +188,7 @@ impl Pool {
     /// response was lost) are **never** re-sent: a failed roundtrip
     /// surfaces as an error instead of a silent double-send.
     pub fn call(&self, req: &WireRequest) -> Result<WireResponse> {
-        let resend_safe = !matches!(req, WireRequest::Commit { .. });
-        self.call_encoded(&req.encode(), resend_safe)
+        self.call_encoded(&req.encode(), resend_safe(req))
     }
 
     /// One request/response roundtrip from pre-encoded payload bytes

@@ -101,6 +101,27 @@ impl Addr {
     }
 }
 
+/// Parse a worker-cluster listing into replica groups: `,` separates
+/// shards, `|` separates the replicas of one shard. Each element obeys
+/// [`Addr::parse`]. `w0,w1` (two single-replica shards) and
+/// `w0a|w0b,w1a|w1b` (two shards × two replicas) are both valid — this
+/// is the grammar `zest-server --cluster` / `--workers` accepts.
+pub fn parse_worker_groups(list: &str) -> anyhow::Result<Vec<Vec<Addr>>> {
+    let mut groups = Vec::new();
+    for (s, group) in list.split(',').enumerate() {
+        let mut replicas = Vec::new();
+        for part in group.split('|') {
+            let part = part.trim();
+            if part.is_empty() {
+                anyhow::bail!("empty address in replica group {s} of {list:?}");
+            }
+            replicas.push(Addr::parse(part)?);
+        }
+        groups.push(replicas);
+    }
+    Ok(groups)
+}
+
 impl std::fmt::Display for Addr {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -300,5 +321,27 @@ mod tests {
             );
         }
         assert!(Addr::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn worker_groups_parse_shards_and_replicas() {
+        let flat = parse_worker_groups("h0:1,h1:2").unwrap();
+        assert_eq!(
+            flat,
+            vec![
+                vec![Addr::Tcp("h0:1".to_string())],
+                vec![Addr::Tcp("h1:2".to_string())]
+            ]
+        );
+        let replicated = parse_worker_groups("a:1|b:1, c:2 | d:2").unwrap();
+        assert_eq!(
+            replicated,
+            vec![
+                vec![Addr::Tcp("a:1".to_string()), Addr::Tcp("b:1".to_string())],
+                vec![Addr::Tcp("c:2".to_string()), Addr::Tcp("d:2".to_string())]
+            ]
+        );
+        assert!(parse_worker_groups("a:1|,b:2").is_err());
+        assert!(parse_worker_groups("a:1||b:1").is_err());
     }
 }

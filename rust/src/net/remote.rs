@@ -93,12 +93,35 @@
 //! manifests after each publish. `ARCHITECTURE.md` documents the full
 //! protocol, including the failure / [`RemoteCluster::resolve_token`]
 //! recovery states.
+//!
+//! ## Replica sets + failover
+//!
+//! Each logical shard is a [`ReplicaSet`] of R interchangeable workers
+//! serving identical rows. Because every answer is deterministic per
+//! (seed, epoch), replicas at the same epoch return the **same bytes**,
+//! so reads load-balance round-robin across healthy replicas and a
+//! failed sub-request — connect error, timeout, id-0 error frame,
+//! mid-stream EOF (any [`ClientError::is_transient`] failure) — retries
+//! transparently on an alternate replica instead of surfacing an error.
+//! Only idempotent reads ride the failover path; the publish phases
+//! address each replica directly (a `Commit` is never blindly re-sent).
+//!
+//! A publish commits to **all replicas of every shard** in lockstep. A
+//! replica that misses one or more publishes (dead socket, restart) is
+//! marked unhealthy and catches up through the coordinator-held
+//! **publish log**: [`RemoteCluster::refresh`] replays the missed
+//! `(prepare, commit)` pairs — any number of epochs deep, bounded by
+//! the log capacity — and re-marks the replica healthy once it answers
+//! at the lockstep epoch. Split-brain states are refused, never
+//! "healed": a replica *ahead* of every epoch this coordinator ever
+//! published, or replicas disagreeing on the row count at one epoch,
+//! fail `refresh()` with a typed error.
 
 use super::client::{remote_err, ClientConfig, ClientError, Result};
 use super::server::Handler;
 use super::wire::{self, Encoded, ErrorCode, Request as WireRequest, Response as WireResponse};
 use super::{Addr, Stream};
-use crate::coordinator::{EpochCache, Precision};
+use crate::coordinator::{EpochCache, Precision, ServiceMetrics};
 use crate::data::embeddings::EmbeddingStore;
 use crate::estimators::fmbe::{Fmbe, FmbeConfig};
 use crate::estimators::mince::{self, Solver};
@@ -107,8 +130,8 @@ use crate::mips::sharded::ShardedIndex;
 use crate::mips::{Hit, MipsIndex};
 use crate::obs::{MetricsBlob, Trace};
 use crate::util::rng::Rng;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -259,8 +282,12 @@ fn mux_reader(mut stream: Stream, shared: Arc<MuxShared>) {
                 continue;
             }
             Err(e) => {
+                // Typed as `ConnectionLost`, not `Protocol`: the
+                // transport died mid-stream, which is exactly the class
+                // of failure the replica failover treats as transient
+                // (`ClientError::is_transient`).
                 let reason = format!("connection to worker lost: {e}");
-                shared.fail_all(|| ClientError::Protocol(reason.clone()));
+                shared.fail_all(|| ClientError::ConnectionLost(reason.clone()));
                 return;
             }
         }
@@ -541,9 +568,9 @@ fn record_shard_spans(
 /// callers can overlap scatters across queries.
 struct ScoreScatter {
     /// Per non-empty worker bucket: worker index, expected score count,
-    /// the in-flight call, and the positions (in the original `ids`
-    /// order) its scores land in.
-    in_flight: Vec<(usize, usize, Pending, Vec<usize>)>,
+    /// the in-flight call (replica-failover aware), and the positions
+    /// (in the original `ids` order) its scores land in.
+    in_flight: Vec<(usize, usize, SetPending, Vec<usize>)>,
     /// Total ids scattered (output length).
     len: usize,
 }
@@ -731,21 +758,244 @@ fn unexpected(what: &str, resp: WireResponse) -> ClientError {
     }
 }
 
-/// [`MipsIndex`] over one remote shard worker. `len` is pinned at
+// ---------------------------------------------------------------------
+// Replica sets: R interchangeable workers per logical shard.
+
+/// One logical shard served by R interchangeable replica workers
+/// holding identical rows. Reads load-balance round-robin across the
+/// replicas currently marked healthy and fail over transparently on any
+/// [`ClientError::is_transient`] failure — only idempotent reads route
+/// through here (the publish phases address each replica directly).
+/// Health flags are advisory routing hints, not a membership protocol:
+/// a transient failure marks the replica unhealthy immediately, and
+/// [`RemoteCluster::refresh`] re-marks every replica that answers at
+/// the lockstep epoch (the reconnect half of failover).
+pub struct ReplicaSet {
+    /// Replica handles, in the order the cluster was configured with.
+    replicas: Vec<Arc<RemoteShard>>,
+    /// Shard position within the cluster (metrics attribution).
+    shard: usize,
+    /// Round-robin read cursor.
+    cursor: AtomicUsize,
+    /// Per-replica advisory health (indexes `replicas`).
+    health: Vec<AtomicBool>,
+    /// Reads transparently re-routed to an alternate replica.
+    failovers: AtomicU64,
+    /// Optional service sink failovers are mirrored into
+    /// (`ServiceMetrics::on_shard_failover`).
+    sink: RwLock<Option<Arc<ServiceMetrics>>>,
+}
+
+impl ReplicaSet {
+    fn new(shard: usize, replicas: Vec<Arc<RemoteShard>>) -> ReplicaSet {
+        let health = replicas.iter().map(|_| AtomicBool::new(true)).collect();
+        ReplicaSet {
+            replicas,
+            shard,
+            cursor: AtomicUsize::new(0),
+            health,
+            failovers: AtomicU64::new(0),
+            sink: RwLock::new(None),
+        }
+    }
+
+    /// Number of replicas configured for this shard.
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Per-replica advisory health flags, in replica order.
+    pub fn health(&self) -> Vec<bool> {
+        self.health
+            .iter()
+            .map(|h| h.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Total reads that failed over to an alternate replica.
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// The replica addresses joined `a|b|c` — the shard's display name
+    /// in logs and error messages.
+    pub fn name(&self) -> String {
+        self.replicas
+            .iter()
+            .map(|r| r.addr().to_string())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    fn mark(&self, replica: usize, healthy: bool) {
+        self.health[replica].store(healthy, Ordering::Relaxed);
+    }
+
+    /// Next replica for a fresh read: round-robin over the healthy
+    /// ones. With every replica marked unhealthy the flags are ignored
+    /// (plain round-robin) — routing everything into a guaranteed
+    /// failure would wedge the set, and the marks are only advisory.
+    fn pick(&self) -> usize {
+        let n = self.replicas.len();
+        let start = self.cursor.fetch_add(1, Ordering::Relaxed) % n;
+        for i in 0..n {
+            let idx = (start + i) % n;
+            if self.health[idx].load(Ordering::Relaxed) {
+                return idx;
+            }
+        }
+        start
+    }
+
+    /// The next failover target: an untried healthy replica first, then
+    /// any untried one (a stale unhealthy mark beats failing the read).
+    fn next_untried(&self, tried: &[bool]) -> Option<usize> {
+        let healthy = (0..self.replicas.len())
+            .find(|&i| !tried[i] && self.health[i].load(Ordering::Relaxed));
+        healthy.or_else(|| (0..self.replicas.len()).find(|&i| !tried[i]))
+    }
+
+    fn on_failover(&self) {
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = self.sink.read().unwrap().as_ref() {
+            sink.on_shard_failover(self.shard);
+        }
+    }
+
+    /// Issue an **idempotent read** on one replica with transparent
+    /// failover at join time — the replica-aware analogue of
+    /// [`RemoteShard::submit`]. Never used for publish traffic.
+    fn submit(self: &Arc<Self>, req: Encoded) -> SetPending {
+        self.submit_flagged(Arc::new(req), 0)
+    }
+
+    /// [`ReplicaSet::submit`] with [`wire::FLAG_TRACED`] set.
+    fn submit_traced(self: &Arc<Self>, req: Encoded) -> SetPending {
+        self.submit_flagged(Arc::new(req), wire::FLAG_TRACED)
+    }
+
+    fn submit_flagged(self: &Arc<Self>, req: Arc<Encoded>, flags: u8) -> SetPending {
+        let replica = self.pick();
+        let mut tried = vec![false; self.replicas.len()];
+        tried[replica] = true;
+        let pending = self.replicas[replica]
+            .slot
+            .submit_flagged(Arc::clone(&req), flags);
+        SetPending {
+            set: Arc::clone(self),
+            req,
+            flags,
+            tried,
+            replica,
+            pending,
+        }
+    }
+
+    /// Submit + join in one blocking call (with failover).
+    fn call(self: &Arc<Self>, req: Encoded) -> Result<WireResponse> {
+        self.submit(req).join()
+    }
+
+    /// Local top-k for every query across the replica set (local ids).
+    pub fn top_k_batch(self: &Arc<Self>, queries: &[Vec<f32>], k: usize) -> Result<Vec<Vec<Hit>>> {
+        match self.call(Encoded::top_k(k as u64, queries))? {
+            WireResponse::Hits(hits) => Ok(hits),
+            other => Err(unexpected("top_k", other)),
+        }
+    }
+
+    /// Continue a single-query chained exp-sum over this shard's rows.
+    fn exp_sum_chain(self: &Arc<Self>, acc: f64, query: &[f32]) -> Result<f64> {
+        match self.call(Encoded::exp_sum_chain(acc, query))? {
+            WireResponse::ExpSums(acc) if acc.len() == 1 => Ok(acc[0]),
+            other => Err(unexpected("exp_sum_chain", other)),
+        }
+    }
+
+    /// Continue a batched chained exp-sum (one accumulator per query).
+    fn exp_sum_chain_batch(self: &Arc<Self>, acc_in: Vec<f64>, queries: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let want = acc_in.len();
+        match self.call(Encoded::exp_sum_chain_batch(&acc_in, queries))? {
+            WireResponse::ExpSums(acc) if acc.len() == want => Ok(acc),
+            other => Err(unexpected("exp_sum_chain_batch", other)),
+        }
+    }
+}
+
+/// A not-yet-joined replica-set read: joins the in-flight call and, on
+/// any transient failure ([`ClientError::is_transient`]), marks the
+/// failed replica unhealthy, ticks the failover counter and re-submits
+/// on an alternate replica — each replica tried at most once. Safe
+/// **only because every request routed through a [`ReplicaSet`] is an
+/// idempotent read**: replicas at the same epoch answer with identical
+/// bytes, so a re-submission after an ambiguous mid-stream failure
+/// cannot change the result (unlike a `Commit`, which never routes
+/// through here).
+struct SetPending {
+    set: Arc<ReplicaSet>,
+    req: Arc<Encoded>,
+    flags: u8,
+    tried: Vec<bool>,
+    /// Replica the in-flight `pending` was submitted on.
+    replica: usize,
+    pending: Pending,
+}
+
+impl SetPending {
+    fn join(self) -> Result<WireResponse> {
+        self.join_timed().map(|(resp, _)| resp)
+    }
+
+    fn join_timed(self) -> Result<(WireResponse, Option<wire::WireTimes>)> {
+        let SetPending {
+            set,
+            req,
+            flags,
+            mut tried,
+            mut replica,
+            mut pending,
+        } = self;
+        loop {
+            let failed = match pending.join_timed() {
+                Ok(out) => return Ok(out),
+                Err(e) if e.is_transient() => e,
+                Err(e) => return Err(e),
+            };
+            set.mark(replica, false);
+            let Some(next) = set.next_untried(&tried) else {
+                // Replica set exhausted: surface the last failure.
+                return Err(failed);
+            };
+            set.on_failover();
+            log::warn!(
+                "shard {}: read failed transiently ({failed}); failing over to replica {}",
+                set.name(),
+                set.replicas[next].addr()
+            );
+            tried[next] = true;
+            replica = next;
+            pending = set.replicas[next].slot.submit_flagged(Arc::clone(&req), flags);
+        }
+    }
+}
+
+/// [`MipsIndex`] over one remote replica set. `len` is pinned at
 /// construction (cluster epoch) so the in-process scatter sees a stable
 /// layout; the cluster rebuilds these handles on every published epoch.
+/// `top_k_batch` load-balances across the set's healthy replicas and
+/// fails over transparently like every other cluster read.
 ///
 /// Wire failures inside the `MipsIndex` methods panic with context —
 /// the trait has no error channel — and are caught at the serving
 /// boundary (`net::Server` answers `Internal` instead of crashing).
 pub struct RemoteShardIndex {
-    shard: Arc<RemoteShard>,
+    shard: Arc<ReplicaSet>,
     len: usize,
 }
 
 impl RemoteShardIndex {
-    /// Wrap one worker handle as a `len`-row [`MipsIndex`].
-    pub fn new(shard: Arc<RemoteShard>, len: usize) -> RemoteShardIndex {
+    /// Wrap one shard's replica set as a `len`-row [`MipsIndex`].
+    pub fn new(shard: Arc<ReplicaSet>, len: usize) -> RemoteShardIndex {
         RemoteShardIndex { shard, len }
     }
 }
@@ -762,7 +1012,7 @@ impl MipsIndex for RemoteShardIndex {
             return vec![];
         }
         self.shard.top_k_batch(qs, k).unwrap_or_else(|e| {
-            panic!("remote shard {}: top_k failed: {e}", self.shard.addr())
+            panic!("remote shard {}: top_k failed: {e}", self.shard.name())
         })
     }
 
@@ -836,7 +1086,27 @@ pub struct ClusterAnswer {
     pub shard_lens: Vec<usize>,
 }
 
-/// S shard workers composed into one logical store.
+/// One publish this coordinator drove, recorded for replica catch-up:
+/// the staging token, the epoch the commit targeted, and every shard's
+/// phase-1 payload (shared, not cloned — replicas of one shard replay
+/// the same bytes). [`RemoteCluster::refresh`] replays missed
+/// `(prepare, commit)` pairs from these entries to heal a replica
+/// lagging any number of epochs still covered by the log.
+struct PublishLogEntry {
+    token: u64,
+    /// The epoch committing this entry publishes.
+    epoch: u64,
+    /// Per-shard phase-1 request (`PrepareAdd` / `PrepareRemove`).
+    prepares: Vec<Arc<Encoded>>,
+}
+
+/// Publishes the catch-up log retains. A replica lagging deeper than
+/// this cannot be healed in place (restart it with current data or
+/// re-drive the missed mutations); the bound keeps prepare payloads —
+/// which may carry whole row blocks — from accumulating forever.
+const PUBLISH_LOG_CAP: usize = 32;
+
+/// S replica sets composed into one logical store.
 ///
 /// Concurrency model: one `RemoteCluster` is the single coordinator of
 /// its workers (the cross-process analogue of one `SnapshotHandle`).
@@ -851,17 +1121,17 @@ pub struct ClusterAnswer {
 /// coordinator's publish is fenced only by the worker-side staging
 /// token (`Busy`).
 pub struct RemoteCluster {
-    shards: Vec<Arc<RemoteShard>>,
+    shards: Vec<Arc<ReplicaSet>>,
     dim: usize,
     state: RwLock<Arc<ClusterState>>,
     /// Serializes cluster-side mutations (global-id interpretation +
     /// two-phase publish are read-modify-write on the layout).
     publish_lock: Mutex<()>,
-    /// The last publish whose commit phase did not land on every worker:
-    /// `(token, target epoch)`. [`RemoteCluster::refresh`] uses it to
-    /// auto-heal a reconnected worker that missed its commit (the first
-    /// step of reconnect/failover); cleared once lockstep is restored.
-    unresolved: Mutex<Option<(u64, u64)>>,
+    /// Every publish that reached its commit phase, newest last,
+    /// bounded by [`PUBLISH_LOG_CAP`]: the replay source for replica
+    /// catch-up ([`RemoteCluster::refresh`]), generalizing the old
+    /// lag-1 "unresolved commit" slot to any lag depth the log covers.
+    publish_log: Mutex<VecDeque<PublishLogEntry>>,
     token: AtomicU64,
     /// Configuration of the cluster-wide FMBE fit (seed + feature
     /// count; the wire op pins the geometric parameter to the default).
@@ -872,40 +1142,70 @@ pub struct RemoteCluster {
 }
 
 impl RemoteCluster {
-    /// Connect to every worker (in global shard order), validate that
-    /// dimensionalities match and epochs are in lockstep, and build the
-    /// scatter index.
+    /// Connect to every worker (in global shard order, one replica per
+    /// shard), validate that dimensionalities match and epochs are in
+    /// lockstep, and build the scatter index. Replicated shards go
+    /// through [`RemoteCluster::connect_groups`].
     pub fn connect(addrs: &[Addr], cfg: ClientConfig) -> Result<RemoteCluster> {
-        if addrs.is_empty() {
-            return Err(ClientError::Protocol("empty worker list".to_string()));
+        let groups: Vec<Vec<Addr>> = addrs.iter().map(|a| vec![a.clone()]).collect();
+        Self::connect_groups(&groups, cfg)
+    }
+
+    /// Connect to every replica of every shard (`groups[s]` is shard
+    /// `s`'s replica addresses), validate that dimensionalities match,
+    /// that every worker — replicas included — is at the lockstep
+    /// epoch, and that replicas of one shard agree on their row count,
+    /// then build the scatter index. Connect-time validation is strict
+    /// (every replica must answer); failover tolerance starts once the
+    /// cluster is up.
+    pub fn connect_groups(groups: &[Vec<Addr>], cfg: ClientConfig) -> Result<RemoteCluster> {
+        if groups.is_empty() || groups.iter().any(|g| g.is_empty()) {
+            return Err(ClientError::Protocol(
+                "empty worker list (every shard needs at least one replica)".to_string(),
+            ));
         }
-        let mut shards = Vec::with_capacity(addrs.len());
-        let mut lens = Vec::with_capacity(addrs.len());
+        let mut shards = Vec::with_capacity(groups.len());
+        let mut lens = Vec::with_capacity(groups.len());
         let mut dim = None;
         let mut epoch = None;
-        for addr in addrs {
-            let (shard, (len, d, e)) = RemoteShard::connect(addr.clone(), cfg.clone())?;
-            match dim {
-                None => dim = Some(d),
-                Some(want) if want != d => {
-                    return Err(ClientError::Protocol(format!(
-                        "worker {addr} serves dim {d}, cluster dim is {want}"
-                    )));
+        for (s, group) in groups.iter().enumerate() {
+            let mut replicas = Vec::with_capacity(group.len());
+            let mut shard_len = None;
+            for addr in group {
+                let (shard, (len, d, e)) = RemoteShard::connect(addr.clone(), cfg.clone())?;
+                match dim {
+                    None => dim = Some(d),
+                    Some(want) if want != d => {
+                        return Err(ClientError::Protocol(format!(
+                            "worker {addr} serves dim {d}, cluster dim is {want}"
+                        )));
+                    }
+                    _ => {}
                 }
-                _ => {}
-            }
-            match epoch {
-                None => epoch = Some(e),
-                Some(want) if want != e => {
-                    return Err(ClientError::Protocol(format!(
-                        "worker {addr} at epoch {e}, cluster epoch is {want} \
-                         (out-of-lockstep workers)"
-                    )));
+                match epoch {
+                    None => epoch = Some(e),
+                    Some(want) if want != e => {
+                        return Err(ClientError::Protocol(format!(
+                            "worker {addr} at epoch {e}, cluster epoch is {want} \
+                             (out-of-lockstep workers)"
+                        )));
+                    }
+                    _ => {}
                 }
-                _ => {}
+                match shard_len {
+                    None => shard_len = Some(len),
+                    Some(want) if want != len => {
+                        return Err(ClientError::Protocol(format!(
+                            "replica {addr} of shard {s} serves {len} rows, its peers \
+                             serve {want} (replicas must hold identical data)"
+                        )));
+                    }
+                    _ => {}
+                }
+                replicas.push(Arc::new(shard));
             }
-            shards.push(Arc::new(shard));
-            lens.push(len);
+            shards.push(Arc::new(ReplicaSet::new(s, replicas)));
+            lens.push(shard_len.unwrap());
         }
         if lens[..lens.len() - 1].iter().any(|&l| l % 4 != 0) {
             log::warn!(
@@ -923,7 +1223,7 @@ impl RemoteCluster {
                 index,
             })),
             publish_lock: Mutex::new(()),
-            unresolved: Mutex::new(None),
+            publish_log: Mutex::new(VecDeque::new()),
             // Seed tokens with process-unique entropy so a replacement
             // coordinator cannot collide with a crashed predecessor's
             // orphaned staged preparation (worker staging is keyed by
@@ -938,6 +1238,27 @@ impl RemoteCluster {
             fmbe_cfg: FmbeConfig::default(),
             fmbe: EpochCache::new(),
         })
+    }
+
+    /// Mirror per-shard failover ticks into a service metrics sink
+    /// (`ServiceMetrics::on_shard_failover` → `shard_stats[..].failovers`).
+    /// `zest-server` wires the serving stack's own sink in here so
+    /// failovers show up next to the per-shard error counters.
+    pub fn set_metrics(&self, sink: Arc<ServiceMetrics>) {
+        for set in &self.shards {
+            *set.sink.write().unwrap() = Some(sink.clone());
+        }
+    }
+
+    /// Per-shard, per-replica advisory health flags (`true` = routed to
+    /// by reads), in shard/replica order — the `replica_health` gauge.
+    pub fn replica_status(&self) -> Vec<Vec<bool>> {
+        self.shards.iter().map(|set| set.health()).collect()
+    }
+
+    /// Total reads re-routed to an alternate replica, across all shards.
+    pub fn failovers(&self) -> u64 {
+        self.shards.iter().map(|set| set.failovers()).sum()
     }
 
     /// Configure the cluster-wide FMBE fit (feature count + seed). The
@@ -961,7 +1282,7 @@ impl RemoteCluster {
         self.state.read().unwrap().clone()
     }
 
-    fn build_index(shards: &[Arc<RemoteShard>], lens: &[usize]) -> ShardedIndex {
+    fn build_index(shards: &[Arc<ReplicaSet>], lens: &[usize]) -> ShardedIndex {
         let mut offset = 0usize;
         let parts: Vec<(usize, Arc<dyn MipsIndex>)> = shards
             .iter()
@@ -1396,9 +1717,9 @@ impl RemoteCluster {
                 return Err(remote_err(
                     ErrorCode::Busy,
                     format!(
-                        "worker {} fitted FMBE at epoch {epoch}, pinned view is epoch {} \
+                        "shard {} fitted FMBE at epoch {epoch}, pinned view is epoch {} \
                          (publish raced the fit — retry)",
-                        shard.addr(),
+                        shard.name(),
                         state.epoch
                     ),
                 ));
@@ -1465,14 +1786,26 @@ impl RemoteCluster {
         self.publish(|s, token| Encoded::prepare_remove(token, &per_worker[s]))
     }
 
-    /// The two-phase skeleton: prepare on **all workers concurrently**
-    /// (each worker's phase-1 request is built by `encode_prepare` and
-    /// issued on its I/O slot), join, abort everywhere on any failure;
-    /// then commit on all workers concurrently; then refresh the
-    /// cluster view from the workers' manifests. Fan-out makes publish
-    /// latency the slowest worker's prepare + commit instead of the sum
-    /// over workers (`tests/net_e2e.rs` pins the overlap with a
-    /// slow-worker handler).
+    /// The two-phase skeleton: prepare on **every replica of every
+    /// shard concurrently** (shard `s`'s phase-1 request is built once
+    /// by `encode_prepare` and the same encoded bytes are issued on
+    /// each of its replicas' I/O slots), join, abort everywhere on any
+    /// *shard-level* failure; then commit on every successfully
+    /// prepared replica concurrently; then refresh the cluster view
+    /// from the workers' manifests. Fan-out makes publish latency the
+    /// slowest worker's prepare + commit instead of the sum over
+    /// workers (`tests/net_e2e.rs` pins the overlap with a slow-worker
+    /// handler).
+    ///
+    /// Replica semantics: a shard publishes if **at least one** of its
+    /// replicas prepares and commits — a dead replica does not block
+    /// the cluster (it is marked unhealthy and healed later from the
+    /// publish log, see [`RemoteCluster::refresh`]); a shard with *no*
+    /// live replica fails the publish all-or-nothing, exactly like a
+    /// dead worker did pre-replication. A replica that prepares a
+    /// *different* epoch than its peers is treated as failed (it has
+    /// diverged; refresh's split-brain guard will keep it out of the
+    /// read set).
     ///
     /// A failed commit RPC is **ambiguous** (the worker may or may not
     /// have published before the response was lost), so it is resolved
@@ -1480,92 +1813,176 @@ impl RemoteCluster {
     /// if it already serves the prepared epoch the commit landed and the
     /// lost response is forgotten; otherwise one explicit commit retry
     /// runs (covering mid-write transport failures, which the
-    /// multiplexed pipeline deliberately never resends). A worker that
-    /// still fails leaves the cluster out of lockstep; the original
-    /// error is surfaced (never masked by the follow-up refresh) and the
-    /// next `refresh()` keeps reporting the lockstep break until the
-    /// worker recovers.
+    /// multiplexed pipeline deliberately never resends). A replica that
+    /// still fails is marked unhealthy for the log-replay heal; only a
+    /// shard whose *every* replica failed its commit surfaces an error
+    /// (never masked by the follow-up refresh).
     fn publish<F>(&self, encode_prepare: F) -> Result<u64>
     where
         F: Fn(usize, u64) -> Encoded,
     {
         let token = self.token.fetch_add(1, Ordering::SeqCst) + 1;
-        // Phase 1: fan the prepares out, then join in worker order.
-        let prepares: Vec<_> = self
+        // Build each shard's phase-1 payload once; replicas of a shard
+        // replay the identical bytes (and the publish log retains the
+        // same `Arc`s for catch-up replay — no clone either way).
+        let payloads: Vec<Arc<Encoded>> = (0..self.shards.len())
+            .map(|s| Arc::new(encode_prepare(s, token)))
+            .collect();
+        // Phase 1: fan the prepares out to every replica, then join in
+        // shard/replica order. `prepared[s][r]` records whether that
+        // replica staged the publish.
+        let prepares: Vec<Vec<Pending>> = self
             .shards
             .iter()
-            .enumerate()
-            .map(|(s, shard)| shard.submit(encode_prepare(s, token)))
+            .zip(&payloads)
+            .map(|(set, payload)| {
+                set.replicas
+                    .iter()
+                    .map(|replica| replica.slot.submit(Arc::clone(payload)))
+                    .collect()
+            })
             .collect();
         let mut next_epoch = None;
-        let mut failure = None;
-        for (s, pending) in prepares.into_iter().enumerate() {
-            match pending
-                .join()
-                .and_then(to_prepared)
-                .map_err(|e| attribute(e, s))
-            {
-                Ok(epoch) => {
-                    next_epoch.get_or_insert(epoch);
-                }
-                Err(e) => {
-                    // Keep joining: the remaining prepares are already in
-                    // flight and may have staged server-side.
-                    failure.get_or_insert(e);
+        let mut failure: Option<ClientError> = None;
+        let mut prepared: Vec<Vec<bool>> = Vec::with_capacity(self.shards.len());
+        for (s, (set, pendings)) in self.shards.iter().zip(prepares).enumerate() {
+            let mut shard_ok = vec![false; set.replicas.len()];
+            let mut shard_failure: Option<ClientError> = None;
+            for (r, pending) in pendings.into_iter().enumerate() {
+                match pending.join().and_then(to_prepared) {
+                    Ok(epoch) => {
+                        let expect = *next_epoch.get_or_insert(epoch);
+                        if epoch == expect {
+                            shard_ok[r] = true;
+                        } else {
+                            // Diverged replica: staged a different next
+                            // epoch than its peers. Treat as failed and
+                            // keep it out of the commit fan-out.
+                            set.mark(r, false);
+                            shard_failure.get_or_insert(ClientError::Protocol(format!(
+                                "replica {} of shard {s} staged epoch {epoch}, peers staged \
+                                 {expect} (diverged replica)",
+                                set.replicas[r].addr()
+                            )));
+                        }
+                    }
+                    Err(e) => {
+                        // Keep joining: the remaining prepares are
+                        // already in flight and may have staged
+                        // server-side. A transiently failed replica is
+                        // routed around, not fatal for the shard.
+                        set.mark(r, false);
+                        shard_failure.get_or_insert(e);
+                    }
                 }
             }
+            if !shard_ok.iter().any(|&ok| ok) {
+                let e = shard_failure.expect("failed shard recorded an error");
+                failure.get_or_insert(attribute(e, s));
+            } else if let Some(e) = shard_failure {
+                log::warn!(
+                    "prepare of token {token} failed on a replica of shard {} ({e}); \
+                     publishing through its peers, refresh() will heal it",
+                    set.name()
+                );
+            }
+            prepared.push(shard_ok);
         }
         if let Some(e) = failure {
-            // Abort every worker — every prepare was issued, and even the
-            // failed one's staging is ambiguous (abort is token-checked
-            // and idempotent, so this clears a possible orphan instead of
+            // A whole shard failed to stage: abort every replica of
+            // every shard — every prepare was issued, and even a failed
+            // one's staging is ambiguous (abort is token-checked and
+            // idempotent, so this clears a possible orphan instead of
             // wedging all future publishes on Busy). Aborts fan out too.
-            let aborts: Vec<_> = self
+            let aborts: Vec<Pending> = self
                 .shards
                 .iter()
-                .map(|shard| shard.submit(Encoded::abort(token)))
+                .flat_map(|set| {
+                    set.replicas
+                        .iter()
+                        .map(|replica| replica.submit(Encoded::abort(token)))
+                        .collect::<Vec<_>>()
+                })
                 .collect();
             for pending in aborts {
                 let _ = pending.join();
             }
             return Err(e);
         }
-        let next_epoch = next_epoch.expect("at least one worker prepared");
-        // Phase 2: fan the commits out, then join and resolve stragglers.
-        let commits: Vec<_> = self
-            .shards
-            .iter()
-            .map(|shard| shard.submit(Encoded::commit(token)))
-            .collect();
-        let mut commit_failure = None;
-        for (s, (shard, pending)) in self.shards.iter().zip(commits).enumerate() {
-            if let Err(first) = pending
-                .join()
-                .and_then(to_committed)
-                .map_err(|e| attribute(e, s))
-            {
-                // Ambiguous failure: check whether the commit landed.
-                let landed = matches!(shard.manifest(), Ok((_, _, e)) if e == next_epoch);
-                if !landed && shard.commit(token).is_err() {
-                    // Keep committing the rest: a partial publish is
-                    // worse than a completed one with one reported
-                    // failure. The worker may still hold the staged
-                    // preparation — resolve_token(token, true) heals it
-                    // once the worker is reachable again.
-                    log::warn!(
-                        "commit of token {token} failed on worker {}: {first}; \
-                         run resolve_token({token}, true) once it is reachable",
-                        shard.addr()
-                    );
-                    commit_failure.get_or_insert(first);
-                }
+        let next_epoch = next_epoch.expect("at least one replica prepared");
+        // Record the publish in the catch-up log *before* the commit
+        // phase: once any replica commits, a lagging peer must be able
+        // to replay this entry (`refresh()`), and a log entry for a
+        // publish that ends up fully failed is harmless (its token
+        // commits as StalePrepare everywhere).
+        {
+            let mut log = self.publish_log.lock().unwrap();
+            if log.back().is_some_and(|e| e.epoch == next_epoch) {
+                // A retried publish targeting the same epoch supersedes
+                // the failed attempt's entry.
+                log.pop_back();
+            }
+            log.push_back(PublishLogEntry {
+                token,
+                epoch: next_epoch,
+                prepares: payloads,
+            });
+            while log.len() > PUBLISH_LOG_CAP {
+                log.pop_front();
             }
         }
-        // Record an incomplete commit phase before refreshing, so the
-        // refresh-time auto-heal (now and on any later `refresh()`)
-        // knows which token to re-commit once the straggler reconnects.
-        if commit_failure.is_some() {
-            *self.unresolved.lock().unwrap() = Some((token, next_epoch));
+        // Phase 2: fan the commits out to every prepared replica, then
+        // join and resolve stragglers.
+        let commits: Vec<Vec<Option<Pending>>> = self
+            .shards
+            .iter()
+            .zip(&prepared)
+            .map(|(set, shard_ok)| {
+                set.replicas
+                    .iter()
+                    .zip(shard_ok)
+                    .map(|(replica, &ok)| ok.then(|| replica.submit(Encoded::commit(token))))
+                    .collect()
+            })
+            .collect();
+        let mut commit_failure = None;
+        for (s, (set, pendings)) in self.shards.iter().zip(commits).enumerate() {
+            let mut committed = false;
+            let mut shard_failure: Option<ClientError> = None;
+            for (r, pending) in pendings.into_iter().enumerate() {
+                let Some(pending) = pending else { continue };
+                let replica = &set.replicas[r];
+                match pending.join().and_then(to_committed) {
+                    Ok(_) => committed = true,
+                    Err(first) => {
+                        // Ambiguous failure: check whether the commit
+                        // landed before retrying explicitly.
+                        let landed =
+                            matches!(replica.manifest(), Ok((_, _, e)) if e == next_epoch);
+                        if landed || replica.commit(token).is_ok() {
+                            committed = true;
+                        } else {
+                            // The replica may still hold the staged
+                            // preparation — the publish-log replay in
+                            // refresh() heals it once reachable again.
+                            set.mark(r, false);
+                            log::warn!(
+                                "commit of token {token} failed on replica {} of shard {s}: \
+                                 {first}; refresh() will heal it once it is reachable",
+                                replica.addr()
+                            );
+                            shard_failure.get_or_insert(first);
+                        }
+                    }
+                }
+            }
+            // Keep committing the remaining shards even on failure: a
+            // partial publish is worse than a completed one with one
+            // reported failure.
+            if !committed {
+                let e = shard_failure.expect("uncommitted shard recorded an error");
+                commit_failure.get_or_insert(attribute(e, s));
+            }
         }
         // Refresh best-effort, but never let it mask a commit failure.
         let refreshed = self.refresh();
@@ -1578,175 +1995,413 @@ impl RemoteCluster {
 
     /// Best-effort recovery for a publish whose commit phase partially
     /// failed (the failure log names the token): re-send `Commit`
-    /// (`commit = true`) or `Abort` to every worker — both are
-    /// idempotent worker-side — then refresh. This heals a worker that
-    /// was unreachable during the commit phase and still holds the
-    /// staged preparation (which otherwise answers `Busy` to every
-    /// future publish until its process restarts).
+    /// (`commit = true`) or `Abort` to **every replica of every
+    /// worker** — both are idempotent worker-side — then refresh. This
+    /// heals a replica that was unreachable during the commit phase and
+    /// still holds the staged preparation (which otherwise answers
+    /// `Busy` to every future publish until its process restarts).
+    /// `refresh()` subsumes the commit direction via the publish log;
+    /// this remains the explicit abort path and the operator-facing
+    /// escape hatch.
     pub fn resolve_token(&self, token: u64, commit: bool) -> Result<()> {
         let _p = self.publish_lock.lock().unwrap();
-        for shard in &self.shards {
-            let res = if commit {
-                shard.commit(token).map(|_| ())
-            } else {
-                shard.abort(token)
-            };
-            match res {
-                Ok(()) => {}
-                // Nothing staged under this token: already resolved.
-                Err(ClientError::Remote {
-                    code: ErrorCode::StalePrepare,
-                    ..
-                }) => {}
-                Err(e) => return Err(e),
+        let mut first_failure = None;
+        for set in &self.shards {
+            for replica in &set.replicas {
+                let res = if commit {
+                    replica.commit(token).map(|_| ())
+                } else {
+                    replica.abort(token)
+                };
+                match res {
+                    Ok(()) => {}
+                    // Nothing staged under this token: already resolved.
+                    Err(ClientError::Remote {
+                        code: ErrorCode::StalePrepare,
+                        ..
+                    }) => {}
+                    // Keep resolving the rest — an unreachable replica
+                    // should not leave its peers wedged on Busy.
+                    Err(e) => {
+                        first_failure.get_or_insert(e);
+                    }
+                }
             }
+        }
+        if let Some(e) = first_failure {
+            return Err(e);
         }
         self.refresh()
     }
 
-    /// Re-read every worker's manifest (concurrently), re-validate
-    /// lockstep, and rebuild the scatter index for the (possibly
-    /// shifted) layout.
+    /// Re-probe every replica of every shard (concurrently), heal
+    /// lagging replicas from the publish log, re-validate lockstep over
+    /// the replicas that answer, re-mark replica health, and rebuild
+    /// the scatter index for the (possibly shifted) layout.
     ///
-    /// **Auto-heal**: when the manifests are out of lockstep *and* the
-    /// lag matches the recorded incomplete publish — a worker one epoch
-    /// behind the target of the last commit phase that failed on it —
-    /// the worker evidently reconnected still holding the staged
-    /// preparation, so `refresh` re-sends that `Commit` (the same
-    /// resolution `resolve_token(token, true)` would run, scoped to the
-    /// lagging workers) and re-reads the manifests before giving up.
-    /// This heals a worker that was unreachable during phase 2 without
-    /// operator intervention — the first step of the ROADMAP
-    /// reconnect/failover item. Lockstep breaks that do *not* match a
-    /// recorded token (external mutation, worker restarted with
-    /// different data) still surface as errors.
+    /// **Auto-heal**: a reachable replica lagging behind the lockstep
+    /// target — it was dead or partitioned during one *or more*
+    /// publishes — is caught up by replaying its missed `(prepare,
+    /// commit)` pairs from the coordinator's publish log, in epoch
+    /// order (see [`RemoteCluster::heal_from_log`]). This generalizes
+    /// the earlier commit-retry heal from "lagging exactly one missed
+    /// commit" to any lag the log still covers, and it is the reconnect
+    /// half of failover: kill a replica, let its peers serve, restart
+    /// it, and the next `refresh()` restores lockstep without operator
+    /// intervention.
+    ///
+    /// **Split-brain guards** (never healed, always surfaced): a
+    /// replica *ahead* of every epoch this coordinator published or
+    /// observed means another coordinator has published through it;
+    /// replicas at the lockstep epoch disagreeing on their row count
+    /// means a replica serves different data under the same epoch
+    /// number. Both refuse the view rather than silently serving mixed
+    /// answers.
     pub fn refresh(&self) -> Result<()> {
-        let mut manifests = self.fetch_manifests()?;
-        if Self::lockstep_epoch(&manifests).is_none() && self.heal_missed_commits(&manifests) {
-            manifests = self.fetch_manifests()?;
-        }
-        let Some(epoch) = Self::lockstep_epoch(&manifests) else {
-            let detail: Vec<String> = self
-                .shards
-                .iter()
-                .zip(&manifests)
-                .map(|(shard, (_, e))| format!("{} at epoch {e}", shard.addr()))
-                .collect();
-            return Err(ClientError::Protocol(format!(
-                "workers out of lockstep: {}",
-                detail.join(", ")
-            )));
+        let mut probes = self.probe_replicas()?;
+        // Split-brain guard #1: nobody may be ahead of this
+        // coordinator's history.
+        let expected = {
+            let log = self.publish_log.lock().unwrap();
+            self.state().epoch.max(log.back().map_or(0, |entry| entry.epoch))
         };
-        let lens: Vec<usize> = manifests.into_iter().map(|(len, _)| len).collect();
+        for (s, (set, shard_probes)) in self.shards.iter().zip(&probes).enumerate() {
+            for (r, probe) in shard_probes.iter().enumerate() {
+                if let Some((_, e)) = probe {
+                    if *e > expected {
+                        return Err(ClientError::Protocol(format!(
+                            "replica {} of shard {s} serves epoch {e}, ahead of every epoch \
+                             this coordinator published or observed ({expected}) — refusing \
+                             the split-brain view (did another coordinator publish?)",
+                            set.replicas[r].addr()
+                        )));
+                    }
+                }
+            }
+        }
+        // The lockstep target is the furthest epoch any replica serves.
+        let target = probes
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|&(_, e)| e)
+            .max()
+            .expect("every shard probed at least one replica");
+        if self.heal_from_log(&probes, target) {
+            probes = self.probe_replicas()?;
+        }
+        // Per shard: the read set is the replicas at the target epoch.
+        // Every shard needs at least one, and their row counts must
+        // agree (identical data is what makes failover bit-exact).
+        let mut lens = Vec::with_capacity(self.shards.len());
+        for (s, (set, shard_probes)) in self.shards.iter().zip(&probes).enumerate() {
+            let mut shard_len: Option<usize> = None;
+            for (r, probe) in shard_probes.iter().enumerate() {
+                let at_target = matches!(probe, Some((_, e)) if *e == target);
+                set.mark(r, at_target);
+                if !at_target {
+                    continue;
+                }
+                let len = probe.expect("at_target implies Some").0;
+                match shard_len {
+                    None => shard_len = Some(len),
+                    // Split-brain guard #2: same epoch, different data.
+                    Some(want) if want != len => {
+                        return Err(ClientError::Protocol(format!(
+                            "replicas of shard {s} disagree at epoch {target}: {} serves \
+                             {len} rows, a peer serves {want} — refusing the split-brain \
+                             view (diverged replica)",
+                            set.replicas[r].addr()
+                        )));
+                    }
+                    _ => {}
+                }
+            }
+            let Some(len) = shard_len else {
+                let detail: Vec<String> = set
+                    .replicas
+                    .iter()
+                    .zip(shard_probes)
+                    .map(|(replica, probe)| match probe {
+                        Some((_, e)) => format!("{} at epoch {e}", replica.addr()),
+                        None => format!("{} unreachable", replica.addr()),
+                    })
+                    .collect();
+                return Err(ClientError::Protocol(format!(
+                    "workers out of lockstep: shard {s} has no replica at epoch {target} \
+                     ({})",
+                    detail.join(", ")
+                )));
+            };
+            lens.push(len);
+        }
         let index = Arc::new(Self::build_index(&self.shards, &lens));
-        *self.state.write().unwrap() = Arc::new(ClusterState { lens, epoch, index });
-        // Lockstep restored: nothing left to resolve.
-        *self.unresolved.lock().unwrap() = None;
+        *self.state.write().unwrap() = Arc::new(ClusterState {
+            lens,
+            epoch: target,
+            index,
+        });
         Ok(())
     }
 
-    /// Every worker's `(len, epoch)` manifest, fetched concurrently,
-    /// with dimensionality validated against the cluster's.
-    fn fetch_manifests(&self) -> Result<Vec<(usize, u64)>> {
-        let in_flight: Vec<_> = self
+    /// Probe every replica of every shard concurrently with `Manifest`:
+    /// `probes[s][r]` is `Some((len, epoch))` for a replica that
+    /// answered (dimensionality validated against the cluster's),
+    /// `None` for one that did not — which is marked unhealthy, not
+    /// fatal. A shard with **no** reachable replica at all is an error:
+    /// the cluster cannot serve without it.
+    fn probe_replicas(&self) -> Result<Vec<Vec<Option<(usize, u64)>>>> {
+        let in_flight: Vec<Vec<Pending>> = self
             .shards
             .iter()
-            .map(|shard| shard.submit(Encoded::manifest()))
+            .map(|set| {
+                set.replicas
+                    .iter()
+                    .map(|replica| replica.submit(Encoded::manifest()))
+                    .collect()
+            })
             .collect();
-        let mut manifests = Vec::with_capacity(self.shards.len());
-        for (shard, pending) in self.shards.iter().zip(in_flight) {
-            let (len, d, e) = pending.join().and_then(to_manifest)?;
-            if d != self.dim {
-                return Err(ClientError::Protocol(format!(
-                    "worker {} switched to dim {d}",
-                    shard.addr()
-                )));
+        let mut probes = Vec::with_capacity(self.shards.len());
+        for (s, (set, pendings)) in self.shards.iter().zip(in_flight).enumerate() {
+            let mut shard_probes = Vec::with_capacity(set.replicas.len());
+            let mut last_err = None;
+            for (r, pending) in pendings.into_iter().enumerate() {
+                match pending.join().and_then(to_manifest) {
+                    Ok((len, d, e)) => {
+                        if d != self.dim {
+                            return Err(ClientError::Protocol(format!(
+                                "replica {} of shard {s} switched to dim {d}",
+                                set.replicas[r].addr()
+                            )));
+                        }
+                        shard_probes.push(Some((len, e)));
+                    }
+                    Err(e) => {
+                        set.mark(r, false);
+                        log::warn!(
+                            "replica {} of shard {s} unreachable during refresh: {e}",
+                            set.replicas[r].addr()
+                        );
+                        shard_probes.push(None);
+                        last_err = Some(e);
+                    }
+                }
             }
-            manifests.push((len, e));
+            if shard_probes.iter().all(|p| p.is_none()) {
+                let e = last_err.expect("unreachable shard recorded an error");
+                return Err(attribute(e, s));
+            }
+            probes.push(shard_probes);
         }
-        Ok(manifests)
+        Ok(probes)
     }
 
-    /// The common epoch if every manifest agrees, else `None`.
-    fn lockstep_epoch(manifests: &[(usize, u64)]) -> Option<u64> {
-        let first = manifests.first()?.1;
-        manifests.iter().all(|&(_, e)| e == first).then_some(first)
-    }
-
-    /// Re-send the recorded incomplete `Commit` to every worker lagging
-    /// exactly one epoch behind its target; returns whether any worker
-    /// accepted (so the caller re-reads manifests). A `StalePrepare`
-    /// answer also counts as resolved — the worker lost the staging
-    /// (e.g. restarted), and the follow-up manifest read decides
-    /// whether it is actually healthy.
-    fn heal_missed_commits(&self, manifests: &[(usize, u64)]) -> bool {
-        let Some((token, target)) = *self.unresolved.lock().unwrap() else {
-            return false;
-        };
-        // Only heal toward the recorded target: if the committed side
-        // has moved past it (or never reached it), this is not the
-        // failure we recorded.
-        if manifests.iter().map(|&(_, e)| e).max() != Some(target) {
-            return false;
-        }
+    /// Replay missed publishes onto every reachable replica lagging
+    /// behind `target`, in epoch order, from the publish log: first try
+    /// the bare recorded `Commit` (a replica that staged but missed
+    /// only the commit completes instantly); on `StalePrepare` — the
+    /// staging is gone, i.e. the replica restarted — replay the
+    /// recorded prepare payload and then commit. `Busy` during a
+    /// replayed prepare means an orphaned staging under a different
+    /// token blocks the slot: every logged token is aborted best-effort
+    /// and the prepare retried once. Returns whether any replica
+    /// accepted a replay (so the caller re-probes). A replica lagging
+    /// deeper than the log reaches is logged with the resolution
+    /// (restart it with current data) and skipped.
+    fn heal_from_log(&self, probes: &[Vec<Option<(usize, u64)>>], target: u64) -> bool {
+        let log = self.publish_log.lock().unwrap();
+        let tokens: Vec<u64> = log.iter().map(|entry| entry.token).collect();
         let mut healed = false;
-        for (shard, &(_, e)) in self.shards.iter().zip(manifests) {
-            if e + 1 != target {
-                continue;
-            }
-            match shard.commit(token) {
-                Ok(epoch) => {
-                    log::info!(
-                        "auto-healed worker {}: committed token {token} to epoch {epoch} \
-                         after its missed commit",
-                        shard.addr()
-                    );
-                    healed = true;
+        for (s, (set, shard_probes)) in self.shards.iter().zip(probes).enumerate() {
+            for (r, probe) in shard_probes.iter().enumerate() {
+                let Some((_, at)) = *probe else { continue };
+                if at >= target {
+                    continue;
                 }
-                Err(ClientError::Remote {
-                    code: ErrorCode::StalePrepare,
-                    ..
-                }) => {
-                    // Nothing staged under the token anymore; re-read
-                    // the manifest and let lockstep validation decide.
-                    healed = true;
-                }
-                Err(e) => {
+                let entries: Vec<&PublishLogEntry> = log
+                    .iter()
+                    .filter(|entry| entry.epoch > at && entry.epoch <= target)
+                    .collect();
+                let contiguous = entries.first().is_some_and(|f| f.epoch == at + 1)
+                    && entries.last().is_some_and(|l| l.epoch == target)
+                    && entries.len() as u64 == target - at;
+                if !contiguous {
                     log::warn!(
-                        "auto-heal of worker {} failed: {e}; \
-                         run resolve_token({token}, true) once it is reachable",
-                        shard.addr()
+                        "replica {} of shard {s} lags at epoch {at}, beyond the publish \
+                         log's reach (target {target}, log covers {} publishes); restart \
+                         it with current data or re-drive the missed mutations",
+                        set.replicas[r].addr(),
+                        tokens.len()
                     );
+                    continue;
+                }
+                if self.replay_entries(set, s, r, &entries, &tokens) {
+                    healed = true;
                 }
             }
         }
         healed
     }
 
-    /// Merged telemetry from every worker: `GetMetrics` fanned out
-    /// concurrently, snapshots folded with [`MetricsBlob::merge`]
-    /// (sums counters, pools histogram buckets). Best-effort — a
-    /// worker that fails to answer is logged and skipped rather than
-    /// failing the scrape, so one sick worker cannot blind the
-    /// monitoring for the rest of the cluster.
+    /// Replay each missed `(prepare, commit)` pair on one replica, in
+    /// epoch order. Returns whether the replica accepted the complete
+    /// replay (partial progress still helps — the next `refresh()`
+    /// resumes from wherever the replica now stands).
+    fn replay_entries(
+        &self,
+        set: &ReplicaSet,
+        s: usize,
+        r: usize,
+        entries: &[&PublishLogEntry],
+        tokens: &[u64],
+    ) -> bool {
+        let replica = &set.replicas[r];
+        for entry in entries {
+            let staged_commit = match replica.commit(entry.token) {
+                Ok(_) => true,
+                Err(ClientError::Remote {
+                    code: ErrorCode::StalePrepare,
+                    ..
+                }) => false,
+                Err(e) => {
+                    log::warn!(
+                        "heal of replica {} of shard {s} failed committing token {}: {e}",
+                        replica.addr(),
+                        entry.token
+                    );
+                    return false;
+                }
+            };
+            if staged_commit {
+                continue;
+            }
+            // The staging is gone (replica restarted): replay the
+            // recorded prepare, then commit it.
+            if !Self::replay_prepare(replica, entry, s, tokens) {
+                return false;
+            }
+            if let Err(e) = replica.commit(entry.token) {
+                log::warn!(
+                    "heal of replica {} of shard {s} failed committing replayed token {}: {e}",
+                    replica.addr(),
+                    entry.token
+                );
+                return false;
+            }
+        }
+        log::info!(
+            "auto-healed replica {} of shard {s}: replayed {} missed publish(es) up to \
+             epoch {}",
+            replica.addr(),
+            entries.len(),
+            entries.last().map_or(0, |entry| entry.epoch)
+        );
+        true
+    }
+
+    /// Replay one recorded prepare payload on a replica, expecting it
+    /// to stage exactly the entry's epoch. On `Busy` (an orphaned
+    /// staging under another token holds the slot) every logged token
+    /// is aborted best-effort and the prepare retried once.
+    fn replay_prepare(
+        replica: &RemoteShard,
+        entry: &PublishLogEntry,
+        s: usize,
+        tokens: &[u64],
+    ) -> bool {
+        for attempt in 0..2 {
+            let staged = replica
+                .slot
+                .submit(Arc::clone(&entry.prepares[s]))
+                .join()
+                .and_then(to_prepared);
+            match staged {
+                Ok(epoch) if epoch == entry.epoch => return true,
+                Ok(epoch) => {
+                    // The replica would stage a different epoch than
+                    // this entry published: its state diverged from the
+                    // log's idea of it. Undo and let the lockstep check
+                    // report it.
+                    log::warn!(
+                        "replaying token {} on replica {} staged epoch {epoch}, wanted {}; \
+                         aborting the replay",
+                        entry.token,
+                        replica.addr(),
+                        entry.epoch
+                    );
+                    let _ = replica.abort(entry.token);
+                    return false;
+                }
+                Err(ClientError::Remote {
+                    code: ErrorCode::Busy,
+                    ..
+                }) if attempt == 0 => {
+                    for &token in tokens {
+                        let _ = replica.abort(token);
+                    }
+                }
+                Err(e) => {
+                    log::warn!(
+                        "heal of replica {} failed replaying prepare of token {}: {e}",
+                        replica.addr(),
+                        entry.token
+                    );
+                    return false;
+                }
+            }
+        }
+        false
+    }
+
+    /// Merged telemetry from every **replica of every** worker:
+    /// `GetMetrics` fanned out concurrently, snapshots folded with
+    /// [`MetricsBlob::merge`] (sums counters, pools histogram buckets).
+    /// Best-effort — a replica that fails to answer is logged and
+    /// skipped rather than failing the scrape, so one sick worker
+    /// cannot blind the monitoring for the rest of the cluster. The
+    /// coordinator folds in its own replica-layer gauges:
+    /// `replicas_total` / `replicas_healthy` (the `replica_health`
+    /// roll-up) and `shard_failovers` (reads transparently re-routed).
     pub fn cluster_metrics(&self) -> MetricsBlob {
-        let in_flight: Vec<_> = self
+        let in_flight: Vec<(usize, &Arc<RemoteShard>, Pending)> = self
             .shards
             .iter()
-            .map(|shard| shard.submit(Encoded::get_metrics()))
+            .enumerate()
+            .flat_map(|(s, set)| {
+                set.replicas
+                    .iter()
+                    .map(move |replica| (s, replica, replica.submit(Encoded::get_metrics())))
+            })
             .collect();
         let mut merged = MetricsBlob::default();
-        for (shard, pending) in self.shards.iter().zip(in_flight) {
+        for (s, replica, pending) in in_flight {
             match pending.join() {
                 Ok(WireResponse::Metrics(blob)) => merged.merge(&blob),
                 Ok(other) => log::warn!(
-                    "metrics scrape of worker {} answered unexpectedly: {:?}",
-                    shard.addr(),
+                    "metrics scrape of replica {} of shard {s} answered unexpectedly: {:?}",
+                    replica.addr(),
                     std::mem::discriminant(&other)
                 ),
-                Err(e) => log::warn!("metrics scrape of worker {} failed: {e}", shard.addr()),
+                Err(e) => log::warn!(
+                    "metrics scrape of replica {} of shard {s} failed: {e}",
+                    replica.addr()
+                ),
             }
         }
+        let total: u64 = self.shards.iter().map(|set| set.num_replicas() as u64).sum();
+        let healthy: u64 = self
+            .shards
+            .iter()
+            .map(|set| set.health().iter().filter(|&&h| h).count() as u64)
+            .sum();
+        merged.merge(&MetricsBlob {
+            counters: vec![
+                ("replicas_total".to_string(), total),
+                ("replicas_healthy".to_string(), healthy),
+                ("shard_failovers".to_string(), self.failovers()),
+            ],
+            hists: vec![],
+        });
         merged
     }
 }

@@ -1,0 +1,365 @@
+//! Deterministic fault injection for the wire layer: a frame-aware
+//! TCP/UDS proxy that sits between a client (`MuxSlot`, `PartitionClient`)
+//! and a server, forwarding ZNW1 frames while injecting configured
+//! faults — drop a frame, delay it, truncate it mid-frame, kill the
+//! connection after N bytes, or refuse connections outright.
+//!
+//! The proxy is *frame-aware*: it parses each frame's 19-byte header
+//! (`wire::decode_header`) so faults land on protocol-meaningful
+//! boundaries ("drop the next response frame", "cut 7 bytes into a
+//! frame") instead of arbitrary byte positions in a kernel buffer.
+//! Determinism comes from the fault **schedule** being explicit — a
+//! fixed [`FaultMode`] per connection, or a seeded [`FaultSchedule`]
+//! mapping connection order to modes — not from byte-level timing,
+//! which no socket proxy can pin.
+//!
+//! Used by `tests/chaos.rs` to prove the replica-failover invariant
+//! (kill one replica mid-load ⇒ zero failed requests, bit-identical
+//! answers) and reusable by any net test that wants a misbehaving peer.
+
+use crate::net::wire::{self, HEADER_LEN};
+use crate::net::{Addr, Listener, Stream};
+use crate::util::rng::Rng;
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// What the proxy does with traffic on a connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Forward every frame untouched (the healthy baseline).
+    Forward,
+    /// Forward every frame after sleeping this many milliseconds
+    /// (injected latency; triggers client timeouts when larger than
+    /// the client's deadline).
+    Delay(u64),
+    /// Swallow the next `n` frames whole (header + payload consumed,
+    /// nothing forwarded), then forward normally. The peer waiting on
+    /// a swallowed response observes a hang until its timeout.
+    DropFrames(u32),
+    /// Forward at most this many more bytes (per direction), cutting
+    /// the connection mid-frame when the budget runs out inside one —
+    /// the "truncate mid-frame" and "kill after N bytes" faults in one
+    /// knob. A budget below [`HEADER_LEN`] kills on the first frame.
+    CutAfter(usize),
+    /// Sever any new connection immediately after accept (a down
+    /// backend: connects succeed at the listener queue but die before
+    /// a byte flows). Live connections are unaffected — pair with
+    /// [`FaultProxy::cut_all`] to take a backend fully down.
+    Refuse,
+}
+
+/// A seeded, reproducible assignment of [`FaultMode`]s to connection
+/// order: connection `i` through the proxy runs under `mode(i)`. The
+/// same seed always yields the same schedule, making a chaos run
+/// replayable from its seed alone.
+pub struct FaultSchedule {
+    modes: Vec<FaultMode>,
+}
+
+impl FaultSchedule {
+    /// Derive `len` modes from `seed`. The palette sticks to faults a
+    /// correct stack must absorb (delays, dropped frames, mid-frame
+    /// cuts) plus healthy connections; `Refuse` is excluded — taking a
+    /// backend down wholesale is an explicit test action, not schedule
+    /// noise.
+    pub fn seeded(seed: u64, len: usize) -> FaultSchedule {
+        let mut rng = Rng::seeded(seed ^ 0xFA_0175);
+        let modes = (0..len)
+            .map(|_| match rng.below(4) {
+                0 | 1 => FaultMode::Forward,
+                2 => FaultMode::Delay(1 + rng.below(3) as u64),
+                _ => FaultMode::CutAfter(HEADER_LEN + rng.below(96)),
+            })
+            .collect();
+        FaultSchedule { modes }
+    }
+
+    /// The mode for the `conn`-th accepted connection (wraps around
+    /// past `len`).
+    pub fn mode(&self, conn: usize) -> FaultMode {
+        self.modes[conn % self.modes.len()]
+    }
+}
+
+/// A fault-injecting proxy in front of one upstream server. Every
+/// accepted connection gets a paired upstream connection and two pump
+/// threads (one per direction) that forward whole frames, consulting
+/// the connection's [`FaultMode`] before each.
+///
+/// Modes come from two places: the proxy-wide mode
+/// ([`FaultProxy::set_mode`]), shared **live** with every connection
+/// that wasn't given a schedule slot — flipping it mid-connection
+/// changes behavior of in-flight pumps — or a per-connection slot from
+/// an installed [`FaultSchedule`], which pins that connection's
+/// behavior for its lifetime.
+pub struct FaultProxy {
+    addr: Addr,
+    global: Arc<Mutex<FaultMode>>,
+    schedule: Arc<Mutex<Option<FaultSchedule>>>,
+    conns: Arc<Mutex<Vec<Stream>>>,
+    accepted: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Bind `listen`, proxying every connection to `upstream`. Starts
+    /// in [`FaultMode::Forward`].
+    pub fn start(listen: &Addr, upstream: Addr) -> std::io::Result<FaultProxy> {
+        let listener = Listener::bind(listen)?;
+        let addr = listener.bound_addr()?;
+        let global = Arc::new(Mutex::new(FaultMode::Forward));
+        let schedule: Arc<Mutex<Option<FaultSchedule>>> = Arc::new(Mutex::new(None));
+        let conns: Arc<Mutex<Vec<Stream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accepted = Arc::new(AtomicUsize::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let (global, schedule, conns, accepted, stop) = (
+                global.clone(),
+                schedule.clone(),
+                conns.clone(),
+                accepted.clone(),
+                stop.clone(),
+            );
+            std::thread::Builder::new()
+                .name("fault-proxy-accept".to_string())
+                .spawn(move || {
+                    accept_loop(listener, upstream, global, schedule, conns, accepted, stop)
+                })
+                .expect("spawn fault-proxy accept thread")
+        };
+        Ok(FaultProxy {
+            addr,
+            global,
+            schedule,
+            conns,
+            accepted,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// The address clients should connect to (resolves `:0` TCP ports).
+    pub fn addr(&self) -> &Addr {
+        &self.addr
+    }
+
+    /// Set the proxy-wide mode. Applies immediately to new connections
+    /// and to live ones running without a schedule slot.
+    pub fn set_mode(&self, mode: FaultMode) {
+        *self.global.lock().unwrap() = mode;
+    }
+
+    /// Install (or clear) a per-connection schedule; scheduled slots
+    /// override the proxy-wide mode for connections accepted from now
+    /// on.
+    pub fn set_schedule(&self, schedule: Option<FaultSchedule>) {
+        *self.schedule.lock().unwrap() = schedule;
+    }
+
+    /// Connections accepted so far (schedule positions consumed).
+    pub fn accepted(&self) -> usize {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Sever every live proxied connection right now (both directions
+    /// of both legs) — the "kill the backend mid-load" action. New
+    /// connections still proxy under the current mode; combine with
+    /// [`FaultMode::Refuse`] to keep the backend down.
+    pub fn cut_all(&self) {
+        let mut conns = self.conns.lock().unwrap();
+        for s in conns.drain(..) {
+            sever(&s);
+        }
+    }
+
+    /// Back to transparent forwarding: clears the schedule and resets
+    /// the mode (already-cut connections stay cut; clients reconnect).
+    pub fn restore(&self) {
+        self.set_schedule(None);
+        self.set_mode(FaultMode::Forward);
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = Stream::connect(&self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        self.cut_all();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: Listener,
+    upstream: Addr,
+    global: Arc<Mutex<FaultMode>>,
+    schedule: Arc<Mutex<Option<FaultSchedule>>>,
+    conns: Arc<Mutex<Vec<Stream>>>,
+    accepted: Arc<AtomicUsize>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        let client = match listener.accept() {
+            Ok(s) => s,
+            Err(_) => {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let conn_idx = accepted.fetch_add(1, Ordering::Relaxed);
+        // A schedule slot pins this connection's mode for life; without
+        // one the connection shares the live proxy-wide mode.
+        let mode: Arc<Mutex<FaultMode>> = match schedule.lock().unwrap().as_ref() {
+            Some(sched) => Arc::new(Mutex::new(sched.mode(conn_idx))),
+            None => global.clone(),
+        };
+        if *mode.lock().unwrap() == FaultMode::Refuse {
+            sever(&client);
+            continue;
+        }
+        let server = match Stream::connect(&upstream) {
+            Ok(s) => s,
+            Err(_) => {
+                sever(&client);
+                continue;
+            }
+        };
+        let (Ok(client_r), Ok(server_r)) = (client.try_clone(), server.try_clone()) else {
+            sever(&client);
+            sever(&server);
+            continue;
+        };
+        {
+            let mut live = conns.lock().unwrap();
+            if let (Ok(c), Ok(s)) = (client.try_clone(), server.try_clone()) {
+                live.push(c);
+                live.push(s);
+            }
+        }
+        let m1 = mode.clone();
+        let m2 = mode;
+        spawn_pump("fault-proxy-c2s", client_r, server, m1);
+        spawn_pump("fault-proxy-s2c", server_r, client, m2);
+    }
+}
+
+fn spawn_pump(name: &str, from: Stream, to: Stream, mode: Arc<Mutex<FaultMode>>) {
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(move || pump(from, to, mode))
+        .expect("spawn fault-proxy pump thread");
+}
+
+/// Forward whole frames from `from` to `to`, consulting `mode` before
+/// each. Exits (severing both streams) on any read/write failure, a
+/// malformed header, or an exhausted `CutAfter` budget.
+fn pump(mut from: Stream, mut to: Stream, mode: Arc<Mutex<FaultMode>>) {
+    // Bytes this direction has forwarded, charged against `CutAfter`.
+    let mut forwarded = 0usize;
+    loop {
+        let mut header = [0u8; HEADER_LEN];
+        if from.read_exact(&mut header).is_err() {
+            break;
+        }
+        let Ok((_, _, payload_len)) = wire::decode_header(&header) else {
+            break;
+        };
+        let mut payload = vec![0u8; payload_len];
+        if from.read_exact(&mut payload).is_err() {
+            break;
+        }
+        // Decide under the lock, act outside it (delays must not stall
+        // the other direction's mode reads).
+        enum Action {
+            Forward,
+            DelayForward(u64),
+            Drop,
+            Cut(usize),
+        }
+        let action = {
+            let mut m = mode.lock().unwrap();
+            match *m {
+                FaultMode::Forward | FaultMode::Refuse => Action::Forward,
+                FaultMode::Delay(ms) => Action::DelayForward(ms),
+                FaultMode::DropFrames(n) => {
+                    *m = if n <= 1 {
+                        FaultMode::Forward
+                    } else {
+                        FaultMode::DropFrames(n - 1)
+                    };
+                    if n == 0 {
+                        Action::Forward
+                    } else {
+                        Action::Drop
+                    }
+                }
+                FaultMode::CutAfter(budget) => Action::Cut(budget),
+            }
+        };
+        let frame_len = HEADER_LEN + payload_len;
+        match action {
+            Action::Drop => continue,
+            Action::Forward | Action::DelayForward(_) => {
+                if let Action::DelayForward(ms) = action {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                if to.write_all(&header).is_err()
+                    || to.write_all(&payload).is_err()
+                    || to.flush().is_err()
+                {
+                    break;
+                }
+                forwarded += frame_len;
+            }
+            Action::Cut(budget) => {
+                let room = budget.saturating_sub(forwarded);
+                if room >= frame_len {
+                    if to.write_all(&header).is_err()
+                        || to.write_all(&payload).is_err()
+                        || to.flush().is_err()
+                    {
+                        break;
+                    }
+                    forwarded += frame_len;
+                } else {
+                    // Truncate: emit exactly the bytes left in the
+                    // budget — possibly mid-header — then kill.
+                    let mut frame = Vec::with_capacity(frame_len);
+                    frame.extend_from_slice(&header);
+                    frame.extend_from_slice(&payload);
+                    let _ = to.write_all(&frame[..room]);
+                    let _ = to.flush();
+                    break;
+                }
+            }
+        }
+    }
+    sever(&from);
+    sever(&to);
+}
+
+/// Shut down both directions of a stream (ignoring errors — the peer
+/// may already be gone).
+fn sever(s: &Stream) {
+    match s {
+        Stream::Tcp(t) => {
+            let _ = t.shutdown(std::net::Shutdown::Both);
+        }
+        #[cfg(unix)]
+        Stream::Unix(u) => {
+            let _ = u.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}

@@ -1,2 +1,4 @@
-//! Property-testing helpers (substitute for proptest).
+//! Property-testing helpers (substitute for proptest) and wire-level
+//! fault injection for chaos tests.
+pub mod fault;
 pub mod prop;

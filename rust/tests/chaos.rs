@@ -1,0 +1,322 @@
+//! Chaos suite: replica failover under injected faults.
+//!
+//! * **Acceptance**: killing one replica of **each** shard mid-load
+//!   yields zero failed client requests and bit-identical answers vs
+//!   the monolithic reference, for S ∈ {1, 2, 4} × R ∈ {2, 3}; a
+//!   publish still lands while the replicas are down; and the killed
+//!   replicas re-heal to the lockstep epoch within one `refresh()`
+//!   after reconnecting.
+//! * The fault proxy itself: transparent forwarding, frame drops
+//!   surfacing as timeouts, mid-frame cuts surfacing as transient
+//!   transport errors — the vocabulary the failover layer must absorb.
+//! * A seeded fault schedule (delays + mid-frame cuts on one replica's
+//!   connections) over a full request load: every request succeeds
+//!   bit-exactly despite the noise.
+//!
+//! Everything runs over UDS with in-process servers; the proxy is
+//! `zest::testing::fault::FaultProxy`.
+#![cfg(unix)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use zest::coordinator::ServiceMetrics;
+use zest::data::embeddings::EmbeddingStore;
+use zest::data::synth::{generate, SynthConfig};
+use zest::net::client::ClientConfig;
+use zest::net::remote::{aligned_split, RemoteCluster, RemoteShard};
+use zest::net::server::{Server, ServerConfig};
+use zest::net::shard::ShardWorker;
+use zest::net::Addr;
+use zest::store::{exp_sum_view, ShardedStore};
+use zest::testing::fault::{FaultMode, FaultProxy, FaultSchedule};
+
+static SOCKET_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+fn sock_addr(tag: &str) -> Addr {
+    let seq = SOCKET_SEQ.fetch_add(1, Ordering::SeqCst);
+    Addr::Unix(std::env::temp_dir().join(format!(
+        "zest-chaos-{}-{tag}-{seq}.sock",
+        std::process::id()
+    )))
+}
+
+fn store(n: usize, d: usize) -> EmbeddingStore {
+    generate(&SynthConfig {
+        n,
+        d,
+        ..SynthConfig::tiny()
+    })
+}
+
+fn spawn_worker(block: EmbeddingStore, tag: &str) -> (Server, Addr) {
+    let addr = sock_addr(tag);
+    let metrics = Arc::new(ServiceMetrics::new());
+    let server = Server::serve(
+        &addr,
+        Arc::new(ShardWorker::new(block).with_metrics(metrics.clone())),
+        ServerConfig::default(),
+        metrics,
+    )
+    .unwrap();
+    let bound = server.local_addr().clone();
+    (server, bound)
+}
+
+/// S shards × R replicas: replicas of one shard serve identical blocks.
+/// Replica 0 of every shard is reached **through a fault proxy**; the
+/// rest are direct. Returns (servers, proxies, groups) with
+/// `groups[s][0]` = shard `s`'s proxied replica.
+fn spawn_replicated(
+    s: &EmbeddingStore,
+    shards: usize,
+    replicas: usize,
+    tag: &str,
+) -> (Vec<Server>, Vec<FaultProxy>, Vec<Vec<Addr>>) {
+    let mut servers = Vec::new();
+    let mut proxies = Vec::new();
+    let mut groups = Vec::new();
+    for (i, block) in aligned_split(s, shards).into_iter().enumerate() {
+        let mut group = Vec::new();
+        for r in 0..replicas {
+            let (server, addr) = spawn_worker(block.clone(), &format!("{tag}-s{i}r{r}"));
+            servers.push(server);
+            if r == 0 {
+                let proxy =
+                    FaultProxy::start(&sock_addr(&format!("{tag}-p{i}")), addr).unwrap();
+                group.push(proxy.addr().clone());
+                proxies.push(proxy);
+            } else {
+                group.push(addr);
+            }
+        }
+        groups.push(group);
+    }
+    (servers, proxies, groups)
+}
+
+/// The fault proxy's vocabulary, end to end against a real shard
+/// worker: transparent forwarding, dropped response frames surfacing
+/// as a (transient) timeout, mid-frame cuts surfacing as a transient
+/// transport error, and recovery after `restore()`.
+#[test]
+fn fault_proxy_forwards_drops_and_cuts() {
+    let s = store(96, 8);
+    let (server, upstream) = spawn_worker(s.clone(), "proxy-sanity");
+    let proxy = FaultProxy::start(&sock_addr("proxy-sanity"), upstream).unwrap();
+    let cfg = ClientConfig {
+        read_timeout: Some(Duration::from_millis(400)),
+        ..ClientConfig::default()
+    };
+
+    // Forward: the proxy is invisible.
+    let (shard, (len, dim, epoch)) = RemoteShard::connect(proxy.addr().clone(), cfg.clone()).unwrap();
+    assert_eq!((len, dim, epoch), (96, 8, 0));
+    let q = s.row(3).to_vec();
+    let want = exp_sum_view(&ShardedStore::split(&s, 1), &q);
+    assert_eq!(shard.exp_sum_chain(0.0, &q).unwrap().to_bits(), want.to_bits());
+
+    // DropFrames: the response never arrives → the call errs (timeout)
+    // and the error is transient (exactly what failover keys on).
+    proxy.set_mode(FaultMode::DropFrames(1));
+    let err = shard.exp_sum_chain(0.0, &q).unwrap_err();
+    assert!(err.is_transient(), "dropped frame surfaced as {err}");
+
+    // CutAfter: the connection dies mid-frame → transient again. The
+    // slot reconnects through the proxy on the next call.
+    proxy.restore();
+    proxy.set_mode(FaultMode::CutAfter(7));
+    let err = shard.exp_sum_chain(0.0, &q).unwrap_err();
+    assert!(err.is_transient(), "mid-frame cut surfaced as {err}");
+
+    // Restore: the same handle heals by reconnecting lazily.
+    proxy.restore();
+    assert_eq!(shard.exp_sum_chain(0.0, &q).unwrap().to_bits(), want.to_bits());
+
+    drop(shard);
+    drop(proxy);
+    server.shutdown();
+}
+
+/// ACCEPTANCE (tentpole pin): kill one replica of **each** shard in
+/// the middle of a request load. Every request succeeds, every answer
+/// is bit-identical to the monolithic reference, the failover counter
+/// ticks, a publish lands while the replicas are down, and one
+/// `refresh()` after the replicas come back restores full health and
+/// lockstep (verified against the replica directly).
+#[test]
+fn kill_one_replica_per_shard_mid_load_is_invisible() {
+    for shards in [1usize, 2, 4] {
+        for replicas in [2usize, 3] {
+            let s = store(240, 8);
+            let (servers, proxies, groups) =
+                spawn_replicated(&s, shards, replicas, &format!("kill-{shards}x{replicas}"));
+            let cluster = Arc::new(
+                RemoteCluster::connect_groups(
+                    &groups,
+                    ClientConfig {
+                        read_timeout: Some(Duration::from_secs(5)),
+                        ..ClientConfig::default()
+                    },
+                )
+                .unwrap(),
+            );
+            assert_eq!(cluster.len(), 240);
+            assert_eq!(
+                cluster.replica_status(),
+                vec![vec![true; replicas]; shards]
+            );
+
+            let qs: Vec<Vec<f32>> = (0..6).map(|i| s.row(i * 37 + 2).to_vec()).collect();
+            let sharded = ShardedStore::split(&s, shards);
+            let want: Vec<f64> = qs.iter().map(|q| exp_sum_view(&sharded, q)).collect();
+
+            // Load: 12 request waves; halfway through, kill replica 0
+            // of EVERY shard (sever live connections + refuse new
+            // ones). Not one request may fail, and every answer stays
+            // bit-identical.
+            for wave in 0..12 {
+                if wave == 6 {
+                    for proxy in &proxies {
+                        proxy.set_mode(FaultMode::Refuse);
+                        proxy.cut_all();
+                    }
+                }
+                for (q, w) in qs.iter().zip(&want) {
+                    let got = cluster
+                        .exp_sum(q)
+                        .unwrap_or_else(|e| panic!("S={shards} R={replicas} wave {wave}: {e}"));
+                    assert_eq!(
+                        got.to_bits(),
+                        w.to_bits(),
+                        "S={shards} R={replicas} wave {wave}: {got} vs {w}"
+                    );
+                }
+                let got = cluster.exp_sum_batch(&qs).unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits());
+                }
+            }
+            assert!(
+                cluster.failovers() > 0,
+                "S={shards} R={replicas}: the kill never triggered a failover"
+            );
+
+            // A publish lands while every shard's replica 0 is dead:
+            // the live peers carry it (R ≥ 2 everywhere).
+            let extra = store(8, 8);
+            let epoch = cluster.add_categories(&extra).unwrap();
+            assert_eq!(epoch, 1);
+            assert_eq!(cluster.len(), 248);
+            let dead_are_unhealthy = cluster
+                .replica_status()
+                .iter()
+                .all(|g| !g[0] && g[1..].iter().all(|&h| h));
+            assert!(
+                dead_are_unhealthy,
+                "replica_status after kill+publish: {:?}",
+                cluster.replica_status()
+            );
+
+            // Reconnect + one refresh(): the killed replicas missed the
+            // commit (and possibly the prepare); the publish-log replay
+            // restores lockstep and full health.
+            for proxy in &proxies {
+                proxy.restore();
+            }
+            cluster.refresh().unwrap();
+            assert_eq!(
+                cluster.replica_status(),
+                vec![vec![true; replicas]; shards],
+                "S={shards} R={replicas}: heal did not restore full health"
+            );
+            assert_eq!(cluster.epoch(), 1);
+
+            // The healed replicas really serve the published epoch:
+            // ask each one directly, through its proxy. The appended
+            // rows joined the LAST shard, all other block lengths are
+            // unchanged.
+            let orig_lens: Vec<usize> =
+                aligned_split(&s, shards).iter().map(|b| b.len()).collect();
+            for (shard_idx, proxy) in proxies.iter().enumerate() {
+                let (_, (len, _, epoch)) =
+                    RemoteShard::connect(proxy.addr().clone(), ClientConfig::default()).unwrap();
+                assert_eq!(
+                    epoch, 1,
+                    "S={shards} R={replicas}: replica 0 of shard {shard_idx} not at lockstep"
+                );
+                let want_len =
+                    orig_lens[shard_idx] + if shard_idx == shards - 1 { 8 } else { 0 };
+                assert_eq!(len, want_len);
+            }
+
+            // And answers over the grown set stay bit-exact with the
+            // full replica set back in rotation (appends land on the
+            // last worker, so 4-aligned boundaries are preserved and
+            // the monolithic view matches bit for bit).
+            let mut combined = s.data().to_vec();
+            combined.extend_from_slice(extra.data());
+            let grown = EmbeddingStore::from_data(248, 8, combined).unwrap();
+            for q in &qs {
+                let w = exp_sum_view(&grown, q);
+                assert_eq!(cluster.exp_sum(q).unwrap().to_bits(), w.to_bits());
+            }
+
+            drop(cluster);
+            drop(proxies);
+            for server in servers {
+                server.shutdown();
+            }
+        }
+    }
+}
+
+/// A seeded fault schedule — delays and mid-frame cuts assigned
+/// per-connection from one seed — runs under a full request load on
+/// replica 0's link. Every request must still succeed bit-exactly:
+/// failover absorbs the cut connections, delays just slow their
+/// requests down. Replayable from the seed alone.
+#[test]
+fn seeded_fault_schedule_never_corrupts_answers() {
+    let (shards, replicas) = (2usize, 2usize);
+    let s = store(160, 8);
+    let (servers, proxies, groups) = spawn_replicated(&s, shards, replicas, "seeded");
+    let cluster = Arc::new(
+        RemoteCluster::connect_groups(
+            &groups,
+            ClientConfig {
+                read_timeout: Some(Duration::from_secs(5)),
+                ..ClientConfig::default()
+            },
+        )
+        .unwrap(),
+    );
+    // Pin the schedule AFTER the healthy connect, then sever the
+    // initial connections so every reconnect samples a schedule slot.
+    for proxy in &proxies {
+        proxy.set_schedule(Some(FaultSchedule::seeded(0xC4A05, 16)));
+        proxy.cut_all();
+    }
+    let qs: Vec<Vec<f32>> = (0..4).map(|i| s.row(i * 31 + 1).to_vec()).collect();
+    let sharded = ShardedStore::split(&s, shards);
+    let want: Vec<f64> = qs.iter().map(|q| exp_sum_view(&sharded, q)).collect();
+    for _wave in 0..10 {
+        let got = cluster.exp_sum_batch(&qs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+    // Each proxy saw its initial connect plus at least one reconnect
+    // after the cut (round-robin guarantees the proxied replica is
+    // picked again).
+    assert!(
+        proxies.iter().map(FaultProxy::accepted).sum::<usize>() >= 4,
+        "schedule never forced a reconnect: {:?}",
+        proxies.iter().map(FaultProxy::accepted).collect::<Vec<_>>()
+    );
+    drop(cluster);
+    drop(proxies);
+    for server in servers {
+        server.shutdown();
+    }
+}

@@ -160,6 +160,94 @@ fn overload_sheds_but_completes_accepted() {
     svc.shutdown();
 }
 
+/// Every replica of a shard down at once: failover has nowhere left to
+/// go, so the scatter surfaces a **typed** backend failure — the caller
+/// sees a clean `SubmitError`, `backend_errors` and the per-shard error
+/// counter tick, and nothing panics or hangs. (One replica down is the
+/// invisible case — covered by `tests/chaos.rs`; this is the floor
+/// below it.)
+#[test]
+fn all_replicas_down_is_a_typed_error_not_a_hang() {
+    use zest::coordinator::ClusterBackend;
+    use zest::net::client::ClientConfig;
+    use zest::net::server::{Server, ServerConfig};
+    use zest::net::shard::ShardWorker;
+    use zest::net::Addr;
+    use zest::coordinator::ServiceMetrics;
+
+    let s = generate(&SynthConfig {
+        n: 240,
+        d: 8,
+        ..SynthConfig::tiny()
+    });
+    // One shard × two replicas, over loopback TCP (a killed listener
+    // refuses new connections immediately — the fast-failure path).
+    let mut servers = Vec::new();
+    let mut group = Vec::new();
+    for _ in 0..2 {
+        let server = Server::serve(
+            &Addr::Tcp("127.0.0.1:0".to_string()),
+            Arc::new(ShardWorker::new(s.clone())),
+            ServerConfig::default(),
+            Arc::new(ServiceMetrics::new()),
+        )
+        .unwrap();
+        group.push(server.local_addr().clone());
+        servers.push(server);
+    }
+    let backend = ClusterBackend::connect_groups(
+        &[group],
+        ClientConfig {
+            read_timeout: Some(std::time::Duration::from_secs(5)),
+            ..ClientConfig::default()
+        },
+    )
+    .unwrap();
+    let cluster = backend.cluster().clone();
+    let svc = PartitionService::start_with_backend(
+        backend,
+        ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        },
+    );
+    cluster.set_metrics(svc.metrics_handle());
+
+    // Healthy sanity pass.
+    let q = s.row(3).to_vec();
+    let ok = svc.estimate(EstimateSpec::new(q.clone())).unwrap();
+    assert!(ok.z.is_finite());
+
+    // Take BOTH replicas down, then ask again: the batch leader's
+    // scatter exhausts the replica set, the backend error drops the
+    // reply channel, and the caller observes `Closed` — typed, prompt,
+    // no panic.
+    for server in servers {
+        server.shutdown();
+    }
+    let err = svc
+        .estimate(EstimateSpec::new(q.clone()))
+        .expect_err("a fully-down shard must surface an error");
+    assert!(
+        matches!(err, SubmitError::Closed | SubmitError::DeadlineExceeded),
+        "want a typed channel-drop error, got {err}"
+    );
+
+    // The failure is visible in metrics: the backend error counted,
+    // attributed to the one shard everything failed on.
+    let m = svc.metrics();
+    assert!(m.backend_errors >= 1, "{m}");
+    assert!(
+        m.shard_stats.iter().any(|st| st.shard == 0 && st.errors >= 1),
+        "per-shard error attribution missing: {m}"
+    );
+
+    // Still alive: the service keeps answering (with errors) rather
+    // than wedging, and shuts down cleanly.
+    assert!(svc.estimate(EstimateSpec::new(q)).is_err());
+    svc.shutdown();
+}
+
 /// Corrupt artifacts directory: runtime load fails with a clear error and
 /// no thread leak (join handle returns).
 #[test]

@@ -49,7 +49,7 @@ use zest::estimators::{
 };
 use zest::mips::brute::BruteIndex;
 use zest::net::client::{ClientConfig, ClientError, PartitionClient};
-use zest::net::remote::{aligned_split, ClusterHandler, RemoteCluster};
+use zest::net::remote::{aligned_split, ClusterHandler, RemoteCluster, RemoteShard};
 use zest::net::server::{Handler, Server, ServerConfig, ServiceHandler};
 use zest::net::shard::ShardWorker;
 use zest::net::{wire, Addr};
@@ -1360,6 +1360,106 @@ fn refresh_auto_heals_a_missed_commit() {
     // Healed state is sticky: another publish goes through cleanly.
     assert_eq!(cluster.remove_categories(&[0]).unwrap(), 2);
     assert_eq!(cluster.len(), 247);
+
+    drop(cluster);
+    for server in servers {
+        server.shutdown();
+    }
+}
+
+/// REGRESSION: a replica that misses **two consecutive commits** heals
+/// from the coordinator's publish log. The pre-replica heal path kept
+/// only the single most recent unresolved `(token, epoch)` — a worker
+/// lagging by two epochs was unhealable short of an operator restart
+/// with fresh data. The log-replay path must walk *every* missed
+/// publish in order: replay the recorded prepare when the replica holds
+/// no staging, then the commit, for each missed epoch.
+#[test]
+fn refresh_heals_two_missed_commits_from_the_publish_log() {
+    let s = store(240, 8);
+    let block = aligned_split(&s, 1).pop().unwrap();
+
+    // One shard, two replicas (A direct, B about to die).
+    let (mut servers, addrs) = {
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        for r in 0..2 {
+            let addr = sock_addr(&format!("lag2-r{r}"));
+            let server = Server::serve(
+                &addr,
+                Arc::new(ShardWorker::new(block.clone())),
+                ServerConfig::default(),
+                Arc::new(ServiceMetrics::new()),
+            )
+            .unwrap();
+            addrs.push(server.local_addr().clone());
+            servers.push(server);
+        }
+        (servers, addrs)
+    };
+    let cluster =
+        RemoteCluster::connect_groups(&[addrs.clone()], ClientConfig::default()).unwrap();
+    let q = s.row(3).to_vec();
+    let before = cluster.exp_sum(&q).unwrap();
+
+    // Kill replica B, then land TWO publishes through A alone.
+    servers.pop().unwrap().shutdown();
+    let add1 = generate(&SynthConfig {
+        n: 8,
+        d: 8,
+        seed: 21,
+        ..SynthConfig::tiny()
+    });
+    let add2 = generate(&SynthConfig {
+        n: 4,
+        d: 8,
+        seed: 22,
+        ..SynthConfig::tiny()
+    });
+    assert_eq!(cluster.add_categories(&add1).unwrap(), 1);
+    assert_eq!(cluster.add_categories(&add2).unwrap(), 2);
+    assert_eq!(cluster.len(), 252);
+    assert_eq!(
+        cluster.replica_status(),
+        vec![vec![true, false]],
+        "the dead replica must be marked unhealthy"
+    );
+
+    // Restart B on the same address with the ORIGINAL block: epoch 0,
+    // two publishes behind — beyond what a lag-1 heal could fix.
+    let server_b = Server::serve(
+        &addrs[1],
+        Arc::new(ShardWorker::new(block)),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    servers.push(server_b);
+
+    // ONE refresh replays both logged publishes (prepare + commit each,
+    // since the restarted worker holds no staging) and restores
+    // lockstep and full health.
+    cluster.refresh().unwrap();
+    assert_eq!(cluster.epoch(), 2);
+    assert_eq!(cluster.len(), 252);
+    assert_eq!(cluster.replica_status(), vec![vec![true, true]]);
+
+    // B really serves epoch 2 with the full grown set: ask it directly.
+    let (_, (len, dim, epoch)) =
+        RemoteShard::connect(addrs[1].clone(), ClientConfig::default()).unwrap();
+    assert_eq!((len, dim, epoch), (252, 8, 2));
+
+    // And the healed cluster's answers are bit-identical to the
+    // monolithic grown reference (appends land on the last — only —
+    // worker; boundaries unchanged).
+    let mut combined = s.data().to_vec();
+    combined.extend_from_slice(add1.data());
+    combined.extend_from_slice(add2.data());
+    let grown = EmbeddingStore::from_data(252, 8, combined).unwrap();
+    let want = exp_sum_view(&grown, &q);
+    let got = cluster.exp_sum(&q).unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "{got} vs {want}");
+    assert!(got > before);
 
     drop(cluster);
     for server in servers {

@@ -494,6 +494,128 @@ fn prop_wire_truncation_is_total() {
     });
 }
 
+/// The replica-failover decision functions, fuzzed over their whole
+/// input space. Two functions gate every failover in
+/// `net::remote::ReplicaSet`:
+///
+/// * `ClientError::is_transient` — retry-on-another-replica iff the
+///   *connection or worker* failed, never when the *request* is bad.
+///   Exactly `Wire`, `ConnectionClosed`, `ConnectionLost`, and a
+///   `Remote { ConnLimit }` rejection are transient; every other remote
+///   code and `Protocol` are fatal; `Shard` attribution layers must
+///   never change the decision.
+/// * `resend_safe` — blind re-send on a fresh connection is allowed for
+///   every wire request except `Commit`, which may have already
+///   executed when its response was lost.
+///
+/// This PR adds **no new wire messages** (failover is built from the
+/// existing vocabulary), so there are no new golden-byte vectors —
+/// `prop_wire_codec_roundtrips` above already covers every frame.
+#[test]
+fn prop_failover_retry_decision() {
+    use zest::net::client::{resend_safe, ClientError};
+    use zest::net::wire::{ErrorCode, Request, WireError};
+
+    fn random_wire_error(rng: &mut Rng) -> WireError {
+        match rng.below(5) {
+            0 => WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "fuzzed reset",
+            )),
+            1 => WireError::BadMagic(*b"nope"),
+            2 => WireError::BadVersion(rng.below(1 << 16) as u16),
+            3 => WireError::FrameTooLarge(rng.below(1 << 40)),
+            _ => WireError::Malformed(format!("fuzz {}", rng.below(1000))),
+        }
+    }
+
+    /// A random base error plus the independently-computed expected
+    /// classification (spelled out, not derived via the code under test).
+    fn random_error(rng: &mut Rng) -> (ClientError, bool) {
+        match rng.below(5) {
+            0 => (ClientError::Wire(random_wire_error(rng)), true),
+            1 => {
+                let code = ErrorCode::from_u16(rng.below(13) as u16);
+                let transient = code == ErrorCode::ConnLimit;
+                (
+                    ClientError::Remote {
+                        code,
+                        message: format!("fuzz {}", rng.below(1000)),
+                    },
+                    transient,
+                )
+            }
+            2 => (
+                ClientError::Protocol(format!("fuzz {}", rng.below(1000))),
+                false,
+            ),
+            3 => (ClientError::ConnectionClosed, true),
+            _ => (
+                ClientError::ConnectionLost(format!("fuzz {}", rng.below(1000))),
+                true,
+            ),
+        }
+    }
+
+    fn random_request(rng: &mut Rng) -> Request {
+        match rng.below(8) {
+            0 => Request::Ping,
+            1 => Request::Manifest,
+            2 => Request::ExpSumChain {
+                acc: rng.normal(),
+                query: (0..rng.range(1, 8)).map(|_| rng.normal() as f32).collect(),
+            },
+            3 => Request::ScoreIds {
+                ids: (0..rng.below(8)).map(|_| rng.next_u64() >> 32).collect(),
+                query: (0..rng.range(1, 8)).map(|_| rng.normal() as f32).collect(),
+            },
+            4 => Request::PrepareAdd {
+                token: rng.next_u64(),
+                dim: rng.range(1, 8) as u64,
+                rows: (0..rng.below(32)).map(|_| rng.normal() as f32).collect(),
+            },
+            5 => Request::PrepareRemove {
+                token: rng.next_u64(),
+                ids: (0..rng.below(8)).map(|_| rng.next_u64() >> 40).collect(),
+            },
+            6 => Request::Abort {
+                token: rng.next_u64(),
+            },
+            _ => Request::Commit {
+                token: rng.next_u64(),
+            },
+        }
+    }
+
+    check(400, |rng| {
+        let (mut err, want_transient) = random_error(rng);
+        // Bury it under 0–3 layers of shard attribution: naming the
+        // failing worker must never flip the retry decision.
+        for _ in 0..rng.below(4) {
+            err = ClientError::Shard {
+                shard: rng.below(64),
+                source: Box::new(err),
+            };
+        }
+        if err.is_transient() != want_transient {
+            return Err(format!(
+                "is_transient({err}) = {}, want {want_transient}",
+                err.is_transient()
+            ));
+        }
+
+        let req = random_request(rng);
+        let want_safe = !matches!(req, Request::Commit { .. });
+        if resend_safe(&req) != want_safe {
+            return Err(format!(
+                "resend_safe({req:?}) = {}, want {want_safe}",
+                resend_safe(&req)
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// K-means-tree search with full budget equals brute top-k for any store.
 #[test]
 fn prop_tree_full_budget_exact() {
