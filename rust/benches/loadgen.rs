@@ -1,0 +1,70 @@
+//! Loadgen self-bench: how fast can the generator *generate*?
+//!
+//! The open-loop invariant only holds while the scheduler outpaces the
+//! offered rate — if sampling the mix or materializing a spec were
+//! slower than the inter-arrival gap, the schedule itself would become
+//! the bottleneck and silently depress offered load. This bench pins
+//! the dispatch-path cost (schedule step + Zipf draw + spec build) so
+//! a regression is visible as a ceiling on sustainable offered rates.
+
+mod bench_common;
+
+use zest::loadgen::{default_classes, Arrival, Schedule, WorkloadMix};
+use zest::util::json::Json;
+use zest::util::rng::Rng;
+
+fn main() {
+    let env = bench_common::env();
+    let users = if env.scale == "paper" { 100_000 } else { 10_000 };
+    let dim = 64;
+    println!("== loadgen dispatch path (users={users}, d={dim}) ==");
+
+    let draws = 2_000_000u64;
+    let mut rows = Vec::new();
+    for arrival in [Arrival::Fixed, Arrival::Poisson] {
+        let t0 = std::time::Instant::now();
+        let mut acc = std::time::Duration::ZERO;
+        for at in Schedule::new(1e6, arrival, 7).take(draws as usize) {
+            acc += at;
+        }
+        let wall = t0.elapsed();
+        let hz = draws as f64 / wall.as_secs_f64();
+        println!("schedule/{arrival}: {hz:>12.0} steps/s (checksum {acc:?})");
+        rows.push((format!("schedule_{arrival}_hz"), hz));
+    }
+
+    let mix = WorkloadMix::new(users, 1.1, dim, default_classes(), 7);
+    let mut rng = Rng::seeded(9);
+    let t0 = std::time::Instant::now();
+    let mut sink = 0usize;
+    for _ in 0..draws {
+        let req = mix.sample(&mut rng);
+        sink ^= req.user ^ req.class;
+    }
+    let wall = t0.elapsed();
+    let sample_hz = draws as f64 / wall.as_secs_f64();
+    println!("mix sample:       {sample_hz:>12.0} draws/s (sink {sink})");
+    rows.push(("mix_sample_hz".to_string(), sample_hz));
+
+    let specs = 200_000u64;
+    let t0 = std::time::Instant::now();
+    let mut dims = 0usize;
+    for _ in 0..specs {
+        let req = mix.sample(&mut rng);
+        dims += mix.spec(req).query.len();
+    }
+    let wall = t0.elapsed();
+    let spec_hz = specs as f64 / wall.as_secs_f64();
+    println!("spec build:       {spec_hz:>12.0} specs/s (dims {dims})");
+    rows.push(("spec_build_hz".to_string(), spec_hz));
+
+    let json = Json::obj(
+        rows.iter()
+            .map(|(k, v)| (k.as_str(), Json::num(*v)))
+            .collect(),
+    );
+    bench_common::write_json(&env, "loadgen_dispatch", &json);
+    // CI-visible copy at the package root, like the fanout sections.
+    std::fs::write("BENCH_loadgen_dispatch.json", json.to_string()).ok();
+    println!("(json: BENCH_loadgen_dispatch.json)");
+}

@@ -1,0 +1,308 @@
+//! `zest-loadgen` — open-loop load generator for the partition server.
+//!
+//! Fires requests at a fixed offered rate (absolute-deadline schedule
+//! off a monotonic clock — never gated on responses), drawing a Zipf
+//! query mix over thousands of simulated users with mixed estimator
+//! kinds, budgets, precisions and deadlines, and sweeps a rate ladder
+//! to bracket the saturation knee. Emits the `BENCH_load.json` schema
+//! (`zest-load-v1`) on stdout or to `--out`.
+//!
+//! ```bash
+//! # against a live server (CI perf-smoke shape):
+//! zest-loadgen --server tcp://127.0.0.1:7070 \
+//!     --rates 200,400,800 --duration-ms 2000 --users 5000 --sessions 64
+//! # self-spawned cluster, healthy:
+//! zest-loadgen --synth 8192,32 --shards 2 --replicas 2 \
+//!     --rates 200,400,800,1600 --publish-period-ms 500
+//! # self-spawned cluster, chaos under load (replica kill mid-point +
+//! # epoch publishes; replica 0 of every shard rides a fault proxy):
+//! zest-loadgen --synth 8192,32 --shards 2 --replicas 2 --chaos \
+//!     --rates 200,400 --hedge-delay-ms 5 --scenario chaos
+//! ```
+//!
+//! Two target modes:
+//!
+//! * `--server ADDR` — drive an external `zest-server`. Publishes and
+//!   chaos are **disabled**: epoch publishes must go through the
+//!   serving coordinator (a second coordinator publishing to the same
+//!   workers trips the split-brain guards), and an external server's
+//!   links aren't ours to cut.
+//! * self-spawn (default) — build the full cluster in-process
+//!   (`loadgen::ClusterHarness`): synth store → shard workers ×
+//!   replicas (replica 0 proxied under `--chaos`) → batching service →
+//!   real TCP front door. A writer thread publishes add/remove epochs
+//!   every `--publish-period-ms`; under `--chaos`, replica 0 of every
+//!   shard is killed for the middle third of each sweep point.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use zest::loadgen::{
+    default_classes, document, find_knee, run_open_loop, to_point, Arrival, ClusterHarness,
+    HarnessConfig, LoadReport, MetricsDelta, RunConfig, WorkloadMix,
+};
+use zest::net::client::{ClientConfig, PartitionClient};
+use zest::net::Addr;
+use zest::obs::MetricsBlob;
+use zest::testing::fault::FaultMode;
+use zest::util::cli::{Args, HelpBuilder};
+
+fn main() {
+    zest::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", help());
+        return;
+    }
+    if let Err(e) = run(argv) {
+        eprintln!("zest-loadgen: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn help() -> String {
+    HelpBuilder::new("zest-loadgen", "open-loop load generator (BENCH_load.json emitter)")
+        .flag("server", "", "external target address (disables publishes/chaos)")
+        .flag("synth", "8192,32", "self-spawn store: N,D")
+        .flag("shards", "2", "self-spawn shard workers")
+        .flag("replicas", "2", "self-spawn replicas per shard")
+        .flag("chaos", "false", "kill replica 0 of every shard mid-point (self-spawn)")
+        .flag("publish-period-ms", "500", "writer-thread epoch publish cadence (0 off)")
+        .flag("hedge-delay-ms", "0", "TopK hedge delay on the spawned cluster (0 off)")
+        .flag("rates", "200,400,800", "offered-rate ladder, req/s")
+        .flag("duration-ms", "2000", "window per rate point")
+        .flag("users", "5000", "simulated Zipf user keys")
+        .flag("zipf-s", "1.1", "Zipf exponent over users")
+        .flag("sessions", "64", "sender threads (concurrency, not rate)")
+        .flag("arrival", "poisson", "arrival process: fixed|poisson")
+        .flag("seed", "1", "schedule + mix seed (replayable)")
+        .flag("scenario", "healthy", "report label")
+        .flag("out", "", "write BENCH_load.json here (default stdout)")
+        .render()
+}
+
+fn scrape(client: &PartitionClient) -> MetricsBlob {
+    client.get_metrics().unwrap_or_default()
+}
+
+fn delta(before: &MetricsBlob, after: &MetricsBlob) -> MetricsDelta {
+    let d = |name: &str| after.counter(name).saturating_sub(before.counter(name));
+    MetricsDelta {
+        cache_hits: d("cache_hits"),
+        cache_misses: d("cache_misses"),
+        failovers: d("shard_failovers"),
+        hedges: d("shard_hedges"),
+    }
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv).map_err(anyhow::Error::msg)?;
+    args.check_known(&[
+        "server",
+        "synth",
+        "shards",
+        "replicas",
+        "chaos",
+        "publish-period-ms",
+        "hedge-delay-ms",
+        "rates",
+        "duration-ms",
+        "users",
+        "zipf-s",
+        "sessions",
+        "arrival",
+        "seed",
+        "scenario",
+        "out",
+    ])
+    .map_err(anyhow::Error::msg)?;
+
+    let rates: Vec<f64> = args.get_list("rates", &[200.0, 400.0, 800.0]);
+    anyhow::ensure!(!rates.is_empty(), "--rates must name at least one rate");
+    let duration = Duration::from_millis(args.get_or("duration-ms", 2000u64));
+    let users: usize = args.get_or("users", 5000);
+    let zipf_s: f64 = args.get_or("zipf-s", 1.1);
+    let sessions: usize = args.get_or("sessions", 64);
+    let arrival = Arrival::parse(args.get("arrival").unwrap_or("poisson"))
+        .map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 1);
+    let chaos = args.get_bool("chaos");
+    let publish_period = Duration::from_millis(args.get_or("publish-period-ms", 500u64));
+    let scenario = args
+        .get("scenario")
+        .unwrap_or(if chaos { "chaos" } else { "healthy" })
+        .to_string();
+
+    // Target: external server, or a self-spawned cluster.
+    let mut shards = 0usize;
+    let mut replicas = 0usize;
+    let harness = if args.has("server") {
+        anyhow::ensure!(
+            !chaos,
+            "--chaos needs the self-spawned cluster (an external server's \
+             replicas and links aren't ours to kill)"
+        );
+        None
+    } else {
+        let synth: Vec<usize> = args.get_list("synth", &[8192usize, 32]);
+        anyhow::ensure!(synth.len() == 2, "--synth wants N,D");
+        shards = args.get_or("shards", 2);
+        replicas = args.get_or("replicas", 2);
+        let hedge_ms: u64 = args.get_or("hedge-delay-ms", 0);
+        let h = ClusterHarness::spawn(&HarnessConfig {
+            n: synth[0],
+            dim: synth[1],
+            shards,
+            replicas,
+            proxied: chaos,
+            seed,
+            max_connections: (sessions + 16).max(512),
+            hedge_delay: (hedge_ms > 0).then(|| Duration::from_millis(hedge_ms)),
+            ..HarnessConfig::default()
+        })?;
+        Some(h)
+    };
+    let addr = match args.get("server") {
+        Some(a) => Addr::parse(a)?,
+        None => harness.as_ref().unwrap().addr.clone(),
+    };
+
+    let client = Arc::new(
+        PartitionClient::connect(addr.clone(), ClientConfig::for_sessions(sessions))
+            .map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?,
+    );
+    let (len, dim, epoch) = client
+        .manifest()
+        .map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    log::info!("target {addr}: {len} categories × {dim} dims at epoch {epoch}");
+    let mix = Arc::new(WorkloadMix::new(users, zipf_s, dim, default_classes(), seed));
+    let base = RunConfig {
+        rate_hz: rates[0],
+        duration,
+        sessions,
+        arrival,
+        seed,
+    };
+
+    // Writer thread: epoch publishes through the serving coordinator,
+    // for the whole sweep. Self-spawn only.
+    let stop = Arc::new(AtomicBool::new(true));
+    let writer = harness.as_ref().filter(|_| !publish_period.is_zero()).map(|h| {
+        stop.store(false, Ordering::Relaxed);
+        let stop = Arc::clone(&stop);
+        let svc = Arc::clone(&h.svc);
+        let dim = h.dim();
+        std::thread::spawn(move || {
+            let mut wave = 0u64;
+            let mut pending = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(publish_period);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                // Alternate add/remove so the serving set stays
+                // size-stable; publishes go through the coordinator's
+                // own handles (frontdoor invalidation included).
+                let outcome = if pending == 0 {
+                    let fresh = zest::data::synth::generate(&zest::data::synth::SynthConfig {
+                        n: 64,
+                        d: dim,
+                        seed: wave ^ 0x9B11_5EED,
+                        ..zest::data::synth::SynthConfig::tiny()
+                    });
+                    pending = 64;
+                    svc.add_categories(fresh).map(|e| ("add", e))
+                } else {
+                    let (len, _) = svc.serving_info();
+                    let ids: Vec<usize> = (len - pending..len).collect();
+                    pending = 0;
+                    svc.remove_categories(&ids).map(|e| ("remove", e))
+                };
+                match outcome {
+                    Ok((op, epoch)) => log::info!("writer: {op} wave {wave} → epoch {epoch}"),
+                    Err(e) => log::warn!("writer: publish wave {wave} failed: {e}"),
+                }
+                wave += 1;
+            }
+        })
+    });
+
+    let mut points = Vec::new();
+    for &rate in &rates {
+        let cfg = RunConfig { rate_hz: rate, ..base.clone() };
+        let before = scrape(&client);
+        // Chaos choreography: replica 0 of every shard dies for the
+        // middle third of the point, then heals. Scoped so the kill
+        // thread borrows the harness proxies and joins with the point.
+        let stats = std::thread::scope(|scope| {
+            if let Some(h) = harness.as_ref().filter(|_| chaos) {
+                let third = duration / 3;
+                scope.spawn(move || {
+                    std::thread::sleep(third);
+                    for p in &h.proxies {
+                        p.set_mode(FaultMode::Refuse);
+                        p.cut_all();
+                    }
+                    std::thread::sleep(third);
+                    for p in &h.proxies {
+                        p.restore();
+                    }
+                });
+            }
+            run_open_loop(&client, &mix, &cfg)
+        });
+        let after = scrape(&client);
+        let point = to_point(&stats, &delta(&before, &after));
+        log::info!(
+            "rate {rate:.0}/s: achieved {:.0}/s p99 {:.2}ms shed {} failed {}",
+            point.achieved_hz,
+            point.p99_ms,
+            point.shed,
+            point.failed
+        );
+        points.push(point);
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    if let Some(w) = writer {
+        let _ = w.join();
+    }
+
+    let knee = find_knee(&points);
+    let report = LoadReport {
+        scenario,
+        users,
+        zipf_s,
+        sessions,
+        duration_ms: duration.as_millis() as u64,
+        arrival: arrival.to_string(),
+        seed,
+        shards,
+        replicas,
+        points,
+        knee_hz: knee,
+    };
+    match knee {
+        Some(hz) => log::info!("saturation knee at {hz:.0}/s offered"),
+        None => log::info!("no knee within the sweep (system kept up)"),
+    }
+    let text = document(std::slice::from_ref(&report)).to_string();
+    match args.get("out") {
+        Some(path) if !path.is_empty() => {
+            std::fs::write(path, text.as_bytes())?;
+            log::info!("wrote {path}");
+        }
+        _ => {
+            let mut out = std::io::stdout().lock();
+            out.write_all(text.as_bytes())?;
+            out.write_all(b"\n")?;
+        }
+    }
+
+    drop(client);
+    if let Some(h) = harness {
+        h.shutdown();
+    }
+    Ok(())
+}

@@ -77,6 +77,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "seed",
         "trace-sample-rate",
         "metrics-listen",
+        "hedge-delay-ms",
     ])
     .map_err(anyhow::Error::msg)?;
     let listen: String = args.require("listen").map_err(anyhow::Error::msg)?;
@@ -91,6 +92,11 @@ fn run(argv: Vec<String>) -> Result<()> {
     // traces everything). Sampled traces land in the service's ring and
     // feed the per-stage histograms `--metrics-listen` exposes.
     let trace_sample_rate: f64 = args.get_or("trace-sample-rate", 0.0);
+    // Hedge delay for idempotent replica reads (TopK): a read still
+    // unanswered after this long is duplicated to the next healthy
+    // replica and the first answer wins. 0 disables (the default);
+    // only meaningful with ≥ 2 replicas per shard.
+    let hedge_delay_ms: u64 = args.get_or("hedge-delay-ms", 0);
 
     // What a `GET /metrics` scrape reports: the serving stack's own
     // sink, merged with the worker fan-out where one exists.
@@ -133,6 +139,9 @@ fn run(argv: Vec<String>) -> Result<()> {
         // Failovers tick the same per-shard table the batcher's scatter
         // errors land in (`shard_stats[..].failovers`).
         cluster.set_metrics(svc.metrics_handle());
+        if hedge_delay_ms > 0 {
+            cluster.set_hedge_delay(std::time::Duration::from_millis(hedge_delay_ms));
+        }
         metrics = Some(svc.metrics_handle());
         let scrape = svc.clone();
         metrics_source = Arc::new(move || {
@@ -164,6 +173,9 @@ fn run(argv: Vec<String>) -> Result<()> {
         // sink with the worker fan-out.
         let sink = Arc::new(ServiceMetrics::new());
         cluster.set_metrics(sink.clone());
+        if hedge_delay_ms > 0 {
+            cluster.set_hedge_delay(std::time::Duration::from_millis(hedge_delay_ms));
+        }
         metrics = Some(sink.clone());
         let scrape_cluster = cluster.clone();
         metrics_source = Arc::new(move || {

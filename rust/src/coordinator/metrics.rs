@@ -100,6 +100,7 @@ struct ShardStatAcc {
     exec_ns: u64,
     errors: u64,
     failovers: u64,
+    hedges: u64,
 }
 
 /// Point-in-time per-shard counters (sharded serving only). Counters
@@ -129,6 +130,11 @@ pub struct ShardStat {
     /// rising count with zero `errors` is the healthy-failover
     /// signature: a replica is down but its peers absorb the traffic.
     pub failovers: u64,
+    /// Hedged reads this epoch: duplicates fired to a second replica
+    /// after the hedge delay elapsed with the primary unanswered
+    /// (`--hedge-delay-ms`). A rising count with flat `failovers` means
+    /// the tail is being shaved, not that anything is down.
+    pub hedges: u64,
 }
 
 impl ServiceMetrics {
@@ -234,6 +240,18 @@ impl ServiceMetrics {
             g.1.resize(shard + 1, ShardStatAcc::default());
         }
         g.1[shard].failovers += 1;
+    }
+
+    /// Attribute one hedged read (a duplicate fired to a second replica
+    /// after the hedge delay) to shard `shard` of the **current** epoch
+    /// table, mirroring [`ServiceMetrics::on_shard_error`]'s
+    /// grow-as-needed semantics.
+    pub fn on_shard_hedge(&self, shard: usize) {
+        let mut g = self.shards.lock().unwrap();
+        if g.1.len() <= shard {
+            g.1.resize(shard + 1, ShardStatAcc::default());
+        }
+        g.1[shard].hedges += 1;
     }
 
     /// One request answered synchronously from the result cache.
@@ -397,6 +415,7 @@ impl ServiceMetrics {
                     exec_ns: a.exec_ns,
                     errors: a.errors,
                     failovers: a.failovers,
+                    hedges: a.hedges,
                 })
                 .collect(),
             net: NetStats {
@@ -643,6 +662,9 @@ impl std::fmt::Display for MetricsSnapshot {
                 }
                 if s.failovers > 0 {
                     write!(f, ",failovers={}", s.failovers)?;
+                }
+                if s.hedges > 0 {
+                    write!(f, ",hedges={}", s.hedges)?;
                 }
             }
             write!(f, "]")?;

@@ -62,6 +62,7 @@ pub mod estimators;
 pub mod experiments;
 pub mod linalg;
 pub mod lm;
+pub mod loadgen;
 pub mod metrics;
 pub mod mips;
 pub mod net;

@@ -1,0 +1,206 @@
+//! Self-spawned cluster under test: synth store → shard workers ×
+//! replicas (optionally behind fault proxies) → `ClusterBackend` →
+//! `PartitionService` → a real wire front door.
+//!
+//! The chaos and publish legs of a load run need two things an
+//! external `--server` target cannot offer: a handle on the
+//! coordinator (`add_categories` / `remove_categories` must go through
+//! the *serving* coordinator — a second coordinator publishing to the
+//! same workers would trip the split-brain guards) and a handle on
+//! each replica's network link (the proxies). So `zest-loadgen` spawns
+//! the whole stack in-process, exactly like `zest-server --cluster`
+//! wires it, and drives it over a real TCP socket — the load still
+//! crosses the wire; only process boundaries are elided.
+
+use crate::coordinator::{ClusterBackend, PartitionService, ServiceConfig};
+use crate::data::embeddings::EmbeddingStore;
+use crate::data::synth::{generate, SynthConfig};
+use crate::net::client::ClientConfig;
+use crate::net::remote::aligned_split;
+use crate::net::server::{Server, ServerConfig, ServiceHandler};
+use crate::net::shard::ShardWorker;
+use crate::net::Addr;
+use crate::coordinator::ServiceMetrics;
+use crate::testing::fault::FaultProxy;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Knobs for a self-spawned cluster.
+#[derive(Clone, Debug)]
+pub struct HarnessConfig {
+    /// Synth categories.
+    pub n: usize,
+    /// Dimensionality.
+    pub dim: usize,
+    /// Shard workers.
+    pub shards: usize,
+    /// Replicas per shard (identical blocks).
+    pub replicas: usize,
+    /// Route replica 0 of every shard through a [`FaultProxy`]
+    /// (chaos-under-load: kill/delay/cut that replica mid-run).
+    pub proxied: bool,
+    /// Store + service seed.
+    pub seed: u64,
+    /// Service ingress queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Service worker (batcher executor) threads.
+    pub service_workers: usize,
+    /// Hedge delay for replica `TopK` reads; `None` disables.
+    pub hedge_delay: Option<Duration>,
+    /// Front-door connection cap (size to the session count).
+    pub max_connections: usize,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            n: 4096,
+            dim: 32,
+            shards: 2,
+            replicas: 2,
+            proxied: false,
+            seed: 1,
+            queue_capacity: 4096,
+            service_workers: 4,
+            hedge_delay: None,
+            max_connections: 512,
+        }
+    }
+}
+
+/// A live in-process cluster behind a real wire endpoint.
+pub struct ClusterHarness {
+    /// The serving coordinator — publish epochs through this handle.
+    pub svc: Arc<PartitionService>,
+    /// Front-door address clients connect to.
+    pub addr: Addr,
+    /// One proxy per shard fronting replica 0, in shard order; empty
+    /// unless [`HarnessConfig::proxied`].
+    pub proxies: Vec<FaultProxy>,
+    dim: usize,
+    front: Server,
+    workers: Vec<Server>,
+}
+
+fn loopback() -> Addr {
+    Addr::parse("tcp://127.0.0.1:0").expect("loopback addr parses")
+}
+
+impl ClusterHarness {
+    /// Spawn the full stack. Everything binds TCP loopback port 0, so
+    /// harnesses never collide.
+    pub fn spawn(cfg: &HarnessConfig) -> anyhow::Result<ClusterHarness> {
+        let store = generate(&SynthConfig {
+            n: cfg.n,
+            d: cfg.dim,
+            seed: cfg.seed,
+            ..SynthConfig::tiny()
+        });
+        let mut workers = Vec::new();
+        let mut proxies = Vec::new();
+        let mut groups: Vec<Vec<Addr>> = Vec::new();
+        for block in aligned_split(&store, cfg.shards) {
+            let mut group = Vec::new();
+            for r in 0..cfg.replicas.max(1) {
+                let metrics = Arc::new(ServiceMetrics::new());
+                let server = Server::serve(
+                    &loopback(),
+                    Arc::new(ShardWorker::new(block.clone()).with_metrics(metrics.clone())),
+                    ServerConfig::default(),
+                    metrics,
+                )?;
+                let addr = server.local_addr().clone();
+                workers.push(server);
+                if r == 0 && cfg.proxied {
+                    let proxy = FaultProxy::start(&loopback(), addr)?;
+                    group.push(proxy.addr().clone());
+                    proxies.push(proxy);
+                } else {
+                    group.push(addr);
+                }
+            }
+            groups.push(group);
+        }
+        let backend = ClusterBackend::connect_groups(&groups, ClientConfig::default())
+            .map_err(|e| anyhow::anyhow!("connect harness workers: {e}"))?;
+        let cluster = backend.cluster().clone();
+        if let Some(delay) = cfg.hedge_delay {
+            cluster.set_hedge_delay(delay);
+        }
+        let svc = Arc::new(PartitionService::start_with_backend(
+            backend,
+            ServiceConfig {
+                workers: cfg.service_workers,
+                queue_capacity: cfg.queue_capacity,
+                seed: cfg.seed,
+                ..Default::default()
+            },
+        ));
+        cluster.set_metrics(svc.metrics_handle());
+        let metrics = svc.metrics_handle();
+        let front = Server::serve(
+            &loopback(),
+            Arc::new(ServiceHandler::new(svc.clone())),
+            ServerConfig {
+                max_connections: cfg.max_connections,
+                ..ServerConfig::default()
+            },
+            metrics,
+        )?;
+        let addr = front.local_addr().clone();
+        Ok(ClusterHarness {
+            svc,
+            addr,
+            proxies,
+            dim: cfg.dim,
+            front,
+            workers,
+        })
+    }
+
+    /// Dimensionality the cluster serves.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Publish `rows` fresh synth categories (epoch bump); returns the
+    /// new epoch. The rows derive from `seed` so publish waves are
+    /// replayable.
+    pub fn publish_add(&self, rows: usize, seed: u64) -> anyhow::Result<u64> {
+        let fresh = generate(&SynthConfig {
+            n: rows,
+            d: self.dim,
+            seed: seed ^ 0x9B11_5EED,
+            ..SynthConfig::tiny()
+        });
+        self.svc
+            .add_categories(fresh)
+            .map_err(|e| anyhow::anyhow!("publish add: {e}"))
+    }
+
+    /// Remove the `rows` highest-id categories (epoch bump); returns
+    /// the new epoch. Paired with [`ClusterHarness::publish_add`] this
+    /// keeps the serving set's size stable across a run.
+    pub fn publish_remove_tail(&self, rows: usize) -> anyhow::Result<u64> {
+        let (len, _) = self.svc.serving_info();
+        if rows == 0 || rows >= len {
+            anyhow::bail!("cannot remove {rows} of {len} categories");
+        }
+        let ids: Vec<usize> = (len - rows..len).collect();
+        self.svc
+            .remove_categories(&ids)
+            .map_err(|e| anyhow::anyhow!("publish remove: {e}"))
+    }
+
+    /// Tear the stack down (front door first so clients see clean
+    /// closes, then workers).
+    pub fn shutdown(self) {
+        self.front.shutdown();
+        drop(self.proxies);
+        for w in self.workers {
+            w.shutdown();
+        }
+        // `svc` threads drain on drop of the last Arc.
+        drop(self.svc);
+    }
+}

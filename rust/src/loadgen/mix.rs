@@ -1,0 +1,233 @@
+//! The workload mix: *who* asks *what*.
+//!
+//! Users are simulated keys drawn from a [`Zipf`] law — a handful of
+//! hot users dominate, a long tail appears once — which is both the
+//! empirical shape of query traffic and the regime the front-door
+//! cache is built for: every draw of a hot user repeats that user's
+//! deterministic query, so cache hit rate under load is an emergent
+//! property of the mix, not a scripted scenario. Each request also
+//! draws a weighted *class* (estimator kind, budgets, precision,
+//! deadline), mirroring production traffic where cheap top-k lookups
+//! vastly outnumber exact partition sums.
+
+use crate::coordinator::{EstimateSpec, Precision};
+use crate::estimators::EstimatorKind;
+use crate::util::rng::{Rng, Zipf};
+use std::time::Duration;
+
+/// One request class in the mix: everything of an [`EstimateSpec`]
+/// except the query, plus a sampling weight.
+#[derive(Clone, Debug)]
+pub struct MixClass {
+    /// Display name (report rows, logs).
+    pub name: &'static str,
+    /// Estimator kind.
+    pub kind: EstimatorKind,
+    /// Head budget (kinds that read it; see service validation).
+    pub k: usize,
+    /// Tail budget (kinds that read it).
+    pub l: usize,
+    /// Remote execution precision.
+    pub precision: Precision,
+    /// Latency budget, anchored at the request's scheduled arrival;
+    /// `None` never sheds.
+    pub deadline: Option<Duration>,
+    /// Relative sampling weight (> 0; normalized over the class table).
+    pub weight: f64,
+}
+
+/// The default production-shaped mix: mostly cheap sampler lookups
+/// under tight deadlines, a thin stream of exact sums under loose ones.
+pub fn default_classes() -> Vec<MixClass> {
+    vec![
+        MixClass {
+            name: "nmimps-tight",
+            kind: EstimatorKind::Nmimps,
+            k: 16,
+            l: 0,
+            precision: Precision::BitExact,
+            deadline: Some(Duration::from_millis(100)),
+            weight: 0.40,
+        },
+        MixClass {
+            name: "mimps-tight",
+            kind: EstimatorKind::Mimps,
+            k: 16,
+            l: 32,
+            precision: Precision::BitExact,
+            deadline: Some(Duration::from_millis(100)),
+            weight: 0.25,
+        },
+        MixClass {
+            name: "mince-mid",
+            kind: EstimatorKind::Mince,
+            k: 16,
+            l: 32,
+            precision: Precision::BitExact,
+            deadline: Some(Duration::from_millis(150)),
+            weight: 0.15,
+        },
+        MixClass {
+            name: "fmbe-mid",
+            kind: EstimatorKind::Fmbe,
+            k: 0,
+            l: 0,
+            precision: Precision::BitExact,
+            deadline: Some(Duration::from_millis(150)),
+            weight: 0.10,
+        },
+        MixClass {
+            name: "exact-loose",
+            kind: EstimatorKind::Exact,
+            k: 0,
+            l: 0,
+            precision: Precision::Pipelined,
+            deadline: Some(Duration::from_millis(500)),
+            weight: 0.10,
+        },
+    ]
+}
+
+/// One sampled arrival: user key + class index into the mix table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadRequest {
+    /// Zipf-ranked user key (0 = hottest).
+    pub user: usize,
+    /// Index into [`WorkloadMix::classes`].
+    pub class: usize,
+}
+
+/// A Zipf-over-users workload with per-user deterministic queries and a
+/// weighted class table. Query vectors for every user are materialized
+/// up front (`users × dim × 4` bytes) so sampling on the dispatch path
+/// is an index + clone, never RNG-bound.
+pub struct WorkloadMix {
+    zipf: Zipf,
+    /// `queries[user]` — the user's fixed unit query vector.
+    queries: Vec<Vec<f32>>,
+    classes: Vec<MixClass>,
+    /// Cumulative normalized class weights, for inverse-CDF class draws.
+    cum: Vec<f64>,
+}
+
+impl WorkloadMix {
+    /// A mix over `users` simulated keys with Zipf exponent `zipf_s`,
+    /// `dim`-dimensional queries, and the given class table.
+    /// Deterministic in `seed`: user u's query is the same vector in
+    /// every run with the same seed.
+    pub fn new(
+        users: usize,
+        zipf_s: f64,
+        dim: usize,
+        classes: Vec<MixClass>,
+        seed: u64,
+    ) -> WorkloadMix {
+        assert!(users > 0, "need at least one user");
+        assert!(!classes.is_empty(), "need at least one mix class");
+        assert!(
+            classes.iter().all(|c| c.weight > 0.0),
+            "class weights must be positive"
+        );
+        let mut qrng = Rng::seeded(seed ^ 0x0A11_05E5);
+        let queries = (0..users).map(|_| qrng.unit_vec(dim)).collect();
+        let total: f64 = classes.iter().map(|c| c.weight).sum();
+        let mut acc = 0.0;
+        let cum = classes
+            .iter()
+            .map(|c| {
+                acc += c.weight / total;
+                acc
+            })
+            .collect();
+        WorkloadMix {
+            zipf: Zipf::new(users, zipf_s),
+            queries,
+            classes,
+            cum,
+        }
+    }
+
+    /// Number of simulated users.
+    pub fn users(&self) -> usize {
+        self.queries.len()
+    }
+
+    /// The class table, in `LoadRequest::class` order.
+    pub fn classes(&self) -> &[MixClass] {
+        &self.classes
+    }
+
+    /// The Zipf law user keys are drawn from (frequency tests).
+    pub fn zipf(&self) -> &Zipf {
+        &self.zipf
+    }
+
+    /// User u's fixed query vector.
+    pub fn query(&self, user: usize) -> &[f32] {
+        &self.queries[user]
+    }
+
+    /// Draw one arrival: Zipf user + weighted class.
+    pub fn sample(&self, rng: &mut Rng) -> LoadRequest {
+        let user = self.zipf.sample(rng);
+        let u = rng.f64();
+        let class = self
+            .cum
+            .iter()
+            .position(|&c| u < c)
+            .unwrap_or(self.classes.len() - 1);
+        LoadRequest { user, class }
+    }
+
+    /// Materialize the [`EstimateSpec`] for a sampled arrival. Call at
+    /// the request's **scheduled** time: the class deadline anchors
+    /// here, so budget burned queueing behind a saturated dispatch
+    /// counts against the request exactly as it would for a real user.
+    pub fn spec(&self, req: LoadRequest) -> EstimateSpec {
+        let c = &self.classes[req.class];
+        let mut spec = EstimateSpec::new(self.queries[req.user].clone())
+            .kind(c.kind)
+            .k(c.k)
+            .l(c.l)
+            .precision(c.precision);
+        if let Some(budget) = c.deadline {
+            spec = spec.deadline_in(budget);
+        }
+        spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn user_queries_are_deterministic() {
+        let a = WorkloadMix::new(64, 1.1, 8, default_classes(), 9);
+        let b = WorkloadMix::new(64, 1.1, 8, default_classes(), 9);
+        for u in 0..64 {
+            assert_eq!(a.query(u), b.query(u));
+        }
+    }
+
+    #[test]
+    fn class_draws_follow_weights() {
+        let mix = WorkloadMix::new(16, 1.0, 4, default_classes(), 11);
+        let mut rng = Rng::seeded(5);
+        let mut counts = vec![0usize; mix.classes().len()];
+        let draws = 200_000;
+        for _ in 0..draws {
+            counts[mix.sample(&mut rng).class] += 1;
+        }
+        let total: f64 = mix.classes().iter().map(|c| c.weight).sum();
+        for (i, c) in mix.classes().iter().enumerate() {
+            let want = c.weight / total;
+            let got = counts[i] as f64 / draws as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "class {}: frequency {got} vs weight {want}",
+                c.name
+            );
+        }
+    }
+}

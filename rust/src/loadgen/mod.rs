@@ -1,0 +1,42 @@
+//! Open-loop load generation: the million-user workload harness.
+//!
+//! Microbenches measure *operations*; this subsystem measures
+//! *traffic*. The generator is **open-loop**: request arrival times are
+//! absolute deadlines derived from a monotonic clock and a target rate
+//! ([`Schedule`]), never gated on responses. A closed-loop generator
+//! (issue → wait → issue) silently stops offering load the moment the
+//! server stalls, which deletes exactly the tail samples a saturated
+//! system produces — the *coordinated omission* artifact. Here a
+//! stalled server keeps receiving arrivals on schedule (they queue in
+//! an unbounded dispatch channel) and every latency is measured from
+//! the request's **scheduled** arrival, so queueing delay the user
+//! would have experienced is in the histogram.
+//!
+//! The workload is a Zipf-distributed query mix over thousands of
+//! simulated user keys ([`WorkloadMix`]): each user owns a
+//! deterministic query vector, so the hot keys Zipf re-draws are
+//! repeat queries the front-door cache can serve, and the mix spreads
+//! requests over estimator kinds, budgets, precisions and deadline
+//! classes like real traffic would.
+//!
+//! [`run_open_loop`] drives one fixed-rate run and records latency into
+//! the `obs/` lock-free [`crate::obs::Histogram`] (recording never
+//! blocks the workload); [`sweep`] walks a rate ladder and brackets the
+//! saturation knee; [`report`] serializes the result as the committed
+//! `BENCH_load.json`. [`ClusterHarness`] self-spawns a full in-process
+//! cluster (shard workers × replicas, optionally behind
+//! [`crate::testing::fault::FaultProxy`] links, the batching service,
+//! and a real wire front door) for chaos-under-load runs where the
+//! writer thread publishes add/remove epochs mid-run.
+
+pub mod harness;
+pub mod mix;
+pub mod report;
+pub mod runner;
+pub mod schedule;
+
+pub use harness::{ClusterHarness, HarnessConfig};
+pub use mix::{default_classes, LoadRequest, MixClass, WorkloadMix};
+pub use report::{document, find_knee, LoadReport, SweepPoint, KNEE_RATIO, SCHEMA};
+pub use runner::{run_open_loop, sweep, to_point, MetricsDelta, RunConfig, RunStats};
+pub use schedule::{Arrival, Schedule};

@@ -1,0 +1,202 @@
+//! Run reports: the committed perf trajectory.
+//!
+//! A load run produces one [`LoadReport`] (config + a [`SweepPoint`]
+//! per offered rate + the detected knee); `zest-loadgen` collects one
+//! report per scenario (healthy, chaos) into the top-level
+//! `BENCH_load.json` document. The JSON is **committed to the repo** —
+//! the schema below is therefore versioned ([`SCHEMA`]) and linted by
+//! `tools/check_bench.py` in CI, so a field rename is a reviewed
+//! change, not silent drift.
+
+use crate::util::json::Json;
+
+/// Schema tag of the emitted document (bump on field changes).
+pub const SCHEMA: &str = "zest-load-v1";
+
+/// Achieved/offered ratio below which a rate point counts as past the
+/// saturation knee.
+pub const KNEE_RATIO: f64 = 0.95;
+
+/// One offered-rate measurement.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Arrivals/sec the schedule fired (sent / elapsed).
+    pub offered_hz: f64,
+    /// Successful answers/sec over the same window.
+    pub achieved_hz: f64,
+    /// Requests dispatched on schedule.
+    pub sent: u64,
+    /// Successful answers.
+    pub ok: u64,
+    /// Requests shed on deadline (client fail-fast, submit reject, or
+    /// batcher drain shed — all surface as `DeadlineExceeded`).
+    pub shed: u64,
+    /// Backpressure rejects (`Overloaded`: ingress queue full).
+    pub rejected: u64,
+    /// Every other failure (transport, protocol, internal). Zero in a
+    /// healthy run below the knee — the acceptance bar.
+    pub failed: u64,
+    /// End-to-end latency quantiles of successful answers, measured
+    /// from the **scheduled** arrival (ms).
+    pub p50_ms: f64,
+    /// 99th percentile (ms).
+    pub p99_ms: f64,
+    /// 99.9th percentile (ms).
+    pub p999_ms: f64,
+    /// Front-door hits / (hits + misses) over this point's window.
+    pub cache_hit_rate: f64,
+    /// Replica failovers ticked during this point.
+    pub failovers: u64,
+    /// Hedged reads fired during this point.
+    pub hedges: u64,
+}
+
+impl SweepPoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered_hz", Json::num(self.offered_hz)),
+            ("achieved_hz", Json::num(self.achieved_hz)),
+            ("sent", Json::num(self.sent as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("p999_ms", Json::num(self.p999_ms)),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate)),
+            ("failovers", Json::num(self.failovers as f64)),
+            ("hedges", Json::num(self.hedges as f64)),
+        ])
+    }
+}
+
+/// The first offered rate whose achieved rate falls below
+/// [`KNEE_RATIO`] × offered — the saturation knee. `None` when every
+/// point keeps up (the sweep never reached saturation).
+pub fn find_knee(points: &[SweepPoint]) -> Option<f64> {
+    points
+        .iter()
+        .find(|p| p.achieved_hz < KNEE_RATIO * p.offered_hz)
+        .map(|p| p.offered_hz)
+}
+
+/// One scenario's full sweep + the config that produced it.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Scenario label (`healthy`, `chaos`).
+    pub scenario: String,
+    /// Simulated user keys.
+    pub users: usize,
+    /// Zipf exponent over users.
+    pub zipf_s: f64,
+    /// Session (sender) threads.
+    pub sessions: usize,
+    /// Per-point run window, ms.
+    pub duration_ms: u64,
+    /// Arrival process (`fixed` | `poisson`).
+    pub arrival: String,
+    /// Workload seed (schedule + mix replay).
+    pub seed: u64,
+    /// Shards × replicas of the target cluster (0 when unknown, e.g.
+    /// an external `--server` target).
+    pub shards: usize,
+    /// Replicas per shard (0 when unknown).
+    pub replicas: usize,
+    /// One measurement per offered rate, in sweep order.
+    pub points: Vec<SweepPoint>,
+    /// Detected saturation knee ([`find_knee`]).
+    pub knee_hz: Option<f64>,
+}
+
+impl LoadReport {
+    /// Serialize one scenario.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::str(&self.scenario)),
+            ("users", Json::num(self.users as f64)),
+            ("zipf_s", Json::num(self.zipf_s)),
+            ("sessions", Json::num(self.sessions as f64)),
+            ("duration_ms", Json::num(self.duration_ms as f64)),
+            ("arrival", Json::str(&self.arrival)),
+            ("seed", Json::num(self.seed as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(SweepPoint::to_json).collect()),
+            ),
+            (
+                "knee_hz",
+                match self.knee_hz {
+                    Some(hz) => Json::num(hz),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+/// Assemble the committed `BENCH_load.json` document from scenario
+/// reports.
+pub fn document(runs: &[LoadReport]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::str(SCHEMA)),
+        ("runs", Json::Arr(runs.iter().map(LoadReport::to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(offered: f64, achieved: f64) -> SweepPoint {
+        SweepPoint {
+            offered_hz: offered,
+            achieved_hz: achieved,
+            sent: offered as u64,
+            ok: achieved as u64,
+            shed: 0,
+            rejected: 0,
+            failed: 0,
+            p50_ms: 1.0,
+            p99_ms: 2.0,
+            p999_ms: 3.0,
+            cache_hit_rate: 0.5,
+            failovers: 0,
+            hedges: 0,
+        }
+    }
+
+    #[test]
+    fn knee_is_first_lagging_point() {
+        let points = vec![point(100.0, 99.0), point(200.0, 197.0), point(400.0, 310.0)];
+        assert_eq!(find_knee(&points), Some(400.0));
+        assert_eq!(find_knee(&points[..2]), None);
+    }
+
+    #[test]
+    fn document_round_trips_through_json() {
+        let report = LoadReport {
+            scenario: "healthy".to_string(),
+            users: 1000,
+            zipf_s: 1.1,
+            sessions: 32,
+            duration_ms: 2000,
+            arrival: "poisson".to_string(),
+            seed: 7,
+            shards: 2,
+            replicas: 2,
+            points: vec![point(100.0, 100.0)],
+            knee_hz: None,
+        };
+        let text = document(std::slice::from_ref(&report)).to_string();
+        let parsed = Json::parse(&text).expect("emitted document must parse");
+        let Json::Obj(top) = &parsed else { panic!("not an object") };
+        assert_eq!(top.get("schema"), Some(&Json::Str(SCHEMA.to_string())));
+        let Some(Json::Arr(runs)) = top.get("runs") else {
+            panic!("runs not an array");
+        };
+        assert_eq!(runs.len(), 1);
+    }
+}

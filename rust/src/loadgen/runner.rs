@@ -1,0 +1,284 @@
+//! The open-loop runner: fire the schedule, never look back.
+//!
+//! One scheduler (the calling thread) walks a [`Schedule`], sleeps
+//! until each absolute arrival deadline, samples the [`WorkloadMix`]
+//! and pushes the materialized request onto an **unbounded** dispatch
+//! channel — so a slow or stalled server can never exert backpressure
+//! on the *arrival* process. A pool of session threads drains the
+//! channel and issues blocking wire calls; each records latency from
+//! the request's **scheduled** arrival into a lock-free
+//! [`Histogram`], so time spent queued behind saturated sessions is
+//! charged to the request (the anti-coordinated-omission invariant —
+//! see the `loadgen` module docs).
+
+use super::mix::WorkloadMix;
+use super::schedule::{Arrival, Schedule};
+use crate::net::client::{ClientError, PartitionClient};
+use crate::net::wire::ErrorCode;
+use crate::obs::{Histogram, HistogramSnapshot, MetricsBlob};
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One fixed-rate run's knobs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Offered arrival rate, requests/sec.
+    pub rate_hz: f64,
+    /// Run window: arrivals scheduled in `[0, duration)`.
+    pub duration: Duration,
+    /// Session (sender) threads draining the dispatch channel. Sizes
+    /// the achievable concurrency, **not** the offered rate.
+    pub sessions: usize,
+    /// Inter-arrival process.
+    pub arrival: Arrival,
+    /// Schedule + mix seed (a run is replayable from this).
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            rate_hz: 500.0,
+            duration: Duration::from_secs(2),
+            sessions: 32,
+            arrival: Arrival::Poisson,
+            seed: 1,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    ok: AtomicU64,
+    shed: AtomicU64,
+    rejected: AtomicU64,
+    failed: AtomicU64,
+}
+
+/// What one run measured.
+#[derive(Clone, Debug)]
+pub struct RunStats {
+    /// Arrivals actually dispatched (≈ rate × duration; short only if
+    /// every session thread died).
+    pub sent: u64,
+    /// Successful answers.
+    pub ok: u64,
+    /// `DeadlineExceeded` outcomes (shed anywhere along the path).
+    pub shed: u64,
+    /// `Overloaded` rejects (ingress backpressure).
+    pub rejected: u64,
+    /// Any other failure.
+    pub failed: u64,
+    /// Wall time from first scheduled arrival to last settled answer.
+    pub elapsed: Duration,
+    /// Scheduled-arrival → answer latency of successful requests.
+    pub latency: HistogramSnapshot,
+}
+
+impl RunStats {
+    /// Offered rate over the settled window.
+    pub fn offered_hz(&self) -> f64 {
+        self.sent as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Successful-answer rate over the settled window.
+    pub fn achieved_hz(&self) -> f64 {
+        self.ok as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+struct Job {
+    scheduled: Instant,
+    spec: crate::coordinator::EstimateSpec,
+}
+
+/// Drive one open-loop run of `cfg` against `client` with the given
+/// workload mix. Blocks until every dispatched request has settled
+/// (the schedule itself never blocks on any of them).
+pub fn run_open_loop(
+    client: &Arc<PartitionClient>,
+    mix: &Arc<WorkloadMix>,
+    cfg: &RunConfig,
+) -> RunStats {
+    let hist = Arc::new(Histogram::new());
+    let counters = Arc::new(Counters::default());
+    let (tx, rx) = mpsc::channel::<Job>();
+    let rx = Arc::new(Mutex::new(rx));
+
+    let sessions: Vec<_> = (0..cfg.sessions.max(1))
+        .map(|i| {
+            let rx = Arc::clone(&rx);
+            let client = Arc::clone(client);
+            let hist = Arc::clone(&hist);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name(format!("loadgen-session-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue; the
+                    // blocking wire call runs lock-free so sessions
+                    // drain concurrently.
+                    let job = match rx.lock().unwrap().recv() {
+                        Ok(job) => job,
+                        Err(_) => return,
+                    };
+                    let outcome = client.estimate(job.spec);
+                    match outcome {
+                        Ok(_) => {
+                            // Only successes shape the latency
+                            // quantiles; sheds and rejects are counted,
+                            // not timed.
+                            hist.record_duration(job.scheduled.elapsed());
+                            counters.ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ClientError::Remote { code, .. }) => {
+                            let c = match code {
+                                ErrorCode::DeadlineExceeded => &counters.shed,
+                                ErrorCode::Overloaded => &counters.rejected,
+                                _ => &counters.failed,
+                            };
+                            c.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            counters.failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+                .expect("spawn session thread")
+        })
+        .collect();
+
+    let start = Instant::now();
+    let mut rng = Rng::seeded(cfg.seed ^ 0x3A11_0CA7);
+    let mut sent = 0u64;
+    for offset in Schedule::new(cfg.rate_hz, cfg.arrival, cfg.seed) {
+        if offset >= cfg.duration {
+            break;
+        }
+        let due = start + offset;
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        // Sample + materialize at (approximately) the scheduled
+        // instant so class deadlines anchor at arrival, then dispatch
+        // without ever checking how far behind the sessions are.
+        let req = mix.sample(&mut rng);
+        if tx.send(Job { scheduled: due, spec: mix.spec(req) }).is_err() {
+            break; // every session thread died — nothing can settle
+        }
+        sent += 1;
+    }
+    drop(tx);
+    for t in sessions {
+        let _ = t.join();
+    }
+    let elapsed = start.elapsed();
+
+    RunStats {
+        sent,
+        ok: counters.ok.load(Ordering::Relaxed),
+        shed: counters.shed.load(Ordering::Relaxed),
+        rejected: counters.rejected.load(Ordering::Relaxed),
+        failed: counters.failed.load(Ordering::Relaxed),
+        elapsed,
+        latency: hist.snapshot(),
+    }
+}
+
+/// Cluster-side counter deltas over one run window, scraped via
+/// `GetMetrics` before/after. Zeros when the target does not expose a
+/// counter (or the scrape itself fails — never let telemetry kill a
+/// load run).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsDelta {
+    /// Front-door result-cache hits.
+    pub cache_hits: u64,
+    /// Front-door result-cache misses.
+    pub cache_misses: u64,
+    /// Replica failovers.
+    pub failovers: u64,
+    /// Hedged reads fired.
+    pub hedges: u64,
+}
+
+impl MetricsDelta {
+    /// Hits / (hits + misses); 0 when nothing was cacheable.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}
+
+fn scrape(client: &PartitionClient) -> MetricsBlob {
+    client.get_metrics().unwrap_or_else(|e| {
+        log::warn!("loadgen metrics scrape failed: {e}");
+        MetricsBlob::default()
+    })
+}
+
+fn delta(before: &MetricsBlob, after: &MetricsBlob) -> MetricsDelta {
+    let d = |name: &str| after.counter(name).saturating_sub(before.counter(name));
+    MetricsDelta {
+        cache_hits: d("cache_hits"),
+        cache_misses: d("cache_misses"),
+        failovers: d("shard_failovers"),
+        hedges: d("shard_hedges"),
+    }
+}
+
+/// Walk a rate ladder: one [`run_open_loop`] per offered rate (same
+/// duration/sessions/seed), each bracketed by a `GetMetrics` scrape so
+/// cache/failover/hedge counters attribute per point. Points are
+/// returned in ladder order; feed them through
+/// [`super::report::find_knee`] to locate saturation.
+pub fn sweep(
+    client: &Arc<PartitionClient>,
+    mix: &Arc<WorkloadMix>,
+    rates: &[f64],
+    base: &RunConfig,
+) -> Vec<(RunStats, MetricsDelta)> {
+    rates
+        .iter()
+        .map(|&rate_hz| {
+            let cfg = RunConfig { rate_hz, ..base.clone() };
+            let before = scrape(client);
+            let stats = run_open_loop(client, mix, &cfg);
+            let after = scrape(client);
+            log::info!(
+                "loadgen: offered {:.0}/s achieved {:.0}/s ok={} shed={} rejected={} failed={}",
+                stats.offered_hz(),
+                stats.achieved_hz(),
+                stats.ok,
+                stats.shed,
+                stats.rejected,
+                stats.failed
+            );
+            (stats, delta(&before, &after))
+        })
+        .collect()
+}
+
+/// Fold one measured point into a report row.
+pub fn to_point(stats: &RunStats, metrics: &MetricsDelta) -> super::report::SweepPoint {
+    super::report::SweepPoint {
+        offered_hz: stats.offered_hz(),
+        achieved_hz: stats.achieved_hz(),
+        sent: stats.sent,
+        ok: stats.ok,
+        shed: stats.shed,
+        rejected: stats.rejected,
+        failed: stats.failed,
+        p50_ms: stats.latency.p50().as_secs_f64() * 1e3,
+        p99_ms: stats.latency.p99().as_secs_f64() * 1e3,
+        p999_ms: stats.latency.p999().as_secs_f64() * 1e3,
+        cache_hit_rate: metrics.cache_hit_rate(),
+        failovers: metrics.failovers,
+        hedges: metrics.hedges,
+    }
+}

@@ -1,0 +1,133 @@
+//! Open-loop arrival schedule: when each request *must* be fired.
+//!
+//! The schedule is a pure function of `(rate, arrival process, seed)` —
+//! an iterator of absolute offsets from the run's start instant. The
+//! runner sleeps until each offset and dispatches; it never looks at
+//! responses, which is the whole point (see the module docs on
+//! coordinated omission). Determinism under a seed makes a run
+//! replayable: the same seed yields byte-identical arrival times.
+
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// The inter-arrival process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arrival {
+    /// Evenly spaced arrivals: gap = 1/rate exactly. The harshest
+    /// schedule for a batcher (no natural burstiness to amortize) and
+    /// the easiest to reason about.
+    Fixed,
+    /// Poisson arrivals: exponential gaps with mean 1/rate, the
+    /// classical open-system model. Bursts and lulls at the same
+    /// offered rate — closer to real user traffic.
+    Poisson,
+}
+
+impl Arrival {
+    /// Parse a CLI spelling (`fixed` | `poisson`).
+    pub fn parse(s: &str) -> Result<Arrival, String> {
+        match s {
+            "fixed" => Ok(Arrival::Fixed),
+            "poisson" => Ok(Arrival::Poisson),
+            other => Err(format!("unknown arrival process '{other}' (want fixed|poisson)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Arrival {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Arrival::Fixed => write!(f, "fixed"),
+            Arrival::Poisson => write!(f, "poisson"),
+        }
+    }
+}
+
+/// Infinite iterator of absolute arrival offsets (from the run start)
+/// at `rate_hz` under an [`Arrival`] process. The first arrival is at
+/// offset 0; offsets are strictly non-decreasing. Gap arithmetic runs
+/// in f64 nanoseconds so fractional rates (e.g. 2500.5 Hz) accumulate
+/// without drift.
+pub struct Schedule {
+    arrival: Arrival,
+    /// Mean gap, ns.
+    gap_ns: f64,
+    rng: Rng,
+    /// Offset of the next arrival, ns.
+    next_ns: f64,
+}
+
+impl Schedule {
+    /// Arrivals at `rate_hz` (> 0) under `arrival`, deterministic in
+    /// `seed` (only `Poisson` consumes randomness, but `Fixed` derives
+    /// the same way so swapping processes never perturbs the workload
+    /// RNG).
+    pub fn new(rate_hz: f64, arrival: Arrival, seed: u64) -> Schedule {
+        assert!(
+            rate_hz.is_finite() && rate_hz > 0.0,
+            "arrival rate must be positive, got {rate_hz}"
+        );
+        Schedule {
+            arrival,
+            gap_ns: 1e9 / rate_hz,
+            rng: Rng::seeded(seed ^ 0x09E4_100D),
+            next_ns: 0.0,
+        }
+    }
+}
+
+impl Iterator for Schedule {
+    type Item = Duration;
+
+    fn next(&mut self) -> Option<Duration> {
+        let at = self.next_ns;
+        let gap = match self.arrival {
+            Arrival::Fixed => self.gap_ns,
+            // Inverse-CDF exponential draw; 1-u keeps the argument in
+            // (0, 1] so ln never sees 0.
+            Arrival::Poisson => -(1.0 - self.rng.f64()).ln() * self.gap_ns,
+        };
+        self.next_ns = at + gap;
+        Some(Duration::from_nanos(at as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_gaps_are_exact() {
+        let times: Vec<Duration> = Schedule::new(1000.0, Arrival::Fixed, 7).take(5).collect();
+        let want: Vec<Duration> = (0..5).map(|i| Duration::from_micros(i * 1000)).collect();
+        assert_eq!(times, want);
+    }
+
+    #[test]
+    fn seeded_schedules_replay() {
+        for arrival in [Arrival::Fixed, Arrival::Poisson] {
+            let a: Vec<Duration> = Schedule::new(5000.0, arrival, 42).take(1000).collect();
+            let b: Vec<Duration> = Schedule::new(5000.0, arrival, 42).take(1000).collect();
+            assert_eq!(a, b, "{arrival}: same seed must replay exactly");
+            let c: Vec<Duration> = Schedule::new(5000.0, arrival, 43).take(1000).collect();
+            if arrival == Arrival::Poisson {
+                assert_ne!(a, c, "different seeds must differ");
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_matches_rate() {
+        let rate = 2000.0;
+        let times: Vec<Duration> = Schedule::new(rate, Arrival::Poisson, 3).take(20_001).collect();
+        let span = times.last().unwrap().as_secs_f64();
+        let mean_gap = span / 20_000.0;
+        let want = 1.0 / rate;
+        assert!(
+            (mean_gap - want).abs() < want * 0.05,
+            "mean gap {mean_gap} vs want {want}"
+        );
+        // Offsets never go backwards.
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -45,6 +45,20 @@ impl Default for ClientConfig {
     }
 }
 
+impl ClientConfig {
+    /// Pool sizing for `sessions` concurrent user sessions sharing one
+    /// client (the load-generator shape: thousands of simulated users
+    /// multiplexed over a bounded session-thread pool). Keeps one idle
+    /// connection per session so a full-rate burst never churns
+    /// connects, capped so a misconfigured run can't exhaust fds.
+    pub fn for_sessions(sessions: usize) -> Self {
+        ClientConfig {
+            max_idle: sessions.clamp(4, 1024),
+            ..ClientConfig::default()
+        }
+    }
+}
+
 /// Client-side failure.
 #[derive(Debug)]
 pub enum ClientError {

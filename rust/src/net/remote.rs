@@ -414,6 +414,7 @@ impl MuxSlot {
             req: Arc::clone(&req),
             flags,
             rx,
+            retried: false,
         };
         let mut conn = self.inner.conn.lock().unwrap();
         let reopen = match conn.as_ref() {
@@ -481,6 +482,8 @@ struct Pending {
     req: Arc<Encoded>,
     flags: u8,
     rx: mpsc::Receiver<CallResult>,
+    /// Whether the one allowed provably-unsent re-submission happened.
+    retried: bool,
 }
 
 impl Pending {
@@ -492,22 +495,55 @@ impl Pending {
     /// [`Pending::join`], keeping the server-side timing annex (present
     /// only when the call was submitted with [`wire::FLAG_TRACED`] and
     /// the server honored it).
-    fn join_timed(self) -> Result<(WireResponse, Option<wire::WireTimes>)> {
-        let Pending {
-            slot,
-            req,
-            flags,
-            rx,
-        } = self;
-        match rx.recv() {
-            Ok(Ok(out)) => Ok(out),
-            Ok(Err(f)) if f.retryable => match slot.submit_flagged(req, flags).rx.recv() {
-                Ok(Ok(out)) => Ok(out),
-                Ok(Err(f)) => Err(f.error),
-                Err(_) => Err(dropped_call()),
-            },
-            Ok(Err(f)) => Err(f.error),
-            Err(_) => Err(dropped_call()),
+    fn join_timed(mut self) -> Result<(WireResponse, Option<wire::WireTimes>)> {
+        loop {
+            match self.rx.recv() {
+                // `settle` re-submits a provably-unsent frame at most
+                // once (the `retried` cap), so this loop runs at most
+                // twice.
+                Ok(result) => {
+                    if let Some(settled) = self.settle(result) {
+                        return settled;
+                    }
+                }
+                Err(_) => return Err(dropped_call()),
+            }
+        }
+    }
+
+    /// Wait up to `timeout` for this call's completion without
+    /// consuming the handle: `Some(result)` once settled, `None` while
+    /// still in flight (including across the one transparent
+    /// re-submission of a provably-unsent frame). The hedged replica
+    /// read alternates this over two in-flight copies.
+    fn poll_timed(
+        &mut self,
+        timeout: Duration,
+    ) -> Option<Result<(WireResponse, Option<wire::WireTimes>)>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => self.settle(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => Some(Err(dropped_call())),
+        }
+    }
+
+    /// Fold one completion message: an answer settles the call, a
+    /// provably-unsent failure is re-submitted once on a fresh
+    /// connection (swapping in the fresh receiver, `None` — still in
+    /// flight), anything else is the call's error.
+    fn settle(
+        &mut self,
+        result: CallResult,
+    ) -> Option<Result<(WireResponse, Option<wire::WireTimes>)>> {
+        match result {
+            Ok(out) => Some(Ok(out)),
+            Err(f) if f.retryable && !self.retried => {
+                self.retried = true;
+                let fresh = self.slot.submit_flagged(Arc::clone(&self.req), self.flags);
+                self.rx = fresh.rx;
+                None
+            }
+            Err(f) => Some(Err(f.error)),
         }
     }
 }
@@ -781,8 +817,14 @@ pub struct ReplicaSet {
     health: Vec<AtomicBool>,
     /// Reads transparently re-routed to an alternate replica.
     failovers: AtomicU64,
-    /// Optional service sink failovers are mirrored into
-    /// (`ServiceMetrics::on_shard_failover`).
+    /// Hedge delay in nanoseconds for hedge-safe reads (0 disables):
+    /// a read still unanswered after this long is duplicated to the
+    /// next healthy replica and the first answer wins.
+    hedge_delay_ns: AtomicU64,
+    /// Reads that fired a hedge duplicate (whichever copy won).
+    hedges: AtomicU64,
+    /// Optional service sink failovers and hedges are mirrored into
+    /// (`ServiceMetrics::on_shard_failover` / `on_shard_hedge`).
     sink: RwLock<Option<Arc<ServiceMetrics>>>,
 }
 
@@ -795,6 +837,8 @@ impl ReplicaSet {
             cursor: AtomicUsize::new(0),
             health,
             failovers: AtomicU64::new(0),
+            hedge_delay_ns: AtomicU64::new(0),
+            hedges: AtomicU64::new(0),
             sink: RwLock::new(None),
         }
     }
@@ -815,6 +859,17 @@ impl ReplicaSet {
     /// Total reads that failed over to an alternate replica.
     pub fn failovers(&self) -> u64 {
         self.failovers.load(Ordering::Relaxed)
+    }
+
+    /// Total reads that fired a hedge duplicate to a second replica.
+    pub fn hedges(&self) -> u64 {
+        self.hedges.load(Ordering::Relaxed)
+    }
+
+    /// Set the hedge delay for hedge-safe reads (0 disables hedging).
+    pub fn set_hedge_delay(&self, delay: Duration) {
+        self.hedge_delay_ns
+            .store(delay.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
     }
 
     /// The replica addresses joined `a|b|c` — the shard's display name
@@ -859,6 +914,13 @@ impl ReplicaSet {
         self.failovers.fetch_add(1, Ordering::Relaxed);
         if let Some(sink) = self.sink.read().unwrap().as_ref() {
             sink.on_shard_failover(self.shard);
+        }
+    }
+
+    fn on_hedge(&self) {
+        self.hedges.fetch_add(1, Ordering::Relaxed);
+        if let Some(sink) = self.sink.read().unwrap().as_ref() {
+            sink.on_shard_hedge(self.shard);
         }
     }
 
@@ -955,6 +1017,10 @@ impl SetPending {
             mut replica,
             mut pending,
         } = self;
+        let hedge_ns = set.hedge_delay_ns.load(Ordering::Relaxed);
+        if hedge_ns > 0 && req.hedge_safe() && set.replicas.len() > 1 {
+            return Self::join_hedged(set, req, flags, tried, replica, pending, hedge_ns);
+        }
         loop {
             let failed = match pending.join_timed() {
                 Ok(out) => return Ok(out),
@@ -975,6 +1041,84 @@ impl SetPending {
             tried[next] = true;
             replica = next;
             pending = set.replicas[next].slot.submit_flagged(Arc::clone(&req), flags);
+        }
+    }
+
+    /// Hedged join for hedge-safe reads: wait `hedge_ns` on the primary
+    /// lane, then duplicate the read onto the next untried replica and
+    /// take whichever lane answers first (alternating short poll
+    /// slices). A lane that fails transiently is marked unhealthy and
+    /// dropped without a failover tick — the surviving hedge lane *is*
+    /// the alternate — and only when every lane has died does this fall
+    /// back to the classic failover resubmit. The abandoned lane's
+    /// response is dropped harmlessly by the mux reader (its completion
+    /// channel is closed). Safe only because both copies may execute:
+    /// [`Encoded::hedge_safe`] gates this to stateless pure reads.
+    fn join_hedged(
+        set: Arc<ReplicaSet>,
+        req: Arc<Encoded>,
+        flags: u8,
+        mut tried: Vec<bool>,
+        primary: usize,
+        primary_pending: Pending,
+        hedge_ns: u64,
+    ) -> Result<(WireResponse, Option<wire::WireTimes>)> {
+        /// Alternating-poll slice width: long enough that two lanes cost
+        /// ~no extra wakeups at serving latencies, short enough that the
+        /// winner is noticed promptly.
+        const SLICE: Duration = Duration::from_micros(200);
+
+        let mut lanes: Vec<(usize, Pending)> = vec![(primary, primary_pending)];
+        let mut hedged = false;
+        let mut wait = Duration::from_nanos(hedge_ns);
+        let mut last_err: Option<ClientError> = None;
+        loop {
+            let mut i = 0;
+            while i < lanes.len() {
+                let (rep, pending) = &mut lanes[i];
+                match pending.poll_timed(wait) {
+                    Some(Ok(out)) => return Ok(out),
+                    Some(Err(e)) if e.is_transient() => {
+                        set.mark(*rep, false);
+                        log::warn!(
+                            "shard {}: hedged read lane {} failed transiently ({e})",
+                            set.name(),
+                            set.replicas[*rep].addr()
+                        );
+                        last_err = Some(e);
+                        lanes.remove(i);
+                    }
+                    Some(Err(e)) => return Err(e),
+                    None => i += 1,
+                }
+            }
+            if lanes.is_empty() {
+                // Every lane died: classic failover resubmit (the hedge
+                // no longer covers the loss).
+                let Some(next) = set.next_untried(&tried) else {
+                    return Err(last_err.unwrap_or(ClientError::ConnectionClosed));
+                };
+                set.on_failover();
+                tried[next] = true;
+                lanes.push((next, set.replicas[next].slot.submit_flagged(Arc::clone(&req), flags)));
+                wait = Duration::from_nanos(hedge_ns);
+                hedged = false;
+                continue;
+            }
+            if !hedged {
+                // Hedge delay elapsed with the primary still unanswered:
+                // fire the duplicate and start alternating.
+                hedged = true;
+                wait = SLICE;
+                if let Some(next) = set.next_untried(&tried) {
+                    set.on_hedge();
+                    tried[next] = true;
+                    lanes.push((
+                        next,
+                        set.replicas[next].slot.submit_flagged(Arc::clone(&req), flags),
+                    ));
+                }
+            }
         }
     }
 }
@@ -1259,6 +1403,20 @@ impl RemoteCluster {
     /// Total reads re-routed to an alternate replica, across all shards.
     pub fn failovers(&self) -> u64 {
         self.shards.iter().map(|set| set.failovers()).sum()
+    }
+
+    /// Total hedge duplicates fired, across all shards.
+    pub fn hedges(&self) -> u64 {
+        self.shards.iter().map(|set| set.hedges()).sum()
+    }
+
+    /// Set the hedge delay for hedge-safe reads (`TopK`) on every
+    /// shard's replica set. 0 disables hedging (the default). Only
+    /// meaningful with ≥ 2 replicas per shard.
+    pub fn set_hedge_delay(&self, delay: Duration) {
+        for set in &self.shards {
+            set.set_hedge_delay(delay);
+        }
     }
 
     /// Configure the cluster-wide FMBE fit (feature count + seed). The
@@ -2399,6 +2557,7 @@ impl RemoteCluster {
                 ("replicas_total".to_string(), total),
                 ("replicas_healthy".to_string(), healthy),
                 ("shard_failovers".to_string(), self.failovers()),
+                ("shard_hedges".to_string(), self.hedges()),
             ],
             hists: vec![],
         });

@@ -1072,10 +1072,17 @@ impl Response {
 ///
 /// Also carried: whether the request is safe to silently re-send on a
 /// stale pooled connection ([`Encoded::resend_safe`] — `Commit` is not;
-/// see `Pool::call` in [`super::client`]).
+/// see `Pool::call` in [`super::client`]), and whether a replica set
+/// may **hedge** it — issue a duplicate to a second replica while the
+/// first is still in flight and take whichever answers first
+/// ([`Encoded::hedge_safe`]). Hedging is stricter than re-sending:
+/// both copies may execute to completion, so only stateless reads
+/// whose duplicate execution is free of side effects opt in (`TopK`
+/// today — see `ReplicaSet` in [`super::remote`]).
 pub struct Encoded {
     payload: Vec<u8>,
     resend_safe: bool,
+    hedge_safe: bool,
 }
 
 impl Encoded {
@@ -1083,6 +1090,7 @@ impl Encoded {
         Encoded {
             payload,
             resend_safe: true,
+            hedge_safe: false,
         }
     }
 
@@ -1098,6 +1106,13 @@ impl Encoded {
         self.resend_safe
     }
 
+    /// Whether a replica set may race a duplicate of this request on a
+    /// second replica and take the first answer (tail-latency hedging).
+    /// `true` only for stateless reads that opted in at encode time.
+    pub fn hedge_safe(&self) -> bool {
+        self.hedge_safe
+    }
+
     /// Pre-encoded [`Request::Manifest`] (scalar-only request: this
     /// just reuses the owned encoder — the borrowed fast path exists
     /// for slice payloads).
@@ -1105,12 +1120,19 @@ impl Encoded {
         Encoded::new(Request::Manifest.encode())
     }
 
-    /// Borrowed encode of [`Request::TopK`].
+    /// Borrowed encode of [`Request::TopK`]. Marked hedge-safe: a
+    /// top-k retrieval is a pure read over the replica's rows, so two
+    /// replicas at the same epoch executing the duplicate both produce
+    /// the identical answer and nothing double-executes.
     pub fn top_k(k: u64, queries: &[Vec<f32>]) -> Encoded {
         let mut e = Enc::with_tag(REQ_TOP_K);
         e.u64(k);
         e.queries(queries);
-        Encoded::new(e.buf)
+        Encoded {
+            payload: e.buf,
+            resend_safe: true,
+            hedge_safe: true,
+        }
     }
 
     /// Borrowed encode of [`Request::ExpSumChain`].

@@ -238,6 +238,32 @@ mod tests {
         assert!(text.contains("zest_queue_ns_count 3"));
     }
 
+    /// The serving-health counters a load generator and its dashboards
+    /// key on — deadline sheds, backpressure rejects, failovers and
+    /// hedges — render as well-formed Prometheus counter samples.
+    #[test]
+    fn prometheus_text_covers_shed_and_hedge_counters() {
+        let blob = MetricsBlob {
+            counters: vec![
+                ("shed".into(), 4),
+                ("deadline_shed".into(), 7),
+                ("shard_failovers".into(), 2),
+                ("shard_hedges".into(), 31),
+            ],
+            hists: vec![],
+        };
+        let text = blob.to_prometheus_text();
+        for (name, v) in [
+            ("zest_shed", 4u64),
+            ("zest_deadline_shed", 7),
+            ("zest_shard_failovers", 2),
+            ("zest_shard_hedges", 31),
+        ] {
+            assert!(text.contains(&format!("# TYPE {name} counter\n")), "{text}");
+            assert!(text.contains(&format!("\n{name} {v}\n")), "{text}");
+        }
+    }
+
     #[test]
     fn http_endpoint_serves_metrics_and_404s_elsewhere() {
         let source: Arc<dyn Fn() -> MetricsBlob + Send + Sync> =

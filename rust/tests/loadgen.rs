@@ -1,0 +1,336 @@
+//! Open-loop load generator acceptance:
+//!
+//! * **Coordinated-omission regression**: a server stalling 100ms per
+//!   request must NOT depress the offered rate — every scheduled
+//!   arrival is dispatched, and the measured latency of late answers
+//!   reflects the stall (closed-loop generators fail both).
+//! * The arrival schedule and workload mix replay exactly under a
+//!   seed, and the user-key draw matches `util::rng::Zipf`
+//!   frequencies.
+//! * A self-spawned cluster harness (`loadgen::ClusterHarness`)
+//!   survives a healthy open-loop run with **zero failed requests**
+//!   while a writer publishes add/remove epochs mid-run.
+//! * Hedged `TopK` reads: with one replica's link delayed past the
+//!   hedge delay, reads complete via the fast replica and the `hedges`
+//!   counter ticks — visible in `shard_stats` and the cluster blob.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use zest::coordinator::EstimateSpec;
+use zest::coordinator::ServiceMetrics;
+use zest::estimators::EstimatorKind;
+use zest::loadgen::{
+    default_classes, find_knee, run_open_loop, Arrival, ClusterHarness, HarnessConfig, RunConfig,
+    Schedule, WorkloadMix,
+};
+use zest::net::client::{ClientConfig, PartitionClient};
+use zest::net::server::{Handler, Server, ServerConfig};
+use zest::net::wire::{Estimate, Request, Response};
+use zest::net::Addr;
+use zest::testing::fault::FaultMode;
+use zest::util::rng::Rng;
+
+fn loopback() -> Addr {
+    Addr::parse("tcp://127.0.0.1:0").unwrap()
+}
+
+/// Answers every estimate after a fixed stall — the pathological
+/// server shape that makes closed-loop generators lie.
+struct StallingHandler {
+    stall: Duration,
+    answered: AtomicU64,
+}
+
+impl Handler for StallingHandler {
+    fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Manifest => Response::Manifest { len: 1, dim: 4, epoch: 0 },
+            Request::Estimate { kind, .. } => {
+                std::thread::sleep(self.stall);
+                self.answered.fetch_add(1, Ordering::Relaxed);
+                Response::Estimates(vec![Estimate {
+                    z: 1.0,
+                    kind,
+                    epoch: 0,
+                    scorings: 0,
+                    queue_wait_ns: 0,
+                    exec_ns: self.stall.as_nanos() as u64,
+                    served_from_cache: false,
+                }])
+            }
+            _ => Response::Error {
+                code: zest::net::wire::ErrorCode::Unsupported,
+                message: "stall handler".to_string(),
+            },
+        }
+    }
+}
+
+/// ACCEPTANCE: open-loop offered rate is independent of server speed.
+/// 100 arrivals/s against a 100ms-stalling server with only 8 sessions
+/// can *settle* at most ~80/s — but every scheduled arrival must still
+/// be dispatched on time, and the latency histogram must show the
+/// queueing the stall caused (measured from scheduled arrival).
+#[test]
+fn stalled_server_does_not_depress_offered_rate() {
+    let stall = Duration::from_millis(100);
+    let handler = Arc::new(StallingHandler { stall, answered: AtomicU64::new(0) });
+    let server = Server::serve(
+        &loopback(),
+        handler.clone(),
+        ServerConfig::default(),
+        Arc::new(ServiceMetrics::new()),
+    )
+    .unwrap();
+    let client = Arc::new(
+        PartitionClient::connect(server.local_addr().clone(), ClientConfig::for_sessions(8))
+            .unwrap(),
+    );
+    // Exact-only mix: the stall handler answers any kind; Exact skips
+    // k/l validation client-side.
+    let classes = vec![zest::loadgen::MixClass {
+        name: "exact",
+        kind: EstimatorKind::Exact,
+        k: 0,
+        l: 0,
+        precision: Default::default(),
+        deadline: None,
+        weight: 1.0,
+    }];
+    let mix = Arc::new(WorkloadMix::new(50, 1.1, 4, classes, 3));
+    let cfg = RunConfig {
+        rate_hz: 100.0,
+        duration: Duration::from_millis(1000),
+        sessions: 8,
+        arrival: Arrival::Fixed,
+        seed: 3,
+    };
+    let t0 = Instant::now();
+    let stats = run_open_loop(&client, &mix, &cfg);
+    let wall = t0.elapsed();
+
+    // Every scheduled arrival fired: offered load never bent to the
+    // stall. (A closed-loop generator with 8 sessions would have sent
+    // only ~80 requests in the window.)
+    assert_eq!(stats.sent, 100, "open loop must dispatch every arrival");
+    assert_eq!(stats.ok + stats.failed, 100, "every dispatch settles");
+    assert_eq!(stats.failed, 0, "stalls are slow, not failures");
+    // 100 req through 8 sessions × 100ms each ≈ 13 serial waves; the
+    // run must have outlived the 1s schedule window by the backlog.
+    assert!(
+        wall >= Duration::from_millis(1200),
+        "backlog must drain after the window ({wall:?})"
+    );
+    // Anti-coordinated-omission: tail latency includes queueing from
+    // the *scheduled* arrival, so it must far exceed one stall.
+    let p99 = stats.latency.p99();
+    assert!(
+        p99 >= Duration::from_millis(200),
+        "p99 {p99:?} must charge queueing to the request, not hide it \
+         (one stall is only 100ms — anything under ~2× means omission)"
+    );
+    assert_eq!(handler.answered.load(Ordering::Relaxed), 100);
+    server.shutdown();
+}
+
+/// The schedule and the mix replay exactly under one seed, and differ
+/// across seeds (Poisson).
+#[test]
+fn schedule_and_mix_replay_under_seed() {
+    let a: Vec<Duration> = Schedule::new(777.0, Arrival::Poisson, 9).take(500).collect();
+    let b: Vec<Duration> = Schedule::new(777.0, Arrival::Poisson, 9).take(500).collect();
+    assert_eq!(a, b);
+
+    let mix = WorkloadMix::new(300, 1.2, 8, default_classes(), 21);
+    let draw = |seed: u64| -> Vec<(usize, usize)> {
+        let mut rng = Rng::seeded(seed);
+        (0..500)
+            .map(|_| {
+                let r = mix.sample(&mut rng);
+                (r.user, r.class)
+            })
+            .collect()
+    };
+    assert_eq!(draw(5), draw(5), "same workload RNG seed → same traffic");
+    assert_ne!(draw(5), draw(6), "different seed → different traffic");
+}
+
+/// User-key frequencies match the Zipf law the mix claims to draw from.
+#[test]
+fn user_draw_matches_zipf_pmf() {
+    let users = 200;
+    let mix = WorkloadMix::new(users, 1.3, 4, default_classes(), 2);
+    let mut rng = Rng::seeded(17);
+    let draws = 400_000usize;
+    let mut counts = vec![0u64; users];
+    for _ in 0..draws {
+        counts[mix.sample(&mut rng).user] += 1;
+    }
+    // Compare observed frequency to the pmf on the head (the tail of a
+    // Zipf needs astronomically many draws for tight bounds).
+    for rank in 0..20 {
+        let want = mix.zipf().pmf(rank);
+        let got = counts[rank] as f64 / draws as f64;
+        assert!(
+            (got - want).abs() < want * 0.1 + 1e-4,
+            "rank {rank}: observed {got:.5} vs pmf {want:.5}"
+        );
+    }
+    // Monotone-ish head: rank 0 strictly dominates rank 5+.
+    assert!(counts[0] > counts[5]);
+    assert!(counts[0] > counts[19]);
+}
+
+/// ACCEPTANCE: a healthy open-loop run against the self-spawned
+/// cluster — mixed kinds, tight deadlines, mid-run epoch publishes —
+/// settles every request with zero hard failures, and the sweep's
+/// knee detector sees an un-saturated system keep up.
+#[test]
+fn harness_healthy_run_zero_failures_with_publishes() {
+    let h = ClusterHarness::spawn(&HarnessConfig {
+        n: 1024,
+        dim: 16,
+        shards: 2,
+        replicas: 1,
+        seed: 5,
+        service_workers: 2,
+        ..HarnessConfig::default()
+    })
+    .unwrap();
+    let client =
+        Arc::new(PartitionClient::connect(h.addr.clone(), ClientConfig::for_sessions(16)).unwrap());
+    let mix = Arc::new(WorkloadMix::new(500, 1.1, 16, default_classes(), 5));
+    let cfg = RunConfig {
+        rate_hz: 150.0,
+        duration: Duration::from_millis(1500),
+        sessions: 16,
+        arrival: Arrival::Poisson,
+        seed: 5,
+    };
+    // Writer: two publish waves mid-run (add then remove → size-stable).
+    let stats = std::thread::scope(|s| {
+        s.spawn(|| {
+            std::thread::sleep(Duration::from_millis(400));
+            h.publish_add(32, 1).expect("mid-run add publish");
+            std::thread::sleep(Duration::from_millis(400));
+            h.publish_remove_tail(32).expect("mid-run remove publish");
+        });
+        run_open_loop(&client, &mix, &cfg)
+    });
+    assert!(stats.sent >= 150, "≈225 arrivals expected, got {}", stats.sent);
+    assert_eq!(
+        stats.failed, 0,
+        "healthy run must have zero hard failures (ok={} shed={} rejected={})",
+        stats.ok, stats.shed, stats.rejected
+    );
+    assert!(
+        stats.ok as f64 >= stats.sent as f64 * 0.9,
+        "healthy run below the knee should answer ~everything (ok={} of {})",
+        stats.ok,
+        stats.sent
+    );
+    let point = zest::loadgen::to_point(&stats, &Default::default());
+    assert_eq!(find_knee(std::slice::from_ref(&point)), None, "not saturated");
+    drop(client);
+    h.shutdown();
+}
+
+/// ACCEPTANCE (hedged reads): delay one replica's link well past the
+/// hedge delay; hedge-safe `TopK` traffic must complete fast via the
+/// duplicate on the healthy replica, tick `shard_hedges`, and land in
+/// the per-shard `shard_stats[..].hedges` table.
+#[test]
+fn hedged_topk_ticks_counters_and_answers() {
+    let h = ClusterHarness::spawn(&HarnessConfig {
+        n: 512,
+        dim: 16,
+        shards: 2,
+        replicas: 2,
+        proxied: true,
+        seed: 11,
+        service_workers: 2,
+        hedge_delay: Some(Duration::from_millis(10)),
+        ..HarnessConfig::default()
+    })
+    .unwrap();
+    // Replica 0 of every shard answers 200ms late — 20× the hedge
+    // delay, far under the transport timeout, so without hedging every
+    // read routed there would eat the delay.
+    for p in &h.proxies {
+        p.set_mode(FaultMode::Delay(200));
+    }
+    let client =
+        Arc::new(PartitionClient::connect(h.addr.clone(), ClientConfig::default()).unwrap());
+    let mut rng = Rng::seeded(23);
+    for _ in 0..12 {
+        let spec = EstimateSpec::new(rng.unit_vec(16))
+            .kind(EstimatorKind::Nmimps)
+            .k(8);
+        let resp = client.estimate(spec).expect("hedged top-k read answers");
+        assert!(resp.z.is_finite() && resp.z > 0.0);
+    }
+    let blob = client.get_metrics().unwrap();
+    assert!(
+        blob.counter("shard_hedges") > 0,
+        "delayed replica must have fired hedges (blob: {:?})",
+        blob.counters
+    );
+    // The per-shard table sees them too (sink mirroring).
+    let snap = h.svc.metrics().shard_stats;
+    let hedges: u64 = snap.iter().map(|s| s.hedges).sum();
+    assert!(hedges > 0, "shard_stats must mirror hedge ticks: {snap:?}");
+    for p in &h.proxies {
+        p.restore();
+    }
+
+    // ACCEPTANCE (exposition): the same health counters scrape through
+    // the Prometheus text endpoint (`zest-server --metrics-listen`'s
+    // source shape: service blob merged with the backend's cluster
+    // counters). Tick one deadline shed first so the counter is live.
+    let err = h
+        .svc
+        .estimate(
+            EstimateSpec::new(rng.unit_vec(16))
+                .deadline(Instant::now() - Duration::from_millis(1)),
+        )
+        .unwrap_err();
+    assert_eq!(err, zest::coordinator::SubmitError::DeadlineExceeded);
+    let source: std::sync::Arc<dyn Fn() -> zest::obs::MetricsBlob + Send + Sync> = {
+        let svc = Arc::clone(&h.svc);
+        Arc::new(move || {
+            let mut blob = svc.metrics_handle().blob();
+            if let Some(workers) = svc.backend().metrics() {
+                blob.merge(&workers);
+            }
+            blob
+        })
+    };
+    let mut http = zest::obs::MetricsHttpServer::serve(&loopback(), source).unwrap();
+    let body = {
+        use std::io::{Read as _, Write as _};
+        let mut conn = zest::net::Stream::connect(http.addr()).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        out
+    };
+    assert!(body.starts_with("HTTP/1.0 200"), "{body}");
+    let sample = |name: &str| -> u64 {
+        body.lines()
+            .find_map(|l| l.strip_prefix(&format!("{name} ")))
+            .unwrap_or_else(|| panic!("no {name} sample in:\n{body}"))
+            .parse()
+            .unwrap()
+    };
+    assert!(sample("zest_shard_hedges") > 0, "hedges must export");
+    assert_eq!(sample("zest_deadline_shed"), 1, "the shed we provoked");
+    // Present (zero is fine — nothing failed over or backpressured).
+    assert!(body.contains("# TYPE zest_shard_failovers counter"));
+    assert!(body.contains("# TYPE zest_shed counter"));
+    http.shutdown();
+
+    drop(client);
+    h.shutdown();
+}

@@ -1776,3 +1776,119 @@ fn traced_cluster_request_spans_all_stages_with_per_worker_attribution() {
         w.shutdown();
     }
 }
+
+/// ACCEPTANCE (soak): hundreds of *concurrently open* client
+/// connections against the full self-spawned cluster — every one
+/// issues real estimates in two waves with a metrics scrape between —
+/// with **zero protocol errors** and **monotone frame counters**.
+///
+/// CI runs 256 connections; the full 10k-connection soak documented in
+/// `docs/LOADGEN.md` is the same test scaled by environment:
+///
+/// ```bash
+/// ulimit -n 32768
+/// ZEST_SOAK_CONNS=10000 cargo test --release --test net_e2e many_connection_soak
+/// ```
+#[test]
+fn many_connection_soak_zero_protocol_errors_monotone_frames() {
+    use zest::loadgen::{ClusterHarness, HarnessConfig};
+
+    let conns: usize = std::env::var("ZEST_SOAK_CONNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let h = ClusterHarness::spawn(&HarnessConfig {
+        n: 512,
+        dim: 16,
+        shards: 2,
+        replicas: 1,
+        seed: 13,
+        service_workers: 2,
+        max_connections: conns + 16,
+        ..HarnessConfig::default()
+    })
+    .unwrap();
+    // The probe holds its own connection outside the soak population.
+    let probe = PartitionClient::connect(h.addr.clone(), ClientConfig::default()).unwrap();
+
+    let client_errors = AtomicUsize::new(0);
+    let answered = AtomicUsize::new(0);
+    // Barriers put the main thread in lockstep with the population:
+    // every connection is open and has served wave 1 when `s1` is
+    // scraped, and wave 2 only starts after it.
+    let ready = std::sync::Barrier::new(conns + 1);
+    let go2 = std::sync::Barrier::new(conns + 1);
+    let s1 = std::thread::scope(|scope| {
+        for i in 0..conns {
+            let (h, ready, go2, client_errors, answered) =
+                (&h, &ready, &go2, &client_errors, &answered);
+            scope.spawn(move || {
+                let wave = |client: &PartitionClient, seed: u64| {
+                    let q = Rng::seeded(seed).unit_vec(16);
+                    match client.estimate(EstimateSpec::new(q)) {
+                        Ok(r) if r.z.is_finite() && r.z > 0.0 => {
+                            answered.fetch_add(1, Ordering::Relaxed);
+                        }
+                        _ => {
+                            client_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                };
+                // One pooled connection per simulated client, held open
+                // across both waves (peak concurrency == `conns`).
+                let client = PartitionClient::connect(
+                    h.addr.clone(),
+                    ClientConfig {
+                        max_idle: 1,
+                        ..ClientConfig::default()
+                    },
+                );
+                let client = match client {
+                    Ok(c) => c,
+                    Err(_) => {
+                        client_errors.fetch_add(1, Ordering::Relaxed);
+                        ready.wait();
+                        go2.wait();
+                        return;
+                    }
+                };
+                wave(&client, i as u64);
+                ready.wait();
+                go2.wait();
+                wave(&client, (i + conns) as u64);
+            });
+        }
+        ready.wait();
+        let s1 = probe.get_metrics().unwrap();
+        go2.wait();
+        s1
+    });
+    let s2 = probe.get_metrics().unwrap();
+
+    assert_eq!(
+        client_errors.load(Ordering::Relaxed),
+        0,
+        "soak must complete with zero client/protocol errors"
+    );
+    assert_eq!(answered.load(Ordering::Relaxed), conns * 2);
+    // Zero protocol errors server-side too, at both scrape points.
+    assert_eq!(s1.counter("net_wire_errors"), 0, "{:?}", s1.counters);
+    assert_eq!(s2.counter("net_wire_errors"), 0, "{:?}", s2.counters);
+    assert_eq!(s1.counter("net_rejected"), 0, "limit sized for the soak");
+    // All soak connections (plus the probe) were open at scrape 1.
+    assert!(
+        s1.counter("net_active") >= conns as u64,
+        "want ≥{conns} concurrently open connections, gauge says {}",
+        s1.counter("net_active")
+    );
+    assert!(s1.counter("net_accepted") >= conns as u64 + 1);
+    // Monotone frame counters: wave 1 = a ping + an estimate per
+    // connection; wave 2 strictly advances both directions.
+    assert!(s1.counter("net_frames_in") >= 2 * conns as u64);
+    assert!(s2.counter("net_frames_in") >= s1.counter("net_frames_in") + conns as u64);
+    assert!(s2.counter("net_frames_out") >= s1.counter("net_frames_out") + conns as u64);
+    assert!(s2.counter("net_accepted") >= s1.counter("net_accepted"));
+
+    drop(probe);
+    h.shutdown();
+}

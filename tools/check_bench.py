@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Schema lint for committed zest-loadgen records (`BENCH_load.json`).
+
+Usage: check_bench.py FILE.json [FILE.json ...]
+
+Validates the `zest-load-v1` document shape that `zest-loadgen` emits
+and `rust/src/loadgen/report.rs` defines:
+
+  {"schema": "zest-load-v1", "runs": [<run>, ...]}       # runs non-empty
+
+with every run carrying the sweep config plus a non-empty `points`
+ladder, and every point internally consistent (accounting adds up,
+quantiles are ordered, rates are sane). Because the record is committed
+to the repo, a field rename or a hand-edited impossible number fails CI
+here rather than silently drifting from the Rust schema.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+SCHEMA = "zest-load-v1"
+KNEE_RATIO = 0.95
+ARRIVALS = ("fixed", "poisson")
+
+RUN_FIELDS = {
+    "scenario": str,
+    "users": (int, float),
+    "zipf_s": (int, float),
+    "sessions": (int, float),
+    "duration_ms": (int, float),
+    "arrival": str,
+    "seed": (int, float),
+    "shards": (int, float),
+    "replicas": (int, float),
+    "points": list,
+}
+POINT_COUNTERS = ("sent", "ok", "shed", "rejected", "failed", "failovers", "hedges")
+POINT_NUMBERS = (
+    "offered_hz",
+    "achieved_hz",
+    "p50_ms",
+    "p99_ms",
+    "p999_ms",
+    "cache_hit_rate",
+)
+
+
+def check_point(where: str, p) -> list[str]:
+    bad = []
+    if not isinstance(p, dict):
+        return [f"{where}: point is not an object"]
+    for name in POINT_COUNTERS:
+        v = p.get(name)
+        if not isinstance(v, (int, float)) or v < 0 or v != int(v):
+            bad.append(f"{where}: {name} must be a non-negative integer, got {v!r}")
+    for name in POINT_NUMBERS:
+        v = p.get(name)
+        if not isinstance(v, (int, float)) or v < 0:
+            bad.append(f"{where}: {name} must be a non-negative number, got {v!r}")
+    if bad:
+        return bad
+    if p["sent"] != p["ok"] + p["shed"] + p["rejected"] + p["failed"]:
+        bad.append(f"{where}: accounting broken (sent != ok+shed+rejected+failed)")
+    if p["sent"] > 0 and p["offered_hz"] <= 0:
+        bad.append(f"{where}: sent requests but offered_hz is 0")
+    if not p["p50_ms"] <= p["p99_ms"] <= p["p999_ms"]:
+        bad.append(f"{where}: quantiles not ordered (p50 <= p99 <= p999)")
+    if not 0.0 <= p["cache_hit_rate"] <= 1.0:
+        bad.append(f"{where}: cache_hit_rate outside [0, 1]")
+    return bad
+
+
+def check_run(where: str, run) -> list[str]:
+    bad = []
+    if not isinstance(run, dict):
+        return [f"{where}: run is not an object"]
+    for name, ty in RUN_FIELDS.items():
+        if name not in run:
+            bad.append(f"{where}: missing field {name!r}")
+        elif not isinstance(run[name], ty):
+            bad.append(f"{where}: field {name!r} has wrong type {type(run[name]).__name__}")
+    if "knee_hz" not in run:
+        bad.append(f"{where}: missing field 'knee_hz' (number or null)")
+    elif run["knee_hz"] is not None and not isinstance(run["knee_hz"], (int, float)):
+        bad.append(f"{where}: knee_hz must be a number or null")
+    if bad:
+        return bad
+    if run["arrival"] not in ARRIVALS:
+        bad.append(f"{where}: arrival {run['arrival']!r} not in {ARRIVALS}")
+    if not run["points"]:
+        bad.append(f"{where}: points must be non-empty")
+    for i, p in enumerate(run["points"]):
+        bad.extend(check_point(f"{where}.points[{i}]", p))
+    if bad:
+        return bad
+    # The recorded knee must agree with the recorded points: it is the
+    # first offered rate whose achieved rate lags KNEE_RATIO × offered.
+    knee = next(
+        (
+            p["offered_hz"]
+            for p in run["points"]
+            if p["achieved_hz"] < KNEE_RATIO * p["offered_hz"]
+        ),
+        None,
+    )
+    if knee != run["knee_hz"]:
+        bad.append(
+            f"{where}: knee_hz {run['knee_hz']!r} disagrees with the points "
+            f"(recomputed {knee!r} at ratio {KNEE_RATIO})"
+        )
+    return bad
+
+
+def check(path: Path) -> list[str]:
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    if doc.get("schema") != SCHEMA:
+        return [f"{path}: schema is {doc.get('schema')!r}, want {SCHEMA!r}"]
+    runs = doc.get("runs")
+    if not isinstance(runs, list) or not runs:
+        return [f"{path}: runs must be a non-empty array"]
+    bad = []
+    for i, run in enumerate(runs):
+        label = run.get("scenario", i) if isinstance(run, dict) else i
+        bad.extend(check_run(f"{path}: runs[{label}]", run))
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    bad = []
+    for name in argv:
+        bad.extend(check(Path(name)))
+    for line in bad:
+        print(line, file=sys.stderr)
+    if bad:
+        print(f"{len(bad)} schema violation(s)", file=sys.stderr)
+        return 1
+    print(f"bench schema OK ({len(argv)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
